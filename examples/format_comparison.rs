@@ -1,0 +1,58 @@
+//! Format comparison — the Table 1 experiment: quantize the LLaMA
+//! simulant's causal LM to every format at ~8 average bits and report
+//! perplexity on wikitext2-sim plus the memory/arithmetic densities of
+//! the hardware GEMM regression model.
+//!
+//! Run: `cargo run --release --example format_comparison`
+
+use mase::coordinator::{pretrain, Session};
+use mase::data::{Batch, MarkovCorpus};
+use mase::formats::{FormatKind, Precision};
+use mase::hw::{arithmetic_density, memory_density};
+use mase::passes::{profile_model, Evaluator, QuantSolution};
+use mase::util::Table;
+
+fn main() -> anyhow::Result<()> {
+    let session = Session::open(&Session::default_dir())?;
+    let meta = session.manifest.model("llama-sim")?.clone();
+    let weights = pretrain::pretrain(&session, &meta, None, &Default::default())?;
+
+    // held-out corpus streams
+    let corpus = MarkovCorpus::new(7);
+    let batches: Vec<Batch> = (0..4)
+        .map(|i| Batch {
+            tokens: corpus.batch(1000 + i, meta.batch, meta.seq_len),
+            labels: vec![0; meta.batch],
+            batch: meta.batch,
+            seq: meta.seq_len,
+        })
+        .collect();
+    let ev = Evaluator::new(&session.runtime, &meta, &weights, &batches);
+    let profile = profile_model(&session.runtime, &meta, &weights, &batches[..1])?;
+
+    // W8A8-equivalent configurations per format (paper Table 1)
+    let rows = [
+        (FormatKind::Fp32, 32.0f32, "-"),
+        (FormatKind::Int, 8.0, "W8A8"),
+        (FormatKind::Fp8, 8.0, "W8A8"),
+        (FormatKind::MxInt, 7.0, "W8A8"),
+        (FormatKind::Bmf, 5.0, "W8A8"),
+        (FormatKind::Bl, 7.0, "W8A8"),
+    ];
+    let mut t = Table::new(vec!["Approach", "Config", "Perplexity", "MemDensity", "ArithDensity"]);
+    for (fmt, bits, config) in rows {
+        let sol = QuantSolution::uniform(fmt, bits, &meta, &profile);
+        let acc = ev.accuracy(&sol)?;
+        let p = Precision::new(bits, sol.fracs[0]);
+        t.row(vec![
+            fmt.name().to_string(),
+            config.to_string(),
+            format!("{:.2}", acc.perplexity()),
+            format!("{:.2}x", memory_density(fmt, p)),
+            format!("{:.1}x", arithmetic_density(fmt, p)),
+        ]);
+    }
+    println!("Table 1 (llama-sim on wikitext2-sim):\n{}", t.render());
+    println!("expected shape: int8 blows up; fp8 ~ fp32; mxint8 ~ fp32; bmf/bl degraded");
+    Ok(())
+}

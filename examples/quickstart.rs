@@ -1,0 +1,54 @@
+//! Quickstart: the MASE flow in ~40 lines of API.
+//!
+//! Loads the AOT artifacts, pretrains (or loads cached) a tiny OPT
+//! simulant on sst2-sim, then compares FP32, uniform MXInt8, and a small
+//! mixed-precision MXInt search — including the Pallas-kernel variant of
+//! the MXInt artifact, proving the L1 (Pallas) -> L2 (JAX) -> L3 (Rust)
+//! stack composes.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use mase::coordinator::{pretrain, Session};
+use mase::data::{batches, Task};
+use mase::formats::FormatKind;
+use mase::passes::{profile_model, run_search, Evaluator, QuantSolution, SearchConfig};
+
+fn main() -> anyhow::Result<()> {
+    let session = Session::open(&Session::default_dir())?;
+    let meta = session.manifest.model("opt-125m-sim")?.clone();
+
+    // 1. weights: trained by the Rust coordinator driving the train HLO
+    let weights = pretrain::pretrain(&session, &meta, Some(Task::Sst2), &Default::default())?;
+
+    // 2. evaluation set + profile
+    let eval = batches(Task::Sst2, 1, 4, meta.batch, meta.seq_len);
+    let ev = Evaluator::new(&session.runtime, &meta, &weights, &eval);
+    let profile = profile_model(&session.runtime, &meta, &weights, &eval[..1])?;
+
+    // 3. baselines
+    let fp32 = ev.accuracy(&QuantSolution::uniform(FormatKind::Fp32, 32.0, &meta, &profile))?;
+    let mxint8_sol = QuantSolution::uniform(FormatKind::MxInt, 7.0, &meta, &profile);
+    let mxint8 = ev.accuracy(&mxint8_sol)?;
+    // same solution through the Pallas-kernel artifact (L1 on the path)
+    let pallas = ev.accuracy_with(&mxint8_sol, "eval_mxint_pallas", &weights)?;
+
+    // 4. mixed-precision search (TPE, 16 trials for the quickstart)
+    let outcome = run_search(
+        &ev,
+        &profile,
+        Task::Sst2,
+        &SearchConfig { trials: 16, ..Default::default() },
+    )?;
+
+    println!("model: {} on sst2-sim", meta.name);
+    println!("  fp32 accuracy:            {:.4}", fp32.accuracy());
+    println!("  MXInt8 accuracy:          {:.4}", mxint8.accuracy());
+    println!("  MXInt8 via Pallas kernel: {:.4}  (must match)", pallas.accuracy());
+    assert!((pallas.accuracy() - mxint8.accuracy()).abs() < 1e-9, "L1/L2 paths diverge!");
+    let best = &outcome.best_eval;
+    println!(
+        "  MP MXInt (16 trials):     {:.4} at {:.2} avg bits, {:.0} LUTs, {:.0} inf/s",
+        best.accuracy, best.avg_bits, best.design.area_luts, best.design.throughput
+    );
+    Ok(())
+}

@@ -1,0 +1,200 @@
+"""AOT pipeline: lower every (model, entry-point) pair to HLO *text*.
+
+HLO text — NOT ``lowered.compiler_ir().serialize()`` — is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids that
+the xla_extension 0.5.1 bundled with the Rust ``xla`` crate rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Outputs (under ``artifacts/``):
+  - ``<model>_<entry>.hlo.txt``   — one artifact per lowered entry point
+  - ``manifest.json``             — the Rust side's ground truth for param
+    layout, qtensor order, artifact paths and model configs.
+
+Python runs ONCE here; the Rust coordinator never re-enters it.
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+# Format families lowered per model kind. fp8 (fixed-config minifloat) is
+# only needed for the Table 1 LM comparison; the pallas-kernel variant of
+# mxint proves the L1->L3 composition on two representative models.
+CLASSIFIER_FORMATS = ("fp32", "int", "mxint", "bmf", "bl")
+LM_FORMATS = ("fp32", "int", "fp8", "mxint", "bmf", "bl")
+PALLAS_MODELS = ("opt-125m-sim", "llama-sim")
+QAT_MODELS = ("opt-125m-sim", "opt-350m-sim", "bert-base-sim")
+QAT_FORMATS = ("mxint", "int")
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_entry(cfg: M.ModelConfig, entry: str, fmt: str):
+    """Build the jitted callable + example specs for one artifact."""
+    p = _spec((M.param_size(cfg),))
+    tok = _spec((cfg.batch, cfg.seq_len), jnp.int32)
+    lab = _spec((cfg.batch,), jnp.int32)
+    qc = _spec((M.num_qtensors(cfg), 2))
+    lr = _spec((), jnp.float32)
+
+    if entry == "eval":
+        def f(params, tokens, labels, qconfig):
+            return M.eval_batch(cfg, params, tokens, labels, qconfig, fmt)
+
+        return jax.jit(f).lower(p, tok, lab, qc)
+    if entry == "profile":
+        def f(params, tokens):
+            return (M.profile_forward(cfg, params, tokens),)
+
+        return jax.jit(f).lower(p, tok)
+    if entry == "train":
+        def f(params, tokens, labels, lr_):
+            return M.train_step(cfg, params, tokens, labels, lr_)
+
+        return jax.jit(f).lower(p, tok, lab, lr)
+    if entry == "qat":
+        def f(params, tokens, labels, qconfig, lr_):
+            return M.qat_step(cfg, params, tokens, labels, qconfig, lr_, fmt)
+
+        return jax.jit(f).lower(p, tok, lab, qc, lr)
+    raise ValueError(entry)
+
+
+def lower_quant_ref(fmt: str):
+    """Tiny q(x) artifact for the Rust<->Python cross-layer golden test."""
+    x = _spec((32, 32))
+    c = _spec((2,))
+
+    def f(xv, cv):
+        # keep cv in the signature even for fixed-config formats (fp8)
+        return (M._apply_format(xv, fmt, cv[0], cv[1], False) + M._touch(cv),)
+
+    return jax.jit(f).lower(x, c)
+
+
+def _write(path: str, lowered, force: bool) -> float:
+    if os.path.exists(path) and not force:
+        return 0.0
+    t0 = time.time()
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return time.time() - t0
+
+
+def build_manifest(out_dir: str):
+    models = {}
+    for name, cfg in M.MODEL_ZOO.items():
+        spec, off = [], 0
+        for pname, shape in M.param_spec(cfg):
+            n = 1
+            for s in shape:
+                n *= s
+            spec.append({"name": pname, "shape": list(shape), "offset": off})
+            off += n
+        fmts = LM_FORMATS if cfg.kind == "lm" else CLASSIFIER_FORMATS
+        arts = {f"eval_{f}": f"{name}_eval_{f}.hlo.txt" for f in fmts}
+        if name in PALLAS_MODELS:
+            arts["eval_mxint_pallas"] = f"{name}_eval_mxint_pallas.hlo.txt"
+        arts["profile"] = f"{name}_profile.hlo.txt"
+        arts["train"] = f"{name}_train.hlo.txt"
+        if name in QAT_MODELS:
+            for f in QAT_FORMATS:
+                arts[f"qat_{f}"] = f"{name}_qat_{f}.hlo.txt"
+        models[name] = {
+            "n_layers": cfg.n_layers,
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff,
+            "vocab": cfg.vocab,
+            "seq_len": cfg.seq_len,
+            "n_classes": cfg.n_classes,
+            "kind": cfg.kind,
+            "batch": cfg.batch,
+            "param_size": M.param_size(cfg),
+            "param_spec": spec,
+            "qtensors": M.qtensor_names(cfg),
+            "artifacts": arts,
+        }
+    return {
+        "block_shape": list(ref.BLOCK_SHAPE),
+        "shared_exponent_bits": ref.SHARED_EXPONENT_BITS,
+        "formats": list(CLASSIFIER_FORMATS) + ["fp8", "mxint_pallas"],
+        "quant_refs": {f: f"quant_ref_{f}.hlo.txt"
+                       for f in ("int", "fp8", "mxint", "bmf", "bl")},
+        "models": models,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/manifest.json",
+                    help="manifest path; artifacts go to its directory")
+    ap.add_argument("--models", default="",
+                    help="comma-separated subset of model names")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(os.path.abspath(args.out))
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = build_manifest(out_dir)
+    subset = set(filter(None, args.models.split(",")))
+
+    t_all = time.time()
+    for fmt, fname in manifest["quant_refs"].items():
+        dt = _write(os.path.join(out_dir, fname), lower_quant_ref(fmt),
+                    args.force)
+        if dt:
+            print(f"  quant_ref_{fmt}: {dt:.1f}s", flush=True)
+
+    for name, meta in manifest["models"].items():
+        if subset and name not in subset:
+            continue
+        cfg = M.MODEL_ZOO[name]
+        for art, fname in meta["artifacts"].items():
+            path = os.path.join(out_dir, fname)
+            if os.path.exists(path) and not args.force:
+                continue
+            t0 = time.time()
+            if art.startswith("eval_"):
+                lowered = lower_entry(cfg, "eval", art[len("eval_"):])
+            elif art == "profile":
+                lowered = lower_entry(cfg, "profile", "fp32")
+            elif art == "train":
+                lowered = lower_entry(cfg, "train", "fp32")
+            elif art.startswith("qat_"):
+                lowered = lower_entry(cfg, "qat", art[len("qat_"):])
+            else:
+                raise ValueError(art)
+            _write(path, lowered, True)
+            print(f"  {name}/{art}: {time.time() - t0:.1f}s", flush=True)
+
+    with open(args.out, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest + artifacts in {out_dir} ({time.time() - t_all:.0f}s)")
+
+
+if __name__ == "__main__":
+    main()

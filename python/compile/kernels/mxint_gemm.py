@@ -1,0 +1,152 @@
+"""L1 — Pallas kernels for the MXInt dataflow operators.
+
+These kernels are the TPU re-thinking of the paper's FPGA dataflow
+operators (Fig. 3, right): the streaming tiles of the FPGA design become
+``BlockSpec`` tiles scheduled HBM->VMEM, and the block-shared exponent is
+extracted by a small in-VMEM reduction before the MAC array — the same
+structural trick that lets the FPGA MXInt operator drop the per-element
+dynamic shifter.
+
+Everything is lowered with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so interpret mode is the correctness target
+and the TPU mapping is analyzed structurally (DESIGN.md §Hardware-
+Adaptation, EXPERIMENTS.md §Perf/L1).
+
+Correctness oracle: :mod:`compile.kernels.ref` (pytest + hypothesis).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import BLOCK_SHAPE, SHARED_EXP_MAX, SHARED_EXP_MIN, _pow2
+
+_EPS = 1e-30
+
+
+def _quant_tile(x, m, block_rows, block_cols):
+    """Block-quantize a 2-D tile already resident in VMEM.
+
+    Independent implementation of MXInt fake-quant (kept deliberately
+    separate from ref.py so the pytest comparison is meaningful): reshape
+    the tile into (block_rows, block_cols) blocks, extract the shared
+    exponent with a per-block max-reduction, round mantissas.
+    """
+    r, c = x.shape
+    xb = x.reshape(r // block_rows, block_rows, c // block_cols, block_cols)
+    maxabs = jnp.max(jnp.abs(xb), axis=(1, 3), keepdims=True)
+    e = jnp.floor(jnp.log2(jnp.maximum(maxabs, _EPS)))
+    e = jnp.clip(e, SHARED_EXP_MIN, SHARED_EXP_MAX)
+    m = jnp.maximum(m, 1.0)
+    scale = _pow2(e + 1.0 - m)
+    qmax = _pow2(m) - 1.0
+    q = jnp.clip(jnp.round(xb / scale), -qmax, qmax) * scale
+    return q.reshape(r, c)
+
+
+def _qmatmul_kernel(a_ref, b_ref, ma_ref, mb_ref, o_ref, *, block):
+    """One (i, j, k) grid step: quantize the A and B tiles, MAC into O.
+
+    The K axis is the innermost grid dim; O is revisited across k steps and
+    accumulated in place (the FPGA design's running dot-product register).
+    """
+    br, bc = block
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # A streams row-major: blocks are (br x bc) over (M, K).
+    qa = _quant_tile(a_ref[...], ma_ref[0, 0], br, bc)
+    # B streams column-major: blocks are (br x bc) over (K, N).
+    qb = _quant_tile(b_ref[...], mb_ref[0, 0], br, bc)
+    o_ref[...] += jnp.dot(qa, qb, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def mxint_qmatmul(a, b, m_a, m_b, *, bm=16, bk=16, bn=16, interpret=True):
+    """MXInt dot-product operator: ``mxint_q(a) @ mxint_q(b)``.
+
+    ``m_a``/``m_b`` are (possibly traced) mantissa bitwidths for the two
+    operands — the mixed-precision knobs the Rust search turns.
+
+    Tile sizes must keep (16, 2) blocks intact: ``bm`` and ``bk`` must be
+    multiples of 16 (K-blocks of B span 16 rows), ``bn`` a multiple of 2.
+    """
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2, f"contraction mismatch {K} vs {K2}"
+    bm, bk, bn = min(bm, M), min(bk, K), min(bn, N)
+    br, bc = BLOCK_SHAPE
+    assert bm % br == 0 and bk % br == 0, (bm, bk)
+    assert bk % bc == 0 and bn % bc == 0, (bk, bn)
+    assert M % bm == 0 and K % bk == 0 and N % bn == 0, (M, K, N)
+
+    ma = jnp.asarray(m_a, jnp.float32).reshape(1, 1)
+    mb = jnp.asarray(m_b, jnp.float32).reshape(1, 1)
+    grid = (M // bm, N // bn, K // bk)
+    return pl.pallas_call(
+        functools.partial(_qmatmul_kernel, block=BLOCK_SHAPE),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(a, b, ma, mb)
+
+
+def _quantize_kernel(x_ref, m_ref, o_ref, *, block):
+    o_ref[...] = _quant_tile(x_ref[...], m_ref[0, 0], *block)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def mxint_quantize_pallas(x, m, *, bm=16, bn=16, interpret=True):
+    """Standalone MXInt quantizer over a 2-D tensor (the 'cast' operator).
+
+    Used on its own for the cross-layer golden test against the Rust
+    ``formats`` module and as a building block in the emitted designs.
+    """
+    R, C = x.shape
+    br, bc = BLOCK_SHAPE
+    bm, bn = min(bm, R), min(bn, C)
+    assert bm % br == 0 and bn % bc == 0 and R % bm == 0 and C % bn == 0
+    mm = jnp.asarray(m, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        functools.partial(_quantize_kernel, block=BLOCK_SHAPE),
+        grid=(R // bm, C // bn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((R, C), jnp.float32),
+        interpret=interpret,
+    )(x, mm)
+
+
+def vmem_footprint_bytes(bm, bk, bn):
+    """Structural VMEM estimate for one grid step of :func:`mxint_qmatmul`.
+
+    A-tile + B-tile + O-tile in f32, plus the quantized copies the compiler
+    can reuse in place on TPU (counted once), plus the per-block exponent
+    scratch. Used by EXPERIMENTS.md §Perf/L1 to size tiles against the
+    ~16 MiB/core VMEM budget.
+    """
+    br, bc = BLOCK_SHAPE
+    a = bm * bk * 4
+    b = bk * bn * 4
+    o = bm * bn * 4
+    exp = ((bm // br) * (bk // bc) + (bk // br) * (bn // bc)) * 4
+    return 2 * (a + b) + o + exp
+
+
+def mxu_utilization_estimate(bm, bk, bn, mxu=(128, 128)):
+    """Fraction of MXU lanes a (bm, bk)x(bk, bn) tile keeps busy."""
+    return min(1.0, bm / mxu[0]) * min(1.0, bn / mxu[1])

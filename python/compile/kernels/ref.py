@@ -1,0 +1,209 @@
+"""Pure-jnp reference implementations of the numeric formats of the paper.
+
+This module is the *oracle* for the Pallas kernels (pytest compares them
+against these functions) and also the software emulation library used by the
+L2 model (`compile/model.py`) — exactly the paper's "software emulator"
+component of Fig. 3: quantize to the custom format, compute in float,
+quantize the result.
+
+All functions implement *fake quantization*: they return float32 tensors
+whose values lie exactly on the representable grid of the target format.
+
+Formats (paper Fig. 1c):
+  - MXInt  (a.k.a. block floating point): block-shared 8-bit exponent,
+    per-element sign + m-bit integer mantissa.
+  - BMF    (block minifloat): block-shared 8-bit exponent *bias*,
+    per-element minifloat with e_loc exponent bits and m mantissa bits.
+  - BL     (block logarithm): block-shared 8-bit exponent bias,
+    per-element sign + e_el-bit power-of-two exponent (no mantissa).
+  - int    (fixed point): per-tensor static (width, frac) Q-format.
+  - minifloat (FP8 of Sun et al.): sign + 4-bit exponent + 3-bit mantissa,
+    fixed bias 7 (parameterized here).
+
+Bitwidth parameters may be *traced* jax values (scalars or per-tensor
+entries), which is what lets a single lowered HLO artifact serve every
+point of the mixed-precision search space driven from the Rust coordinator.
+"""
+
+import jax.numpy as jnp
+
+# Paper §4.1: unified block shape for all values.
+BLOCK_SHAPE = (16, 2)
+# Paper §4.1: fixed 8-bit shared exponent for all MXInt blocks.
+SHARED_EXPONENT_BITS = 8
+# Clamp range of an 8-bit (biased) shared exponent.
+SHARED_EXP_MIN = -126.0
+SHARED_EXP_MAX = 127.0
+
+_EPS = 1e-30
+
+
+def _pow2(e):
+    """Exact 2^e for integer-valued ``e`` (possibly traced).
+
+    XLA CPU's f32 ``exp2`` is a polynomial approximation that is inexact
+    even at integer arguments (exp2(-13) != 2^-13 on this backend!), which
+    breaks the exactness of quantization grids. ``ldexp`` constructs the
+    power of two exactly. Exponents are clamped to the f32 range.
+    """
+    e = jnp.clip(jnp.asarray(e), -149.0, 127.0)
+    return jnp.ldexp(jnp.float32(1.0), e.astype(jnp.int32))
+
+
+def _to_blocks(x, block=BLOCK_SHAPE):
+    """Reshape the last two dims of ``x`` into blocks of ``block``.
+
+    ``x[..., R, C] -> x[..., R//br, C//bc, br, bc]``. 1-D tensors are
+    treated as flat blocks of ``br*bc`` elements. R and C must be divisible
+    by the block dims (the model zoo only uses dims that are multiples of
+    16).
+    """
+    br, bc = block
+    if x.ndim == 1:
+        n = br * bc
+        assert x.shape[0] % n == 0, f"1-D dim {x.shape[0]} not divisible by {n}"
+        return x.reshape(x.shape[0] // n, 1, n, 1), x.shape
+    r, c = x.shape[-2], x.shape[-1]
+    assert r % br == 0, f"dim {r} not divisible by block {br}"
+    assert c % bc == 0, f"dim {c} not divisible by block {bc}"
+    lead = x.shape[:-2]
+    xb = x.reshape(*lead, r // br, br, c // bc, bc)
+    # move block dims to the end: [..., r/br, c/bc, br, bc]
+    xb = jnp.moveaxis(xb, -3, -2)
+    return xb, x.shape
+
+
+def _from_blocks(xb, orig_shape, block=BLOCK_SHAPE):
+    """Inverse of :func:`_to_blocks`."""
+    if len(orig_shape) == 1:
+        return xb.reshape(orig_shape)
+    xb = jnp.moveaxis(xb, -2, -3)
+    return xb.reshape(orig_shape)
+
+
+def _shared_exponent(xb):
+    """floor(log2(max |x| in block)), clamped to the 8-bit shared range.
+
+    ``xb`` has the block dims as the trailing two axes; the reduction is
+    over them. Returns an exponent with those axes kept (size 1) so it
+    broadcasts back over the block.
+    """
+    maxabs = jnp.max(jnp.abs(xb), axis=(-1, -2), keepdims=True)
+    e = jnp.floor(jnp.log2(jnp.maximum(maxabs, _EPS)))
+    return jnp.clip(e, SHARED_EXP_MIN, SHARED_EXP_MAX)
+
+
+def mxint_quantize(x, mantissa_bits, block=BLOCK_SHAPE):
+    """Fake-quantize ``x`` to MXInt(block, 8, mantissa_bits).
+
+    Element value = sign * M * 2^(E + 1 - m) with integer M in
+    [0, 2^m - 1] and E the block-shared exponent. ``mantissa_bits`` may be
+    a traced scalar (float); it is clamped to >= 1.
+    """
+    m = jnp.maximum(jnp.asarray(mantissa_bits, jnp.float32), 1.0)
+    xb, shape = _to_blocks(x, block)
+    e = _shared_exponent(xb)
+    scale = _pow2(e + 1.0 - m)
+    qmax = _pow2(m) - 1.0
+    q = jnp.clip(jnp.round(xb / scale), -qmax, qmax) * scale
+    return _from_blocks(q, shape, block)
+
+
+def bmf_quantize(x, mantissa_bits, exp_bits=2.0, block=BLOCK_SHAPE):
+    """Fake-quantize ``x`` to Block Minifloat (shared exponent *bias*).
+
+    Each element is a minifloat with ``exp_bits`` exponent bits and
+    ``mantissa_bits`` mantissa bits; the block shares an 8-bit bias aligned
+    so the largest element of the block sits at the top of the local range.
+    The local dynamic range is only ``2^(2^exp_bits)``; smaller elements
+    flush toward zero — the failure mode behind the paper's catastrophic
+    BMF8 perplexity on LLaMA (Table 1).
+    """
+    m = jnp.maximum(jnp.asarray(mantissa_bits, jnp.float32), 1.0)
+    eb = jnp.maximum(jnp.asarray(exp_bits, jnp.float32), 1.0)
+    xb, shape = _to_blocks(x, block)
+    bias = _shared_exponent(xb)  # shared bias anchors the top of the range
+    absx = jnp.abs(xb)
+    # Local exponent relative to bias, in [-(2^eb - 1), 0].
+    e_loc = jnp.floor(jnp.log2(jnp.maximum(absx, _EPS))) - bias
+    e_min = -(_pow2(eb) - 1.0)
+    e_loc = jnp.clip(e_loc, e_min, 0.0)
+    e_abs = e_loc + bias
+    # Quantize the mantissa (in [1, 2) at exponent e_abs) to m bits. At the
+    # clamped minimum exponent this acts as denormal-style rounding: values
+    # below half the smallest step flush to zero naturally (and, unlike an
+    # explicit threshold, idempotently).
+    scale = _pow2(e_abs - m)
+    q = jnp.round(absx / scale) * scale
+    # Saturate at the top of the representable range.
+    top = _pow2(bias + 1.0) - _pow2(bias - m)
+    q = jnp.minimum(q, top)
+    return _from_blocks(jnp.sign(xb) * q, shape, block)
+
+
+def bl_quantize(x, exp_el_bits=7.0, block=BLOCK_SHAPE):
+    """Fake-quantize ``x`` to Block Logarithm: sign * 2^(E_i), shared bias.
+
+    Per-element exponent has ``exp_el_bits`` bits below the shared bias, so
+    representable magnitudes are { 2^(bias - k) : 0 <= k < 2^exp_el_bits }
+    plus zero. Values are always powers of two (paper Fig. 1c).
+    """
+    eb = jnp.maximum(jnp.asarray(exp_el_bits, jnp.float32), 1.0)
+    xb, shape = _to_blocks(x, block)
+    bias = _shared_exponent(xb)
+    absx = jnp.maximum(jnp.abs(xb), _EPS)
+    # Log-domain rounding of the exponent.
+    e = jnp.round(jnp.log2(absx))
+    e_min = bias - (_pow2(eb) - 1.0)
+    q = _pow2(jnp.clip(e, e_min, bias))
+    # Underflow: below half of the smallest representable -> 0.
+    q = jnp.where(jnp.abs(xb) < _pow2(e_min - 1.0), 0.0, q)
+    return _from_blocks(jnp.sign(xb) * q, shape, block)
+
+
+def int_quantize(x, width, frac):
+    """Fake-quantize ``x`` to a per-tensor fixed-point Q-format.
+
+    ``width`` total bits including sign, ``frac`` fractional bits. Both may
+    be traced. value = clamp(round(x * 2^f), -2^(w-1), 2^(w-1)-1) / 2^f.
+    No dynamic range: this is what loses accuracy in deep layers (Fig. 1a).
+    """
+    w = jnp.maximum(jnp.asarray(width, jnp.float32), 2.0)
+    f = jnp.asarray(frac, jnp.float32)
+    scale = _pow2(-f)
+    qmax = _pow2(w - 1.0) - 1.0
+    return jnp.clip(jnp.round(x / scale), -qmax - 1.0, qmax) * scale
+
+
+def minifloat_quantize(x, exp_bits=4.0, mantissa_bits=3.0, bias=7.0):
+    """Fake-quantize ``x`` to MiniFloat/FP8 (Sun et al.): fixed bias.
+
+    Normal numbers only; underflow flushes to zero, overflow saturates.
+    """
+    eb = jnp.asarray(exp_bits, jnp.float32)
+    m = jnp.asarray(mantissa_bits, jnp.float32)
+    b = jnp.asarray(bias, jnp.float32)
+    absx = jnp.maximum(jnp.abs(x), _EPS)
+    e = jnp.floor(jnp.log2(absx))
+    e_min = 1.0 - b
+    e_max = _pow2(eb) - 2.0 - b
+    e_c = jnp.clip(e, e_min, e_max)
+    scale = _pow2(e_c - m)
+    q = jnp.round(absx / scale) * scale
+    top = _pow2(e_max + 1.0) - _pow2(e_max - m)
+    q = jnp.minimum(q, top)
+    q = jnp.where(jnp.abs(x) < _pow2(e_min - 1.0), 0.0, q)
+    return jnp.sign(x) * q
+
+
+def mxint_matmul_ref(a, b, m_a, m_b, block=BLOCK_SHAPE):
+    """Reference MXInt dot-product operator: quantize both operands to
+    MXInt, multiply in float. Oracle for the Pallas kernel."""
+    qa = mxint_quantize(a, m_a, block)
+    qb = mxint_quantize(b, m_b, block)
+    return qa @ qb
+
+
+def average_bitwidth(mantissa_bits, block=BLOCK_SHAPE, shared_bits=8.0):
+    """Paper Eq. (1): p = e / prod(B) + m + 1."""
+    return shared_bits / float(block[0] * block[1]) + mantissa_bits + 1.0

@@ -1,0 +1,62 @@
+# pytest: AOT pipeline — lowering produces loadable HLO text + manifest.
+import json
+
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+class TestLowering:
+    def test_quant_ref_lowers_to_hlo_text(self):
+        text = aot.to_hlo_text(aot.lower_quant_ref("mxint"))
+        assert "HloModule" in text
+        assert "ENTRY" in text
+
+    @pytest.mark.parametrize("entry,fmt", [
+        ("eval", "mxint"), ("eval", "int"), ("profile", "fp32"),
+        ("train", "fp32"), ("qat", "mxint"),
+    ])
+    def test_entries_lower(self, entry, fmt):
+        cfg = M.MODEL_ZOO["opt-125m-sim"]
+        text = aot.to_hlo_text(aot.lower_entry(cfg, entry, fmt))
+        assert text.startswith("HloModule")
+
+    def test_pallas_variant_lowers_to_plain_hlo(self):
+        # interpret=True must not leave custom-calls the CPU PJRT client
+        # cannot execute (a real-TPU lowering would emit Mosaic calls).
+        cfg = M.MODEL_ZOO["opt-125m-sim"]
+        text = aot.to_hlo_text(aot.lower_entry(cfg, "eval", "mxint_pallas"))
+        assert "custom-call" not in text or "Mosaic" not in text
+
+
+class TestManifest:
+    @pytest.fixture(scope="class")
+    def manifest(self, tmp_path_factory):
+        return aot.build_manifest(str(tmp_path_factory.mktemp("a")))
+
+    def test_every_model_present(self, manifest):
+        assert set(manifest["models"]) == set(M.MODEL_ZOO)
+
+    def test_param_spec_offsets_are_dense(self, manifest):
+        for name, meta in manifest["models"].items():
+            off = 0
+            for ent in meta["param_spec"]:
+                assert ent["offset"] == off
+                n = 1
+                for s in ent["shape"]:
+                    n *= s
+                off += n
+            assert off == meta["param_size"]
+
+    def test_qtensor_order_matches_model(self, manifest):
+        for name, meta in manifest["models"].items():
+            assert meta["qtensors"] == M.qtensor_names(M.MODEL_ZOO[name])
+
+    def test_block_config_matches_paper(self, manifest):
+        assert manifest["block_shape"] == [16, 2]
+        assert manifest["shared_exponent_bits"] == 8
+
+    def test_manifest_is_json_serializable(self, manifest):
+        json.dumps(manifest)

@@ -1,0 +1,186 @@
+# pytest + hypothesis: properties of the fake-quantization oracles.
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0, scale, shape).astype(np.float32))
+
+
+@st.composite
+def tensors(draw):
+    r = 16 * draw(st.integers(1, 4))
+    c = 2 * draw(st.integers(1, 16))
+    seed = draw(st.integers(0, 2**31 - 1))
+    scale = draw(st.sampled_from([1e-3, 1.0, 1e3]))
+    return _rand((r, c), seed, scale)
+
+
+class TestMXInt:
+    @settings(max_examples=30, deadline=None)
+    @given(x=tensors(), m=st.integers(1, 12))
+    def test_idempotent(self, x, m):
+        q1 = ref.mxint_quantize(x, float(m))
+        q2 = ref.mxint_quantize(q1, float(m))
+        np.testing.assert_allclose(q1, q2, rtol=1e-6, atol=1e-8)
+
+    @settings(max_examples=30, deadline=None)
+    @given(x=tensors(), m=st.integers(2, 10))
+    def test_error_bounded_by_block_step(self, x, m):
+        # |x - q(x)| <= half a quantization step of the block it is in;
+        # saturation (mantissa clamp at +-(2^m - 1)) can cost up to one
+        # full step on the block's extreme element.
+        q = np.asarray(ref.mxint_quantize(x, float(m)))
+        xb, _ = ref._to_blocks(jnp.asarray(x))
+        e = np.asarray(ref._shared_exponent(xb))
+        step = 2.0 ** (e + 1.0 - m)
+        err_b = np.abs(np.asarray(ref._to_blocks(jnp.asarray(q - np.asarray(x)))[0]))
+        assert np.all(err_b <= step * 1.0 + 1e-12)
+
+    @settings(max_examples=30, deadline=None)
+    @given(x=tensors(), m=st.integers(2, 10))
+    def test_monotone_in_mantissa_bits(self, x, m):
+        e_lo = jnp.mean(jnp.abs(ref.mxint_quantize(x, float(m)) - x))
+        e_hi = jnp.mean(jnp.abs(ref.mxint_quantize(x, float(m + 2)) - x))
+        assert e_hi <= e_lo + 1e-9
+
+    def test_zero_block_stays_zero(self):
+        x = jnp.zeros((16, 2))
+        np.testing.assert_array_equal(ref.mxint_quantize(x, 4.0), x)
+
+    def test_sign_symmetry(self):
+        x = _rand((32, 8), 0)
+        np.testing.assert_allclose(
+            ref.mxint_quantize(-x, 5.0), -ref.mxint_quantize(x, 5.0), atol=0
+        )
+
+    def test_1d_tensor_blocks(self):
+        x = _rand((64,), 1)
+        q = ref.mxint_quantize(x, 6.0)
+        assert q.shape == x.shape
+        assert float(jnp.mean(jnp.abs(q - x))) < 0.02
+
+    def test_preserves_large_dynamic_range_across_blocks(self):
+        # Each block gets its own exponent: a tensor whose blocks span a
+        # 2^20 range must keep per-block relative error small — the whole
+        # point of microscaling (paper Fig. 1a motivation).
+        blocks = [jnp.full((16, 2), 2.0**k) for k in range(0, 20, 4)]
+        x = jnp.concatenate(blocks, axis=1)
+        q = ref.mxint_quantize(x, 4.0)
+        rel = jnp.abs(q - x) / x
+        assert float(jnp.max(rel)) < 0.1
+
+    def test_high_mantissa_exact_on_powers_of_two(self):
+        x = jnp.asarray([[2.0 ** (i % 5) for _ in range(2)] for i in range(16)])
+        np.testing.assert_allclose(ref.mxint_quantize(x, 12.0), x, rtol=1e-4)
+
+
+class TestBMF:
+    @settings(max_examples=20, deadline=None)
+    @given(x=tensors(), m=st.integers(1, 6))
+    def test_idempotent(self, x, m):
+        q1 = ref.bmf_quantize(x, float(m))
+        q2 = ref.bmf_quantize(q1, float(m))
+        np.testing.assert_allclose(q1, q2, rtol=1e-5, atol=1e-8)
+
+    def test_flushes_small_values_in_block(self):
+        # Limited local range: elements far below the block max vanish —
+        # the mechanism behind the catastrophic BMF8 row of Table 1.
+        x = jnp.full((16, 2), 1e-6).at[0, 0].set(1.0)
+        q = ref.bmf_quantize(x, 4.0, exp_bits=2.0)
+        assert float(q[0, 0]) == pytest.approx(1.0, rel=0.1)
+        assert float(jnp.sum(jnp.abs(q[1:, :]))) == 0.0
+
+    def test_keeps_near_peak_values(self):
+        x = jnp.full((16, 2), 0.5).at[0, 0].set(1.0)
+        q = ref.bmf_quantize(x, 4.0)
+        np.testing.assert_allclose(q, x, rtol=0.1)
+
+
+class TestBL:
+    @settings(max_examples=20, deadline=None)
+    @given(x=tensors(), eb=st.integers(3, 8))
+    def test_values_are_powers_of_two(self, x, eb):
+        q = np.asarray(ref.bl_quantize(x, float(eb)))
+        nz = q[q != 0]
+        log = np.log2(np.abs(nz))
+        np.testing.assert_allclose(log, np.round(log), atol=1e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(x=tensors(), eb=st.integers(3, 8))
+    def test_idempotent(self, x, eb):
+        q1 = ref.bl_quantize(x, float(eb))
+        q2 = ref.bl_quantize(q1, float(eb))
+        np.testing.assert_allclose(q1, q2, rtol=1e-5, atol=1e-8)
+
+    def test_relative_error_bounded(self):
+        # Power-of-two grid: worst case ~2^(1/2) relative step.
+        x = _rand((32, 16), 2) + 3.0
+        q = ref.bl_quantize(x, 7.0)
+        rel = jnp.abs(q - x) / jnp.abs(x)
+        assert float(jnp.max(rel)) < 0.5
+
+
+class TestInt:
+    @settings(max_examples=30, deadline=None)
+    @given(x=tensors(), w=st.integers(3, 12), f=st.integers(0, 10))
+    def test_idempotent(self, x, w, f):
+        q1 = ref.int_quantize(x, float(w), float(f))
+        q2 = ref.int_quantize(q1, float(w), float(f))
+        np.testing.assert_allclose(q1, q2, atol=1e-8)
+
+    def test_saturates(self):
+        x = jnp.asarray([[1e6, -1e6]])
+        q = ref.int_quantize(x, 8.0, 4.0)
+        np.testing.assert_allclose(q, [[127 / 16.0, -128 / 16.0]])
+
+    def test_grid_is_scaled_integers(self):
+        x = _rand((16, 4), 3)
+        q = np.asarray(ref.int_quantize(x, 8.0, 5.0)) * 32.0
+        np.testing.assert_allclose(q, np.round(q), atol=1e-5)
+
+    def test_no_dynamic_range(self):
+        # Fixed-point cannot represent both 1e-4 and 1e4 with 8 bits: this
+        # is the Fig. 1a failure that motivates MX formats.
+        x = jnp.asarray([[1e-4, 1e4]])
+        q = ref.int_quantize(x, 8.0, 0.0)
+        assert float(q[0, 0]) == 0.0  # small value lost entirely
+        assert float(q[0, 1]) == 127.0  # large value saturated
+
+
+class TestMinifloat:
+    @settings(max_examples=20, deadline=None)
+    @given(x=tensors())
+    def test_idempotent(self, x):
+        q1 = ref.minifloat_quantize(x)
+        q2 = ref.minifloat_quantize(q1)
+        np.testing.assert_allclose(q1, q2, rtol=1e-5, atol=1e-8)
+
+    def test_known_values_fp8_e4m3_bias7(self):
+        x = jnp.asarray([1.0, 1.125, 240.0, 1000.0, 2.0**-7, 0.0])
+        q = np.asarray(ref.minifloat_quantize(x.reshape(1, -1))).ravel()
+        assert q[0] == 1.0
+        assert q[1] == 1.125  # exactly representable with 3 mantissa bits
+        assert q[2] == 240.0  # top of the range
+        assert q[3] == 240.0  # saturation
+        assert q[4] == 2.0**-7  # smallest normal
+        assert q[5] == 0.0
+
+
+class TestAverageBitwidth:
+    def test_paper_example(self):
+        # MXInt((16,2), 8, 7) has average bitwidth 8.25 (paper §4.1).
+        assert ref.average_bitwidth(7.0) == pytest.approx(8.25)
+
+    def test_eq1(self):
+        assert ref.average_bitwidth(3.0, block=(8, 4), shared_bits=8.0) == (
+            pytest.approx(8.0 / 32.0 + 4.0)
+        )

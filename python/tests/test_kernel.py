@@ -1,0 +1,123 @@
+# pytest: Pallas kernel vs pure-jnp oracle — the CORE correctness signal.
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.mxint_gemm import (
+    mxint_qmatmul,
+    mxint_quantize_pallas,
+    mxu_utilization_estimate,
+    vmem_footprint_bytes,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0, scale, shape).astype(np.float32))
+
+
+class TestQMatmulVsRef:
+    @pytest.mark.parametrize("m_bits", [2.0, 4.0, 7.0])
+    def test_square_matches_ref(self, m_bits):
+        a, b = _rand((32, 32), 0), _rand((32, 32), 1)
+        got = mxint_qmatmul(a, b, m_bits, m_bits)
+        want = ref.mxint_matmul_ref(a, b, m_bits, m_bits)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_rectangular(self):
+        a, b = _rand((16, 64), 2), _rand((64, 48), 3)
+        got = mxint_qmatmul(a, b, 5.0, 3.0)
+        want = ref.mxint_matmul_ref(a, b, 5.0, 3.0)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_multi_k_tile_accumulation(self):
+        # K spans several grid steps: exercises the in-place accumulate.
+        a, b = _rand((16, 128), 4), _rand((128, 16), 5)
+        got = mxint_qmatmul(a, b, 6.0, 6.0, bk=32)
+        want = ref.mxint_matmul_ref(a, b, 6.0, 6.0)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_mixed_operand_precision(self):
+        a, b = _rand((32, 32), 6), _rand((32, 32), 7)
+        lo = mxint_qmatmul(a, b, 2.0, 2.0)
+        hi = mxint_qmatmul(a, b, 8.0, 8.0)
+        exact = a @ b
+        # Higher mantissa width must be closer to the exact product.
+        assert jnp.mean(jnp.abs(hi - exact)) < jnp.mean(jnp.abs(lo - exact))
+
+    def test_traced_mantissa_bits(self):
+        # The mantissa width is a runtime input — one HLO serves all widths.
+        a, b = _rand((16, 32), 8), _rand((32, 16), 9)
+
+        def f(m):
+            return mxint_qmatmul(a, b, m, m)
+
+        for m in [2.0, 3.0, 7.0]:
+            got = jax.jit(f)(jnp.float32(m))
+            want = ref.mxint_matmul_ref(a, b, m, m)
+            np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        mi=st.integers(1, 4),
+        ki=st.integers(1, 4),
+        ni=st.integers(1, 4),
+        m_a=st.integers(2, 8),
+        m_b=st.integers(2, 8),
+        seed=st.integers(0, 2**31 - 1),
+        scale=st.sampled_from([0.01, 1.0, 100.0]),
+    )
+    def test_hypothesis_shape_sweep(self, mi, ki, ni, m_a, m_b, seed, scale):
+        a = _rand((16 * mi, 16 * ki), seed, scale)
+        b = _rand((16 * ki, 16 * ni), seed + 1, scale)
+        got = mxint_qmatmul(a, b, float(m_a), float(m_b))
+        want = ref.mxint_matmul_ref(a, b, float(m_a), float(m_b))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4 * scale)
+
+
+class TestQuantizePallasVsRef:
+    @pytest.mark.parametrize("m_bits", [1.0, 3.0, 7.0, 10.0])
+    def test_matches_ref(self, m_bits):
+        x = _rand((64, 32), 10)
+        got = mxint_quantize_pallas(x, m_bits)
+        want = ref.mxint_quantize(x, m_bits)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        ri=st.integers(1, 6),
+        ci=st.integers(1, 8),
+        m=st.integers(1, 12),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, ri, ci, m, seed):
+        x = _rand((16 * ri, 2 * ci), seed)
+        got = mxint_quantize_pallas(x, float(m), bn=2)
+        want = ref.mxint_quantize(x, float(m))
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+
+    def test_tile_independence(self):
+        # Quantizing tile-by-tile must equal whole-tensor quantization:
+        # blocks never straddle tile boundaries.
+        x = _rand((64, 64), 11)
+        got_small = mxint_quantize_pallas(x, 4.0, bm=16, bn=16)
+        got_big = mxint_quantize_pallas(x, 4.0, bm=64, bn=64)
+        np.testing.assert_array_equal(got_small, got_big)
+
+
+class TestStructuralEstimates:
+    def test_vmem_footprint_monotone(self):
+        assert vmem_footprint_bytes(32, 32, 32) < vmem_footprint_bytes(64, 64, 64)
+
+    def test_vmem_fits_budget(self):
+        # The default artifact tiling must fit comfortably in 16 MiB VMEM.
+        assert vmem_footprint_bytes(16, 16, 16) < 16 * 2**20
+
+    def test_mxu_utilization_bounds(self):
+        assert 0.0 < mxu_utilization_estimate(16, 16, 16) <= 1.0
+        assert mxu_utilization_estimate(128, 128, 128) == 1.0

@@ -1,0 +1,89 @@
+//! Shared plumbing for the benchmark harness (plain `main` benches;
+//! criterion is unavailable offline). Every bench regenerates one table
+//! or figure of the paper and prints the same rows/series the paper
+//! reports, with the paper's own numbers alongside where they exist.
+//!
+//! Knobs (env): MASE_TRIALS (search trials), MASE_EVAL_BATCHES,
+//! MASE_MODELS (comma list to sub-select), MASE_PRETRAIN_STEPS.
+
+#![allow(dead_code)]
+
+use mase::coordinator::{pretrain, PretrainConfig, Session};
+use mase::data::{batches, Batch, MarkovCorpus, Task};
+use mase::frontend::ModelMeta;
+use mase::passes::{profile_model, Evaluator, ProfileData};
+
+pub fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+pub fn trials() -> usize {
+    env_usize("MASE_TRIALS", 24)
+}
+
+pub fn eval_batches_n() -> usize {
+    env_usize("MASE_EVAL_BATCHES", 3)
+}
+
+pub fn session() -> Session {
+    Session::open(&Session::default_dir()).expect(
+        "artifacts missing — run `make artifacts && cargo build --release` first",
+    )
+}
+
+/// The ten classifier simulants, optionally filtered by MASE_MODELS.
+pub fn classifier_names(session: &Session) -> Vec<String> {
+    let filter: Option<Vec<String>> = std::env::var("MASE_MODELS")
+        .ok()
+        .map(|v| v.split(',').map(str::to_string).collect());
+    session
+        .manifest
+        .classifiers()
+        .iter()
+        .map(|m| m.name.clone())
+        .filter(|n| filter.as_ref().map(|f| f.contains(n)).unwrap_or(true))
+        .collect()
+}
+
+/// Cached pretrained weights for (model, task).
+pub fn weights(session: &Session, meta: &ModelMeta, task: Option<Task>) -> Vec<f32> {
+    let cfg = PretrainConfig {
+        steps: env_usize("MASE_PRETRAIN_STEPS", 220),
+        ..Default::default()
+    };
+    pretrain::pretrain(session, meta, task, &cfg).expect("pretraining failed")
+}
+
+/// Held-out eval batches for a classifier task.
+pub fn eval_set(meta: &ModelMeta, task: Task) -> Vec<Batch> {
+    batches(task, 1, eval_batches_n(), meta.batch, meta.seq_len)
+}
+
+/// Held-out LM corpus batches.
+pub fn lm_eval_set(meta: &ModelMeta) -> Vec<Batch> {
+    let corpus = MarkovCorpus::new(7);
+    (0..eval_batches_n())
+        .map(|i| Batch {
+            tokens: corpus.batch(1000 + i as u64, meta.batch, meta.seq_len),
+            labels: vec![0; meta.batch],
+            batch: meta.batch,
+            seq: meta.seq_len,
+        })
+        .collect()
+}
+
+/// Evaluator + profile, ready to score solutions.
+pub fn evaluator_for<'a>(
+    session: &'a Session,
+    meta: &'a ModelMeta,
+    w: &'a [f32],
+    eval: &'a [Batch],
+) -> (Evaluator<'a>, ProfileData) {
+    let ev = Evaluator::new(&session.runtime, meta, w, eval);
+    let profile = profile_model(&session.runtime, meta, w, &eval[..1]).expect("profile failed");
+    (ev, profile)
+}
+
+pub fn banner(name: &str, what: &str) {
+    println!("\n=== {name} — {what} ===");
+}

@@ -1,0 +1,73 @@
+//! Fig. 5: three MX formats (MXInt8 / BMF8 / BL8, block 32, 8-bit shared
+//! + 8-bit local) quantizing the ten LLM simulants on sst2-sim. Reports
+//! area efficiency relative to the int8 design (bars) and Δaccuracy vs
+//! FP32 (curves), per model and averaged.
+
+#[path = "common.rs"]
+mod common;
+
+use mase::data::Task;
+use mase::formats::FormatKind;
+use mase::passes::QuantSolution;
+use mase::util::Table;
+
+fn main() {
+    common::banner("Fig 5", "MX formats x 10 LLM simulants on sst2-sim");
+    let session = common::session();
+    let fmts = [
+        (FormatKind::MxInt, 7.0f32),
+        (FormatKind::Bmf, 5.0),
+        (FormatKind::Bl, 7.0),
+    ];
+
+    let mut t = Table::new(vec![
+        "model", "fp32_acc", "mxint8_Δacc", "bmf8_Δacc", "bl8_Δacc",
+        "mxint8_AE", "bmf8_AE", "bl8_AE",
+    ]);
+    let mut sums = vec![0.0f64; 6];
+    let names = common::classifier_names(&session);
+    for name in &names {
+        let meta = session.manifest.model(name).unwrap().clone();
+        let w = common::weights(&session, &meta, Some(Task::Sst2));
+        let eval = common::eval_set(&meta, Task::Sst2);
+        let (ev, profile) = common::evaluator_for(&session, &meta, &w, &eval);
+
+        let fp32 = ev
+            .accuracy(&QuantSolution::uniform(FormatKind::Fp32, 32.0, &meta, &profile))
+            .unwrap()
+            .accuracy();
+        let int8 = ev
+            .evaluate(&QuantSolution::uniform(FormatKind::Int, 8.0, &meta, &profile))
+            .unwrap();
+
+        let mut cells = vec![name.clone(), format!("{fp32:.3}")];
+        let mut aes = Vec::new();
+        for (i, (fmt, bits)) in fmts.iter().enumerate() {
+            let r = ev.evaluate(&QuantSolution::uniform(*fmt, *bits, &meta, &profile)).unwrap();
+            let dacc = r.accuracy - fp32;
+            let ae = r.design.area_efficiency() / int8.design.area_efficiency();
+            cells.push(format!("{dacc:+.3}"));
+            aes.push(format!("{ae:.2}x"));
+            sums[i] += dacc;
+            sums[3 + i] += ae;
+        }
+        cells.extend(aes);
+        t.row(cells);
+    }
+    let n = names.len() as f64;
+    t.row(vec![
+        "AVERAGE".to_string(),
+        "".to_string(),
+        format!("{:+.3}", sums[0] / n),
+        format!("{:+.3}", sums[1] / n),
+        format!("{:+.3}", sums[2] / n),
+        format!("{:.2}x", sums[3] / n),
+        format!("{:.2}x", sums[4] / n),
+        format!("{:.2}x", sums[5] / n),
+    ]);
+    println!("{}", t.render());
+    println!("paper shape: MXInt best Δacc of the three MX formats; all MX formats");
+    println!("have area efficiency < 1x of int8 at 8-bit local components.");
+    let ok = sums[0] >= sums[1] && sums[0] >= sums[2];
+    println!("shape check: MXInt best Δacc: {ok}");
+}

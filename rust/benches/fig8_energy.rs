@@ -1,0 +1,75 @@
+//! Fig. 8: energy efficiency of MP MXInt vs uniform MXInt4 / MXInt6
+//! designs across the ten simulants on sst2-sim. The paper's shape:
+//! MP MXInt's energy efficiency sits between MXInt4 and MXInt6 (its
+//! mantissas average ~4 bits) while its accuracy beats MXInt6 by ~1% and
+//! MXInt4 by ~8%.
+
+#[path = "common.rs"]
+mod common;
+
+use mase::data::Task;
+use mase::formats::FormatKind;
+use mase::hw::energy::energy_efficiency;
+use mase::hw::Device;
+use mase::passes::{run_search, QuantSolution, SearchConfig};
+use mase::util::Table;
+
+fn main() {
+    common::banner("Fig 8", "energy efficiency: MXInt4 | MP MXInt | MXInt6 on sst2-sim");
+    let session = common::session();
+    let device = Device::u250();
+    let trials = common::trials();
+
+    let mut t = Table::new(vec![
+        "model", "mx4_acc", "mp_acc", "mx6_acc", "mx4_inf/J", "mp_inf/J", "mx6_inf/J",
+    ]);
+    let names = common::classifier_names(&session);
+    let mut acc_sum = [0.0f64; 3];
+    let mut between = 0usize;
+    for name in &names {
+        let meta = session.manifest.model(name).unwrap().clone();
+        let w = common::weights(&session, &meta, Some(Task::Sst2));
+        let eval = common::eval_set(&meta, Task::Sst2);
+        let (ev, profile) = common::evaluator_for(&session, &meta, &w, &eval);
+
+        let run_uniform = |bits: f32| {
+            let sol = QuantSolution::uniform(FormatKind::MxInt, bits, &meta, &profile);
+            let acc = ev.accuracy(&sol).unwrap().accuracy();
+            let (dp, _b, g) = ev.hardware(&sol);
+            let e = energy_efficiency(&g, FormatKind::MxInt, &device, dp.offchip_bits);
+            (acc, e)
+        };
+        let (a4, e4) = run_uniform(3.0); // 4-bit elements: m=3 (+sign)
+        let (a6, e6) = run_uniform(5.0); // 6-bit elements: m=5
+        let mp = run_search(&ev, &profile, Task::Sst2, &SearchConfig { trials, ..Default::default() })
+            .unwrap();
+        let (dp, _b, g) = ev.hardware(&mp.best);
+        let emp = energy_efficiency(&g, FormatKind::MxInt, &device, dp.offchip_bits);
+        let amp = mp.best_eval.accuracy;
+
+        acc_sum[0] += a4;
+        acc_sum[1] += amp;
+        acc_sum[2] += a6;
+        if emp >= e6.min(e4) && emp <= e6.max(e4) {
+            between += 1;
+        }
+        t.row(vec![
+            name.clone(),
+            format!("{a4:.3}"),
+            format!("{amp:.3}"),
+            format!("{a6:.3}"),
+            format!("{e4:.2e}"),
+            format!("{emp:.2e}"),
+            format!("{e6:.2e}"),
+        ]);
+    }
+    let n = names.len() as f64;
+    println!("{}", t.render());
+    println!(
+        "measured: MP acc beats MXInt6 by {:+.1}% and MXInt4 by {:+.1}% (paper: +1% / +8%);\n\
+         energy efficiency between MXInt4 and MXInt6 on {between}/{} models",
+        100.0 * (acc_sum[1] - acc_sum[2]) / n,
+        100.0 * (acc_sum[1] - acc_sum[0]) / n,
+        names.len()
+    );
+}

@@ -1,0 +1,139 @@
+//! Micro-benchmarks for the §Perf optimization pass: hot-path timings of
+//! each layer's building blocks — Rust quantizers, IR clone+parallelize,
+//! the dataflow simulator, PJRT eval execution (with and without the
+//! executable cache), and TPE ask/tell overhead.
+
+#[path = "common.rs"]
+mod common;
+
+use mase::data::Task;
+use mase::formats::{self, FormatKind, Precision};
+use mase::frontend::build_graph;
+use mase::hw::Device;
+use mase::passes::{parallelize, ProfileData, QuantSolution};
+use mase::search::{Algorithm, Space, Trial};
+use mase::util::{rng::Rng, Stopwatch, Table};
+
+fn time<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    let sw = Stopwatch::start();
+    for _ in 0..iters {
+        f();
+    }
+    sw.secs() / iters as f64
+}
+
+fn main() {
+    common::banner("microbench", "hot-path timings for EXPERIMENTS.md §Perf");
+    let mut t = Table::new(vec!["item", "per-op", "throughput"]);
+
+    // L3: quantizers over a 256x256 tensor
+    let mut rng = Rng::new(1);
+    let x: Vec<f32> = (0..256 * 256).map(|_| rng.normal() as f32).collect();
+    for fmt in [FormatKind::MxInt, FormatKind::Bmf, FormatKind::Bl, FormatKind::Int] {
+        let mut buf = x.clone();
+        let dt = time(20, || {
+            buf.copy_from_slice(&x);
+            formats::quantize_2d(fmt, &mut buf, 256, 256, Precision::new(5.0, 2.0));
+        });
+        t.row(vec![
+            format!("quantize_2d {} 256x256", fmt.name()),
+            format!("{:.3}ms", dt * 1e3),
+            format!("{:.0} Melem/s", 256.0 * 256.0 / dt / 1e6),
+        ]);
+    }
+
+    // L3: IR clone + parallelize (the per-trial hardware evaluation)
+    let session = common::session();
+    let meta = session.manifest.model("opt-6.7b-sim").unwrap().clone();
+    let profile = ProfileData::uniform(&meta, 4.0);
+    let mut g0 = build_graph(&meta);
+    QuantSolution::uniform(FormatKind::MxInt, 5.0, &meta, &profile).apply(&mut g0);
+    let dt = time(50, || {
+        let mut g = g0.clone();
+        parallelize(&mut g, &Device::u250(), 0.4);
+    });
+    t.row(vec![
+        "clone+parallelize opt-6.7b-sim".into(),
+        format!("{:.3}ms", dt * 1e3),
+        format!("{:.0} trials/s", 1.0 / dt),
+    ]);
+
+    // L3: dataflow simulator
+    let mut g = g0.clone();
+    parallelize(&mut g, &Device::u250(), 0.4);
+    let nodes = mase::sim::nodes_from_graph(&g);
+    let dt = time(5, || {
+        mase::sim::simulate(
+            &nodes,
+            &mase::sim::SimConfig { inferences: 4, fifo_depth: 4, sequential: false },
+        );
+    });
+    t.row(vec!["simulate 4 inferences".into(), format!("{:.3}ms", dt * 1e3), String::new()]);
+
+    // Runtime: eval artifact execution (cache warm vs cold compile)
+    let meta = session.manifest.model("opt-125m-sim").unwrap().clone();
+    let w = common::weights(&session, &meta, Some(Task::Sst2));
+    let eval = common::eval_set(&meta, Task::Sst2);
+    let (ev, profile) = common::evaluator_for(&session, &meta, &w, &eval);
+    let sol = QuantSolution::uniform(FormatKind::MxInt, 5.0, &meta, &profile);
+    let c0 = session.runtime.compile_count();
+    let sw = Stopwatch::start();
+    ev.accuracy(&sol).unwrap();
+    let cold = sw.secs();
+    let dt = time(5, || {
+        ev.accuracy(&sol).unwrap();
+    });
+    t.row(vec![
+        format!("eval 3 batches (cold, {} compiles)", session.runtime.compile_count() - c0),
+        format!("{:.1}ms", cold * 1e3),
+        String::new(),
+    ]);
+    t.row(vec![
+        "eval 3 batches (warm cache)".into(),
+        format!("{:.1}ms", dt * 1e3),
+        format!("{:.0} trials/s", 1.0 / dt),
+    ]);
+
+    // §Perf A/B: the pre-optimization path re-converted every host buffer
+    // (weights vector included) to a literal on every execute call.
+    let artifact = meta.artifact("eval_mxint").unwrap().to_string();
+    let qcfg = sol.to_qconfig();
+    let dt_legacy = time(5, || {
+        use mase::runtime::TensorData as TD;
+        for b in &eval {
+            session
+                .runtime
+                .execute(
+                    &artifact,
+                    &[
+                        TD::f32(&w, &[meta.param_size as i64]),
+                        TD::i32(&b.tokens, &[b.batch as i64, b.seq as i64]),
+                        TD::i32(&b.labels, &[b.batch as i64]),
+                        TD::f32(&qcfg, &[meta.num_qtensors() as i64, 2]),
+                    ],
+                )
+                .unwrap();
+        }
+    });
+    t.row(vec![
+        "eval 3 batches (legacy per-call copies)".into(),
+        format!("{:.1}ms", dt_legacy * 1e3),
+        format!("prepared-literal speedup {:.2}x", dt_legacy / dt),
+    ]);
+
+    // Search: TPE proposal overhead at 64 observations
+    let space = Space::uniform(18, 2.0, 8.0);
+    let mut tpe = Algorithm::Tpe.build(space.clone(), 1);
+    let mut r2 = Rng::new(2);
+    for _ in 0..64 {
+        let x = space.sample(&mut r2);
+        let v = -x.iter().sum::<f64>();
+        tpe.tell(Trial { x, value: v, objectives: vec![] });
+    }
+    let dt = time(50, || {
+        let _ = tpe.ask();
+    });
+    t.row(vec!["TPE ask() @64 obs, 18 dims".into(), format!("{:.3}ms", dt * 1e3), String::new()]);
+
+    println!("{}", t.render());
+}

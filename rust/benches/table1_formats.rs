@@ -1,0 +1,69 @@
+//! Table 1: evaluation of MX formats at ~8 average bits quantizing the
+//! LLaMA simulant on wikitext2-sim — perplexity, memory density,
+//! arithmetic density, with the paper's measured values alongside.
+
+#[path = "common.rs"]
+mod common;
+
+use mase::formats::{FormatKind, Precision};
+use mase::hw::{arithmetic_density, memory_density};
+use mase::passes::QuantSolution;
+use mase::util::Table;
+
+fn main() {
+    common::banner("Table 1", "MX formats at avg 8 bits, llama-sim on wikitext2-sim");
+    let session = common::session();
+    let meta = session.manifest.model("llama-sim").unwrap().clone();
+    let w = common::weights(&session, &meta, None);
+    let eval = common::lm_eval_set(&meta);
+    let (ev, profile) = common::evaluator_for(&session, &meta, &w, &eval);
+
+    // (format, bits knob, paper ppl, paper mem, paper arith)
+    let rows: [(FormatKind, f32, &str, &str, &str); 6] = [
+        (FormatKind::Fp32, 32.0, "7.06", "1x", "1x"),
+        (FormatKind::Int, 8.0, "265", "4x", "7.7x"),
+        (FormatKind::Fp8, 8.0, "7.18", "4x", "17.4x"),
+        (FormatKind::MxInt, 7.0, "7.07", "3.8x", "14.4x"),
+        (FormatKind::Bmf, 5.0, "223000", "3.8x", "14.4x"),
+        (FormatKind::Bl, 7.0, "18.8", "3.8x", "16.1x"),
+    ];
+
+    let mut t = Table::new(vec![
+        "Approach",
+        "Config",
+        "Perplexity",
+        "paper-ppl",
+        "MemDensity",
+        "paper",
+        "ArithDensity",
+        "paper",
+    ]);
+    let mut measured = Vec::new();
+    for (fmt, bits, ppl_p, mem_p, ari_p) in rows {
+        let sol = QuantSolution::uniform(fmt, bits, &meta, &profile);
+        let acc = ev.accuracy(&sol).expect("eval failed");
+        let p = Precision::new(bits, sol.fracs[0]);
+        measured.push((fmt, acc.perplexity()));
+        t.row(vec![
+            fmt.name().to_string(),
+            if fmt == FormatKind::Fp32 { "-".into() } else { "W8A8".to_string() },
+            format!("{:.2}", acc.perplexity()),
+            ppl_p.to_string(),
+            format!("{:.2}x", memory_density(fmt, p)),
+            mem_p.to_string(),
+            format!("{:.1}x", arithmetic_density(fmt, p)),
+            ari_p.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // shape assertions the paper's Table 1 implies
+    let ppl = |f: FormatKind| measured.iter().find(|(g, _)| *g == f).unwrap().1;
+    let ok_int = ppl(FormatKind::Int) > 1.5 * ppl(FormatKind::Fp32);
+    let ok_mx = ppl(FormatKind::MxInt) < 1.1 * ppl(FormatKind::Fp32);
+    let ok_bmf = ppl(FormatKind::Bmf) > ppl(FormatKind::MxInt);
+    let ok_bl = ppl(FormatKind::Bl) > ppl(FormatKind::MxInt);
+    println!(
+        "shape check: int8 blows up: {ok_int} | mxint8 ~ fp32: {ok_mx} | bmf worse: {ok_bmf} | bl worse: {ok_bl}"
+    );
+}

@@ -1,0 +1,67 @@
+//! Table 3: MASE IR scalability across the OPT family — DAG size,
+//! code-generation time and emitted code size, with the paper's MLIR-
+//! affine comparison quoted. We additionally measure an in-repo
+//! "instruction-level" lowering (every op expanded to per-element
+//! operations, the mechanism behind MLIR-affine's blowup) to show the
+//! module-level-vs-instruction-level gap with measured numbers.
+
+#[path = "common.rs"]
+mod common;
+
+use mase::formats::FormatKind;
+use mase::frontend::build_graph;
+use mase::hw::throughput::op_work;
+use mase::hw::Device;
+use mase::passes::{emit_pass, parallelize, ProfileData, QuantSolution};
+use mase::util::{Stopwatch, Table};
+
+const OPTS: [(&str, &str, &str); 5] = [
+    ("opt-125m-sim", "1.9M", "1 week"),
+    ("opt-350m-sim", "1.7M", "2 weeks"),
+    ("opt-1.3b-sim", "1.7M", ">4 weeks"),
+    ("opt-2.7b-sim", "1.9M", ">4 weeks"),
+    ("opt-6.7b-sim", "2.3M", ">4 weeks"),
+];
+
+fn main() {
+    common::banner("Table 3", "IR scalability across the OPT family");
+    let session = common::session();
+    let tmp = std::env::temp_dir().join("mase_table3");
+
+    let mut t = Table::new(vec![
+        "model",
+        "affine-DAG(paper)",
+        "affine-time(paper)",
+        "instr-DAG(measured)",
+        "MASE-DAG",
+        "codegen",
+        "SV-lines",
+    ]);
+    for (name, paper_dag, paper_time) in OPTS {
+        let meta = session.manifest.model(name).unwrap().clone();
+        let profile = ProfileData::uniform(&meta, 4.0);
+        let sw = Stopwatch::start();
+        let mut g = build_graph(&meta);
+        QuantSolution::uniform(FormatKind::MxInt, 5.0, &meta, &profile).apply(&mut g);
+        parallelize(&mut g, &Device::u250(), 0.3);
+        let dir = tmp.join(name);
+        let (_design, lines) = emit_pass::emit_to_dir(&g, &dir).unwrap();
+        let secs = sw.secs();
+        // instruction-level size: one op per scalar multiply-accumulate /
+        // element op — what an affine lowering would materialize.
+        let instr: f64 = g.ops.iter().map(|o| op_work(&g, o)).sum();
+        t.row(vec![
+            name.to_string(),
+            paper_dag.to_string(),
+            paper_time.to_string(),
+            format!("{:.1}M", instr / 1e6),
+            g.dag_size().to_string(),
+            format!("{:.3}s", secs),
+            lines.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    let _ = std::fs::remove_dir_all(&tmp);
+    println!("shape: module-level MASE IR stays at ~10^2 ops and sub-second codegen while");
+    println!("instruction-level DAGs are 10^6+ — the paper's exponential-compile-time gap.");
+}

@@ -1,0 +1,126 @@
+//! The full MASE flow (paper Fig. 3 left): front-end -> profile ->
+//! [quantize + parallelize + evaluate]* under `search` -> emit.
+
+use super::pretrain::{pretrain, PretrainConfig};
+use super::Session;
+use crate::data::{batches, Task};
+use crate::formats::FormatKind;
+use crate::passes::{
+    emit_pass, profile_model, run_search, Evaluator, Objective, PassManager, QuantSolution,
+    SearchConfig, SearchOutcome,
+};
+use crate::search::Algorithm;
+use anyhow::Result;
+use std::path::PathBuf;
+
+#[derive(Debug, Clone)]
+pub struct FlowConfig {
+    pub model: String,
+    pub task: Task,
+    pub fmt: FormatKind,
+    pub algorithm: Algorithm,
+    pub trials: usize,
+    pub eval_batches: usize,
+    pub qat_steps: usize,
+    pub hw_aware: bool,
+    pub seed: u64,
+    pub emit_dir: Option<PathBuf>,
+    pub pretrain_steps: usize,
+}
+
+impl Default for FlowConfig {
+    fn default() -> Self {
+        Self {
+            model: "opt-125m-sim".into(),
+            task: Task::Sst2,
+            fmt: FormatKind::MxInt,
+            algorithm: Algorithm::Tpe,
+            trials: 64,
+            eval_batches: 4,
+            qat_steps: 0,
+            hw_aware: true,
+            seed: 0,
+            emit_dir: None,
+            pretrain_steps: 220,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct FlowReport {
+    pub outcome: SearchOutcome,
+    pub fp32_accuracy: f64,
+    pub int8_baseline: crate::passes::EvalResult,
+    pub pass_manager: PassManager,
+    pub emitted_files: usize,
+    pub emitted_lines: usize,
+    pub dag_size: usize,
+}
+
+/// Run the complete flow for one (model, task): returns the search
+/// outcome plus FP32 and int8 reference points (the Fig. 7 comparison
+/// anchors).
+pub fn run_flow(session: &Session, cfg: &FlowConfig) -> Result<FlowReport> {
+    let mut pm = PassManager::new();
+    let meta = session.manifest.model(&cfg.model)?.clone();
+
+    // front-end: weights + IR
+    let weights = pm.run("front-end", || {
+        pretrain(
+            session,
+            &meta,
+            if meta.kind == "lm" { None } else { Some(cfg.task) },
+            &PretrainConfig { steps: cfg.pretrain_steps, ..Default::default() },
+        )
+    })?;
+
+    let eval_batches = batches(cfg.task, 1, cfg.eval_batches, meta.batch, meta.seq_len);
+    let mut ev = Evaluator::new(&session.runtime, &meta, &weights, &eval_batches);
+    ev.objective = if cfg.hw_aware { Objective::default() } else { Objective::sw_only() };
+
+    // profile (calibration for int + Fig. 1a data)
+    let profile = pm.run("profile", || {
+        profile_model(&session.runtime, &meta, &weights, &eval_batches[..1])
+    })?;
+
+    // reference points
+    let fp32_sol = QuantSolution::uniform(FormatKind::Fp32, 32.0, &meta, &profile);
+    let fp32_accuracy = pm.run("evaluate", || ev.accuracy(&fp32_sol))?.accuracy();
+    let int8_sol = QuantSolution::uniform(FormatKind::Int, 8.0, &meta, &profile);
+    let int8_baseline = pm.run("evaluate", || ev.evaluate(&int8_sol))?;
+
+    // search
+    let scfg = SearchConfig {
+        algorithm: cfg.algorithm,
+        trials: cfg.trials,
+        fmt: cfg.fmt,
+        seed: cfg.seed,
+        qat_steps: cfg.qat_steps,
+        ..Default::default()
+    };
+    let outcome = pm.run("search", || run_search(&ev, &profile, cfg.task, &scfg))?;
+
+    // emit the winning design
+    let (mut emitted_files, mut emitted_lines) = (0, 0);
+    let dag_size;
+    if let Some(dir) = &cfg.emit_dir {
+        let (_dp, _bits, g) = ev.hardware(&outcome.best);
+        dag_size = g.dag_size();
+        let (design, lines) = pm.run("emit", || emit_pass::emit_to_dir(&g, dir))?;
+        emitted_files = design.files.len();
+        emitted_lines = lines;
+    } else {
+        let (_dp, _bits, g) = ev.hardware(&outcome.best);
+        dag_size = g.dag_size();
+    }
+
+    Ok(FlowReport {
+        outcome,
+        fp32_accuracy,
+        int8_baseline,
+        pass_manager: pm,
+        emitted_files,
+        emitted_lines,
+        dag_size,
+    })
+}

@@ -1,0 +1,36 @@
+//! The end-to-end coordinator: process lifecycle, pretraining driver,
+//! and the full MASE flow (front-end -> profile -> search -> emit). This
+//! is the L3 "leader" the CLI and the examples call into.
+
+pub mod flow;
+pub mod pretrain;
+
+pub use flow::{run_flow, FlowConfig, FlowReport};
+pub use pretrain::{pretrain, weights_path, PretrainConfig};
+
+use crate::frontend::Manifest;
+use crate::runtime::Runtime;
+use anyhow::Result;
+use std::path::{Path, PathBuf};
+
+/// Shared session state: manifest + runtime + artifact directory.
+pub struct Session {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    pub runtime: Runtime,
+}
+
+impl Session {
+    /// Open the artifacts directory (default: `<repo>/artifacts`).
+    pub fn open(dir: &Path) -> Result<Session> {
+        let manifest = Manifest::load(dir)?;
+        let runtime = Runtime::new(dir)?;
+        Ok(Session { dir: dir.to_path_buf(), manifest, runtime })
+    }
+
+    pub fn default_dir() -> PathBuf {
+        std::env::var("MASE_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+    }
+}

@@ -1,0 +1,158 @@
+//! Pretraining driver: the Rust coordinator trains every model-zoo
+//! simulant from scratch by driving the AOT-lowered `train` artifact
+//! (fwd+bwd+SGD fused in HLO) over the synthetic task streams — no Python
+//! anywhere. Weights are cached under `artifacts/weights/` so benches and
+//! examples reuse them.
+
+use super::Session;
+use crate::data::{MarkovCorpus, Task};
+use crate::frontend::ModelMeta;
+use crate::runtime::TensorData;
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+
+#[derive(Debug, Clone)]
+pub struct PretrainConfig {
+    pub steps: usize,
+    pub lr: f32,
+    /// cosine-ish decay to this fraction of lr
+    pub final_lr_frac: f32,
+    pub log_every: usize,
+}
+
+impl Default for PretrainConfig {
+    fn default() -> Self {
+        Self { steps: 220, lr: 0.02, final_lr_frac: 0.1, log_every: 100 }
+    }
+}
+
+/// Cache path for (model, task) weights. LMs use task name "lm".
+pub fn weights_path(session: &Session, model: &str, task_name: &str) -> PathBuf {
+    session.dir.join("weights").join(format!("{model}__{task_name}.bin"))
+}
+
+fn save_weights(path: &PathBuf, w: &[f32]) -> Result<()> {
+    std::fs::create_dir_all(path.parent().unwrap())?;
+    let bytes: Vec<u8> = w.iter().flat_map(|v| v.to_le_bytes()).collect();
+    std::fs::write(path, bytes).with_context(|| format!("writing {}", path.display()))
+}
+
+fn load_weights(path: &PathBuf, expect: usize) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path)?;
+    anyhow::ensure!(bytes.len() == expect * 4, "weight file size mismatch");
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Train (or load cached) weights for one (model, task).
+/// For LM models pass `task = None` (trains on the Markov corpus).
+pub fn pretrain(
+    session: &Session,
+    meta: &ModelMeta,
+    task: Option<Task>,
+    cfg: &PretrainConfig,
+) -> Result<Vec<f32>> {
+    let task_name = task.map(|t| t.name()).unwrap_or("lm");
+    let path = weights_path(session, &meta.name, task_name);
+    if let Ok(w) = load_weights(&path, meta.param_size) {
+        return Ok(w);
+    }
+
+    let artifact = meta.artifact("train")?;
+    let mut w = crate::frontend::init_params(meta, 0xC0DE);
+    let corpus = MarkovCorpus::new(7);
+    let mut last_loss = f32::NAN;
+    for step in 0..cfg.steps {
+        let (tokens, labels) = match task {
+            Some(t) => {
+                // fresh train-split batch per step (deterministic stream)
+                let mut bt = crate::data::Batch::new(meta.batch, meta.seq_len);
+                for i in 0..meta.batch {
+                    bt.push(t.sample(0, (step * meta.batch + i) as u64, meta.seq_len));
+                }
+                (bt.tokens, bt.labels)
+            }
+            None => {
+                let toks = corpus.batch(step as u64, meta.batch, meta.seq_len);
+                (toks, vec![0i32; meta.batch])
+            }
+        };
+        // linear decay
+        let frac = step as f32 / cfg.steps.max(1) as f32;
+        let lr = cfg.lr * (1.0 - frac * (1.0 - cfg.final_lr_frac));
+        let out = session.runtime.execute(
+            artifact,
+            &[
+                TensorData::f32(&w, &[meta.param_size as i64]),
+                TensorData::i32(&tokens, &[meta.batch as i64, meta.seq_len as i64]),
+                TensorData::i32(&labels, &[meta.batch as i64]),
+                TensorData::scalar_f32(lr),
+            ],
+        )?;
+        w = out[0].to_vec_f32()?;
+        last_loss = out[1].scalar_f32()?;
+        if cfg.log_every > 0 && (step + 1) % cfg.log_every == 0 {
+            eprintln!("  [{}/{task_name}] step {} loss {:.4}", meta.name, step + 1, last_loss);
+        }
+    }
+    anyhow::ensure!(last_loss.is_finite(), "pretraining diverged (loss={last_loss})");
+    save_weights(&path, &w)?;
+    Ok(w)
+}
+
+/// The (model, task) pairs the experiments need: all 10 classifiers on
+/// sst2, the 5 OPT sizes on all six tasks (Fig. 6), the LM on the corpus.
+pub fn pretrain_units(session: &Session) -> Vec<(String, Option<Task>)> {
+    let mut units = Vec::new();
+    for (name, meta) in &session.manifest.models {
+        if meta.kind == "lm" {
+            units.push((name.clone(), None));
+        } else {
+            let tasks: Vec<Task> = if name.starts_with("opt-") {
+                Task::ALL.to_vec()
+            } else {
+                vec![Task::Sst2]
+            };
+            for t in tasks {
+                units.push((name.clone(), Some(t)));
+            }
+        }
+    }
+    units
+}
+
+/// Pretrain everything, fanned over worker threads. `PjRtClient` is not
+/// `Send` (Rc internally), so each worker opens its own `Session`/client;
+/// grouping by model amortizes the per-worker artifact compilation.
+pub fn pretrain_all(session: &Session, cfg: &PretrainConfig) -> Result<()> {
+    // group units by model so each worker compiles each train artifact once
+    let mut by_model: std::collections::BTreeMap<String, Vec<Option<Task>>> = Default::default();
+    for (m, t) in pretrain_units(session) {
+        by_model.entry(m).or_default().push(t);
+    }
+    let dir = session.dir.clone();
+    let cfg = cfg.clone();
+    let jobs: Vec<(String, Vec<Option<Task>>)> = by_model.into_iter().collect();
+    let threads = crate::util::pool::default_threads().min(jobs.len());
+    let results = crate::util::pool::par_map(jobs, threads, |(name, tasks)| -> Result<()> {
+        let local = Session::open(&dir)?;
+        let meta = local.manifest.model(&name)?.clone();
+        for t in tasks {
+            eprintln!("pretraining {name} ({})...", t.map(|t| t.name()).unwrap_or("lm"));
+            // the LM's next-token objective converges slower than the
+            // classification tasks: give it 2x the steps
+            let mut unit_cfg = cfg.clone();
+            if t.is_none() {
+                unit_cfg.steps = cfg.steps * 2;
+            }
+            pretrain(&local, &meta, t, &unit_cfg)?;
+        }
+        Ok(())
+    });
+    for r in results {
+        r?;
+    }
+    Ok(())
+}

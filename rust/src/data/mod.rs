@@ -1,0 +1,90 @@
+//! Synthetic data substrate — stands in for the paper's HuggingFace
+//! datasets (boolq/mnli/qnli/qqp/rte/sst2 and Wikitext2), which are not
+//! available offline. Each task is a deterministic, seeded generator whose
+//! label depends on a pattern a small transformer can learn (token
+//! counting, co-occurrence, overlap, copy detection), so accuracy responds
+//! to quantization the way the real benchmarks do: FP32 well above chance,
+//! low-precision formats degrading smoothly, int saturating badly.
+
+pub mod corpus;
+pub mod tasks;
+
+pub use corpus::MarkovCorpus;
+pub use tasks::{Task, TaskSample};
+
+/// A batch of classifier examples in the HLO artifact's input layout.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    /// row-major [batch, seq] token ids
+    pub tokens: Vec<i32>,
+    pub labels: Vec<i32>,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl Batch {
+    pub fn new(batch: usize, seq: usize) -> Self {
+        Self {
+            tokens: Vec::with_capacity(batch * seq),
+            labels: Vec::with_capacity(batch),
+            batch,
+            seq,
+        }
+    }
+
+    pub fn push(&mut self, sample: TaskSample) {
+        assert_eq!(sample.tokens.len(), self.seq);
+        self.tokens.extend_from_slice(&sample.tokens);
+        self.labels.push(sample.label as i32);
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.labels.len() == self.batch
+    }
+}
+
+/// Deterministic evaluation set: `n_batches` batches for (task, split).
+/// Split 0 = train stream, split 1 = held-out eval.
+pub fn batches(task: Task, split: u64, n_batches: usize, batch: usize, seq: usize) -> Vec<Batch> {
+    let mut out = Vec::with_capacity(n_batches);
+    for b in 0..n_batches {
+        let mut bt = Batch::new(batch, seq);
+        for i in 0..batch {
+            let idx = (b * batch + i) as u64;
+            bt.push(task.sample(split, idx, seq));
+        }
+        out.push(bt);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batches_are_deterministic() {
+        let a = batches(Task::Sst2, 1, 2, 8, 32);
+        let b = batches(Task::Sst2, 1, 2, 8, 32);
+        assert_eq!(a[0].tokens, b[0].tokens);
+        assert_eq!(a[1].labels, b[1].labels);
+    }
+
+    #[test]
+    fn splits_differ() {
+        let a = batches(Task::Sst2, 0, 1, 8, 32);
+        let b = batches(Task::Sst2, 1, 1, 8, 32);
+        assert_ne!(a[0].tokens, b[0].tokens);
+    }
+
+    #[test]
+    fn batch_layout() {
+        let bs = batches(Task::Qqp, 1, 3, 16, 32);
+        assert_eq!(bs.len(), 3);
+        for b in &bs {
+            assert_eq!(b.tokens.len(), 16 * 32);
+            assert_eq!(b.labels.len(), 16);
+            assert!(b.is_full());
+        }
+    }
+}

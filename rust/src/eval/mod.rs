@@ -1,0 +1,82 @@
+//! Evaluation metrics: accuracy, perplexity, Δaccuracy — the software
+//! half of the `evaluate` pass (paper §5 reports accuracy relative to
+//! FP32 and perplexity on the LM).
+
+/// Aggregate of (loss, correct) pairs returned by the eval artifacts.
+#[derive(Debug, Clone, Default)]
+pub struct EvalAccumulator {
+    pub total_loss: f64,
+    pub total_correct: u64,
+    pub total_examples: u64,
+    pub batches: u64,
+}
+
+impl EvalAccumulator {
+    pub fn add_batch(&mut self, loss: f32, correct: i32, examples: usize) {
+        self.total_loss += loss as f64;
+        self.total_correct += correct.max(0) as u64;
+        self.total_examples += examples as u64;
+        self.batches += 1;
+    }
+
+    /// Mean loss across batches (for LMs this is mean token NLL).
+    pub fn mean_loss(&self) -> f64 {
+        if self.batches == 0 {
+            return f64::NAN;
+        }
+        self.total_loss / self.batches as f64
+    }
+
+    /// Classification accuracy in [0, 1].
+    pub fn accuracy(&self) -> f64 {
+        if self.total_examples == 0 {
+            return f64::NAN;
+        }
+        self.total_correct as f64 / self.total_examples as f64
+    }
+
+    /// Perplexity = exp(mean token NLL).
+    pub fn perplexity(&self) -> f64 {
+        self.mean_loss().exp()
+    }
+}
+
+/// Δaccuracy as the paper plots it: quantized accuracy minus FP32
+/// accuracy (closer to 0 / positive is better).
+pub fn delta_accuracy(quantized: f64, fp32: f64) -> f64 {
+    quantized - fp32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulator_means() {
+        let mut a = EvalAccumulator::default();
+        a.add_batch(1.0, 32, 64);
+        a.add_batch(3.0, 48, 64);
+        assert!((a.mean_loss() - 2.0).abs() < 1e-12);
+        assert!((a.accuracy() - 80.0 / 128.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn perplexity_is_exp_loss() {
+        let mut a = EvalAccumulator::default();
+        a.add_batch(2.0, 0, 16);
+        assert!((a.perplexity() - 2.0f64.exp()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_accumulator_is_nan() {
+        let a = EvalAccumulator::default();
+        assert!(a.mean_loss().is_nan());
+        assert!(a.accuracy().is_nan());
+    }
+
+    #[test]
+    fn delta_accuracy_sign() {
+        assert!(delta_accuracy(0.8, 0.9) < 0.0);
+        assert_eq!(delta_accuracy(0.9, 0.9), 0.0);
+    }
+}

@@ -1,0 +1,87 @@
+//! BL (Block Logarithm, Miyashita et al.) fake quantization.
+//!
+//! Values are `sign * 2^E_i` with the per-element exponent `E_i` stored in
+//! `exp_el_bits` bits below a block-shared 8-bit bias: multiplications
+//! become shifts in hardware (the BL operator of Fig. 3 strips the
+//! mantissa datapath entirely), at the cost of a power-of-two-only grid.
+
+use super::{block_maxabs, for_each_block, map_block, pow2, shared_exponent};
+
+/// Fake-quantize a row-major 2-D tensor in place.
+pub fn bl_quantize(data: &mut [f32], rows: usize, cols: usize, exp_el_bits: f32) {
+    let eb = exp_el_bits.max(1.0) as i32;
+    let levels = pow2(eb) as i32 - 1; // exponents bias-levels ..= bias
+    for_each_block(rows, cols, |start| {
+        let bias = shared_exponent(block_maxabs(data, start, cols));
+        let e_min = bias - levels;
+        let underflow = pow2(e_min - 1);
+        map_block(data, start, cols, |x| {
+            if x == 0.0 {
+                return 0.0;
+            }
+            let absx = x.abs();
+            if absx < underflow {
+                return 0.0f32.copysign(x);
+            }
+            // Log-domain rounding: round(log2 |x|). f64 log2 is exact
+            // enough to round correctly for all f32 inputs.
+            let e = ((absx as f64).log2().round() as i32).clamp(e_min, bias);
+            pow2(e).copysign(x)
+        });
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_tensor(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn outputs_are_powers_of_two() {
+        let mut x = rand_tensor(32 * 8, 1);
+        bl_quantize(&mut x, 32, 8, 7.0);
+        for v in x {
+            if v != 0.0 {
+                let l = (v.abs() as f64).log2();
+                assert_eq!(l, l.round(), "{v}");
+            }
+        }
+    }
+
+    #[test]
+    fn idempotent() {
+        for seed in 0..5 {
+            let x = rand_tensor(32 * 4, seed);
+            let mut q1 = x.clone();
+            bl_quantize(&mut q1, 32, 4, 6.0);
+            let mut q2 = q1.clone();
+            bl_quantize(&mut q2, 32, 4, 6.0);
+            assert_eq!(q1, q2);
+        }
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        // Power-of-two grid rounds within 2^±0.5, and the top of the range
+        // clips to 2^bias (matching ref.py): worst-case |q-x|/x < 0.5.
+        let mut x: Vec<f32> = rand_tensor(64, 3).iter().map(|v| v.abs() + 1.0).collect();
+        let orig = x.clone();
+        bl_quantize(&mut x, 16, 4, 7.0);
+        for (a, b) in orig.iter().zip(x.iter()) {
+            assert!(((a - b) / a).abs() < 0.51, "{a} {b}");
+        }
+    }
+
+    #[test]
+    fn small_exp_bits_flush_small_values() {
+        let mut x = vec![1.0f32; 32];
+        x[1] = 1e-3; // 2^-10 below peak; with 3 exponent bits range=2^-7
+        bl_quantize(&mut x, 16, 2, 3.0);
+        assert_eq!(x[1], 0.0);
+    }
+}

@@ -1,0 +1,101 @@
+//! BMF (Block Minifloat, Fox et al.) fake quantization.
+//!
+//! Each (16, 2) block shares an 8-bit exponent *bias* anchored at the
+//! block max; each element is a local minifloat with `LOCAL_EXP_BITS`
+//! exponent bits and `m` mantissa bits. The local dynamic range is only
+//! `2^(2^LOCAL_EXP_BITS)` below the block max — elements far below the
+//! peak flush to zero (denormal rounding), which is the mechanism behind
+//! the catastrophic BMF8 perplexity the paper reports for LLaMA (Table 1).
+
+use super::{block_maxabs, floor_log2, for_each_block, map_block, pow2, round_ties_even, shared_exponent};
+
+/// Bitwidth of each element's local exponent (paper Fig. 1c uses a small
+/// local exponent; 2 bits gives the 2^3-wide local range that reproduces
+/// the BMF failure shape on large-variance tensors).
+pub const LOCAL_EXP_BITS: u32 = 2;
+
+/// Fake-quantize a row-major 2-D tensor in place.
+pub fn bmf_quantize(data: &mut [f32], rows: usize, cols: usize, mantissa_bits: f32) {
+    let m = mantissa_bits.max(1.0) as i32;
+    let e_min = -(pow2(LOCAL_EXP_BITS as i32) as i32 - 1); // -(2^eb - 1)
+    for_each_block(rows, cols, |start| {
+        let bias = shared_exponent(block_maxabs(data, start, cols));
+        let top = pow2(bias + 1) - pow2(bias - m);
+        map_block(data, start, cols, |x| {
+            if x == 0.0 {
+                return 0.0;
+            }
+            let absx = x.abs();
+            let e_loc = (floor_log2(absx) - bias).clamp(e_min, 0);
+            let scale = pow2(e_loc + bias - m);
+            let q = (round_ties_even(absx / scale) * scale).min(top);
+            q.copysign(x)
+        });
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_tensor(n: usize, seed: u64, scale: f32) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() as f32 * scale).collect()
+    }
+
+    #[test]
+    fn idempotent() {
+        for seed in 0..8 {
+            let x = rand_tensor(32 * 4, seed, if seed % 2 == 0 { 1.0 } else { 1e-3 });
+            let mut q1 = x.clone();
+            bmf_quantize(&mut q1, 32, 4, 4.0);
+            let mut q2 = q1.clone();
+            bmf_quantize(&mut q2, 32, 4, 4.0);
+            assert_eq!(q1, q2, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn flushes_values_far_below_block_peak() {
+        // 1.0 dominates the block; 1e-6 is far outside the 2^-3 local
+        // range and must flush to zero — Table 1's BMF failure mode.
+        let mut x = vec![1e-6f32; 32];
+        x[0] = 1.0;
+        bmf_quantize(&mut x, 16, 2, 4.0);
+        assert!((x[0] - 1.0).abs() < 0.1);
+        assert!(x[1..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn keeps_near_peak_values() {
+        let mut x = vec![0.5f32; 32];
+        x[0] = 1.0;
+        let orig = x.clone();
+        bmf_quantize(&mut x, 16, 2, 4.0);
+        for (a, b) in orig.iter().zip(x.iter()) {
+            assert!((a - b).abs() / a < 0.1);
+        }
+    }
+
+    #[test]
+    fn saturates_at_top_of_range() {
+        let mut x = vec![1.0f32; 32];
+        x[0] = 1.999_999_9; // just below 2.0: must not round past `top`
+        bmf_quantize(&mut x, 16, 2, 2.0);
+        let bias = 0; // max < 2 -> floor(log2)=0
+        let top = pow2(bias + 1) - pow2(bias - 2);
+        assert!(x[0] <= top);
+    }
+
+    #[test]
+    fn error_decreases_with_mantissa_bits(){
+        let x = rand_tensor(64 * 8, 5, 1.0);
+        let err = |m: f32| {
+            let mut q = x.clone();
+            bmf_quantize(&mut q, 64, 8, m);
+            x.iter().zip(q.iter()).map(|(a, b)| (a - b).abs() as f64).sum::<f64>()
+        };
+        assert!(err(2.0) > err(6.0));
+    }
+}

@@ -1,0 +1,93 @@
+//! Casting-cost model between formats and precisions (paper §4,
+//! "No mixed-arithmetic but mixed-precision quantization").
+//!
+//! Casting between *different arithmetic types* (e.g. MXInt -> BL) needs
+//! dynamic shifters to re-align ranges — large circuits. Casting between
+//! *precisions of the same format* is mantissa bit extension/truncation
+//! plus a fully-unrollable exponent shift — cheap. The quantize pass uses
+//! this model to reject mixed-arithmetic solutions, and the `parallelize`
+//! pass adds the intra-format cast LUTs on every edge where producer and
+//! consumer precision differ.
+
+use super::FormatKind;
+
+/// Estimated LUT cost of casting one element between two tensor formats.
+pub fn cast_cost_luts(
+    from: FormatKind,
+    from_bits: f32,
+    to: FormatKind,
+    to_bits: f32,
+) -> f64 {
+    if from == to {
+        match from {
+            FormatKind::Fp32 | FormatKind::Fp8 => 0.0,
+            // Fixed point / MXInt mantissas: bit extend or truncate-round.
+            FormatKind::Int | FormatKind::MxInt => {
+                let delta = (from_bits - to_bits).abs() as f64;
+                // truncation needs a rounder (~1 LUT/bit); extension is wires
+                if to_bits < from_bits {
+                    1.0 * delta + 2.0
+                } else if to_bits > from_bits {
+                    0.0
+                } else {
+                    0.0
+                }
+            }
+            // BMF/BL share the bias path: small exponent adjust.
+            FormatKind::Bmf | FormatKind::Bl => {
+                if (from_bits - to_bits).abs() > 0.0 {
+                    3.0
+                } else {
+                    0.0
+                }
+            }
+        }
+    } else {
+        // Cross-arithmetic cast: de/re-normalization with dynamic shifts.
+        // A w-bit dynamic shifter costs ~w*log2(w) LUTs (Coward et al.);
+        // both ends pay one.
+        let w = from_bits.max(to_bits).max(8.0) as f64;
+        2.0 * w * w.log2() + 16.0
+    }
+}
+
+/// Is a cast between these formats "affordable" per the paper's rule
+/// (same arithmetic type)?
+pub fn is_affordable(from: FormatKind, to: FormatKind) -> bool {
+    from == to || from == FormatKind::Fp32 || to == FormatKind::Fp32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_format_casts_are_cheap() {
+        let c = cast_cost_luts(FormatKind::MxInt, 6.0, FormatKind::MxInt, 4.0);
+        assert!(c < 10.0);
+        let c2 = cast_cost_luts(FormatKind::MxInt, 4.0, FormatKind::MxInt, 6.0);
+        assert_eq!(c2, 0.0); // pure bit extension = wires
+    }
+
+    #[test]
+    fn cross_format_casts_are_expensive() {
+        let cheap = cast_cost_luts(FormatKind::MxInt, 6.0, FormatKind::MxInt, 4.0);
+        let costly = cast_cost_luts(FormatKind::MxInt, 6.0, FormatKind::Bl, 6.0);
+        assert!(costly > 10.0 * cheap);
+    }
+
+    #[test]
+    fn identity_cast_free() {
+        for f in FormatKind::ALL {
+            assert_eq!(cast_cost_luts(f, 8.0, f, 8.0), 0.0);
+        }
+    }
+
+    #[test]
+    fn affordability_rule() {
+        assert!(is_affordable(FormatKind::MxInt, FormatKind::MxInt));
+        assert!(is_affordable(FormatKind::Fp32, FormatKind::MxInt));
+        assert!(!is_affordable(FormatKind::MxInt, FormatKind::Bl));
+        assert!(!is_affordable(FormatKind::Int, FormatKind::Bmf));
+    }
+}

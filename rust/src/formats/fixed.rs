@@ -1,0 +1,88 @@
+//! Fixed-point (Q-format) fake quantization — the int8 / MP-int baselines.
+//!
+//! `value = clamp(round(x * 2^f), -2^(w-1), 2^(w-1)-1) / 2^f`. No dynamic
+//! range: a static (width, frac) pair per tensor, which is exactly what
+//! loses accuracy on the large activation variances of deep layers
+//! (paper Fig. 1a) and makes MP-int infeasible in Fig. 7.
+
+use super::{pow2, round_ties_even};
+
+/// Fake-quantize in place with `width` total bits (incl. sign) and `frac`
+/// fractional bits. Both clamped to sane ranges.
+pub fn int_quantize(data: &mut [f32], width: f32, frac: f32) {
+    let w = width.max(2.0) as i32;
+    let f = frac as i32;
+    let scale = pow2(-f);
+    let qmax = pow2(w - 1) - 1.0;
+    let qmin = -pow2(w - 1);
+    for x in data {
+        *x = round_ties_even(*x / scale).clamp(qmin, qmax) * scale;
+    }
+}
+
+/// Pick the fraction width that makes `width`-bit fixed point cover
+/// `absmax` without saturation: `f = w - 1 - ceil(log2 absmax)` — the
+/// calibration rule the quantize pass applies from profile statistics.
+pub fn calibrate_frac(width: f32, absmax: f32) -> f32 {
+    if absmax <= 0.0 {
+        return 0.0;
+    }
+    let int_bits = (absmax as f64).log2().ceil() as i32;
+    (width as i32 - 1 - int_bits) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_values_q8_4() {
+        let mut x = vec![1.0f32, 1.03125, 1e6, -1e6];
+        int_quantize(&mut x, 8.0, 4.0);
+        assert_eq!(x[0], 1.0);
+        assert_eq!(x[1], 1.0); // 1.03125*16 = 16.5, ties-to-even -> 16/16
+        assert_eq!(x[2], 127.0 / 16.0); // saturation high
+        assert_eq!(x[3], -128.0 / 16.0); // saturation low
+    }
+
+    #[test]
+    fn grid_membership() {
+        let mut x: Vec<f32> = (0..64).map(|i| (i as f32 - 32.0) * 0.0371).collect();
+        int_quantize(&mut x, 8.0, 5.0);
+        for v in &x {
+            let k = v * 32.0;
+            assert_eq!(k, k.round());
+            assert!((-128.0..=127.0).contains(&k));
+        }
+    }
+
+    #[test]
+    fn idempotent() {
+        let mut x: Vec<f32> = (0..64).map(|i| (i as f32).sin() * 3.0).collect();
+        int_quantize(&mut x, 6.0, 3.0);
+        let q1 = x.clone();
+        int_quantize(&mut x, 6.0, 3.0);
+        assert_eq!(q1, x);
+    }
+
+    #[test]
+    fn no_dynamic_range() {
+        // 8-bit f=0 loses 1e-4 entirely and saturates 1e4 — Fig. 1a story.
+        let mut x = vec![1e-4f32, 1e4];
+        int_quantize(&mut x, 8.0, 0.0);
+        assert_eq!(x[0], 0.0);
+        assert_eq!(x[1], 127.0);
+    }
+
+    #[test]
+    fn calibrate_frac_covers_absmax() {
+        for &absmax in &[0.1f32, 1.0, 3.7, 100.0] {
+            let w = 8.0;
+            let f = calibrate_frac(w, absmax);
+            let mut x = vec![absmax * 0.999];
+            int_quantize(&mut x, w, f);
+            // Must not saturate: quantized value within 2% of input.
+            assert!((x[0] - absmax * 0.999).abs() / absmax < 0.02, "absmax={absmax} f={f} got {}", x[0]);
+        }
+    }
+}

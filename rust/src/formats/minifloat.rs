@@ -1,0 +1,69 @@
+//! MiniFloat / FP8 (Sun et al., HFP8) fake quantization: sign + e-bit
+//! exponent + m-bit mantissa, fixed bias; flush-to-zero, saturate-to-max.
+
+use super::{floor_log2, pow2, round_ties_even};
+
+/// Fake-quantize in place. Defaults in the paper's Table 1 row: e=4, m=3,
+/// bias=7.
+pub fn minifloat_quantize(data: &mut [f32], exp_bits: i32, mantissa_bits: i32, bias: i32) {
+    let e_min = 1 - bias;
+    let e_max = pow2(exp_bits) as i32 - 2 - bias;
+    let top = pow2(e_max + 1) - pow2(e_max - mantissa_bits);
+    let underflow = pow2(e_min - 1);
+    for x in data {
+        if *x == 0.0 {
+            continue;
+        }
+        let absx = x.abs();
+        if absx < underflow {
+            *x = 0.0f32.copysign(*x);
+            continue;
+        }
+        let e = floor_log2(absx).clamp(e_min, e_max);
+        let scale = pow2(e - mantissa_bits);
+        let q = (round_ties_even(absx / scale) * scale).min(top);
+        *x = q.copysign(*x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_values_e4m3_bias7() {
+        let mut x = vec![1.0f32, 1.125, 240.0, 1000.0, 2.0f32.powi(-7), 0.0, -240.0];
+        minifloat_quantize(&mut x, 4, 3, 7);
+        assert_eq!(x, vec![1.0, 1.125, 240.0, 240.0, 2.0f32.powi(-7), 0.0, -240.0]);
+    }
+
+    #[test]
+    fn idempotent() {
+        let mut x: Vec<f32> = (0..128).map(|i| ((i as f32) * 0.77).sin() * 10.0).collect();
+        minifloat_quantize(&mut x, 4, 3, 7);
+        let q1 = x.clone();
+        minifloat_quantize(&mut x, 4, 3, 7);
+        assert_eq!(q1, x);
+    }
+
+    #[test]
+    fn underflow_flushes_to_signed_zero() {
+        let mut x = vec![1e-10f32, -1e-10];
+        minifloat_quantize(&mut x, 4, 3, 7);
+        assert_eq!(x[0], 0.0);
+        assert!(x[1] == 0.0 && x[1].is_sign_negative());
+    }
+
+    #[test]
+    fn relative_error_bound() {
+        // Normal range: |err| <= 2^-(m+1) relative.
+        let mut x: Vec<f32> = (1..100).map(|i| i as f32 * 0.37).collect();
+        let orig = x.clone();
+        minifloat_quantize(&mut x, 4, 3, 7);
+        for (a, b) in orig.iter().zip(x.iter()) {
+            if *b < 240.0 {
+                assert!(((a - b) / a).abs() <= 2.0f32.powi(-4) + 1e-6, "{a} {b}");
+            }
+        }
+    }
+}

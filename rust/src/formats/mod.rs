@@ -1,0 +1,303 @@
+//! Numeric format library — the Rust mirror of `python/compile/kernels/ref.py`.
+//!
+//! The paper's formats (Fig. 1c): MXInt (block floating point), BMF (block
+//! minifloat), BL (block logarithm), fixed point, and MiniFloat/FP8. All
+//! functions perform *fake quantization*: outputs are f32 values lying
+//! exactly on the target format's representable grid.
+//!
+//! Two implementation notes that matter for cross-layer agreement with the
+//! HLO emulation executed via PJRT:
+//!  * powers of two are constructed exactly (never via `exp2`
+//!    approximations — XLA CPU's f32 `exp2` is inexact even at integers);
+//!  * `floor(log2 |x|)` is the IEEE-754 unbiased exponent, extracted from
+//!    the bit pattern, which is exact where XLA's `floor(log2 x)` is
+//!    approximate. The integration test tolerates the resulting rare
+//!    off-by-one-exponent disagreements (< 0.1% of elements).
+
+pub mod bl;
+pub mod bmf;
+pub mod cast;
+pub mod fixed;
+pub mod minifloat;
+pub mod mxint;
+
+pub use bl::bl_quantize;
+pub use bmf::bmf_quantize;
+pub use fixed::int_quantize;
+pub use minifloat::minifloat_quantize;
+pub use mxint::mxint_quantize;
+
+/// Paper §4.1: unified block shape (rows, cols) for all MX values.
+pub const BLOCK_SHAPE: (usize, usize) = (16, 2);
+/// Paper §4.1: fixed bitwidth of the shared exponent.
+pub const SHARED_EXPONENT_BITS: u32 = 8;
+/// Clamp range of the 8-bit shared exponent.
+pub const SHARED_EXP_MIN: i32 = -126;
+pub const SHARED_EXP_MAX: i32 = 127;
+
+/// Format families explored by the compiler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FormatKind {
+    /// Baseline: no quantization.
+    Fp32,
+    /// Fixed point with per-tensor (width, frac) — `int8` when uniform 8-bit.
+    Int,
+    /// MiniFloat FP8 (Sun et al.): 1s + 4e + 3m, bias 7.
+    Fp8,
+    /// Microscaling integer (block floating point) — the paper's winner.
+    MxInt,
+    /// Block minifloat: shared exponent bias, local minifloat elements.
+    Bmf,
+    /// Block logarithm: power-of-two values, shared bias.
+    Bl,
+}
+
+impl FormatKind {
+    pub const ALL: [FormatKind; 6] = [
+        FormatKind::Fp32,
+        FormatKind::Int,
+        FormatKind::Fp8,
+        FormatKind::MxInt,
+        FormatKind::Bmf,
+        FormatKind::Bl,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FormatKind::Fp32 => "fp32",
+            FormatKind::Int => "int",
+            FormatKind::Fp8 => "fp8",
+            FormatKind::MxInt => "mxint",
+            FormatKind::Bmf => "bmf",
+            FormatKind::Bl => "bl",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        Some(match s {
+            "fp32" => FormatKind::Fp32,
+            "int" => FormatKind::Int,
+            "fp8" => FormatKind::Fp8,
+            "mxint" | "mxint_pallas" => FormatKind::MxInt,
+            "bmf" => FormatKind::Bmf,
+            "bl" => FormatKind::Bl,
+            _ => return None,
+        })
+    }
+
+    /// Does this format share a component across a block?
+    pub fn is_block_format(&self) -> bool {
+        matches!(self, FormatKind::MxInt | FormatKind::Bmf | FormatKind::Bl)
+    }
+}
+
+/// Per-tensor precision knobs: one row of the f32[V, 2] quant-config input
+/// of the HLO artifacts. Interpretation depends on the format family:
+/// MXInt/BMF -> (mantissa bits, unused); Int -> (width, frac);
+/// BL -> (element exponent bits, unused).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Precision {
+    pub bits: f32,
+    pub frac: f32,
+}
+
+impl Precision {
+    pub fn new(bits: f32, frac: f32) -> Self {
+        Self { bits, frac }
+    }
+
+    /// Average bits per element — paper Eq. (1) for block formats, plain
+    /// width otherwise. This is the `b` of the search objective Eq. (4).
+    pub fn average_bitwidth(&self, fmt: FormatKind) -> f64 {
+        let block = (BLOCK_SHAPE.0 * BLOCK_SHAPE.1) as f64;
+        let shared = SHARED_EXPONENT_BITS as f64;
+        match fmt {
+            FormatKind::Fp32 => 32.0,
+            FormatKind::Fp8 => 8.0,
+            FormatKind::Int => self.bits as f64,
+            // sign + mantissa + amortized shared exponent
+            FormatKind::MxInt => shared / block + self.bits as f64 + 1.0,
+            // sign + local exponent + mantissa + amortized shared bias
+            FormatKind::Bmf => {
+                shared / block + self.bits as f64 + bmf::LOCAL_EXP_BITS as f64 + 1.0
+            }
+            // sign + element exponent + amortized shared bias
+            FormatKind::Bl => shared / block + self.bits as f64 + 1.0,
+        }
+    }
+}
+
+/// Exact 2^e as f32 (e clamped to the representable range; subnormals ok).
+#[inline]
+pub fn pow2(e: i32) -> f32 {
+    let e = e.clamp(-149, 127);
+    if e >= -126 {
+        f32::from_bits(((e + 127) as u32) << 23)
+    } else {
+        f32::from_bits(1u32 << (e + 149))
+    }
+}
+
+/// Exact floor(log2 |x|) via the IEEE-754 exponent (x > 0, finite).
+#[inline]
+pub fn floor_log2(x: f32) -> i32 {
+    debug_assert!(x > 0.0 && x.is_finite());
+    let bits = x.to_bits();
+    let exp = ((bits >> 23) & 0xff) as i32;
+    if exp == 0 {
+        // Subnormal: value = mant * 2^-149, mant in [1, 2^23).
+        let mant = bits & 0x7f_ffff;
+        (31 - mant.leading_zeros()) as i32 - 149
+    } else {
+        exp - 127
+    }
+}
+
+/// Round half to even, matching `jnp.round` (banker's rounding).
+#[inline]
+pub fn round_ties_even(x: f32) -> f32 {
+    x.round_ties_even()
+}
+
+/// Iterate (16, 2) blocks of a row-major 2-D tensor, calling `f` with the
+/// flat start offset of each block (address elements as
+/// `start + r * cols + c`, r in 0..16, c in 0..2). Dims must tile exactly.
+pub fn for_each_block<F: FnMut(usize)>(rows: usize, cols: usize, mut f: F) {
+    let (br, bc) = BLOCK_SHAPE;
+    assert_eq!(rows % br, 0, "rows {rows} not divisible by {br}");
+    assert_eq!(cols % bc, 0, "cols {cols} not divisible by {bc}");
+    for rb in 0..rows / br {
+        for cb in 0..cols / bc {
+            f(rb * br * cols + cb * bc);
+        }
+    }
+}
+
+/// Max |x| over one (16, 2) block.
+#[inline]
+pub fn block_maxabs(data: &[f32], start: usize, cols: usize) -> f32 {
+    let (br, bc) = BLOCK_SHAPE;
+    let mut maxabs = 0.0f32;
+    for r in 0..br {
+        let row = start + r * cols;
+        for c in 0..bc {
+            maxabs = maxabs.max(data[row + c].abs());
+        }
+    }
+    maxabs
+}
+
+/// Shared exponent of a block: floor(log2 max|x|) clamped to 8-bit range.
+/// Returns `SHARED_EXP_MIN` for an all-zero block.
+#[inline]
+pub fn shared_exponent(maxabs: f32) -> i32 {
+    if maxabs == 0.0 || !maxabs.is_finite() {
+        return SHARED_EXP_MIN;
+    }
+    floor_log2(maxabs).clamp(SHARED_EXP_MIN, SHARED_EXP_MAX)
+}
+
+/// Apply `f` to every element of one (16, 2) block in place.
+#[inline]
+pub fn map_block<F: FnMut(f32) -> f32>(data: &mut [f32], start: usize, cols: usize, mut f: F) {
+    let (br, bc) = BLOCK_SHAPE;
+    for r in 0..br {
+        let row = start + r * cols;
+        for c in 0..bc {
+            data[row + c] = f(data[row + c]);
+        }
+    }
+}
+
+/// Dispatch fake quantization of a row-major 2-D tensor in place.
+pub fn quantize_2d(fmt: FormatKind, data: &mut [f32], rows: usize, cols: usize, p: Precision) {
+    match fmt {
+        FormatKind::Fp32 => {}
+        FormatKind::Int => fixed::int_quantize(data, p.bits, p.frac),
+        FormatKind::Fp8 => minifloat::minifloat_quantize(data, 4, 3, 7),
+        FormatKind::MxInt => mxint::mxint_quantize(data, rows, cols, p.bits),
+        FormatKind::Bmf => bmf::bmf_quantize(data, rows, cols, p.bits),
+        FormatKind::Bl => bl::bl_quantize(data, rows, cols, p.bits),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pow2_exact_across_range() {
+        for e in -149..=127 {
+            assert_eq!(pow2(e) as f64, 2f64.powi(e), "e={e}");
+        }
+    }
+
+    #[test]
+    fn pow2_clamps() {
+        assert_eq!(pow2(-200), pow2(-149));
+        assert_eq!(pow2(300), pow2(127));
+    }
+
+    #[test]
+    fn floor_log2_matches_f64_reference() {
+        for &x in &[
+            1.0f32,
+            1.5,
+            2.0,
+            3.9,
+            4.0,
+            0.5,
+            0.49,
+            1e-3,
+            1e3,
+            2.0f32.powi(-126),
+            1.1754942e-38, // largest subnormal
+            1e-45,         // smallest subnormal
+        ] {
+            assert_eq!(floor_log2(x), (x as f64).log2().floor() as i32, "x={x}");
+        }
+    }
+
+    #[test]
+    fn round_ties_even_matches_numpy() {
+        assert_eq!(round_ties_even(0.5), 0.0);
+        assert_eq!(round_ties_even(1.5), 2.0);
+        assert_eq!(round_ties_even(2.5), 2.0);
+        assert_eq!(round_ties_even(3.49), 3.0);
+        assert_eq!(round_ties_even(-1.5), -2.0);
+    }
+
+    #[test]
+    fn block_iteration_covers_tensor() {
+        let mut count = 0;
+        for_each_block(32, 4, |start| {
+            assert!(start < 32 * 4);
+            count += 1;
+        });
+        assert_eq!(count, (32 / 16) * (4 / 2));
+    }
+
+    #[test]
+    fn shared_exponent_edge_cases() {
+        assert_eq!(shared_exponent(0.0), SHARED_EXP_MIN);
+        assert_eq!(shared_exponent(1.0), 0);
+        assert_eq!(shared_exponent(0.75), -1);
+        assert_eq!(shared_exponent(f32::INFINITY), SHARED_EXP_MIN);
+    }
+
+    #[test]
+    fn average_bitwidth_paper_example() {
+        // MXInt((16,2), 8, 7) -> 8.25 bits (paper §4.1).
+        let p = Precision::new(7.0, 0.0);
+        assert!((p.average_bitwidth(FormatKind::MxInt) - 8.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn format_name_round_trip() {
+        for f in FormatKind::ALL {
+            assert_eq!(FormatKind::from_name(f.name()), Some(f));
+        }
+        assert_eq!(FormatKind::from_name("nope"), None);
+        assert_eq!(FormatKind::from_name("mxint_pallas"), Some(FormatKind::MxInt));
+    }
+}

@@ -1,0 +1,156 @@
+//! MXInt (microscaling integer / block floating point) fake quantization.
+//!
+//! Each (16, 2) block shares an 8-bit exponent `E = floor(log2 max|x|)`;
+//! each element is sign + m-bit integer mantissa:
+//! `value = clamp(round(x / 2^(E+1-m)), ±(2^m - 1)) * 2^(E+1-m)`.
+//! This is the format the paper finds best suited to LLMs (Table 1, Fig 5).
+
+use super::{
+    block_maxabs, for_each_block, map_block, pow2, round_ties_even, shared_exponent,
+};
+
+/// Fake-quantize a row-major 2-D tensor in place. `mantissa_bits` is
+/// clamped to >= 1 (matching `ref.mxint_quantize`).
+pub fn mxint_quantize(data: &mut [f32], rows: usize, cols: usize, mantissa_bits: f32) {
+    let m = mantissa_bits.max(1.0) as i32;
+    for_each_block(rows, cols, |start| {
+        let e = shared_exponent(block_maxabs(data, start, cols));
+        quantize_block(data, start, cols, e, m);
+    });
+}
+
+/// Quantize one block given its shared exponent (exposed for the emitted
+/// hardware operator's unit tests, which drive the exponent externally).
+pub fn quantize_block(data: &mut [f32], start: usize, cols: usize, e: i32, m: i32) {
+    // True division (not reciprocal multiply): scale can be subnormal for
+    // all-zero blocks, where 1/scale overflows to inf and 0*inf = NaN.
+    let scale = pow2(e + 1 - m);
+    let qmax = pow2(m) - 1.0;
+    map_block(data, start, cols, |x| {
+        round_ties_even(x / scale).clamp(-qmax, qmax) * scale
+    });
+}
+
+/// Quantize a 1-D tensor (flat blocks of 32 elements).
+pub fn mxint_quantize_1d(data: &mut [f32], mantissa_bits: f32) {
+    let n = super::BLOCK_SHAPE.0 * super::BLOCK_SHAPE.1;
+    assert_eq!(data.len() % n, 0);
+    let m = mantissa_bits.max(1.0) as i32;
+    for b in 0..data.len() / n {
+        let chunk = &mut data[b * n..(b + 1) * n];
+        let maxabs = chunk.iter().fold(0.0f32, |a, x| a.max(x.abs()));
+        let e = shared_exponent(maxabs);
+        let scale = pow2(e + 1 - m);
+        let qmax = pow2(m) - 1.0;
+        for x in chunk {
+            *x = round_ties_even(*x / scale).clamp(-qmax, qmax) * scale;
+        }
+    }
+}
+
+/// Mean |x - q(x)| of MXInt quantization — used by the quantize pass's
+/// local error model to seed the search.
+pub fn quantization_error(data: &[f32], rows: usize, cols: usize, mantissa_bits: f32) -> f64 {
+    let mut q = data.to_vec();
+    mxint_quantize(&mut q, rows, cols, mantissa_bits);
+    let mut err = 0.0f64;
+    for (a, b) in data.iter().zip(q.iter()) {
+        err += (a - b).abs() as f64;
+    }
+    err / data.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_tensor(rows: usize, cols: usize, seed: u64, scale: f32) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..rows * cols).map(|_| rng.normal() as f32 * scale).collect()
+    }
+
+    #[test]
+    fn idempotent() {
+        for seed in 0..5 {
+            let x = rand_tensor(32, 8, seed, 1.0);
+            let mut q1 = x.clone();
+            mxint_quantize(&mut q1, 32, 8, 5.0);
+            let mut q2 = q1.clone();
+            mxint_quantize(&mut q2, 32, 8, 5.0);
+            assert_eq!(q1, q2);
+        }
+    }
+
+    #[test]
+    fn error_decreases_with_mantissa_bits() {
+        let x = rand_tensor(64, 32, 7, 2.0);
+        let e2 = quantization_error(&x, 64, 32, 2.0);
+        let e4 = quantization_error(&x, 64, 32, 4.0);
+        let e8 = quantization_error(&x, 64, 32, 8.0);
+        assert!(e2 > e4 && e4 > e8, "{e2} {e4} {e8}");
+    }
+
+    #[test]
+    fn zero_tensor_unchanged() {
+        let mut x = vec![0.0f32; 16 * 2];
+        mxint_quantize(&mut x, 16, 2, 4.0);
+        assert!(x.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn sign_symmetry() {
+        let x = rand_tensor(16, 4, 3, 1.0);
+        let mut qp = x.clone();
+        mxint_quantize(&mut qp, 16, 4, 4.0);
+        let mut qn: Vec<f32> = x.iter().map(|v| -v).collect();
+        mxint_quantize(&mut qn, 16, 4, 4.0);
+        for (a, b) in qp.iter().zip(qn.iter()) {
+            assert_eq!(*a, -*b);
+        }
+    }
+
+    #[test]
+    fn per_block_dynamic_range_preserved() {
+        // Blocks spanning 2^16 magnitude each keep small relative error —
+        // the microscaling property the paper exploits (Fig. 1a).
+        let mut x = Vec::new();
+        for blk in 0..4 {
+            let mag = 2.0f32.powi(blk * 4);
+            for _ in 0..32 {
+                x.push(mag);
+            }
+        }
+        let mut q = x.clone();
+        mxint_quantize(&mut q, 64, 2, 4.0);
+        for (a, b) in x.iter().zip(q.iter()) {
+            assert!(((a - b) / a).abs() < 0.1, "{a} {b}");
+        }
+    }
+
+    #[test]
+    fn values_on_grid() {
+        // Every output must be an integer multiple of the block scale.
+        let x = rand_tensor(16, 2, 9, 3.0);
+        let mut q = x.clone();
+        let m = 4;
+        mxint_quantize(&mut q, 16, 2, m as f32);
+        let e = shared_exponent(block_maxabs(&x, 0, 2));
+        let scale = pow2(e + 1 - m);
+        for v in q {
+            let k = v / scale;
+            assert_eq!(k, k.round(), "{v} not on grid (scale {scale})");
+            assert!(k.abs() <= (pow2(m) - 1.0) as f32);
+        }
+    }
+
+    #[test]
+    fn one_d_path_matches_blocked_layout() {
+        let x = rand_tensor(2, 32, 11, 1.0);
+        let mut q1 = x.clone();
+        mxint_quantize_1d(&mut q1, 5.0);
+        // 1-D path groups 32 consecutive elements — same grouping as a
+        // [2, 32] tensor quantized with flat blocks.
+        assert_eq!(q1.len(), 64);
+    }
+}

@@ -1,0 +1,281 @@
+//! Reader for `artifacts/manifest.json` — the contract between the AOT
+//! pipeline (python) and the coordinator (rust).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub n_classes: usize,
+    pub kind: String,
+    pub batch: usize,
+    pub param_size: usize,
+    pub param_spec: Vec<ParamSpec>,
+    pub qtensors: Vec<String>,
+    /// artifact key (e.g. "eval_mxint") -> file name
+    pub artifacts: BTreeMap<String, String>,
+}
+
+impl ModelMeta {
+    /// Purely synthetic metadata for unit tests (no artifact files).
+    pub fn synthetic(
+        name: &str,
+        n_layers: usize,
+        d_model: usize,
+        n_heads: usize,
+        vocab: usize,
+        seq_len: usize,
+        n_classes: usize,
+        kind: &str,
+        batch: usize,
+    ) -> Self {
+        let d_ff = 4 * d_model;
+        let mut param_spec = Vec::new();
+        let mut off = 0usize;
+        let push = |spec: &mut Vec<ParamSpec>, n: &str, shape: Vec<usize>, off: &mut usize| {
+            let sz: usize = shape.iter().product();
+            spec.push(ParamSpec { name: n.to_string(), shape, offset: *off });
+            *off += sz;
+        };
+        push(&mut param_spec, "embed", vec![vocab, d_model], &mut off);
+        push(&mut param_spec, "pos", vec![seq_len, d_model], &mut off);
+        for i in 0..n_layers {
+            let p = format!("layer{i}.");
+            push(&mut param_spec, &format!("{p}ln1_g"), vec![d_model], &mut off);
+            push(&mut param_spec, &format!("{p}ln1_b"), vec![d_model], &mut off);
+            push(&mut param_spec, &format!("{p}w_qkv"), vec![d_model, 3 * d_model], &mut off);
+            push(&mut param_spec, &format!("{p}b_qkv"), vec![3 * d_model], &mut off);
+            push(&mut param_spec, &format!("{p}w_proj"), vec![d_model, d_model], &mut off);
+            push(&mut param_spec, &format!("{p}b_proj"), vec![d_model], &mut off);
+            push(&mut param_spec, &format!("{p}ln2_g"), vec![d_model], &mut off);
+            push(&mut param_spec, &format!("{p}ln2_b"), vec![d_model], &mut off);
+            push(&mut param_spec, &format!("{p}w_fc1"), vec![d_model, d_ff], &mut off);
+            push(&mut param_spec, &format!("{p}b_fc1"), vec![d_ff], &mut off);
+            push(&mut param_spec, &format!("{p}w_fc2"), vec![d_ff, d_model], &mut off);
+            push(&mut param_spec, &format!("{p}b_fc2"), vec![d_model], &mut off);
+        }
+        push(&mut param_spec, "lnf_g", vec![d_model], &mut off);
+        push(&mut param_spec, "lnf_b", vec![d_model], &mut off);
+        let out = if kind == "lm" { vocab } else { n_classes };
+        push(&mut param_spec, "head_w", vec![d_model, out], &mut off);
+        push(&mut param_spec, "head_b", vec![out], &mut off);
+
+        let mut qtensors = Vec::new();
+        for i in 0..n_layers {
+            let p = format!("layer{i}.");
+            for n in ["a_attn_in", "w_qkv", "a_proj_in", "w_proj", "a_fc1_in", "w_fc1", "a_fc2_in", "w_fc2"] {
+                qtensors.push(format!("{p}{n}"));
+            }
+        }
+        qtensors.push("a_head_in".into());
+        qtensors.push("head_w".into());
+
+        Self {
+            name: name.to_string(),
+            n_layers,
+            d_model,
+            n_heads,
+            d_ff,
+            vocab,
+            seq_len,
+            n_classes,
+            kind: kind.to_string(),
+            batch,
+            param_size: off,
+            param_spec,
+            qtensors,
+            artifacts: BTreeMap::new(),
+        }
+    }
+
+    pub fn artifact(&self, key: &str) -> Result<&str> {
+        self.artifacts
+            .get(key)
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow!("model {} has no artifact '{key}'", self.name))
+    }
+
+    pub fn num_qtensors(&self) -> usize {
+        self.qtensors.len()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub block_shape: (usize, usize),
+    pub shared_exponent_bits: u32,
+    pub quant_refs: BTreeMap<String, String>,
+    pub models: BTreeMap<String, ModelMeta>,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> Result<Manifest> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Manifest> {
+        let get = |o: &Json, k: &str| -> Result<Json> {
+            o.get(k).cloned().ok_or_else(|| anyhow!("manifest missing key '{k}'"))
+        };
+        let bs = get(j, "block_shape")?;
+        let bsa = bs.as_arr().ok_or_else(|| anyhow!("block_shape not array"))?;
+        let block_shape = (
+            bsa[0].as_usize().unwrap_or(16),
+            bsa[1].as_usize().unwrap_or(2),
+        );
+        let mut quant_refs = BTreeMap::new();
+        if let Some(q) = j.get("quant_refs").and_then(|q| q.as_obj()) {
+            for (k, v) in q {
+                quant_refs.insert(k.clone(), v.as_str().unwrap_or("").to_string());
+            }
+        }
+        let mut models = BTreeMap::new();
+        let mobj = get(j, "models")?;
+        for (name, m) in mobj.as_obj().ok_or_else(|| anyhow!("models not object"))? {
+            let u = |k: &str| -> Result<usize> {
+                m.get(k).and_then(|v| v.as_usize()).ok_or_else(|| anyhow!("model {name}: bad {k}"))
+            };
+            let mut param_spec = Vec::new();
+            for e in m.get("param_spec").and_then(|v| v.as_arr()).unwrap_or(&[]) {
+                param_spec.push(ParamSpec {
+                    name: e.get("name").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+                    shape: e
+                        .get("shape")
+                        .and_then(|v| v.as_arr())
+                        .map(|a| a.iter().filter_map(|d| d.as_usize()).collect())
+                        .unwrap_or_default(),
+                    offset: e.get("offset").and_then(|v| v.as_usize()).unwrap_or(0),
+                });
+            }
+            let qtensors = m
+                .get("qtensors")
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|s| s.as_str().map(String::from)).collect())
+                .unwrap_or_default();
+            let mut artifacts = BTreeMap::new();
+            if let Some(a) = m.get("artifacts").and_then(|v| v.as_obj()) {
+                for (k, v) in a {
+                    artifacts.insert(k.clone(), v.as_str().unwrap_or("").to_string());
+                }
+            }
+            models.insert(
+                name.clone(),
+                ModelMeta {
+                    name: name.clone(),
+                    n_layers: u("n_layers")?,
+                    d_model: u("d_model")?,
+                    n_heads: u("n_heads")?,
+                    d_ff: u("d_ff")?,
+                    vocab: u("vocab")?,
+                    seq_len: u("seq_len")?,
+                    n_classes: u("n_classes")?,
+                    kind: m.get("kind").and_then(|v| v.as_str()).unwrap_or("classifier").to_string(),
+                    batch: u("batch")?,
+                    param_size: u("param_size")?,
+                    param_spec,
+                    qtensors,
+                    artifacts,
+                },
+            );
+        }
+        Ok(Manifest {
+            block_shape,
+            shared_exponent_bits: j
+                .get("shared_exponent_bits")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(8) as u32,
+            quant_refs,
+            models,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models.get(name).ok_or_else(|| anyhow!("unknown model '{name}'"))
+    }
+
+    /// The ten classifier simulants (Figs. 5/7/8), sorted by name.
+    pub fn classifiers(&self) -> Vec<&ModelMeta> {
+        self.models.values().filter(|m| m.kind == "classifier").collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_meta_is_consistent() {
+        let m = ModelMeta::synthetic("t", 2, 32, 2, 512, 32, 4, "classifier", 64);
+        assert_eq!(m.num_qtensors(), 18);
+        // offsets dense
+        let mut off = 0;
+        for s in &m.param_spec {
+            assert_eq!(s.offset, off);
+            off += s.shape.iter().product::<usize>();
+        }
+        assert_eq!(off, m.param_size);
+    }
+
+    #[test]
+    fn parses_real_manifest_if_present() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.block_shape, (16, 2));
+        assert_eq!(m.shared_exponent_bits, 8);
+        assert!(m.models.len() >= 11);
+        let opt = m.model("opt-125m-sim").unwrap();
+        assert_eq!(opt.num_qtensors(), 8 * opt.n_layers + 2);
+        assert!(opt.artifact("eval_mxint").is_ok());
+        // synthetic meta must agree with the python-generated one
+        let syn = ModelMeta::synthetic(
+            "opt-125m-sim",
+            opt.n_layers,
+            opt.d_model,
+            opt.n_heads,
+            opt.vocab,
+            opt.seq_len,
+            opt.n_classes,
+            &opt.kind,
+            opt.batch,
+        );
+        assert_eq!(syn.param_size, opt.param_size, "param layout drift vs python");
+        assert_eq!(syn.qtensors, opt.qtensors, "qtensor order drift vs python");
+        let names: Vec<_> = syn.param_spec.iter().map(|s| &s.name).collect();
+        let names2: Vec<_> = opt.param_spec.iter().map(|s| &s.name).collect();
+        assert_eq!(names, names2);
+    }
+
+    #[test]
+    fn classifiers_filter() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.classifiers().len(), 10);
+    }
+}

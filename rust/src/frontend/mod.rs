@@ -1,0 +1,315 @@
+//! Front-end: the model zoo and the MASE-IR builder (paper §3, "front-end
+//! automatically performs model analysis and initializes software
+//! attributes when constructing MASE IR").
+//!
+//! Ground truth for parameter layout and qtensor ordering is
+//! `artifacts/manifest.json`, written by the AOT pipeline — the Rust side
+//! never re-derives it, so L2 and L3 cannot drift apart.
+
+pub mod manifest;
+
+pub use manifest::{Manifest, ModelMeta};
+
+use crate::formats::{FormatKind, Precision};
+use crate::ir::{Graph, OpKind, TensorType};
+use crate::util::rng::Rng;
+
+/// Build the MASE IR graph for one model, mirroring the L2 transformer
+/// (including the dataflow-specific `transpose`/`reorder` ops of Fig. 1d).
+/// Values taking part in quantization search carry their qtensor index.
+pub fn build_graph(meta: &ModelMeta) -> Graph {
+    let mut g = Graph::new(&meta.name);
+    let (b, s, d) = (meta.batch, meta.seq_len, meta.d_model);
+    let q = |name: &str| -> Option<usize> { meta.qtensors.iter().position(|n| n == name) };
+
+    let tokens = g.add_input("tokens", TensorType::fp32(vec![b, s]));
+    let embed_w = g.new_value("embed", TensorType::fp32(vec![meta.vocab, d]), None);
+    let mut x = g.add_op(OpKind::Embed, vec![tokens], vec![embed_w], "x0", TensorType::fp32(vec![b, s, d]), None);
+
+    for l in 0..meta.n_layers {
+        let p = format!("layer{l}.");
+        // attention block
+        let h = g.add_op(
+            OpKind::LayerNorm,
+            vec![x],
+            vec![],
+            &format!("{p}ln1"),
+            TensorType::fp32(vec![b, s, d]),
+            q(&format!("{p}a_attn_in")),
+        );
+        let w_qkv = g.new_value(
+            &format!("{p}w_qkv"),
+            TensorType::fp32(vec![d, 3 * d]),
+            q(&format!("{p}w_qkv")),
+        );
+        let qkv = g.add_op(
+            OpKind::Linear,
+            vec![h],
+            vec![w_qkv],
+            &format!("{p}qkv"),
+            TensorType::fp32(vec![b, s, 3 * d]),
+            None,
+        );
+        // dataflow-specific stream reorder: row-stream -> head-major
+        let heads = g.add_op(
+            OpKind::Reorder,
+            vec![qkv],
+            vec![],
+            &format!("{p}heads"),
+            TensorType::fp32(vec![b, meta.n_heads, s, 3 * d / meta.n_heads]),
+            None,
+        );
+        // K must stream column-major into QK^T
+        let kt = g.add_op(
+            OpKind::Transpose,
+            vec![heads],
+            vec![],
+            &format!("{p}kT"),
+            TensorType::fp32(vec![b, meta.n_heads, d / meta.n_heads, s]),
+            None,
+        );
+        let att = g.add_op(
+            OpKind::Attention,
+            vec![heads, kt],
+            vec![],
+            &format!("{p}att"),
+            TensorType::fp32(vec![b, s, d]),
+            q(&format!("{p}a_proj_in")),
+        );
+        let w_proj = g.new_value(
+            &format!("{p}w_proj"),
+            TensorType::fp32(vec![d, d]),
+            q(&format!("{p}w_proj")),
+        );
+        let proj = g.add_op(
+            OpKind::Linear,
+            vec![att],
+            vec![w_proj],
+            &format!("{p}proj"),
+            TensorType::fp32(vec![b, s, d]),
+            None,
+        );
+        let res1 = g.add_op(
+            OpKind::Add,
+            vec![x, proj],
+            vec![],
+            &format!("{p}res1"),
+            TensorType::fp32(vec![b, s, d]),
+            None,
+        );
+        // FFN block
+        let h2 = g.add_op(
+            OpKind::LayerNorm,
+            vec![res1],
+            vec![],
+            &format!("{p}ln2"),
+            TensorType::fp32(vec![b, s, d]),
+            q(&format!("{p}a_fc1_in")),
+        );
+        let w_fc1 = g.new_value(
+            &format!("{p}w_fc1"),
+            TensorType::fp32(vec![d, meta.d_ff]),
+            q(&format!("{p}w_fc1")),
+        );
+        let fc1 = g.add_op(
+            OpKind::Linear,
+            vec![h2],
+            vec![w_fc1],
+            &format!("{p}fc1"),
+            TensorType::fp32(vec![b, s, meta.d_ff]),
+            None,
+        );
+        let gelu = g.add_op(
+            OpKind::Gelu,
+            vec![fc1],
+            vec![],
+            &format!("{p}gelu"),
+            TensorType::fp32(vec![b, s, meta.d_ff]),
+            q(&format!("{p}a_fc2_in")),
+        );
+        let w_fc2 = g.new_value(
+            &format!("{p}w_fc2"),
+            TensorType::fp32(vec![meta.d_ff, d]),
+            q(&format!("{p}w_fc2")),
+        );
+        let fc2 = g.add_op(
+            OpKind::Linear,
+            vec![gelu],
+            vec![w_fc2],
+            &format!("{p}fc2"),
+            TensorType::fp32(vec![b, s, d]),
+            None,
+        );
+        x = g.add_op(
+            OpKind::Add,
+            vec![res1, fc2],
+            vec![],
+            &format!("{p}res2"),
+            TensorType::fp32(vec![b, s, d]),
+            None,
+        );
+    }
+
+    let lnf = g.add_op(
+        OpKind::LayerNorm,
+        vec![x],
+        vec![],
+        "lnf",
+        TensorType::fp32(vec![b, s, d]),
+        if meta.kind == "lm" { q("a_head_in") } else { None },
+    );
+    let head_in = if meta.kind == "lm" {
+        lnf
+    } else {
+        g.add_op(
+            OpKind::MeanPool,
+            vec![lnf],
+            vec![],
+            "pooled",
+            TensorType::fp32(vec![b, d]),
+            q("a_head_in"),
+        )
+    };
+    let out_dim = if meta.kind == "lm" { meta.vocab } else { meta.n_classes };
+    let head_w = g.new_value("head_w", TensorType::fp32(vec![d, out_dim]), q("head_w"));
+    let logits_shape = if meta.kind == "lm" { vec![b, s, out_dim] } else { vec![b, out_dim] };
+    let logits = g.add_op(
+        OpKind::Linear,
+        vec![head_in],
+        vec![head_w],
+        "logits",
+        TensorType::fp32(logits_shape.clone()),
+        None,
+    );
+    let out = g.add_op(OpKind::Output, vec![logits], vec![], "out", TensorType::fp32(logits_shape), None);
+    g.outputs.push(out);
+    g
+}
+
+/// Injected outlier-channel config — must match `model.py`
+/// (`OUTLIER_CHANNELS`, `OUTLIER_BASE_GAIN`); see DESIGN.md §3.
+pub const OUTLIER_CHANNELS: usize = 4;
+pub const OUTLIER_BASE_GAIN: f32 = 16.0;
+
+/// Initialize a flat parameter vector for pretraining (Glorot-ish normal,
+/// ones for LN gains, zeros for biases) — mirrors `model.init_params`.
+///
+/// Weight rows consuming the injected outlier channels (w_qkv, w_fc1) are
+/// scaled by 1/gain so the initial forward behaves like the outlier-free
+/// model: training stays stable while activations keep the outliers the
+/// quantizers must cope with.
+pub fn init_params(meta: &ModelMeta, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(meta.param_size);
+    for spec in &meta.param_spec {
+        let n: usize = spec.shape.iter().product();
+        let name = &spec.name;
+        if name.ends_with("_b") {
+            out.extend(std::iter::repeat(0.0f32).take(n));
+        } else if name.ends_with("_g") {
+            out.extend(std::iter::repeat(1.0f32).take(n));
+        } else {
+            let fan_in = spec.shape.first().copied().unwrap_or(1) as f64;
+            let fan_out = spec.shape.last().copied().unwrap_or(1) as f64;
+            let std = (2.0 / (fan_in + fan_out)).sqrt();
+            let start = out.len();
+            out.extend((0..n).map(|_| (rng.normal() * std) as f32));
+            if name.contains(".w_qkv") || name.contains(".w_fc1") {
+                let layer: usize = name
+                    .split('.')
+                    .next()
+                    .and_then(|p| p.strip_prefix("layer"))
+                    .and_then(|l| l.parse().ok())
+                    .unwrap_or(0);
+                let gain = OUTLIER_BASE_GAIN * (1.0 + layer as f32);
+                let cols = spec.shape[1];
+                for r in 0..OUTLIER_CHANNELS.min(spec.shape[0]) {
+                    for c in 0..cols {
+                        out[start + r * cols + c] /= gain;
+                    }
+                }
+            }
+        }
+    }
+    assert_eq!(out.len(), meta.param_size);
+    out
+}
+
+/// Apply a quantization solution to the IR: set format and per-tensor
+/// precision on every searchable value (the `quantize` pass's IR side).
+pub fn apply_quant_to_graph(g: &mut Graph, fmt: FormatKind, bits: &[f32], fracs: &[f32]) {
+    for v in g.values.iter_mut() {
+        if let Some(qi) = v.qtensor {
+            v.ty.format = fmt;
+            v.ty.precision = Precision::new(bits[qi], fracs.get(qi).copied().unwrap_or(0.0));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> ModelMeta {
+        ModelMeta::synthetic("test-sim", 2, 32, 2, 512, 32, 4, "classifier", 64)
+    }
+
+    #[test]
+    fn graph_has_expected_qtensors() {
+        let m = meta();
+        let g = build_graph(&m);
+        let qs = g.qtensor_values();
+        assert_eq!(qs.len(), m.qtensors.len());
+        assert_eq!(qs.len(), 8 * m.n_layers + 2);
+        // every qtensor index is used exactly once
+        for (i, &v) in qs.iter().enumerate() {
+            assert_eq!(g.value(v).qtensor, Some(i));
+        }
+    }
+
+    #[test]
+    fn graph_verifies() {
+        let g = build_graph(&meta());
+        let errs = crate::ir::verify(&g);
+        assert!(errs.is_empty(), "{errs:?}");
+    }
+
+    #[test]
+    fn graph_has_dataflow_ops() {
+        let g = build_graph(&meta());
+        assert!(g.ops.iter().any(|o| o.kind == OpKind::Transpose));
+        assert!(g.ops.iter().any(|o| o.kind == OpKind::Reorder));
+    }
+
+    #[test]
+    fn dag_size_scales_with_layers() {
+        let g2 = build_graph(&meta());
+        let m6 = ModelMeta::synthetic("big", 6, 32, 2, 512, 32, 4, "classifier", 64);
+        let g6 = build_graph(&m6);
+        assert!(g6.dag_size() > g2.dag_size());
+        // module-level: ~12 ops per layer, not thousands (Table 3 claim)
+        assert!(g6.dag_size() < 12 * 6 + 10);
+    }
+
+    #[test]
+    fn init_params_layout() {
+        let m = meta();
+        let p = init_params(&m, 0);
+        assert_eq!(p.len(), m.param_size);
+        // LN gains start at exactly 1.0
+        let ln_spec = m.param_spec.iter().find(|s| s.name.ends_with("ln1_g")).unwrap();
+        assert!(p[ln_spec.offset..ln_spec.offset + 4].iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn apply_quant_sets_types() {
+        let m = meta();
+        let mut g = build_graph(&m);
+        let bits = vec![4.0f32; m.qtensors.len()];
+        apply_quant_to_graph(&mut g, FormatKind::MxInt, &bits, &[]);
+        for &v in &g.qtensor_values() {
+            assert_eq!(g.value(v).ty.format, FormatKind::MxInt);
+            assert_eq!(g.value(v).ty.precision.bits, 4.0);
+        }
+    }
+}

@@ -1,0 +1,143 @@
+//! Structural area models for the hardware operator library (LUT-
+//! equivalents), calibrated to the paper's Table 1 densities at the 8-bit
+//! anchor configurations (see `hw::tests`).
+//!
+//! Structure follows the dot-product operators of Fig. 3 (right):
+//!  * fixed point: w^2 multiplier + accumulator;
+//!  * float: mantissa multiplier + exponent adder + *dynamic shifter* (the
+//!    dominant cost per Coward et al. [10]);
+//!  * MXInt: integer mantissa datapath + amortized per-block shared-
+//!    exponent unit — no per-element dynamic shift (the area win);
+//!  * BMF: MXInt-like + small local shifter for the element exponent;
+//!  * BL: no mantissa multiplier at all — exponent adder + shift-into-
+//!    accumulator.
+
+use super::Device;
+use crate::formats::{FormatKind, Precision, BLOCK_SHAPE};
+use crate::ir::OpKind;
+
+/// Amortized per-element cost of the block-shared exponent unit: an 8-bit
+/// exponent adder plus the max-reduction tree, divided over the block.
+fn block_overhead() -> f64 {
+    40.0 / (BLOCK_SHAPE.0 * BLOCK_SHAPE.1) as f64
+}
+
+/// Un-calibrated structural LUT cost of one MAC.
+fn structural(fmt: FormatKind, p: Precision) -> f64 {
+    let m = p.bits.max(1.0) as f64; // format-specific meaning, see Precision
+    match fmt {
+        FormatKind::Fp32 => float_structural(8.0, 23.0),
+        FormatKind::Fp8 => float_structural(4.0, 3.0),
+        FormatKind::Int => m * m + 2.0 * m,
+        FormatKind::MxInt => {
+            let w = m + 1.0; // sign+mantissa datapath
+            w * w + 2.0 * w + block_overhead()
+        }
+        FormatKind::Bmf => {
+            let w = m + 1.0;
+            let e_loc = crate::formats::bmf::LOCAL_EXP_BITS as f64;
+            w * w + 2.0 * w + w * e_loc + block_overhead()
+        }
+        FormatKind::Bl => {
+            let e = m; // element exponent bits
+            // exponent adder + dynamic shift into a 16-bit accumulator
+            e + 3.0 * e + 16.0 + block_overhead()
+        }
+    }
+}
+
+fn float_structural(e: f64, m: f64) -> f64 {
+    let w = m + 1.0;
+    w * w + 2.0 * w + 3.0 * e + w * e / 2.0
+}
+
+/// FP32 MAC anchor in LUT-equivalents.
+const FP32_MAC_LUTS: f64 = 800.0;
+
+/// Table 1 arithmetic-density anchors (area = FP32 / density at the 8-bit
+/// element configuration of each format).
+fn calibration(fmt: FormatKind) -> f64 {
+    let (anchor_density, anchor_p) = match fmt {
+        FormatKind::Fp32 => (1.0, Precision::new(32.0, 0.0)),
+        FormatKind::Int => (7.7, Precision::new(8.0, 4.0)),
+        FormatKind::Fp8 => (17.4, Precision::new(8.0, 0.0)),
+        FormatKind::MxInt => (14.4, Precision::new(7.0, 0.0)),
+        FormatKind::Bmf => (14.4, Precision::new(5.0, 0.0)),
+        FormatKind::Bl => (16.1, Precision::new(7.0, 0.0)),
+    };
+    (FP32_MAC_LUTS / anchor_density) / structural(fmt, anchor_p)
+}
+
+/// Calibrated LUT cost of one MAC in `fmt` at precision `p`.
+pub fn mac_area_luts(fmt: FormatKind, p: Precision) -> f64 {
+    calibration(fmt) * structural(fmt, p)
+}
+
+/// Area of a whole dataflow operator instantiated with streaming tile
+/// `tile` (rows x cols of parallel lanes). GEMM-class ops scale with the
+/// MAC array; fixed-function ops scale with lanes.
+pub fn op_area_luts(kind: OpKind, fmt: FormatKind, p: Precision, tile: (usize, usize)) -> f64 {
+    let lanes = (tile.0 * tile.1) as f64;
+    let ctrl = 150.0; // handshake FSM + counters per operator
+    match kind {
+        OpKind::Linear | OpKind::Attention => lanes * mac_area_luts(fmt, p) + ctrl,
+        // Embedding: a wide ROM mux per lane (no MACs).
+        OpKind::Embed => lanes * 24.0 + ctrl,
+        OpKind::LayerNorm => lanes * 450.0 + ctrl,
+        OpKind::Softmax => lanes * 600.0 + ctrl,
+        OpKind::Gelu => lanes * 300.0 + ctrl,
+        OpKind::Add => lanes * 30.0 + ctrl,
+        OpKind::MeanPool => lanes * 40.0 + ctrl,
+        // Stream-order switches: line buffers + muxing.
+        OpKind::Transpose | OpKind::Reorder => lanes * 12.0 + ctrl,
+        OpKind::Input | OpKind::Output => ctrl,
+    }
+}
+
+/// Fraction of the device the design occupies.
+pub fn utilization(total_luts: f64, device: &Device) -> f64 {
+    total_luts / device.luts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mac_area_monotone_in_mantissa() {
+        let a2 = mac_area_luts(FormatKind::MxInt, Precision::new(2.0, 0.0));
+        let a4 = mac_area_luts(FormatKind::MxInt, Precision::new(4.0, 0.0));
+        let a7 = mac_area_luts(FormatKind::MxInt, Precision::new(7.0, 0.0));
+        assert!(a2 < a4 && a4 < a7);
+    }
+
+    #[test]
+    fn mxint_cheaper_than_float_at_same_width() {
+        // The shared exponent drops the per-element dynamic shifter.
+        let mx = mac_area_luts(FormatKind::MxInt, Precision::new(7.0, 0.0));
+        let fp = mac_area_luts(FormatKind::Fp32, Precision::new(32.0, 0.0));
+        assert!(mx < fp / 10.0);
+    }
+
+    #[test]
+    fn bl_has_no_multiplier_scaling() {
+        // BL area grows linearly with exponent bits, not quadratically.
+        let a4 = mac_area_luts(FormatKind::Bl, Precision::new(4.0, 0.0));
+        let a8 = mac_area_luts(FormatKind::Bl, Precision::new(8.0, 0.0));
+        assert!(a8 / a4 < 2.5);
+    }
+
+    #[test]
+    fn gemm_op_scales_with_tile() {
+        let p = Precision::new(5.0, 0.0);
+        let a1 = op_area_luts(OpKind::Linear, FormatKind::MxInt, p, (4, 4));
+        let a2 = op_area_luts(OpKind::Linear, FormatKind::MxInt, p, (8, 8));
+        assert!(a2 > 3.0 * a1 && a2 < 4.5 * a1);
+    }
+
+    #[test]
+    fn utilization_fraction() {
+        let d = Device::u250();
+        assert!((utilization(d.luts / 2.0, &d) - 0.5).abs() < 1e-12);
+    }
+}

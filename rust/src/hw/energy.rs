@@ -1,0 +1,114 @@
+//! Energy model for Fig. 8 (energy efficiency of MXInt designs).
+//!
+//! Dynamic energy per MAC is proportional to its switched capacitance,
+//! which tracks its area (standard CMOS proxy); data movement pays per
+//! bit, with off-chip DRAM ~50x more expensive than on-chip SRAM. Energy
+//! efficiency is inferences per joule.
+
+use super::{area, Device};
+use crate::formats::{FormatKind, Precision};
+use crate::ir::Graph;
+
+/// pJ per LUT-equivalent of active datapath per cycle (calibration
+/// constant — only *relative* energies matter for Fig. 8's shape).
+const PJ_PER_LUT: f64 = 0.08;
+/// pJ per bit moved on-chip / off-chip.
+const PJ_PER_BIT_ONCHIP: f64 = 0.05;
+const PJ_PER_BIT_OFFCHIP: f64 = 2.5;
+
+/// Dynamic energy (joules) of one inference through the design.
+pub fn inference_energy_j(g: &Graph, fmt: FormatKind, offchip_param_bits: f64) -> f64 {
+    let mut pj = 0.0;
+    for op in &g.ops {
+        let (p, tile) = op
+            .results
+            .first()
+            .map(|&r| {
+                let v = g.value(r);
+                (v.ty.precision, v.attrs.tile)
+            })
+            .unwrap_or((Precision::new(8.0, 0.0), (1, 1)));
+        let _ = tile; // energy = (work/lanes) * (lanes * mac_area): lanes cancel
+        let work = super::throughput::op_work(g, op);
+        let unit = if op.kind.is_gemm() {
+            area::mac_area_luts(fmt, p)
+        } else {
+            60.0 // fixed-function per-element datapath
+        };
+        pj += work * unit * PJ_PER_LUT;
+        // stream the op's output tensor on-chip
+        let out_bits: f64 = op.results.iter().map(|&r| g.value(r).ty.bits()).sum();
+        pj += out_bits * PJ_PER_BIT_ONCHIP;
+    }
+    pj += offchip_param_bits * PJ_PER_BIT_OFFCHIP;
+    pj * 1e-12
+}
+
+/// Inferences per joule, including static power amortized at the achieved
+/// throughput.
+pub fn energy_efficiency(g: &Graph, fmt: FormatKind, device: &Device, offchip_param_bits: f64) -> f64 {
+    let thr = super::throughput::pipeline_throughput(g, device);
+    if thr <= 0.0 {
+        return 0.0;
+    }
+    let dyn_j = inference_energy_j(g, fmt, offchip_param_bits);
+    let static_j = device.static_watts / thr;
+    1.0 / (dyn_j + static_j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{OpKind, TensorType};
+
+    fn graph_with_precision(bits: f32) -> Graph {
+        let mut g = Graph::new("e");
+        let x = g.add_input("x", TensorType::fp32(vec![32, 64]));
+        let w = g.new_value(
+            "w",
+            TensorType {
+                shape: vec![64, 64],
+                format: FormatKind::MxInt,
+                precision: Precision::new(bits, 0.0),
+            },
+            None,
+        );
+        let y = g.add_op(
+            OpKind::Linear,
+            vec![x],
+            vec![w],
+            "y",
+            TensorType {
+                shape: vec![32, 64],
+                format: FormatKind::MxInt,
+                precision: Precision::new(bits, 0.0),
+            },
+            None,
+        );
+        g.value_mut(y).attrs.tile = (8, 8);
+        g.outputs.push(y);
+        g
+    }
+
+    #[test]
+    fn lower_precision_uses_less_energy() {
+        let e4 = inference_energy_j(&graph_with_precision(3.0), FormatKind::MxInt, 0.0);
+        let e8 = inference_energy_j(&graph_with_precision(7.0), FormatKind::MxInt, 0.0);
+        assert!(e4 < e8, "{e4} {e8}");
+    }
+
+    #[test]
+    fn offchip_traffic_costs() {
+        let g = graph_with_precision(5.0);
+        let a = inference_energy_j(&g, FormatKind::MxInt, 0.0);
+        let b = inference_energy_j(&g, FormatKind::MxInt, 1e6);
+        assert!(b > a);
+    }
+
+    #[test]
+    fn efficiency_positive_and_finite() {
+        let g = graph_with_precision(5.0);
+        let e = energy_efficiency(&g, FormatKind::MxInt, &Device::u250(), 1e5);
+        assert!(e.is_finite() && e > 0.0);
+    }
+}

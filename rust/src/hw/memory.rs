@@ -1,0 +1,120 @@
+//! Memory allocation for model parameters (§4.2, "Memory Allocation"):
+//! greedily pin the hottest weight tensors on-chip until the URAM/BRAM
+//! budget is spent; the rest stream from off-chip and consume bandwidth,
+//! which can cap the achievable pipeline throughput.
+
+use super::Device;
+use crate::ir::Graph;
+
+/// Allocation decision for one parameter tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamPlacement {
+    pub value_name: String,
+    pub bits: f64,
+    /// Reuse count per inference (how many tiles stream past it).
+    pub reuse: f64,
+    pub onchip: bool,
+}
+
+/// Plan placements: sort by reuse-per-bit (hotness density) and fill the
+/// on-chip budget.
+pub fn plan(g: &Graph, device: &Device) -> Vec<ParamPlacement> {
+    let mut params: Vec<ParamPlacement> = Vec::new();
+    for op in &g.ops {
+        for &p in &op.params {
+            let v = g.value(p);
+            let bits = v.ty.bits();
+            // A weight is re-read once per streaming tile of the output.
+            let out = op.results.first().map(|&r| g.value(r)).unwrap();
+            let tile = out.attrs.tile.0.max(1) * out.attrs.tile.1.max(1);
+            let reuse = (out.ty.elements() as f64 / tile as f64).max(1.0);
+            params.push(ParamPlacement { value_name: v.name.clone(), bits, reuse, onchip: false });
+        }
+    }
+    params.sort_by(|a, b| {
+        let ka = a.reuse / a.bits.max(1.0);
+        let kb = b.reuse / b.bits.max(1.0);
+        kb.partial_cmp(&ka).unwrap()
+    });
+    let mut budget = device.onchip_bits;
+    for p in params.iter_mut() {
+        if p.bits <= budget {
+            p.onchip = true;
+            budget -= p.bits;
+        }
+    }
+    params
+}
+
+/// Total off-chip parameter traffic per inference (bits).
+pub fn offchip_bits_per_inference(placements: &[ParamPlacement]) -> f64 {
+    placements.iter().filter(|p| !p.onchip).map(|p| p.bits).sum()
+}
+
+/// Throughput cap from off-chip bandwidth (inferences/s).
+pub fn bandwidth_cap(placements: &[ParamPlacement], device: &Device) -> f64 {
+    let bits = offchip_bits_per_inference(placements);
+    if bits <= 0.0 {
+        f64::INFINITY
+    } else {
+        device.offchip_bits_per_s / bits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{FormatKind, Precision};
+    use crate::ir::{OpKind, TensorType};
+
+    fn two_weight_graph() -> Graph {
+        let mut g = Graph::new("m");
+        let x = g.add_input("x", TensorType::fp32(vec![32, 64]));
+        let mk = |g: &mut Graph, n: &str, shape: Vec<usize>| {
+            g.new_value(
+                n,
+                TensorType { shape, format: FormatKind::MxInt, precision: Precision::new(7.0, 0.0) },
+                None,
+            )
+        };
+        let w1 = mk(&mut g, "w1", vec![64, 64]);
+        let h = g.add_op(OpKind::Linear, vec![x], vec![w1], "h", TensorType::fp32(vec![32, 64]), None);
+        let w2 = mk(&mut g, "w2", vec![64, 256]);
+        let y = g.add_op(OpKind::Linear, vec![h], vec![w2], "y", TensorType::fp32(vec![32, 256]), None);
+        g.outputs.push(y);
+        g
+    }
+
+    #[test]
+    fn everything_fits_on_big_device() {
+        let g = two_weight_graph();
+        let pl = plan(&g, &Device::u250());
+        assert!(pl.iter().all(|p| p.onchip));
+        assert_eq!(offchip_bits_per_inference(&pl), 0.0);
+        assert_eq!(bandwidth_cap(&pl, &Device::u250()), f64::INFINITY);
+    }
+
+    #[test]
+    fn tiny_budget_spills() {
+        let g = two_weight_graph();
+        let mut d = Device::u250();
+        d.onchip_bits = 64.0 * 64.0 * 8.25; // room for w1 only
+        let pl = plan(&g, &d);
+        assert!(pl.iter().any(|p| p.onchip));
+        assert!(pl.iter().any(|p| !p.onchip));
+        assert!(offchip_bits_per_inference(&pl) > 0.0);
+        assert!(bandwidth_cap(&pl, &d).is_finite());
+    }
+
+    #[test]
+    fn hotter_tensors_first() {
+        let g = two_weight_graph();
+        let pl = plan(&g, &Device::u250());
+        // sorted by reuse density descending
+        for w in pl.windows(2) {
+            let ka = w[0].reuse / w[0].bits;
+            let kb = w[1].reuse / w[1].bits;
+            assert!(ka >= kb);
+        }
+    }
+}

@@ -1,0 +1,126 @@
+//! Throughput regression model for the dataflow pipeline (§4.2).
+//!
+//! Each operator processes one streaming tile per initiation interval; an
+//! operator's cycle count per inference is its workload divided by its
+//! tile parallelism. The pipeline's steady-state throughput is set by the
+//! slowest operator (paper §4.2: "overall throughput is the minimum
+//! throughput among all hardware operators"). The cycle-approximate
+//! simulator in [`crate::sim`] cross-validates this closed form.
+
+use super::Device;
+use crate::ir::{Graph, OpKind};
+
+/// Work (multiply-accumulates, or element ops) one inference pushes
+/// through an operator, derived from its result tensor and inputs.
+pub fn op_work(g: &Graph, op: &crate::ir::Operation) -> f64 {
+    let out_elems: usize = op.results.iter().map(|&r| g.value(r).ty.elements()).sum();
+    match op.kind {
+        OpKind::Linear => {
+            // out [.., M, N] with weight [K, N]: MACs = M*N*K
+            let k = op.params.first().map(|&w| g.value(w).ty.shape[0]).unwrap_or(1);
+            out_elems as f64 * k as f64
+        }
+        OpKind::Attention => {
+            // QK^T + AV over seq x seq: ~2 * S * D per output row element
+            let in_elems =
+                op.args.first().map(|&a| g.value(a).ty.elements()).unwrap_or(out_elems) as f64;
+            2.0 * in_elems * g.value(op.results[0]).ty.shape.last().copied().unwrap_or(1) as f64
+        }
+        OpKind::Embed => out_elems as f64,
+        OpKind::LayerNorm | OpKind::Softmax | OpKind::Gelu => 3.0 * out_elems as f64,
+        OpKind::Add | OpKind::MeanPool | OpKind::Transpose | OpKind::Reorder => out_elems as f64,
+        OpKind::Input | OpKind::Output => 0.0,
+    }
+}
+
+/// Cycles one inference spends in `op` at tile parallelism `tile`.
+pub fn op_cycles(g: &Graph, op: &crate::ir::Operation, tile: (usize, usize)) -> f64 {
+    let lanes = (tile.0 * tile.1).max(1) as f64;
+    let w = op_work(g, op);
+    if w == 0.0 {
+        0.0
+    } else {
+        (w / lanes).ceil()
+    }
+}
+
+/// Steady-state pipeline throughput in inferences/second: the slowest
+/// operator's cycle count bounds the initiation interval (Fig. 1f).
+pub fn pipeline_throughput(g: &Graph, device: &Device) -> f64 {
+    let max_cycles = g
+        .ops
+        .iter()
+        .map(|op| {
+            let tile = op.results.first().map(|&r| g.value(r).attrs.tile).unwrap_or((1, 1));
+            op_cycles(g, op, tile)
+        })
+        .fold(0.0f64, f64::max);
+    if max_cycles == 0.0 {
+        0.0
+    } else {
+        device.clock_hz / max_cycles
+    }
+}
+
+/// End-to-end latency of one inference: sum of per-op fill latencies
+/// (non-dataflow lower bound in Fig. 1e is this sum; the dataflow design
+/// overlaps inferences so throughput >> 1/latency).
+pub fn pipeline_latency_cycles(g: &Graph) -> f64 {
+    g.ops
+        .iter()
+        .map(|op| {
+            let tile = op.results.first().map(|&r| g.value(r).attrs.tile).unwrap_or((1, 1));
+            op_cycles(g, op, tile)
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{FormatKind, Precision};
+    use crate::ir::{Graph, OpKind, TensorType};
+
+    fn linear_graph(tile: (usize, usize)) -> Graph {
+        let mut g = Graph::new("t");
+        let x = g.add_input("x", TensorType::fp32(vec![32, 64]));
+        let w = g.new_value(
+            "w",
+            TensorType { shape: vec![64, 64], format: FormatKind::MxInt, precision: Precision::new(5.0, 0.0) },
+            None,
+        );
+        let y = g.add_op(OpKind::Linear, vec![x], vec![w], "y", TensorType::fp32(vec![32, 64]), None);
+        g.value_mut(y).attrs.tile = tile;
+        g.outputs.push(y);
+        g
+    }
+
+    #[test]
+    fn linear_work_is_mnk() {
+        let g = linear_graph((1, 1));
+        let op = g.ops.iter().find(|o| o.kind == OpKind::Linear).unwrap();
+        assert_eq!(op_work(&g, op), (32 * 64 * 64) as f64);
+    }
+
+    #[test]
+    fn more_lanes_fewer_cycles() {
+        let g1 = linear_graph((1, 1));
+        let g2 = linear_graph((8, 8));
+        let d = Device::u250();
+        assert!(pipeline_throughput(&g2, &d) > 50.0 * pipeline_throughput(&g1, &d));
+    }
+
+    #[test]
+    fn throughput_bounded_by_slowest_op() {
+        let g = linear_graph((2, 2));
+        let d = Device::u250();
+        let cycles = (32.0 * 64.0 * 64.0 / 4.0f64).ceil();
+        assert!((pipeline_throughput(&g, &d) - d.clock_hz / cycles).abs() < 1e-6);
+    }
+
+    #[test]
+    fn latency_sums_ops() {
+        let g = linear_graph((1, 1));
+        assert!(pipeline_latency_cycles(&g) >= 32.0 * 64.0 * 64.0);
+    }
+}

@@ -1,0 +1,367 @@
+//! The MASE IR graph: operations, values, attributes, and a builder API.
+
+use super::TensorType;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ValueId(pub usize);
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct OpId(pub usize);
+
+/// Streaming order of a dataflow edge (paper Fig. 1d: tensors stream
+/// row-by-row or column-by-column; `transpose`/`reorder` ops switch it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StreamOrder {
+    #[default]
+    RowMajor,
+    ColMajor,
+}
+
+impl StreamOrder {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StreamOrder::RowMajor => "row",
+            StreamOrder::ColMajor => "col",
+        }
+    }
+}
+
+/// Hardware attributes of a dataflow edge (paper Fig. 2c, value attrs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ValueAttrs {
+    /// Streaming tile shape (rows, cols) — the data-parallelism knob the
+    /// `parallelize` pass tunes.
+    pub tile: (usize, usize),
+    pub order: StreamOrder,
+    /// Handshake interface is the only interface in this work.
+    pub interface: &'static str,
+    /// Estimated elements/cycle on this edge (filled by `parallelize`).
+    pub throughput: f64,
+}
+
+impl Default for ValueAttrs {
+    fn default() -> Self {
+        Self { tile: (1, 1), order: StreamOrder::RowMajor, interface: "handshake", throughput: 0.0 }
+    }
+}
+
+/// An SSA value: one dataflow edge of Fig. 1d.
+#[derive(Debug, Clone)]
+pub struct Value {
+    pub id: ValueId,
+    pub name: String,
+    pub ty: TensorType,
+    pub attrs: ValueAttrs,
+    /// Index into the model's qtensor list if this value is quantization-
+    /// searchable (weights and streamed activations), else None.
+    pub qtensor: Option<usize>,
+    pub producer: Option<OpId>,
+}
+
+/// Module-level operator kinds — each maps 1:1 onto a hardware IP template
+/// in `emit/templates.rs` and a cost model in `hw/`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    Input,
+    /// Embedding table lookup (token ids -> vectors).
+    Embed,
+    LayerNorm,
+    /// Dense GEMM; the weight is the op's parameter.
+    Linear,
+    /// Fused scaled-dot-product attention (QK^T, softmax, AV).
+    Attention,
+    Gelu,
+    /// Elementwise residual add.
+    Add,
+    Softmax,
+    /// Streaming-order switch (dataflow-specific op, Fig. 1d).
+    Transpose,
+    /// Tile re-order between producer/consumer tilings (dataflow-specific).
+    Reorder,
+    MeanPool,
+    Output,
+}
+
+impl OpKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpKind::Input => "input",
+            OpKind::Embed => "embed",
+            OpKind::LayerNorm => "layernorm",
+            OpKind::Linear => "linear",
+            OpKind::Attention => "attention",
+            OpKind::Gelu => "gelu",
+            OpKind::Add => "add",
+            OpKind::Softmax => "softmax",
+            OpKind::Transpose => "transpose",
+            OpKind::Reorder => "reorder",
+            OpKind::MeanPool => "meanpool",
+            OpKind::Output => "output",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<OpKind> {
+        use OpKind::*;
+        Some(match s {
+            "input" => Input,
+            "embed" => Embed,
+            "layernorm" => LayerNorm,
+            "linear" => Linear,
+            "attention" => Attention,
+            "gelu" => Gelu,
+            "add" => Add,
+            "softmax" => Softmax,
+            "transpose" => Transpose,
+            "reorder" => Reorder,
+            "meanpool" => MeanPool,
+            "output" => Output,
+            _ => return None,
+        })
+    }
+
+    /// Ops whose main datapath is a quantized GEMM (drive area/Δacc).
+    pub fn is_gemm(&self) -> bool {
+        matches!(self, OpKind::Linear | OpKind::Attention | OpKind::Embed)
+    }
+}
+
+/// Hardware attributes of an operation (paper Fig. 2c, operation attrs).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct OpAttrs {
+    /// Name of the hardware IP template instantiated for this op.
+    pub hw_ip: String,
+    /// Estimated circuit area in LUT-equivalents (filled by `parallelize`).
+    pub area_luts: f64,
+    /// Initiation interval in cycles per streaming tile.
+    pub ii_cycles: f64,
+}
+
+/// One operation in the SSA graph:
+/// `result: type = operator(arg, ...) [param, ...] {attr, ...}`.
+#[derive(Debug, Clone)]
+pub struct Operation {
+    pub id: OpId,
+    pub kind: OpKind,
+    /// Dataflow arguments (streamed activations).
+    pub args: Vec<ValueId>,
+    /// Parameters (stationary weights) — also SSA values.
+    pub params: Vec<ValueId>,
+    pub results: Vec<ValueId>,
+    pub attrs: OpAttrs,
+}
+
+/// The MASE IR module for one model.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    pub name: String,
+    pub ops: Vec<Operation>,
+    pub values: Vec<Value>,
+    pub inputs: Vec<ValueId>,
+    pub outputs: Vec<ValueId>,
+}
+
+impl Graph {
+    pub fn new(name: &str) -> Self {
+        Self { name: name.to_string(), ..Default::default() }
+    }
+
+    pub fn value(&self, id: ValueId) -> &Value {
+        &self.values[id.0]
+    }
+
+    pub fn value_mut(&mut self, id: ValueId) -> &mut Value {
+        &mut self.values[id.0]
+    }
+
+    pub fn op(&self, id: OpId) -> &Operation {
+        &self.ops[id.0]
+    }
+
+    /// DAG size in the paper's Table 3 sense: number of operations.
+    pub fn dag_size(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn new_value(&mut self, name: &str, ty: TensorType, qtensor: Option<usize>) -> ValueId {
+        let id = ValueId(self.values.len());
+        self.values.push(Value {
+            id,
+            name: name.to_string(),
+            ty,
+            attrs: ValueAttrs::default(),
+            qtensor,
+            producer: None,
+        });
+        id
+    }
+
+    pub fn add_input(&mut self, name: &str, ty: TensorType) -> ValueId {
+        let v = self.new_value(name, ty, None);
+        let id = OpId(self.ops.len());
+        self.ops.push(Operation {
+            id,
+            kind: OpKind::Input,
+            args: vec![],
+            params: vec![],
+            results: vec![v],
+            attrs: OpAttrs::default(),
+        });
+        self.values[v.0].producer = Some(id);
+        self.inputs.push(v);
+        v
+    }
+
+    /// Append an op producing one result value.
+    pub fn add_op(
+        &mut self,
+        kind: OpKind,
+        args: Vec<ValueId>,
+        params: Vec<ValueId>,
+        result_name: &str,
+        result_ty: TensorType,
+        result_qtensor: Option<usize>,
+    ) -> ValueId {
+        let r = self.new_value(result_name, result_ty, result_qtensor);
+        let id = OpId(self.ops.len());
+        self.ops.push(Operation { id, kind, args, params, results: vec![r], attrs: OpAttrs::default() });
+        self.values[r.0].producer = Some(id);
+        r
+    }
+
+    /// All consumer ops of a value (linear scan; graphs are ~100 ops).
+    pub fn consumers(&self, v: ValueId) -> Vec<OpId> {
+        self.ops
+            .iter()
+            .filter(|o| o.args.contains(&v) || o.params.contains(&v))
+            .map(|o| o.id)
+            .collect()
+    }
+
+    /// Values that take part in quantization search, in qtensor order.
+    pub fn qtensor_values(&self) -> Vec<ValueId> {
+        let mut with_idx: Vec<(usize, ValueId)> =
+            self.values.iter().filter_map(|v| v.qtensor.map(|q| (q, v.id))).collect();
+        with_idx.sort();
+        with_idx.into_iter().map(|(_, v)| v).collect()
+    }
+
+    /// Ops in topological order (ops are appended post-order by the
+    /// builder, but passes may rely on an explicit check).
+    pub fn topo_order(&self) -> Vec<OpId> {
+        // Kahn's algorithm over value edges.
+        let mut indeg = vec![0usize; self.ops.len()];
+        for op in &self.ops {
+            for &a in op.args.iter().chain(op.params.iter()) {
+                if self.values[a.0].producer.is_some() {
+                    indeg[op.id.0] += 1;
+                }
+            }
+        }
+        let mut ready: Vec<OpId> =
+            self.ops.iter().filter(|o| indeg[o.id.0] == 0).map(|o| o.id).collect();
+        ready.reverse();
+        let mut order = Vec::with_capacity(self.ops.len());
+        while let Some(op) = ready.pop() {
+            order.push(op);
+            for &r in &self.ops[op.0].results {
+                for c in self.consumers(r) {
+                    indeg[c.0] -= 1;
+                    if indeg[c.0] == 0 {
+                        ready.push(c);
+                    }
+                }
+            }
+        }
+        order
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{FormatKind, Precision};
+
+    fn tiny_graph() -> Graph {
+        let mut g = Graph::new("toy");
+        let x = g.add_input("x", TensorType::fp32(vec![32, 64]));
+        let w_ty = TensorType {
+            shape: vec![64, 64],
+            format: FormatKind::MxInt,
+            precision: Precision::new(5.0, 0.0),
+        };
+        let w = g.new_value("w0", w_ty, Some(1));
+        let h = g.add_op(
+            OpKind::Linear,
+            vec![x],
+            vec![w],
+            "h",
+            TensorType::fp32(vec![32, 64]),
+            Some(0),
+        );
+        let y = g.add_op(OpKind::Gelu, vec![h], vec![], "y", TensorType::fp32(vec![32, 64]), None);
+        g.outputs.push(y);
+        g
+    }
+
+    #[test]
+    fn builder_wires_producers() {
+        let g = tiny_graph();
+        let y = g.outputs[0];
+        let gelu = g.value(y).producer.unwrap();
+        assert_eq!(g.op(gelu).kind, OpKind::Gelu);
+    }
+
+    #[test]
+    fn consumers_found() {
+        let g = tiny_graph();
+        let x = g.inputs[0];
+        let cons = g.consumers(x);
+        assert_eq!(cons.len(), 1);
+        assert_eq!(g.op(cons[0]).kind, OpKind::Linear);
+    }
+
+    #[test]
+    fn qtensor_values_sorted_by_index() {
+        let g = tiny_graph();
+        let q = g.qtensor_values();
+        assert_eq!(q.len(), 2);
+        assert_eq!(g.value(q[0]).qtensor, Some(0));
+        assert_eq!(g.value(q[1]).qtensor, Some(1));
+    }
+
+    #[test]
+    fn topo_order_respects_edges() {
+        let g = tiny_graph();
+        let order = g.topo_order();
+        assert_eq!(order.len(), g.ops.len());
+        let pos: std::collections::HashMap<OpId, usize> =
+            order.iter().enumerate().map(|(i, o)| (*o, i)).collect();
+        for op in &g.ops {
+            for &a in &op.args {
+                if let Some(p) = g.value(a).producer {
+                    assert!(pos[&p] < pos[&op.id], "{:?} before {:?}", p, op.id);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn opkind_name_round_trip() {
+        for k in [
+            OpKind::Input,
+            OpKind::Embed,
+            OpKind::LayerNorm,
+            OpKind::Linear,
+            OpKind::Attention,
+            OpKind::Gelu,
+            OpKind::Add,
+            OpKind::Softmax,
+            OpKind::Transpose,
+            OpKind::Reorder,
+            OpKind::MeanPool,
+            OpKind::Output,
+        ] {
+            assert_eq!(OpKind::from_name(k.name()), Some(k));
+        }
+    }
+}

@@ -1,0 +1,72 @@
+//! MASE IR — the paper's co-design intermediate representation (§3).
+//!
+//! An SSA dataflow graph of *module-level* operations (linear, attention,
+//! layernorm, ...), where every operation and every value carries both
+//! software attributes (shape, format, precision) and hardware attributes
+//! (IP block, streaming tile shape, streaming order, estimated area and
+//! throughput) — Fig. 2. Module-level granularity is what gives the
+//! Table 3 scalability: a 6-layer model is ~100 ops, not ~2M affine
+//! instructions.
+//!
+//! The IR stays "trainable" by construction: it never lowers the model's
+//! compute — the numerical forward/backward lives in the AOT-compiled HLO
+//! artifacts keyed by the same qtensor names the IR carries, so QAT can
+//! run at any point of the hardware exploration loop (paper §3, Fig. 6).
+
+pub mod graph;
+pub mod parser;
+pub mod printer;
+pub mod verify;
+
+pub use graph::{Graph, OpAttrs, OpId, OpKind, Operation, StreamOrder, Value, ValueAttrs, ValueId};
+pub use printer::print_graph;
+pub use verify::{verify, VerifyError};
+
+use crate::formats::{FormatKind, Precision};
+
+/// Tensor type: shape + numeric format + precision (paper Fig. 2b types
+/// like `MXint((16,2), 8, 7)` — block shape and shared-exponent width are
+/// global constants in this work, §4.1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorType {
+    pub shape: Vec<usize>,
+    pub format: FormatKind,
+    pub precision: Precision,
+}
+
+impl TensorType {
+    pub fn fp32(shape: Vec<usize>) -> Self {
+        Self { shape, format: FormatKind::Fp32, precision: Precision::new(32.0, 0.0) }
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Memory footprint in bits under this type's format (Eq. 1).
+    pub fn bits(&self) -> f64 {
+        self.elements() as f64 * self.precision.average_bitwidth(self.format)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_type_bits_uses_average_bitwidth() {
+        let t = TensorType {
+            shape: vec![16, 2],
+            format: FormatKind::MxInt,
+            precision: Precision::new(7.0, 0.0),
+        };
+        assert!((t.bits() - 32.0 * 8.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fp32_constructor() {
+        let t = TensorType::fp32(vec![4, 8]);
+        assert_eq!(t.elements(), 32);
+        assert_eq!(t.bits(), 32.0 * 32.0);
+    }
+}

@@ -1,0 +1,232 @@
+//! Parser for the textual MASE IR — round-trips `printer::print_graph`.
+//! Used by tools and tests; the compiler pipeline itself passes `Graph`s
+//! in memory.
+
+use super::graph::{Graph, OpAttrs, OpKind, StreamOrder};
+use super::TensorType;
+use crate::formats::{FormatKind, Precision};
+use std::collections::HashMap;
+
+#[derive(Debug, thiserror::Error)]
+#[error("IR parse error (line {line}): {msg}")]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+fn err(line: usize, msg: impl Into<String>) -> ParseError {
+    ParseError { line, msg: msg.into() }
+}
+
+/// Parse `f32[32x64]`, `mxint(5)[64x64]`, `int(8,4)[16x2]`, ...
+pub fn parse_type(s: &str, line: usize) -> Result<TensorType, ParseError> {
+    let (head, dims) = s
+        .split_once('[')
+        .ok_or_else(|| err(line, format!("missing '[' in type '{s}'")))?;
+    let dims = dims.strip_suffix(']').ok_or_else(|| err(line, "missing ']'"))?;
+    let shape: Vec<usize> = if dims.is_empty() {
+        vec![]
+    } else {
+        dims.split('x')
+            .map(|d| d.parse().map_err(|_| err(line, format!("bad dim '{d}'"))))
+            .collect::<Result<_, _>>()?
+    };
+    let (fmt_name, args) = match head.split_once('(') {
+        Some((n, rest)) => (n, rest.strip_suffix(')').unwrap_or(rest)),
+        None => (head, ""),
+    };
+    let (format, precision) = match fmt_name {
+        "f32" => (FormatKind::Fp32, Precision::new(32.0, 0.0)),
+        "fp8" => (FormatKind::Fp8, Precision::new(8.0, 0.0)),
+        "int" => {
+            let (w, f) = args.split_once(',').ok_or_else(|| err(line, "int needs (w,f)"))?;
+            (
+                FormatKind::Int,
+                Precision::new(
+                    w.parse().map_err(|_| err(line, "bad width"))?,
+                    f.parse().map_err(|_| err(line, "bad frac"))?,
+                ),
+            )
+        }
+        "mxint" | "bmf" | "bl" => {
+            let bits: f32 = args.parse().map_err(|_| err(line, "bad bits"))?;
+            let fmt = FormatKind::from_name(fmt_name).unwrap();
+            (fmt, Precision::new(bits, 0.0))
+        }
+        other => return Err(err(line, format!("unknown format '{other}'"))),
+    };
+    Ok(TensorType { shape, format, precision })
+}
+
+/// Parse `%name: type` returning (name, type).
+fn parse_operand(s: &str, line: usize) -> Result<(String, TensorType), ParseError> {
+    let s = s.trim();
+    let s = s.strip_prefix('%').ok_or_else(|| err(line, format!("operand must start with %: '{s}'")))?;
+    let (name, ty) = s.split_once(':').ok_or_else(|| err(line, "operand missing ':'"))?;
+    Ok((name.trim().to_string(), parse_type(ty.trim(), line)?))
+}
+
+/// Split a comma-separated list at depth 0 (no nested brackets in operands).
+fn split_list(s: &str) -> Vec<&str> {
+    s.split(',').map(str::trim).filter(|p| !p.is_empty()).collect()
+}
+
+/// Parse a full module printed by `print_graph`.
+pub fn parse_graph(text: &str) -> Result<Graph, ParseError> {
+    let mut lines = text.lines().enumerate();
+    let (ln, first) = lines
+        .next()
+        .ok_or_else(|| err(0, "empty module"))?;
+    let name = first
+        .trim()
+        .strip_prefix("module @")
+        .and_then(|r| r.strip_suffix(" {"))
+        .ok_or_else(|| err(ln, "expected 'module @name {'"))?;
+    let mut g = Graph::new(name);
+    let mut by_name: HashMap<String, super::ValueId> = HashMap::new();
+
+    for (ln, raw) in lines {
+        let line = raw.trim();
+        if line == "}" || line.is_empty() {
+            continue;
+        }
+        if let Some(rets) = line.strip_prefix("return ") {
+            for r in split_list(rets) {
+                let n = r.trim_start_matches('%');
+                let id = *by_name.get(n).ok_or_else(|| err(ln, format!("unknown return %{n}")))?;
+                g.outputs.push(id);
+            }
+            continue;
+        }
+        // result(s) = opname(args) [params] {attrs}
+        let (lhs, rhs) = line.split_once(" = ").ok_or_else(|| err(ln, "missing ' = '"))?;
+        // attrs
+        let (rhs, attrs_str) = match rhs.rsplit_once(" {") {
+            Some((r, a)) => (r, a.strip_suffix('}').unwrap_or(a)),
+            None => (rhs, ""),
+        };
+        // params
+        let (call, params_str) = match rhs.split_once(" [") {
+            Some((c, p)) => (c, p.strip_suffix(']').unwrap_or(p)),
+            None => (rhs, ""),
+        };
+        let (op_name, args_str) = call
+            .split_once('(')
+            .ok_or_else(|| err(ln, "missing '(' in op"))?;
+        let args_str = args_str.strip_suffix(')').ok_or_else(|| err(ln, "missing ')'"))?;
+        let kind = OpKind::from_name(op_name.trim())
+            .ok_or_else(|| err(ln, format!("unknown op '{op_name}'")))?;
+
+        // parse attrs into a map
+        let mut amap: HashMap<&str, String> = HashMap::new();
+        for kv in split_list(attrs_str) {
+            if let Some((k, v)) = kv.split_once('=') {
+                amap.insert(k.trim(), v.trim().trim_matches('"').to_string());
+            }
+        }
+        let qtensor: Option<usize> = amap.get("q").and_then(|v| v.parse().ok());
+
+        // arguments reference existing values by bare name
+        let mut args = Vec::new();
+        for a in split_list(args_str) {
+            let n = a.trim_start_matches('%');
+            let id = *by_name.get(n).ok_or_else(|| err(ln, format!("unknown arg %{n}")))?;
+            args.push(id);
+        }
+        // params declare new (weight) values inline
+        let mut params = Vec::new();
+        for p in split_list(params_str) {
+            let (pname, pty) = parse_operand(p, ln)?;
+            // weight qtensor indices are printed on the op result line; we
+            // recover weight q-indices from a `wq<i>=<idx>` attr if present,
+            // else None (verifier tolerates it).
+            let id = g.new_value(&pname, pty, amap.get(format!("wq{}", params.len()).as_str()).and_then(|v| v.parse().ok()));
+            by_name.insert(pname, id);
+            params.push(id);
+        }
+
+        if kind == OpKind::Input {
+            let (rname, rty) = parse_operand(lhs, ln)?;
+            let id = g.add_input(&rname, rty);
+            by_name.insert(rname, id);
+            continue;
+        }
+        let (rname, rty) = parse_operand(lhs, ln)?;
+        let rid = g.add_op(kind, args, params, &rname, rty, qtensor);
+        // restore hardware attrs
+        {
+            let v = g.value_mut(rid);
+            if let Some(t) = amap.get("tile") {
+                if let Some((a, b)) = t.split_once('x') {
+                    v.attrs.tile = (a.parse().unwrap_or(1), b.parse().unwrap_or(1));
+                }
+            }
+            if amap.get("order").map(|o| o == "col").unwrap_or(false) {
+                v.attrs.order = StreamOrder::ColMajor;
+            }
+            if let Some(t) = amap.get("thr") {
+                v.attrs.throughput = t.parse().unwrap_or(0.0);
+            }
+        }
+        let op_id = g.value(rid).producer.unwrap();
+        let op = &mut g.ops[op_id.0];
+        op.attrs = OpAttrs {
+            hw_ip: amap.get("ip").cloned().unwrap_or_default(),
+            area_luts: amap.get("area").and_then(|v| v.parse().ok()).unwrap_or(0.0),
+            ii_cycles: amap.get("ii").and_then(|v| v.parse().ok()).unwrap_or(0.0),
+        };
+        by_name.insert(rname, rid);
+    }
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::printer::print_graph;
+    use super::*;
+    use crate::ir::graph::OpKind;
+
+    #[test]
+    fn type_round_trip() {
+        for s in ["f32[32x64]", "mxint(5)[64x64]", "int(8,4)[16x2]", "bl(7)[4]", "fp8[8x8]"] {
+            let t = parse_type(s, 0).unwrap();
+            assert_eq!(super::super::printer::type_str(&t), s);
+        }
+    }
+
+    #[test]
+    fn graph_round_trip() {
+        let mut g = Graph::new("toy");
+        let x = g.add_input("x", TensorType::fp32(vec![32, 64]));
+        let w = g.new_value(
+            "w0",
+            TensorType {
+                shape: vec![64, 64],
+                format: FormatKind::MxInt,
+                precision: Precision::new(5.0, 0.0),
+            },
+            None,
+        );
+        let h = g.add_op(OpKind::Linear, vec![x], vec![w], "h", TensorType::fp32(vec![32, 64]), Some(0));
+        let y = g.add_op(OpKind::Gelu, vec![h], vec![], "y", TensorType::fp32(vec![32, 64]), None);
+        g.outputs.push(y);
+
+        let text = print_graph(&g);
+        let g2 = parse_graph(&text).unwrap();
+        assert_eq!(g2.name, "toy");
+        assert_eq!(g2.dag_size(), g.dag_size());
+        assert_eq!(print_graph(&g2), text, "round trip stable");
+    }
+
+    #[test]
+    fn rejects_unknown_op() {
+        let text = "module @m {\n  %y: f32[4] = frobnicate(%x)\n}\n";
+        assert!(parse_graph(text).is_err());
+    }
+
+    #[test]
+    fn rejects_undefined_arg() {
+        let text = "module @m {\n  %y: f32[4] = gelu(%nope)\n}\n";
+        assert!(parse_graph(text).is_err());
+    }
+}

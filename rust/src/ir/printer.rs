@@ -1,0 +1,125 @@
+//! Textual form of MASE IR, following the paper's §3 syntax:
+//!
+//! ```text
+//! %h: f32[32x64] = linear(%x: f32[32x64]) [%w0: mxint(5)[64x64]]
+//!     {q=0, tile=16x2, order=row, ip="mxint_linear", area=1234.0}
+//! ```
+
+use super::graph::{Graph, Operation, StreamOrder};
+use super::TensorType;
+use crate::formats::FormatKind;
+
+pub fn type_str(t: &TensorType) -> String {
+    let dims = t.shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("x");
+    match t.format {
+        FormatKind::Fp32 => format!("f32[{dims}]"),
+        FormatKind::Fp8 => format!("fp8[{dims}]"),
+        FormatKind::Int => format!("int({},{})[{dims}]", t.precision.bits, t.precision.frac),
+        FormatKind::MxInt => format!("mxint({})[{dims}]", t.precision.bits),
+        FormatKind::Bmf => format!("bmf({})[{dims}]", t.precision.bits),
+        FormatKind::Bl => format!("bl({})[{dims}]", t.precision.bits),
+    }
+}
+
+fn operand(g: &Graph, id: super::ValueId) -> String {
+    let v = g.value(id);
+    format!("%{}: {}", v.name, type_str(&v.ty))
+}
+
+fn op_line(g: &Graph, op: &Operation) -> String {
+    let results = op
+        .results
+        .iter()
+        .map(|&r| operand(g, r))
+        .collect::<Vec<_>>()
+        .join(", ");
+    let args = op.args.iter().map(|&a| format!("%{}", g.value(a).name)).collect::<Vec<_>>().join(", ");
+    let mut line = format!("{results} = {}({args})", op.kind.name());
+    if !op.params.is_empty() {
+        let params = op
+            .params
+            .iter()
+            .map(|&p| operand(g, p))
+            .collect::<Vec<_>>()
+            .join(", ");
+        line.push_str(&format!(" [{params}]"));
+    }
+    // attributes: software (qtensor index) + hardware (tile/order/ip/area)
+    let mut attrs: Vec<String> = Vec::new();
+    for &r in &op.results {
+        let v = g.value(r);
+        if let Some(q) = v.qtensor {
+            attrs.push(format!("q={q}"));
+        }
+        if v.attrs.tile != (1, 1) {
+            attrs.push(format!("tile={}x{}", v.attrs.tile.0, v.attrs.tile.1));
+        }
+        if v.attrs.order != StreamOrder::RowMajor {
+            attrs.push(format!("order={}", v.attrs.order.name()));
+        }
+        if v.attrs.throughput > 0.0 {
+            attrs.push(format!("thr={:.3}", v.attrs.throughput));
+        }
+    }
+    if !op.attrs.hw_ip.is_empty() {
+        attrs.push(format!("ip=\"{}\"", op.attrs.hw_ip));
+    }
+    if op.attrs.area_luts > 0.0 {
+        attrs.push(format!("area={:.1}", op.attrs.area_luts));
+    }
+    if op.attrs.ii_cycles > 0.0 {
+        attrs.push(format!("ii={:.2}", op.attrs.ii_cycles));
+    }
+    if !attrs.is_empty() {
+        line.push_str(&format!(" {{{}}}", attrs.join(", ")));
+    }
+    line
+}
+
+/// Print the whole module.
+pub fn print_graph(g: &Graph) -> String {
+    let mut out = format!("module @{} {{\n", g.name);
+    for op in &g.ops {
+        out.push_str("  ");
+        out.push_str(&op_line(g, op));
+        out.push('\n');
+    }
+    let outs = g.outputs.iter().map(|&o| format!("%{}", g.value(o).name)).collect::<Vec<_>>().join(", ");
+    out.push_str(&format!("  return {outs}\n}}\n"));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Precision;
+    use crate::ir::graph::OpKind;
+
+    #[test]
+    fn prints_paper_like_syntax() {
+        let mut g = Graph::new("toy");
+        let x = g.add_input("x", TensorType::fp32(vec![32, 64]));
+        let w = g.new_value(
+            "w0",
+            TensorType { shape: vec![64, 64], format: FormatKind::MxInt, precision: Precision::new(5.0, 0.0) },
+            Some(1),
+        );
+        let h = g.add_op(OpKind::Linear, vec![x], vec![w], "h", TensorType::fp32(vec![32, 64]), Some(0));
+        g.outputs.push(h);
+        let text = print_graph(&g);
+        assert!(text.contains("module @toy {"), "{text}");
+        assert!(text.contains("%h: f32[32x64] = linear(%x) [%w0: mxint(5)[64x64]] {q=0}"), "{text}");
+        assert!(text.contains("return %h"), "{text}");
+    }
+
+    #[test]
+    fn type_strings() {
+        assert_eq!(type_str(&TensorType::fp32(vec![4])), "f32[4]");
+        let t = TensorType {
+            shape: vec![16, 2],
+            format: FormatKind::Int,
+            precision: Precision::new(8.0, 4.0),
+        };
+        assert_eq!(type_str(&t), "int(8,4)[16x2]");
+    }
+}

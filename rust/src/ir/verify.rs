@@ -1,0 +1,181 @@
+//! MASE IR verifier: SSA discipline, graph well-formedness, and the
+//! paper's format rules (unified block shape divisibility, single
+//! arithmetic type per design — §4).
+
+use super::graph::Graph;
+use crate::formats::{FormatKind, BLOCK_SHAPE};
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum VerifyError {
+    #[error("value %{0} has no producer and is not an input/param")]
+    Orphan(String),
+    #[error("value %{0} produced more than once (SSA violation)")]
+    Reassigned(String),
+    #[error("op {0} references out-of-range value id")]
+    BadValueId(String),
+    #[error("block format tensor %{0} has shape {1:?} not tiling into {2:?} blocks")]
+    BadBlockShape(String, Vec<usize>, (usize, usize)),
+    #[error("mixed arithmetic types in one design: {0} and {1} (paper §4 forbids)")]
+    MixedArithmetic(&'static str, &'static str),
+    #[error("graph has no outputs")]
+    NoOutputs,
+    #[error("cycle detected in dataflow graph")]
+    Cycle,
+}
+
+/// Verify the graph; returns all findings (empty = valid).
+pub fn verify(g: &Graph) -> Vec<VerifyError> {
+    let mut errors = Vec::new();
+
+    if g.outputs.is_empty() {
+        errors.push(VerifyError::NoOutputs);
+    }
+
+    // SSA: every value produced at most once; producer back-links correct.
+    let mut produced = vec![0usize; g.values.len()];
+    for op in &g.ops {
+        for &r in &op.results {
+            if r.0 >= g.values.len() {
+                errors.push(VerifyError::BadValueId(format!("{:?}", op.id)));
+                continue;
+            }
+            produced[r.0] += 1;
+        }
+        for &a in op.args.iter().chain(op.params.iter()) {
+            if a.0 >= g.values.len() {
+                errors.push(VerifyError::BadValueId(format!("{:?}", op.id)));
+            }
+        }
+    }
+    for v in &g.values {
+        match produced[v.id.0] {
+            0 => {
+                // weight/param values are defined without a producing op
+                let is_param = g.ops.iter().any(|o| o.params.contains(&v.id));
+                if !is_param {
+                    errors.push(VerifyError::Orphan(v.name.clone()));
+                }
+            }
+            1 => {}
+            _ => errors.push(VerifyError::Reassigned(v.name.clone())),
+        }
+    }
+
+    // Block-format tensors must tile into the unified block shape (§4.1).
+    for v in &g.values {
+        if v.ty.format.is_block_format() && !v.ty.shape.is_empty() {
+            let ok = if v.ty.shape.len() == 1 {
+                v.ty.shape[0] % (BLOCK_SHAPE.0 * BLOCK_SHAPE.1) == 0
+            } else {
+                let r = v.ty.shape[v.ty.shape.len() - 2];
+                let c = v.ty.shape[v.ty.shape.len() - 1];
+                r % BLOCK_SHAPE.0 == 0 && c % BLOCK_SHAPE.1 == 0
+            };
+            if !ok {
+                errors.push(VerifyError::BadBlockShape(v.name.clone(), v.ty.shape.clone(), BLOCK_SHAPE));
+            }
+        }
+    }
+
+    // Single arithmetic type across the design (fp32 edges are allowed:
+    // non-quantized interconnect like residuals/softmax).
+    let mut block_fmt: Option<FormatKind> = None;
+    for v in &g.values {
+        let f = v.ty.format;
+        if f == FormatKind::Fp32 {
+            continue;
+        }
+        match block_fmt {
+            None => block_fmt = Some(f),
+            Some(prev) if prev != f => {
+                errors.push(VerifyError::MixedArithmetic(prev.name(), f.name()));
+                break;
+            }
+            _ => {}
+        }
+    }
+
+    // Acyclicity via topo order length.
+    if g.topo_order().len() != g.ops.len() {
+        errors.push(VerifyError::Cycle);
+    }
+
+    errors
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Precision;
+    use crate::ir::{OpKind, TensorType};
+
+    fn quantized_ty(fmt: FormatKind, shape: Vec<usize>) -> TensorType {
+        TensorType { shape, format: fmt, precision: Precision::new(5.0, 0.0) }
+    }
+
+    fn valid_graph() -> Graph {
+        let mut g = Graph::new("ok");
+        let x = g.add_input("x", TensorType::fp32(vec![32, 64]));
+        let w = g.new_value("w", quantized_ty(FormatKind::MxInt, vec![64, 64]), Some(1));
+        let y = g.add_op(
+            OpKind::Linear,
+            vec![x],
+            vec![w],
+            "y",
+            quantized_ty(FormatKind::MxInt, vec![32, 64]),
+            Some(0),
+        );
+        g.outputs.push(y);
+        g
+    }
+
+    #[test]
+    fn valid_graph_passes() {
+        assert!(verify(&valid_graph()).is_empty());
+    }
+
+    #[test]
+    fn detects_orphan_value() {
+        let mut g = valid_graph();
+        g.new_value("dangling", TensorType::fp32(vec![4]), None);
+        assert!(verify(&g).iter().any(|e| matches!(e, VerifyError::Orphan(n) if n == "dangling")));
+    }
+
+    #[test]
+    fn detects_bad_block_shape() {
+        let mut g = valid_graph();
+        let bad = g.new_value("bad", quantized_ty(FormatKind::MxInt, vec![15, 3]), None);
+        let z = g.add_op(OpKind::Gelu, vec![g.inputs[0]], vec![bad], "z", TensorType::fp32(vec![32, 64]), None);
+        g.outputs.push(z);
+        assert!(verify(&g).iter().any(|e| matches!(e, VerifyError::BadBlockShape(..))));
+    }
+
+    #[test]
+    fn detects_mixed_arithmetic() {
+        let mut g = valid_graph();
+        let w2 = g.new_value("w2", quantized_ty(FormatKind::Bl, vec![64, 64]), None);
+        let y2 = g.add_op(
+            OpKind::Linear,
+            vec![g.inputs[0]],
+            vec![w2],
+            "y2",
+            TensorType::fp32(vec![32, 64]),
+            None,
+        );
+        g.outputs.push(y2);
+        assert!(verify(&g).iter().any(|e| matches!(e, VerifyError::MixedArithmetic(..))));
+    }
+
+    #[test]
+    fn fp32_edges_do_not_count_as_mixed() {
+        let g = valid_graph(); // fp32 input + mxint weight/result
+        assert!(verify(&g).iter().all(|e| !matches!(e, VerifyError::MixedArithmetic(..))));
+    }
+
+    #[test]
+    fn detects_missing_outputs() {
+        let mut g = valid_graph();
+        g.outputs.clear();
+        assert!(verify(&g).contains(&VerifyError::NoOutputs));
+    }
+}

@@ -1,0 +1,27 @@
+//! # MASE-RS
+//!
+//! A dataflow compiler for efficient LLM inference using custom
+//! microscaling (MX) formats — a from-scratch reproduction of the MASE
+//! paper as a three-layer Rust + JAX + Pallas system.
+//!
+//! The crate is the paper's Layer-3 contribution: the co-design compiler.
+//! It consumes AOT-lowered HLO artifacts (produced once by
+//! `python/compile/aot.py`) through the PJRT runtime in [`runtime`], and
+//! owns everything else: the MASE IR ([`ir`]), the numeric format library
+//! ([`formats`]), the pass pipeline ([`passes`]), the search algorithms
+//! ([`search`]), the hardware cost models ([`hw`]), the dataflow simulator
+//! ([`sim`]), the SystemVerilog emitter ([`emit`]), the synthetic data
+//! substrate ([`data`]) and the end-to-end coordinator ([`coordinator`]).
+pub mod formats;
+pub mod ir;
+pub mod frontend;
+pub mod data;
+pub mod search;
+pub mod hw;
+pub mod sim;
+pub mod passes;
+pub mod emit;
+pub mod runtime;
+pub mod eval;
+pub mod coordinator;
+pub mod util;

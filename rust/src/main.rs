@@ -1,0 +1,209 @@
+//! `mase` — command-line driver for the MASE-RS dataflow compiler.
+//!
+//! Subcommands:
+//!   pretrain  --all | --model M [--task T] [--steps N]
+//!   profile   --model M [--task T]
+//!   search    --model M [--task T] [--fmt F] [--algorithm A] [--trials N]
+//!   emit      --model M [--task T] [--out DIR]
+//!   e2e       --model M [--task T] [--trials N] [--out DIR]
+//!   ir        --model M            (print the MASE IR)
+//!   formats   [--model llama-sim]  (Table 1-style format comparison)
+
+use anyhow::{anyhow, Result};
+use mase::coordinator::{FlowConfig, PretrainConfig, Session};
+use mase::coordinator::pretrain;
+use mase::data::Task;
+use mase::formats::FormatKind;
+use mase::search::Algorithm;
+use mase::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn task_of(args: &Args) -> Result<Task> {
+    let name = args.get_or("task", "sst2");
+    Task::from_name(&name).ok_or_else(|| anyhow!("unknown task '{name}'"))
+}
+
+fn run(args: &Args) -> Result<()> {
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(Session::default_dir);
+    let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
+    if sub == "help" {
+        println!("{}", HELP);
+        return Ok(());
+    }
+    let session = Session::open(&dir)?;
+
+    match sub.as_str() {
+        "pretrain" => {
+            let cfg = PretrainConfig {
+                steps: args.get_usize("steps", 220),
+                ..Default::default()
+            };
+            if args.has("all") {
+                pretrain::pretrain_all(&session, &cfg)?;
+            } else {
+                let model = args.get("model").ok_or_else(|| anyhow!("--model required"))?;
+                let meta = session.manifest.model(model)?.clone();
+                let task = if meta.kind == "lm" { None } else { Some(task_of(args)?) };
+                pretrain::pretrain(&session, &meta, task, &cfg)?;
+            }
+            println!("pretraining done; weights in {}", dir.join("weights").display());
+        }
+        "profile" => {
+            let model = args.get("model").ok_or_else(|| anyhow!("--model required"))?;
+            let meta = session.manifest.model(model)?.clone();
+            let task = task_of(args)?;
+            let w = pretrain::pretrain(&session, &meta, Some(task), &Default::default())?;
+            let batches = mase::data::batches(task, 1, 2, meta.batch, meta.seq_len);
+            let p = mase::passes::profile_model(&session.runtime, &meta, &w, &batches)?;
+            let mut t = mase::util::Table::new(vec!["qtensor", "variance", "absmax", "absmean"]);
+            for i in 0..p.names.len() {
+                t.row(vec![
+                    p.names[i].clone(),
+                    format!("{:.4e}", p.variance[i]),
+                    format!("{:.4}", p.absmax[i]),
+                    format!("{:.4}", p.absmean[i]),
+                ]);
+            }
+            println!("{}", t.render());
+            println!("variance spread (Fig 1a): {:.1}x", p.variance_spread());
+        }
+        "search" | "e2e" | "emit" => {
+            let model = args.get("model").ok_or_else(|| anyhow!("--model required"))?;
+            let fmt = FormatKind::from_name(&args.get_or("fmt", "mxint"))
+                .ok_or_else(|| anyhow!("unknown format"))?;
+            let algorithm = Algorithm::from_name(&args.get_or("algorithm", "tpe"))
+                .ok_or_else(|| anyhow!("unknown algorithm"))?;
+            let emit_dir = if sub == "emit" || sub == "e2e" || args.has("out") {
+                Some(
+                    args.get("out")
+                        .map(std::path::PathBuf::from)
+                        .unwrap_or_else(|| dir.join("designs").join(model)),
+                )
+            } else {
+                None
+            };
+            let cfg = FlowConfig {
+                model: model.to_string(),
+                task: task_of(args)?,
+                fmt,
+                algorithm,
+                trials: args.get_usize("trials", 32),
+                eval_batches: args.get_usize("eval-batches", 4),
+                qat_steps: args.get_usize("qat-steps", 0),
+                hw_aware: !args.has("sw-only"),
+                seed: args.get_usize("seed", 0) as u64,
+                emit_dir: emit_dir.clone(),
+                pretrain_steps: args.get_usize("pretrain-steps", 220),
+            };
+            let report = mase::coordinator::run_flow(&session, &cfg)?;
+            let best = &report.outcome.best_eval;
+            println!(
+                "model: {model}  task: {}  format: {}",
+                args.get_or("task", "sst2"),
+                fmt.name()
+            );
+            println!("fp32 accuracy:       {:.4}", report.fp32_accuracy);
+            println!(
+                "int8 baseline:       acc {:.4}, area-eff {:.3e}",
+                report.int8_baseline.accuracy,
+                report.int8_baseline.design.area_efficiency()
+            );
+            println!(
+                "best {}: acc {:.4} (Δ {:+.4}), avg bits {:.2}, area-eff {:.3e} ({:.2}x int8), θ {:.0}/s, area {:.0} LUT",
+                fmt.name(),
+                best.accuracy,
+                best.accuracy - report.fp32_accuracy,
+                best.avg_bits,
+                best.design.area_efficiency(),
+                best.design.area_efficiency() / report.int8_baseline.design.area_efficiency(),
+                best.design.throughput,
+                best.design.area_luts,
+            );
+            if let Some(d) = emit_dir {
+                println!(
+                    "emitted {} SV files / {} lines to {}",
+                    report.emitted_files,
+                    report.emitted_lines,
+                    d.display()
+                );
+            }
+            println!("\npass timing (Table 4):\n{}", report.pass_manager.report());
+        }
+        "ir" => {
+            let model = args.get("model").ok_or_else(|| anyhow!("--model required"))?;
+            let meta = session.manifest.model(model)?;
+            let g = mase::frontend::build_graph(meta);
+            println!("{}", mase::ir::print_graph(&g));
+            println!("// DAG size: {} ops", g.dag_size());
+        }
+        "formats" => {
+            // Table 1-style quick comparison on the LM
+            let model = args.get_or("model", "llama-sim");
+            let meta = session.manifest.model(&model)?.clone();
+            anyhow::ensure!(meta.kind == "lm", "formats comparison runs on the LM simulant");
+            let w = pretrain::pretrain(&session, &meta, None, &Default::default())?;
+            let corpus = mase::data::MarkovCorpus::new(7);
+            let n_batches = args.get_usize("eval-batches", 4);
+            let mut bs = Vec::new();
+            for i in 0..n_batches {
+                let toks = corpus.batch(1000 + i as u64, meta.batch, meta.seq_len);
+                bs.push(mase::data::Batch {
+                    tokens: toks,
+                    labels: vec![0; meta.batch],
+                    batch: meta.batch,
+                    seq: meta.seq_len,
+                });
+            }
+            let ev = mase::passes::Evaluator::new(&session.runtime, &meta, &w, &bs);
+            let profile = mase::passes::profile_model(&session.runtime, &meta, &w, &bs[..1])?;
+            let mut t = mase::util::Table::new(vec![
+                "format", "config", "perplexity", "mem density", "arith density",
+            ]);
+            for (fmt, bits) in [
+                (FormatKind::Fp32, 32.0f32),
+                (FormatKind::Int, 8.0),
+                (FormatKind::Fp8, 8.0),
+                (FormatKind::MxInt, 7.0),
+                (FormatKind::Bmf, 5.0),
+                (FormatKind::Bl, 7.0),
+            ] {
+                let sol = mase::passes::QuantSolution::uniform(fmt, bits, &meta, &profile);
+                let acc = ev.accuracy(&sol)?;
+                let p = mase::formats::Precision::new(bits, sol.fracs[0]);
+                t.row(vec![
+                    fmt.name().to_string(),
+                    "W8A8".to_string(),
+                    format!("{:.2}", acc.perplexity()),
+                    format!("{:.2}x", mase::hw::memory_density(fmt, p)),
+                    format!("{:.1}x", mase::hw::arithmetic_density(fmt, p)),
+                ]);
+            }
+            println!("{}", t.render());
+        }
+        other => {
+            return Err(anyhow!("unknown subcommand '{other}'\n{HELP}"));
+        }
+    }
+    Ok(())
+}
+
+const HELP: &str = "mase — dataflow compiler for LLM inference with MX formats
+usage: mase <subcommand> [flags]
+  pretrain --all | --model M [--task T] [--steps N]
+  profile  --model M [--task T]
+  search   --model M [--task T] [--fmt mxint|int|bmf|bl] [--algorithm tpe|random|qmc|nsga2] [--trials N] [--sw-only]
+  emit     --model M [--task T] [--out DIR]
+  e2e      --model M [--task T] [--trials N]
+  ir       --model M
+  formats  [--model llama-sim]
+common: --artifacts DIR (default ./artifacts)";

@@ -1,0 +1,230 @@
+//! `evaluate` pass (Table 2): source-level estimation of both halves of
+//! the co-design — model accuracy via the PJRT eval artifacts, hardware
+//! area/throughput/energy via the regression models — combined by the
+//! search objective of Eq. (4):
+//!
+//! `objective = acc + k/b + k'*theta + k''/A`
+
+use super::parallelize::{parallelize, DesignPoint};
+use super::quantize::QuantSolution;
+use crate::data::Batch;
+use crate::eval::EvalAccumulator;
+use crate::formats::FormatKind;
+use crate::frontend::ModelMeta;
+use crate::hw::Device;
+use crate::ir::Graph;
+use crate::runtime::{PreparedTensor, Runtime, TensorData};
+use anyhow::Result;
+
+/// Hyperparameters of Eq. (4). `k` trades accuracy against bits; `k'`
+/// and `k''` normalize throughput and area into the accuracy scale (the
+/// paper: "k, k', k'' are hyperparameters that normalize these design
+/// constraints"). `hw_aware = false` reproduces the SW-only objective of
+/// Fig. 4 (`acc + k/b`).
+#[derive(Debug, Clone, Copy)]
+pub struct Objective {
+    pub k: f64,
+    pub k_theta: f64,
+    pub k_area: f64,
+    pub hw_aware: bool,
+}
+
+impl Default for Objective {
+    fn default() -> Self {
+        // theta ~ 1e4..1e6 inf/s, A ~ 1e4..1e6 LUTs on this testbed.
+        Self { k: 0.6, k_theta: 2e-8, k_area: 3e3, hw_aware: true }
+    }
+}
+
+impl Objective {
+    pub fn sw_only() -> Self {
+        Self { hw_aware: false, ..Self::default() }
+    }
+
+    /// Scalar value (maximized) + component vector for NSGA-II.
+    pub fn score(&self, acc: f64, avg_bits: f64, dp: &DesignPoint) -> (f64, Vec<f64>) {
+        let mut comps = vec![acc, self.k / avg_bits.max(1e-9)];
+        if self.hw_aware {
+            comps.push(self.k_theta * dp.throughput);
+            comps.push(self.k_area / dp.area_luts.max(1.0));
+        }
+        (comps.iter().sum(), comps)
+    }
+}
+
+/// Full result of evaluating one quantization solution.
+#[derive(Debug, Clone)]
+pub struct EvalResult {
+    pub accuracy: f64,
+    pub mean_loss: f64,
+    pub perplexity: f64,
+    pub avg_bits: f64,
+    pub design: DesignPoint,
+    pub value: f64,
+    pub objectives: Vec<f64>,
+}
+
+/// Bundles everything needed to score a solution for one (model, task).
+pub struct Evaluator<'a> {
+    pub rt: &'a Runtime,
+    pub meta: &'a ModelMeta,
+    pub weights: &'a [f32],
+    pub batches: &'a [Batch],
+    pub device: Device,
+    pub budget_frac: f64,
+    pub objective: Objective,
+    /// IR template (unquantized); cloned per evaluation.
+    pub graph: Graph,
+    /// §Perf/L3: weights + batch tensors converted to literals once and
+    /// reused across every trial's executions (the weights vector alone
+    /// is 0.1-3 MB copied per batch per trial otherwise).
+    weights_prep: PreparedTensor,
+    batches_prep: Vec<(PreparedTensor, PreparedTensor)>,
+}
+
+impl<'a> Evaluator<'a> {
+    pub fn new(
+        rt: &'a Runtime,
+        meta: &'a ModelMeta,
+        weights: &'a [f32],
+        batches: &'a [Batch],
+    ) -> Self {
+        let weights_prep = TensorData::f32(weights, &[meta.param_size as i64])
+            .prepare()
+            .expect("prepare weights");
+        let batches_prep = batches
+            .iter()
+            .map(|b| {
+                (
+                    TensorData::i32(&b.tokens, &[b.batch as i64, b.seq as i64])
+                        .prepare()
+                        .expect("prepare tokens"),
+                    TensorData::i32(&b.labels, &[b.batch as i64]).prepare().expect("prepare labels"),
+                )
+            })
+            .collect();
+        Self {
+            rt,
+            meta,
+            weights,
+            batches,
+            device: Device::u250(),
+            budget_frac: 0.4,
+            objective: Objective::default(),
+            graph: crate::frontend::build_graph(meta),
+            weights_prep,
+            batches_prep,
+        }
+    }
+
+    fn artifact_key(&self, fmt: FormatKind) -> String {
+        format!("eval_{}", fmt.name())
+    }
+
+    /// Accuracy/loss of a solution via the PJRT eval artifact.
+    pub fn accuracy(&self, sol: &QuantSolution) -> Result<EvalAccumulator> {
+        self.accuracy_with(sol, &self.artifact_key(sol.fmt), self.weights)
+    }
+
+    /// Same but with an explicit artifact key (e.g. "eval_mxint_pallas")
+    /// and/or alternative weights (QAT-tuned copies).
+    pub fn accuracy_with(
+        &self,
+        sol: &QuantSolution,
+        key: &str,
+        weights: &[f32],
+    ) -> Result<EvalAccumulator> {
+        let artifact = self.meta.artifact(key)?;
+        let qcfg = sol.to_qconfig();
+        let v = self.meta.num_qtensors() as i64;
+        // weights literal: reuse the prepared one on the common path, only
+        // converting fresh buffers (QAT-tuned copies) when they differ
+        let w_prep;
+        let w_ref = if std::ptr::eq(weights.as_ptr(), self.weights.as_ptr()) {
+            &self.weights_prep
+        } else {
+            w_prep = TensorData::f32(weights, &[self.meta.param_size as i64]).prepare()?;
+            &w_prep
+        };
+        let q_prep = TensorData::f32(&qcfg, &[v, 2]).prepare()?;
+        let mut acc = EvalAccumulator::default();
+        for (b, (toks, labs)) in self.batches.iter().zip(self.batches_prep.iter()) {
+            let out = self.rt.execute_prepared(artifact, &[w_ref, toks, labs, &q_prep])?;
+            let loss = out[0].scalar_f32()?;
+            let correct = out[1].scalar_i32()?;
+            let examples = if self.meta.kind == "lm" {
+                b.batch * (b.seq - 1) // next-token positions
+            } else {
+                b.batch
+            };
+            acc.add_batch(loss, correct, examples);
+        }
+        Ok(acc)
+    }
+
+    /// Hardware half: quantize + parallelize the IR clone.
+    pub fn hardware(&self, sol: &QuantSolution) -> (DesignPoint, f64, Graph) {
+        let mut g = self.graph.clone();
+        sol.apply(&mut g);
+        let dp = parallelize(&mut g, &self.device, self.budget_frac);
+        let bits = sol.average_bitwidth(&g);
+        (dp, bits, g)
+    }
+
+    /// Full co-design evaluation (the `evaluate` pass proper).
+    pub fn evaluate(&self, sol: &QuantSolution) -> Result<EvalResult> {
+        self.evaluate_with_weights(sol, self.weights)
+    }
+
+    /// Co-design evaluation with alternative weights (QAT-tuned copies).
+    pub fn evaluate_with_weights(&self, sol: &QuantSolution, weights: &[f32]) -> Result<EvalResult> {
+        let acc = self.accuracy_with(sol, &self.artifact_key(sol.fmt), weights)?;
+        let (dp, avg_bits, _g) = self.hardware(sol);
+        let (value, objectives) = self.objective.score(acc.accuracy(), avg_bits, &dp);
+        Ok(EvalResult {
+            accuracy: acc.accuracy(),
+            mean_loss: acc.mean_loss(),
+            perplexity: acc.perplexity(),
+            avg_bits,
+            design: dp,
+            value,
+            objectives,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn objective_components() {
+        let o = Objective::default();
+        let dp = DesignPoint {
+            area_luts: 1e5,
+            throughput: 1e5,
+            latency_cycles: 1e6,
+            offchip_bits: 0.0,
+            utilization: 0.1,
+        };
+        let (v, comps) = o.score(0.9, 4.25, &dp);
+        assert_eq!(comps.len(), 4);
+        assert!((v - comps.iter().sum::<f64>()).abs() < 1e-12);
+        // higher accuracy -> higher objective
+        let (v2, _) = o.score(0.95, 4.25, &dp);
+        assert!(v2 > v);
+        // fewer bits -> higher objective
+        let (v3, _) = o.score(0.9, 3.0, &dp);
+        assert!(v3 > v);
+    }
+
+    #[test]
+    fn sw_only_ignores_hardware() {
+        let o = Objective::sw_only();
+        let dp_a = DesignPoint { area_luts: 1.0, throughput: 1e9, latency_cycles: 0.0, offchip_bits: 0.0, utilization: 0.0 };
+        let dp_b = DesignPoint { area_luts: 1e9, throughput: 1.0, latency_cycles: 0.0, offchip_bits: 0.0, utilization: 0.9 };
+        let (va, _) = o.score(0.9, 4.0, &dp_a);
+        let (vb, _) = o.score(0.9, 4.0, &dp_b);
+        assert_eq!(va, vb);
+    }
+}

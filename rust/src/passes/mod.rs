@@ -1,0 +1,86 @@
+//! The MASE pass pipeline (paper Table 2): `profile`, `quantize`,
+//! `parallelize`, `evaluate`, `search`, `emit`, orchestrated by a
+//! [`PassManager`] that records per-pass wall-clock (Table 4).
+//!
+//! All passes are *type-independent*: they read the format/precision off
+//! the IR values and dispatch through `formats`/`hw`, which is what lets a
+//! new data format plug in with only a software emulator (L2) and a
+//! hardware template + cost model (`hw`, `emit`) — the paper's
+//! orchestration claim (§3.2, Fig. 3).
+
+pub mod emit_pass;
+pub mod evaluate;
+pub mod parallelize;
+pub mod profile;
+pub mod quantize;
+pub mod search_pass;
+
+pub use evaluate::{EvalResult, Evaluator, Objective};
+pub use parallelize::{parallelize, DesignPoint};
+pub use profile::{profile_model, ProfileData};
+pub use quantize::QuantSolution;
+pub use search_pass::{run_search, SearchConfig, SearchOutcome};
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Wall-clock bookkeeping per pass — regenerates Table 4's runtime
+/// breakdown.
+#[derive(Debug, Default, Clone)]
+pub struct PassManager {
+    /// pass name -> (total seconds, invocations)
+    pub timings: BTreeMap<String, (f64, u64)>,
+}
+
+impl PassManager {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Run `f` as pass `name`, recording its duration.
+    pub fn run<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        let dt = t0.elapsed().as_secs_f64();
+        let e = self.timings.entry(name.to_string()).or_insert((0.0, 0));
+        e.0 += dt;
+        e.1 += 1;
+        out
+    }
+
+    /// (total seconds, count) for a pass.
+    pub fn stat(&self, name: &str) -> (f64, u64) {
+        self.timings.get(name).copied().unwrap_or((0.0, 0))
+    }
+
+    /// Render the Table 4 style breakdown.
+    pub fn report(&self) -> String {
+        let mut t = crate::util::Table::new(vec!["pass", "total_s", "calls", "per_call_s"]);
+        for (name, (secs, calls)) in &self.timings {
+            t.row(vec![
+                name.clone(),
+                format!("{secs:.3}"),
+                calls.to_string(),
+                format!("{:.3}", secs / *calls as f64),
+            ]);
+        }
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_timings() {
+        let mut pm = PassManager::new();
+        let v = pm.run("quantize", || 42);
+        assert_eq!(v, 42);
+        pm.run("quantize", || ());
+        let (secs, calls) = pm.stat("quantize");
+        assert_eq!(calls, 2);
+        assert!(secs >= 0.0);
+        assert!(pm.report().contains("quantize"));
+    }
+}

@@ -1,0 +1,235 @@
+//! `parallelize` pass (Table 2, §4.2): resource-constrained tile-size
+//! allocation. Greedy throughput balancing: start every operator at
+//! minimal parallelism, then repeatedly double the tile of the current
+//! bottleneck (the op with the most cycles per inference) while the LUT
+//! budget holds. This converges to the balanced pipeline the paper
+//! describes ("a set of tile sizes ... for balanced throughput between
+//! operators"), and fills in all hardware attributes of Fig. 2c.
+
+use crate::formats::Precision;
+use crate::hw::area::op_area_luts;
+use crate::hw::memory::{bandwidth_cap, offchip_bits_per_inference, plan};
+use crate::hw::throughput::{op_cycles, pipeline_latency_cycles, pipeline_throughput};
+use crate::hw::Device;
+use crate::ir::{Graph, OpKind, StreamOrder};
+
+/// Evaluated hardware design point (the regression model's output).
+#[derive(Debug, Clone)]
+pub struct DesignPoint {
+    pub area_luts: f64,
+    pub throughput: f64,
+    pub latency_cycles: f64,
+    pub offchip_bits: f64,
+    pub utilization: f64,
+}
+
+impl DesignPoint {
+    /// Area efficiency: throughput per LUT (the paper's Figs. 5/7 metric,
+    /// reported relative to the int8 design).
+    pub fn area_efficiency(&self) -> f64 {
+        if self.area_luts <= 0.0 {
+            0.0
+        } else {
+            self.throughput / self.area_luts
+        }
+    }
+}
+
+/// The quantized-GEMM precision an op's datapath must support: the wider
+/// of its weight and (first) activation qtensor precisions.
+fn op_precision(g: &Graph, op: &crate::ir::Operation) -> Precision {
+    let mut p = Precision::new(2.0, 0.0);
+    for &w in &op.params {
+        let t = &g.value(w).ty;
+        if t.precision.bits > p.bits {
+            p = t.precision;
+        }
+    }
+    for &a in &op.args {
+        let t = &g.value(a).ty;
+        if t.format.is_block_format() || t.format == crate::formats::FormatKind::Int {
+            if t.precision.bits > p.bits {
+                p = t.precision;
+            }
+        }
+    }
+    p
+}
+
+fn design_format(g: &Graph) -> crate::formats::FormatKind {
+    g.values
+        .iter()
+        .map(|v| v.ty.format)
+        .find(|f| *f != crate::formats::FormatKind::Fp32)
+        .unwrap_or(crate::formats::FormatKind::Fp32)
+}
+
+fn total_area(g: &Graph) -> f64 {
+    g.ops.iter().map(|o| o.attrs.area_luts).sum()
+}
+
+fn recompute_op(g: &mut Graph, i: usize, fmt: crate::formats::FormatKind) {
+    let op = &g.ops[i];
+    let tile = op.results.first().map(|&r| g.value(r).attrs.tile).unwrap_or((1, 1));
+    let p = op_precision(g, op);
+    let area = op_area_luts(op.kind, fmt, p, tile);
+    let cycles = op_cycles(g, op, tile);
+    let op = &mut g.ops[i];
+    op.attrs.area_luts = area;
+    op.attrs.ii_cycles = cycles;
+    op.attrs.hw_ip = format!("{}_{}", fmt.name(), op.kind.name());
+}
+
+/// Run the pass: annotate tiles/areas/IIs on `g`, return the design point.
+/// `budget_frac` is the fraction of device LUTs the design may use.
+pub fn parallelize(g: &mut Graph, device: &Device, budget_frac: f64) -> DesignPoint {
+    let fmt = design_format(g);
+    let budget = device.luts * budget_frac;
+
+    // init: minimal tiles, mark stream orders for the dataflow-specific ops
+    for i in 0..g.ops.len() {
+        let kind = g.ops[i].kind;
+        if let Some(&r) = g.ops[i].results.first() {
+            let v = g.value_mut(r);
+            v.attrs.tile = if kind.is_gemm() { (2, 2) } else { (1, 2) };
+            v.attrs.order =
+                if kind == OpKind::Transpose { StreamOrder::ColMajor } else { StreamOrder::RowMajor };
+        }
+        recompute_op(g, i, fmt);
+    }
+
+    // greedy: double the bottleneck op's tile while budget allows
+    loop {
+        let (mut worst, mut worst_cycles) = (usize::MAX, 0.0f64);
+        for (i, op) in g.ops.iter().enumerate() {
+            if op.attrs.ii_cycles > worst_cycles {
+                worst_cycles = op.attrs.ii_cycles;
+                worst = i;
+            }
+        }
+        if worst == usize::MAX || worst_cycles <= 1.0 {
+            break;
+        }
+        let r = match g.ops[worst].results.first() {
+            Some(&r) => r,
+            None => break,
+        };
+        let old_tile = g.value(r).attrs.tile;
+        // grow the smaller dimension first (keeps tiles near-square, and
+        // within the output tensor bounds)
+        let out_shape = g.value(r).ty.shape.clone();
+        let max_r = out_shape.get(out_shape.len().saturating_sub(2)).copied().unwrap_or(1);
+        let max_c = out_shape.last().copied().unwrap_or(1);
+        let new_tile = if old_tile.0 <= old_tile.1 && old_tile.0 * 2 <= max_r.max(2) {
+            (old_tile.0 * 2, old_tile.1)
+        } else if old_tile.1 * 2 <= max_c.max(2) {
+            (old_tile.0, old_tile.1 * 2)
+        } else if old_tile.0 * 2 <= max_r.max(2) {
+            (old_tile.0 * 2, old_tile.1)
+        } else {
+            break; // bottleneck already at full parallelism
+        };
+        g.value_mut(r).attrs.tile = new_tile;
+        recompute_op(g, worst, fmt);
+        if total_area(g) > budget {
+            // revert and stop
+            g.value_mut(r).attrs.tile = old_tile;
+            recompute_op(g, worst, fmt);
+            break;
+        }
+    }
+
+    // fill edge throughputs (elements/cycle) for Fig. 2c reporting
+    for i in 0..g.ops.len() {
+        if let Some(&r) = g.ops[i].results.first() {
+            let cycles = g.ops[i].attrs.ii_cycles.max(1.0);
+            let elems = g.value(r).ty.elements() as f64;
+            g.value_mut(r).attrs.throughput = elems / cycles;
+        }
+    }
+
+    let placements = plan(g, device);
+    let offchip = offchip_bits_per_inference(&placements);
+    let thr = pipeline_throughput(g, device).min(bandwidth_cap(&placements, device));
+    DesignPoint {
+        area_luts: total_area(g),
+        throughput: thr,
+        latency_cycles: pipeline_latency_cycles(g),
+        offchip_bits: offchip,
+        utilization: total_area(g) / device.luts,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::FormatKind;
+    use crate::frontend::{build_graph, manifest::ModelMeta};
+    use crate::passes::{profile::ProfileData, QuantSolution};
+
+    fn quantized_graph(bits: f32) -> Graph {
+        let m = ModelMeta::synthetic("t", 2, 32, 2, 512, 32, 4, "classifier", 64);
+        let p = ProfileData::uniform(&m, 4.0);
+        let mut g = build_graph(&m);
+        QuantSolution::uniform(FormatKind::MxInt, bits, &m, &p).apply(&mut g);
+        g
+    }
+
+    #[test]
+    fn respects_budget() {
+        let mut g = quantized_graph(7.0);
+        let d = Device::u250();
+        let dp = parallelize(&mut g, &d, 0.5);
+        assert!(dp.area_luts <= d.luts * 0.5 * 1.001, "{}", dp.area_luts);
+        assert!(dp.throughput > 0.0);
+    }
+
+    #[test]
+    fn more_budget_more_throughput() {
+        let d = Device::u250();
+        let mut g1 = quantized_graph(7.0);
+        let t1 = parallelize(&mut g1, &d, 0.05).throughput;
+        let mut g2 = quantized_graph(7.0);
+        let t2 = parallelize(&mut g2, &d, 0.8).throughput;
+        assert!(t2 > t1, "{t1} vs {t2}");
+    }
+
+    #[test]
+    fn lower_precision_gives_better_area_efficiency() {
+        // Same budget: 4-bit mantissas buy more parallel lanes than 7-bit.
+        let d = Device::u250();
+        let mut g_lo = quantized_graph(3.0);
+        let mut g_hi = quantized_graph(7.0);
+        let dp_lo = parallelize(&mut g_lo, &d, 0.3);
+        let dp_hi = parallelize(&mut g_hi, &d, 0.3);
+        assert!(
+            dp_lo.area_efficiency() > dp_hi.area_efficiency(),
+            "lo {} hi {}",
+            dp_lo.area_efficiency(),
+            dp_hi.area_efficiency()
+        );
+    }
+
+    #[test]
+    fn annotates_hw_attributes() {
+        let mut g = quantized_graph(5.0);
+        parallelize(&mut g, &Device::u250(), 0.3);
+        for op in &g.ops {
+            assert!(!op.attrs.hw_ip.is_empty());
+        }
+        // transpose results stream column-major (Fig. 1d)
+        let t = g.ops.iter().find(|o| o.kind == OpKind::Transpose).unwrap();
+        assert_eq!(g.value(t.results[0]).attrs.order, StreamOrder::ColMajor);
+    }
+
+    #[test]
+    fn pipeline_is_roughly_balanced() {
+        let mut g = quantized_graph(5.0);
+        parallelize(&mut g, &Device::u250(), 0.5);
+        let cycles: Vec<f64> =
+            g.ops.iter().filter(|o| o.attrs.ii_cycles > 0.0).map(|o| o.attrs.ii_cycles).collect();
+        let max = cycles.iter().cloned().fold(0.0, f64::max);
+        let nontrivial = cycles.iter().filter(|&&c| c > max / 100.0).count();
+        assert!(nontrivial >= 2, "degenerate balance: {cycles:?}");
+    }
+}

@@ -1,0 +1,88 @@
+//! `profile` pass (Table 2): run the profile artifact over calibration
+//! batches and collect per-qtensor value statistics — the data behind
+//! Fig. 1a (activation variance exploding in deeper layers) and the
+//! calibration source for fixed-point fraction widths.
+
+use crate::data::Batch;
+use crate::frontend::ModelMeta;
+use crate::runtime::{Runtime, TensorData};
+use anyhow::Result;
+
+/// Per-qtensor statistics, averaged over calibration batches.
+#[derive(Debug, Clone)]
+pub struct ProfileData {
+    pub names: Vec<String>,
+    pub variance: Vec<f64>,
+    pub absmax: Vec<f64>,
+    pub absmean: Vec<f64>,
+}
+
+impl ProfileData {
+    /// Uniform fallback when no runtime/batches are available (tests).
+    pub fn uniform(meta: &ModelMeta, absmax: f64) -> Self {
+        let v = meta.num_qtensors();
+        ProfileData {
+            names: meta.qtensors.clone(),
+            variance: vec![1.0; v],
+            absmax: vec![absmax; v],
+            absmean: vec![absmax / 3.0; v],
+        }
+    }
+
+    /// Fig. 1a's headline number: max variance ratio across tensors.
+    pub fn variance_spread(&self) -> f64 {
+        let mx = self.variance.iter().cloned().fold(f64::MIN, f64::max);
+        let mn = self.variance.iter().cloned().fold(f64::MAX, f64::min).max(1e-30);
+        mx / mn
+    }
+}
+
+/// Run the profile artifact over `batches` and average the statistics.
+pub fn profile_model(
+    rt: &Runtime,
+    meta: &ModelMeta,
+    weights: &[f32],
+    batches: &[Batch],
+) -> Result<ProfileData> {
+    let artifact = meta.artifact("profile")?;
+    let v = meta.num_qtensors();
+    let mut variance = vec![0.0f64; v];
+    let mut absmax = vec![0.0f64; v];
+    let mut absmean = vec![0.0f64; v];
+    for b in batches {
+        let out = rt.execute(
+            artifact,
+            &[
+                TensorData::f32(weights, &[meta.param_size as i64]),
+                TensorData::i32(&b.tokens, &[b.batch as i64, b.seq as i64]),
+            ],
+        )?;
+        let stats = out[0].to_vec_f32()?; // [V, 3] row-major
+        for i in 0..v {
+            variance[i] += stats[i * 3] as f64;
+            absmax[i] = absmax[i].max(stats[i * 3 + 1] as f64);
+            absmean[i] += stats[i * 3 + 2] as f64;
+        }
+    }
+    let n = batches.len().max(1) as f64;
+    for i in 0..v {
+        variance[i] /= n;
+        absmean[i] /= n;
+    }
+    Ok(ProfileData { names: meta.qtensors.clone(), variance, absmax, absmean })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::manifest::ModelMeta;
+
+    #[test]
+    fn uniform_profile_shape() {
+        let m = ModelMeta::synthetic("t", 2, 32, 2, 512, 32, 4, "classifier", 64);
+        let p = ProfileData::uniform(&m, 4.0);
+        assert_eq!(p.names.len(), m.num_qtensors());
+        assert_eq!(p.absmax[0], 4.0);
+        assert!((p.variance_spread() - 1.0).abs() < 1e-12);
+    }
+}

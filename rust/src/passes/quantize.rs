@@ -1,0 +1,175 @@
+//! `quantize` pass (Table 2): turn a precision assignment into (a) IR
+//! value types and (b) the f32[V, 2] quant-config tensor the HLO eval
+//! artifacts consume. Supports uniform baselines (int8, MXInt8, MXInt4/6)
+//! and per-tensor mixed-precision vectors from the search pass; for fixed
+//! point, fraction widths are calibrated from profile absmax (§5.1's
+//! "int8" baseline) unless searched explicitly (MP int).
+
+use super::profile::ProfileData;
+use crate::formats::{fixed::calibrate_frac, FormatKind, Precision};
+use crate::frontend::ModelMeta;
+use crate::ir::Graph;
+
+/// A complete quantization assignment for one model.
+#[derive(Debug, Clone)]
+pub struct QuantSolution {
+    pub fmt: FormatKind,
+    /// Per-qtensor "bits" knob (mantissa / width / exponent bits).
+    pub bits: Vec<f32>,
+    /// Per-qtensor fraction widths (fixed point only).
+    pub fracs: Vec<f32>,
+}
+
+impl QuantSolution {
+    /// Uniform solution (e.g. int8, MXInt8, MXInt6, MXInt4 baselines).
+    /// Fixed point calibrates per-tensor fractions from the profile.
+    pub fn uniform(fmt: FormatKind, bits: f32, meta: &ModelMeta, profile: &ProfileData) -> Self {
+        let v = meta.num_qtensors();
+        let fracs = match fmt {
+            FormatKind::Int => {
+                (0..v).map(|i| calibrate_frac(bits, profile.absmax[i] as f32)).collect()
+            }
+            _ => vec![0.0; v],
+        };
+        Self { fmt, bits: vec![bits; v], fracs }
+    }
+
+    /// Decode a search vector. MXInt/BMF/BL: x = per-tensor bits (len V).
+    /// Int: x = per-tensor widths ++ per-tensor fraction *offsets* from
+    /// the calibrated value (len 2V) — the paper's N^2v fixed-point space.
+    pub fn from_search_vector(
+        fmt: FormatKind,
+        x: &[f64],
+        meta: &ModelMeta,
+        profile: &ProfileData,
+    ) -> Self {
+        let v = meta.num_qtensors();
+        match fmt {
+            FormatKind::Int => {
+                assert_eq!(x.len(), 2 * v, "int search space is 2V");
+                let bits: Vec<f32> = x[..v].iter().map(|b| b.round() as f32).collect();
+                let fracs: Vec<f32> = (0..v)
+                    .map(|i| {
+                        calibrate_frac(bits[i], profile.absmax[i] as f32) + x[v + i].round() as f32
+                    })
+                    .collect();
+                Self { fmt, bits, fracs }
+            }
+            _ => {
+                assert_eq!(x.len(), v, "block-format search space is V");
+                Self { fmt, bits: x.iter().map(|b| b.round() as f32).collect(), fracs: vec![0.0; v] }
+            }
+        }
+    }
+
+    /// Flatten into the f32[V, 2] row-major quant-config tensor.
+    pub fn to_qconfig(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.bits.len() * 2);
+        for i in 0..self.bits.len() {
+            out.push(self.bits[i]);
+            out.push(self.fracs.get(i).copied().unwrap_or(0.0));
+        }
+        out
+    }
+
+    /// Element-weighted average bitwidth of the model (the `b` in Eq. 4),
+    /// computed over the IR's searchable values.
+    pub fn average_bitwidth(&self, g: &Graph) -> f64 {
+        let mut bits = 0.0f64;
+        let mut elems = 0.0f64;
+        for &vid in &g.qtensor_values() {
+            let v = g.value(vid);
+            let qi = v.qtensor.unwrap();
+            let p = Precision::new(self.bits[qi], self.fracs.get(qi).copied().unwrap_or(0.0));
+            let e = v.ty.elements() as f64;
+            bits += e * p.average_bitwidth(self.fmt);
+            elems += e;
+        }
+        if elems == 0.0 {
+            0.0
+        } else {
+            bits / elems
+        }
+    }
+
+    /// Apply to the IR (types on searchable values).
+    pub fn apply(&self, g: &mut Graph) {
+        crate::frontend::apply_quant_to_graph(g, self.fmt, &self.bits, &self.fracs);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::manifest::ModelMeta;
+
+    fn setup() -> (ModelMeta, ProfileData) {
+        let m = ModelMeta::synthetic("t", 2, 32, 2, 512, 32, 4, "classifier", 64);
+        let p = ProfileData::uniform(&m, 4.0);
+        (m, p)
+    }
+
+    #[test]
+    fn uniform_mxint8() {
+        let (m, p) = setup();
+        let s = QuantSolution::uniform(FormatKind::MxInt, 7.0, &m, &p);
+        assert!(s.bits.iter().all(|&b| b == 7.0));
+        let mut g = crate::frontend::build_graph(&m);
+        s.apply(&mut g);
+        assert!((s.average_bitwidth(&g) - 8.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn int_calibration_from_profile() {
+        let (m, p) = setup();
+        let s = QuantSolution::uniform(FormatKind::Int, 8.0, &m, &p);
+        // absmax 4.0 -> int bits 2 -> frac = 8-1-2 = 5
+        assert!(s.fracs.iter().all(|&f| f == 5.0));
+    }
+
+    #[test]
+    fn search_vector_rounding() {
+        let (m, p) = setup();
+        let v = m.num_qtensors();
+        let x = vec![4.4f64; v];
+        let s = QuantSolution::from_search_vector(FormatKind::MxInt, &x, &m, &p);
+        assert!(s.bits.iter().all(|&b| b == 4.0));
+    }
+
+    #[test]
+    fn int_search_vector_has_2v_dims() {
+        let (m, p) = setup();
+        let v = m.num_qtensors();
+        let mut x = vec![6.0f64; v];
+        x.extend(vec![1.0f64; v]); // frac offset +1
+        let s = QuantSolution::from_search_vector(FormatKind::Int, &x, &m, &p);
+        assert!(s.fracs.iter().all(|&f| f == calibrate_frac(6.0, 4.0) + 1.0));
+    }
+
+    #[test]
+    fn qconfig_layout_interleaved() {
+        let (m, p) = setup();
+        let s = QuantSolution::uniform(FormatKind::Int, 8.0, &m, &p);
+        let q = s.to_qconfig();
+        assert_eq!(q.len(), 2 * m.num_qtensors());
+        assert_eq!(q[0], 8.0);
+        assert_eq!(q[1], 5.0);
+    }
+
+    #[test]
+    fn mixed_precision_lowers_average_bits() {
+        let (m, p) = setup();
+        let mut g = crate::frontend::build_graph(&m);
+        let hi = QuantSolution::uniform(FormatKind::MxInt, 7.0, &m, &p);
+        let mut bits = vec![7.0f32; m.num_qtensors()];
+        for b in bits.iter_mut().step_by(2) {
+            *b = 3.0;
+        }
+        let lo = QuantSolution { fmt: FormatKind::MxInt, bits, fracs: vec![0.0; m.num_qtensors()] };
+        hi.apply(&mut g);
+        let b_hi = hi.average_bitwidth(&g);
+        lo.apply(&mut g);
+        let b_lo = lo.average_bitwidth(&g);
+        assert!(b_lo < b_hi);
+    }
+}

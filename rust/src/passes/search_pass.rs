@@ -1,0 +1,167 @@
+//! `search` pass (Table 2, §4.3): resource-constrained mixed-precision
+//! search. Orchestrates one of the [`crate::search`] algorithms over the
+//! per-tensor precision space S' (= N^V for MXInt, N^2V for fixed point),
+//! scoring each trial with the `evaluate` pass. Optionally interleaves
+//! QAT fine-tune steps (small models, Fig. 6) — the "trainable IR" in
+//! action.
+
+use super::evaluate::{EvalResult, Evaluator};
+use super::profile::ProfileData;
+use super::quantize::QuantSolution;
+use crate::data::Task;
+use crate::formats::FormatKind;
+use crate::runtime::TensorData;
+use crate::search::{best_curve, run, Algorithm, Space, Trial};
+use anyhow::Result;
+
+#[derive(Debug, Clone)]
+pub struct SearchConfig {
+    pub algorithm: Algorithm,
+    pub trials: usize,
+    pub fmt: FormatKind,
+    pub seed: u64,
+    /// QAT fine-tune steps per trial (0 = PTQ).
+    pub qat_steps: usize,
+    pub qat_lr: f32,
+    /// Bits range searched per tensor.
+    pub bits_lo: f64,
+    pub bits_hi: f64,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        Self {
+            algorithm: Algorithm::Tpe,
+            trials: 64,
+            fmt: FormatKind::MxInt,
+            seed: 0,
+            qat_steps: 0,
+            qat_lr: 0.002,
+            bits_lo: 2.0,
+            bits_hi: 8.0,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SearchOutcome {
+    pub history: Vec<Trial>,
+    pub best: QuantSolution,
+    pub best_eval: EvalResult,
+    /// Fine-tuned weights if QAT ran (else None).
+    pub tuned_weights: Option<Vec<f32>>,
+}
+
+/// The search space for a format family (paper §4.1's reduction: MXInt
+/// searches V mantissa widths; fixed point searches 2V width+frac knobs).
+pub fn space_for(fmt: FormatKind, num_qtensors: usize, lo: f64, hi: f64) -> Space {
+    match fmt {
+        FormatKind::Int => {
+            let mut l = vec![lo.max(3.0); num_qtensors];
+            let mut h = vec![hi; num_qtensors];
+            l.extend(vec![-2.0; num_qtensors]); // frac offset from calibration
+            h.extend(vec![2.0; num_qtensors]);
+            Space::new(l, h)
+        }
+        _ => Space::uniform(num_qtensors, lo, hi),
+    }
+}
+
+/// Run the full search for one (model, task, format).
+pub fn run_search(
+    ev: &Evaluator,
+    profile: &ProfileData,
+    task: Task,
+    cfg: &SearchConfig,
+) -> Result<SearchOutcome> {
+    let v = ev.meta.num_qtensors();
+    let space = space_for(cfg.fmt, v, cfg.bits_lo, cfg.bits_hi);
+
+    // Optional per-trial QAT: fine-tune a scratch copy of the weights on
+    // the train split under the trial's quantization, then evaluate.
+    let qat_artifact = if cfg.qat_steps > 0 {
+        Some(ev.meta.artifact(&format!("qat_{}", cfg.fmt.name()))?.to_string())
+    } else {
+        None
+    };
+    let train_batches = if cfg.qat_steps > 0 {
+        crate::data::batches(task, 0, cfg.qat_steps, ev.meta.batch, ev.meta.seq_len)
+    } else {
+        Vec::new()
+    };
+
+    let mut best_value = f64::NEG_INFINITY;
+    let mut best: Option<(QuantSolution, EvalResult, Option<Vec<f32>>)> = None;
+
+    let history = run(cfg.algorithm, space, cfg.seed, cfg.trials, |x| {
+        let sol = QuantSolution::from_search_vector(cfg.fmt, x, ev.meta, profile);
+        // QAT fine-tune on a scratch copy
+        let tuned: Option<Vec<f32>> = qat_artifact.as_ref().map(|art| {
+            let mut w = ev.weights.to_vec();
+            let qcfg = sol.to_qconfig();
+            for b in &train_batches {
+                if let Ok(out) = ev.rt.execute(
+                    art,
+                    &[
+                        TensorData::f32(&w, &[ev.meta.param_size as i64]),
+                        TensorData::i32(&b.tokens, &[b.batch as i64, b.seq as i64]),
+                        TensorData::i32(&b.labels, &[b.batch as i64]),
+                        TensorData::f32(&qcfg, &[v as i64, 2]),
+                        TensorData::scalar_f32(cfg.qat_lr),
+                    ],
+                ) {
+                    if let Ok(new_w) = out[0].to_vec_f32() {
+                        w = new_w;
+                    }
+                }
+            }
+            w
+        });
+
+        let result = match &tuned {
+            Some(w) => ev.evaluate_with_weights(&sol, w),
+            None => ev.evaluate(&sol),
+        };
+        match result {
+            Ok(r) => {
+                if r.value > best_value {
+                    best_value = r.value;
+                    best = Some((sol, r.clone(), tuned));
+                }
+                (r.value, r.objectives)
+            }
+            Err(e) => {
+                eprintln!("trial failed: {e:#}");
+                (f64::NEG_INFINITY, vec![])
+            }
+        }
+    });
+
+    let (best_sol, best_eval, tuned_weights) =
+        best.ok_or_else(|| anyhow::anyhow!("no successful trials"))?;
+    Ok(SearchOutcome { history, best: best_sol, best_eval, tuned_weights })
+}
+
+/// Convenience: the incumbent-value curve for Fig. 4.
+pub fn outcome_curve(outcome: &SearchOutcome) -> Vec<f64> {
+    best_curve(&outcome.history)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn space_dims_per_format() {
+        assert_eq!(space_for(FormatKind::MxInt, 18, 2.0, 8.0).dims(), 18);
+        assert_eq!(space_for(FormatKind::Int, 18, 2.0, 8.0).dims(), 36);
+        assert_eq!(space_for(FormatKind::Bl, 18, 2.0, 8.0).dims(), 18);
+    }
+
+    #[test]
+    fn int_space_widths_at_least_3_bits() {
+        let s = space_for(FormatKind::Int, 4, 2.0, 8.0);
+        assert!(s.lo[..4].iter().all(|&l| l >= 3.0));
+        assert!(s.lo[4..].iter().all(|&l| l == -2.0));
+    }
+}

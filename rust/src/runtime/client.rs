@@ -1,0 +1,171 @@
+//! The PJRT client wrapper: artifact loading, executable cache, typed
+//! tensor transfer.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// A typed host tensor heading into (or out of) an execution.
+#[derive(Debug, Clone)]
+pub enum TensorData {
+    F32(Vec<f32>, Vec<i64>),
+    I32(Vec<i32>, Vec<i64>),
+}
+
+impl TensorData {
+    pub fn f32(data: &[f32], dims: &[i64]) -> Self {
+        debug_assert_eq!(data.len() as i64, dims.iter().product::<i64>().max(1));
+        TensorData::F32(data.to_vec(), dims.to_vec())
+    }
+
+    pub fn i32(data: &[i32], dims: &[i64]) -> Self {
+        TensorData::I32(data.to_vec(), dims.to_vec())
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        TensorData::F32(vec![v], vec![])
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(match self {
+            TensorData::F32(d, dims) => {
+                let l = xla::Literal::vec1(d);
+                if dims.is_empty() {
+                    l.reshape(&[])?
+                } else {
+                    l.reshape(dims)?
+                }
+            }
+            TensorData::I32(d, dims) => {
+                let l = xla::Literal::vec1(d);
+                l.reshape(dims)?
+            }
+        })
+    }
+}
+
+/// A host tensor already converted to the device literal format.
+///
+/// §Perf/L3: converting `TensorData` -> literal copies the buffer; the
+/// search loop executes the same weights (and often the same batches)
+/// hundreds of times, so the `Evaluator` prepares them once and reuses
+/// them across `execute_prepared` calls.
+pub struct PreparedTensor(xla::Literal);
+
+impl TensorData {
+    pub fn prepare(&self) -> Result<PreparedTensor> {
+        Ok(PreparedTensor(self.to_literal()?))
+    }
+}
+
+/// One output tensor of an execution.
+pub struct OutputTensor(xla::Literal);
+
+impl OutputTensor {
+    pub fn to_vec_f32(&self) -> Result<Vec<f32>> {
+        Ok(self.0.to_vec::<f32>()?)
+    }
+
+    pub fn to_vec_i32(&self) -> Result<Vec<i32>> {
+        Ok(self.0.to_vec::<i32>()?)
+    }
+
+    pub fn scalar_f32(&self) -> Result<f32> {
+        Ok(self.0.get_first_element::<f32>()?)
+    }
+
+    pub fn scalar_i32(&self) -> Result<i32> {
+        Ok(self.0.get_first_element::<i32>()?)
+    }
+}
+
+/// PJRT CPU runtime with a per-artifact executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    compiles: AtomicUsize,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            dir: artifacts_dir.to_path_buf(),
+            cache: Mutex::new(HashMap::new()),
+            compiles: AtomicUsize::new(0),
+        })
+    }
+
+    /// Number of HLO compilations performed (perf counter for tests).
+    pub fn compile_count(&self) -> usize {
+        self.compiles.load(Ordering::Relaxed)
+    }
+
+    fn executable(&self, artifact: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(artifact) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(artifact);
+        if !path.exists() {
+            return Err(anyhow!("artifact not found: {}", path.display()));
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {artifact}"))?;
+        self.compiles.fetch_add(1, Ordering::Relaxed);
+        let exe = std::sync::Arc::new(exe);
+        self.cache.lock().unwrap().insert(artifact.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact. All artifacts are lowered with
+    /// `return_tuple=True`, so the single result literal is a tuple that
+    /// we decompose into output tensors.
+    pub fn execute(&self, artifact: &str, inputs: &[TensorData]) -> Result<Vec<OutputTensor>> {
+        let exe = self.executable(artifact)?;
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        let first = result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| anyhow!("no output buffers from {artifact}"))?;
+        let lit = first.to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        Ok(parts.into_iter().map(OutputTensor).collect())
+    }
+
+    /// Execute with pre-converted literals (the search-loop hot path:
+    /// no per-call host-buffer copies for reused tensors).
+    pub fn execute_prepared(
+        &self,
+        artifact: &str,
+        inputs: &[&PreparedTensor],
+    ) -> Result<Vec<OutputTensor>> {
+        let exe = self.executable(artifact)?;
+        let literals: Vec<&xla::Literal> = inputs.iter().map(|t| &t.0).collect();
+        let result = exe.execute::<&xla::Literal>(&literals)?;
+        let first = result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| anyhow!("no output buffers from {artifact}"))?;
+        let lit = first.to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        Ok(parts.into_iter().map(OutputTensor).collect())
+    }
+
+    /// Pre-compile an artifact without executing (warm-up).
+    pub fn warm(&self, artifact: &str) -> Result<()> {
+        self.executable(artifact).map(|_| ())
+    }
+}

@@ -1,0 +1,103 @@
+//! PJRT runtime — loads the AOT-lowered HLO text artifacts and executes
+//! them on the CPU PJRT client (`xla` crate). This is the only place the
+//! Rust coordinator touches the models' numerics; Python never runs here.
+//!
+//! HLO *text* is the interchange format: jax >= 0.5 emits protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! Executables are compiled once per artifact and cached — compilation is
+//! 10-100x the cost of a single execution, and the search loop re-executes
+//! the same artifact with hundreds of different quant configs (§Perf/L3).
+
+pub mod client;
+
+pub use client::{OutputTensor, PreparedTensor, Runtime, TensorData};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::manifest::Manifest;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn quant_ref_artifact_matches_rust_formats() {
+        // The cross-layer golden test: the HLO emulation (L2, executed via
+        // PJRT) and the Rust formats module (L3) must agree on q(x).
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let manifest = Manifest::load(&artifacts_dir()).unwrap();
+        let rt = Runtime::new(&artifacts_dir()).unwrap();
+        let mut rng = crate::util::rng::Rng::new(42);
+        let x: Vec<f32> = (0..32 * 32).map(|_| rng.normal() as f32).collect();
+
+        for (fmt_name, file) in &manifest.quant_refs {
+            let fmt = crate::formats::FormatKind::from_name(fmt_name).unwrap();
+            let cfg = match fmt {
+                crate::formats::FormatKind::Int => [6.0f32, 2.0],
+                _ => [5.0f32, 0.0],
+            };
+            let out = rt
+                .execute(
+                    file,
+                    &[TensorData::f32(&x, &[32, 32]), TensorData::f32(&cfg, &[2])],
+                )
+                .unwrap();
+            let got = out[0].to_vec_f32().unwrap();
+            let mut want = x.clone();
+            crate::formats::quantize_2d(
+                fmt,
+                &mut want,
+                32,
+                32,
+                crate::formats::Precision::new(cfg[0], cfg[1]),
+            );
+            // Exact agreement except where XLA's approximate floor(log2)
+            // lands on the other side of a power of two (rare).
+            let mismatches = got
+                .iter()
+                .zip(want.iter())
+                .filter(|(a, b)| (*a - *b).abs() > 1e-6 * b.abs().max(1e-6))
+                .count();
+            assert!(
+                mismatches * 1000 < x.len(),
+                "{fmt_name}: {mismatches}/{} mismatches",
+                x.len()
+            );
+        }
+    }
+
+    #[test]
+    fn executable_cache_hits() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::new(&artifacts_dir()).unwrap();
+        let x = vec![0.5f32; 32 * 32];
+        let args = [TensorData::f32(&x, &[32, 32]), TensorData::f32(&[4.0, 0.0], &[2])];
+        rt.execute("quant_ref_mxint.hlo.txt", &args).unwrap();
+        let before = rt.compile_count();
+        rt.execute("quant_ref_mxint.hlo.txt", &args).unwrap();
+        assert_eq!(rt.compile_count(), before, "second execute must not recompile");
+    }
+
+    #[test]
+    fn missing_artifact_is_an_error() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::new(&artifacts_dir()).unwrap();
+        assert!(rt.execute("no_such_artifact.hlo.txt", &[]).is_err());
+    }
+}

@@ -1,0 +1,198 @@
+//! Search algorithms orchestrated by the `search` pass (paper §3.3,
+//! Fig. 4): Random Search, Quasi-Monte-Carlo (Halton), NSGA-II, and TPE.
+//! All are implemented from scratch (no external optimizer crates) and
+//! share one ask/tell interface so the pass can swap them freely — the
+//! paper's "orchestrate existing search algorithms" contribution.
+//!
+//! Convention: the searcher MAXIMIZES the scalar objective (Eq. 4).
+
+pub mod nsga2;
+pub mod qmc;
+pub mod random;
+pub mod tpe;
+
+use crate::util::rng::Rng;
+
+/// A bounded, real-valued search space; dimensions are rounded to integers
+/// by the objective where appropriate (mantissa bits, log2 tile sizes).
+#[derive(Debug, Clone)]
+pub struct Space {
+    pub lo: Vec<f64>,
+    pub hi: Vec<f64>,
+}
+
+impl Space {
+    pub fn new(lo: Vec<f64>, hi: Vec<f64>) -> Self {
+        assert_eq!(lo.len(), hi.len());
+        Self { lo, hi }
+    }
+
+    /// Uniform box `[lo, hi]^dims`.
+    pub fn uniform(dims: usize, lo: f64, hi: f64) -> Self {
+        Self { lo: vec![lo; dims], hi: vec![hi; dims] }
+    }
+
+    pub fn dims(&self) -> usize {
+        self.lo.len()
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> Vec<f64> {
+        (0..self.dims()).map(|i| rng.range(self.lo[i], self.hi[i])).collect()
+    }
+
+    pub fn clamp(&self, x: &mut [f64]) {
+        for i in 0..x.len() {
+            x[i] = x[i].clamp(self.lo[i], self.hi[i]);
+        }
+    }
+}
+
+/// One evaluated configuration.
+#[derive(Debug, Clone)]
+pub struct Trial {
+    pub x: Vec<f64>,
+    /// Scalarized objective (Eq. 4) — maximized.
+    pub value: f64,
+    /// Raw objective components (acc, k/b, k'θ, k''/A) for NSGA-II's
+    /// non-dominated sorting and for reporting.
+    pub objectives: Vec<f64>,
+}
+
+/// Ask/tell searcher interface.
+pub trait Searcher {
+    fn name(&self) -> &'static str;
+    /// Propose the next configuration.
+    fn ask(&mut self) -> Vec<f64>;
+    /// Report the evaluated trial.
+    fn tell(&mut self, trial: Trial);
+}
+
+/// Algorithm selector (Fig. 4 legend).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algorithm {
+    Random,
+    Qmc,
+    NsgaII,
+    Tpe,
+}
+
+impl Algorithm {
+    pub const ALL: [Algorithm; 4] = [Algorithm::Random, Algorithm::Qmc, Algorithm::NsgaII, Algorithm::Tpe];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::Random => "random",
+            Algorithm::Qmc => "qmc",
+            Algorithm::NsgaII => "nsga2",
+            Algorithm::Tpe => "tpe",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Algorithm> {
+        Algorithm::ALL.iter().copied().find(|a| a.name() == s)
+    }
+
+    pub fn build(&self, space: Space, seed: u64) -> Box<dyn Searcher> {
+        match self {
+            Algorithm::Random => Box::new(random::RandomSearch::new(space, seed)),
+            Algorithm::Qmc => Box::new(qmc::HaltonSearch::new(space)),
+            Algorithm::NsgaII => Box::new(nsga2::Nsga2::new(space, seed)),
+            Algorithm::Tpe => Box::new(tpe::Tpe::new(space, seed)),
+        }
+    }
+}
+
+/// Drive a searcher against an objective for `trials` evaluations,
+/// returning the history (used by Fig. 4 and the search pass).
+pub fn run<F>(alg: Algorithm, space: Space, seed: u64, trials: usize, mut objective: F) -> Vec<Trial>
+where
+    F: FnMut(&[f64]) -> (f64, Vec<f64>),
+{
+    let mut s = alg.build(space, seed);
+    let mut history = Vec::with_capacity(trials);
+    for _ in 0..trials {
+        let x = s.ask();
+        let (value, objectives) = objective(&x);
+        let t = Trial { x, value, objectives };
+        s.tell(t.clone());
+        history.push(t);
+    }
+    history
+}
+
+/// Best trial so far at each step (the Fig. 4 curves).
+pub fn best_curve(history: &[Trial]) -> Vec<f64> {
+    let mut best = f64::NEG_INFINITY;
+    history
+        .iter()
+        .map(|t| {
+            best = best.max(t.value);
+            best
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Smooth unimodal objective: -(x - 0.7)^2 summed, peak at 0.7^d.
+    fn sphere(x: &[f64]) -> (f64, Vec<f64>) {
+        let v = -x.iter().map(|xi| (xi - 0.7) * (xi - 0.7)).sum::<f64>();
+        (v, vec![v])
+    }
+
+    #[test]
+    fn all_algorithms_improve_on_sphere() {
+        for alg in Algorithm::ALL {
+            let hist = run(alg, Space::uniform(4, 0.0, 1.0), 1, 80, sphere);
+            let curve = best_curve(&hist);
+            assert!(
+                curve.last().unwrap() > &-0.08,
+                "{} final {}",
+                alg.name(),
+                curve.last().unwrap()
+            );
+            // curve is monotone nondecreasing
+            for w in curve.windows(2) {
+                assert!(w[1] >= w[0]);
+            }
+        }
+    }
+
+    #[test]
+    fn guided_beats_random_on_average() {
+        // TPE should beat random search on the sphere across seeds.
+        let mut tpe_sum = 0.0;
+        let mut rnd_sum = 0.0;
+        for seed in 0..5 {
+            let t = run(Algorithm::Tpe, Space::uniform(6, 0.0, 1.0), seed, 60, sphere);
+            let r = run(Algorithm::Random, Space::uniform(6, 0.0, 1.0), seed, 60, sphere);
+            tpe_sum += best_curve(&t).last().unwrap();
+            rnd_sum += best_curve(&r).last().unwrap();
+        }
+        assert!(tpe_sum > rnd_sum, "tpe {tpe_sum} vs random {rnd_sum}");
+    }
+
+    #[test]
+    fn proposals_stay_in_bounds() {
+        for alg in Algorithm::ALL {
+            let space = Space::uniform(3, 2.0, 8.0);
+            let mut s = alg.build(space.clone(), 3);
+            for i in 0..40 {
+                let x = s.ask();
+                for &xi in &x {
+                    assert!((2.0..=8.0).contains(&xi), "{} out of bounds {xi}", alg.name());
+                }
+                s.tell(Trial { x, value: -(i as f64), objectives: vec![] });
+            }
+        }
+    }
+
+    #[test]
+    fn algorithm_name_round_trip() {
+        for a in Algorithm::ALL {
+            assert_eq!(Algorithm::from_name(a.name()), Some(a));
+        }
+    }
+}

@@ -1,0 +1,269 @@
+//! NSGA-II (Deb et al. 2002) — the multi-objective evolutionary contender
+//! of Fig. 4. Full algorithm: fast non-dominated sorting, crowding
+//! distance, binary tournament on the crowded comparison operator, SBX
+//! crossover and polynomial mutation. Objectives are the components of
+//! Eq. (4) (each maximized); ties fall back to the scalar value.
+
+use super::{Searcher, Space, Trial};
+use crate::util::rng::Rng;
+
+const POP: usize = 12;
+const SBX_ETA: f64 = 10.0;
+const MUT_ETA: f64 = 20.0;
+
+pub struct Nsga2 {
+    space: Space,
+    rng: Rng,
+    /// Evaluated population of the current generation.
+    pop: Vec<Trial>,
+    /// Proposals not yet told back.
+    pending: Vec<Vec<f64>>,
+}
+
+impl Nsga2 {
+    pub fn new(space: Space, seed: u64) -> Self {
+        Self { space, rng: Rng::new(seed), pop: Vec::new(), pending: Vec::new() }
+    }
+
+    fn objectives<'a>(t: &'a Trial) -> &'a [f64] {
+        if t.objectives.is_empty() {
+            std::slice::from_ref(&t.value)
+        } else {
+            &t.objectives
+        }
+    }
+
+    fn dominates(a: &Trial, b: &Trial) -> bool {
+        let (oa, ob) = (Self::objectives(a), Self::objectives(b));
+        let mut strictly = false;
+        for (x, y) in oa.iter().zip(ob.iter()) {
+            if x < y {
+                return false;
+            }
+            if x > y {
+                strictly = true;
+            }
+        }
+        strictly
+    }
+
+    /// Fast non-dominated sort: rank per individual (0 = Pareto front).
+    fn ranks(pop: &[Trial]) -> Vec<usize> {
+        let n = pop.len();
+        let mut dominated_by = vec![0usize; n];
+        let mut dominates_list: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for i in 0..n {
+            for j in 0..n {
+                if i != j && Self::dominates(&pop[i], &pop[j]) {
+                    dominates_list[i].push(j);
+                    dominated_by[j] += 1;
+                }
+            }
+        }
+        let mut rank = vec![usize::MAX; n];
+        let mut front: Vec<usize> = (0..n).filter(|&i| dominated_by[i] == 0).collect();
+        let mut r = 0;
+        while !front.is_empty() {
+            let mut next = Vec::new();
+            for &i in &front {
+                rank[i] = r;
+                for &j in &dominates_list[i] {
+                    dominated_by[j] -= 1;
+                    if dominated_by[j] == 0 {
+                        next.push(j);
+                    }
+                }
+            }
+            front = next;
+            r += 1;
+        }
+        rank
+    }
+
+    /// Crowding distance within the whole set (per Deb, computed per rank
+    /// in selection; a global approximation is fine at POP=12).
+    fn crowding(pop: &[Trial]) -> Vec<f64> {
+        let n = pop.len();
+        let m = pop.iter().map(|t| Self::objectives(t).len()).max().unwrap_or(1);
+        let mut d = vec![0.0f64; n];
+        for k in 0..m {
+            let mut idx: Vec<usize> = (0..n).collect();
+            idx.sort_by(|&a, &b| {
+                let va = Self::objectives(&pop[a]).get(k).copied().unwrap_or(0.0);
+                let vb = Self::objectives(&pop[b]).get(k).copied().unwrap_or(0.0);
+                va.partial_cmp(&vb).unwrap()
+            });
+            let lo = Self::objectives(&pop[idx[0]]).get(k).copied().unwrap_or(0.0);
+            let hi = Self::objectives(&pop[idx[n - 1]]).get(k).copied().unwrap_or(0.0);
+            let span = (hi - lo).max(1e-12);
+            d[idx[0]] = f64::INFINITY;
+            d[idx[n - 1]] = f64::INFINITY;
+            for w in 1..n - 1 {
+                let prev = Self::objectives(&pop[idx[w - 1]]).get(k).copied().unwrap_or(0.0);
+                let next = Self::objectives(&pop[idx[w + 1]]).get(k).copied().unwrap_or(0.0);
+                d[idx[w]] += (next - prev) / span;
+            }
+        }
+        d
+    }
+
+    /// Binary tournament with the crowded-comparison operator.
+    fn select<'a>(&mut self, ranks: &[usize], crowd: &[f64]) -> usize {
+        let (a, b) = (self.rng.below(self.pop.len()), self.rng.below(self.pop.len()));
+        if ranks[a] < ranks[b] || (ranks[a] == ranks[b] && crowd[a] > crowd[b]) {
+            a
+        } else {
+            b
+        }
+    }
+
+    fn sbx_crossover(&mut self, p1: &[f64], p2: &[f64]) -> Vec<f64> {
+        let mut child = Vec::with_capacity(p1.len());
+        for i in 0..p1.len() {
+            let u = self.rng.uniform();
+            let beta = if u <= 0.5 {
+                (2.0 * u).powf(1.0 / (SBX_ETA + 1.0))
+            } else {
+                (1.0 / (2.0 * (1.0 - u))).powf(1.0 / (SBX_ETA + 1.0))
+            };
+            let c = if self.rng.uniform() < 0.5 {
+                0.5 * ((1.0 + beta) * p1[i] + (1.0 - beta) * p2[i])
+            } else {
+                0.5 * ((1.0 - beta) * p1[i] + (1.0 + beta) * p2[i])
+            };
+            child.push(c);
+        }
+        child
+    }
+
+    fn mutate(&mut self, x: &mut [f64]) {
+        let pm = 1.0 / x.len() as f64;
+        for i in 0..x.len() {
+            if self.rng.uniform() < pm {
+                let u = self.rng.uniform();
+                let span = self.space.hi[i] - self.space.lo[i];
+                let delta = if u < 0.5 {
+                    (2.0 * u).powf(1.0 / (MUT_ETA + 1.0)) - 1.0
+                } else {
+                    1.0 - (2.0 * (1.0 - u)).powf(1.0 / (MUT_ETA + 1.0))
+                };
+                x[i] += delta * span;
+            }
+        }
+        self.space.clamp(x);
+    }
+
+    /// Environmental selection: keep the best POP by (rank, crowding).
+    fn environmental_selection(&mut self) {
+        if self.pop.len() <= POP {
+            return;
+        }
+        let ranks = Self::ranks(&self.pop);
+        let crowd = Self::crowding(&self.pop);
+        let mut idx: Vec<usize> = (0..self.pop.len()).collect();
+        idx.sort_by(|&a, &b| {
+            ranks[a]
+                .cmp(&ranks[b])
+                .then(crowd[b].partial_cmp(&crowd[a]).unwrap_or(std::cmp::Ordering::Equal))
+        });
+        idx.truncate(POP);
+        let mut keep: Vec<bool> = vec![false; self.pop.len()];
+        for &i in &idx {
+            keep[i] = true;
+        }
+        let mut i = 0;
+        self.pop.retain(|_| {
+            let k = keep[i];
+            i += 1;
+            k
+        });
+    }
+}
+
+impl Searcher for Nsga2 {
+    fn name(&self) -> &'static str {
+        "nsga2"
+    }
+
+    fn ask(&mut self) -> Vec<f64> {
+        if let Some(x) = self.pending.pop() {
+            return x;
+        }
+        if self.pop.len() < POP {
+            // initial population: random
+            return self.space.sample(&mut self.rng);
+        }
+        // breed one offspring
+        let ranks = Self::ranks(&self.pop);
+        let crowd = Self::crowding(&self.pop);
+        let a = self.select(&ranks, &crowd);
+        let b = self.select(&ranks, &crowd);
+        let (pa, pb) = (self.pop[a].x.clone(), self.pop[b].x.clone());
+        let mut child = self.sbx_crossover(&pa, &pb);
+        self.mutate(&mut child);
+        child
+    }
+
+    fn tell(&mut self, trial: Trial) {
+        self.pop.push(trial);
+        self.environmental_selection();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trial(objs: Vec<f64>) -> Trial {
+        Trial { x: vec![0.0], value: objs.iter().sum(), objectives: objs }
+    }
+
+    #[test]
+    fn dominance_relation() {
+        let a = trial(vec![1.0, 1.0]);
+        let b = trial(vec![0.5, 0.5]);
+        let c = trial(vec![1.5, 0.2]);
+        assert!(Nsga2::dominates(&a, &b));
+        assert!(!Nsga2::dominates(&b, &a));
+        assert!(!Nsga2::dominates(&a, &c) && !Nsga2::dominates(&c, &a));
+    }
+
+    #[test]
+    fn nondominated_sort_ranks_fronts() {
+        let pop = vec![
+            trial(vec![1.0, 0.0]),
+            trial(vec![0.0, 1.0]),
+            trial(vec![0.4, 0.4]), // dominated by neither extreme? (0.4<1, 0.4>0) -> front 0
+            trial(vec![0.1, 0.1]), // dominated by (0.4,0.4)
+        ];
+        let ranks = Nsga2::ranks(&pop);
+        assert_eq!(ranks[0], 0);
+        assert_eq!(ranks[1], 0);
+        assert_eq!(ranks[2], 0);
+        assert_eq!(ranks[3], 1);
+    }
+
+    #[test]
+    fn crowding_prefers_extremes() {
+        let pop = vec![
+            trial(vec![0.0, 1.0]),
+            trial(vec![0.5, 0.5]),
+            trial(vec![0.52, 0.48]),
+            trial(vec![1.0, 0.0]),
+        ];
+        let c = Nsga2::crowding(&pop);
+        assert!(c[0].is_infinite() && c[3].is_infinite());
+        assert!(c[1] > 0.0 && c[2] > 0.0);
+    }
+
+    #[test]
+    fn population_bounded() {
+        let mut s = Nsga2::new(Space::uniform(2, 0.0, 1.0), 1);
+        for i in 0..60 {
+            let x = s.ask();
+            let v = -(x[0] - 0.5f64).powi(2);
+            s.tell(Trial { x, value: v, objectives: vec![v, i as f64 * 0.0] });
+        }
+        assert!(s.pop.len() <= POP);
+    }
+}

@@ -1,0 +1,41 @@
+//! Random search (Bergstra & Bengio) — the Fig. 4 baseline.
+
+use super::{Searcher, Space, Trial};
+use crate::util::rng::Rng;
+
+pub struct RandomSearch {
+    space: Space,
+    rng: Rng,
+}
+
+impl RandomSearch {
+    pub fn new(space: Space, seed: u64) -> Self {
+        Self { space, rng: Rng::new(seed) }
+    }
+}
+
+impl Searcher for RandomSearch {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn ask(&mut self) -> Vec<f64> {
+        self.space.sample(&mut self.rng)
+    }
+
+    fn tell(&mut self, _trial: Trial) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_cover_space() {
+        let mut s = RandomSearch::new(Space::uniform(1, 0.0, 1.0), 1);
+        let xs: Vec<f64> = (0..200).map(|_| s.ask()[0]).collect();
+        let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert!(lo < 0.1 && hi > 0.9);
+    }
+}

@@ -1,0 +1,241 @@
+//! The discrete-event core of the dataflow simulator.
+//!
+//! Time advances in cycles; each node is either idle or busy-until(t).
+//! A node fires when every predecessor channel holds at least one tile
+//! and every successor channel has space (ready/valid handshake with
+//! finite FIFOs). `sequential: true` emulates the non-dataflow schedule
+//! of Fig. 1e: a global lock allows only one busy node at a time.
+
+/// Static description of one pipeline node.
+#[derive(Debug, Clone)]
+pub struct NodeSpec {
+    pub name: String,
+    /// Indices of predecessor nodes (dataflow edges).
+    pub preds: Vec<usize>,
+    /// Extra buffer capacity per pred edge, in inference fractions —
+    /// the §4.2 "buffer insertion": reconvergent (skip/residual) edges
+    /// need a deep buffer or the pipeline deadlocks (one full inference
+    /// of credit = double buffering). Same length as `preds`; empty
+    /// means all zeros.
+    pub pred_buffer: Vec<f64>,
+    /// Initiation interval: cycles per tile.
+    pub ii: u64,
+    /// Tiles this node must emit per inference.
+    pub tiles_per_inference: u64,
+    /// Sources inject tiles without waiting on predecessors.
+    pub is_source: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub inferences: u64,
+    /// FIFO capacity (tiles) on every edge.
+    pub fifo_depth: u64,
+    /// Non-dataflow (Von Neumann) schedule: one node busy at a time.
+    pub sequential: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// Total cycles until the last sink tile.
+    pub cycles: u64,
+    /// Per-node busy cycles (utilization = busy / cycles).
+    pub busy: Vec<u64>,
+    /// Per-node stall cycles spent ready-but-blocked on backpressure.
+    pub stalled: Vec<u64>,
+}
+
+/// Run the simulation to completion.
+///
+/// Channels carry *inference fractions*: a producer firing deposits
+/// `1/T_p` (its tile as a fraction of one inference), a consumer firing
+/// needs `1/T_c`. This lets edges with different tile granularities (the
+/// normal case after `parallelize`) rate-match instead of deadlocking.
+pub fn simulate(nodes: &[NodeSpec], cfg: &SimConfig) -> SimReport {
+    const EPS: f64 = 1e-9;
+    let n = nodes.len();
+    // fifo[i][slot] = inference-fraction queued into node i's pred slot
+    let mut fifo: Vec<Vec<f64>> = nodes.iter().map(|nd| vec![0.0; nd.preds.len()]).collect();
+    // successor map: (consumer, slot) pairs per producer
+    let mut succs: Vec<Vec<(usize, usize)>> = vec![Vec::new(); n];
+    for (i, nd) in nodes.iter().enumerate() {
+        for (slot, &p) in nd.preds.iter().enumerate() {
+            succs[p].push((i, slot));
+        }
+    }
+    let frac = |i: usize| 1.0 / nodes[i].tiles_per_inference.max(1) as f64;
+    // capacity per edge: `fifo_depth` tiles of the coarser granularity,
+    // plus any inserted buffer (reconvergent/skip edges)
+    let cap = |p: usize, c: usize, slot: usize| {
+        let buf = nodes[c].pred_buffer.get(slot).copied().unwrap_or(0.0);
+        cfg.fifo_depth as f64 * frac(p).max(frac(c)) + buf
+    };
+    let total_tiles: Vec<u64> =
+        nodes.iter().map(|nd| nd.tiles_per_inference * cfg.inferences).collect();
+    let mut emitted = vec![0u64; n];
+    let mut busy_until = vec![0u64; n];
+    let mut busy = vec![0u64; n];
+    let mut stalled = vec![0u64; n];
+
+    let mut t: u64 = 0;
+    loop {
+        if emitted.iter().zip(total_tiles.iter()).all(|(e, t)| e >= t) {
+            break;
+        }
+        let one_busy = busy_until.iter().any(|&b| b > t);
+        let mut fired_any = false;
+        for i in 0..n {
+            if emitted[i] >= total_tiles[i] || busy_until[i] > t {
+                continue;
+            }
+            if cfg.sequential && one_busy {
+                continue;
+            }
+            let need = frac(i);
+            let inputs_ok =
+                nodes[i].is_source || fifo[i].iter().all(|&q| q + EPS >= need);
+            // output space available? (finished consumers stop applying
+            // backpressure — their stream is closed)
+            let outputs_ok = succs[i].iter().all(|&(c, slot)| {
+                emitted[c] >= total_tiles[c] || fifo[c][slot] + frac(i) <= cap(i, c, slot) + EPS
+            });
+            if inputs_ok && outputs_ok {
+                // fire: consume, occupy, emit
+                if !nodes[i].is_source {
+                    for q in fifo[i].iter_mut() {
+                        *q -= need;
+                    }
+                }
+                busy_until[i] = t + nodes[i].ii;
+                busy[i] += nodes[i].ii;
+                emitted[i] += 1;
+                for &(c, slot) in &succs[i] {
+                    fifo[c][slot] += frac(i);
+                }
+                fired_any = true;
+                if cfg.sequential {
+                    break; // only one firing per scheduling step
+                }
+            } else if inputs_ok || outputs_ok {
+                stalled[i] += 1;
+            }
+        }
+        // advance: to the next completion if nothing can fire now; a state
+        // with no firable node, no busy node, and work remaining is a true
+        // handshake deadlock (a wiring bug, not a long pipeline).
+        if fired_any {
+            t += 1;
+        } else {
+            match busy_until.iter().filter(|&&b| b > t).min().copied() {
+                Some(next) => t = next,
+                None => panic!(
+                    "dataflow deadlock at t={t}: emitted={emitted:?}, totals={total_tiles:?}"
+                ),
+            }
+        }
+    }
+    let cycles = busy_until.iter().copied().max().unwrap_or(t).max(t);
+    SimReport { cycles, busy, stalled }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain(iis: &[u64], tiles: u64) -> Vec<NodeSpec> {
+        iis.iter()
+            .enumerate()
+            .map(|(i, &ii)| NodeSpec {
+                name: format!("n{i}"),
+                preds: if i == 0 { vec![] } else { vec![i - 1] },
+                pred_buffer: vec![],
+                ii,
+                tiles_per_inference: tiles,
+                is_source: i == 0,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn single_node_takes_ii_times_tiles() {
+        let r = simulate(&chain(&[5], 4), &SimConfig { inferences: 1, fifo_depth: 2, sequential: false });
+        assert!(r.cycles >= 5 * 4 && r.cycles <= 5 * 4 + 5, "{}", r.cycles);
+    }
+
+    #[test]
+    fn pipeline_throughput_set_by_slowest_stage() {
+        // stages 1,4,1: steady state ~4 cycles per tile.
+        let tiles = 50;
+        let r = simulate(&chain(&[1, 4, 1], tiles), &SimConfig { inferences: 1, fifo_depth: 4, sequential: false });
+        let per_tile = r.cycles as f64 / tiles as f64;
+        assert!(per_tile < 5.0 && per_tile >= 4.0, "{per_tile}");
+    }
+
+    #[test]
+    fn sequential_is_sum_of_stages() {
+        let tiles = 10;
+        let df = simulate(&chain(&[2, 2, 2], tiles), &SimConfig { inferences: 1, fifo_depth: 4, sequential: false });
+        let seq = simulate(&chain(&[2, 2, 2], tiles), &SimConfig { inferences: 1, fifo_depth: 4, sequential: true });
+        // sequential: 3 stages * 2 cycles * 10 tiles = 60; dataflow ~ 24.
+        assert!(seq.cycles >= 58, "{}", seq.cycles);
+        assert!(df.cycles < seq.cycles / 2, "df {} seq {}", df.cycles, seq.cycles);
+    }
+
+    #[test]
+    fn deeper_fifos_reduce_stalls() {
+        // bursty producer into slow consumer: depth-1 stalls more.
+        let nodes = chain(&[1, 6], 40);
+        let shallow = simulate(&nodes, &SimConfig { inferences: 1, fifo_depth: 1, sequential: false });
+        let deep = simulate(&nodes, &SimConfig { inferences: 1, fifo_depth: 16, sequential: false });
+        assert!(deep.stalled[0] <= shallow.stalled[0]);
+        assert!(deep.cycles <= shallow.cycles);
+    }
+
+    #[test]
+    fn fork_join_topology() {
+        // 0 -> {1, 2} -> 3
+        let nodes = vec![
+            NodeSpec { name: "src".into(), preds: vec![], pred_buffer: vec![], ii: 1, tiles_per_inference: 20, is_source: true },
+            NodeSpec { name: "a".into(), preds: vec![0], pred_buffer: vec![], ii: 2, tiles_per_inference: 20, is_source: false },
+            NodeSpec { name: "b".into(), preds: vec![0], pred_buffer: vec![], ii: 3, tiles_per_inference: 20, is_source: false },
+            NodeSpec { name: "join".into(), preds: vec![1, 2], pred_buffer: vec![], ii: 1, tiles_per_inference: 20, is_source: false },
+        ];
+        let r = simulate(&nodes, &SimConfig { inferences: 1, fifo_depth: 4, sequential: false });
+        // bounded by the slowest branch (ii=3): ~60 cycles + fill
+        assert!(r.cycles >= 60 && r.cycles < 90, "{}", r.cycles);
+    }
+
+    #[test]
+    fn reconvergent_edge_deadlocks_without_buffer_and_runs_with_it() {
+        // 0 -> 1 -> 2(join), and a skip edge 0 -> 2. Node 0 emits many
+        // fine tiles; without buffer credit on the skip edge it fills and
+        // blocks node 0 before node 2 can start (residual deadlock).
+        // src emits 64 fine tiles; mid consumes a quarter-inference per
+        // firing (needs 16 src tiles); join consumes fine tiles from BOTH.
+        // The skip fifo (4 tiles deep = 1/16 inference) fills long before
+        // mid's first output arrives -> src blocks -> deadlock.
+        let build = |buf: f64| {
+            vec![
+                NodeSpec { name: "src".into(), preds: vec![], pred_buffer: vec![], ii: 1, tiles_per_inference: 64, is_source: true },
+                NodeSpec { name: "mid".into(), preds: vec![0], pred_buffer: vec![0.0], ii: 16, tiles_per_inference: 4, is_source: false },
+                NodeSpec { name: "join".into(), preds: vec![1, 0], pred_buffer: vec![0.0, buf], ii: 1, tiles_per_inference: 64, is_source: false },
+            ]
+        };
+        // with one inference of buffer on the skip edge, it completes
+        let ok = simulate(&build(1.0), &SimConfig { inferences: 2, fifo_depth: 4, sequential: false });
+        assert!(ok.cycles > 0);
+        // without it, it deadlocks (documented failure mode)
+        let res = std::panic::catch_unwind(|| {
+            simulate(&build(0.0), &SimConfig { inferences: 2, fifo_depth: 4, sequential: false })
+        });
+        assert!(res.is_err(), "expected deadlock without buffer insertion");
+    }
+
+    #[test]
+    fn utilization_of_bottleneck_is_high() {
+        let tiles = 100;
+        let r = simulate(&chain(&[1, 4, 1], tiles), &SimConfig { inferences: 1, fifo_depth: 8, sequential: false });
+        let util = r.busy[1] as f64 / r.cycles as f64;
+        assert!(util > 0.9, "bottleneck utilization {util}");
+    }
+}

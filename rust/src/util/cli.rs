@@ -1,0 +1,106 @@
+//! Minimal CLI argument parsing (no `clap` offline): subcommand + flags.
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and free args.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub free: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(rest.to_string(), v);
+                } else {
+                    out.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a);
+            } else {
+                out.free.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("search --model opt-125m-sim --trials 64 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("search"));
+        assert_eq!(a.get("model"), Some("opt-125m-sim"));
+        assert_eq!(a.get_usize("trials", 0), 64);
+        assert!(a.has("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("emit --out=designs --k=0.5");
+        assert_eq!(a.get("out"), Some("designs"));
+        assert_eq!(a.get_f64("k", 0.0), 0.5);
+    }
+
+    #[test]
+    fn boolean_flag_before_flag() {
+        let a = parse("run --force --model m");
+        assert!(a.has("force"));
+        assert_eq!(a.get("model"), Some("m"));
+    }
+
+    #[test]
+    fn free_args_after_subcommand() {
+        let a = parse("bench fig5 fig7");
+        assert_eq!(a.free, vec!["fig5", "fig7"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.get_usize("missing", 7), 7);
+        assert_eq!(a.get_or("missing", "d"), "d");
+    }
+}

@@ -1,0 +1,88 @@
+//! Scoped parallel-map helper over std threads (no `rayon` offline).
+//!
+//! The search pass evaluates independent trials and the benches sweep
+//! independent models; `par_map` fans work over a bounded number of OS
+//! threads using `std::thread::scope`, preserving input order.
+
+/// Map `f` over `items` with up to `threads` worker threads.
+/// Results are returned in input order. `f` must be `Sync` (called from
+/// several threads) and `T`/`R` are moved/collected per item.
+pub fn par_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        return items.into_iter().map(f).collect();
+    }
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+
+    let work: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let out: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = work[i].lock().unwrap().take().unwrap();
+                let r = f(item);
+                *out[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    out.into_iter().map(|m| m.into_inner().unwrap().unwrap()).collect()
+}
+
+/// Default worker count: physical parallelism minus one, at least 1.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get().saturating_sub(1).max(1)).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let xs: Vec<u64> = (0..100).collect();
+        let ys = par_map(xs, 8, |x| x * 2);
+        assert_eq!(ys, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_fallback() {
+        let ys = par_map(vec![1, 2, 3], 1, |x| x + 1);
+        assert_eq!(ys, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let ys: Vec<i32> = par_map(Vec::<i32>::new(), 4, |x| x);
+        assert!(ys.is_empty());
+    }
+
+    #[test]
+    fn actually_runs_concurrently() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static PEAK: AtomicUsize = AtomicUsize::new(0);
+        static LIVE: AtomicUsize = AtomicUsize::new(0);
+        let xs: Vec<u64> = (0..16).collect();
+        par_map(xs, 4, |_| {
+            let l = LIVE.fetch_add(1, Ordering::SeqCst) + 1;
+            PEAK.fetch_max(l, Ordering::SeqCst);
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            LIVE.fetch_sub(1, Ordering::SeqCst);
+        });
+        assert!(PEAK.load(Ordering::SeqCst) > 1);
+    }
+}

@@ -1,0 +1,205 @@
+//! Property-based tests (in-tree harness, `mase::util::prop`) over the
+//! pure substrates: format invariants, IR round-trips, scheduler
+//! invariants, search-space discipline, simulator/regression consistency.
+
+use mase::formats::{self, FormatKind, Precision};
+use mase::frontend::{build_graph, manifest::ModelMeta};
+use mase::hw::Device;
+use mase::ir::{parser::parse_graph, print_graph, verify};
+use mase::passes::{parallelize, ProfileData, QuantSolution};
+use mase::search::{Algorithm, Space, Trial};
+use mase::util::prop::prop_check;
+
+fn meta_for(layers: usize, d_model: usize) -> ModelMeta {
+    ModelMeta::synthetic("prop", layers, d_model, 2, 512, 32, 4, "classifier", 64)
+}
+
+#[test]
+fn prop_all_formats_idempotent() {
+    prop_check(60, |g| {
+        let fmt = *g.choice(&[FormatKind::MxInt, FormatKind::Bmf, FormatKind::Bl, FormatKind::Int, FormatKind::Fp8]);
+        let bits = g.int(1, 10) as f32;
+        let frac = g.int(0, 6) as f32;
+        let x = g.vec_f32_scaled(32 * 8);
+        let mut q1 = x.clone();
+        formats::quantize_2d(fmt, &mut q1, 32, 8, Precision::new(bits, frac));
+        let mut q2 = q1.clone();
+        formats::quantize_2d(fmt, &mut q2, 32, 8, Precision::new(bits, frac));
+        if q1 == q2 {
+            Ok(())
+        } else {
+            let i = q1.iter().zip(&q2).position(|(a, b)| a != b).unwrap();
+            Err(format!("{} not idempotent at {i}: {} -> {}", fmt.name(), q1[i], q2[i]))
+        }
+    });
+}
+
+#[test]
+fn prop_quantization_error_monotone_in_bits() {
+    prop_check(40, |g| {
+        let fmt = *g.choice(&[FormatKind::MxInt, FormatKind::Int]);
+        let x = g.vec_f32_scaled(32 * 8);
+        let err = |bits: f32| {
+            let mut q = x.clone();
+            let frac = if fmt == FormatKind::Int { bits - 3.0 } else { 0.0 };
+            formats::quantize_2d(fmt, &mut q, 32, 8, Precision::new(bits, frac));
+            x.iter().zip(&q).map(|(a, b)| ((a - b) as f64).abs()).sum::<f64>()
+        };
+        let lo = g.int(2, 5) as f32;
+        let (e_lo, e_hi) = (err(lo), err(lo + 3.0));
+        if e_hi <= e_lo + 1e-6 {
+            Ok(())
+        } else {
+            Err(format!("{}: err({lo})={e_lo} < err({})={e_hi}", fmt.name(), lo + 3.0))
+        }
+    });
+}
+
+#[test]
+fn prop_ir_print_parse_round_trip() {
+    prop_check(20, |g| {
+        let layers = g.int(1, 4) as usize;
+        let d = 16 * g.int(1, 4) as usize;
+        let meta = meta_for(layers, d);
+        let mut graph = build_graph(&meta);
+        // random quantization applied
+        let bits: Vec<f32> = (0..meta.num_qtensors()).map(|_| g.int(1, 8) as f32).collect();
+        QuantSolution { fmt: FormatKind::MxInt, bits, fracs: vec![0.0; meta.num_qtensors()] }
+            .apply(&mut graph);
+        let text = print_graph(&graph);
+        let parsed = parse_graph(&text).map_err(|e| e.to_string())?;
+        let text2 = print_graph(&parsed);
+        if text == text2 {
+            Ok(())
+        } else {
+            Err("print->parse->print not stable".to_string())
+        }
+    });
+}
+
+#[test]
+fn prop_built_graphs_always_verify() {
+    prop_check(25, |g| {
+        let layers = g.int(1, 6) as usize;
+        let heads = [1usize, 2, 4][g.int(0, 2) as usize];
+        let d = 16 * heads.max(1) * g.int(1, 3) as usize;
+        let meta = ModelMeta::synthetic("v", layers, d, heads, 512, 32, 4, "classifier", 64);
+        let graph = build_graph(&meta);
+        let errs = verify(&graph);
+        if errs.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("{errs:?}"))
+        }
+    });
+}
+
+#[test]
+fn prop_parallelize_respects_budget_and_improves() {
+    prop_check(15, |g| {
+        let meta = meta_for(g.int(1, 4) as usize, 32 * g.int(1, 3) as usize);
+        let profile = ProfileData::uniform(&meta, 4.0);
+        let bits: Vec<f64> = (0..meta.num_qtensors()).map(|_| g.int(2, 8) as f64).collect();
+        let sol = QuantSolution::from_search_vector(FormatKind::MxInt, &bits, &meta, &profile);
+        let mut graph = build_graph(&meta);
+        sol.apply(&mut graph);
+        let frac = g.f32_in(0.05, 0.8) as f64;
+        let device = Device::u250();
+        let dp = parallelize(&mut graph, &device, frac);
+        if dp.area_luts > device.luts * frac * 1.001 {
+            return Err(format!("area {} exceeds budget {}", dp.area_luts, device.luts * frac));
+        }
+        if !(dp.throughput > 0.0 && dp.throughput.is_finite()) {
+            return Err(format!("bad throughput {}", dp.throughput));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_topo_order_valid_for_random_built_graphs() {
+    prop_check(20, |g| {
+        let meta = meta_for(g.int(1, 5) as usize, 32);
+        let graph = build_graph(&meta);
+        let order = graph.topo_order();
+        if order.len() != graph.ops.len() {
+            return Err("topo order incomplete".into());
+        }
+        let pos: std::collections::HashMap<_, _> =
+            order.iter().enumerate().map(|(i, o)| (*o, i)).collect();
+        for op in &graph.ops {
+            for &a in &op.args {
+                if let Some(p) = graph.value(a).producer {
+                    if pos[&p] >= pos[&op.id] {
+                        return Err(format!("edge violated: {:?} -> {:?}", p, op.id));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_searchers_respect_bounds_under_adversarial_feedback() {
+    prop_check(12, |g| {
+        let dims = g.int(2, 20) as usize;
+        let lo = g.f32_in(0.0, 4.0) as f64;
+        let hi = lo + g.f32_in(1.0, 6.0) as f64;
+        let alg = *g.choice(&Algorithm::ALL);
+        let mut s = alg.build(Space::new(vec![lo; dims], vec![hi; dims]), g.int(0, 1000) as u64);
+        for i in 0..30 {
+            let x = s.ask();
+            for &xi in &x {
+                if !(lo - 1e-9..=hi + 1e-9).contains(&xi) {
+                    return Err(format!("{} out of bounds: {xi} not in [{lo},{hi}]", alg.name()));
+                }
+            }
+            // adversarial: constant, NaN-free extreme values
+            let v = if i % 3 == 0 { -1e9 } else { 1e9 };
+            s.tell(Trial { x, value: v, objectives: vec![v] });
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_average_bitwidth_within_knob_range() {
+    prop_check(20, |g| {
+        let meta = meta_for(2, 32);
+        let profile = ProfileData::uniform(&meta, 4.0);
+        let bits: Vec<f64> = (0..meta.num_qtensors()).map(|_| g.int(2, 8) as f64).collect();
+        let sol = QuantSolution::from_search_vector(FormatKind::MxInt, &bits, &meta, &profile);
+        let mut graph = build_graph(&meta);
+        sol.apply(&mut graph);
+        let b = sol.average_bitwidth(&graph);
+        let lo = bits.iter().cloned().fold(f64::MAX, f64::min) + 1.0; // +sign
+        let hi = bits.iter().cloned().fold(f64::MIN, f64::max) + 1.0 + 0.25; // +shared
+        if b >= lo - 1e-9 && b <= hi + 1e-9 {
+            Ok(())
+        } else {
+            Err(format!("avg bits {b} outside [{lo},{hi}]"))
+        }
+    });
+}
+
+#[test]
+fn prop_simulator_within_bounds_of_regression() {
+    prop_check(8, |g| {
+        let meta = meta_for(g.int(1, 3) as usize, 32);
+        let profile = ProfileData::uniform(&meta, 4.0);
+        let bits = vec![g.int(2, 8) as f64; meta.num_qtensors()];
+        let sol = QuantSolution::from_search_vector(FormatKind::MxInt, &bits, &meta, &profile);
+        let mut graph = build_graph(&meta);
+        sol.apply(&mut graph);
+        let device = Device::u250();
+        let dp = parallelize(&mut graph, &device, 0.3);
+        let sim = mase::sim::simulated_throughput(&graph, device.clock_hz, 6);
+        let ratio = sim / dp.throughput;
+        if ratio > 0.2 && ratio < 3.0 {
+            Ok(())
+        } else {
+            Err(format!("sim/regression ratio {ratio} (sim {sim}, reg {})", dp.throughput))
+        }
+    });
+}
