@@ -38,6 +38,17 @@ SHARED_EXP_MAX = 127.0
 _EPS = 1e-30
 
 
+def _round_knob(v):
+    """Round a real-valued precision knob to the nearest integer, half
+    AWAY from zero — matching Rust's ``f64::round`` so the L2 emulation
+    and the L3 ``formats`` module agree at half-integer knobs (``jnp.round``
+    alone is ties-to-even: 4.5 -> 4, but the search convention gives 5).
+    Value rounding inside the quantizers stays ties-to-even on purpose.
+    """
+    v = jnp.asarray(v, jnp.float32)
+    return jnp.sign(v) * jnp.floor(jnp.abs(v) + 0.5)
+
+
 def _pow2(e):
     """Exact 2^e for integer-valued ``e`` (possibly traced).
 
@@ -98,9 +109,10 @@ def mxint_quantize(x, mantissa_bits, block=BLOCK_SHAPE):
 
     Element value = sign * M * 2^(E + 1 - m) with integer M in
     [0, 2^m - 1] and E the block-shared exponent. ``mantissa_bits`` may be
-    a traced scalar (float); it is clamped to >= 1.
+    a traced scalar (float); it is rounded to the nearest integer (the
+    search convention: real-valued precision dims round) and clamped >= 1.
     """
-    m = jnp.maximum(jnp.asarray(mantissa_bits, jnp.float32), 1.0)
+    m = jnp.maximum(_round_knob(mantissa_bits), 1.0)
     xb, shape = _to_blocks(x, block)
     e = _shared_exponent(xb)
     scale = _pow2(e + 1.0 - m)
@@ -119,8 +131,8 @@ def bmf_quantize(x, mantissa_bits, exp_bits=2.0, block=BLOCK_SHAPE):
     flush toward zero — the failure mode behind the paper's catastrophic
     BMF8 perplexity on LLaMA (Table 1).
     """
-    m = jnp.maximum(jnp.asarray(mantissa_bits, jnp.float32), 1.0)
-    eb = jnp.maximum(jnp.asarray(exp_bits, jnp.float32), 1.0)
+    m = jnp.maximum(_round_knob(mantissa_bits), 1.0)
+    eb = jnp.maximum(_round_knob(exp_bits), 1.0)
     xb, shape = _to_blocks(x, block)
     bias = _shared_exponent(xb)  # shared bias anchors the top of the range
     absx = jnp.abs(xb)
@@ -148,7 +160,7 @@ def bl_quantize(x, exp_el_bits=7.0, block=BLOCK_SHAPE):
     representable magnitudes are { 2^(bias - k) : 0 <= k < 2^exp_el_bits }
     plus zero. Values are always powers of two (paper Fig. 1c).
     """
-    eb = jnp.maximum(jnp.asarray(exp_el_bits, jnp.float32), 1.0)
+    eb = jnp.maximum(_round_knob(exp_el_bits), 1.0)
     xb, shape = _to_blocks(x, block)
     bias = _shared_exponent(xb)
     absx = jnp.maximum(jnp.abs(xb), _EPS)
@@ -168,8 +180,8 @@ def int_quantize(x, width, frac):
     be traced. value = clamp(round(x * 2^f), -2^(w-1), 2^(w-1)-1) / 2^f.
     No dynamic range: this is what loses accuracy in deep layers (Fig. 1a).
     """
-    w = jnp.maximum(jnp.asarray(width, jnp.float32), 2.0)
-    f = jnp.asarray(frac, jnp.float32)
+    w = jnp.maximum(_round_knob(width), 2.0)
+    f = _round_knob(frac)
     scale = _pow2(-f)
     qmax = _pow2(w - 1.0) - 1.0
     return jnp.clip(jnp.round(x / scale), -qmax - 1.0, qmax) * scale

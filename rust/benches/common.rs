@@ -31,6 +31,19 @@ pub fn session() -> Session {
     )
 }
 
+/// Like [`session`] but for benches with artifact-free sections: returns
+/// `None` (with a printed note) instead of panicking, so the parts that
+/// only need the pure-Rust substrate still run.
+pub fn try_session() -> Option<Session> {
+    match Session::open(&Session::default_dir()) {
+        Ok(s) => Some(s),
+        Err(e) => {
+            println!("[artifacts unavailable: {e:#} — skipping PJRT-backed sections]");
+            None
+        }
+    }
+}
+
 /// The ten classifier simulants, optionally filtered by MASE_MODELS.
 pub fn classifier_names(session: &Session) -> Vec<String> {
     let filter: Option<Vec<String>> = std::env::var("MASE_MODELS")

@@ -1,7 +1,8 @@
 //! Fig. 4: four search algorithms (Random, NSGA-II, QMC, TPE) exploring
 //! resource-constrained mixed-precision MXInt quantization of OPT-125M-sim
 //! on sst2-sim, with the SW objective acc + k/b. Reports the incumbent
-//! cost over trials and each algorithm's wall-clock.
+//! cost over trials and each algorithm's wall-clock, serial (1 thread,
+//! batch 1) vs parallel (batched ask/tell over the worker pool).
 
 #[path = "common.rs"]
 mod common;
@@ -9,6 +10,7 @@ mod common;
 use mase::data::Task;
 use mase::passes::{run_search, Objective, SearchConfig};
 use mase::search::{best_curve, Algorithm};
+use mase::util::pool::threads_from_env;
 use mase::util::{Stopwatch, Table};
 
 fn main() {
@@ -21,9 +23,22 @@ fn main() {
     ev.objective = Objective::sw_only();
 
     let trials = common::trials().max(32);
+    let workers = threads_from_env(0);
     let mut curves = Vec::new();
     let mut times = Vec::new();
     for alg in Algorithm::ALL {
+        // serial reference: one proposal per round, evaluated in-line
+        let sw = Stopwatch::start();
+        let serial = run_search(
+            &ev,
+            &profile,
+            Task::Sst2,
+            &SearchConfig { algorithm: alg, trials, threads: 1, batch: 1, ..Default::default() },
+        )
+        .expect("serial search failed");
+        let serial_s = sw.secs();
+
+        // parallel batched driver (the default config: batch 8, auto workers)
         let sw = Stopwatch::start();
         let outcome = run_search(
             &ev,
@@ -31,8 +46,17 @@ fn main() {
             Task::Sst2,
             &SearchConfig { algorithm: alg, trials, ..Default::default() },
         )
-        .expect("search failed");
-        times.push((alg, sw.secs(), outcome.best_eval.accuracy, outcome.best_eval.avg_bits));
+        .expect("parallel search failed");
+        let parallel_s = sw.secs();
+
+        times.push((
+            alg,
+            serial_s,
+            parallel_s,
+            outcome.best_eval.accuracy,
+            outcome.best_eval.avg_bits,
+        ));
+        let _ = serial; // serial history differs only by batch cadence
         curves.push((alg, best_curve(&outcome.history)));
     }
 
@@ -51,9 +75,23 @@ fn main() {
     }
     println!("incumbent objective (acc + k/b, maximized):\n{}", t.render());
 
-    let mut t2 = Table::new(vec!["algorithm", "search_time_s", "best_acc", "best_avg_bits"]);
-    for (a, s, acc, bits) in &times {
-        t2.row(vec![a.name().to_string(), format!("{s:.1}"), format!("{acc:.4}"), format!("{bits:.2}")]);
+    let mut t2 = Table::new(vec![
+        "algorithm".to_string(),
+        "serial_s".to_string(),
+        format!("parallel_s ({workers} thr)"),
+        "speedup".to_string(),
+        "best_acc".to_string(),
+        "best_avg_bits".to_string(),
+    ]);
+    for (a, s1, sp, acc, bits) in &times {
+        t2.row(vec![
+            a.name().to_string(),
+            format!("{s1:.1}"),
+            format!("{sp:.1}"),
+            format!("{:.2}x", s1 / sp),
+            format!("{acc:.4}"),
+            format!("{bits:.2}"),
+        ]);
     }
     println!("{}", t2.render());
 

@@ -3,22 +3,106 @@
 //! optional QAT fine-tune, parallelize, evaluate) and post-process
 //! (emit; synthesis is reported by the paper at 14.3 h on Vivado and is
 //! out of reach here — we report the emit-side cost we control).
+//!
+//! Also measures the parallel batched search driver on the Fig. 4
+//! workload shape (serial vs multi-threaded wall-clock): this section is
+//! pure Rust (quantize + parallelize + dataflow-simulate per trial) and
+//! runs even without the PJRT artifacts.
 
 #[path = "common.rs"]
 mod common;
 
 use mase::data::Task;
 use mase::formats::FormatKind;
-use mase::frontend::build_graph;
+use mase::frontend::{build_graph, ModelMeta};
 use mase::hw::Device;
 use mase::passes::{
-    emit_pass, parallelize, profile_model, Evaluator, PassManager, QuantSolution,
+    emit_pass, parallelize, profile_model, Evaluator, PassManager, ProfileData, QuantSolution,
 };
-use mase::util::Table;
+use mase::search::{run_batched_cached, Algorithm, BatchOptions, EvalCache, MemoKey};
+use mase::util::{Stopwatch, Table};
+
+/// Serial-vs-parallel wall-clock of the batched search driver on the
+/// Fig. 4 workload shape. The objective is the hardware half of the
+/// `evaluate` pass (quantize the IR, parallelize, cycle-simulate) on a
+/// synthetic transformer — compute-heavy, deterministic, artifact-free.
+fn parallel_search_speedup() {
+    common::banner("Table 4a", "parallel batched search speedup (Fig. 4 workload)");
+    let meta = ModelMeta::synthetic("speedup-sim", 6, 128, 4, 512, 32, 4, "classifier", 64);
+    let profile = ProfileData::uniform(&meta, 4.0);
+    let g0 = build_graph(&meta);
+    let device = Device::u250();
+    let objective = |x: &[f64]| {
+        let sol = QuantSolution::from_search_vector(FormatKind::MxInt, x, &meta, &profile);
+        let mut g = g0.clone();
+        sol.apply(&mut g);
+        let dp = parallelize(&mut g, &device, 0.4);
+        let sim = mase::sim::simulated_throughput(&g, device.clock_hz, 4);
+        let bits = sol.average_bitwidth(&g);
+        // SW-style objective proxy: prefer fewer bits, break ties on the
+        // simulated + regressed throughput agreement
+        let value = 0.6 / bits.max(1e-9) + 2e-8 * (dp.throughput + sim);
+        (value, vec![])
+    };
+
+    let trials = common::env_usize("MASE_SPEEDUP_TRIALS", 48);
+    let run_with = |threads: usize| {
+        let cache = EvalCache::new();
+        let opts = BatchOptions { batch: 8, threads, memo: MemoKey::Rounded };
+        let sw = Stopwatch::start();
+        let hist = run_batched_cached(
+            Algorithm::Tpe,
+            mase::passes::search_pass::space_for(FormatKind::MxInt, meta.num_qtensors(), 2.0, 8.0),
+            0,
+            trials,
+            &opts,
+            &cache,
+            &objective,
+        );
+        (sw.secs(), hist, cache.len())
+    };
+
+    let (t1, h1, evals1) = run_with(1);
+    let (t4, h4, evals4) = run_with(4);
+    let auto = mase::util::pool::threads_from_env(0);
+    let (ta, ha, _) = run_with(auto);
+
+    let mut t = Table::new(vec!["threads", "wall_s", "trials", "distinct evals", "speedup"]);
+    t.row(vec!["1".to_string(), format!("{t1:.3}"), h1.len().to_string(), evals1.to_string(), "1.00x".into()]);
+    t.row(vec![
+        "4".to_string(),
+        format!("{t4:.3}"),
+        h4.len().to_string(),
+        evals4.to_string(),
+        format!("{:.2}x", t1 / t4),
+    ]);
+    t.row(vec![
+        format!("{auto} (auto)"),
+        format!("{ta:.3}"),
+        ha.len().to_string(),
+        String::new(),
+        format!("{:.2}x", t1 / ta),
+    ]);
+    println!("{}", t.render());
+
+    // the documented determinism convention: identical history for every
+    // thread count
+    let same = h1.len() == h4.len()
+        && h1.iter().zip(h4.iter()).all(|(a, b)| a.x == b.x && a.value == b.value);
+    println!("history identical across thread counts: {same}");
+    println!("memoized duplicate proposals: {} of {} trials", h1.len() - evals1, h1.len());
+    let speedup = t1 / t4;
+    println!(
+        "4-thread speedup: {speedup:.2}x ({})",
+        if speedup >= 2.0 { "meets the >= 2x target" } else { "below the 2x target on this host" }
+    );
+}
 
 fn main() {
     common::banner("Table 4", "pass runtime breakdown (averaged over models)");
-    let session = common::session();
+    parallel_search_speedup();
+
+    let Some(session) = common::try_session() else { return };
     let n_models = common::env_usize("MASE_TABLE4_MODELS", 4);
     let mut pm = PassManager::new();
     let tmp = std::env::temp_dir().join("mase_table4");

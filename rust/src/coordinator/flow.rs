@@ -26,6 +26,11 @@ pub struct FlowConfig {
     pub seed: u64,
     pub emit_dir: Option<PathBuf>,
     pub pretrain_steps: usize,
+    /// Worker threads for the parallel search pass (0 = auto; see
+    /// `util::pool::threads_from_env`).
+    pub threads: usize,
+    /// Search proposals evaluated concurrently per ask/tell round.
+    pub batch: usize,
 }
 
 impl Default for FlowConfig {
@@ -42,6 +47,8 @@ impl Default for FlowConfig {
             seed: 0,
             emit_dir: None,
             pretrain_steps: 220,
+            threads: 0,
+            batch: 8,
         }
     }
 }
@@ -96,6 +103,8 @@ pub fn run_flow(session: &Session, cfg: &FlowConfig) -> Result<FlowReport> {
         fmt: cfg.fmt,
         seed: cfg.seed,
         qat_steps: cfg.qat_steps,
+        threads: cfg.threads,
+        batch: cfg.batch.max(1),
         ..Default::default()
     };
     let outcome = pm.run("search", || run_search(&ev, &profile, cfg.task, &scfg))?;

@@ -7,9 +7,10 @@
 
 use super::{block_maxabs, for_each_block, map_block, pow2, shared_exponent};
 
-/// Fake-quantize a row-major 2-D tensor in place.
+/// Fake-quantize a row-major 2-D tensor in place. `exp_el_bits` is
+/// rounded to the nearest integer (search convention) and clamped >= 1.
 pub fn bl_quantize(data: &mut [f32], rows: usize, cols: usize, exp_el_bits: f32) {
-    let eb = exp_el_bits.max(1.0) as i32;
+    let eb = exp_el_bits.round().max(1.0) as i32;
     let levels = pow2(eb) as i32 - 1; // exponents bias-levels ..= bias
     for_each_block(rows, cols, |start| {
         let bias = shared_exponent(block_maxabs(data, start, cols));
@@ -75,6 +76,16 @@ mod tests {
         for (a, b) in orig.iter().zip(x.iter()) {
             assert!(((a - b) / a).abs() < 0.51, "{a} {b}");
         }
+    }
+
+    #[test]
+    fn fractional_exp_bits_round_not_truncate() {
+        let x = rand_tensor(32 * 4, 4);
+        let mut a = x.clone();
+        bl_quantize(&mut a, 32, 4, 2.6);
+        let mut b = x;
+        bl_quantize(&mut b, 32, 4, 3.0);
+        assert_eq!(a, b, "eb=2.6 must quantize with 3 exponent bits");
     }
 
     #[test]

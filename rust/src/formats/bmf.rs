@@ -14,9 +14,10 @@ use super::{block_maxabs, floor_log2, for_each_block, map_block, pow2, round_tie
 /// the BMF failure shape on large-variance tensors).
 pub const LOCAL_EXP_BITS: u32 = 2;
 
-/// Fake-quantize a row-major 2-D tensor in place.
+/// Fake-quantize a row-major 2-D tensor in place. `mantissa_bits` is
+/// rounded to the nearest integer (search convention) and clamped >= 1.
 pub fn bmf_quantize(data: &mut [f32], rows: usize, cols: usize, mantissa_bits: f32) {
-    let m = mantissa_bits.max(1.0) as i32;
+    let m = mantissa_bits.round().max(1.0) as i32;
     let e_min = -(pow2(LOCAL_EXP_BITS as i32) as i32 - 1); // -(2^eb - 1)
     for_each_block(rows, cols, |start| {
         let bias = shared_exponent(block_maxabs(data, start, cols));
@@ -86,6 +87,16 @@ mod tests {
         let bias = 0; // max < 2 -> floor(log2)=0
         let top = pow2(bias + 1) - pow2(bias - 2);
         assert!(x[0] <= top);
+    }
+
+    #[test]
+    fn fractional_mantissa_bits_round_not_truncate() {
+        let x = rand_tensor(32 * 4, 2, 1.0);
+        let mut a = x.clone();
+        bmf_quantize(&mut a, 32, 4, 3.9);
+        let mut b = x;
+        bmf_quantize(&mut b, 32, 4, 4.0);
+        assert_eq!(a, b, "m=3.9 must quantize with 4 mantissa bits");
     }
 
     #[test]

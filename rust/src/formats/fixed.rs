@@ -8,10 +8,11 @@
 use super::{pow2, round_ties_even};
 
 /// Fake-quantize in place with `width` total bits (incl. sign) and `frac`
-/// fractional bits. Both clamped to sane ranges.
+/// fractional bits. Real-valued knobs are *rounded* to integers (the
+/// search convention — see `search/mod.rs`) and clamped to sane ranges.
 pub fn int_quantize(data: &mut [f32], width: f32, frac: f32) {
-    let w = width.max(2.0) as i32;
-    let f = frac as i32;
+    let w = width.round().max(2.0) as i32;
+    let f = frac.round() as i32;
     let scale = pow2(-f);
     let qmax = pow2(w - 1) - 1.0;
     let qmin = -pow2(w - 1);
@@ -72,6 +73,17 @@ mod tests {
         int_quantize(&mut x, 8.0, 0.0);
         assert_eq!(x[0], 0.0);
         assert_eq!(x[1], 127.0);
+    }
+
+    #[test]
+    fn fractional_knobs_round_not_truncate() {
+        // w = 7.6 / f = 3.4 must behave exactly like Q8.3
+        let x: Vec<f32> = (0..32).map(|i| (i as f32 - 16.0) * 0.21).collect();
+        let mut a = x.clone();
+        int_quantize(&mut a, 7.6, 3.4);
+        let mut b = x;
+        int_quantize(&mut b, 8.0, 3.0);
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -10,9 +10,11 @@ use super::{
 };
 
 /// Fake-quantize a row-major 2-D tensor in place. `mantissa_bits` is
-/// clamped to >= 1 (matching `ref.mxint_quantize`).
+/// *rounded* to the nearest integer (the search convention for
+/// real-valued precision dimensions — see `search/mod.rs`) and clamped
+/// to >= 1, matching `ref.mxint_quantize`.
 pub fn mxint_quantize(data: &mut [f32], rows: usize, cols: usize, mantissa_bits: f32) {
-    let m = mantissa_bits.max(1.0) as i32;
+    let m = mantissa_bits.round().max(1.0) as i32;
     for_each_block(rows, cols, |start| {
         let e = shared_exponent(block_maxabs(data, start, cols));
         quantize_block(data, start, cols, e, m);
@@ -35,7 +37,7 @@ pub fn quantize_block(data: &mut [f32], start: usize, cols: usize, e: i32, m: i3
 pub fn mxint_quantize_1d(data: &mut [f32], mantissa_bits: f32) {
     let n = super::BLOCK_SHAPE.0 * super::BLOCK_SHAPE.1;
     assert_eq!(data.len() % n, 0);
-    let m = mantissa_bits.max(1.0) as i32;
+    let m = mantissa_bits.round().max(1.0) as i32;
     for b in 0..data.len() / n {
         let chunk = &mut data[b * n..(b + 1) * n];
         let maxabs = chunk.iter().fold(0.0f32, |a, x| a.max(x.abs()));
@@ -146,11 +148,40 @@ mod tests {
 
     #[test]
     fn one_d_path_matches_blocked_layout() {
-        let x = rand_tensor(2, 32, 11, 1.0);
+        // The 1-D path groups 32 consecutive elements per block — exactly
+        // one row-major (16, 2) block. Quantizing each 32-chunk through
+        // the blocked 2-D path must reproduce it element for element.
+        let x = rand_tensor(4, 32, 11, 1.0);
         let mut q1 = x.clone();
         mxint_quantize_1d(&mut q1, 5.0);
-        // 1-D path groups 32 consecutive elements — same grouping as a
-        // [2, 32] tensor quantized with flat blocks.
-        assert_eq!(q1.len(), 64);
+        let mut q2 = x.clone();
+        for chunk in q2.chunks_mut(32) {
+            mxint_quantize(chunk, 16, 2, 5.0);
+        }
+        assert_eq!(q1.len(), x.len());
+        for (i, (a, b)) in q1.iter().zip(q2.iter()).enumerate() {
+            assert_eq!(a, b, "element {i}: 1-D {a} vs blocked {b}");
+        }
+    }
+
+    #[test]
+    fn fractional_mantissa_bits_round_not_truncate() {
+        // Search vectors are real-valued; the convention (search/mod.rs)
+        // is that precision dimensions are ROUNDED. m = 4.9 must behave
+        // as 5 bits, not truncate to 4. With block max 1.0 (e = 0):
+        // 0.1875 = 3/16 is exact on the 5-bit grid (scale 2^-4) but
+        // rounds to 0.25 on the 4-bit grid (scale 2^-3, ties-to-even).
+        let mut x = vec![1.0f32; 32];
+        x[1] = 0.1875;
+        let mut q = x.clone();
+        mxint_quantize(&mut q, 16, 2, 4.9);
+        assert_eq!(q[1], 0.1875, "m=4.9 must quantize with 5 mantissa bits");
+        let mut q4 = x.clone();
+        mxint_quantize(&mut q4, 16, 2, 4.0);
+        assert_eq!(q4[1], 0.25, "4-bit grid sanity check");
+        // 1-D path follows the same convention
+        let mut q1d = x.clone();
+        mxint_quantize_1d(&mut q1d, 4.9);
+        assert_eq!(q1d[1], 0.1875);
     }
 }

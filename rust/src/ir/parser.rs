@@ -7,12 +7,19 @@ use super::TensorType;
 use crate::formats::{FormatKind, Precision};
 use std::collections::HashMap;
 
-#[derive(Debug, thiserror::Error)]
-#[error("IR parse error (line {line}): {msg}")]
+#[derive(Debug)]
 pub struct ParseError {
     pub line: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "IR parse error (line {}): {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 fn err(line: usize, msg: impl Into<String>) -> ParseError {
     ParseError { line, msg: msg.into() }

@@ -5,23 +5,42 @@
 use super::graph::Graph;
 use crate::formats::{FormatKind, BLOCK_SHAPE};
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum VerifyError {
-    #[error("value %{0} has no producer and is not an input/param")]
     Orphan(String),
-    #[error("value %{0} produced more than once (SSA violation)")]
     Reassigned(String),
-    #[error("op {0} references out-of-range value id")]
     BadValueId(String),
-    #[error("block format tensor %{0} has shape {1:?} not tiling into {2:?} blocks")]
     BadBlockShape(String, Vec<usize>, (usize, usize)),
-    #[error("mixed arithmetic types in one design: {0} and {1} (paper §4 forbids)")]
     MixedArithmetic(&'static str, &'static str),
-    #[error("graph has no outputs")]
     NoOutputs,
-    #[error("cycle detected in dataflow graph")]
     Cycle,
 }
+
+impl std::fmt::Display for VerifyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            VerifyError::Orphan(v) => {
+                write!(f, "value %{v} has no producer and is not an input/param")
+            }
+            VerifyError::Reassigned(v) => {
+                write!(f, "value %{v} produced more than once (SSA violation)")
+            }
+            VerifyError::BadValueId(op) => {
+                write!(f, "op {op} references out-of-range value id")
+            }
+            VerifyError::BadBlockShape(v, shape, block) => {
+                write!(f, "block format tensor %{v} has shape {shape:?} not tiling into {block:?} blocks")
+            }
+            VerifyError::MixedArithmetic(a, b) => {
+                write!(f, "mixed arithmetic types in one design: {a} and {b} (paper §4 forbids)")
+            }
+            VerifyError::NoOutputs => write!(f, "graph has no outputs"),
+            VerifyError::Cycle => write!(f, "cycle detected in dataflow graph"),
+        }
+    }
+}
+
+impl std::error::Error for VerifyError {}
 
 /// Verify the graph; returns all findings (empty = valid).
 pub fn verify(g: &Graph) -> Vec<VerifyError> {

@@ -104,6 +104,8 @@ fn run(args: &Args) -> Result<()> {
                 seed: args.get_usize("seed", 0) as u64,
                 emit_dir: emit_dir.clone(),
                 pretrain_steps: args.get_usize("pretrain-steps", 220),
+                threads: args.threads(),
+                batch: args.get_usize("batch", 8),
             };
             let report = mase::coordinator::run_flow(&session, &cfg)?;
             let best = &report.outcome.best_eval;
@@ -206,4 +208,6 @@ usage: mase <subcommand> [flags]
   e2e      --model M [--task T] [--trials N]
   ir       --model M
   formats  [--model llama-sim]
-common: --artifacts DIR (default ./artifacts)";
+common: --artifacts DIR (default ./artifacts)
+        --threads N (search eval workers; 0 = auto, also MASE_THREADS)
+        --batch N   (search proposals per ask/tell round, default 8)";

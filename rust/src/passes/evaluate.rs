@@ -65,6 +65,13 @@ pub struct EvalResult {
 }
 
 /// Bundles everything needed to score a solution for one (model, task).
+///
+/// The evaluator is immutable after construction and `Sync`: the
+/// parallel search pass shares one `&Evaluator` across its worker
+/// threads (`run_batched` -> `par_map`), so every method takes `&self`
+/// and all interior mutability (the runtime's executable cache) is
+/// behind locks. The assertion below turns any future regression into a
+/// compile error.
 pub struct Evaluator<'a> {
     pub rt: &'a Runtime,
     pub meta: &'a ModelMeta,
@@ -191,6 +198,20 @@ impl<'a> Evaluator<'a> {
             objectives,
         })
     }
+}
+
+// Compile-time guarantee that the search pass may share the evaluator
+// across threads. CAVEAT for whoever swaps rust/vendor/xla for the real
+// xla-rs bindings: FFI crates often carry `unsafe impl Send/Sync` over
+// raw pointers, so this assertion may still pass while the underlying
+// PJRT client races. The real client is NOT thread-safe (see
+// coordinator::pretrain::pretrain_all) — give each worker its own
+// client, or serialize `Runtime::execute*` behind a lock, before
+// enabling `threads > 1` against real PJRT.
+#[allow(dead_code)]
+fn _assert_evaluator_is_sync() {
+    fn is_sync<T: Sync>() {}
+    is_sync::<Evaluator<'static>>();
 }
 
 #[cfg(test)]

@@ -4,6 +4,15 @@
 //! scoring each trial with the `evaluate` pass. Optionally interleaves
 //! QAT fine-tune steps (small models, Fig. 6) — the "trainable IR" in
 //! action.
+//!
+//! Trials are evaluated through the batched parallel driver
+//! [`crate::search::run_batched`]: `cfg.batch` proposals per ask/tell
+//! round fan out over `cfg.threads` workers, with a memo cache keyed on
+//! the *rounded* search vector (the exact quantization
+//! [`QuantSolution::from_search_vector`] applies), so duplicate
+//! proposals are never re-simulated. With a fixed seed the trial history
+//! is identical for every thread count — see the batch-order convention
+//! in the `search` module docs.
 
 use super::evaluate::{EvalResult, Evaluator};
 use super::profile::ProfileData;
@@ -11,7 +20,8 @@ use super::quantize::QuantSolution;
 use crate::data::Task;
 use crate::formats::FormatKind;
 use crate::runtime::TensorData;
-use crate::search::{best_curve, run, Algorithm, Space, Trial};
+use crate::search::{best_curve, run_batched, Algorithm, BatchOptions, MemoKey, Space, Trial};
+use crate::util::pool::threads_from_env;
 use anyhow::Result;
 
 #[derive(Debug, Clone)]
@@ -26,6 +36,13 @@ pub struct SearchConfig {
     /// Bits range searched per tensor.
     pub bits_lo: f64,
     pub bits_hi: f64,
+    /// Proposals evaluated concurrently per ask/tell round (1 = the
+    /// serial cadence).
+    pub batch: usize,
+    /// Worker threads for trial evaluation; 0 = the `MASE_THREADS` env
+    /// var, falling back to all cores minus one (see
+    /// [`crate::util::pool::threads_from_env`]).
+    pub threads: usize,
 }
 
 impl Default for SearchConfig {
@@ -39,6 +56,8 @@ impl Default for SearchConfig {
             qat_lr: 0.002,
             bits_lo: 2.0,
             bits_hi: 8.0,
+            batch: 8,
+            threads: 0,
         }
     }
 }
@@ -90,13 +109,11 @@ pub fn run_search(
         Vec::new()
     };
 
-    let mut best_value = f64::NEG_INFINITY;
-    let mut best: Option<(QuantSolution, EvalResult, Option<Vec<f32>>)> = None;
-
-    let history = run(cfg.algorithm, space, cfg.seed, cfg.trials, |x| {
-        let sol = QuantSolution::from_search_vector(cfg.fmt, x, ev.meta, profile);
-        // QAT fine-tune on a scratch copy
-        let tuned: Option<Vec<f32>> = qat_artifact.as_ref().map(|art| {
+    // QAT fine-tune on a scratch copy — a pure function of the solution
+    // (fixed train stream, no shared mutable state), so workers can call
+    // it concurrently.
+    let qat_tune = |sol: &QuantSolution| -> Option<Vec<f32>> {
+        qat_artifact.as_ref().map(|art| {
             let mut w = ev.weights.to_vec();
             let qcfg = sol.to_qconfig();
             for b in &train_batches {
@@ -116,17 +133,57 @@ pub fn run_search(
                 }
             }
             w
-        });
+        })
+    };
 
+    // Running winner, tracked across workers. The tie-break on the
+    // rounded key makes the final content a pure max over the set of
+    // evaluated configurations — independent of worker arrival order,
+    // preserving the determinism guarantee. Every distinct config passes
+    // through the objective exactly once (run_batched memoizes
+    // duplicates), so the winner's full EvalResult and QAT weights are
+    // captured here without a second evaluation.
+    struct BestTrial {
+        value: f64,
+        key: Vec<u64>,
+        sol: QuantSolution,
+        eval: EvalResult,
+        tuned: Option<Vec<f32>>,
+    }
+    let best: std::sync::Mutex<Option<BestTrial>> = std::sync::Mutex::new(None);
+
+    let opts = BatchOptions {
+        batch: cfg.batch.max(1),
+        threads: threads_from_env(cfg.threads),
+        memo: MemoKey::Rounded,
+    };
+    let history = run_batched(cfg.algorithm, space, cfg.seed, cfg.trials, &opts, |x| {
+        let sol = QuantSolution::from_search_vector(cfg.fmt, x, ev.meta, profile);
+        let tuned = qat_tune(&sol);
         let result = match &tuned {
             Some(w) => ev.evaluate_with_weights(&sol, w),
             None => ev.evaluate(&sol),
         };
         match result {
             Ok(r) => {
-                if r.value > best_value {
-                    best_value = r.value;
-                    best = Some((sol, r.clone(), tuned));
+                if r.value.is_finite() {
+                    let key = MemoKey::Rounded.key(x);
+                    let mut b = best.lock().unwrap();
+                    let better = match &*b {
+                        None => true,
+                        Some(cur) => {
+                            r.value > cur.value || (r.value == cur.value && key < cur.key)
+                        }
+                    };
+                    if better {
+                        *b = Some(BestTrial {
+                            value: r.value,
+                            key,
+                            sol,
+                            eval: r.clone(),
+                            tuned,
+                        });
+                    }
                 }
                 (r.value, r.objectives)
             }
@@ -137,9 +194,16 @@ pub fn run_search(
         }
     });
 
-    let (best_sol, best_eval, tuned_weights) =
-        best.ok_or_else(|| anyhow::anyhow!("no successful trials"))?;
-    Ok(SearchOutcome { history, best: best_sol, best_eval, tuned_weights })
+    let best = best
+        .into_inner()
+        .unwrap()
+        .ok_or_else(|| anyhow::anyhow!("no successful trials"))?;
+    Ok(SearchOutcome {
+        history,
+        best: best.sol,
+        best_eval: best.eval,
+        tuned_weights: best.tuned,
+    })
 }
 
 /// Convenience: the incumbent-value curve for Fig. 4.
@@ -163,5 +227,14 @@ mod tests {
         let s = space_for(FormatKind::Int, 4, 2.0, 8.0);
         assert!(s.lo[..4].iter().all(|&l| l >= 3.0));
         assert!(s.lo[4..].iter().all(|&l| l == -2.0));
+    }
+
+    #[test]
+    fn default_config_is_batched_and_auto_threaded() {
+        let cfg = SearchConfig::default();
+        assert!(cfg.batch > 1);
+        assert_eq!(cfg.threads, 0, "0 must mean auto-detect");
+        assert!(threads_from_env(cfg.threads) >= 1);
+        assert_eq!(threads_from_env(3), 3);
     }
 }

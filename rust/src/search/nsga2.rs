@@ -16,13 +16,11 @@ pub struct Nsga2 {
     rng: Rng,
     /// Evaluated population of the current generation.
     pop: Vec<Trial>,
-    /// Proposals not yet told back.
-    pending: Vec<Vec<f64>>,
 }
 
 impl Nsga2 {
     pub fn new(space: Space, seed: u64) -> Self {
-        Self { space, rng: Rng::new(seed), pop: Vec::new(), pending: Vec::new() }
+        Self { space, rng: Rng::new(seed), pop: Vec::new() }
     }
 
     fn objectives<'a>(t: &'a Trial) -> &'a [f64] {
@@ -186,9 +184,6 @@ impl Searcher for Nsga2 {
     }
 
     fn ask(&mut self) -> Vec<f64> {
-        if let Some(x) = self.pending.pop() {
-            return x;
-        }
         if self.pop.len() < POP {
             // initial population: random
             return self.space.sample(&mut self.rng);
@@ -206,6 +201,39 @@ impl Searcher for Nsga2 {
 
     fn tell(&mut self, trial: Trial) {
         self.pop.push(trial);
+        self.environmental_selection();
+    }
+
+    /// Generation-at-a-time batching — NSGA-II's natural form: every
+    /// offspring of one batch is bred from the SAME snapshot of the
+    /// parent population (ranks and crowding computed once), so the
+    /// whole generation can be evaluated concurrently.
+    fn ask_batch(&mut self, n: usize) -> Vec<Vec<f64>> {
+        let mut out = Vec::with_capacity(n);
+        // fill the initial population (counting proposals already in
+        // flight within this batch) with random samples
+        while out.len() < n && (self.pop.is_empty() || self.pop.len() + out.len() < POP) {
+            out.push(self.space.sample(&mut self.rng));
+        }
+        if out.len() < n {
+            let ranks = Self::ranks(&self.pop);
+            let crowd = Self::crowding(&self.pop);
+            while out.len() < n {
+                let a = self.select(&ranks, &crowd);
+                let b = self.select(&ranks, &crowd);
+                let (pa, pb) = (self.pop[a].x.clone(), self.pop[b].x.clone());
+                let mut child = self.sbx_crossover(&pa, &pb);
+                self.mutate(&mut child);
+                out.push(child);
+            }
+        }
+        out
+    }
+
+    /// (μ+λ) generational replacement: merge the evaluated offspring
+    /// into the population, then select the best POP once.
+    fn tell_batch(&mut self, trials: Vec<Trial>) {
+        self.pop.extend(trials);
         self.environmental_selection();
     }
 }

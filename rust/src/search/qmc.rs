@@ -46,6 +46,10 @@ impl Searcher for HaltonSearch {
     }
 
     fn tell(&mut self, _trial: Trial) {}
+
+    // `ask_batch`/`tell_batch` use the trait defaults: the Halton
+    // sequence is feedback-free, so a batch is simply the next n points
+    // of the sequence — identical to n serial asks.
 }
 
 #[cfg(test)]
@@ -69,6 +73,14 @@ mod tests {
             bins[(s.ask()[0] * 8.0) as usize] += 1;
         }
         assert!(bins.iter().all(|&c| c >= 4), "{bins:?}");
+    }
+
+    #[test]
+    fn batched_asks_continue_the_sequence() {
+        let mut serial = HaltonSearch::new(Space::uniform(2, 0.0, 1.0));
+        let mut batched = HaltonSearch::new(Space::uniform(2, 0.0, 1.0));
+        let want: Vec<Vec<f64>> = (0..8).map(|_| serial.ask()).collect();
+        assert_eq!(batched.ask_batch(8), want);
     }
 
     #[test]

@@ -24,11 +24,24 @@ impl Searcher for RandomSearch {
     }
 
     fn tell(&mut self, _trial: Trial) {}
+
+    // `ask_batch`/`tell_batch` use the trait defaults: n independent
+    // draws ARE random search's batched form (proposals never depend on
+    // feedback), so batching changes nothing but the evaluation cadence.
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn batched_asks_match_serial_asks() {
+        // same seed: one ask_batch(6) must replay six serial asks
+        let mut serial = RandomSearch::new(Space::uniform(3, 0.0, 1.0), 9);
+        let mut batched = RandomSearch::new(Space::uniform(3, 0.0, 1.0), 9);
+        let want: Vec<Vec<f64>> = (0..6).map(|_| serial.ask()).collect();
+        assert_eq!(batched.ask_batch(6), want);
+    }
 
     #[test]
     fn samples_cover_space() {

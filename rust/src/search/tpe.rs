@@ -18,11 +18,20 @@ pub struct Tpe {
     space: Space,
     rng: Rng,
     history: Vec<Trial>,
+    /// Number of constant-liar placeholders currently at the tail of
+    /// `history` (see `ask_batch`); retracted before real results land.
+    lies: usize,
 }
 
 impl Tpe {
     pub fn new(space: Space, seed: u64) -> Self {
-        Self { space, rng: Rng::new(seed), history: Vec::new() }
+        Self { space, rng: Rng::new(seed), history: Vec::new(), lies: 0 }
+    }
+
+    fn retract_lies(&mut self) {
+        let keep = self.history.len() - self.lies;
+        self.history.truncate(keep);
+        self.lies = 0;
     }
 
     /// Parzen-window log density of `x` under samples `mu` with per-sample
@@ -47,7 +56,11 @@ impl Searcher for Tpe {
     }
 
     fn ask(&mut self) -> Vec<f64> {
-        if self.history.len() < N_STARTUP {
+        // startup gate counts REAL trials only: constant-liar placeholders
+        // must not flip a large first batch into KDE mode over fabricated
+        // values (lies still feed the model once real history exists —
+        // sitting at the worst value, they repel in-flight duplicates)
+        if self.history.len() - self.lies < N_STARTUP {
             return self.space.sample(&mut self.rng);
         }
         // split good/bad by the gamma quantile of the (maximized) value
@@ -94,7 +107,37 @@ impl Searcher for Tpe {
     }
 
     fn tell(&mut self, trial: Trial) {
+        self.retract_lies();
         self.history.push(trial);
+    }
+
+    /// Constant-liar batching (Ginsbourger et al.): after proposing each
+    /// point, provisionally record it with the worst value observed so
+    /// far, so the next proposal of the same batch treats that region as
+    /// unpromising and explores elsewhere. The lies are retracted when
+    /// the real evaluations arrive.
+    fn ask_batch(&mut self, n: usize) -> Vec<Vec<f64>> {
+        self.retract_lies();
+        let lie = self
+            .history
+            .iter()
+            .map(|t| t.value)
+            .filter(|v| v.is_finite())
+            .fold(f64::INFINITY, f64::min);
+        let lie = if lie.is_finite() { lie } else { 0.0 };
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let x = self.ask();
+            self.history.push(Trial { x: x.clone(), value: lie, objectives: vec![] });
+            self.lies += 1;
+            out.push(x);
+        }
+        out
+    }
+
+    fn tell_batch(&mut self, trials: Vec<Trial>) {
+        self.retract_lies();
+        self.history.extend(trials);
     }
 }
 
@@ -124,6 +167,50 @@ mod tests {
         let proposals: Vec<f64> = (0..30).map(|_| s.ask()[0]).collect();
         let near = proposals.iter().filter(|&&p| (p - 0.2).abs() < 0.2).count();
         assert!(near > 20, "only {near}/30 proposals near optimum: {proposals:?}");
+    }
+
+    #[test]
+    fn large_first_batch_stays_in_startup_exploration() {
+        // lies must not count toward N_STARTUP: a first batch larger than
+        // N_STARTUP is pure random exploration, not a KDE fitted to
+        // fabricated 0.0-valued placeholders
+        let mut s = Tpe::new(Space::uniform(2, 0.0, 1.0), 7);
+        let xs = s.ask_batch(N_STARTUP + 6);
+        let space = Space::uniform(2, 0.0, 1.0);
+        let mut rng = Rng::new(7);
+        for (i, x) in xs.iter().enumerate() {
+            assert_eq!(x, &space.sample(&mut rng), "proposal {i} left the startup phase");
+        }
+    }
+
+    #[test]
+    fn constant_liar_batch_records_then_retracts_lies() {
+        let mut s = Tpe::new(Space::uniform(1, 0.0, 1.0), 3);
+        for i in 0..N_STARTUP + 5 {
+            let x = vec![(i as f64) / 15.0];
+            let v = -(x[0] - 0.2f64).powi(2);
+            s.tell(Trial { x, value: v, objectives: vec![] });
+        }
+        let len_before = s.history.len();
+        let worst = s.history.iter().map(|t| t.value).fold(f64::INFINITY, f64::min);
+        let xs = s.ask_batch(6);
+        assert_eq!(xs.len(), 6);
+        // lies present during the batch, all at the pessimistic value
+        assert_eq!(s.history.len(), len_before + 6);
+        assert!(s.history[len_before..].iter().all(|t| t.value == worst));
+        let trials: Vec<Trial> = xs
+            .into_iter()
+            .map(|x| {
+                let v = -(x[0] - 0.2f64).powi(2);
+                Trial { x, value: v, objectives: vec![] }
+            })
+            .collect();
+        s.tell_batch(trials);
+        // lies retracted, truth recorded, no growth beyond the batch
+        assert_eq!(s.history.len(), len_before + 6);
+        for t in &s.history[len_before..] {
+            assert_eq!(t.value, -(t.x[0] - 0.2f64).powi(2), "lie left in history");
+        }
     }
 
     #[test]

@@ -58,6 +58,12 @@ impl Args {
     pub fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }
+
+    /// Worker-thread request for parallel passes (`--threads N`);
+    /// 0 / absent means auto-detect (see `util::pool::threads_from_env`).
+    pub fn threads(&self) -> usize {
+        self.get_usize("threads", 0)
+    }
 }
 
 #[cfg(test)]
@@ -102,5 +108,12 @@ mod tests {
         let a = parse("x");
         assert_eq!(a.get_usize("missing", 7), 7);
         assert_eq!(a.get_or("missing", "d"), "d");
+    }
+
+    #[test]
+    fn threads_flag() {
+        assert_eq!(parse("search --threads 4").threads(), 4);
+        assert_eq!(parse("search --threads=2").threads(), 2);
+        assert_eq!(parse("search").threads(), 0);
     }
 }

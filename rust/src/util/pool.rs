@@ -48,6 +48,21 @@ pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get().saturating_sub(1).max(1)).unwrap_or(1)
 }
 
+/// Resolve a worker-thread request, end to end: an explicit nonzero
+/// value (e.g. from the `--threads` CLI flag) wins; `0` falls back to
+/// the `MASE_THREADS` environment variable, then to [`default_threads`].
+/// Always returns at least 1.
+pub fn threads_from_env(explicit: usize) -> usize {
+    if explicit > 0 {
+        return explicit;
+    }
+    std::env::var("MASE_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(default_threads)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -69,6 +84,14 @@ mod tests {
     fn empty_input() {
         let ys: Vec<i32> = par_map(Vec::<i32>::new(), 4, |x| x);
         assert!(ys.is_empty());
+    }
+
+    #[test]
+    fn threads_resolution_order() {
+        // explicit request wins; 0 auto-detects to something usable
+        // (MASE_THREADS is env-dependent, so only the bounds are checked)
+        assert_eq!(threads_from_env(3), 3);
+        assert!(threads_from_env(0) >= 1);
     }
 
     #[test]

@@ -1,0 +1,224 @@
+//! Offline stub of the `xla` (xla-rs / PJRT) bindings used by
+//! `mase::runtime`.
+//!
+//! The real crate wraps `xla_extension`, which is unavailable in this
+//! environment. This stub keeps the workspace compiling — and the pure
+//! Rust majority of the test suite running — without PJRT:
+//!  * [`Literal`] is a faithful host-side tensor container, so
+//!    `TensorData::prepare()` and friends work for real;
+//!  * client / compile / execute entry points return a clear
+//!    "PJRT unavailable" [`Error`] instead of crashing, so artifact-driven
+//!    paths degrade into ordinary error handling.
+//! Every type here is plain owned data, hence `Send + Sync` — which is
+//! what lets the parallel search pass share one `Runtime` across worker
+//! threads. Swap the `xla` path dependency in `rust/Cargo.toml` for the
+//! real bindings to enable PJRT execution (the real client is not
+//! thread-safe; see `coordinator::pretrain::pretrain_all`).
+
+use std::fmt;
+
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla(stub): {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what} requires the real PJRT runtime; this build uses the offline xla stub (rust/vendor/xla)"
+    )))
+}
+
+/// Storage for literal elements. Public only so `NativeType` can name it.
+#[doc(hidden)]
+#[derive(Debug, Clone)]
+pub enum LiteralData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Copy + 'static {
+    #[doc(hidden)]
+    fn wrap(v: Vec<Self>) -> LiteralData;
+    #[doc(hidden)]
+    fn read(d: &LiteralData) -> Option<&[Self]>;
+}
+
+impl NativeType for f32 {
+    fn wrap(v: Vec<Self>) -> LiteralData {
+        LiteralData::F32(v)
+    }
+    fn read(d: &LiteralData) -> Option<&[Self]> {
+        match d {
+            LiteralData::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(v: Vec<Self>) -> LiteralData {
+        LiteralData::I32(v)
+    }
+    fn read(d: &LiteralData) -> Option<&[Self]> {
+        match d {
+            LiteralData::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// A host tensor (or tuple of tensors) in the device literal layout.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: LiteralData,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { data: T::wrap(data.to_vec()), dims: vec![data.len() as i64] }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            LiteralData::F32(v) => v.len(),
+            LiteralData::I32(v) => v.len(),
+            LiteralData::Tuple(t) => t.iter().map(|l| l.element_count()).sum(),
+        }
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Reinterpret with new dimensions (`&[]` = scalar). Element count
+    /// must match; an empty dims product counts as 1.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        let have = self.element_count() as i64;
+        if want != have {
+            return Err(Error(format!(
+                "reshape to {dims:?} ({want} elements) from {have} elements"
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::read(&self.data)
+            .map(|s| s.to_vec())
+            .ok_or_else(|| Error("literal element type mismatch".to_string()))
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        T::read(&self.data)
+            .and_then(|s| s.first().copied())
+            .ok_or_else(|| Error("empty literal or element type mismatch".to_string()))
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.data {
+            LiteralData::Tuple(parts) => Ok(parts.clone()),
+            _ => Err(Error("literal is not a tuple".to_string())),
+        }
+    }
+}
+
+/// Parsed HLO module (stub: construction always fails).
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// PJRT client (stub: construction always fails with a clear message).
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    /// Execute with per-device argument lists; mirrors the real crate's
+    /// `Vec<Vec<PjRtBuffer>>` result shape.
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trips_f32_and_i32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(r.get_first_element::<f32>().unwrap(), 1.0);
+        assert!(r.to_vec::<i32>().is_err());
+        let i = Literal::vec1(&[7i32]);
+        assert_eq!(i.reshape(&[]).unwrap().get_first_element::<i32>().unwrap(), 7);
+    }
+
+    #[test]
+    fn reshape_checks_element_count() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0]);
+        assert!(l.reshape(&[2, 2]).is_err());
+    }
+
+    #[test]
+    fn pjrt_entry_points_fail_cleanly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+
+    #[test]
+    fn stub_types_are_send_and_sync() {
+        fn check<T: Send + Sync>() {}
+        check::<PjRtClient>();
+        check::<PjRtLoadedExecutable>();
+        check::<Literal>();
+    }
+}
