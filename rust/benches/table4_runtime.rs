@@ -48,7 +48,7 @@ fn parallel_search_speedup() {
     let trials = common::env_usize("MASE_SPEEDUP_TRIALS", 48);
     let run_with = |threads: usize| {
         let cache = EvalCache::new();
-        let opts = BatchOptions { batch: 8, threads, memo: MemoKey::Rounded };
+        let opts = BatchOptions { batch: 8, threads, memo: MemoKey::Rounded, ..Default::default() };
         let sw = Stopwatch::start();
         let hist = run_batched_cached(
             Algorithm::Tpe,

@@ -6,12 +6,13 @@ use super::Session;
 use crate::data::{batches, Task};
 use crate::formats::FormatKind;
 use crate::passes::{
-    emit_pass, profile_model, run_search, Evaluator, Objective, PassManager, QuantSolution,
-    SearchConfig, SearchOutcome,
+    emit_pass, eval_scope, profile_model, run_search_cached, Evaluator, Objective, PassManager,
+    QuantSolution, SearchConfig, SearchOutcome,
 };
-use crate::search::Algorithm;
+use crate::search::{Algorithm, CacheStore, EvalCache};
 use anyhow::Result;
 use std::path::PathBuf;
+use std::sync::Arc;
 
 #[derive(Debug, Clone)]
 pub struct FlowConfig {
@@ -31,6 +32,13 @@ pub struct FlowConfig {
     pub threads: usize,
     /// Search proposals evaluated concurrently per ask/tell round.
     pub batch: usize,
+    /// Persistent evaluation cache (`--cache`): loaded before the search
+    /// pass, flushed atomically after it. Entries are scoped by
+    /// [`eval_scope`], so one file safely serves many (model, task,
+    /// format) contexts. `None` = run-local memoization only.
+    pub cache_path: Option<PathBuf>,
+    /// TPE constant-liar variant (see `search::LieStrategy`).
+    pub tpe_mean_lie: bool,
 }
 
 impl Default for FlowConfig {
@@ -49,6 +57,8 @@ impl Default for FlowConfig {
             pretrain_steps: 220,
             threads: 0,
             batch: 8,
+            cache_path: None,
+            tpe_mean_lie: false,
         }
     }
 }
@@ -96,7 +106,7 @@ pub fn run_flow(session: &Session, cfg: &FlowConfig) -> Result<FlowReport> {
     let int8_sol = QuantSolution::uniform(FormatKind::Int, 8.0, &meta, &profile);
     let int8_baseline = pm.run("evaluate", || ev.evaluate(&int8_sol))?;
 
-    // search
+    // search, memoized through the persistent cache when configured
     let scfg = SearchConfig {
         algorithm: cfg.algorithm,
         trials: cfg.trials,
@@ -105,9 +115,36 @@ pub fn run_flow(session: &Session, cfg: &FlowConfig) -> Result<FlowReport> {
         qat_steps: cfg.qat_steps,
         threads: cfg.threads,
         batch: cfg.batch.max(1),
+        tpe_mean_lie: cfg.tpe_mean_lie,
         ..Default::default()
     };
-    let outcome = pm.run("search", || run_search(&ev, &profile, cfg.task, &scfg))?;
+    let store = cfg.cache_path.as_deref().map(CacheStore::open);
+    let cache = match &store {
+        Some(s) => {
+            if let Some(note) = s.load_note() {
+                eprintln!("eval cache: {note}");
+            }
+            s.cache(&eval_scope(
+                &cfg.model,
+                cfg.task,
+                cfg.fmt,
+                cfg.qat_steps,
+                scfg.qat_lr,
+                cfg.eval_batches,
+                cfg.pretrain_steps,
+                if cfg.hw_aware { "hw" } else { "sw" },
+            ))
+        }
+        None => Arc::new(EvalCache::new()),
+    };
+    let outcome = pm.run("search", || run_search_cached(&ev, &profile, cfg.task, &scfg, &cache));
+    // flush BEFORE surfacing a search failure: evaluations already paid
+    // (memoized before the failing trial) must survive for the re-run —
+    // the same guarantee coordinator::sweep::sweep_with gives per cell
+    if let Some(s) = &store {
+        s.save()?;
+    }
+    let outcome = outcome?;
 
     // emit the winning design
     let (mut emitted_files, mut emitted_lines) = (0, 0);

@@ -4,9 +4,11 @@
 
 pub mod flow;
 pub mod pretrain;
+pub mod sweep;
 
 pub use flow::{run_flow, FlowConfig, FlowReport};
 pub use pretrain::{pretrain, weights_path, PretrainConfig};
+pub use sweep::{run_sweep, SweepConfig, SweepReport};
 
 use crate::frontend::Manifest;
 use crate::runtime::Runtime;

@@ -1,0 +1,373 @@
+//! The `sweep` orchestrator: the full Fig. 6 grid (models × tasks ×
+//! format families) driven through ONE shared, optionally disk-backed
+//! evaluation cache, so re-running a sweep re-simulates nothing.
+//!
+//! Layering: [`sweep_with`] is the generic core — grid iteration, cache
+//! scoping, per-cell hit/miss accounting and the final atomic flush —
+//! and is independent of the PJRT evaluator, so the persistence
+//! guarantees are integration-tested without artifacts (see
+//! `tests/cache_persistence.rs`). [`run_sweep`] instantiates it with the
+//! real pipeline (pretrain → profile → [`run_search_cached`]) and is
+//! what `mase sweep` and `benches/fig6_opt_sweep.rs` call.
+
+use super::pretrain::{pretrain, PretrainConfig};
+use super::Session;
+use crate::data::{batches, Task};
+use crate::formats::FormatKind;
+use crate::passes::{
+    eval_scope, profile_model, run_search_cached, Evaluator, Objective, SearchConfig,
+};
+use crate::search::{Algorithm, CacheStats, CacheStore, EvalCache};
+use anyhow::Result;
+use std::path::PathBuf;
+
+/// Grid + search hyperparameters for one sweep. Everything that changes
+/// the objective is folded into each cell's cache scope (see
+/// [`eval_scope`]), so sweeps with different settings can safely share
+/// one cache file.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    /// Model names (manifest keys), outermost grid axis.
+    pub models: Vec<String>,
+    pub tasks: Vec<Task>,
+    pub fmts: Vec<FormatKind>,
+    pub algorithm: Algorithm,
+    pub trials: usize,
+    pub seed: u64,
+    /// Search proposals per ask/tell round.
+    pub batch: usize,
+    /// Worker threads (0 = auto, see `util::pool::threads_from_env`).
+    pub threads: usize,
+    pub eval_batches: usize,
+    pub pretrain_steps: usize,
+    /// QAT fine-tune steps *requested* per trial; applied only to cells
+    /// whose model ships the matching `qat_<fmt>` artifact (the paper's
+    /// QAT-small / PTQ-large split). 0 = PTQ everywhere.
+    pub qat_steps: usize,
+    /// QAT learning rate (part of the objective, hence of the scope).
+    pub qat_lr: f32,
+    /// Hardware-aware objective (Eq. 4) vs the SW-only `acc + k/b`.
+    pub hw_aware: bool,
+    /// Use TPE's mean-value constant lie (see `search::LieStrategy`).
+    pub tpe_mean_lie: bool,
+    /// Disk-backed cache; `None` = in-memory sharing only.
+    pub cache_path: Option<PathBuf>,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        Self {
+            // the three OPT sizes whose 6-task weights pretrain quickly
+            models: vec![
+                "opt-125m-sim".to_string(),
+                "opt-350m-sim".to_string(),
+                "opt-1.3b-sim".to_string(),
+            ],
+            tasks: Task::ALL.to_vec(),
+            fmts: vec![FormatKind::MxInt, FormatKind::Int],
+            algorithm: Algorithm::Tpe,
+            trials: 24,
+            seed: 0,
+            batch: 8,
+            threads: 0,
+            eval_batches: 3,
+            pretrain_steps: 220,
+            qat_steps: 0,
+            qat_lr: 0.002,
+            hw_aware: true,
+            tpe_mean_lie: false,
+            cache_path: None,
+        }
+    }
+}
+
+/// One (model, task, format) cell of the grid.
+#[derive(Debug, Clone)]
+pub struct SweepItem {
+    pub model: String,
+    pub task: Task,
+    pub fmt: FormatKind,
+    /// *Effective* QAT fine-tune steps for this cell — after any
+    /// per-model downgrade to PTQ (see [`run_sweep`]). Part of the cache
+    /// scope, so it must reflect the objective actually evaluated, not
+    /// the requested [`SweepConfig::qat_steps`].
+    pub qat_steps: usize,
+}
+
+/// What one cell's evaluation produced (the Fig. 6 data points).
+#[derive(Debug, Clone)]
+pub struct SweepCell {
+    /// Best scalarized objective value.
+    pub value: f64,
+    pub accuracy: f64,
+    pub avg_bits: f64,
+    /// "QAT" or "PTQ" (the paper's per-model split).
+    pub mode: String,
+}
+
+/// A finished cell: the result plus this cell's cache activity.
+/// `cache.misses` is exactly the number of evaluator invocations paid;
+/// a re-run with a warm cache shows `misses == 0`, `hit_rate() == 1`.
+#[derive(Debug, Clone)]
+pub struct SweepRow {
+    pub item: SweepItem,
+    pub cell: SweepCell,
+    pub cache: CacheStats,
+}
+
+/// Sweep outcome: all rows plus store-wide cache accounting.
+#[derive(Debug)]
+pub struct SweepReport {
+    pub rows: Vec<SweepRow>,
+    /// Aggregate counters over every scope touched.
+    pub totals: CacheStats,
+    /// Entries preloaded from disk at open (0 on a cold start).
+    pub loaded_entries: usize,
+    /// Entries flushed back at the end (0 when not disk-backed).
+    pub saved_entries: usize,
+    /// Why on-disk contents were discarded, if they were (version
+    /// mismatch / corruption — see `CacheStore::load_note`).
+    pub load_note: Option<String>,
+}
+
+impl SweepReport {
+    /// Store-wide hit rate for this sweep's lookups.
+    pub fn hit_rate(&self) -> f64 {
+        self.totals.hit_rate()
+    }
+}
+
+/// The grid in deterministic model → task → format order. Every cell
+/// starts with the *requested* `cfg.qat_steps`; callers that gate QAT on
+/// per-model capability (like [`run_sweep`]) must downgrade
+/// `SweepItem::qat_steps` BEFORE handing items to [`sweep_with`], so the
+/// cache scope matches the objective actually evaluated.
+pub fn grid(cfg: &SweepConfig) -> Vec<SweepItem> {
+    let mut items = Vec::new();
+    for model in &cfg.models {
+        for &task in &cfg.tasks {
+            for &fmt in &cfg.fmts {
+                items.push(SweepItem {
+                    model: model.clone(),
+                    task,
+                    fmt,
+                    qat_steps: cfg.qat_steps,
+                });
+            }
+        }
+    }
+    items
+}
+
+/// The scope string for one cell under this sweep's hyperparameters.
+/// Uses the cell's *effective* `qat_steps`, not the requested one.
+pub fn cell_scope(cfg: &SweepConfig, item: &SweepItem) -> String {
+    eval_scope(
+        &item.model,
+        item.task,
+        item.fmt,
+        item.qat_steps,
+        cfg.qat_lr,
+        cfg.eval_batches,
+        cfg.pretrain_steps,
+        if cfg.hw_aware { "hw" } else { "sw" },
+    )
+}
+
+/// Generic sweep core: run `run_one` for every cell of `items` against
+/// that cell's scoped cache from `store`, account per-cell and total
+/// cache activity, and flush the store once at the end (atomic; no-op
+/// for in-memory stores). A cell failure aborts the sweep *after*
+/// flushing what completed, so paid evaluations are never lost.
+pub fn sweep_with<F>(
+    cfg: &SweepConfig,
+    store: &CacheStore,
+    items: Vec<SweepItem>,
+    mut run_one: F,
+) -> Result<SweepReport>
+where
+    F: FnMut(&SweepItem, &EvalCache) -> Result<SweepCell>,
+{
+    let mut rows = Vec::new();
+    let mut failure: Option<anyhow::Error> = None;
+    for item in items {
+        let cache = store.cache(&cell_scope(cfg, &item));
+        let before = cache.stats();
+        match run_one(&item, &cache) {
+            Ok(cell) => {
+                let delta = cache.stats().since(&before);
+                rows.push(SweepRow { item, cell, cache: delta });
+            }
+            Err(e) => {
+                failure = Some(e.context(format!(
+                    "sweep cell {}/{}/{}",
+                    item.model,
+                    item.task.name(),
+                    item.fmt.name()
+                )));
+                break;
+            }
+        }
+    }
+    store.save()?;
+    if let Some(e) = failure {
+        return Err(e);
+    }
+    Ok(SweepReport {
+        rows,
+        totals: store.stats(),
+        loaded_entries: store.loaded_entries(),
+        saved_entries: store.total_entries(),
+        load_note: store.load_note().map(str::to_string),
+    })
+}
+
+/// Run the full sweep against the real pipeline. Weights are pulled from
+/// the pretrain cache (trained on first use), so repeated sweeps pay at
+/// most the search evaluations — and with a warm `cache_path`, none.
+pub fn run_sweep(session: &Session, cfg: &SweepConfig) -> Result<SweepReport> {
+    let store = match &cfg.cache_path {
+        Some(p) => CacheStore::open(p),
+        None => CacheStore::in_memory(),
+    };
+    // Resolve each cell's EFFECTIVE QAT budget up front (the paper's
+    // QAT-small / PTQ-large split: only models shipping the matching
+    // `qat_<fmt>` artifact fine-tune). This must happen before
+    // `sweep_with` computes cache scopes — a PTQ-evaluated cell stored
+    // under a `qatN` scope would poison later QAT-capable runs.
+    let mut items = grid(cfg);
+    for item in &mut items {
+        if item.qat_steps > 0 {
+            let qat_key = format!("qat_{}", item.fmt.name());
+            let has_qat = session
+                .manifest
+                .model(&item.model)
+                .map(|m| m.artifacts.contains_key(&qat_key))
+                .unwrap_or(false);
+            if !has_qat {
+                item.qat_steps = 0;
+            }
+        }
+    }
+    sweep_with(cfg, &store, items, |item, cache| {
+        let meta = session.manifest.model(&item.model)?.clone();
+        let w = pretrain(
+            session,
+            &meta,
+            if meta.kind == "lm" { None } else { Some(item.task) },
+            &PretrainConfig { steps: cfg.pretrain_steps, log_every: 0, ..Default::default() },
+        )?;
+        let eval = batches(item.task, 1, cfg.eval_batches, meta.batch, meta.seq_len);
+        let mut ev = Evaluator::new(&session.runtime, &meta, &w, &eval);
+        ev.objective = if cfg.hw_aware { Objective::default() } else { Objective::sw_only() };
+        let profile = profile_model(&session.runtime, &meta, &w, &eval[..1])?;
+
+        let scfg = SearchConfig {
+            algorithm: cfg.algorithm,
+            trials: cfg.trials,
+            fmt: item.fmt,
+            seed: cfg.seed,
+            qat_steps: item.qat_steps,
+            qat_lr: cfg.qat_lr,
+            batch: cfg.batch.max(1),
+            threads: cfg.threads,
+            tpe_mean_lie: cfg.tpe_mean_lie,
+            ..Default::default()
+        };
+        let outcome = run_search_cached(&ev, &profile, item.task, &scfg, cache)?;
+        Ok(SweepCell {
+            value: outcome.best_eval.value,
+            accuracy: outcome.best_eval.accuracy,
+            avg_bits: outcome.best_eval.avg_bits,
+            mode: if item.qat_steps > 0 { "QAT".to_string() } else { "PTQ".to_string() },
+        })
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_is_deterministic_and_complete() {
+        let cfg = SweepConfig {
+            models: vec!["a".into(), "b".into()],
+            tasks: vec![Task::Sst2, Task::Qqp],
+            fmts: vec![FormatKind::MxInt],
+            ..Default::default()
+        };
+        let g = grid(&cfg);
+        assert_eq!(g.len(), 4);
+        assert_eq!((g[0].model.as_str(), g[0].task), ("a", Task::Sst2));
+        assert_eq!((g[3].model.as_str(), g[3].task), ("b", Task::Qqp));
+        assert!(g.iter().all(|i| i.qat_steps == cfg.qat_steps));
+    }
+
+    #[test]
+    fn cells_share_scope_only_with_identical_context() {
+        let cfg = SweepConfig::default();
+        let a =
+            SweepItem { model: "m".into(), task: Task::Sst2, fmt: FormatKind::MxInt, qat_steps: 0 };
+        let b =
+            SweepItem { model: "m".into(), task: Task::Sst2, fmt: FormatKind::Int, qat_steps: 0 };
+        assert_ne!(cell_scope(&cfg, &a), cell_scope(&cfg, &b));
+        assert_eq!(cell_scope(&cfg, &a), cell_scope(&cfg, &a.clone()));
+        let sw = SweepConfig { hw_aware: false, ..SweepConfig::default() };
+        assert_ne!(cell_scope(&cfg, &a), cell_scope(&sw, &a));
+        // the scope tracks the cell's EFFECTIVE qat budget, not the
+        // sweep-wide request: a PTQ-downgraded cell must not alias a
+        // QAT-evaluated one
+        let qat = SweepItem { qat_steps: 2, ..a.clone() };
+        assert_ne!(cell_scope(&cfg, &a), cell_scope(&cfg, &qat));
+    }
+
+    #[test]
+    fn sweep_with_accounts_per_cell_and_flushes_nothing_in_memory() {
+        let cfg = SweepConfig {
+            models: vec!["toy".into()],
+            tasks: vec![Task::Sst2, Task::Qqp],
+            fmts: vec![FormatKind::MxInt],
+            ..Default::default()
+        };
+        let store = CacheStore::in_memory();
+        let report = sweep_with(&cfg, &store, grid(&cfg), |item, cache| {
+            // two lookups per cell: one miss+insert, one hit
+            let key = vec![7u64];
+            assert!(cache.get(&key).is_none());
+            cache.insert(key.clone(), (1.0, vec![]));
+            assert!(cache.get(&key).is_some());
+            Ok(SweepCell {
+                value: 1.0,
+                accuracy: 0.9,
+                avg_bits: 4.0,
+                mode: item.task.name().to_string(),
+            })
+        })
+        .unwrap();
+        assert_eq!(report.rows.len(), 2);
+        for row in &report.rows {
+            assert_eq!((row.cache.hits, row.cache.misses, row.cache.inserts), (1, 1, 1));
+            assert_eq!(row.cache.hit_rate(), 0.5);
+        }
+        assert_eq!(report.totals.entries, 2);
+        assert_eq!(report.loaded_entries, 0);
+        assert!(report.load_note.is_none());
+    }
+
+    #[test]
+    fn sweep_failure_reports_cell_context() {
+        let cfg = SweepConfig {
+            models: vec!["toy".into()],
+            tasks: vec![Task::Sst2],
+            fmts: vec![FormatKind::Int],
+            ..Default::default()
+        };
+        let store = CacheStore::in_memory();
+        let err = sweep_with(&cfg, &store, grid(&cfg), |_, _| -> Result<SweepCell> {
+            Err(anyhow::anyhow!("boom"))
+        })
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("toy/sst2/int"), "{msg}");
+    }
+}

@@ -13,7 +13,7 @@ const SUCCESSORS: usize = 8;
 
 /// Deterministic Markov-chain corpus generator.
 pub struct MarkovCorpus {
-    /// succ[s][k] = k-th successor token of state s
+    /// `succ[s][k]` = k-th successor token of state s
     succ: Vec<[u16; SUCCESSORS]>,
     /// cumulative probabilities over successors (shared shape for all s)
     cum: [f64; SUCCESSORS],

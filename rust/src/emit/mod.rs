@@ -6,6 +6,24 @@
 //! We cannot run Vivado in this environment; the emitted SV is validated
 //! structurally by [`lint`] (balanced modules, declared/driven signals,
 //! instantiation arity) and its size/emit time feed Table 3.
+//!
+//! Submodule map:
+//!
+//!  * [`templates`] — the parameterized operator library: one SV module
+//!    skeleton per IR op kind (matmul, layernorm, softmax, …) with
+//!    ready/valid handshakes and per-port WIDTH/FRAC parameters taken
+//!    from the quantize pass's per-tensor precisions.
+//!  * [`verilog`] — the top-level generator: instantiates one template
+//!    per IR op, wires the dataflow edges (inserting the §4.2 skip-edge
+//!    buffers the parallelize pass sized), and returns an
+//!    [`EmittedDesign`] of named files.
+//!  * [`lint`] — the structural validator standing in for a real
+//!    elaboration: balanced `module`/`endmodule`, every signal declared
+//!    and driven, instantiation arity against the local module set.
+//!
+//! Entry points: [`emit_design`] for an in-memory design,
+//! `passes::emit_pass::emit_to_dir` to write it out (the `emit`
+//! subcommand and the Table 3 bench).
 
 pub mod lint;
 pub mod templates;

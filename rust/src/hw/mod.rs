@@ -16,6 +16,23 @@
 //! | BL8    | 16.1x                        | 3.8x           |
 //!
 //! Memory density needs no calibration: it follows from Eq. (1).
+//!
+//! Submodule map (each feeds one half of the `evaluate` pass's hardware
+//! score, combined by `passes::evaluate::Objective`):
+//!
+//!  * [`area`] — LUT-equivalent structural area per operator template,
+//!    calibrated to the Table 1 anchors above; sums to the `A` of Eq. (4).
+//!  * [`memory`] — Eq. (1) storage density per format/precision, and
+//!    the on-chip/off-chip split the parallelize pass budgets against.
+//!  * [`throughput`] — closed-form initiation-interval/latency model per
+//!    operator (the `θ` of Eq. 4), cross-validated against [`crate::sim`].
+//!  * [`energy`] — per-op dynamic energy for the Fig. 8 comparison.
+//!
+//! Everything here is pure arithmetic over the IR: no PJRT, no
+//! simulator, no I/O — which is what lets the search pass score
+//! thousands of candidate designs per second, and what lets a warm
+//! [`crate::search::CacheStore`] rebuild a winning design point without
+//! re-running any evaluation.
 
 pub mod area;
 pub mod energy;

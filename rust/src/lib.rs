@@ -9,9 +9,60 @@
 //! `python/compile/aot.py`) through the PJRT runtime in [`runtime`], and
 //! owns everything else: the MASE IR ([`ir`]), the numeric format library
 //! ([`formats`]), the pass pipeline ([`passes`]), the search algorithms
-//! ([`search`]), the hardware cost models ([`hw`]), the dataflow simulator
-//! ([`sim`]), the SystemVerilog emitter ([`emit`]), the synthetic data
-//! substrate ([`data`]) and the end-to-end coordinator ([`coordinator`]).
+//! and the persistent evaluation cache ([`search`]), the hardware cost
+//! models ([`hw`]), the dataflow simulator ([`sim`]), the SystemVerilog
+//! emitter ([`emit`]), the synthetic data substrate ([`data`]) and the
+//! end-to-end coordinator ([`coordinator`]).
+//!
+//! A module-by-module map to the paper's sections and figures lives in
+//! `docs/ARCHITECTURE.md` at the repository root.
+//!
+//! ## Quickstart
+//!
+//! Build and test (the tier-1 gate), then run the flow end to end:
+//!
+//! ```text
+//! scripts/ci.sh                       # fmt + clippy + doc + build + test
+//! cargo run --release -- search --model opt-125m-sim --task sst2
+//! cargo run --release -- sweep --cache artifacts/eval_cache.json
+//! cargo bench --bench fig4_search_algorithms
+//! ```
+//!
+//! Programmatic use mirrors the CLI: open a [`coordinator::Session`],
+//! build a [`coordinator::FlowConfig`] (one model/task/format) or a
+//! [`coordinator::SweepConfig`] (the whole Fig. 6 grid) and call
+//! [`coordinator::run_flow`] / [`coordinator::run_sweep`]. Lower-level
+//! entry points: [`passes::run_search_cached`] for one search against a
+//! caller-owned memo cache, and [`search::run_batched`] to drive a bare
+//! objective without the evaluator.
+//!
+//! ## Feature matrix
+//!
+//! | capability | entry point | needs PJRT artifacts? |
+//! |---|---|---|
+//! | format emulation + quantizers | [`formats`] | no |
+//! | IR build/parse/print/verify | [`ir`], [`frontend`] | no |
+//! | search algorithms (Fig. 4) | [`search`] | no |
+//! | persistent eval cache | [`search::CacheStore`] | no |
+//! | hardware cost models (Table 1) | [`hw`] | no |
+//! | dataflow simulation (Fig. 1e/1f) | [`sim`] | no |
+//! | SystemVerilog emission (Table 3) | [`emit`] | no |
+//! | accuracy evaluation / QAT | [`passes::Evaluator`] | **yes** |
+//! | pretraining the simulants | [`coordinator::pretrain()`] | **yes** |
+//! | full flow / sweep / benches | [`coordinator`] | **yes** |
+//!
+//! ## Offline `xla` caveat
+//!
+//! This environment has no crates.io access and no PJRT toolchain, so
+//! `rust/vendor/xla` (and `rust/vendor/anyhow`) are in-tree stand-ins:
+//! every PJRT entry point returns a clean error instead of executing an
+//! artifact. Everything in the "no" rows above is fully functional; the
+//! "yes" rows degrade to errors, and the tests/benches that need them
+//! self-skip when `artifacts/manifest.json` is absent. To light up the
+//! real thing, swap the `xla` path-dependency in `rust/Cargo.toml` for
+//! the real xla-rs bindings — and note the real `PjRtClient` is NOT
+//! thread-safe: parallel search then needs a per-worker client (the
+//! `Evaluator: Sync` compile-time assertion will flag this).
 pub mod formats;
 pub mod ir;
 pub mod frontend;

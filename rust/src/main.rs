@@ -4,14 +4,15 @@
 //!   pretrain  --all | --model M [--task T] [--steps N]
 //!   profile   --model M [--task T]
 //!   search    --model M [--task T] [--fmt F] [--algorithm A] [--trials N]
+//!   sweep     [--models M,..] [--tasks T,..|all] [--fmts F,..] [--cache FILE]
 //!   emit      --model M [--task T] [--out DIR]
 //!   e2e       --model M [--task T] [--trials N] [--out DIR]
 //!   ir        --model M            (print the MASE IR)
 //!   formats   [--model llama-sim]  (Table 1-style format comparison)
 
 use anyhow::{anyhow, Result};
-use mase::coordinator::{FlowConfig, PretrainConfig, Session};
 use mase::coordinator::pretrain;
+use mase::coordinator::{FlowConfig, PretrainConfig, Session, SweepConfig};
 use mase::data::Task;
 use mase::formats::FormatKind;
 use mase::search::Algorithm;
@@ -106,6 +107,8 @@ fn run(args: &Args) -> Result<()> {
                 pretrain_steps: args.get_usize("pretrain-steps", 220),
                 threads: args.threads(),
                 batch: args.get_usize("batch", 8),
+                cache_path: args.get("cache").map(std::path::PathBuf::from),
+                tpe_mean_lie: args.has("tpe-mean-lie"),
             };
             let report = mase::coordinator::run_flow(&session, &cfg)?;
             let best = &report.outcome.best_eval;
@@ -139,7 +142,90 @@ fn run(args: &Args) -> Result<()> {
                     d.display()
                 );
             }
+            let cs = &report.outcome.cache;
+            println!(
+                "eval cache: {} evaluations paid, {} served memoized ({:.0}% hit rate){}",
+                cs.misses,
+                cs.hits,
+                cs.hit_rate() * 100.0,
+                match args.get("cache") {
+                    Some(p) => format!(", {} entries persisted to {p}", cs.entries),
+                    None => String::new(),
+                }
+            );
             println!("\npass timing (Table 4):\n{}", report.pass_manager.report());
+        }
+        "sweep" => {
+            let list = |key: &str, default: &str| -> Vec<String> {
+                args.get_or(key, default).split(',').map(str::to_string).collect()
+            };
+            let tasks = match args.get_or("tasks", "all").as_str() {
+                "all" => Task::ALL.to_vec(),
+                csv => csv
+                    .split(',')
+                    .map(|t| Task::from_name(t).ok_or_else(|| anyhow!("unknown task '{t}'")))
+                    .collect::<Result<Vec<_>>>()?,
+            };
+            let fmts = list("fmts", "mxint,int")
+                .iter()
+                .map(|f| FormatKind::from_name(f).ok_or_else(|| anyhow!("unknown format '{f}'")))
+                .collect::<Result<Vec<_>>>()?;
+            let cfg = SweepConfig {
+                models: list("models", "opt-125m-sim,opt-350m-sim,opt-1.3b-sim"),
+                tasks,
+                fmts,
+                algorithm: Algorithm::from_name(&args.get_or("algorithm", "tpe"))
+                    .ok_or_else(|| anyhow!("unknown algorithm"))?,
+                trials: args.get_usize("trials", 24),
+                seed: args.get_usize("seed", 0) as u64,
+                batch: args.get_usize("batch", 8),
+                threads: args.threads(),
+                eval_batches: args.get_usize("eval-batches", 3),
+                pretrain_steps: args.get_usize("pretrain-steps", 220),
+                qat_steps: args.get_usize("qat-steps", 0),
+                qat_lr: args.get_f64("qat-lr", 0.002) as f32,
+                hw_aware: !args.has("sw-only"),
+                tpe_mean_lie: args.has("tpe-mean-lie"),
+                cache_path: args.get("cache").map(std::path::PathBuf::from),
+            };
+            let report = mase::coordinator::run_sweep(&session, &cfg)?;
+            if let Some(note) = &report.load_note {
+                println!("eval cache: {note}");
+            }
+            let mut t = mase::util::Table::new(vec![
+                "model", "task", "fmt", "mode", "acc", "avg_bits", "evals", "hits", "hit%",
+            ]);
+            for row in &report.rows {
+                t.row(vec![
+                    row.item.model.clone(),
+                    row.item.task.name().to_string(),
+                    row.item.fmt.name().to_string(),
+                    row.cell.mode.clone(),
+                    format!("{:.3}", row.cell.accuracy),
+                    format!("{:.2}", row.cell.avg_bits),
+                    row.cache.misses.to_string(),
+                    row.cache.hits.to_string(),
+                    format!("{:.0}", row.cache.hit_rate() * 100.0),
+                ]);
+            }
+            println!("{}", t.render());
+            println!(
+                "cache: {} entries loaded, {} stored, {} evaluations paid, {} memoized ({:.0}% hit rate)",
+                report.loaded_entries,
+                report.saved_entries,
+                report.totals.misses,
+                report.totals.hits,
+                report.hit_rate() * 100.0,
+            );
+            match &cfg.cache_path {
+                Some(p) => println!(
+                    "flushed to {} — a re-run of this sweep performs zero re-simulations",
+                    p.display()
+                ),
+                None => {
+                    println!("(in-memory cache only; pass --cache FILE to persist across runs)")
+                }
+            }
         }
         "ir" => {
             let model = args.get("model").ok_or_else(|| anyhow!("--model required"))?;
@@ -204,10 +290,15 @@ usage: mase <subcommand> [flags]
   pretrain --all | --model M [--task T] [--steps N]
   profile  --model M [--task T]
   search   --model M [--task T] [--fmt mxint|int|bmf|bl] [--algorithm tpe|random|qmc|nsga2] [--trials N] [--sw-only]
+  sweep    [--models M,..] [--tasks T,..|all] [--fmts F,..] [--trials N] [--qat-steps N] [--sw-only]
+           (the Fig. 6 grid through one shared eval cache; with --cache a
+            re-run of the same sweep performs zero re-simulations)
   emit     --model M [--task T] [--out DIR]
   e2e      --model M [--task T] [--trials N]
   ir       --model M
   formats  [--model llama-sim]
 common: --artifacts DIR (default ./artifacts)
         --threads N (search eval workers; 0 = auto, also MASE_THREADS)
-        --batch N   (search proposals per ask/tell round, default 8)";
+        --batch N   (search proposals per ask/tell round, default 8)
+        --cache FILE (persistent eval cache for search/sweep/e2e/emit)
+        --tpe-mean-lie (TPE batches lie at the observed mean, not the min)";

@@ -19,7 +19,7 @@ pub use evaluate::{EvalResult, Evaluator, Objective};
 pub use parallelize::{parallelize, DesignPoint};
 pub use profile::{profile_model, ProfileData};
 pub use quantize::QuantSolution;
-pub use search_pass::{run_search, SearchConfig, SearchOutcome};
+pub use search_pass::{eval_scope, run_search, run_search_cached, SearchConfig, SearchOutcome};
 
 use std::collections::BTreeMap;
 use std::time::Instant;

@@ -6,13 +6,17 @@
 //! action.
 //!
 //! Trials are evaluated through the batched parallel driver
-//! [`crate::search::run_batched`]: `cfg.batch` proposals per ask/tell
-//! round fan out over `cfg.threads` workers, with a memo cache keyed on
-//! the *rounded* search vector (the exact quantization
+//! [`crate::search::run_batched_cached`]: `cfg.batch` proposals per
+//! ask/tell round fan out over `cfg.threads` workers, with a memo cache
+//! keyed on the *rounded* search vector (the exact quantization
 //! [`QuantSolution::from_search_vector`] applies), so duplicate
 //! proposals are never re-simulated. With a fixed seed the trial history
 //! is identical for every thread count — see the batch-order convention
-//! in the `search` module docs.
+//! in the `search` module docs. [`run_search_cached`] accepts a
+//! caller-owned (possibly disk-backed, see
+//! [`crate::search::CacheStore`]) cache keyed by [`eval_scope`], which
+//! is how `mase sweep` and the Fig. 4/6 benches amortize evaluations
+//! across format/task combinations and across process runs.
 
 use super::evaluate::{EvalResult, Evaluator};
 use super::profile::ProfileData;
@@ -20,7 +24,10 @@ use super::quantize::QuantSolution;
 use crate::data::Task;
 use crate::formats::FormatKind;
 use crate::runtime::TensorData;
-use crate::search::{best_curve, run_batched, Algorithm, BatchOptions, MemoKey, Space, Trial};
+use crate::search::{
+    best_curve, run_batched_cached, Algorithm, BatchOptions, CacheStats, EvalCache, LieStrategy,
+    MemoKey, Space, Trial,
+};
 use crate::util::pool::threads_from_env;
 use anyhow::Result;
 
@@ -43,6 +50,9 @@ pub struct SearchConfig {
     /// var, falling back to all cores minus one (see
     /// [`crate::util::pool::threads_from_env`]).
     pub threads: usize,
+    /// Use TPE's mean-value constant lie instead of the worst-observed
+    /// lie for batched proposals (see [`LieStrategy`]).
+    pub tpe_mean_lie: bool,
 }
 
 impl Default for SearchConfig {
@@ -58,6 +68,7 @@ impl Default for SearchConfig {
             bits_hi: 8.0,
             batch: 8,
             threads: 0,
+            tpe_mean_lie: false,
         }
     }
 }
@@ -69,6 +80,10 @@ pub struct SearchOutcome {
     pub best_eval: EvalResult,
     /// Fine-tuned weights if QAT ran (else None).
     pub tuned_weights: Option<Vec<f32>>,
+    /// Memo-cache activity during this search: hit/miss/insert deltas
+    /// plus the cache's final entry count. `misses` is exactly the
+    /// number of evaluator invocations the search paid for.
+    pub cache: CacheStats,
 }
 
 /// The search space for a format family (paper §4.1's reduction: MXInt
@@ -86,13 +101,67 @@ pub fn space_for(fmt: FormatKind, num_qtensors: usize, lo: f64, hi: f64) -> Spac
     }
 }
 
-/// Run the full search for one (model, task, format).
+/// Scope string namespacing one evaluation context inside a
+/// [`crate::search::CacheStore`]. Memoized values are only valid for the
+/// exact objective that produced them, so every knob that changes what a
+/// config scores — model, task, format, memo mode, the *effective* QAT
+/// budget and learning rate, number of eval batches, pretrain budget,
+/// and the objective flavor ("hw" cost-aware vs "sw" accuracy-only) —
+/// is part of the scope. Two runs that differ in any of these read and
+/// write disjoint entry sets. The learning rate only appears when QAT
+/// actually runs (`qat_steps > 0`); it does not affect PTQ scoring.
+pub fn eval_scope(
+    model: &str,
+    task: Task,
+    fmt: FormatKind,
+    qat_steps: usize,
+    qat_lr: f32,
+    eval_batches: usize,
+    pretrain_steps: usize,
+    objective: &str,
+) -> String {
+    let qat = if qat_steps > 0 {
+        format!("qat{qat_steps}-lr{qat_lr}")
+    } else {
+        "qat0".to_string()
+    };
+    format!(
+        "{model}/{}/{}/{}/{qat}/eb{eval_batches}/ps{pretrain_steps}/{objective}",
+        task.name(),
+        fmt.name(),
+        MemoKey::Rounded.name(),
+    )
+}
+
+/// Run the full search for one (model, task, format) with a private,
+/// run-local memo cache. See [`run_search_cached`] for the shared form.
 pub fn run_search(
     ev: &Evaluator,
     profile: &ProfileData,
     task: Task,
     cfg: &SearchConfig,
 ) -> Result<SearchOutcome> {
+    run_search_cached(ev, profile, task, cfg, &EvalCache::new())
+}
+
+/// [`run_search`] against a caller-owned [`EvalCache`] — the persistent
+/// cross-sweep path. The cache may be pre-seeded from disk (see
+/// [`crate::search::CacheStore`]); configurations already present are
+/// never re-simulated, and a fully warm cache makes the whole search
+/// evaluator-free. The returned [`SearchOutcome::cache`] reports this
+/// run's hit/miss/insert deltas.
+///
+/// The caller must hand the same cache only to searches whose objective
+/// is identical (same model, task, format, QAT/eval/pretrain budgets and
+/// objective flavor) — key by [`eval_scope`] when in doubt.
+pub fn run_search_cached(
+    ev: &Evaluator,
+    profile: &ProfileData,
+    task: Task,
+    cfg: &SearchConfig,
+    cache: &EvalCache,
+) -> Result<SearchOutcome> {
+    let stats_before = cache.stats();
     let v = ev.meta.num_qtensors();
     let space = space_for(cfg.fmt, v, cfg.bits_lo, cfg.bits_hi);
 
@@ -156,8 +225,9 @@ pub fn run_search(
         batch: cfg.batch.max(1),
         threads: threads_from_env(cfg.threads),
         memo: MemoKey::Rounded,
+        tpe_lie: if cfg.tpe_mean_lie { LieStrategy::Mean } else { LieStrategy::Min },
     };
-    let history = run_batched(cfg.algorithm, space, cfg.seed, cfg.trials, &opts, |x| {
+    let history = run_batched_cached(cfg.algorithm, space, cfg.seed, cfg.trials, &opts, cache, |x| {
         let sol = QuantSolution::from_search_vector(cfg.fmt, x, ev.meta, profile);
         let tuned = qat_tune(&sol);
         let result = match &tuned {
@@ -194,15 +264,62 @@ pub fn run_search(
         }
     });
 
-    let best = best
-        .into_inner()
-        .unwrap()
-        .ok_or_else(|| anyhow::anyhow!("no successful trials"))?;
+    // Winner selection scans the HISTORY, not just the configs this run
+    // evaluated: with a pre-seeded cache ([`run_search_cached`]) the best
+    // trial may have been served from disk without ever reaching the
+    // objective closure above. Ordering matches the in-closure tracker —
+    // max value, ties broken by the smaller rounded key — so cold runs
+    // pick the identical winner they always did.
+    let mut winner: Option<(f64, Vec<u64>, usize)> = None;
+    for (i, t) in history.iter().enumerate() {
+        if !t.value.is_finite() {
+            continue;
+        }
+        let key = MemoKey::Rounded.key(&t.x);
+        let better = match &winner {
+            None => true,
+            Some((v, k, _)) => t.value > *v || (t.value == *v && key < *k),
+        };
+        if better {
+            winner = Some((t.value, key, i));
+        }
+    }
+    let (win_value, win_key, win_idx) =
+        winner.ok_or_else(|| anyhow::anyhow!("no successful trials"))?;
+
+    let captured = best.into_inner().unwrap();
+    let (best_sol, best_eval, tuned_weights) = match captured {
+        // The winner passed through the objective this run: use the full
+        // EvalResult (and QAT weights) captured there.
+        Some(b) if b.value == win_value && b.key == win_key => (b.sol, b.eval, b.tuned),
+        // The winner came out of the memo cache. Rebuild what the cache
+        // carries (value + objective components, acc is component 0) plus
+        // the deterministic hardware half — deliberately WITHOUT calling
+        // the evaluator, so a fully warm search stays evaluator-free.
+        // The PJRT-side loss/perplexity are not memoized and read NaN;
+        // QAT-tuned weights cannot be reconstructed either.
+        _ => {
+            let t = &history[win_idx];
+            let sol = QuantSolution::from_search_vector(cfg.fmt, &t.x, ev.meta, profile);
+            let (dp, avg_bits, _g) = ev.hardware(&sol);
+            let eval = EvalResult {
+                accuracy: t.objectives.first().copied().unwrap_or(f64::NAN),
+                mean_loss: f64::NAN,
+                perplexity: f64::NAN,
+                avg_bits,
+                design: dp,
+                value: win_value,
+                objectives: t.objectives.clone(),
+            };
+            (sol, eval, None)
+        }
+    };
     Ok(SearchOutcome {
         history,
-        best: best.sol,
-        best_eval: best.eval,
-        tuned_weights: best.tuned,
+        best: best_sol,
+        best_eval,
+        tuned_weights,
+        cache: cache.stats().since(&stats_before),
     })
 }
 
@@ -227,6 +344,32 @@ mod tests {
         let s = space_for(FormatKind::Int, 4, 2.0, 8.0);
         assert!(s.lo[..4].iter().all(|&l| l >= 3.0));
         assert!(s.lo[4..].iter().all(|&l| l == -2.0));
+    }
+
+    #[test]
+    fn eval_scope_separates_contexts() {
+        let lr = 0.002;
+        let a = eval_scope("opt-125m-sim", Task::Sst2, FormatKind::MxInt, 0, lr, 4, 220, "hw");
+        assert_eq!(a, "opt-125m-sim/sst2/mxint/rounded/qat0/eb4/ps220/hw");
+        // every objective-changing knob must change the scope
+        for b in [
+            eval_scope("opt-350m-sim", Task::Sst2, FormatKind::MxInt, 0, lr, 4, 220, "hw"),
+            eval_scope("opt-125m-sim", Task::Qqp, FormatKind::MxInt, 0, lr, 4, 220, "hw"),
+            eval_scope("opt-125m-sim", Task::Sst2, FormatKind::Int, 0, lr, 4, 220, "hw"),
+            eval_scope("opt-125m-sim", Task::Sst2, FormatKind::MxInt, 2, lr, 4, 220, "hw"),
+            eval_scope("opt-125m-sim", Task::Sst2, FormatKind::MxInt, 0, lr, 3, 220, "hw"),
+            eval_scope("opt-125m-sim", Task::Sst2, FormatKind::MxInt, 0, lr, 4, 100, "hw"),
+            eval_scope("opt-125m-sim", Task::Sst2, FormatKind::MxInt, 0, lr, 4, 220, "sw"),
+        ] {
+            assert_ne!(a, b);
+        }
+        // the QAT learning rate matters exactly when QAT runs
+        let q1 = eval_scope("m", Task::Sst2, FormatKind::MxInt, 2, 0.002, 4, 220, "hw");
+        let q2 = eval_scope("m", Task::Sst2, FormatKind::MxInt, 2, 0.01, 4, 220, "hw");
+        assert_ne!(q1, q2, "differing QAT lr must not share entries");
+        let p1 = eval_scope("m", Task::Sst2, FormatKind::MxInt, 0, 0.002, 4, 220, "hw");
+        let p2 = eval_scope("m", Task::Sst2, FormatKind::MxInt, 0, 0.01, 4, 220, "hw");
+        assert_eq!(p1, p2, "lr is irrelevant under PTQ");
     }
 
     #[test]

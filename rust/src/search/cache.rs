@@ -1,0 +1,428 @@
+//! Persistent, versioned storage for [`EvalCache`] — the cross-sweep
+//! memoization layer behind `mase sweep` and the Fig. 4/Fig. 6 benches.
+//!
+//! A [`CacheStore`] holds one [`EvalCache`] per *scope* (a string naming
+//! the evaluation context — see `passes::search_pass::eval_scope`) and
+//! serializes all of them to a single JSON file through [`crate::util::json`].
+//! The design goals, in order:
+//!
+//!  1. **Bit-exactness.** A warm run must reproduce a cold run exactly,
+//!     so every `f64` (memo-key coordinates, objective value, objective
+//!     components) is stored as its IEEE-754 bit pattern in fixed-width
+//!     hex (`{:016x}`), never as a decimal float. The in-tree JSON
+//!     number type is `f64`, which cannot carry a `u64` key losslessly.
+//!  2. **Fail-open loading.** A missing file, unparseable JSON, schema
+//!     or version mismatch, or any malformed entry degrades to a *cold*
+//!     cache with a human-readable note ([`CacheStore::load_note`]) —
+//!     a stale or corrupt cache must never abort a sweep.
+//!  3. **Atomic flushing.** [`CacheStore::save`] writes a sibling
+//!     `<file>.tmp` and renames it over the target, so a crash mid-write
+//!     leaves the previous cache intact.
+//!
+//! The on-disk schema (documented in full in the [`crate::search`]
+//! module docs) is:
+//!
+//! ```text
+//! {
+//!   "schema":  "mase-eval-cache",
+//!   "version": 1,
+//!   "scopes": {
+//!     "<model>/<task>/<fmt>/<memo>/...": {
+//!       "entries": [ {"k": ["<hex u64>", ...],   // canonicalized coords
+//!                     "v": "<hex f64>",          // scalarized objective
+//!                     "o": ["<hex f64>", ...]},  // objective components
+//!                   ... ]
+//!     }, ...
+//!   }
+//! }
+//! ```
+
+use super::EvalCache;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// One cache entry as (de)serialized: canonicalized per-dimension key
+/// bits, scalarized objective value, raw objective components.
+pub type CacheEntry = (Vec<u64>, f64, Vec<f64>);
+
+/// Magic string identifying an eval-cache file.
+pub const CACHE_SCHEMA: &str = "mase-eval-cache";
+/// On-disk format version. Bump on any change to the entry layout or the
+/// memo-key scheme; old files then load as cold caches (fail-open).
+pub const CACHE_VERSION: u64 = 1;
+
+/// Point-in-time counters of one [`EvalCache`] (or an aggregate over a
+/// whole [`CacheStore`]). `hits`/`misses`/`inserts` are cumulative since
+/// cache creation; [`CacheStats::since`] turns two snapshots into a
+/// per-phase delta. `entries` is always the absolute current size.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups that found a memoized evaluation.
+    pub hits: usize,
+    /// Lookups that fell through to the objective.
+    pub misses: usize,
+    /// Fresh evaluations memoized (excludes entries preloaded from disk).
+    pub inserts: usize,
+    /// Distinct configurations currently cached.
+    pub entries: usize,
+}
+
+impl CacheStats {
+    /// Fraction of lookups served from the cache (0.0 when idle).
+    pub fn hit_rate(&self) -> f64 {
+        let lookups = self.hits + self.misses;
+        if lookups == 0 {
+            0.0
+        } else {
+            self.hits as f64 / lookups as f64
+        }
+    }
+
+    /// Delta of the cumulative counters relative to an `earlier`
+    /// snapshot of the same cache; `entries` stays absolute.
+    pub fn since(&self, earlier: &CacheStats) -> CacheStats {
+        CacheStats {
+            hits: self.hits.saturating_sub(earlier.hits),
+            misses: self.misses.saturating_sub(earlier.misses),
+            inserts: self.inserts.saturating_sub(earlier.inserts),
+            entries: self.entries,
+        }
+    }
+
+    /// Accumulate another cache's counters (for store-wide totals).
+    pub fn absorb(&mut self, other: &CacheStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.inserts += other.inserts;
+        self.entries += other.entries;
+    }
+}
+
+/// A scope-keyed collection of [`EvalCache`]s with optional disk backing.
+///
+/// `open` never fails (see the module docs); `save` flushes atomically.
+/// Each scope's cache is shared behind an [`Arc`], so several searches —
+/// the four Fig. 4 algorithms, or repeated sweeps of one grid cell — can
+/// feed the same memo table concurrently.
+pub struct CacheStore {
+    path: Option<PathBuf>,
+    scopes: Mutex<BTreeMap<String, Arc<EvalCache>>>,
+    loaded_entries: usize,
+    load_note: Option<String>,
+}
+
+impl CacheStore {
+    /// A store with no disk backing: scoped sharing within one process,
+    /// `save` is a no-op.
+    pub fn in_memory() -> CacheStore {
+        CacheStore {
+            path: None,
+            scopes: Mutex::new(BTreeMap::new()),
+            loaded_entries: 0,
+            load_note: None,
+        }
+    }
+
+    /// Load-or-create a store backed by `path`. A missing file yields an
+    /// empty store; an unreadable, mis-versioned or corrupt file yields
+    /// an empty store with [`CacheStore::load_note`] explaining why the
+    /// previous contents were discarded.
+    pub fn open(path: &Path) -> CacheStore {
+        let mut store = CacheStore {
+            path: Some(path.to_path_buf()),
+            scopes: Mutex::new(BTreeMap::new()),
+            loaded_entries: 0,
+            load_note: None,
+        };
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(_) => return store, // fresh file: normal cold start
+        };
+        match parse_store(&text) {
+            Ok(scopes) => {
+                let mut map = BTreeMap::new();
+                let mut n = 0;
+                for (scope, entries) in scopes {
+                    n += entries.len();
+                    let cache = EvalCache::new();
+                    cache.preload(entries);
+                    map.insert(scope, Arc::new(cache));
+                }
+                store.scopes = Mutex::new(map);
+                store.loaded_entries = n;
+            }
+            Err(note) => {
+                store.load_note =
+                    Some(format!("discarded {}: {note}", path.display()));
+            }
+        }
+        store
+    }
+
+    /// Why the on-disk contents were discarded at `open`, if they were.
+    pub fn load_note(&self) -> Option<&str> {
+        self.load_note.as_deref()
+    }
+
+    /// Entries successfully preloaded from disk at `open`.
+    pub fn loaded_entries(&self) -> usize {
+        self.loaded_entries
+    }
+
+    /// The backing file, if any.
+    pub fn path(&self) -> Option<&Path> {
+        self.path.as_deref()
+    }
+
+    /// The cache for `scope`, created empty on first use.
+    pub fn cache(&self, scope: &str) -> Arc<EvalCache> {
+        self.scopes
+            .lock()
+            .unwrap()
+            .entry(scope.to_string())
+            .or_insert_with(|| Arc::new(EvalCache::new()))
+            .clone()
+    }
+
+    /// All scope names currently present (sorted).
+    pub fn scope_names(&self) -> Vec<String> {
+        self.scopes.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// Distinct configurations across all scopes.
+    pub fn total_entries(&self) -> usize {
+        self.scopes.lock().unwrap().values().map(|c| c.len()).sum()
+    }
+
+    /// Aggregate counters across all scopes.
+    pub fn stats(&self) -> CacheStats {
+        let mut total = CacheStats::default();
+        for c in self.scopes.lock().unwrap().values() {
+            total.absorb(&c.stats());
+        }
+        total
+    }
+
+    /// Atomically flush every scope to the backing file (no-op without
+    /// one). Last writer wins: the file is replaced wholesale, not merged
+    /// with concurrent writers — one sweep process per cache file.
+    pub fn save(&self) -> anyhow::Result<()> {
+        let Some(path) = &self.path else { return Ok(()) };
+        let mut scopes = BTreeMap::new();
+        for (scope, cache) in self.scopes.lock().unwrap().iter() {
+            let entries: Vec<Json> = cache
+                .snapshot()
+                .into_iter()
+                .map(|(k, v, o)| {
+                    let mut e = BTreeMap::new();
+                    e.insert(
+                        "k".to_string(),
+                        Json::Arr(k.iter().map(|&b| Json::Str(format!("{b:016x}"))).collect()),
+                    );
+                    e.insert("v".to_string(), Json::Str(format!("{:016x}", v.to_bits())));
+                    e.insert(
+                        "o".to_string(),
+                        Json::Arr(
+                            o.iter().map(|f| Json::Str(format!("{:016x}", f.to_bits()))).collect(),
+                        ),
+                    );
+                    Json::Obj(e)
+                })
+                .collect();
+            let mut s = BTreeMap::new();
+            s.insert("entries".to_string(), Json::Arr(entries));
+            scopes.insert(scope.clone(), Json::Obj(s));
+        }
+        let mut root = BTreeMap::new();
+        root.insert("schema".to_string(), Json::Str(CACHE_SCHEMA.to_string()));
+        root.insert("version".to_string(), Json::Num(CACHE_VERSION as f64));
+        root.insert("scopes".to_string(), Json::Obj(scopes));
+        let text = Json::Obj(root).to_string();
+
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let file_name = path
+            .file_name()
+            .ok_or_else(|| anyhow::anyhow!("cache path has no file name: {}", path.display()))?;
+        let tmp = path.with_file_name(format!("{}.tmp", file_name.to_string_lossy()));
+        std::fs::write(&tmp, text)?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+}
+
+/// Parse a serialized store into scope -> entries, or a note saying why
+/// the file is unusable. Any structural defect rejects the whole file:
+/// a partially loaded cache could silently mix key schemes.
+fn parse_store(text: &str) -> Result<BTreeMap<String, Vec<CacheEntry>>, String> {
+    let root = Json::parse(text).map_err(|e| format!("unreadable JSON ({e})"))?;
+    match root.get("schema").and_then(Json::as_str) {
+        Some(CACHE_SCHEMA) => {}
+        other => return Err(format!("schema {other:?} is not {CACHE_SCHEMA:?}")),
+    }
+    let version = root.get("version").and_then(Json::as_f64).unwrap_or(-1.0);
+    if version != CACHE_VERSION as f64 {
+        return Err(format!("cache version {version} (this build writes {CACHE_VERSION})"));
+    }
+    let scopes = root
+        .get("scopes")
+        .and_then(Json::as_obj)
+        .ok_or_else(|| "missing scopes object".to_string())?;
+    let mut out = BTreeMap::new();
+    for (scope, body) in scopes {
+        let entries = body
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| format!("scope {scope:?} has no entries array"))?;
+        let mut parsed = Vec::with_capacity(entries.len());
+        for e in entries {
+            parsed.push(parse_entry(e).ok_or_else(|| format!("malformed entry in {scope:?}"))?);
+        }
+        out.insert(scope.clone(), parsed);
+    }
+    Ok(out)
+}
+
+fn parse_entry(e: &Json) -> Option<CacheEntry> {
+    let key = e
+        .get("k")?
+        .as_arr()?
+        .iter()
+        .map(|j| hex_u64(j.as_str()?))
+        .collect::<Option<Vec<u64>>>()?;
+    let value = f64::from_bits(hex_u64(e.get("v")?.as_str()?)?);
+    let objectives = e
+        .get("o")?
+        .as_arr()?
+        .iter()
+        .map(|j| Some(f64::from_bits(hex_u64(j.as_str()?)?)))
+        .collect::<Option<Vec<f64>>>()?;
+    Some((key, value, objectives))
+}
+
+/// Strict fixed-width hex: exactly the 16 lowercase digits `{:016x}`
+/// emits, so hand-edited or truncated values read as corruption and a
+/// loadable file has exactly one byte representation per entry.
+fn hex_u64(s: &str) -> Option<u64> {
+    if s.len() != 16 || !s.bytes().all(|b| b.is_ascii_digit() || (b'a'..=b'f').contains(&b)) {
+        return None;
+    }
+    u64::from_str_radix(s, 16).ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_path(tag: &str) -> PathBuf {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static UNIQUE: AtomicUsize = AtomicUsize::new(0);
+        let n = UNIQUE.fetch_add(1, Ordering::Relaxed);
+        std::env::temp_dir().join(format!(
+            "mase-cache-{tag}-{}-{n}.json",
+            std::process::id()
+        ))
+    }
+
+    #[test]
+    fn hex_is_strict_fixed_width() {
+        assert_eq!(hex_u64("00000000000000ff"), Some(255));
+        assert_eq!(hex_u64("ff"), None, "short");
+        assert_eq!(hex_u64("00000000000000zz"), None, "not hex");
+        assert_eq!(hex_u64("00000000000000ff0"), None, "long");
+        assert_eq!(hex_u64("00000000000000FF"), None, "uppercase is not what {{:016x}} emits");
+    }
+
+    #[test]
+    fn floats_round_trip_bit_exact_through_hex() {
+        for v in [0.1 + 0.2, -0.0, 1.0 / 3.0, f64::MIN_POSITIVE, -1e300] {
+            let hex = format!("{:016x}", v.to_bits());
+            let back = f64::from_bits(hex_u64(&hex).unwrap());
+            assert_eq!(back.to_bits(), v.to_bits(), "{v}");
+        }
+    }
+
+    #[test]
+    fn empty_store_saves_and_reloads() {
+        let path = tmp_path("empty");
+        let store = CacheStore::open(&path);
+        assert_eq!(store.total_entries(), 0);
+        assert!(store.load_note().is_none(), "missing file is a normal cold start");
+        store.save().unwrap();
+        let again = CacheStore::open(&path);
+        assert!(again.load_note().is_none());
+        assert_eq!(again.total_entries(), 0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn scoped_entries_round_trip() {
+        let path = tmp_path("scoped");
+        let store = CacheStore::open(&path);
+        let a = store.cache("m/sst2/mxint/rounded");
+        a.insert(vec![3f64.to_bits(), 5f64.to_bits()], (0.75, vec![0.9, 0.1]));
+        let b = store.cache("m/qqp/int/rounded");
+        b.insert(vec![4f64.to_bits()], (-0.5, vec![]));
+        store.save().unwrap();
+
+        let again = CacheStore::open(&path);
+        assert_eq!(again.loaded_entries(), 2);
+        assert_eq!(
+            again.scope_names(),
+            vec!["m/qqp/int/rounded".to_string(), "m/sst2/mxint/rounded".to_string()]
+        );
+        let a2 = again.cache("m/sst2/mxint/rounded");
+        let got = a2.get(&[3f64.to_bits(), 5f64.to_bits()]).expect("preloaded entry");
+        assert_eq!(got, (0.75, vec![0.9, 0.1]));
+        // preloaded entries do not count as fresh inserts
+        assert_eq!(a2.stats().inserts, 0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn save_is_atomic_rename() {
+        let path = tmp_path("atomic");
+        let store = CacheStore::open(&path);
+        store.cache("s").insert(vec![1], (1.0, vec![]));
+        store.save().unwrap();
+        let tmp = path.with_file_name(format!(
+            "{}.tmp",
+            path.file_name().unwrap().to_string_lossy()
+        ));
+        assert!(!tmp.exists(), "tmp file must be renamed away");
+        assert!(path.exists());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn store_stats_aggregate_scopes() {
+        let store = CacheStore::in_memory();
+        let a = store.cache("a");
+        a.insert(vec![1], (1.0, vec![]));
+        a.get(&[1]);
+        a.get(&[2]);
+        let b = store.cache("b");
+        b.get(&[1]);
+        let s = store.stats();
+        assert_eq!((s.hits, s.misses, s.inserts, s.entries), (1, 2, 1, 1));
+        assert!((s.hit_rate() - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_since_subtracts_counters_keeps_entries() {
+        let c = EvalCache::new();
+        c.insert(vec![1], (1.0, vec![]));
+        c.get(&[1]);
+        let before = c.stats();
+        c.get(&[1]);
+        c.get(&[2]);
+        c.insert(vec![2], (2.0, vec![]));
+        let delta = c.stats().since(&before);
+        assert_eq!((delta.hits, delta.misses, delta.inserts, delta.entries), (1, 1, 1, 2));
+    }
+}

@@ -14,6 +14,24 @@ const GAMMA: f64 = 0.25;
 const N_STARTUP: usize = 10;
 const N_EI_CANDIDATES: usize = 24;
 
+/// Value assigned to constant-liar placeholders during `ask_batch`
+/// (Ginsbourger et al.'s kriging-believer family, applied to TPE).
+///
+/// `Min` — the worst observed value: maximally repels the rest of the
+/// batch from in-flight proposals, at the cost of branding every pending
+/// region "bad". `Mean` — the mean observed value: a neutral belief that
+/// still discourages exact duplicates but lets the KDE keep treating a
+/// promising region as promising, which helps at large batch sizes
+/// (ROADMAP: evaluate vs Fig. 4 convergence at batch 8–16).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum LieStrategy {
+    /// Worst (minimum) finite observed value — the conservative default.
+    #[default]
+    Min,
+    /// Mean of the finite observed values.
+    Mean,
+}
+
 pub struct Tpe {
     space: Space,
     rng: Rng,
@@ -21,11 +39,37 @@ pub struct Tpe {
     /// Number of constant-liar placeholders currently at the tail of
     /// `history` (see `ask_batch`); retracted before real results land.
     lies: usize,
+    lie_strategy: LieStrategy,
 }
 
 impl Tpe {
     pub fn new(space: Space, seed: u64) -> Self {
-        Self { space, rng: Rng::new(seed), history: Vec::new(), lies: 0 }
+        Self {
+            space,
+            rng: Rng::new(seed),
+            history: Vec::new(),
+            lies: 0,
+            lie_strategy: LieStrategy::Min,
+        }
+    }
+
+    /// Select the constant-liar variant used by `ask_batch`.
+    pub fn with_lie(mut self, lie: LieStrategy) -> Self {
+        self.lie_strategy = lie;
+        self
+    }
+
+    /// The placeholder value for the current history (0.0 when empty).
+    fn lie_value(&self) -> f64 {
+        let finite: Vec<f64> =
+            self.history.iter().map(|t| t.value).filter(|v| v.is_finite()).collect();
+        if finite.is_empty() {
+            return 0.0;
+        }
+        match self.lie_strategy {
+            LieStrategy::Min => finite.iter().copied().fold(f64::INFINITY, f64::min),
+            LieStrategy::Mean => finite.iter().sum::<f64>() / finite.len() as f64,
+        }
     }
 
     fn retract_lies(&mut self) {
@@ -112,19 +156,14 @@ impl Searcher for Tpe {
     }
 
     /// Constant-liar batching (Ginsbourger et al.): after proposing each
-    /// point, provisionally record it with the worst value observed so
-    /// far, so the next proposal of the same batch treats that region as
-    /// unpromising and explores elsewhere. The lies are retracted when
-    /// the real evaluations arrive.
+    /// point, provisionally record it with a fabricated value (the
+    /// [`LieStrategy`]: worst-observed by default, or the observed mean),
+    /// so the next proposal of the same batch treats that region as
+    /// already claimed and explores elsewhere. The lies are retracted
+    /// when the real evaluations arrive.
     fn ask_batch(&mut self, n: usize) -> Vec<Vec<f64>> {
         self.retract_lies();
-        let lie = self
-            .history
-            .iter()
-            .map(|t| t.value)
-            .filter(|v| v.is_finite())
-            .fold(f64::INFINITY, f64::min);
-        let lie = if lie.is_finite() { lie } else { 0.0 };
+        let lie = self.lie_value();
         let mut out = Vec::with_capacity(n);
         for _ in 0..n {
             let x = self.ask();
@@ -211,6 +250,33 @@ mod tests {
         for t in &s.history[len_before..] {
             assert_eq!(t.value, -(t.x[0] - 0.2f64).powi(2), "lie left in history");
         }
+    }
+
+    #[test]
+    fn mean_lie_places_placeholders_at_observed_mean() {
+        let mut s = Tpe::new(Space::uniform(1, 0.0, 1.0), 4).with_lie(LieStrategy::Mean);
+        for v in [1.0, 2.0, 6.0] {
+            s.tell(Trial { x: vec![0.5], value: v, objectives: vec![] });
+        }
+        let len_before = s.history.len();
+        s.ask_batch(3);
+        assert!(s.history[len_before..].iter().all(|t| t.value == 3.0), "mean of 1,2,6 is 3");
+
+        // the default stays at the worst observed value
+        let mut m = Tpe::new(Space::uniform(1, 0.0, 1.0), 4);
+        for v in [1.0, 2.0, 6.0] {
+            m.tell(Trial { x: vec![0.5], value: v, objectives: vec![] });
+        }
+        m.ask_batch(2);
+        assert!(m.history[3..].iter().all(|t| t.value == 1.0));
+    }
+
+    #[test]
+    fn lie_value_ignores_failed_trials() {
+        let mut s = Tpe::new(Space::uniform(1, 0.0, 1.0), 4).with_lie(LieStrategy::Mean);
+        s.tell(Trial { x: vec![0.1], value: f64::NEG_INFINITY, objectives: vec![] });
+        s.tell(Trial { x: vec![0.2], value: 4.0, objectives: vec![] });
+        assert_eq!(s.lie_value(), 4.0, "non-finite failures must not poison the mean");
     }
 
     #[test]

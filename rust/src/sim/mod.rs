@@ -12,6 +12,16 @@
 //! Used to (a) regenerate Fig. 1e/1f, and (b) cross-validate the
 //! closed-form throughput regression in [`crate::hw::throughput`]
 //! (EXPERIMENTS.md ablation).
+//!
+//! Structure: [`engine`] owns the generic event loop
+//! ([`simulate`] over [`NodeSpec`]s with a [`SimConfig`], producing a
+//! [`SimReport`] of cycles, utilization and per-node stalls, where
+//! ready-but-blocked nodes are credited the full width of each clock
+//! jump). This module adds the IR glue: lowering a quantized+parallelized
+//! [`crate::ir::Graph`] into node specs (latencies from
+//! [`crate::hw::throughput`], FIFO depths from the §4.2 buffer
+//! insertion) and the [`simulated_throughput`] convenience the
+//! integration tests and Fig. 1 bench call.
 
 pub mod engine;
 

@@ -37,6 +37,12 @@ if [[ -z "${SKIP_LINTS:-}" ]]; then
   else
     echo "  (clippy not installed; skipping lints)"
   fi
+
+  # Docs gate: rustdoc warnings (broken intra-doc links, bad code fences,
+  # missing docs where required) are errors, so the architecture docs in
+  # lib.rs and the module headers cannot rot silently.
+  echo "==> cargo doc --no-deps (rustdoc warnings are errors)"
+  RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 fi
 
 echo "==> tier-1 verify: cargo build --release && cargo test -q"
