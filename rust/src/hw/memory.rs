@@ -2,14 +2,23 @@
 //! greedily pin the hottest weight tensors on-chip until the URAM/BRAM
 //! budget is spent; the rest stream from off-chip and consume bandwidth,
 //! which can cap the achievable pipeline throughput.
+//!
+//! Tensors are priced with the *measured* packed storage
+//! ([`crate::packed::layout::packed_bits_for`]): shared-exponent bytes,
+//! BMF guard / BL zero bits and word-alignment padding included — not
+//! the idealized analytic `ty.bits()` of Eq. (1). For MXInt at 8-bit
+//! elements the two agree exactly; for the other block formats the
+//! measured number is the honest (slightly larger) one.
 
 use super::Device;
 use crate::ir::Graph;
+use crate::packed::layout::packed_bits_for;
 
 /// Allocation decision for one parameter tensor.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ParamPlacement {
     pub value_name: String,
+    /// Measured packed storage bits (see module docs).
     pub bits: f64,
     /// Reuse count per inference (how many tiles stream past it).
     pub reuse: f64,
@@ -23,7 +32,7 @@ pub fn plan(g: &Graph, device: &Device) -> Vec<ParamPlacement> {
     for op in &g.ops {
         for &p in &op.params {
             let v = g.value(p);
-            let bits = v.ty.bits();
+            let bits = packed_bits_for(v.ty.format, v.ty.precision, &v.ty.shape) as f64;
             // A weight is re-read once per streaming tile of the output.
             let out = op.results.first().map(|&r| g.value(r)).unwrap();
             let tile = out.attrs.tile.0.max(1) * out.attrs.tile.1.max(1);
@@ -31,10 +40,13 @@ pub fn plan(g: &Graph, device: &Device) -> Vec<ParamPlacement> {
             params.push(ParamPlacement { value_name: v.name.clone(), bits, reuse, onchip: false });
         }
     }
+    // total_cmp: the key is a quotient of model outputs, and a NaN from a
+    // degenerate tensor (zero-size shape, poisoned precision knob) must
+    // sort deterministically instead of panicking in partial_cmp.
     params.sort_by(|a, b| {
         let ka = a.reuse / a.bits.max(1.0);
         let kb = b.reuse / b.bits.max(1.0);
-        kb.partial_cmp(&ka).unwrap()
+        kb.total_cmp(&ka)
     });
     let mut budget = device.onchip_bits;
     for p in params.iter_mut() {
@@ -116,5 +128,62 @@ mod tests {
             let kb = w[1].reuse / w[1].bits;
             assert!(ka >= kb);
         }
+    }
+
+    #[test]
+    fn bits_are_measured_packed_storage() {
+        let g = two_weight_graph();
+        let pl = plan(&g, &Device::u250());
+        let w1 = pl.iter().find(|p| p.value_name == "w1").unwrap();
+        // MXInt m=7: 8-bit elements pack padding-free, so measured ==
+        // analytic Eq. (1) == 64*64*8.25 — and both equal what actually
+        // packing a tensor of that shape occupies.
+        assert_eq!(w1.bits, 64.0 * 64.0 * 8.25);
+        let data = vec![1.0f32; 64 * 64];
+        let t = crate::packed::layout::pack(
+            &data,
+            64,
+            64,
+            FormatKind::MxInt,
+            Precision::new(7.0, 0.0),
+        );
+        assert_eq!(w1.bits, t.storage_bits() as f64);
+    }
+
+    #[test]
+    fn degenerate_params_plan_without_panicking() {
+        // Regression: the old sort used partial_cmp().unwrap() on
+        // reuse/bits and could panic on degenerate tensors. Zero-element
+        // shapes and NaN precision knobs must plan deterministically.
+        let mut g = Graph::new("degenerate");
+        let x = g.add_input("x", TensorType::fp32(vec![32, 64]));
+        let w0 = g.new_value(
+            "w_empty",
+            TensorType {
+                shape: vec![0, 2],
+                format: FormatKind::MxInt,
+                precision: Precision::new(7.0, 0.0),
+            },
+            None,
+        );
+        let h = g.add_op(OpKind::Linear, vec![x], vec![w0], "h", TensorType::fp32(vec![0, 2]), None);
+        let w1 = g.new_value(
+            "w_nan_knob",
+            TensorType {
+                shape: vec![64, 64],
+                format: FormatKind::MxInt,
+                precision: Precision::new(f32::NAN, 0.0),
+            },
+            None,
+        );
+        let y = g.add_op(OpKind::Linear, vec![h], vec![w1], "y", TensorType::fp32(vec![32, 64]), None);
+        g.outputs.push(y);
+        let d = Device::u250();
+        let pl1 = plan(&g, &d);
+        let pl2 = plan(&g, &d);
+        assert_eq!(pl1, pl2, "degenerate plan must be deterministic");
+        let empty = pl1.iter().find(|p| p.value_name == "w_empty").unwrap();
+        assert_eq!(empty.bits, 0.0, "zero-element tensor costs nothing");
+        assert!(offchip_bits_per_inference(&pl1).is_finite());
     }
 }

@@ -8,7 +8,8 @@
 //! It consumes AOT-lowered HLO artifacts (produced once by
 //! `python/compile/aot.py`) through the PJRT runtime in [`runtime`], and
 //! owns everything else: the MASE IR ([`ir`]), the numeric format library
-//! ([`formats`]), the pass pipeline ([`passes`]), the search algorithms
+//! ([`formats`]), the bit-packed MX tensor storage and integer-datapath
+//! kernels ([`packed`]), the pass pipeline ([`passes`]), the search algorithms
 //! and the persistent evaluation cache ([`search`]), the hardware cost
 //! models ([`hw`]), the dataflow simulator ([`sim`]), the SystemVerilog
 //! emitter ([`emit`]), the synthetic data substrate ([`data`]) and the
@@ -41,6 +42,7 @@
 //! | capability | entry point | needs PJRT artifacts? |
 //! |---|---|---|
 //! | format emulation + quantizers | [`formats`] | no |
+//! | bit-packed MX tensors + integer kernels | [`packed`] | no |
 //! | IR build/parse/print/verify | [`ir`], [`frontend`] | no |
 //! | search algorithms (Fig. 4) | [`search`] | no |
 //! | persistent eval cache | [`search::CacheStore`] | no |
@@ -64,6 +66,7 @@
 //! thread-safe: parallel search then needs a per-worker client (the
 //! `Evaluator: Sync` compile-time assertion will flag this).
 pub mod formats;
+pub mod packed;
 pub mod ir;
 pub mod frontend;
 pub mod data;

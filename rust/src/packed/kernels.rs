@@ -1,0 +1,357 @@
+//! Integer-datapath kernels over packed tensors — the software mirror of
+//! the paper's §4 hardware dot-product (Fig. 3): integer mantissa
+//! multiply-accumulate, exponent alignment shifts, one widened
+//! accumulator per block, one floating-point accumulate per block flush.
+//!
+//! ## Accumulation order is part of the contract
+//!
+//! Hardware fixes the reduction order: integer MACs run exactly inside
+//! one 32-element group (a (16, 2) block for block formats, a flat
+//! 32-run otherwise — for GEMM, a 2-element k-segment, the widest run on
+//! which both operands' shared exponents are structurally constant), and
+//! the per-group partial is accumulated in floating point. The float
+//! reference functions in this module ([`dot_f64_blocked`],
+//! [`dot_f64_grouped`], [`gemm_f64_segmented`]) implement the *same*
+//! order in plain f64 arithmetic over the fake-quantized f32 values, so
+//! the agreement tests can assert:
+//!
+//!  * **MXInt and fixed point: exact equality.** Within a group every
+//!    product is an integer multiple of one common power of two and the
+//!    exact partial stays below 2^53, so the f64 reference accumulates
+//!    the group exactly — and the integer datapath computes the same
+//!    partial by construction. Both then perform the identical sequence
+//!    of f64 adds across groups.
+//!  * **BMF / FP8 / BL: documented ULP bound.** Per-element exponents
+//!    vary inside a group; the aligner shifts products to the group's
+//!    minimum exponent (span bounded by the format: <= 2*(2^eb - 1) for
+//!    BMF, <= 28 for FP8). Whenever the span exceeds
+//!    [`MAX_ALIGN_SHIFT`] (BL with wide element exponents), the kernel
+//!    falls back to exact per-term f64 adds. Either way each group
+//!    introduces at most one f64 rounding versus the element-order sum,
+//!    so `|packed - reference| <= n * 2^-50 * sum|a_i * b_i|` — the
+//!    bound the agreement tests assert.
+//!
+//! These kernels are the golden reference for the emitted SystemVerilog:
+//! `emit::templates::mxint_dot_product` sizes its accumulator with
+//! [`mxint_acc_bits`], and the cross-check tests assert the emitted
+//! widths cover the worst case this datapath can produce.
+
+use super::layout::{PackedTensor, GROUP_ELEMS};
+use crate::formats::BLOCK_SHAPE;
+
+/// Widest exponent-alignment shift the integer datapath performs (the
+/// hardware aligner width). Wider spans fall back to per-term f64 adds.
+pub const MAX_ALIGN_SHIFT: i32 = 63;
+
+/// Signed accumulator width sufficient for one 32-element MXInt block
+/// dot-product at `m` mantissa bits: products reach (2^m - 1)^2 and 32
+/// of them sum below 2^(2m + 5), so 2(m + 1) + log2(32) - 1 = 2m + 6
+/// bits always hold the exact result. The emitted SystemVerilog operator
+/// uses this width for its `ACC_W` parameter.
+pub fn mxint_acc_bits(m: u32) -> u32 {
+    2 * (m + 1) + (GROUP_ELEMS as u32).ilog2() - 1
+}
+
+/// Exact 2^e as f64 (e in [-1074, 1023]; subnormals included).
+pub fn pow2_f64(e: i32) -> f64 {
+    debug_assert!((-1074..=1023).contains(&e));
+    if e >= -1022 {
+        f64::from_bits(((e + 1023) as u64) << 52)
+    } else {
+        f64::from_bits(1u64 << (e + 1074))
+    }
+}
+
+/// Flush one group of (mantissa-product, exponent) pairs into the f64
+/// accumulator: align to the group's minimum exponent, integer-MAC in a
+/// widened accumulator, one f64 accumulate. Falls back to per-term f64
+/// adds when the alignment span exceeds [`MAX_ALIGN_SHIFT`].
+fn flush_group(total: &mut f64, prods: &mut Vec<(i64, i32)>) {
+    if prods.is_empty() {
+        return;
+    }
+    let emin = prods.iter().map(|&(_, e)| e).min().unwrap();
+    let emax = prods.iter().map(|&(_, e)| e).max().unwrap();
+    if emax - emin <= MAX_ALIGN_SHIFT {
+        let mut acc: i128 = 0;
+        for &(m, e) in prods.iter() {
+            acc += (m as i128) << (e - emin);
+        }
+        if acc != 0 {
+            *total += acc as f64 * pow2_f64(emin);
+        }
+    } else {
+        for &(m, e) in prods.iter() {
+            *total += m as f64 * pow2_f64(e);
+        }
+    }
+    prods.clear();
+}
+
+fn push_product(
+    a: &PackedTensor,
+    b: &PackedTensor,
+    r: usize,
+    c: usize,
+    prods: &mut Vec<(i64, i32)>,
+) {
+    let (ma, ea) = a.fields_at(r, c);
+    let (mb, eb) = b.fields_at(r, c);
+    if ma != 0 && mb != 0 {
+        prods.push((ma * mb, ea + eb));
+    }
+}
+
+/// Dot product of two identically-shaped packed tensors, computed
+/// directly on the packed representation (no f32 materialization).
+/// Traversal/accumulation order per the module docs: (16, 2) blocks when
+/// either operand is a block format, flat 32-groups otherwise.
+pub fn packed_dot(a: &PackedTensor, b: &PackedTensor) -> f64 {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols), "dot operands must share a shape");
+    let mut total = 0.0f64;
+    let mut prods: Vec<(i64, i32)> = Vec::with_capacity(GROUP_ELEMS);
+    if a.layout.fmt.is_block_format() || b.layout.fmt.is_block_format() {
+        let (br, bc) = BLOCK_SHAPE;
+        assert!(a.rows % br == 0 && a.cols % bc == 0, "block formats need tiling shapes");
+        for rb in 0..a.rows / br {
+            for cb in 0..a.cols / bc {
+                for r in 0..br {
+                    for c in 0..bc {
+                        push_product(a, b, rb * br + r, cb * bc + c, &mut prods);
+                    }
+                }
+                flush_group(&mut total, &mut prods);
+            }
+        }
+    } else {
+        for i in 0..a.rows * a.cols {
+            push_product(a, b, i / a.cols, i % a.cols, &mut prods);
+            if i % GROUP_ELEMS == GROUP_ELEMS - 1 {
+                flush_group(&mut total, &mut prods);
+            }
+        }
+        flush_group(&mut total, &mut prods);
+    }
+    total
+}
+
+/// Width of a GEMM k-segment: a (16, 2) block of the left operand spans
+/// 2 elements along k, a block of the right operand spans 16, so 2 is
+/// the widest run on which both shared exponents are structurally
+/// constant.
+pub const GEMM_SEG: usize = BLOCK_SHAPE.1;
+
+/// Tiled GEMM `C[M,N] = A[M,K] * B[K,N]` computed directly on packed
+/// data: per output element, integer MACs over 2-wide k-segments with
+/// exponent alignment, one f64 accumulate per segment, final result
+/// rounded to f32 (the hardware's FP32 output cast). Output tiles of
+/// 16x16 mirror the streaming tile loop.
+pub fn packed_gemm(a: &PackedTensor, b: &PackedTensor) -> Vec<f32> {
+    assert_eq!(a.cols, b.rows, "inner dimensions must agree");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    const TILE: usize = 16;
+    let mut out = vec![0.0f32; m * n];
+    let mut prods: Vec<(i64, i32)> = Vec::with_capacity(GEMM_SEG);
+    for i0 in (0..m).step_by(TILE) {
+        for j0 in (0..n).step_by(TILE) {
+            for i in i0..(i0 + TILE).min(m) {
+                for j in j0..(j0 + TILE).min(n) {
+                    let mut total = 0.0f64;
+                    let mut kk = 0;
+                    while kk < k {
+                        let seg_end = (kk + GEMM_SEG).min(k);
+                        for t in kk..seg_end {
+                            let (ma, ea) = a.fields_at(i, t);
+                            let (mb, eb) = b.fields_at(t, j);
+                            if ma != 0 && mb != 0 {
+                                prods.push((ma * mb, ea + eb));
+                            }
+                        }
+                        flush_group(&mut total, &mut prods);
+                        kk = seg_end;
+                    }
+                    out[i * n + j] = total as f32;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Float half of the golden pair for [`packed_dot`] over block formats:
+/// f64 partial per (16, 2) block of the fake-quantized f32 tensors, in
+/// the quantizers' block order.
+pub fn dot_f64_blocked(qa: &[f32], qb: &[f32], rows: usize, cols: usize) -> f64 {
+    let (br, bc) = BLOCK_SHAPE;
+    assert!(rows % br == 0 && cols % bc == 0);
+    assert_eq!(qa.len(), rows * cols);
+    assert_eq!(qa.len(), qb.len());
+    let mut total = 0.0f64;
+    crate::formats::for_each_block(rows, cols, |start| {
+        let mut partial = 0.0f64;
+        for r in 0..br {
+            for c in 0..bc {
+                let i = start + r * cols + c;
+                partial += qa[i] as f64 * qb[i] as f64;
+            }
+        }
+        total += partial;
+    });
+    total
+}
+
+/// Float half of the golden pair for [`packed_dot`] over element-wise
+/// formats: f64 partial per flat 32-element group.
+pub fn dot_f64_grouped(qa: &[f32], qb: &[f32]) -> f64 {
+    assert_eq!(qa.len(), qb.len());
+    let mut total = 0.0f64;
+    for (ca, cb) in qa.chunks(GROUP_ELEMS).zip(qb.chunks(GROUP_ELEMS)) {
+        let mut partial = 0.0f64;
+        for (x, y) in ca.iter().zip(cb.iter()) {
+            partial += *x as f64 * *y as f64;
+        }
+        total += partial;
+    }
+    total
+}
+
+/// Float half of the golden pair for [`packed_gemm`]: f64 partial per
+/// 2-wide k-segment over the fake-quantized f32 operands, rounded to f32
+/// like the hardware output cast.
+pub fn gemm_f64_segmented(qa: &[f32], qb: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(qa.len(), m * k);
+    assert_eq!(qb.len(), k * n);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut total = 0.0f64;
+            let mut kk = 0;
+            while kk < k {
+                let seg_end = (kk + GEMM_SEG).min(k);
+                let mut partial = 0.0f64;
+                for t in kk..seg_end {
+                    partial += qa[i * k + t] as f64 * qb[t * n + j] as f64;
+                }
+                total += partial;
+                kk = seg_end;
+            }
+            out[i * n + j] = total as f32;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{quantize_2d, FormatKind, Precision};
+    use crate::packed::layout::pack;
+    use crate::util::rng::Rng;
+
+    fn rand_tensor(n: usize, seed: u64, scale: f64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| (rng.normal() * scale) as f32).collect()
+    }
+
+    #[test]
+    fn pow2_f64_exact_across_range() {
+        for e in [-1022, -300, -149, -1, 0, 1, 52, 1023] {
+            assert_eq!(pow2_f64(e), 2f64.powi(e), "e={e}");
+        }
+        // subnormal tail, pinned by bit pattern (powi is not reliable here)
+        assert_eq!(pow2_f64(-1074), f64::from_bits(1));
+        assert_eq!(pow2_f64(-1073), f64::from_bits(2));
+    }
+
+    #[test]
+    fn acc_bits_cover_worst_case_block() {
+        for m in 1..=24u32 {
+            let worst = 32u128 * ((1u128 << m) - 1).pow(2);
+            let acc = mxint_acc_bits(m);
+            assert!(worst <= (1u128 << (acc - 1)) - 1, "m={m}: {worst} needs more than {acc} bits");
+        }
+    }
+
+    #[test]
+    fn mxint_dot_equals_float_reference_exactly() {
+        for (seed, ma, mb) in [(1u64, 7.0f32, 7.0f32), (2, 7.0, 4.0), (3, 3.0, 10.0)] {
+            let (rows, cols) = (32, 8);
+            let x = rand_tensor(rows * cols, seed, [1.0, 1e3, 1e-3][seed as usize % 3]);
+            let y = rand_tensor(rows * cols, seed + 100, 1.0);
+            let pa = pack(&x, rows, cols, FormatKind::MxInt, Precision::new(ma, 0.0));
+            let pb = pack(&y, rows, cols, FormatKind::MxInt, Precision::new(mb, 0.0));
+            let (mut qx, mut qy) = (x.clone(), y.clone());
+            quantize_2d(FormatKind::MxInt, &mut qx, rows, cols, Precision::new(ma, 0.0));
+            quantize_2d(FormatKind::MxInt, &mut qy, rows, cols, Precision::new(mb, 0.0));
+            let packed = packed_dot(&pa, &pb);
+            let reference = dot_f64_blocked(&qx, &qy, rows, cols);
+            assert_eq!(packed, reference, "seed {seed}: {packed} vs {reference}");
+        }
+    }
+
+    #[test]
+    fn int_dot_equals_float_reference_exactly() {
+        let (rows, cols) = (11, 7); // deliberately not a multiple of 32
+        let x = rand_tensor(rows * cols, 5, 2.0);
+        let y = rand_tensor(rows * cols, 6, 2.0);
+        let p = Precision::new(8.0, 4.0);
+        let pa = pack(&x, rows, cols, FormatKind::Int, p);
+        let pb = pack(&y, rows, cols, FormatKind::Int, p);
+        let (mut qx, mut qy) = (x.clone(), y.clone());
+        quantize_2d(FormatKind::Int, &mut qx, rows, cols, p);
+        quantize_2d(FormatKind::Int, &mut qy, rows, cols, p);
+        assert_eq!(packed_dot(&pa, &pb), dot_f64_grouped(&qx, &qy));
+    }
+
+    #[test]
+    fn zero_tensors_dot_to_zero() {
+        let x = vec![0.0f32; 64];
+        let pa = pack(&x, 32, 2, FormatKind::MxInt, Precision::new(5.0, 0.0));
+        assert_eq!(packed_dot(&pa, &pa), 0.0);
+    }
+
+    #[test]
+    fn mxint_gemm_equals_segmented_reference_exactly() {
+        let (m, k, n) = (32, 32, 16);
+        let x = rand_tensor(m * k, 9, 1.0);
+        let y = rand_tensor(k * n, 10, 1.0);
+        let (pa, pb) = (
+            pack(&x, m, k, FormatKind::MxInt, Precision::new(7.0, 0.0)),
+            pack(&y, k, n, FormatKind::MxInt, Precision::new(4.0, 0.0)),
+        );
+        let (mut qx, mut qy) = (x.clone(), y.clone());
+        quantize_2d(FormatKind::MxInt, &mut qx, m, k, Precision::new(7.0, 0.0));
+        quantize_2d(FormatKind::MxInt, &mut qy, k, n, Precision::new(4.0, 0.0));
+        let packed = packed_gemm(&pa, &pb);
+        let reference = gemm_f64_segmented(&qx, &qy, m, k, n);
+        for (i, (p, r)) in packed.iter().zip(reference.iter()).enumerate() {
+            assert_eq!(p.to_bits(), r.to_bits(), "C[{i}]: {p} vs {r}");
+        }
+    }
+
+    #[test]
+    fn bl_wide_exponents_take_the_fallback_path_correctly() {
+        // eb = 7 gives 127 exponent levels per operand: alignment spans
+        // exceed MAX_ALIGN_SHIFT and the kernel must fall back without
+        // losing more than the documented bound.
+        let (rows, cols) = (32, 4);
+        let x = rand_tensor(rows * cols, 13, 1.0);
+        let y: Vec<f32> = rand_tensor(rows * cols, 14, 1.0)
+            .iter()
+            .enumerate()
+            .map(|(i, v)| if i % 3 == 0 { v * 1e-30 } else { *v })
+            .collect();
+        let p = Precision::new(7.0, 0.0);
+        let pa = pack(&x, rows, cols, FormatKind::Bl, p);
+        let pb = pack(&y, rows, cols, FormatKind::Bl, p);
+        let (mut qx, mut qy) = (x.clone(), y.clone());
+        quantize_2d(FormatKind::Bl, &mut qx, rows, cols, p);
+        quantize_2d(FormatKind::Bl, &mut qy, rows, cols, p);
+        let packed = packed_dot(&pa, &pb);
+        let reference = dot_f64_blocked(&qx, &qy, rows, cols);
+        let gross: f64 =
+            qx.iter().zip(qy.iter()).map(|(a, b)| (*a as f64 * *b as f64).abs()).sum();
+        let bound = (qx.len() as f64) * 2f64.powi(-50) * gross;
+        assert!((packed - reference).abs() <= bound, "{packed} vs {reference} (bound {bound})");
+    }
+}

@@ -1,0 +1,731 @@
+//! Per-format packed block encodings: shared 8-bit exponent + bit-packed
+//! mantissa words, with explicit padding/alignment rules.
+//!
+//! ## Storage layout (on disk and in memory)
+//!
+//! Elements are grouped 32 at a time. For the block formats (MXInt, BMF,
+//! BL) a group is one (16, 2) tile of the row-major 2-D tensor in the
+//! same order the quantizers visit it (`formats::for_each_block`, element
+//! index inside the block = `r * 2 + c`), and each group carries one
+//! shared exponent byte (stored biased: `e - SHARED_EXP_MIN`, so the
+//! 8-bit field covers the clamp range [-126, 127]). For the element-wise
+//! formats (fixed point, minifloat/FP8, fp32) a group is 32 consecutive
+//! elements in flat row-major order, with no exponent byte, and the last
+//! group may be partial.
+//!
+//! Element fields are packed LSB-first into little-endian `u64` words.
+//! **Alignment rule:** every group starts on a fresh `u64` word, so an
+//! element's word/bit address is computable in O(1) from its coordinates
+//! (the property the hardware's streaming readers rely on). The padding
+//! this costs is `words_per_group * 64 - 32 * elem_bits` bits per full
+//! group — zero whenever `elem_bits` is a power-of-two divisor of 64,
+//! 32 bits per block for odd `elem_bits`.
+//!
+//! ## Element encodings
+//!
+//! | format | field layout (MSB..LSB) | bits |
+//! |---|---|---|
+//! | MXInt | sign, m-bit magnitude | 1 + m |
+//! | BMF | sign, 2-bit local exp code, (m+1)-bit magnitude | 1 + 2 + m + 1 |
+//! | BL | sign, (eb+1)-bit exponent index (code 0 = zero) | 1 + eb + 1 |
+//! | fixed | w-bit two's complement | w |
+//! | FP8 | sign, 4-bit exponent code (0 = zero/denormal), 3-bit fraction | 8 |
+//! | fp32 | raw IEEE-754 bits | 32 |
+//!
+//! Two fields are wider than the idealized Eq. (1) accounting, on
+//! purpose: the fake-quantized **BMF** grid keeps both denormal and
+//! normalized values in its bottom binade, which needs one extra
+//! magnitude bit (`k <= 2^(m+1) - 1`); and the **BL** grid keeps exact
+//! signed zeros next to `2^eb` exponent levels, which needs a zero code
+//! on top of the eb-bit exponent. A true hardware BMF/BL would drop
+//! those values from the grid; the packed layout stores the *software
+//! reference grid* exactly and reports the honest measured bytes, which
+//! the benches print next to the analytic density so the gap is visible.
+//!
+//! Decoding recomputes values with the same exact primitives the
+//! quantizers use (`formats::pow2`, integer-times-power-of-two f32
+//! multiplies), so `unpack(pack(x))` is bit-identical to
+//! `formats::*_quantize(x)` — the round-trip property the tests enforce.
+
+use crate::formats::{
+    self, block_maxabs, bmf::LOCAL_EXP_BITS, floor_log2, for_each_block, pow2, shared_exponent,
+    FormatKind, Precision, BLOCK_SHAPE, SHARED_EXPONENT_BITS, SHARED_EXP_MIN,
+};
+
+/// Elements per packed group: one (16, 2) block.
+pub const GROUP_ELEMS: usize = BLOCK_SHAPE.0 * BLOCK_SHAPE.1;
+
+/// FP8 (MiniFloat) constants — fixed at the paper's e4m3, bias 7.
+const FP8_EXP_BITS: i32 = 4;
+const FP8_MAN_BITS: i32 = 3;
+const FP8_BIAS: i32 = 7;
+
+#[inline]
+fn mask(n: u32) -> u64 {
+    if n >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << n) - 1
+    }
+}
+
+/// Resolve a format's primary precision knob exactly as its quantizer
+/// does (round, then clamp to the quantizer's floor).
+fn resolve_knob(fmt: FormatKind, p: Precision) -> i32 {
+    match fmt {
+        FormatKind::Fp32 => 32,
+        FormatKind::Fp8 => FP8_MAN_BITS,
+        FormatKind::Int => p.bits.round().max(2.0) as i32,
+        FormatKind::MxInt | FormatKind::Bmf | FormatKind::Bl => p.bits.round().max(1.0) as i32,
+    }
+}
+
+/// Widest knob each format can pack with exact f32 round trips (mantissa
+/// products and scales stay exactly representable; see module docs).
+fn max_knob(fmt: FormatKind) -> i32 {
+    match fmt {
+        FormatKind::Fp32 => 32,
+        FormatKind::Fp8 => FP8_MAN_BITS,
+        FormatKind::Int => 25,
+        FormatKind::MxInt => 24,
+        FormatKind::Bmf => 23,
+        FormatKind::Bl => 16,
+    }
+}
+
+/// Resolved per-element field layout for one (format, precision) pair.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ElemLayout {
+    pub fmt: FormatKind,
+    /// Resolved integer knob: mantissa bits (MXInt/BMF), element exponent
+    /// bits (BL), total width (fixed), 3 (FP8), 32 (fp32). Clamped to
+    /// the packable range; `pack` asserts no clamping actually occurred.
+    pub knob: i32,
+    /// Fraction bits (fixed point only).
+    pub frac: i32,
+    /// Total bits of one packed element field.
+    pub elem_bits: u32,
+    /// Bits of the per-group shared exponent (8 for block formats, 0
+    /// otherwise).
+    pub shared_exp_bits: u32,
+}
+
+impl ElemLayout {
+    pub fn new(fmt: FormatKind, p: Precision) -> ElemLayout {
+        let knob = resolve_knob(fmt, p).min(max_knob(fmt));
+        let frac = if fmt == FormatKind::Int { p.frac.round() as i32 } else { 0 };
+        let elem_bits = match fmt {
+            FormatKind::Fp32 => 32,
+            FormatKind::Fp8 => (1 + FP8_EXP_BITS + FP8_MAN_BITS) as u32,
+            FormatKind::Int => knob as u32,
+            FormatKind::MxInt => 1 + knob as u32,
+            FormatKind::Bmf => 1 + LOCAL_EXP_BITS + knob as u32 + 1,
+            FormatKind::Bl => 1 + knob as u32 + 1,
+        };
+        let shared_exp_bits = if fmt.is_block_format() { SHARED_EXPONENT_BITS } else { 0 };
+        ElemLayout { fmt, knob, frac, elem_bits, shared_exp_bits }
+    }
+
+    /// `u64` words holding `n` packed elements (groups are word-aligned).
+    pub fn words_per_group(&self, n: usize) -> usize {
+        (n * self.elem_bits as usize).div_ceil(64)
+    }
+
+    /// Padding bits a full 32-element group carries for word alignment.
+    pub fn padding_bits_per_group(&self) -> u32 {
+        self.words_per_group(GROUP_ELEMS) as u32 * 64 - GROUP_ELEMS as u32 * self.elem_bits
+    }
+
+    fn bmf_e_min(&self) -> i32 {
+        -(pow2(LOCAL_EXP_BITS as i32) as i32 - 1)
+    }
+
+    fn bl_e_min(&self, bias: i32) -> i32 {
+        bias - (pow2(self.knob) as i32 - 1)
+    }
+
+    /// Encode one on-grid value into its element field. `e_block` is the
+    /// group's shared exponent (ignored by element-wise formats). `v`
+    /// must lie on the fake-quantized grid of this layout.
+    pub fn encode(&self, v: f32, e_block: i32) -> u64 {
+        let sign = v.is_sign_negative() as u64;
+        match self.fmt {
+            FormatKind::Fp32 => v.to_bits() as u64,
+            FormatKind::Int => {
+                let k = (v / pow2(-self.frac)) as i64;
+                debug_assert_eq!((k as f32) * pow2(-self.frac), v, "off-grid fixed value {v}");
+                (k as u64) & mask(self.elem_bits)
+            }
+            FormatKind::Fp8 => {
+                if v == 0.0 {
+                    return sign << 7;
+                }
+                let a = v.abs();
+                let unb = floor_log2(a);
+                let e_min = 1 - FP8_BIAS;
+                if unb < e_min {
+                    // Denormal binade of the grid: the quantizer's clamp
+                    // rounds [2^(e_min-1), 2^e_min) inputs to
+                    // k * 2^(e_min - m), k in [1, 2^m) — IEEE-style
+                    // exponent code 0, no hidden bit.
+                    let q = a / pow2(e_min - FP8_MAN_BITS);
+                    let t = q as u64;
+                    debug_assert!(
+                        q.fract() == 0.0 && t >= 1 && t < 1 << FP8_MAN_BITS,
+                        "off-grid fp8 denormal {v}"
+                    );
+                    return sign << 7 | t;
+                }
+                let t = ((a.to_bits() >> (23 - FP8_MAN_BITS)) & 0x7) as u64;
+                debug_assert_eq!(
+                    a.to_bits() & ((1 << (23 - FP8_MAN_BITS)) - 1),
+                    0,
+                    "off-grid fp8 {v}"
+                );
+                sign << 7 | ((unb + FP8_BIAS) as u64) << FP8_MAN_BITS | t
+            }
+            FormatKind::MxInt => {
+                let m = self.knob;
+                let q = v / pow2(e_block + 1 - m);
+                let magn = q.abs() as u64;
+                debug_assert!(
+                    q.abs().fract() == 0.0 && magn <= mask(m as u32),
+                    "off-grid mxint value {v} (e={e_block}, m={m})"
+                );
+                sign << m | magn
+            }
+            FormatKind::Bmf => {
+                let m = self.knob;
+                if v == 0.0 {
+                    return sign << (LOCAL_EXP_BITS + m as u32 + 1);
+                }
+                let e_min = self.bmf_e_min();
+                let a = v.abs();
+                let e_loc = (floor_log2(a) - e_block).clamp(e_min, 0);
+                let q = a / pow2(e_loc + e_block - m);
+                let k = q as u64;
+                debug_assert!(
+                    q.fract() == 0.0 && k >= 1 && k <= mask(m as u32 + 1),
+                    "off-grid bmf value {v} (bias={e_block}, m={m})"
+                );
+                sign << (LOCAL_EXP_BITS + m as u32 + 1)
+                    | ((e_loc - e_min) as u64) << (m as u32 + 1)
+                    | k
+            }
+            FormatKind::Bl => {
+                if v == 0.0 {
+                    return sign << (self.knob as u32 + 1);
+                }
+                let e_min = self.bl_e_min(e_block);
+                let c = (floor_log2(v.abs()) - e_min + 1) as u64;
+                debug_assert!(
+                    c >= 1 && c <= 1 << self.knob,
+                    "off-grid bl value {v} (bias={e_block}, eb={})",
+                    self.knob
+                );
+                sign << (self.knob as u32 + 1) | c
+            }
+        }
+    }
+
+    /// Decode one element field back to the exact f32 grid value.
+    pub fn decode(&self, code: u64, e_block: i32) -> f32 {
+        let signed = |sign: u64, a: f32| if sign == 1 { -a } else { a };
+        match self.fmt {
+            FormatKind::Fp32 => f32::from_bits(code as u32),
+            FormatKind::Int => {
+                let w = self.elem_bits;
+                let k = (((code & mask(w)) << (64 - w)) as i64) >> (64 - w);
+                (k as f32) * pow2(-self.frac)
+            }
+            FormatKind::Fp8 => {
+                let sign = (code >> 7) & 1;
+                let ec = (code >> FP8_MAN_BITS) & mask(FP8_EXP_BITS as u32);
+                let t = code & mask(FP8_MAN_BITS as u32);
+                if ec == 0 {
+                    if t == 0 {
+                        return signed(sign, 0.0);
+                    }
+                    // denormal: no hidden bit, exponent pinned at e_min
+                    return signed(sign, t as f32 * pow2(1 - FP8_BIAS - FP8_MAN_BITS));
+                }
+                let unb = ec as i32 - FP8_BIAS;
+                signed(sign, ((1 << FP8_MAN_BITS) + t) as f32 * pow2(unb - FP8_MAN_BITS))
+            }
+            FormatKind::MxInt => {
+                let m = self.knob;
+                let magn = (code & mask(m as u32)) as f32;
+                signed((code >> m) & 1, magn * pow2(e_block + 1 - m))
+            }
+            FormatKind::Bmf => {
+                let m = self.knob;
+                let sign = (code >> (LOCAL_EXP_BITS + m as u32 + 1)) & 1;
+                let k = code & mask(m as u32 + 1);
+                if k == 0 {
+                    return signed(sign, 0.0);
+                }
+                let ec = (code >> (m as u32 + 1)) & mask(LOCAL_EXP_BITS);
+                let e_loc = self.bmf_e_min() + ec as i32;
+                signed(sign, k as f32 * pow2(e_loc + e_block - m))
+            }
+            FormatKind::Bl => {
+                let sign = (code >> (self.knob as u32 + 1)) & 1;
+                let c = code & mask(self.knob as u32 + 1);
+                if c == 0 {
+                    return signed(sign, 0.0);
+                }
+                signed(sign, pow2(self.bl_e_min(e_block) + c as i32 - 1))
+            }
+        }
+    }
+
+    /// Exact integer decomposition of an element: `value == mant * 2^exp`
+    /// as real numbers, with `mant` an integer (|mant| < 2^26 for every
+    /// supported layout). This is what the integer-datapath kernels
+    /// consume without materializing f32s.
+    pub fn fields(&self, code: u64, e_block: i32) -> (i64, i32) {
+        // Mirror pow2's exponent clamp so mant * 2^exp equals the f32
+        // value produced by `decode` exactly, subnormal corners included.
+        let clamp = |e: i32| e.clamp(-149, 127);
+        let signed = |sign: u64, m: i64| if sign == 1 { -m } else { m };
+        match self.fmt {
+            FormatKind::Fp32 => {
+                let bits = code as u32;
+                let sign = (bits >> 31) as u64;
+                let ef = (bits >> 23) & 0xff;
+                let fr = (bits & 0x7f_ffff) as i64;
+                if ef == 0 {
+                    (signed(sign, fr), -149)
+                } else {
+                    (signed(sign, fr | 0x80_0000), ef as i32 - 127 - 23)
+                }
+            }
+            FormatKind::Int => {
+                let w = self.elem_bits;
+                let k = (((code & mask(w)) << (64 - w)) as i64) >> (64 - w);
+                (k, clamp(-self.frac))
+            }
+            FormatKind::Fp8 => {
+                let sign = (code >> 7) & 1;
+                let ec = (code >> FP8_MAN_BITS) & mask(FP8_EXP_BITS as u32);
+                let t = (code & mask(FP8_MAN_BITS as u32)) as i64;
+                if ec == 0 {
+                    if t == 0 {
+                        return (0, 0);
+                    }
+                    return (signed(sign, t), 1 - FP8_BIAS - FP8_MAN_BITS);
+                }
+                (signed(sign, (1 << FP8_MAN_BITS) + t), ec as i32 - FP8_BIAS - FP8_MAN_BITS)
+            }
+            FormatKind::MxInt => {
+                let m = self.knob;
+                let magn = (code & mask(m as u32)) as i64;
+                (signed((code >> m) & 1, magn), clamp(e_block + 1 - m))
+            }
+            FormatKind::Bmf => {
+                let m = self.knob;
+                let sign = (code >> (LOCAL_EXP_BITS + m as u32 + 1)) & 1;
+                let k = (code & mask(m as u32 + 1)) as i64;
+                if k == 0 {
+                    return (0, 0);
+                }
+                let ec = (code >> (m as u32 + 1)) & mask(LOCAL_EXP_BITS);
+                (signed(sign, k), clamp(self.bmf_e_min() + ec as i32 + e_block - m))
+            }
+            FormatKind::Bl => {
+                let sign = (code >> (self.knob as u32 + 1)) & 1;
+                let c = code & mask(self.knob as u32 + 1);
+                if c == 0 {
+                    return (0, 0);
+                }
+                (signed(sign, 1), clamp(self.bl_e_min(e_block) + c as i32 - 1))
+            }
+        }
+    }
+}
+
+fn write_bits(words: &mut [u64], bit: usize, n: u32, val: u64) {
+    debug_assert!((n < 64 && val <= mask(n)) || n == 64);
+    let w = bit / 64;
+    let off = (bit % 64) as u32;
+    words[w] |= val << off;
+    if off + n > 64 {
+        words[w + 1] |= val >> (64 - off);
+    }
+}
+
+fn read_bits(words: &[u64], bit: usize, n: u32) -> u64 {
+    let w = bit / 64;
+    let off = (bit % 64) as u32;
+    let mut v = words[w] >> off;
+    if off + n > 64 {
+        v |= words[w + 1] << (64 - off);
+    }
+    v & mask(n)
+}
+
+/// A bit-packed 2-D tensor: the storage format of module docs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PackedTensor {
+    pub layout: ElemLayout,
+    pub rows: usize,
+    pub cols: usize,
+    /// One biased shared-exponent byte per (16, 2) block (block formats
+    /// only, in `for_each_block` order).
+    pub exps: Vec<u8>,
+    /// Bit-packed element fields; each group starts on a fresh word.
+    pub words: Vec<u64>,
+}
+
+/// Quantize (via the official `formats` quantizers) and pack a row-major
+/// 2-D tensor. Block formats require `rows % 16 == 0 && cols % 2 == 0`
+/// (the same constraint the quantizers assert); element-wise formats
+/// accept any shape and pad only the trailing partial group.
+pub fn pack(data: &[f32], rows: usize, cols: usize, fmt: FormatKind, p: Precision) -> PackedTensor {
+    assert_eq!(data.len(), rows * cols, "data length vs shape");
+    let lay = ElemLayout::new(fmt, p);
+    assert_eq!(
+        lay.knob,
+        resolve_knob(fmt, p),
+        "precision {} exceeds the packable range of {} (max knob {})",
+        p.bits,
+        fmt.name(),
+        max_knob(fmt)
+    );
+    let mut q = data.to_vec();
+    formats::quantize_2d(fmt, &mut q, rows, cols, p);
+
+    let mut t = PackedTensor { layout: lay, rows, cols, exps: Vec::new(), words: Vec::new() };
+    let eb = lay.elem_bits as usize;
+    if fmt.is_block_format() {
+        let (br, bc) = BLOCK_SHAPE;
+        let wpb = lay.words_per_group(GROUP_ELEMS);
+        t.words = vec![0u64; (rows / br) * (cols / bc) * wpb];
+        let mut bi = 0usize;
+        for_each_block(rows, cols, |start| {
+            // The shared exponent is derived from the *original* block,
+            // exactly as the quantizer derived it (quantization preserves
+            // the block's floor(log2 max|x|), so either source agrees).
+            let e = shared_exponent(block_maxabs(data, start, cols));
+            t.exps.push((e - SHARED_EXP_MIN) as u8);
+            let base = bi * wpb * 64;
+            for r in 0..br {
+                for c in 0..bc {
+                    let code = lay.encode(q[start + r * cols + c], e);
+                    write_bits(&mut t.words, base + (r * bc + c) * eb, lay.elem_bits, code);
+                }
+            }
+            bi += 1;
+        });
+    } else {
+        let n = q.len();
+        let wpg = lay.words_per_group(GROUP_ELEMS);
+        let rem = n % GROUP_ELEMS;
+        let nwords =
+            (n / GROUP_ELEMS) * wpg + if rem > 0 { lay.words_per_group(rem) } else { 0 };
+        t.words = vec![0u64; nwords];
+        for (i, &v) in q.iter().enumerate() {
+            let base = (i / GROUP_ELEMS) * wpg * 64;
+            write_bits(&mut t.words, base + (i % GROUP_ELEMS) * eb, lay.elem_bits, lay.encode(v, 0));
+        }
+    }
+    t
+}
+
+impl PackedTensor {
+    fn block_addr(&self, r: usize, c: usize) -> (usize, i32) {
+        let (br, bc) = BLOCK_SHAPE;
+        let eb = self.layout.elem_bits as usize;
+        if self.layout.fmt.is_block_format() {
+            let bi = (r / br) * (self.cols / bc) + c / bc;
+            let j = (r % br) * bc + c % bc;
+            let wpb = self.layout.words_per_group(GROUP_ELEMS);
+            (bi * wpb * 64 + j * eb, self.exps[bi] as i32 + SHARED_EXP_MIN)
+        } else {
+            let i = r * self.cols + c;
+            let wpg = self.layout.words_per_group(GROUP_ELEMS);
+            ((i / GROUP_ELEMS) * wpg * 64 + (i % GROUP_ELEMS) * eb, 0)
+        }
+    }
+
+    /// Decode the element at (row, col) back to its exact f32 value.
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        let (bit, e) = self.block_addr(r, c);
+        self.layout.decode(read_bits(&self.words, bit, self.layout.elem_bits), e)
+    }
+
+    /// Exact `(mantissa, exponent)` decomposition of the element at
+    /// (row, col) — see [`ElemLayout::fields`]. O(1) random access, which
+    /// is what the group word-alignment rule buys.
+    pub fn fields_at(&self, r: usize, c: usize) -> (i64, i32) {
+        let (bit, e) = self.block_addr(r, c);
+        self.layout.fields(read_bits(&self.words, bit, self.layout.elem_bits), e)
+    }
+
+    /// Unpack to a row-major f32 tensor — bit-identical to the
+    /// fake-quantized tensor `pack` consumed (module docs, contract 1).
+    pub fn unpack(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out[r * self.cols + c] = self.get(r, c);
+            }
+        }
+        out
+    }
+
+    /// Total storage including shared exponents and alignment padding.
+    pub fn storage_bits(&self) -> u64 {
+        self.words.len() as u64 * 64 + self.exps.len() as u64 * 8
+    }
+
+    /// Measured average bits per element (the honest counterpart of
+    /// `Precision::average_bitwidth`).
+    pub fn avg_bits_per_elem(&self) -> f64 {
+        let n = self.rows * self.cols;
+        if n == 0 {
+            0.0
+        } else {
+            self.storage_bits() as f64 / n as f64
+        }
+    }
+}
+
+/// Measured packed storage (bits) for a tensor of `shape` under
+/// (`fmt`, `p`), without materializing any data. Matches
+/// `pack(..).storage_bits()` exactly for packable shapes; shapes that do
+/// not tile into (16, 2) blocks are priced with partial blocks padded to
+/// full ones (the padding rule streaming hardware applies). This is the
+/// number `hw::memory` budgets with.
+pub fn packed_bits_for(fmt: FormatKind, p: Precision, shape: &[usize]) -> u64 {
+    let lay = ElemLayout::new(fmt, p);
+    let n: usize = shape.iter().product();
+    if n == 0 {
+        return 0;
+    }
+    if fmt.is_block_format() {
+        let (br, bc) = BLOCK_SHAPE;
+        let blocks = if shape.len() == 2 {
+            shape[0].div_ceil(br) * shape[1].div_ceil(bc)
+        } else {
+            n.div_ceil(GROUP_ELEMS)
+        };
+        let per_block = lay.words_per_group(GROUP_ELEMS) as u64 * 64 + SHARED_EXPONENT_BITS as u64;
+        blocks as u64 * per_block
+    } else {
+        let rem = n % GROUP_ELEMS;
+        let words = (n / GROUP_ELEMS) * lay.words_per_group(GROUP_ELEMS)
+            + if rem > 0 { lay.words_per_group(rem) } else { 0 };
+        words as u64 * 64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_tensor(n: usize, seed: u64, scale: f64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| (rng.normal() * scale) as f32).collect()
+    }
+
+    fn quantized(fmt: FormatKind, x: &[f32], rows: usize, cols: usize, p: Precision) -> Vec<f32> {
+        let mut q = x.to_vec();
+        formats::quantize_2d(fmt, &mut q, rows, cols, p);
+        q
+    }
+
+    #[test]
+    fn bit_rw_round_trips_across_word_boundaries() {
+        let mut words = vec![0u64; 3];
+        // 9-bit fields straddle the 64-bit boundary at element 7.
+        for i in 0..14 {
+            write_bits(&mut words, i * 9, 9, (i as u64 * 37) & 0x1ff);
+        }
+        for i in 0..14 {
+            assert_eq!(read_bits(&words, i * 9, 9), (i as u64 * 37) & 0x1ff, "field {i}");
+        }
+    }
+
+    #[test]
+    fn mxint_round_trip_is_bit_exact() {
+        for seed in 0..6 {
+            let x = rand_tensor(32 * 8, seed, [1.0, 1e3, 1e-3][seed as usize % 3]);
+            let p = Precision::new(5.0, 0.0);
+            let t = pack(&x, 32, 8, FormatKind::MxInt, p);
+            let q = quantized(FormatKind::MxInt, &x, 32, 8, p);
+            for (i, (u, qv)) in t.unpack().iter().zip(q.iter()).enumerate() {
+                assert_eq!(u.to_bits(), qv.to_bits(), "elem {i}: {u} vs {qv}");
+            }
+        }
+    }
+
+    #[test]
+    fn signed_zeros_survive_the_round_trip() {
+        // Small negatives round to -0.0 on the MXInt grid; the sign bit
+        // must survive packing (sign-magnitude storage).
+        let mut x = vec![1.0f32; 32];
+        x[3] = -1e-6;
+        x[5] = -0.0;
+        let p = Precision::new(4.0, 0.0);
+        let t = pack(&x, 16, 2, FormatKind::MxInt, p);
+        let q = quantized(FormatKind::MxInt, &x, 16, 2, p);
+        let u = t.unpack();
+        assert!(q[3] == 0.0 && q[3].is_sign_negative(), "premise: -1e-6 rounds to -0.0");
+        assert_eq!(u[3].to_bits(), q[3].to_bits());
+        assert_eq!(u[5].to_bits(), q[5].to_bits());
+    }
+
+    #[test]
+    fn all_zero_block_round_trips() {
+        let x = vec![0.0f32; 64];
+        for fmt in [FormatKind::MxInt, FormatKind::Bmf, FormatKind::Bl] {
+            let t = pack(&x, 32, 2, fmt, Precision::new(4.0, 0.0));
+            assert_eq!(t.exps, vec![0u8, 0u8], "{}: all-zero blocks store e_min", fmt.name());
+            assert!(t.unpack().iter().all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn subnormal_heavy_blocks_round_trip_bit_exactly() {
+        for fmt in [FormatKind::MxInt, FormatKind::Bmf, FormatKind::Bl] {
+            let x = rand_tensor(32 * 4, 11, 1e-41); // mostly f32 subnormals
+            assert!(x.iter().any(|v| v.abs() > 0.0 && v.abs() < 1.18e-38), "premise");
+            let p = Precision::new(6.0, 0.0);
+            let t = pack(&x, 32, 4, fmt, p);
+            let q = quantized(fmt, &x, 32, 4, p);
+            for (i, (u, qv)) in t.unpack().iter().zip(q.iter()).enumerate() {
+                assert_eq!(u.to_bits(), qv.to_bits(), "{} elem {i}: {u} vs {qv}", fmt.name());
+            }
+        }
+    }
+
+    #[test]
+    fn fp8_denormal_binade_round_trips() {
+        // 0.0139 quantizes to 7 * 2^-9, BELOW 2^e_min: these grid values
+        // use exponent code 0 with no hidden bit. An encoding that treats
+        // ec=0 as plain zero silently flushes them (caught by the numpy
+        // mirror of this layout before the Rust side ever compiled).
+        let mut x = vec![0.013_914_669f32, -0.011_533_062, 0.007_812_5, 1.0];
+        x.resize(32, 0.0);
+        let p = Precision::new(8.0, 0.0);
+        let t = pack(&x, 16, 2, FormatKind::Fp8, p);
+        let q = quantized(FormatKind::Fp8, &x, 16, 2, p);
+        assert!(q[0] != 0.0 && q[0] < pow2(-6), "premise: denormal grid value, got {}", q[0]);
+        for (i, (u, qv)) in t.unpack().iter().zip(q.iter()).enumerate() {
+            assert_eq!(u.to_bits(), qv.to_bits(), "elem {i}: {u} vs {qv}");
+        }
+    }
+
+    #[test]
+    fn fixed_point_round_trips_modulo_negative_zero() {
+        let x = rand_tensor(7 * 9 + 5, 3, 1.0); // partial trailing group
+        let p = Precision::new(8.0, 4.0);
+        let t = pack(&x, 17, 4, FormatKind::Int, p);
+        let q = quantized(FormatKind::Int, &x, 17, 4, p);
+        for (i, (u, qv)) in t.unpack().iter().zip(q.iter()).enumerate() {
+            let ok = u.to_bits() == qv.to_bits() || (*u == 0.0 && *qv == 0.0);
+            assert!(ok, "elem {i}: {u} vs {qv}");
+        }
+    }
+
+    #[test]
+    fn storage_matches_sizing_oracle() {
+        let cases = [
+            (FormatKind::MxInt, Precision::new(7.0, 0.0), 64, 64),
+            (FormatKind::MxInt, Precision::new(4.0, 0.0), 16, 6),
+            (FormatKind::Bmf, Precision::new(5.0, 0.0), 32, 4),
+            (FormatKind::Bl, Precision::new(7.0, 0.0), 16, 2),
+            (FormatKind::Int, Precision::new(8.0, 3.0), 13, 5),
+            (FormatKind::Fp8, Precision::new(8.0, 0.0), 9, 9),
+            (FormatKind::Fp32, Precision::new(32.0, 0.0), 5, 7),
+        ];
+        for (fmt, p, rows, cols) in cases {
+            let x = rand_tensor(rows * cols, 9, 1.0);
+            let t = pack(&x, rows, cols, fmt, p);
+            assert_eq!(
+                t.storage_bits(),
+                packed_bits_for(fmt, p, &[rows, cols]),
+                "{} {rows}x{cols}",
+                fmt.name()
+            );
+        }
+    }
+
+    #[test]
+    fn mxint8_measured_bits_equal_analytic_on_tiling_shapes() {
+        // 8-bit elements pack without padding: measured == Eq. (1).
+        let p = Precision::new(7.0, 0.0);
+        let bits = packed_bits_for(FormatKind::MxInt, p, &[64, 64]);
+        assert_eq!(bits as f64, 64.0 * 64.0 * p.average_bitwidth(FormatKind::MxInt));
+    }
+
+    #[test]
+    fn bmf_and_bl_measured_bits_exceed_analytic() {
+        // The guard bit (BMF) and zero code (BL) are real storage the
+        // analytic Eq. (1) does not count — module docs.
+        for (fmt, p) in [
+            (FormatKind::Bmf, Precision::new(5.0, 0.0)),
+            (FormatKind::Bl, Precision::new(7.0, 0.0)),
+        ] {
+            let measured = packed_bits_for(fmt, p, &[64, 64]) as f64;
+            let analytic = 64.0 * 64.0 * p.average_bitwidth(fmt);
+            assert!(measured > analytic, "{}: {measured} vs {analytic}", fmt.name());
+        }
+    }
+
+    #[test]
+    fn odd_elem_widths_pad_each_block_to_a_word() {
+        // m=4 -> 5-bit elements -> 160 bits -> 3 words, 32 padding bits.
+        let lay = ElemLayout::new(FormatKind::MxInt, Precision::new(4.0, 0.0));
+        assert_eq!(lay.elem_bits, 5);
+        assert_eq!(lay.words_per_group(GROUP_ELEMS), 3);
+        assert_eq!(lay.padding_bits_per_group(), 32);
+    }
+
+    #[test]
+    fn partial_blocks_price_as_full_blocks() {
+        let p = Precision::new(7.0, 0.0);
+        assert_eq!(
+            packed_bits_for(FormatKind::MxInt, p, &[17, 3]),
+            packed_bits_for(FormatKind::MxInt, p, &[32, 4]),
+        );
+    }
+
+    #[test]
+    fn zero_element_tensor_costs_nothing() {
+        assert_eq!(packed_bits_for(FormatKind::MxInt, Precision::new(7.0, 0.0), &[0, 64]), 0);
+    }
+
+    #[test]
+    fn nan_precision_resolves_to_quantizer_floor() {
+        // NaN knobs must not poison sizing (hw::memory robustness).
+        let lay = ElemLayout::new(FormatKind::MxInt, Precision::new(f32::NAN, 0.0));
+        assert_eq!(lay.knob, 1);
+        assert!(packed_bits_for(FormatKind::MxInt, Precision::new(f32::NAN, 0.0), &[16, 2]) > 0);
+    }
+
+    #[test]
+    fn fields_reproduce_decoded_values_exactly() {
+        for (fmt, p) in [
+            (FormatKind::MxInt, Precision::new(6.0, 0.0)),
+            (FormatKind::Bmf, Precision::new(4.0, 0.0)),
+            (FormatKind::Bl, Precision::new(5.0, 0.0)),
+            (FormatKind::Int, Precision::new(9.0, 5.0)),
+            (FormatKind::Fp8, Precision::new(8.0, 0.0)),
+            (FormatKind::Fp32, Precision::new(32.0, 0.0)),
+        ] {
+            let x = rand_tensor(32 * 4, 21, 2.0);
+            let t = pack(&x, 32, 4, fmt, p);
+            for r in 0..32 {
+                for c in 0..4 {
+                    let v = t.get(r, c) as f64;
+                    let (mant, exp) = t.fields_at(r, c);
+                    let rebuilt = mant as f64 * crate::packed::kernels::pow2_f64(exp);
+                    assert_eq!(rebuilt, v, "{} ({r},{c}): {mant}*2^{exp} vs {v}", fmt.name());
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,37 @@
+//! Bit-packed MX tensor storage and compute — the layer between the
+//! format library ([`crate::formats`]) and the hardware model
+//! ([`crate::hw`]).
+//!
+//! Everything in [`crate::formats`] is *fake* quantization: f32 values
+//! snapped onto a format's representable grid. This module stores those
+//! grids the way the paper's hardware does (§4.1): a shared 8-bit
+//! exponent per (16, 2) block plus bit-packed per-element mantissa words,
+//! and computes on the packed representation directly with the integer
+//! mantissa MAC datapath of §4 (exponent alignment, widened accumulator).
+//!
+//! Two contracts anchor the whole layer, both enforced by tests:
+//!
+//!  1. **Round trip** ([`layout`]): `unpack(pack(x))` is bit-identical to
+//!     the fake-quantized `formats::*_quantize(x)` output for all five
+//!     formats, including signed zeros and subnormal-heavy blocks. (One
+//!     documented exception: fixed point stores two's-complement
+//!     integers, so the grid's `-0.0` canonicalizes to `+0.0`.)
+//!  2. **Datapath agreement** ([`kernels`]): the packed integer
+//!     dot-product/GEMM reproduces the f64-over-f32 float reference
+//!     *exactly* for MXInt (and fixed point), and within a documented
+//!     ULP bound for BMF / BL / minifloat — which makes `kernels` the
+//!     golden software reference for the emitted SystemVerilog operators
+//!     ([`crate::emit::templates`] sizes its accumulators from
+//!     [`kernels::mxint_acc_bits`]) and the simulator's cost inputs.
+//!
+//! [`layout::packed_bits_for`] is the measured-storage oracle:
+//! `hw::memory` prices parameter tensors with it (shared-exponent
+//! amortization and word-alignment padding included) instead of the
+//! idealized analytic bit count of Eq. (1), and `mase pack` dumps the
+//! same numbers per tensor.
+
+pub mod kernels;
+pub mod layout;
+
+pub use kernels::{mxint_acc_bits, packed_dot, packed_gemm};
+pub use layout::{pack, packed_bits_for, ElemLayout, PackedTensor};

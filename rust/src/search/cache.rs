@@ -25,7 +25,7 @@
 //! ```text
 //! {
 //!   "schema":  "mase-eval-cache",
-//!   "version": 1,
+//!   "version": 2,
 //!   "scopes": {
 //!     "<model>/<task>/<fmt>/<memo>/...": {
 //!       "entries": [ {"k": ["<hex u64>", ...],   // canonicalized coords
@@ -49,9 +49,13 @@ pub type CacheEntry = (Vec<u64>, f64, Vec<f64>);
 
 /// Magic string identifying an eval-cache file.
 pub const CACHE_SCHEMA: &str = "mase-eval-cache";
-/// On-disk format version. Bump on any change to the entry layout or the
-/// memo-key scheme; old files then load as cold caches (fail-open).
-pub const CACHE_VERSION: u64 = 1;
+/// On-disk format version. Bump on any change to the entry layout, the
+/// memo-key scheme, or the hardware cost model feeding the memoized
+/// objectives; old files then load as cold caches (fail-open).
+/// v2: `hw::memory` prices tensors with measured packed bits
+/// (`packed::layout::packed_bits_for`), changing Eq. (4) objectives for
+/// BMF/BL configs — v1 entries would be silently stale.
+pub const CACHE_VERSION: u64 = 2;
 
 /// Point-in-time counters of one [`EvalCache`] (or an aggregate over a
 /// whole [`CacheStore`]). `hits`/`misses`/`inserts` are cumulative since

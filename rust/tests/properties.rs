@@ -6,6 +6,7 @@ use mase::formats::{self, FormatKind, Precision};
 use mase::frontend::{build_graph, manifest::ModelMeta};
 use mase::hw::Device;
 use mase::ir::{parser::parse_graph, print_graph, verify};
+use mase::packed::layout::{pack, packed_bits_for};
 use mase::passes::{parallelize, ProfileData, QuantSolution};
 use mase::search::{Algorithm, Space, Trial};
 use mase::util::prop::prop_check;
@@ -31,6 +32,74 @@ fn prop_all_formats_idempotent() {
             let i = q1.iter().zip(&q2).position(|(a, b)| a != b).unwrap();
             Err(format!("{} not idempotent at {i}: {} -> {}", fmt.name(), q1[i], q2[i]))
         }
+    });
+}
+
+#[test]
+fn prop_pack_unpack_round_trips_bit_exactly() {
+    // packed::layout contract 1: unpack(pack(x)) is bit-identical to the
+    // fake-quantized grid for all five formats, across random shapes
+    // (block-boundary remainders for the element-wise formats),
+    // subnormal-heavy data and all-zero blocks. Sole documented
+    // exception: fixed point stores two's complement, so the grid's
+    // -0.0 canonicalizes to +0.0 (numerically equal).
+    let bits_match = |fmt: FormatKind, q: f32, u: f32| {
+        q.to_bits() == u.to_bits() || (fmt == FormatKind::Int && q == 0.0 && u == 0.0)
+    };
+    prop_check(80, |g| {
+        let fmt = *g.choice(&[
+            FormatKind::MxInt,
+            FormatKind::Bmf,
+            FormatKind::Bl,
+            FormatKind::Int,
+            FormatKind::Fp8,
+        ]);
+        let (rows, cols) = if fmt.is_block_format() {
+            (16 * g.int(1, 4) as usize, 2 * g.int(1, 6) as usize)
+        } else {
+            // arbitrary shapes: exercises partial trailing 32-groups
+            (g.int(1, 40) as usize, g.int(1, 9) as usize)
+        };
+        let n = rows * cols;
+        let bits = if fmt == FormatKind::Int { g.int(2, 10) } else { g.int(1, 10) } as f32;
+        let p = Precision::new(bits, g.int(-2, 8) as f32);
+        let mut x = match g.int(0, 2) {
+            0 => g.vec_f32_scaled(n),
+            // subnormal-heavy: most magnitudes below 2^-126
+            1 => (0..n).map(|_| (g.rng().normal() * 1e-41) as f32).collect(),
+            // all-zero blocks with a lone value so some blocks stay zero
+            _ => {
+                let mut z = vec![0.0f32; n];
+                z[n - 1] = g.f32_in(-4.0, 4.0);
+                z
+            }
+        };
+        if n > 1 {
+            x[0] = -0.0; // signed zeros must survive packing
+        }
+        let t = pack(&x, rows, cols, fmt, p);
+        let u = t.unpack();
+        let mut q = x.clone();
+        formats::quantize_2d(fmt, &mut q, rows, cols, p);
+        for i in 0..n {
+            if !bits_match(fmt, q[i], u[i]) {
+                return Err(format!(
+                    "{} {rows}x{cols} bits={bits}: elem {i} {:?} -> packed {:?}",
+                    fmt.name(),
+                    q[i],
+                    u[i]
+                ));
+            }
+        }
+        if t.storage_bits() != packed_bits_for(fmt, p, &[rows, cols]) {
+            return Err(format!(
+                "{}: storage {} != sizing oracle {}",
+                fmt.name(),
+                t.storage_bits(),
+                packed_bits_for(fmt, p, &[rows, cols])
+            ));
+        }
+        Ok(())
     });
 }
 

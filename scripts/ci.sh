@@ -45,6 +45,12 @@ if [[ -z "${SKIP_LINTS:-}" ]]; then
   RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 fi
 
+# Bench/example targets are plain binaries that tier-1 never builds;
+# type-check them so APIs they exercise (e.g. packed::layout in the
+# table1/fig5 benches) cannot rot silently.
+echo "==> cargo check --benches --examples"
+cargo check --benches --examples
+
 echo "==> tier-1 verify: cargo build --release && cargo test -q"
 cargo build --release
 cargo test -q

@@ -1,0 +1,442 @@
+#!/usr/bin/env python3
+"""Numerical verification of the rust/src/packed design, mirrored in numpy
+float32 (IEEE single, correctly rounded per op — same semantics as Rust f32).
+
+Mirrors:  formats::{mxint,bmf,bl,fixed,minifloat} quantizers (Rust semantics,
+incl. copysign signed zeros), packed::layout encode/decode, packed::kernels
+dot/gemm integer datapath and the f64 references.
+
+Claims checked:
+  C1  unpack(pack(x)) bit-identical to quantize(x), all 5 formats,
+      random scales + subnormal-heavy + all-zero blocks + signed zeros
+      (fixed point: modulo -0.0 -> +0.0).
+  C2  BMF magnitude always fits m+1 bits; BL code fits eb+1 bits;
+      MXInt magnitude fits m bits (the field-width claims).
+  C3  MXInt packed integer dot == f64 block-order reference, bitwise.
+  C4  Int packed dot == f64 group-order reference, bitwise.
+  C5  BMF/FP8/BL dot within n*2^-50*sum|ab| of reference.
+  C6  MXInt packed GEMM == segmented f64 reference, bitwise (2-wide segs).
+  C7  my numpy transcription of the quantizers agrees with ref.py (jax)
+      on clean data (sanity that the transcription is faithful).
+"""
+import numpy as np
+import struct, sys
+
+f32 = np.float32
+
+def bits(x):  return struct.unpack('<I', struct.pack('<f', f32(x)))[0]
+
+def pow2(e):  # Rust formats::pow2
+    e = int(np.clip(e, -149, 127))
+    if e >= -126: return f32(struct.unpack('<f', struct.pack('<I', (e + 127) << 23))[0])
+    return f32(struct.unpack('<f', struct.pack('<I', 1 << (e + 149)))[0])
+
+def floor_log2(x):  # Rust formats::floor_log2 (x > 0 finite)
+    b = bits(x); exp = (b >> 23) & 0xff
+    if exp == 0:
+        mant = b & 0x7fffff
+        return (mant.bit_length() - 1) - 149
+    return exp - 127
+
+def rte(x):  # round ties even, f32
+    return f32(np.rint(f32(x)))
+
+def is_neg(x): return bool(bits(x) >> 31)
+
+SHARED_EXP_MIN, LOCAL_EXP_BITS = -126, 2
+
+def shared_exponent(maxabs):
+    if maxabs == 0.0 or not np.isfinite(maxabs): return SHARED_EXP_MIN
+    return int(np.clip(floor_log2(maxabs), -126, 127))
+
+# ---------------- Rust-semantics quantizers (f32 op-for-op) --------------
+def resolve_m(b, floor_=1.0): return int(max(f32(np.round(f32(b))), floor_)) if not np.isnan(b) else int(floor_)
+
+def q_mxint(x, rows, cols, mb):
+    m = resolve_m(mb); q = x.copy()
+    for s, blk in blocks(rows, cols):
+        e = shared_exponent(maxabs(x, s, cols))
+        sc = pow2(e + 1 - m); qm = f32(pow2(m) - f32(1.0))
+        for i in blk:
+            q[i] = f32(f32(np.clip(rte(f32(x[i] / sc)), -qm, qm)) * sc)
+    return q
+
+def q_bmf(x, rows, cols, mb):
+    m = resolve_m(mb); e_min = -(int(pow2(LOCAL_EXP_BITS)) - 1); q = x.copy()
+    for s, blk in blocks(rows, cols):
+        bias = shared_exponent(maxabs(x, s, cols))
+        top = f32(pow2(bias + 1) - pow2(bias - m))
+        for i in blk:
+            xi = x[i]
+            if xi == 0.0: q[i] = f32(0.0); continue
+            a = f32(abs(xi)); e_loc = int(np.clip(floor_log2(a) - bias, e_min, 0))
+            sc = pow2(e_loc + bias - m)
+            v = f32(min(f32(rte(f32(a / sc)) * sc), top))
+            q[i] = f32(np.copysign(v, xi))
+    return q
+
+def q_bl(x, rows, cols, eb):
+    ebi = resolve_m(eb); levels = int(pow2(ebi)) - 1; q = x.copy()
+    for s, blk in blocks(rows, cols):
+        bias = shared_exponent(maxabs(x, s, cols))
+        e_min = bias - levels; under = pow2(e_min - 1)
+        for i in blk:
+            xi = x[i]
+            if xi == 0.0: q[i] = f32(0.0); continue
+            a = f32(abs(xi))
+            if a < under: q[i] = f32(np.copysign(f32(0.0), xi)); continue
+            e = int(np.clip(round(float(np.log2(float(a)))), e_min, bias))
+            q[i] = f32(np.copysign(pow2(e), xi))
+    return q
+
+def q_int(x, w_, f_):
+    w = int(max(f32(np.round(f32(w_))), 2.0)); f = int(f32(np.round(f32(f_))))
+    sc = pow2(-f); qmax = f32(pow2(w - 1) - f32(1.0)); qmin = f32(-pow2(w - 1))
+    return np.array([f32(f32(np.clip(rte(f32(v / sc)), qmin, qmax)) * sc) for v in x], f32)
+
+def q_fp8(x, e=4, m=3, bias=7):
+    e_min = 1 - bias; e_max = int(pow2(e)) - 2 - bias
+    top = f32(pow2(e_max + 1) - pow2(e_max - m)); under = pow2(e_min - 1)
+    out = x.copy()
+    for i, xi in enumerate(x):
+        if xi == 0.0: continue
+        a = f32(abs(xi))
+        if a < under: out[i] = f32(np.copysign(f32(0.0), xi)); continue
+        ee = int(np.clip(floor_log2(a), e_min, e_max))
+        sc = pow2(ee - m)
+        out[i] = f32(np.copysign(f32(min(f32(rte(f32(a / sc)) * sc), top)), xi))
+    return out
+
+def blocks(rows, cols):
+    out = []
+    for rb in range(rows // 16):
+        for cb in range(cols // 2):
+            s = rb * 16 * cols + cb * 2
+            out.append((s, [s + r * cols + c for r in range(16) for c in range(2)]))
+    return out
+
+def maxabs(x, s, cols):
+    return f32(max(abs(x[s + r * cols + c]) for r in range(16) for c in range(2)))
+
+# ---------------- packed encode/decode (mirrors layout.rs) ---------------
+def enc_mxint(v, e, m):
+    sc = pow2(e + 1 - m); qq = f32(v / sc); mag = int(abs(qq))
+    assert float(abs(qq)).is_integer() and mag <= (1 << m) - 1, (v, e, m)
+    return (int(is_neg(v)) << m) | mag
+
+def dec_mxint(code, e, m):
+    sc = pow2(e + 1 - m); mag = f32(code & ((1 << m) - 1))
+    val = f32(mag * sc)
+    return f32(-val) if (code >> m) & 1 else val
+
+def enc_bmf(v, bias, m):
+    e_min = -(int(pow2(LOCAL_EXP_BITS)) - 1)
+    if v == 0.0: return int(is_neg(v)) << (LOCAL_EXP_BITS + m + 1)
+    a = f32(abs(v)); e_loc = int(np.clip(floor_log2(a) - bias, e_min, 0))
+    sc = pow2(e_loc + bias - m); qq = f32(a / sc); k = int(qq)
+    assert float(qq).is_integer() and 1 <= k <= (1 << (m + 1)) - 1, (v, bias, m, qq)
+    return (int(is_neg(v)) << (LOCAL_EXP_BITS + m + 1)) | ((e_loc - e_min) << (m + 1)) | k
+
+def dec_bmf(code, bias, m):
+    e_min = -(int(pow2(LOCAL_EXP_BITS)) - 1)
+    sign = (code >> (LOCAL_EXP_BITS + m + 1)) & 1
+    k = code & ((1 << (m + 1)) - 1)
+    if k == 0: return f32(-0.0) if sign else f32(0.0)
+    ec = (code >> (m + 1)) & ((1 << LOCAL_EXP_BITS) - 1)
+    val = f32(f32(k) * pow2(e_min + ec + bias - m))
+    return f32(-val) if sign else val
+
+def enc_bl(v, bias, eb):
+    if v == 0.0: return int(is_neg(v)) << (eb + 1)
+    e_min = bias - (int(pow2(eb)) - 1)
+    c = floor_log2(f32(abs(v))) - e_min + 1
+    assert 1 <= c <= (1 << eb), (v, bias, eb, c)
+    return (int(is_neg(v)) << (eb + 1)) | c
+
+def dec_bl(code, bias, eb):
+    sign = (code >> (eb + 1)) & 1
+    c = code & ((1 << (eb + 1)) - 1)
+    if c == 0: return f32(-0.0) if sign else f32(0.0)
+    e_min = bias - (int(pow2(eb)) - 1)
+    val = pow2(e_min + c - 1)
+    return f32(-val) if sign else val
+
+def enc_int(v, w, f):
+    k = int(f32(v / pow2(-f)))
+    assert -(1 << (w - 1)) <= k <= (1 << (w - 1)) - 1
+    return k & ((1 << w) - 1)
+
+def dec_int(code, w, f):
+    k = code if code < (1 << (w - 1)) else code - (1 << w)
+    return f32(f32(k) * pow2(-f))
+
+def enc_fp8(v, m=3, bias=7):
+    if v == 0.0: return int(is_neg(v)) << 7
+    a = f32(abs(v)); unb = floor_log2(a); e_min = 1 - bias
+    if unb < e_min:
+        q = f32(a / pow2(e_min - m)); t = int(q)
+        assert float(q).is_integer() and 1 <= t < (1 << m), v
+        return (int(is_neg(v)) << 7) | t
+    t = (bits(a) >> (23 - m)) & 0x7
+    assert bits(a) & ((1 << (23 - m)) - 1) == 0, v
+    return (int(is_neg(v)) << 7) | ((unb + bias) << m) | t
+
+def dec_fp8(code, m=3, bias=7):
+    sign = (code >> 7) & 1
+    ec = (code >> m) & 0xf
+    t = code & 0x7
+    if ec == 0:
+        if t == 0: return f32(-0.0) if sign else f32(0.0)
+        val = f32(f32(t) * pow2(1 - bias - m))
+        return f32(-val) if sign else val
+    val = f32(f32((1 << m) + t) * pow2(ec - bias - m))
+    return f32(-val) if sign else val
+
+# fields: (mant, exp) with value == mant*2^exp exactly
+def fld_mxint(code, e, m):
+    mag = code & ((1 << m) - 1)
+    mant = -mag if (code >> m) & 1 else mag
+    return mant, int(np.clip(e + 1 - m, -149, 127))
+
+def fld_bmf(code, bias, m):
+    e_min = -(int(pow2(LOCAL_EXP_BITS)) - 1)
+    sign = (code >> (LOCAL_EXP_BITS + m + 1)) & 1
+    k = code & ((1 << (m + 1)) - 1)
+    if k == 0: return 0, 0
+    ec = (code >> (m + 1)) & 3
+    return (-k if sign else k), int(np.clip(e_min + ec + bias - m, -149, 127))
+
+def fld_bl(code, bias, eb):
+    sign = (code >> (eb + 1)) & 1
+    c = code & ((1 << (eb + 1)) - 1)
+    if c == 0: return 0, 0
+    e_min = bias - (int(pow2(eb)) - 1)
+    return (-1 if sign else 1), int(np.clip(e_min + c - 1, -149, 127))
+
+def fld_int(code, w, f):
+    k = code if code < (1 << (w - 1)) else code - (1 << w)
+    return k, int(np.clip(-f, -149, 127))
+
+def fld_fp8(code, m=3, bias=7):
+    sign = (code >> 7) & 1
+    ec = (code >> m) & 0xf
+    t = code & 0x7
+    if ec == 0:
+        if t == 0: return 0, 0
+        return (-t if sign else t), 1 - bias - m
+    k = (1 << m) + t
+    return (-k if sign else k), ec - bias - m
+
+# ---------------- kernels (mirrors kernels.rs) ---------------------------
+MAX_SHIFT = 63
+
+def flush(total, prods):
+    if not prods: return total
+    emin = min(e for _, e in prods); emax = max(e for _, e in prods)
+    if emax - emin <= MAX_SHIFT:
+        acc = sum(mm << (e - emin) for mm, e in prods)
+        if acc != 0:
+            total += np.float64(acc) * np.float64(2.0) ** emin  # exact: |acc|<2^53 path checked
+    else:
+        for mm, e in prods:
+            total += np.float64(mm) * np.float64(2.0) ** emin_pow(e)
+    return total
+
+def emin_pow(e): return e  # clarity
+
+def packed_dot(fa, fb):  # lists of (mant, exp) in group order, len%group handled by caller
+    total = np.float64(0.0); prods = []
+    for i, ((ma, ea), (mb, eb)) in enumerate(zip(fa, fb)):
+        if ma != 0 and mb != 0: prods.append((ma * mb, ea + eb))
+        if i % 32 == 31: total = flush(total, prods); prods = []
+    return flush(total, prods)
+
+def dot_ref_grouped(qa, qb):
+    total = np.float64(0.0)
+    for g in range(0, len(qa), 32):
+        partial = np.float64(0.0)
+        for i in range(g, min(g + 32, len(qa))):
+            partial += np.float64(qa[i]) * np.float64(qb[i])
+        total += partial
+    return total
+
+rng = np.random.default_rng(0)
+fails = []
+
+def check(name, ok):
+    print(("PASS " if ok else "FAIL ") + name)
+    if not ok: fails.append(name)
+
+# ============ C1/C2: round trips ============
+def roundtrip_block(fmt, qfn, efn, dfn, rows, cols, x, knob):
+    q = qfn(x, rows, cols, knob)
+    m = resolve_m(knob)
+    out = np.empty_like(q)
+    for s, blk in blocks(rows, cols):
+        e = shared_exponent(maxabs(x, s, cols))
+        for i in blk:
+            out[i] = dfn(efn(q[i], e, m), e, m)
+    return q, out
+
+regimes = {
+    "normal": lambda n: rng.normal(size=n).astype(f32),
+    "big": lambda n: (rng.normal(size=n) * 1e3).astype(f32),
+    "tiny": lambda n: (rng.normal(size=n) * 1e-3).astype(f32),
+    "subnormal": lambda n: (rng.normal(size=n) * 1e-41).astype(f32),
+    "zeros": lambda n: np.zeros(n, f32),
+}
+for reg, gen in regimes.items():
+    for knob in [1.0, 4.0, 4.9, 7.0, 10.0]:
+        rows, cols = 32, 4
+        x = gen(rows * cols)
+        if len(x) > 3: x[1] = f32(-0.0); x[2] = f32(-1e-7)
+        for fmt, qfn, efn, dfn in [("mxint", q_mxint, enc_mxint, dec_mxint),
+                                    ("bmf", q_bmf, enc_bmf, dec_bmf),
+                                    ("bl", q_bl, enc_bl, dec_bl)]:
+            q, out = roundtrip_block(fmt, qfn, efn, dfn, rows, cols, x, knob)
+            ok = all(bits(a) == bits(b) for a, b in zip(q, out))
+            check(f"C1 {fmt} {reg} knob={knob}", ok)
+        # element-wise formats, incl. partial-group lengths
+        xi = gen(67)
+        if len(xi) > 3: xi[1] = f32(-0.0)
+        w = max(int(round(knob)) + 1, 2); fr = 3
+        q = q_int(xi, w, fr)
+        out = np.array([dec_int(enc_int(v, w, fr), w, fr) for v in q], f32)
+        ok = all(bits(a) == bits(b) or (a == 0.0 and b == 0.0) for a, b in zip(q, out))
+        check(f"C1 int {reg} w={w}", ok)
+        q = q_fp8(xi)
+        out = np.array([dec_fp8(enc_fp8(v)) for v in q], f32)
+        check(f"C1 fp8 {reg}", all(bits(a) == bits(b) for a, b in zip(q, out)))
+
+# adversarial BMF: binade-bump + top-clamp cases (C2 guard-bit claim)
+for trial in range(2000):
+    rows, cols = 16, 2
+    x = (rng.normal(size=32) * (10.0 ** rng.integers(-40, 35))).astype(f32)
+    m = int(rng.integers(1, 13))
+    q = q_bmf(x, rows, cols, float(m))
+    e = shared_exponent(maxabs(x, 0, cols))
+    for i in range(32):
+        c = enc_bmf(q[i], e, m)   # asserts k <= 2^(m+1)-1 inside
+        assert bits(dec_bmf(c, e, m)) == bits(q[i]), (trial, i)
+check("C2 bmf adversarial 2000 blocks bit-exact + guard bit holds", True)
+
+# ============ C3: MXInt dot exact ============
+def mxint_fields(x, rows, cols, mb):
+    q = q_mxint(x, rows, cols, mb); m = resolve_m(mb)
+    fl, qord = [], []
+    for s, blk in blocks(rows, cols):
+        e = shared_exponent(maxabs(x, s, cols))
+        for i in blk:
+            fl.append(fld_mxint(enc_mxint(q[i], e, m), e, m)); qord.append(q[i])
+    return fl, np.array(qord, f32)
+
+ok = True
+for scale, (ma, mb) in [(1.0, (7, 7)), (1e3, (7, 4)), (1e-3, (3, 10)), (1e-40, (2, 2)), (1e20, (8, 8))]:
+    rows, cols = 48, 6
+    x = (rng.normal(size=rows * cols) * scale).astype(f32)
+    y = (rng.normal(size=rows * cols) * scale).astype(f32)
+    fa, qa = mxint_fields(x, rows, cols, float(ma))
+    fb, qb = mxint_fields(y, rows, cols, float(mb))
+    d = packed_dot(fa, fb); r = dot_ref_grouped(qa, qb)
+    if struct.pack('<d', d) != struct.pack('<d', r):
+        ok = False; print("  mismatch", scale, ma, mb, d, r)
+check("C3 mxint packed dot bitwise == f64 block reference (5 scale/prec cases)", ok)
+
+# ============ C4: Int dot exact ============
+xi = (rng.normal(size=207) * 3).astype(f32); yi = (rng.normal(size=207) * 3).astype(f32)
+w, fr = 8, 4
+qa = q_int(xi, w, fr); qb = q_int(yi, w, fr)
+fa = [fld_int(enc_int(v, w, fr), w, fr) for v in qa]
+fb = [fld_int(enc_int(v, w, fr), w, fr) for v in qb]
+d = packed_dot(fa, fb); r = dot_ref_grouped(qa, qb)
+check("C4 int packed dot bitwise == reference", struct.pack('<d', d) == struct.pack('<d', r))
+
+# ============ C5: BMF/FP8/BL bound ============
+def fields_block(fmt, x, rows, cols, knob):
+    m = resolve_m(knob)
+    qfn = {"bmf": q_bmf, "bl": q_bl}[fmt]
+    efn = {"bmf": enc_bmf, "bl": enc_bl}[fmt]
+    ffn = {"bmf": fld_bmf, "bl": fld_bl}[fmt]
+    q = qfn(x, rows, cols, knob)
+    fl, qord = [], []
+    for s, blk in blocks(rows, cols):
+        e = shared_exponent(maxabs(x, s, cols))
+        for i in blk:
+            fl.append(ffn(efn(q[i], e, m), e, m)); qord.append(q[i])
+    return fl, np.array(qord, f32)
+
+ok = True
+for fmt, knob in [("bmf", 5.0), ("bl", 7.0), ("bl", 3.0)]:
+    for scale in [1.0, 1e3, 1e-3, 1e-30]:
+        rows, cols = 32, 8
+        x = (rng.normal(size=rows * cols) * scale).astype(f32)
+        y = rng.normal(size=rows * cols).astype(f32)
+        fa, qa = fields_block(fmt, x, rows, cols, knob)
+        fb, qb = fields_block(fmt, y, rows, cols, knob)
+        d = packed_dot(fa, fb); r = dot_ref_grouped(qa, qb)
+        gross = sum(abs(np.float64(a) * np.float64(b)) for a, b in zip(qa, qb))
+        bound = len(qa) * 2.0 ** -50 * gross
+        if abs(d - r) > bound: ok = False; print("  C5 fail", fmt, knob, scale, d, r, bound)
+# fp8
+x = rng.normal(size=256).astype(f32); y = rng.normal(size=256).astype(f32)
+qa = q_fp8(x); qb = q_fp8(y)
+fa = [fld_fp8(enc_fp8(v)) for v in qa]; fb = [fld_fp8(enc_fp8(v)) for v in qb]
+d = packed_dot(fa, fb); r = dot_ref_grouped(qa, qb)
+gross = sum(abs(np.float64(a) * np.float64(b)) for a, b in zip(qa, qb))
+if abs(d - r) > len(qa) * 2.0 ** -50 * gross: ok = False; print("  C5 fp8 fail")
+check("C5 bmf/bl/fp8 dot within documented bound", ok)
+
+# ============ C6: GEMM segmented exactness ============
+def mx_pack_mat(x, rows, cols, mb):
+    q = q_mxint(x.ravel(), rows, cols, mb).reshape(rows, cols)
+    m = resolve_m(mb)
+    exps = {}
+    for s, blk in blocks(rows, cols):
+        rb, cb = (s // cols) // 16, (s % cols) // 2
+        exps[(rb, cb)] = shared_exponent(maxabs(x.ravel(), s, cols))
+    def fld(r, c):
+        e = exps[(r // 16, c // 2)]
+        return fld_mxint(enc_mxint(q[r, c], e, m), e, m)
+    return q, fld
+
+M, K, N = 32, 48, 10
+A = rng.normal(size=(M, K)).astype(f32); B = rng.normal(size=(K, N)).astype(f32)
+qA, fldA = mx_pack_mat(A, M, K, 7.0)
+qB, fldB = mx_pack_mat(B, K, N, 4.0)
+ok = True
+for i in range(M):
+    for j in range(N):
+        total = np.float64(0.0); prods = []
+        ref = np.float64(0.0)
+        for kk in range(0, K, 2):
+            for t in range(kk, min(kk + 2, K)):
+                ma, ea = fldA(i, t); mb_, eb = fldB(t, j)
+                if ma != 0 and mb_ != 0: prods.append((ma * mb_, ea + eb))
+            total = flush(total, prods); prods = []
+            part = np.float64(0.0)
+            for t in range(kk, min(kk + 2, K)):
+                part += np.float64(qA[i, t]) * np.float64(qB[t, j])
+            ref += part
+        if bits(f32(total)) != bits(f32(ref)):
+            ok = False; print("  C6 fail", i, j, total, ref)
+check("C6 mxint gemm segment datapath bitwise == f64 segmented reference", ok)
+
+# ============ C7: transcription vs ref.py ============
+sys.path.insert(0, "/root/repo/python")
+from compile.kernels import ref as R
+import jax.numpy as jnp
+x = (rng.normal(size=(32, 8)) * 2.0).astype(f32)
+pairs = [
+    ("mxint", q_mxint(x.ravel(), 32, 8, 5.0), np.array(R.mxint_quantize(jnp.asarray(x), 5.0)).ravel()),
+    ("bmf", q_bmf(x.ravel(), 32, 8, 4.0), np.array(R.bmf_quantize(jnp.asarray(x), 4.0)).ravel()),
+    ("bl", q_bl(x.ravel(), 32, 8, 6.0), np.array(R.bl_quantize(jnp.asarray(x), 6.0)).ravel()),
+    ("int", q_int(x.ravel(), 8, 4), np.array(R.int_quantize(jnp.asarray(x), 8.0, 4.0)).ravel()),
+    ("fp8", q_fp8(x.ravel()), np.array(R.minifloat_quantize(jnp.asarray(x))).ravel()),
+]
+for name, mine, theirs in pairs:
+    same = np.array_equal(mine, theirs)
+    check(f"C7 {name} transcription == ref.py grid", bool(same))
+
+print()
+print("ALL PASS" if not fails else f"{len(fails)} FAILURES: {fails}")
+sys.exit(1 if fails else 0)
