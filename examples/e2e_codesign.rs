@@ -38,7 +38,7 @@ fn main() -> anyhow::Result<()> {
             bt.push(task.sample(0, (step * meta.batch + i) as u64, meta.seq_len));
         }
         let lr = 0.02 * (1.0 - 0.9 * step as f32 / steps as f32); // sign-SGD scale
-        let out = session.runtime.execute(
+        let out = session.pjrt()?.execute(
             train_artifact,
             &[
                 TensorData::f32(&w, &[meta.param_size as i64]),
@@ -56,12 +56,12 @@ fn main() -> anyhow::Result<()> {
     // ---- 2. profile (Fig. 1a) ------------------------------------------
     println!("\n== 2. profile pass (Fig. 1a statistics) ==");
     let eval = batches(task, 1, 4, meta.batch, meta.seq_len);
-    let profile = profile_model(&session.runtime, &meta, &w, &eval[..1])?;
+    let profile = profile_model(&session.pjrt_backend()?, &meta, &w, &eval[..1])?;
     println!("  variance spread across tensors: {:.1}x", profile.variance_spread());
 
     // ---- 3. hardware-aware mixed-precision search -----------------------
     println!("\n== 3. TPE co-design search ({trials} trials, Eq. 4 objective) ==");
-    let ev = Evaluator::new(&session.runtime, &meta, &w, &eval);
+    let ev = Evaluator::new(session.pjrt_backend()?, &meta, &w, &eval)?;
     let fp32 = ev.accuracy(&QuantSolution::uniform(FormatKind::Fp32, 32.0, &meta, &profile))?;
     let int8 = ev.evaluate(&QuantSolution::uniform(FormatKind::Int, 8.0, &meta, &profile))?;
     let qat_steps = if meta.artifacts.contains_key("qat_mxint") { 2 } else { 0 };

@@ -27,8 +27,8 @@ fn main() -> anyhow::Result<()> {
             seq: meta.seq_len,
         })
         .collect();
-    let ev = Evaluator::new(&session.runtime, &meta, &weights, &batches);
-    let profile = profile_model(&session.runtime, &meta, &weights, &batches[..1])?;
+    let ev = Evaluator::new(session.pjrt_backend()?, &meta, &weights, &batches)?;
+    let profile = profile_model(&ev.backend, &meta, &weights, &batches[..1])?;
 
     // W8A8-equivalent configurations per format (paper Table 1)
     let rows = [

@@ -15,11 +15,11 @@ fn main() -> anyhow::Result<()> {
     let meta = session.manifest.model("opt-125m-sim")?.clone();
     let weights = pretrain::pretrain(&session, &meta, Some(Task::Sst2), &Default::default())?;
     let eval = batches(Task::Sst2, 1, 3, meta.batch, meta.seq_len);
-    let mut ev = Evaluator::new(&session.runtime, &meta, &weights, &eval);
+    let mut ev = Evaluator::new(session.pjrt_backend()?, &meta, &weights, &eval)?;
     ev.objective = Objective::sw_only(); // Fig. 4 uses acc + k/b
 
     let trials = std::env::var("MASE_TRIALS").ok().and_then(|v| v.parse().ok()).unwrap_or(48);
-    let profile = profile_model(&session.runtime, &meta, &weights, &eval[..1])?;
+    let profile = profile_model(&ev.backend, &meta, &weights, &eval[..1])?;
 
     let mut curves = Vec::new();
     for alg in Algorithm::ALL {

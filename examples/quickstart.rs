@@ -20,17 +20,18 @@ fn main() -> anyhow::Result<()> {
     // 1. weights: trained by the Rust coordinator driving the train HLO
     let weights = pretrain::pretrain(&session, &meta, Some(Task::Sst2), &Default::default())?;
 
-    // 2. evaluation set + profile
+    // 2. evaluation set + profile (PJRT backend; swap in
+    //    `mase::runtime::CpuBackend::new()` for the artifact-free path)
     let eval = batches(Task::Sst2, 1, 4, meta.batch, meta.seq_len);
-    let ev = Evaluator::new(&session.runtime, &meta, &weights, &eval);
-    let profile = profile_model(&session.runtime, &meta, &weights, &eval[..1])?;
+    let ev = Evaluator::new(session.pjrt_backend()?, &meta, &weights, &eval)?;
+    let profile = profile_model(&ev.backend, &meta, &weights, &eval[..1])?;
 
     // 3. baselines
     let fp32 = ev.accuracy(&QuantSolution::uniform(FormatKind::Fp32, 32.0, &meta, &profile))?;
     let mxint8_sol = QuantSolution::uniform(FormatKind::MxInt, 7.0, &meta, &profile);
     let mxint8 = ev.accuracy(&mxint8_sol)?;
     // same solution through the Pallas-kernel artifact (L1 on the path)
-    let pallas = ev.accuracy_with(&mxint8_sol, "eval_mxint_pallas", &weights)?;
+    let pallas = ev.accuracy_with(&mxint8_sol, "mxint_pallas", &weights)?;
 
     // 4. mixed-precision search (TPE, 16 trials for the quickstart)
     let outcome = run_search(

@@ -12,6 +12,7 @@ use mase::coordinator::{pretrain, PretrainConfig, Session};
 use mase::data::{batches, Batch, MarkovCorpus, Task};
 use mase::frontend::ModelMeta;
 use mase::passes::{profile_model, Evaluator, ProfileData};
+use mase::runtime::PjrtBackend;
 
 pub fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -85,15 +86,16 @@ pub fn lm_eval_set(meta: &ModelMeta) -> Vec<Batch> {
         .collect()
 }
 
-/// Evaluator + profile, ready to score solutions.
+/// Evaluator (PJRT-backed) + profile, ready to score solutions.
 pub fn evaluator_for<'a>(
     session: &'a Session,
     meta: &'a ModelMeta,
     w: &'a [f32],
     eval: &'a [Batch],
-) -> (Evaluator<'a>, ProfileData) {
-    let ev = Evaluator::new(&session.runtime, meta, w, eval);
-    let profile = profile_model(&session.runtime, meta, w, &eval[..1]).expect("profile failed");
+) -> (Evaluator<'a, PjrtBackend<'a>>, ProfileData) {
+    let backend = session.pjrt_backend().expect("PJRT session");
+    let ev = Evaluator::new(backend, meta, w, eval).expect("evaluator");
+    let profile = profile_model(&ev.backend, meta, w, &eval[..1]).expect("profile failed");
     (ev, profile)
 }
 

@@ -1,0 +1,59 @@
+//! CPU-backend interpreter microbench — artifact-free (never skips).
+//!
+//! Times the packed-arithmetic evaluate path (`CpuBackend::new()`)
+//! against the fake-quantized float reference (`CpuBackend::reference()`)
+//! per format, in trials/second of the evaluate pass on one eval batch.
+//! This is the oracle the `--backend cpu` search loop pays per trial, so
+//! these numbers bound artifact-free search throughput directly.
+//!
+//! Run: `cargo bench --bench cpu_backend`  (knobs: MASE_MODELS)
+
+#[path = "common.rs"]
+mod common;
+
+use mase::data::{batches, Task};
+use mase::formats::FormatKind;
+use mase::frontend::Manifest;
+use mase::passes::{profile_model, Evaluator, QuantSolution};
+use mase::runtime::CpuBackend;
+use mase::util::Table;
+
+fn main() {
+    common::banner("CPU backend", "packed interpreter evaluate-pass throughput (artifact-free)");
+    let manifest = Manifest::synthetic();
+    let models: Vec<String> = std::env::var("MASE_MODELS")
+        .map(|v| v.split(',').map(str::to_string).collect())
+        .unwrap_or_else(|_| vec!["toy-sim".into(), "opt-125m-sim".into()]);
+
+    let mut t = Table::new(vec!["model", "format", "packed ms/eval", "reference ms/eval", "ratio"]);
+    for name in &models {
+        let meta = manifest.model(name).expect("zoo model").clone();
+        let w = mase::frontend::init_params(&meta, 0xC0DE);
+        let eval = batches(Task::Sst2, 1, 1, meta.batch, meta.seq_len);
+        let profile = profile_model(&CpuBackend::new(), &meta, &w, &eval).expect("profile");
+        for (fmt, bits) in [(FormatKind::MxInt, 7.0f32), (FormatKind::Int, 8.0)] {
+            let sol = QuantSolution::uniform(fmt, bits, &meta, &profile);
+            let time_path = |be: CpuBackend| {
+                let ev = Evaluator::new(be, &meta, &w, &eval).expect("evaluator");
+                ev.accuracy(&sol).expect("warmup");
+                let reps = 3;
+                let t0 = std::time::Instant::now();
+                for _ in 0..reps {
+                    ev.accuracy(&sol).expect("eval");
+                }
+                t0.elapsed().as_secs_f64() / reps as f64
+            };
+            let packed = time_path(CpuBackend::new());
+            let reference = time_path(CpuBackend::reference());
+            t.row(vec![
+                name.clone(),
+                format!("{}{}", fmt.name(), bits as i32),
+                format!("{:.1}", packed * 1e3),
+                format!("{:.1}", reference * 1e3),
+                format!("{:.2}x", packed / reference),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    println!("(each eval = 1 batch; a --backend cpu search pays one eval per uncached trial)");
+}

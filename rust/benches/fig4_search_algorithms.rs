@@ -56,6 +56,7 @@ fn main() {
         common::eval_batches_n(),
         common::env_usize("MASE_PRETRAIN_STEPS", 220),
         "sw",
+        mase::runtime::BackendKind::Pjrt,
     );
     let cache = store.cache(&scope);
 

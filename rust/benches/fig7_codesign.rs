@@ -58,7 +58,13 @@ fn main() {
         .unwrap()
         .best_eval;
         // MP MXInt SW-only: search ignores hardware metrics
-        let mut ev_sw = mase::passes::Evaluator::new(&session.runtime, &meta, &w, &eval);
+        let mut ev_sw = mase::passes::Evaluator::new(
+            session.pjrt_backend().expect("PJRT session"),
+            &meta,
+            &w,
+            &eval,
+        )
+        .expect("evaluator");
         ev_sw.objective = Objective::sw_only();
         let sw_only = run_search(
             &ev_sw,

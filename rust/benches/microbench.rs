@@ -76,7 +76,7 @@ fn main() {
     let eval = common::eval_set(&meta, Task::Sst2);
     let (ev, profile) = common::evaluator_for(&session, &meta, &w, &eval);
     let sol = QuantSolution::uniform(FormatKind::MxInt, 5.0, &meta, &profile);
-    let c0 = session.runtime.compile_count();
+    let c0 = session.pjrt().unwrap().compile_count();
     let sw = Stopwatch::start();
     ev.accuracy(&sol).unwrap();
     let cold = sw.secs();
@@ -84,7 +84,7 @@ fn main() {
         ev.accuracy(&sol).unwrap();
     });
     t.row(vec![
-        format!("eval 3 batches (cold, {} compiles)", session.runtime.compile_count() - c0),
+        format!("eval 3 batches (cold, {} compiles)", session.pjrt().unwrap().compile_count() - c0),
         format!("{:.1}ms", cold * 1e3),
         String::new(),
     ]);
@@ -102,7 +102,8 @@ fn main() {
         use mase::runtime::TensorData as TD;
         for b in &eval {
             session
-                .runtime
+                .pjrt()
+                .unwrap()
                 .execute(
                     &artifact,
                     &[

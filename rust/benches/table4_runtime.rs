@@ -112,9 +112,10 @@ fn main() {
         let w = common::weights(&session, &meta, Some(Task::Sst2));
         let eval = common::eval_set(&meta, Task::Sst2);
         let g0 = pm.run("front-end", || build_graph(&meta));
+        let backend = session.pjrt_backend().expect("PJRT session");
         let profile =
-            pm.run("profile", || profile_model(&session.runtime, &meta, &w, &eval[..1]).unwrap());
-        let ev = Evaluator::new(&session.runtime, &meta, &w, &eval);
+            pm.run("profile", || profile_model(&backend, &meta, &w, &eval[..1]).unwrap());
+        let ev = Evaluator::new(backend, &meta, &w, &eval).expect("evaluator");
 
         // one representative search trial, pass by pass
         for trial in 0..4u64 {
@@ -136,7 +137,8 @@ fn main() {
             let b = &eval[0];
             pm.run("quantize (fine-tune)", || {
                 session
-                    .runtime
+                    .pjrt()
+                    .unwrap()
                     .execute(
                         art,
                         &[

@@ -1,7 +1,7 @@
 //! The full MASE flow (paper Fig. 3 left): front-end -> profile ->
 //! [quantize + parallelize + evaluate]* under `search` -> emit.
 
-use super::pretrain::{pretrain, PretrainConfig};
+use super::pretrain::{have_trained_weights, pretrain, PretrainConfig};
 use super::Session;
 use crate::data::{batches, Task};
 use crate::formats::FormatKind;
@@ -9,6 +9,7 @@ use crate::passes::{
     emit_pass, eval_scope, profile_model, run_search_cached, Evaluator, Objective, PassManager,
     QuantSolution, SearchConfig, SearchOutcome,
 };
+use crate::runtime::{BackendKind, CpuBackend, ExecBackend};
 use crate::search::{Algorithm, CacheStore, EvalCache};
 use anyhow::Result;
 use std::path::PathBuf;
@@ -39,6 +40,10 @@ pub struct FlowConfig {
     pub cache_path: Option<PathBuf>,
     /// TPE constant-liar variant (see `search::LieStrategy`).
     pub tpe_mean_lie: bool,
+    /// Execution backend scoring the trials (`--backend {pjrt,cpu}`).
+    /// Folded into the eval-cache scope, so the two backends' measured
+    /// objectives never mix in a shared cache file.
+    pub backend: BackendKind,
 }
 
 impl Default for FlowConfig {
@@ -59,6 +64,7 @@ impl Default for FlowConfig {
             batch: 8,
             cache_path: None,
             tpe_mean_lie: false,
+            backend: BackendKind::Pjrt,
         }
     }
 }
@@ -76,8 +82,21 @@ pub struct FlowReport {
 
 /// Run the complete flow for one (model, task): returns the search
 /// outcome plus FP32 and int8 reference points (the Fig. 7 comparison
-/// anchors).
+/// anchors). Dispatches on [`FlowConfig::backend`]: PJRT (artifact-keyed
+/// HLO execution) or the artifact-free packed CPU interpreter.
 pub fn run_flow(session: &Session, cfg: &FlowConfig) -> Result<FlowReport> {
+    match cfg.backend {
+        BackendKind::Pjrt => run_flow_with(session, cfg, session.pjrt_backend()?),
+        BackendKind::Cpu => run_flow_with(session, cfg, CpuBackend::new()),
+    }
+}
+
+/// The backend-generic flow core.
+fn run_flow_with<B: ExecBackend>(
+    session: &Session,
+    cfg: &FlowConfig,
+    backend: B,
+) -> Result<FlowReport> {
     let mut pm = PassManager::new();
     let meta = session.manifest.model(&cfg.model)?.clone();
 
@@ -92,12 +111,12 @@ pub fn run_flow(session: &Session, cfg: &FlowConfig) -> Result<FlowReport> {
     })?;
 
     let eval_batches = batches(cfg.task, 1, cfg.eval_batches, meta.batch, meta.seq_len);
-    let mut ev = Evaluator::new(&session.runtime, &meta, &weights, &eval_batches);
+    let mut ev = Evaluator::new(backend, &meta, &weights, &eval_batches)?;
     ev.objective = if cfg.hw_aware { Objective::default() } else { Objective::sw_only() };
 
     // profile (calibration for int + Fig. 1a data)
     let profile = pm.run("profile", || {
-        profile_model(&session.runtime, &meta, &weights, &eval_batches[..1])
+        profile_model(&ev.backend, &meta, &weights, &eval_batches[..1])
     })?;
 
     // reference points
@@ -118,6 +137,14 @@ pub fn run_flow(session: &Session, cfg: &FlowConfig) -> Result<FlowReport> {
         tpe_mean_lie: cfg.tpe_mean_lie,
         ..Default::default()
     };
+    // The scope must reflect the weights actually evaluated: a CPU-backend
+    // session with no runtime and no valid cached weight file scored the
+    // UNTRAINED init_params model, i.e. an effective pretrain budget of 0
+    // — caching that under ps{N} would poison warm runs made after real
+    // weights appear on the host.
+    let task = if meta.kind == "lm" { None } else { Some(cfg.task) };
+    let effective_ps =
+        if have_trained_weights(session, &meta, task) { cfg.pretrain_steps } else { 0 };
     let store = cfg.cache_path.as_deref().map(CacheStore::open);
     let cache = match &store {
         Some(s) => {
@@ -131,8 +158,9 @@ pub fn run_flow(session: &Session, cfg: &FlowConfig) -> Result<FlowReport> {
                 cfg.qat_steps,
                 scfg.qat_lr,
                 cfg.eval_batches,
-                cfg.pretrain_steps,
+                effective_ps,
                 if cfg.hw_aware { "hw" } else { "sw" },
+                cfg.backend,
             ))
         }
         None => Arc::new(EvalCache::new()),

@@ -11,23 +11,64 @@ pub use pretrain::{pretrain, weights_path, PretrainConfig};
 pub use sweep::{run_sweep, SweepConfig, SweepReport};
 
 use crate::frontend::Manifest;
-use crate::runtime::Runtime;
-use anyhow::Result;
+use crate::runtime::{BackendKind, PjrtBackend, Runtime};
+use anyhow::{anyhow, Result};
 use std::path::{Path, PathBuf};
 
-/// Shared session state: manifest + runtime + artifact directory.
+/// Shared session state: manifest + (optional) PJRT runtime + artifact
+/// directory. PJRT sessions require the AOT artifacts; CPU-backend
+/// sessions fall back to the synthetic model-zoo manifest and never
+/// construct a PJRT client, so the full flow runs on a bare host.
 pub struct Session {
     pub dir: PathBuf,
     pub manifest: Manifest,
-    pub runtime: Runtime,
+    /// Present for [`BackendKind::Pjrt`] sessions only.
+    pub runtime: Option<Runtime>,
 }
 
 impl Session {
-    /// Open the artifacts directory (default: `<repo>/artifacts`).
+    /// Open the artifacts directory for the PJRT backend (default:
+    /// `<repo>/artifacts`). Requires `manifest.json` + HLO artifacts.
     pub fn open(dir: &Path) -> Result<Session> {
-        let manifest = Manifest::load(dir)?;
-        let runtime = Runtime::new(dir)?;
-        Ok(Session { dir: dir.to_path_buf(), manifest, runtime })
+        Self::open_for(dir, BackendKind::Pjrt)
+    }
+
+    /// Open a session for the given execution backend.
+    pub fn open_for(dir: &Path, backend: BackendKind) -> Result<Session> {
+        match backend {
+            BackendKind::Pjrt => {
+                let manifest = Manifest::load(dir)?;
+                let runtime = Runtime::new(dir)?;
+                Ok(Session { dir: dir.to_path_buf(), manifest, runtime: Some(runtime) })
+            }
+            BackendKind::Cpu => {
+                // Artifact-free: use the real manifest when it exists (so
+                // cached pretrained weights keep matching their layouts),
+                // else the synthetic zoo mirrored from python MODEL_ZOO.
+                // Only an ABSENT manifest falls back — a present-but-
+                // unparsable one is real breakage and must surface, not
+                // silently swap in differently-shaped models whose
+                // objectives would share cache scopes with the real ones.
+                let manifest = if dir.join("manifest.json").exists() {
+                    Manifest::load(dir)?
+                } else {
+                    Manifest::synthetic()
+                };
+                Ok(Session { dir: dir.to_path_buf(), manifest, runtime: None })
+            }
+        }
+    }
+
+    /// The PJRT runtime, or a clean error for CPU-backend sessions.
+    pub fn pjrt(&self) -> Result<&Runtime> {
+        self.runtime
+            .as_ref()
+            .ok_or_else(|| anyhow!("this session has no PJRT runtime (opened with --backend cpu)"))
+    }
+
+    /// The PJRT execution backend over this session's runtime.
+    pub fn pjrt_backend(&self) -> Result<PjrtBackend<'_>> {
+        Ok(PjrtBackend::new(self.pjrt()?))
     }
 
     pub fn default_dir() -> PathBuf {

@@ -31,6 +31,20 @@ pub fn weights_path(session: &Session, model: &str, task_name: &str) -> PathBuf 
     session.dir.join("weights").join(format!("{model}__{task_name}.bin"))
 }
 
+/// Will [`pretrain`] return *trained* weights for (model, task) — loaded
+/// from a valid cache file or trainable via the PJRT runtime — rather
+/// than the untrained `init_params` fallback of a runtime-less session?
+/// Uses the same `load_weights` validation as [`pretrain`] itself (a
+/// stale or truncated file counts as absent), so cache scopes keyed on
+/// this predicate always match the weights actually evaluated.
+pub fn have_trained_weights(session: &Session, meta: &ModelMeta, task: Option<Task>) -> bool {
+    if session.runtime.is_some() {
+        return true;
+    }
+    let task_name = task.map(|t| t.name()).unwrap_or("lm");
+    load_weights(&weights_path(session, &meta.name, task_name), meta.param_size).is_ok()
+}
+
 fn save_weights(path: &PathBuf, w: &[f32]) -> Result<()> {
     std::fs::create_dir_all(path.parent().unwrap())?;
     let bytes: Vec<u8> = w.iter().flat_map(|v| v.to_le_bytes()).collect();
@@ -48,6 +62,17 @@ fn load_weights(path: &PathBuf, expect: usize) -> Result<Vec<f32>> {
 
 /// Train (or load cached) weights for one (model, task).
 /// For LM models pass `task = None` (trains on the Markov corpus).
+///
+/// Training needs the PJRT `train` artifact. On a CPU-backend session
+/// (no runtime) cached weights are still used when present — e.g. synced
+/// from an artifact host — but otherwise the deterministic
+/// `frontend::init_params` initialization is returned: the packed
+/// interpreter then evaluates the untrained model, which keeps the whole
+/// search→evaluate loop runnable (and quantization-sensitive) on a bare
+/// host. Callers that cache objectives must record the *effective*
+/// pretrain budget — 0 on the init-params fallback — in their
+/// `eval_scope` (flow and sweep both do, via [`have_trained_weights`]),
+/// so untrained scores never alias trained ones.
 pub fn pretrain(
     session: &Session,
     meta: &ModelMeta,
@@ -59,6 +84,9 @@ pub fn pretrain(
     if let Ok(w) = load_weights(&path, meta.param_size) {
         return Ok(w);
     }
+    let Some(runtime) = session.runtime.as_ref() else {
+        return Ok(crate::frontend::init_params(meta, 0xC0DE));
+    };
 
     let artifact = meta.artifact("train")?;
     let mut w = crate::frontend::init_params(meta, 0xC0DE);
@@ -82,7 +110,7 @@ pub fn pretrain(
         // linear decay
         let frac = step as f32 / cfg.steps.max(1) as f32;
         let lr = cfg.lr * (1.0 - frac * (1.0 - cfg.final_lr_frac));
-        let out = session.runtime.execute(
+        let out = runtime.execute(
             artifact,
             &[
                 TensorData::f32(&w, &[meta.param_size as i64]),

@@ -10,13 +10,14 @@
 //! real pipeline (pretrain → profile → [`run_search_cached`]) and is
 //! what `mase sweep` and `benches/fig6_opt_sweep.rs` call.
 
-use super::pretrain::{pretrain, PretrainConfig};
+use super::pretrain::{have_trained_weights, pretrain, PretrainConfig};
 use super::Session;
 use crate::data::{batches, Task};
 use crate::formats::FormatKind;
 use crate::passes::{
     eval_scope, profile_model, run_search_cached, Evaluator, Objective, SearchConfig,
 };
+use crate::runtime::{BackendKind, CpuBackend, ExecBackend};
 use crate::search::{Algorithm, CacheStats, CacheStore, EvalCache};
 use anyhow::Result;
 use std::path::PathBuf;
@@ -52,6 +53,10 @@ pub struct SweepConfig {
     pub tpe_mean_lie: bool,
     /// Disk-backed cache; `None` = in-memory sharing only.
     pub cache_path: Option<PathBuf>,
+    /// Execution backend scoring every cell (`--backend {pjrt,cpu}`).
+    /// Part of each cell's cache scope: one cache file can serve sweeps
+    /// under both backends without ever mixing their objectives.
+    pub backend: BackendKind,
 }
 
 impl Default for SweepConfig {
@@ -77,6 +82,7 @@ impl Default for SweepConfig {
             hw_aware: true,
             tpe_mean_lie: false,
             cache_path: None,
+            backend: BackendKind::Pjrt,
         }
     }
 }
@@ -92,6 +98,11 @@ pub struct SweepItem {
     /// scope, so it must reflect the objective actually evaluated, not
     /// the requested [`SweepConfig::qat_steps`].
     pub qat_steps: usize,
+    /// *Effective* pretrain budget for this cell — 0 when a runtime-less
+    /// (CPU-backend) session has no cached weight file and therefore
+    /// evaluates the untrained `init_params` model (see [`run_sweep`]).
+    /// Part of the cache scope for the same reason as `qat_steps`.
+    pub pretrain_steps: usize,
 }
 
 /// What one cell's evaluation produced (the Fig. 6 data points).
@@ -152,6 +163,7 @@ pub fn grid(cfg: &SweepConfig) -> Vec<SweepItem> {
                     task,
                     fmt,
                     qat_steps: cfg.qat_steps,
+                    pretrain_steps: cfg.pretrain_steps,
                 });
             }
         }
@@ -169,8 +181,9 @@ pub fn cell_scope(cfg: &SweepConfig, item: &SweepItem) -> String {
         item.qat_steps,
         cfg.qat_lr,
         cfg.eval_batches,
-        cfg.pretrain_steps,
+        item.pretrain_steps,
         if cfg.hw_aware { "hw" } else { "sw" },
+        cfg.backend,
     )
 }
 
@@ -225,24 +238,48 @@ where
 /// Run the full sweep against the real pipeline. Weights are pulled from
 /// the pretrain cache (trained on first use), so repeated sweeps pay at
 /// most the search evaluations — and with a warm `cache_path`, none.
+/// Dispatches on [`SweepConfig::backend`].
 pub fn run_sweep(session: &Session, cfg: &SweepConfig) -> Result<SweepReport> {
+    match cfg.backend {
+        BackendKind::Pjrt => run_sweep_with(session, cfg, session.pjrt_backend()?),
+        BackendKind::Cpu => run_sweep_with(session, cfg, CpuBackend::new()),
+    }
+}
+
+/// The backend-generic sweep driver over [`sweep_with`].
+fn run_sweep_with<B: ExecBackend + Copy>(
+    session: &Session,
+    cfg: &SweepConfig,
+    backend: B,
+) -> Result<SweepReport> {
     let store = match &cfg.cache_path {
         Some(p) => CacheStore::open(p),
         None => CacheStore::in_memory(),
     };
     // Resolve each cell's EFFECTIVE QAT budget up front (the paper's
-    // QAT-small / PTQ-large split: only models shipping the matching
-    // `qat_<fmt>` artifact fine-tune). This must happen before
-    // `sweep_with` computes cache scopes — a PTQ-evaluated cell stored
-    // under a `qatN` scope would poison later QAT-capable runs.
+    // QAT-small / PTQ-large split: only models the backend can fine-tune
+    // — i.e. shipping the matching `qat_<fmt>` artifact under PJRT;
+    // never, under the gradient-free CPU interpreter). This must happen
+    // before `sweep_with` computes cache scopes — a PTQ-evaluated cell
+    // stored under a `qatN` scope would poison later QAT-capable runs.
     let mut items = grid(cfg);
     for item in &mut items {
+        // A runtime-less session with no valid cached weights evaluates
+        // the untrained init_params model: record an effective pretrain
+        // budget of 0 so the cell's scope never aliases trained runs
+        // (same predicate `pretrain` itself decides by).
+        if let Ok(meta) = session.manifest.model(&item.model) {
+            let task = if meta.kind == "lm" { None } else { Some(item.task) };
+            if !have_trained_weights(session, meta, task) {
+                item.pretrain_steps = 0;
+            }
+        }
         if item.qat_steps > 0 {
-            let qat_key = format!("qat_{}", item.fmt.name());
             let has_qat = session
                 .manifest
                 .model(&item.model)
-                .map(|m| m.artifacts.contains_key(&qat_key))
+                .ok()
+                .map(|m| backend.qat_available(m, item.fmt).is_ok())
                 .unwrap_or(false);
             if !has_qat {
                 item.qat_steps = 0;
@@ -258,9 +295,9 @@ pub fn run_sweep(session: &Session, cfg: &SweepConfig) -> Result<SweepReport> {
             &PretrainConfig { steps: cfg.pretrain_steps, log_every: 0, ..Default::default() },
         )?;
         let eval = batches(item.task, 1, cfg.eval_batches, meta.batch, meta.seq_len);
-        let mut ev = Evaluator::new(&session.runtime, &meta, &w, &eval);
+        let mut ev = Evaluator::new(backend, &meta, &w, &eval)?;
         ev.objective = if cfg.hw_aware { Objective::default() } else { Objective::sw_only() };
-        let profile = profile_model(&session.runtime, &meta, &w, &eval[..1])?;
+        let profile = profile_model(&ev.backend, &meta, &w, &eval[..1])?;
 
         let scfg = SearchConfig {
             algorithm: cfg.algorithm,
@@ -306,19 +343,31 @@ mod tests {
     #[test]
     fn cells_share_scope_only_with_identical_context() {
         let cfg = SweepConfig::default();
-        let a =
-            SweepItem { model: "m".into(), task: Task::Sst2, fmt: FormatKind::MxInt, qat_steps: 0 };
-        let b =
-            SweepItem { model: "m".into(), task: Task::Sst2, fmt: FormatKind::Int, qat_steps: 0 };
+        let a = SweepItem {
+            model: "m".into(),
+            task: Task::Sst2,
+            fmt: FormatKind::MxInt,
+            qat_steps: 0,
+            pretrain_steps: cfg.pretrain_steps,
+        };
+        let b = SweepItem { fmt: FormatKind::Int, ..a.clone() };
         assert_ne!(cell_scope(&cfg, &a), cell_scope(&cfg, &b));
         assert_eq!(cell_scope(&cfg, &a), cell_scope(&cfg, &a.clone()));
         let sw = SweepConfig { hw_aware: false, ..SweepConfig::default() };
         assert_ne!(cell_scope(&cfg, &a), cell_scope(&sw, &a));
+        // the execution backend is part of the scope: a CPU-interpreter
+        // sweep never reads (or pollutes) PJRT-measured entries
+        let cpu = SweepConfig { backend: BackendKind::Cpu, ..SweepConfig::default() };
+        assert_ne!(cell_scope(&cfg, &a), cell_scope(&cpu, &a));
         // the scope tracks the cell's EFFECTIVE qat budget, not the
         // sweep-wide request: a PTQ-downgraded cell must not alias a
         // QAT-evaluated one
         let qat = SweepItem { qat_steps: 2, ..a.clone() };
         assert_ne!(cell_scope(&cfg, &a), cell_scope(&cfg, &qat));
+        // likewise the EFFECTIVE pretrain budget: an untrained
+        // (init_params) cell must not alias a pretrained one
+        let untrained = SweepItem { pretrain_steps: 0, ..a.clone() };
+        assert_ne!(cell_scope(&cfg, &a), cell_scope(&cfg, &untrained));
     }
 
     #[test]

@@ -125,6 +125,39 @@ pub struct Manifest {
 }
 
 impl Manifest {
+    /// The synthetic model zoo — dimensions mirrored 1:1 from
+    /// `python/compile/model.py::MODEL_ZOO` (drift there is caught by the
+    /// `parses_real_manifest_if_present` round-trip test), plus a
+    /// `toy-sim` model small enough for CI smoke runs. Used by
+    /// CPU-backend sessions on hosts without `artifacts/manifest.json`:
+    /// the packed interpreter needs no artifacts, only the layouts.
+    pub fn synthetic() -> Manifest {
+        let clf = |name: &str, layers: usize, d: usize, heads: usize| {
+            ModelMeta::synthetic(name, layers, d, heads, 512, 32, 4, "classifier", 64)
+        };
+        let zoo = [
+            clf("bert-base-sim", 3, 64, 4),
+            clf("bert-large-sim", 5, 96, 6),
+            clf("opt-125m-sim", 2, 32, 2),
+            clf("opt-350m-sim", 3, 48, 3),
+            clf("opt-1.3b-sim", 4, 64, 4),
+            clf("opt-2.7b-sim", 5, 96, 4),
+            clf("opt-6.7b-sim", 6, 128, 8),
+            clf("llama-7b-sim", 4, 64, 4),
+            clf("vicuna-7b-sim", 4, 64, 4),
+            clf("alpaca-7b-sim", 4, 64, 4),
+            ModelMeta::synthetic("llama-sim", 4, 64, 4, 512, 64, 4, "lm", 16),
+            // CI smoke model (not in the python zoo): one layer, tiny batch
+            ModelMeta::synthetic("toy-sim", 1, 32, 2, 512, 16, 4, "classifier", 16),
+        ];
+        Manifest {
+            block_shape: crate::formats::BLOCK_SHAPE,
+            shared_exponent_bits: crate::formats::SHARED_EXPONENT_BITS,
+            quant_refs: BTreeMap::new(),
+            models: zoo.into_iter().map(|m| (m.name.clone(), m)).collect(),
+        }
+    }
+
     pub fn load(artifacts_dir: &Path) -> Result<Manifest> {
         let path = artifacts_dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
@@ -234,6 +267,26 @@ mod tests {
             off += s.shape.iter().product::<usize>();
         }
         assert_eq!(off, m.param_size);
+    }
+
+    #[test]
+    fn synthetic_manifest_mirrors_the_zoo() {
+        let m = Manifest::synthetic();
+        assert_eq!(m.block_shape, (16, 2));
+        assert_eq!(m.shared_exponent_bits, 8);
+        assert_eq!(m.models.len(), 12);
+        assert_eq!(m.classifiers().len(), 11, "10 zoo classifiers + toy-sim");
+        let opt = m.model("opt-125m-sim").unwrap();
+        assert_eq!((opt.n_layers, opt.d_model, opt.n_heads), (2, 32, 2));
+        assert_eq!(opt.num_qtensors(), 18);
+        let lm = m.model("llama-sim").unwrap();
+        assert_eq!((lm.kind.as_str(), lm.seq_len, lm.batch), ("lm", 64, 16));
+        // every model is (16, 2)-tileable for the packed CPU interpreter
+        for meta in m.models.values() {
+            assert_eq!(meta.batch % 16, 0, "{}", meta.name);
+            assert_eq!(meta.seq_len % 16, 0, "{}", meta.name);
+            assert_eq!(meta.d_model % 16, 0, "{}", meta.name);
+        }
     }
 
     #[test]

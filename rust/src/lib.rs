@@ -5,8 +5,10 @@
 //! paper as a three-layer Rust + JAX + Pallas system.
 //!
 //! The crate is the paper's Layer-3 contribution: the co-design compiler.
-//! It consumes AOT-lowered HLO artifacts (produced once by
-//! `python/compile/aot.py`) through the PJRT runtime in [`runtime`], and
+//! Model numerics run behind the [`runtime::ExecBackend`] abstraction —
+//! either AOT-lowered HLO artifacts (produced once by
+//! `python/compile/aot.py`) through the PJRT adapter, or the artifact-free
+//! packed-arithmetic CPU interpreter (`--backend cpu`) — and the crate
 //! owns everything else: the MASE IR ([`ir`]), the numeric format library
 //! ([`formats`]), the bit-packed MX tensor storage and integer-datapath
 //! kernels ([`packed`]), the pass pipeline ([`passes`]), the search algorithms
@@ -49,22 +51,27 @@
 //! | hardware cost models (Table 1) | [`hw`] | no |
 //! | dataflow simulation (Fig. 1e/1f) | [`sim`] | no |
 //! | SystemVerilog emission (Table 3) | [`emit`] | no |
-//! | accuracy evaluation / QAT | [`passes::Evaluator`] | **yes** |
+//! | accuracy evaluation, packed CPU interpreter | [`runtime::CpuBackend`] via [`passes::Evaluator`] | no |
+//! | full flow / sweep with `--backend cpu` | [`coordinator`] | no |
+//! | accuracy evaluation / QAT via PJRT | [`runtime::PjrtBackend`] via [`passes::Evaluator`] | **yes** |
 //! | pretraining the simulants | [`coordinator::pretrain()`] | **yes** |
-//! | full flow / sweep / benches | [`coordinator`] | **yes** |
+//! | full flow / sweep / benches via PJRT | [`coordinator`] | **yes** |
 //!
 //! ## Offline `xla` caveat
 //!
 //! This environment has no crates.io access and no PJRT toolchain, so
 //! `rust/vendor/xla` (and `rust/vendor/anyhow`) are in-tree stand-ins:
 //! every PJRT entry point returns a clean error instead of executing an
-//! artifact. Everything in the "no" rows above is fully functional; the
-//! "yes" rows degrade to errors, and the tests/benches that need them
-//! self-skip when `artifacts/manifest.json` is absent. To light up the
-//! real thing, swap the `xla` path-dependency in `rust/Cargo.toml` for
-//! the real xla-rs bindings — and note the real `PjRtClient` is NOT
-//! thread-safe: parallel search then needs a per-worker client (the
-//! `Evaluator: Sync` compile-time assertion will flag this).
+//! artifact. Everything in the "no" rows above is fully functional —
+//! including end-to-end `search`/`e2e`/`sweep` under `--backend cpu`,
+//! which interprets the MASE IR with bit-packed integer-datapath matmuls
+//! and needs no artifacts at all. The PJRT "yes" rows degrade to errors,
+//! and the tests/benches that need them self-skip when
+//! `artifacts/manifest.json` is absent. To light up the real thing, swap
+//! the `xla` path-dependency in `rust/Cargo.toml` for the real xla-rs
+//! bindings — and note the real `PjRtClient` is NOT thread-safe:
+//! parallel search then needs a per-worker client (the `Evaluator: Sync`
+//! compile-time assertion will flag this).
 pub mod formats;
 pub mod packed;
 pub mod ir;

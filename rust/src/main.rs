@@ -15,6 +15,7 @@ use mase::coordinator::pretrain;
 use mase::coordinator::{FlowConfig, PretrainConfig, Session, SweepConfig};
 use mase::data::Task;
 use mase::formats::FormatKind;
+use mase::runtime::{BackendKind, CpuBackend, ExecBackend};
 use mase::search::Algorithm;
 use mase::util::cli::Args;
 
@@ -46,10 +47,18 @@ fn run(args: &Args) -> Result<()> {
         // when no manifest is present instead of requiring a session.
         return cmd_pack(args, &dir);
     }
-    let session = Session::open(&dir)?;
+    let backend_name = args.get_or("backend", "pjrt");
+    let backend = BackendKind::from_name(&backend_name)
+        .ok_or_else(|| anyhow!("unknown backend '{backend_name}' (pjrt|cpu)"))?;
+    let session = Session::open_for(&dir, backend)?;
 
     match sub.as_str() {
         "pretrain" => {
+            anyhow::ensure!(
+                backend == BackendKind::Pjrt,
+                "pretraining drives the PJRT `train` artifact; rerun without --backend cpu \
+                 (the cpu backend evaluates cached or freshly-initialized weights instead)"
+            );
             let cfg = PretrainConfig {
                 steps: args.get_usize("steps", 220),
                 ..Default::default()
@@ -70,7 +79,14 @@ fn run(args: &Args) -> Result<()> {
             let task = task_of(args)?;
             let w = pretrain::pretrain(&session, &meta, Some(task), &Default::default())?;
             let batches = mase::data::batches(task, 1, 2, meta.batch, meta.seq_len);
-            let p = mase::passes::profile_model(&session.runtime, &meta, &w, &batches)?;
+            let p = match backend {
+                BackendKind::Pjrt => {
+                    mase::passes::profile_model(&session.pjrt_backend()?, &meta, &w, &batches)?
+                }
+                BackendKind::Cpu => {
+                    mase::passes::profile_model(&CpuBackend::new(), &meta, &w, &batches)?
+                }
+            };
             let mut t = mase::util::Table::new(vec!["qtensor", "variance", "absmax", "absmean"]);
             for i in 0..p.names.len() {
                 t.row(vec![
@@ -114,6 +130,7 @@ fn run(args: &Args) -> Result<()> {
                 batch: args.get_usize("batch", 8),
                 cache_path: args.get("cache").map(std::path::PathBuf::from),
                 tpe_mean_lie: args.has("tpe-mean-lie"),
+                backend,
             };
             let report = mase::coordinator::run_flow(&session, &cfg)?;
             let best = &report.outcome.best_eval;
@@ -192,6 +209,7 @@ fn run(args: &Args) -> Result<()> {
                 hw_aware: !args.has("sw-only"),
                 tpe_mean_lie: args.has("tpe-mean-lie"),
                 cache_path: args.get("cache").map(std::path::PathBuf::from),
+                backend,
             };
             let report = mase::coordinator::run_sweep(&session, &cfg)?;
             if let Some(note) = &report.load_note {
@@ -239,54 +257,60 @@ fn run(args: &Args) -> Result<()> {
             println!("{}", mase::ir::print_graph(&g));
             println!("// DAG size: {} ops", g.dag_size());
         }
-        "formats" => {
-            // Table 1-style quick comparison on the LM
-            let model = args.get_or("model", "llama-sim");
-            let meta = session.manifest.model(&model)?.clone();
-            anyhow::ensure!(meta.kind == "lm", "formats comparison runs on the LM simulant");
-            let w = pretrain::pretrain(&session, &meta, None, &Default::default())?;
-            let corpus = mase::data::MarkovCorpus::new(7);
-            let n_batches = args.get_usize("eval-batches", 4);
-            let mut bs = Vec::new();
-            for i in 0..n_batches {
-                let toks = corpus.batch(1000 + i as u64, meta.batch, meta.seq_len);
-                bs.push(mase::data::Batch {
-                    tokens: toks,
-                    labels: vec![0; meta.batch],
-                    batch: meta.batch,
-                    seq: meta.seq_len,
-                });
-            }
-            let ev = mase::passes::Evaluator::new(&session.runtime, &meta, &w, &bs);
-            let profile = mase::passes::profile_model(&session.runtime, &meta, &w, &bs[..1])?;
-            let mut t = mase::util::Table::new(vec![
-                "format", "config", "perplexity", "mem density", "arith density",
-            ]);
-            for (fmt, bits) in [
-                (FormatKind::Fp32, 32.0f32),
-                (FormatKind::Int, 8.0),
-                (FormatKind::Fp8, 8.0),
-                (FormatKind::MxInt, 7.0),
-                (FormatKind::Bmf, 5.0),
-                (FormatKind::Bl, 7.0),
-            ] {
-                let sol = mase::passes::QuantSolution::uniform(fmt, bits, &meta, &profile);
-                let acc = ev.accuracy(&sol)?;
-                let p = mase::formats::Precision::new(bits, sol.fracs[0]);
-                t.row(vec![
-                    fmt.name().to_string(),
-                    "W8A8".to_string(),
-                    format!("{:.2}", acc.perplexity()),
-                    format!("{:.2}x", mase::hw::memory_density(fmt, p)),
-                    format!("{:.1}x", mase::hw::arithmetic_density(fmt, p)),
-                ]);
-            }
-            println!("{}", t.render());
-        }
+        "formats" => match backend {
+            BackendKind::Pjrt => cmd_formats(&session, args, session.pjrt_backend()?)?,
+            BackendKind::Cpu => cmd_formats(&session, args, CpuBackend::new())?,
+        },
         other => {
             return Err(anyhow!("unknown subcommand '{other}'\n{HELP}"));
         }
     }
+    Ok(())
+}
+
+/// `mase formats` — Table 1-style quick comparison on the LM, over
+/// either execution backend.
+fn cmd_formats<B: ExecBackend>(session: &Session, args: &Args, backend: B) -> Result<()> {
+    let model = args.get_or("model", "llama-sim");
+    let meta = session.manifest.model(&model)?.clone();
+    anyhow::ensure!(meta.kind == "lm", "formats comparison runs on the LM simulant");
+    let w = pretrain::pretrain(session, &meta, None, &Default::default())?;
+    let corpus = mase::data::MarkovCorpus::new(7);
+    let n_batches = args.get_usize("eval-batches", 4);
+    let mut bs = Vec::new();
+    for i in 0..n_batches {
+        let toks = corpus.batch(1000 + i as u64, meta.batch, meta.seq_len);
+        bs.push(mase::data::Batch {
+            tokens: toks,
+            labels: vec![0; meta.batch],
+            batch: meta.batch,
+            seq: meta.seq_len,
+        });
+    }
+    let ev = mase::passes::Evaluator::new(backend, &meta, &w, &bs)?;
+    let profile = mase::passes::profile_model(&ev.backend, &meta, &w, &bs[..1])?;
+    let mut t =
+        mase::util::Table::new(vec!["format", "config", "perplexity", "mem density", "arith density"]);
+    for (fmt, bits) in [
+        (FormatKind::Fp32, 32.0f32),
+        (FormatKind::Int, 8.0),
+        (FormatKind::Fp8, 8.0),
+        (FormatKind::MxInt, 7.0),
+        (FormatKind::Bmf, 5.0),
+        (FormatKind::Bl, 7.0),
+    ] {
+        let sol = mase::passes::QuantSolution::uniform(fmt, bits, &meta, &profile);
+        let acc = ev.accuracy(&sol)?;
+        let p = mase::formats::Precision::new(bits, sol.fracs[0]);
+        t.row(vec![
+            fmt.name().to_string(),
+            "W8A8".to_string(),
+            format!("{:.2}", acc.perplexity()),
+            format!("{:.2}x", mase::hw::memory_density(fmt, p)),
+            format!("{:.1}x", mase::hw::arithmetic_density(fmt, p)),
+        ]);
+    }
+    println!("{}", t.render());
     Ok(())
 }
 
@@ -425,6 +449,11 @@ usage: mase <subcommand> [flags]
             Eq. 1; artifact-free — synthesizes a model spec if needed)
   formats  [--model llama-sim]
 common: --artifacts DIR (default ./artifacts)
+        --backend pjrt|cpu (execution backend for evaluate/profile;
+            cpu = the artifact-free packed-arithmetic interpreter —
+            search/e2e/sweep/profile/formats run on a bare host, scored
+            under disjoint eval-cache scopes; no QAT, untrained weights
+            unless artifacts/weights/ has cached ones)
         --threads N (search eval workers; 0 = auto, also MASE_THREADS)
         --batch N   (search proposals per ask/tell round, default 8)
         --cache FILE (persistent eval cache for search/sweep/e2e/emit)

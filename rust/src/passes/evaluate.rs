@@ -1,7 +1,8 @@
 //! `evaluate` pass (Table 2): source-level estimation of both halves of
-//! the co-design — model accuracy via the PJRT eval artifacts, hardware
-//! area/throughput/energy via the regression models — combined by the
-//! search objective of Eq. (4):
+//! the co-design — model accuracy via an execution backend
+//! ([`crate::runtime::ExecBackend`]: PJRT eval artifacts or the packed
+//! CPU interpreter), hardware area/throughput/energy via the regression
+//! models — combined by the search objective of Eq. (4):
 //!
 //! `objective = acc + k/b + k'*theta + k''/A`
 
@@ -9,11 +10,10 @@ use super::parallelize::{parallelize, DesignPoint};
 use super::quantize::QuantSolution;
 use crate::data::Batch;
 use crate::eval::EvalAccumulator;
-use crate::formats::FormatKind;
 use crate::frontend::ModelMeta;
 use crate::hw::Device;
 use crate::ir::Graph;
-use crate::runtime::{PreparedTensor, Runtime, TensorData};
+use crate::runtime::ExecBackend;
 use anyhow::Result;
 
 /// Hyperparameters of Eq. (4). `k` trades accuracy against bits; `k'`
@@ -64,16 +64,18 @@ pub struct EvalResult {
     pub objectives: Vec<f64>,
 }
 
-/// Bundles everything needed to score a solution for one (model, task).
+/// Bundles everything needed to score a solution for one (model, task),
+/// generic over the execution backend `B` (the PJRT adapter or the
+/// packed-arithmetic CPU interpreter — see [`crate::runtime::backend`]).
 ///
 /// The evaluator is immutable after construction and `Sync`: the
 /// parallel search pass shares one `&Evaluator` across its worker
 /// threads (`run_batched` -> `par_map`), so every method takes `&self`
-/// and all interior mutability (the runtime's executable cache) is
-/// behind locks. The assertion below turns any future regression into a
-/// compile error.
-pub struct Evaluator<'a> {
-    pub rt: &'a Runtime,
+/// and all interior mutability (the PJRT runtime's executable cache) is
+/// behind locks. The assertion below turns any future regression — in
+/// either backend — into a compile error.
+pub struct Evaluator<'a, B: ExecBackend> {
+    pub backend: B,
     pub meta: &'a ModelMeta,
     pub weights: &'a [f32],
     pub batches: &'a [Batch],
@@ -82,36 +84,25 @@ pub struct Evaluator<'a> {
     pub objective: Objective,
     /// IR template (unquantized); cloned per evaluation.
     pub graph: Graph,
-    /// §Perf/L3: weights + batch tensors converted to literals once and
-    /// reused across every trial's executions (the weights vector alone
-    /// is 0.1-3 MB copied per batch per trial otherwise).
-    weights_prep: PreparedTensor,
-    batches_prep: Vec<(PreparedTensor, PreparedTensor)>,
+    /// Backend-owned per-(weights, batches) state, built once and reused
+    /// across every trial (§Perf/L3: for PJRT these are the weight/batch
+    /// literals — the weights vector alone is 0.1-3 MB copied per batch
+    /// per trial otherwise).
+    prep: B::Prepared,
 }
 
-impl<'a> Evaluator<'a> {
+impl<'a, B: ExecBackend> Evaluator<'a, B> {
+    /// Build the evaluator, preparing backend state. Fails cleanly (no
+    /// panics) when the backend cannot prepare the tensors.
     pub fn new(
-        rt: &'a Runtime,
+        backend: B,
         meta: &'a ModelMeta,
         weights: &'a [f32],
         batches: &'a [Batch],
-    ) -> Self {
-        let weights_prep = TensorData::f32(weights, &[meta.param_size as i64])
-            .prepare()
-            .expect("prepare weights");
-        let batches_prep = batches
-            .iter()
-            .map(|b| {
-                (
-                    TensorData::i32(&b.tokens, &[b.batch as i64, b.seq as i64])
-                        .prepare()
-                        .expect("prepare tokens"),
-                    TensorData::i32(&b.labels, &[b.batch as i64]).prepare().expect("prepare labels"),
-                )
-            })
-            .collect();
-        Self {
-            rt,
+    ) -> Result<Self> {
+        let prep = backend.prepare(meta, weights, batches)?;
+        Ok(Self {
+            backend,
             meta,
             weights,
             batches,
@@ -119,52 +110,35 @@ impl<'a> Evaluator<'a> {
             budget_frac: 0.4,
             objective: Objective::default(),
             graph: crate::frontend::build_graph(meta),
-            weights_prep,
-            batches_prep,
-        }
+            prep,
+        })
     }
 
-    fn artifact_key(&self, fmt: FormatKind) -> String {
-        format!("eval_{}", fmt.name())
-    }
-
-    /// Accuracy/loss of a solution via the PJRT eval artifact.
+    /// Accuracy/loss of a solution via the execution backend.
     pub fn accuracy(&self, sol: &QuantSolution) -> Result<EvalAccumulator> {
-        self.accuracy_with(sol, &self.artifact_key(sol.fmt), self.weights)
+        self.accuracy_with(sol, sol.fmt.name(), self.weights)
     }
 
-    /// Same but with an explicit artifact key (e.g. "eval_mxint_pallas")
-    /// and/or alternative weights (QAT-tuned copies).
+    /// Same but with an explicit format/emulation tag (e.g.
+    /// "mxint_pallas", which PJRT maps to the `eval_mxint_pallas`
+    /// artifact) and/or alternative weights (QAT-tuned copies).
     pub fn accuracy_with(
         &self,
         sol: &QuantSolution,
-        key: &str,
+        fmt_tag: &str,
         weights: &[f32],
     ) -> Result<EvalAccumulator> {
-        let artifact = self.meta.artifact(key)?;
         let qcfg = sol.to_qconfig();
-        let v = self.meta.num_qtensors() as i64;
-        // weights literal: reuse the prepared one on the common path, only
-        // converting fresh buffers (QAT-tuned copies) when they differ
-        let w_prep;
-        let w_ref = if std::ptr::eq(weights.as_ptr(), self.weights.as_ptr()) {
-            &self.weights_prep
-        } else {
-            w_prep = TensorData::f32(weights, &[self.meta.param_size as i64]).prepare()?;
-            &w_prep
-        };
-        let q_prep = TensorData::f32(&qcfg, &[v, 2]).prepare()?;
+        let scores =
+            self.backend.eval(&self.prep, self.meta, self.batches, fmt_tag, &qcfg, weights)?;
         let mut acc = EvalAccumulator::default();
-        for (b, (toks, labs)) in self.batches.iter().zip(self.batches_prep.iter()) {
-            let out = self.rt.execute_prepared(artifact, &[w_ref, toks, labs, &q_prep])?;
-            let loss = out[0].scalar_f32()?;
-            let correct = out[1].scalar_i32()?;
+        for (b, score) in self.batches.iter().zip(scores) {
             let examples = if self.meta.kind == "lm" {
                 b.batch * (b.seq - 1) // next-token positions
             } else {
                 b.batch
             };
-            acc.add_batch(loss, correct, examples);
+            acc.add_batch(score.loss, score.correct, examples);
         }
         Ok(acc)
     }
@@ -185,7 +159,7 @@ impl<'a> Evaluator<'a> {
 
     /// Co-design evaluation with alternative weights (QAT-tuned copies).
     pub fn evaluate_with_weights(&self, sol: &QuantSolution, weights: &[f32]) -> Result<EvalResult> {
-        let acc = self.accuracy_with(sol, &self.artifact_key(sol.fmt), weights)?;
+        let acc = self.accuracy_with(sol, sol.fmt.name(), weights)?;
         let (dp, avg_bits, _g) = self.hardware(sol);
         let (value, objectives) = self.objective.score(acc.accuracy(), avg_bits, &dp);
         Ok(EvalResult {
@@ -201,17 +175,19 @@ impl<'a> Evaluator<'a> {
 }
 
 // Compile-time guarantee that the search pass may share the evaluator
-// across threads. CAVEAT for whoever swaps rust/vendor/xla for the real
-// xla-rs bindings: FFI crates often carry `unsafe impl Send/Sync` over
-// raw pointers, so this assertion may still pass while the underlying
-// PJRT client races. The real client is NOT thread-safe (see
-// coordinator::pretrain::pretrain_all) — give each worker its own
-// client, or serialize `Runtime::execute*` behind a lock, before
-// enabling `threads > 1` against real PJRT.
+// across threads — asserted for BOTH backends. CAVEAT for whoever swaps
+// rust/vendor/xla for the real xla-rs bindings: FFI crates often carry
+// `unsafe impl Send/Sync` over raw pointers, so this assertion may still
+// pass while the underlying PJRT client races. The real client is NOT
+// thread-safe (see coordinator::pretrain::pretrain_all) — give each
+// worker its own client, or serialize `Runtime::execute*` behind a lock,
+// before enabling `threads > 1` against real PJRT. The CPU interpreter
+// has no such caveat: it is a pure function of its inputs.
 #[allow(dead_code)]
 fn _assert_evaluator_is_sync() {
     fn is_sync<T: Sync>() {}
-    is_sync::<Evaluator<'static>>();
+    is_sync::<Evaluator<'static, crate::runtime::PjrtBackend<'static>>>();
+    is_sync::<Evaluator<'static, crate::runtime::CpuBackend>>();
 }
 
 #[cfg(test)]

@@ -1,11 +1,12 @@
-//! `profile` pass (Table 2): run the profile artifact over calibration
-//! batches and collect per-qtensor value statistics — the data behind
-//! Fig. 1a (activation variance exploding in deeper layers) and the
-//! calibration source for fixed-point fraction widths.
+//! `profile` pass (Table 2): run the unquantized model over calibration
+//! batches (through either execution backend) and collect per-qtensor
+//! value statistics — the data behind Fig. 1a (activation variance
+//! exploding in deeper layers) and the calibration source for
+//! fixed-point fraction widths.
 
 use crate::data::Batch;
 use crate::frontend::ModelMeta;
-use crate::runtime::{Runtime, TensorData};
+use crate::runtime::ExecBackend;
 use anyhow::Result;
 
 /// Per-qtensor statistics, averaged over calibration batches.
@@ -37,31 +38,24 @@ impl ProfileData {
     }
 }
 
-/// Run the profile artifact over `batches` and average the statistics.
-pub fn profile_model(
-    rt: &Runtime,
+/// Run the backend's profile kernel over `batches` and average the
+/// statistics (variance/absmean averaged, absmax maxed across batches).
+pub fn profile_model<B: ExecBackend>(
+    backend: &B,
     meta: &ModelMeta,
     weights: &[f32],
     batches: &[Batch],
 ) -> Result<ProfileData> {
-    let artifact = meta.artifact("profile")?;
     let v = meta.num_qtensors();
     let mut variance = vec![0.0f64; v];
     let mut absmax = vec![0.0f64; v];
     let mut absmean = vec![0.0f64; v];
     for b in batches {
-        let out = rt.execute(
-            artifact,
-            &[
-                TensorData::f32(weights, &[meta.param_size as i64]),
-                TensorData::i32(&b.tokens, &[b.batch as i64, b.seq as i64]),
-            ],
-        )?;
-        let stats = out[0].to_vec_f32()?; // [V, 3] row-major
+        let stats = backend.profile_batch(meta, weights, b)?; // [V] rows of (var, max, mean)
         for i in 0..v {
-            variance[i] += stats[i * 3] as f64;
-            absmax[i] = absmax[i].max(stats[i * 3 + 1] as f64);
-            absmean[i] += stats[i * 3 + 2] as f64;
+            variance[i] += stats[i][0] as f64;
+            absmax[i] = absmax[i].max(stats[i][1] as f64);
+            absmean[i] += stats[i][2] as f64;
         }
     }
     let n = batches.len().max(1) as f64;

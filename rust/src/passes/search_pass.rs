@@ -23,7 +23,7 @@ use super::profile::ProfileData;
 use super::quantize::QuantSolution;
 use crate::data::Task;
 use crate::formats::FormatKind;
-use crate::runtime::TensorData;
+use crate::runtime::{BackendKind, ExecBackend};
 use crate::search::{
     best_curve, run_batched_cached, Algorithm, BatchOptions, CacheStats, EvalCache, LieStrategy,
     MemoKey, Space, Trial,
@@ -106,10 +106,12 @@ pub fn space_for(fmt: FormatKind, num_qtensors: usize, lo: f64, hi: f64) -> Spac
 /// exact objective that produced them, so every knob that changes what a
 /// config scores — model, task, format, memo mode, the *effective* QAT
 /// budget and learning rate, number of eval batches, pretrain budget,
-/// and the objective flavor ("hw" cost-aware vs "sw" accuracy-only) —
-/// is part of the scope. Two runs that differ in any of these read and
-/// write disjoint entry sets. The learning rate only appears when QAT
-/// actually runs (`qat_steps > 0`); it does not affect PTQ scoring.
+/// the objective flavor ("hw" cost-aware vs "sw" accuracy-only), and the
+/// execution backend that measured it (PJRT numerics and the packed CPU
+/// interpreter are different oracles) — is part of the scope. Two runs
+/// that differ in any of these read and write disjoint entry sets. The
+/// learning rate only appears when QAT actually runs (`qat_steps > 0`);
+/// it does not affect PTQ scoring.
 pub fn eval_scope(
     model: &str,
     task: Task,
@@ -119,6 +121,7 @@ pub fn eval_scope(
     eval_batches: usize,
     pretrain_steps: usize,
     objective: &str,
+    backend: BackendKind,
 ) -> String {
     let qat = if qat_steps > 0 {
         format!("qat{qat_steps}-lr{qat_lr}")
@@ -126,17 +129,18 @@ pub fn eval_scope(
         "qat0".to_string()
     };
     format!(
-        "{model}/{}/{}/{}/{qat}/eb{eval_batches}/ps{pretrain_steps}/{objective}",
+        "{model}/{}/{}/{}/{qat}/eb{eval_batches}/ps{pretrain_steps}/{objective}/{}",
         task.name(),
         fmt.name(),
         MemoKey::Rounded.name(),
+        backend.name(),
     )
 }
 
 /// Run the full search for one (model, task, format) with a private,
 /// run-local memo cache. See [`run_search_cached`] for the shared form.
-pub fn run_search(
-    ev: &Evaluator,
+pub fn run_search<B: ExecBackend>(
+    ev: &Evaluator<B>,
     profile: &ProfileData,
     task: Task,
     cfg: &SearchConfig,
@@ -154,8 +158,8 @@ pub fn run_search(
 /// The caller must hand the same cache only to searches whose objective
 /// is identical (same model, task, format, QAT/eval/pretrain budgets and
 /// objective flavor) — key by [`eval_scope`] when in doubt.
-pub fn run_search_cached(
-    ev: &Evaluator,
+pub fn run_search_cached<B: ExecBackend>(
+    ev: &Evaluator<B>,
     profile: &ProfileData,
     task: Task,
     cfg: &SearchConfig,
@@ -167,11 +171,11 @@ pub fn run_search_cached(
 
     // Optional per-trial QAT: fine-tune a scratch copy of the weights on
     // the train split under the trial's quantization, then evaluate.
-    let qat_artifact = if cfg.qat_steps > 0 {
-        Some(ev.meta.artifact(&format!("qat_{}", cfg.fmt.name()))?.to_string())
-    } else {
-        None
-    };
+    // Fail fast if the backend cannot tune this (model, format) at all
+    // (missing artifact on PJRT; no gradient path on the CPU interpreter).
+    if cfg.qat_steps > 0 {
+        ev.backend.qat_available(ev.meta, cfg.fmt)?;
+    }
     let train_batches = if cfg.qat_steps > 0 {
         crate::data::batches(task, 0, cfg.qat_steps, ev.meta.batch, ev.meta.seq_len)
     } else {
@@ -181,28 +185,19 @@ pub fn run_search_cached(
     // QAT fine-tune on a scratch copy — a pure function of the solution
     // (fixed train stream, no shared mutable state), so workers can call
     // it concurrently.
-    let qat_tune = |sol: &QuantSolution| -> Option<Vec<f32>> {
-        qat_artifact.as_ref().map(|art| {
-            let mut w = ev.weights.to_vec();
-            let qcfg = sol.to_qconfig();
-            for b in &train_batches {
-                if let Ok(out) = ev.rt.execute(
-                    art,
-                    &[
-                        TensorData::f32(&w, &[ev.meta.param_size as i64]),
-                        TensorData::i32(&b.tokens, &[b.batch as i64, b.seq as i64]),
-                        TensorData::i32(&b.labels, &[b.batch as i64]),
-                        TensorData::f32(&qcfg, &[v as i64, 2]),
-                        TensorData::scalar_f32(cfg.qat_lr),
-                    ],
-                ) {
-                    if let Ok(new_w) = out[0].to_vec_f32() {
-                        w = new_w;
-                    }
-                }
-            }
-            w
-        })
+    let qat_tune = |sol: &QuantSolution| -> Option<Result<Vec<f32>>> {
+        if cfg.qat_steps == 0 {
+            return None;
+        }
+        let qcfg = sol.to_qconfig();
+        Some(ev.backend.qat_tune(
+            ev.meta,
+            ev.weights,
+            &train_batches,
+            cfg.fmt,
+            &qcfg,
+            cfg.qat_lr,
+        ))
     };
 
     // Running winner, tracked across workers. The tie-break on the
@@ -229,7 +224,14 @@ pub fn run_search_cached(
     };
     let history = run_batched_cached(cfg.algorithm, space, cfg.seed, cfg.trials, &opts, cache, |x| {
         let sol = QuantSolution::from_search_vector(cfg.fmt, x, ev.meta, profile);
-        let tuned = qat_tune(&sol);
+        let tuned = match qat_tune(&sol) {
+            Some(Ok(w)) => Some(w),
+            Some(Err(e)) => {
+                eprintln!("trial failed: {e:#}");
+                return (f64::NEG_INFINITY, vec![]);
+            }
+            None => None,
+        };
         let result = match &tuned {
             Some(w) => ev.evaluate_with_weights(&sol, w),
             None => ev.evaluate(&sol),
@@ -348,27 +350,33 @@ mod tests {
 
     #[test]
     fn eval_scope_separates_contexts() {
+        use BackendKind::{Cpu, Pjrt};
         let lr = 0.002;
-        let a = eval_scope("opt-125m-sim", Task::Sst2, FormatKind::MxInt, 0, lr, 4, 220, "hw");
-        assert_eq!(a, "opt-125m-sim/sst2/mxint/rounded/qat0/eb4/ps220/hw");
+        let a = eval_scope("opt-125m-sim", Task::Sst2, FormatKind::MxInt, 0, lr, 4, 220, "hw", Pjrt);
+        assert_eq!(a, "opt-125m-sim/sst2/mxint/rounded/qat0/eb4/ps220/hw/pjrt");
         // every objective-changing knob must change the scope
         for b in [
-            eval_scope("opt-350m-sim", Task::Sst2, FormatKind::MxInt, 0, lr, 4, 220, "hw"),
-            eval_scope("opt-125m-sim", Task::Qqp, FormatKind::MxInt, 0, lr, 4, 220, "hw"),
-            eval_scope("opt-125m-sim", Task::Sst2, FormatKind::Int, 0, lr, 4, 220, "hw"),
-            eval_scope("opt-125m-sim", Task::Sst2, FormatKind::MxInt, 2, lr, 4, 220, "hw"),
-            eval_scope("opt-125m-sim", Task::Sst2, FormatKind::MxInt, 0, lr, 3, 220, "hw"),
-            eval_scope("opt-125m-sim", Task::Sst2, FormatKind::MxInt, 0, lr, 4, 100, "hw"),
-            eval_scope("opt-125m-sim", Task::Sst2, FormatKind::MxInt, 0, lr, 4, 220, "sw"),
+            eval_scope("opt-350m-sim", Task::Sst2, FormatKind::MxInt, 0, lr, 4, 220, "hw", Pjrt),
+            eval_scope("opt-125m-sim", Task::Qqp, FormatKind::MxInt, 0, lr, 4, 220, "hw", Pjrt),
+            eval_scope("opt-125m-sim", Task::Sst2, FormatKind::Int, 0, lr, 4, 220, "hw", Pjrt),
+            eval_scope("opt-125m-sim", Task::Sst2, FormatKind::MxInt, 2, lr, 4, 220, "hw", Pjrt),
+            eval_scope("opt-125m-sim", Task::Sst2, FormatKind::MxInt, 0, lr, 3, 220, "hw", Pjrt),
+            eval_scope("opt-125m-sim", Task::Sst2, FormatKind::MxInt, 0, lr, 4, 100, "hw", Pjrt),
+            eval_scope("opt-125m-sim", Task::Sst2, FormatKind::MxInt, 0, lr, 4, 220, "sw", Pjrt),
+            eval_scope("opt-125m-sim", Task::Sst2, FormatKind::MxInt, 0, lr, 4, 220, "hw", Cpu),
         ] {
             assert_ne!(a, b);
         }
+        // the backend identity is part of the scope: PJRT-measured and
+        // CPU-interpreter-measured objectives never share entries
+        let c = eval_scope("opt-125m-sim", Task::Sst2, FormatKind::MxInt, 0, lr, 4, 220, "hw", Cpu);
+        assert_eq!(c, "opt-125m-sim/sst2/mxint/rounded/qat0/eb4/ps220/hw/cpu");
         // the QAT learning rate matters exactly when QAT runs
-        let q1 = eval_scope("m", Task::Sst2, FormatKind::MxInt, 2, 0.002, 4, 220, "hw");
-        let q2 = eval_scope("m", Task::Sst2, FormatKind::MxInt, 2, 0.01, 4, 220, "hw");
+        let q1 = eval_scope("m", Task::Sst2, FormatKind::MxInt, 2, 0.002, 4, 220, "hw", Pjrt);
+        let q2 = eval_scope("m", Task::Sst2, FormatKind::MxInt, 2, 0.01, 4, 220, "hw", Pjrt);
         assert_ne!(q1, q2, "differing QAT lr must not share entries");
-        let p1 = eval_scope("m", Task::Sst2, FormatKind::MxInt, 0, 0.002, 4, 220, "hw");
-        let p2 = eval_scope("m", Task::Sst2, FormatKind::MxInt, 0, 0.01, 4, 220, "hw");
+        let p1 = eval_scope("m", Task::Sst2, FormatKind::MxInt, 0, 0.002, 4, 220, "hw", Pjrt);
+        let p2 = eval_scope("m", Task::Sst2, FormatKind::MxInt, 0, 0.01, 4, 220, "hw", Pjrt);
         assert_eq!(p1, p2, "lr is irrelevant under PTQ");
     }
 

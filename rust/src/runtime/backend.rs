@@ -1,0 +1,288 @@
+//! The execution-backend abstraction: everything the `evaluate` pass
+//! needs from "something that can run the quantized model" behind one
+//! trait, so accuracy evaluation is no longer hard-wired to PJRT.
+//!
+//! Two implementations exist:
+//!
+//!  * [`PjrtBackend`] — a thin adapter over [`Runtime`] /
+//!    [`PreparedTensor`] / `execute_prepared`: the original artifact-keyed
+//!    path, behavior-preserving down to the prepared-literal reuse and
+//!    the per-batch QAT error swallowing.
+//!  * [`crate::runtime::CpuBackend`] — a pure-Rust MASE-IR interpreter
+//!    (`runtime::interp`) that fake-quantizes via the official
+//!    [`crate::formats`] quantizers and drives every Linear/Embed matmul
+//!    through `packed::kernels` on bit-packed operands. No PJRT, no
+//!    artifacts.
+//!
+//! The backend identity ([`BackendKind::name`]) is folded into
+//! [`crate::passes::eval_scope`], so a persistent
+//! [`crate::search::CacheStore`] never mixes PJRT-measured and
+//! CPU-measured objectives.
+
+use super::client::{PreparedTensor, Runtime, TensorData};
+use crate::data::Batch;
+use crate::formats::FormatKind;
+use crate::frontend::ModelMeta;
+use anyhow::Result;
+
+/// Which execution backend scores solutions — the `--backend` CLI knob.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum BackendKind {
+    /// AOT-lowered HLO artifacts executed through the PJRT CPU client.
+    #[default]
+    Pjrt,
+    /// The pure-Rust packed-arithmetic interpreter (artifact-free).
+    Cpu,
+}
+
+impl BackendKind {
+    /// Stable identity string — part of every eval-cache scope.
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Pjrt => "pjrt",
+            BackendKind::Cpu => "cpu",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<BackendKind> {
+        Some(match s {
+            "pjrt" => BackendKind::Pjrt,
+            "cpu" => BackendKind::Cpu,
+            _ => return None,
+        })
+    }
+}
+
+/// What one batch's evaluation produced: the same (loss, correct) pair
+/// the HLO eval artifacts return.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchScore {
+    pub loss: f32,
+    pub correct: i32,
+}
+
+/// An execution engine for the `evaluate`/`profile` passes.
+///
+/// Implementations must be `Sync`: the parallel search pass shares one
+/// evaluator (and therefore one backend + one `Prepared`) across worker
+/// threads. The quant config is passed as the flat f32[V, 2] row-major
+/// (bits, frac) tensor (`QuantSolution::to_qconfig`), which keeps this
+/// trait independent of the pass layer.
+pub trait ExecBackend: Sync {
+    /// Per-(weights, batches) state built once at `Evaluator`
+    /// construction and reused across every trial (§Perf/L3: for PJRT
+    /// this is the prepared weight/batch literals).
+    type Prepared: Sync;
+
+    fn kind(&self) -> BackendKind;
+
+    fn prepare(&self, meta: &ModelMeta, weights: &[f32], batches: &[Batch])
+        -> Result<Self::Prepared>;
+
+    /// Score one quantized configuration over `batches` (one
+    /// [`BatchScore`] per batch, same order). `fmt_tag` names the
+    /// emulation variant — usually `FormatKind::name()`, but PJRT also
+    /// accepts artifact variants like `"mxint_pallas"`. `weights` is the
+    /// prepared base vector on the common path; QAT hands in tuned
+    /// copies.
+    fn eval(
+        &self,
+        prep: &Self::Prepared,
+        meta: &ModelMeta,
+        batches: &[Batch],
+        fmt_tag: &str,
+        qcfg: &[f32],
+        weights: &[f32],
+    ) -> Result<Vec<BatchScore>>;
+
+    /// Per-qtensor (variance, absmax, absmean) rows for one calibration
+    /// batch, in qtensor order (the `profile` pass kernel).
+    fn profile_batch(
+        &self,
+        meta: &ModelMeta,
+        weights: &[f32],
+        batch: &Batch,
+    ) -> Result<Vec<[f32; 3]>>;
+
+    /// Can this backend QAT-fine-tune (model, fmt)? `Err` explains why
+    /// not (missing artifact, or no gradient path at all).
+    fn qat_available(&self, meta: &ModelMeta, fmt: FormatKind) -> Result<()>;
+
+    /// One QAT fine-tune run (STE sign-SGD over `train`), returning the
+    /// tuned weights.
+    fn qat_tune(
+        &self,
+        meta: &ModelMeta,
+        weights: &[f32],
+        train: &[Batch],
+        fmt: FormatKind,
+        qcfg: &[f32],
+        lr: f32,
+    ) -> Result<Vec<f32>>;
+}
+
+/// The PJRT adapter: artifact-keyed execution through [`Runtime`],
+/// exactly as the pre-trait `Evaluator` did it.
+#[derive(Clone, Copy)]
+pub struct PjrtBackend<'a> {
+    rt: &'a Runtime,
+}
+
+impl<'a> PjrtBackend<'a> {
+    pub fn new(rt: &'a Runtime) -> Self {
+        Self { rt }
+    }
+
+    pub fn runtime(&self) -> &'a Runtime {
+        self.rt
+    }
+}
+
+/// Weight + batch literals converted once and reused across every
+/// execution (§Perf/L3: the weights vector alone is 0.1-3 MB copied per
+/// batch per trial otherwise).
+pub struct PjrtPrepared {
+    /// Address/length of the base weight slice, to recognize it at
+    /// `eval` time without holding a borrow (QAT passes fresh copies).
+    weights_addr: usize,
+    weights_len: usize,
+    weights: PreparedTensor,
+    batches: Vec<(PreparedTensor, PreparedTensor)>,
+}
+
+impl ExecBackend for PjrtBackend<'_> {
+    type Prepared = PjrtPrepared;
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::Pjrt
+    }
+
+    fn prepare(
+        &self,
+        meta: &ModelMeta,
+        weights: &[f32],
+        batches: &[Batch],
+    ) -> Result<PjrtPrepared> {
+        let weights_prep = TensorData::f32(weights, &[meta.param_size as i64]).prepare()?;
+        let batches_prep = batches
+            .iter()
+            .map(|b| {
+                Ok((
+                    TensorData::i32(&b.tokens, &[b.batch as i64, b.seq as i64]).prepare()?,
+                    TensorData::i32(&b.labels, &[b.batch as i64]).prepare()?,
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(PjrtPrepared {
+            weights_addr: weights.as_ptr() as usize,
+            weights_len: weights.len(),
+            weights: weights_prep,
+            batches: batches_prep,
+        })
+    }
+
+    fn eval(
+        &self,
+        prep: &PjrtPrepared,
+        meta: &ModelMeta,
+        batches: &[Batch],
+        fmt_tag: &str,
+        qcfg: &[f32],
+        weights: &[f32],
+    ) -> Result<Vec<BatchScore>> {
+        let artifact = meta.artifact(&format!("eval_{fmt_tag}"))?;
+        let v = meta.num_qtensors() as i64;
+        debug_assert_eq!(qcfg.len() as i64, 2 * v);
+        assert_eq!(batches.len(), prep.batches.len(), "prepared batches out of sync");
+        // weights literal: reuse the prepared one on the common path, only
+        // converting fresh buffers (QAT-tuned copies) when they differ
+        let w_prep;
+        let w_ref = if weights.as_ptr() as usize == prep.weights_addr
+            && weights.len() == prep.weights_len
+        {
+            &prep.weights
+        } else {
+            w_prep = TensorData::f32(weights, &[meta.param_size as i64]).prepare()?;
+            &w_prep
+        };
+        let q_prep = TensorData::f32(qcfg, &[v, 2]).prepare()?;
+        let mut scores = Vec::with_capacity(batches.len());
+        for (toks, labs) in prep.batches.iter() {
+            let out = self.rt.execute_prepared(artifact, &[w_ref, toks, labs, &q_prep])?;
+            scores.push(BatchScore { loss: out[0].scalar_f32()?, correct: out[1].scalar_i32()? });
+        }
+        Ok(scores)
+    }
+
+    fn profile_batch(
+        &self,
+        meta: &ModelMeta,
+        weights: &[f32],
+        batch: &Batch,
+    ) -> Result<Vec<[f32; 3]>> {
+        let artifact = meta.artifact("profile")?;
+        let out = self.rt.execute(
+            artifact,
+            &[
+                TensorData::f32(weights, &[meta.param_size as i64]),
+                TensorData::i32(&batch.tokens, &[batch.batch as i64, batch.seq as i64]),
+            ],
+        )?;
+        let stats = out[0].to_vec_f32()?; // [V, 3] row-major
+        Ok((0..meta.num_qtensors())
+            .map(|i| [stats[i * 3], stats[i * 3 + 1], stats[i * 3 + 2]])
+            .collect())
+    }
+
+    fn qat_available(&self, meta: &ModelMeta, fmt: FormatKind) -> Result<()> {
+        meta.artifact(&format!("qat_{}", fmt.name())).map(|_| ())
+    }
+
+    fn qat_tune(
+        &self,
+        meta: &ModelMeta,
+        weights: &[f32],
+        train: &[Batch],
+        fmt: FormatKind,
+        qcfg: &[f32],
+        lr: f32,
+    ) -> Result<Vec<f32>> {
+        let artifact = meta.artifact(&format!("qat_{}", fmt.name()))?;
+        let v = meta.num_qtensors() as i64;
+        let mut w = weights.to_vec();
+        // Per-batch execution errors are swallowed (the step is skipped),
+        // matching the pre-trait search pass: a transient failure mid-tune
+        // degrades the fine-tune, it does not kill the trial.
+        for b in train {
+            if let Ok(out) = self.rt.execute(
+                artifact,
+                &[
+                    TensorData::f32(&w, &[meta.param_size as i64]),
+                    TensorData::i32(&b.tokens, &[b.batch as i64, b.seq as i64]),
+                    TensorData::i32(&b.labels, &[b.batch as i64]),
+                    TensorData::f32(qcfg, &[v, 2]),
+                    TensorData::scalar_f32(lr),
+                ],
+            ) {
+                if let Ok(new_w) = out[0].to_vec_f32() {
+                    w = new_w;
+                }
+            }
+        }
+        Ok(w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_names_round_trip() {
+        for k in [BackendKind::Pjrt, BackendKind::Cpu] {
+            assert_eq!(BackendKind::from_name(k.name()), Some(k));
+        }
+        assert_eq!(BackendKind::from_name("tpu"), None);
+        assert_eq!(BackendKind::default(), BackendKind::Pjrt);
+    }
+}

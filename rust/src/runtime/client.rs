@@ -16,11 +16,14 @@ pub enum TensorData {
 
 impl TensorData {
     pub fn f32(data: &[f32], dims: &[i64]) -> Self {
-        debug_assert_eq!(data.len() as i64, dims.iter().product::<i64>().max(1));
+        // empty dims = scalar, whose product is the empty product 1;
+        // no clamp, so legitimate zero-element tensors stay consistent
+        debug_assert_eq!(data.len() as i64, dims.iter().product::<i64>());
         TensorData::F32(data.to_vec(), dims.to_vec())
     }
 
     pub fn i32(data: &[i32], dims: &[i64]) -> Self {
+        debug_assert_eq!(data.len() as i64, dims.iter().product::<i64>());
         TensorData::I32(data.to_vec(), dims.to_vec())
     }
 

@@ -1,0 +1,757 @@
+//! `CpuBackend` — a pure-Rust MASE-IR interpreter for the evaluate pass:
+//! packed inference without PJRT, artifacts, or Python.
+//!
+//! The interpreter walks the [`crate::frontend::build_graph`] transformer
+//! graph op by op (Embed, LayerNorm, Linear, Attention, Gelu, Add,
+//! Softmax, Reorder/Transpose, MeanPool), mirroring the L2 model
+//! (`python/compile/model.py`) semantically: pre-LN transformer with the
+//! injected outlier channels (pinned LN scales + depth-growing gains),
+//! tanh-approximate GELU, mean-pooled classifier head / causal LM head,
+//! and fake quantization of every searchable operand through the official
+//! [`crate::formats`] quantizers.
+//!
+//! ## The two matmul paths
+//!
+//! Every Linear matmul runs in one of two modes ([`MatmulPath`]):
+//!
+//!  * **`Packed`** (the default): both operands are bit-packed with
+//!    [`crate::packed::layout::pack`] (which quantizes onto the format
+//!    grid and then encodes exactly) and the product is computed by
+//!    [`crate::packed::kernels::packed_gemm`] on the integer datapath —
+//!    real packed inference, the software mirror of the paper's §4
+//!    hardware dot product. The Embed lookup reads its rows from a
+//!    bit-packed (raw-bits fp32) table — the degenerate one-hot matmul.
+//!  * **`Reference`**: fake-quantize with [`crate::formats::quantize_2d`]
+//!    and multiply with [`crate::packed::kernels::gemm_f64_segmented`],
+//!    the float half of PR 3's golden kernel pair.
+//!
+//! Per that kernel contract, the two paths agree **bitwise** for MXInt
+//! and fixed point (every logit, hence loss and accuracy, is identical),
+//! and within the documented `n * 2^-50 * sum|a_i b_i|` per-output bound
+//! for BMF/BL/FP8 — `tests/backend_parity.rs` asserts both.
+//!
+//! Activations are quantized on their `[rows, k]` matmul reshape; because
+//! every model dimension (and `batch`/`seq_len`) is a multiple of the
+//! (16, 2) block shape, the tiling is identical to the L2 emulation's
+//! blocks-over-trailing-dims convention.
+//!
+//! Limitations (enforced with clean errors, see [`CpuBackend`]): no QAT
+//! (the interpreter has no gradient path) and no pretraining — on hosts
+//! without cached weights the flow evaluates the deterministic
+//! `frontend::init_params` model.
+
+use super::backend::{BackendKind, BatchScore, ExecBackend};
+use crate::data::Batch;
+use crate::formats::{quantize_2d, FormatKind, Precision, BLOCK_SHAPE};
+use crate::frontend::{ModelMeta, OUTLIER_BASE_GAIN, OUTLIER_CHANNELS};
+use crate::ir::{Graph, OpKind};
+use crate::packed::kernels::{gemm_f64_segmented, packed_gemm};
+use crate::packed::layout::{pack, PackedTensor};
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// How the interpreter multiplies quantized operands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MatmulPath {
+    /// Bit-packed operands through `packed::kernels::packed_gemm`.
+    #[default]
+    Packed,
+    /// Fake-quantized f32 operands through `gemm_f64_segmented` (the
+    /// golden float reference; used by the parity tests and `profile`).
+    Reference,
+}
+
+/// The artifact-free execution backend. Construct with [`CpuBackend::new`]
+/// (packed datapath) or [`CpuBackend::reference`] (float golden path).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CpuBackend {
+    pub path: MatmulPath,
+}
+
+impl CpuBackend {
+    pub fn new() -> Self {
+        Self { path: MatmulPath::Packed }
+    }
+
+    pub fn reference() -> Self {
+        Self { path: MatmulPath::Reference }
+    }
+}
+
+impl ExecBackend for CpuBackend {
+    /// The IR is model-shaped, not trial-shaped: build it once per
+    /// evaluator and walk it for every trial/batch.
+    type Prepared = Graph;
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::Cpu
+    }
+
+    fn prepare(&self, meta: &ModelMeta, weights: &[f32], _batches: &[Batch]) -> Result<Graph> {
+        ensure!(
+            weights.len() == meta.param_size,
+            "cpu backend: weight vector has {} params, model {} expects {}",
+            weights.len(),
+            meta.name,
+            meta.param_size
+        );
+        Ok(crate::frontend::build_graph(meta))
+    }
+
+    fn eval(
+        &self,
+        graph: &Graph,
+        meta: &ModelMeta,
+        batches: &[Batch],
+        fmt_tag: &str,
+        qcfg: &[f32],
+        weights: &[f32],
+    ) -> Result<Vec<BatchScore>> {
+        let fmt = FormatKind::from_name(fmt_tag)
+            .ok_or_else(|| anyhow!("cpu backend: unknown format tag '{fmt_tag}'"))?;
+        let interp = Interp::new(meta, graph, weights, fmt, qcfg, self.path)?;
+        batches.iter().map(|b| interp.eval_batch(b)).collect()
+    }
+
+    fn profile_batch(
+        &self,
+        meta: &ModelMeta,
+        weights: &[f32],
+        batch: &Batch,
+    ) -> Result<Vec<[f32; 3]>> {
+        // Profiling runs the unquantized model (fmt = fp32, zero qconfig)
+        // and taps every searchable operand pre-quantization, exactly
+        // like the L2 `profile_forward`. The float path is used: stats do
+        // not depend on the matmul datapath, and it skips the packing.
+        let graph = crate::frontend::build_graph(meta);
+        let qcfg = vec![0.0f32; 2 * meta.num_qtensors()];
+        let interp = Interp::new(
+            meta,
+            &graph,
+            weights,
+            FormatKind::Fp32,
+            &qcfg,
+            MatmulPath::Reference,
+        )?;
+        let mut taps: Vec<Option<[f32; 3]>> = vec![None; meta.num_qtensors()];
+        interp.forward(batch, Some(&mut taps[..]))?;
+        taps.into_iter()
+            .enumerate()
+            .map(|(i, t)| t.ok_or_else(|| anyhow!("qtensor {i} never reached a matmul")))
+            .collect()
+    }
+
+    fn qat_available(&self, _meta: &ModelMeta, _fmt: FormatKind) -> Result<()> {
+        bail!("cpu backend has no gradient path: QAT needs --backend pjrt (or --qat-steps 0)")
+    }
+
+    fn qat_tune(
+        &self,
+        meta: &ModelMeta,
+        _weights: &[f32],
+        _train: &[Batch],
+        fmt: FormatKind,
+        _qcfg: &[f32],
+        _lr: f32,
+    ) -> Result<Vec<f32>> {
+        self.qat_available(meta, fmt).map(|_| Vec::new())
+    }
+}
+
+/// A dense row-major f32 tensor (interpreter values).
+#[derive(Debug, Clone)]
+struct Tensor {
+    data: Vec<f32>,
+    shape: Vec<usize>,
+}
+
+impl Tensor {
+    fn new(data: Vec<f32>, shape: Vec<usize>) -> Self {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        Self { data, shape }
+    }
+
+    /// (rows, cols) view for a matmul over the trailing dim.
+    fn as_2d(&self) -> (usize, usize) {
+        let cols = *self.shape.last().unwrap_or(&1);
+        (self.data.len() / cols.max(1), cols)
+    }
+}
+
+/// One model + one quantization configuration, ready to run batches.
+/// Weight operands are quantized/packed once here and reused per batch.
+struct Interp<'a> {
+    meta: &'a ModelMeta,
+    graph: &'a Graph,
+    weights: &'a [f32],
+    fmt: FormatKind,
+    qcfg: &'a [f32],
+    path: MatmulPath,
+    /// Packed weight per Linear weight value id (`Packed` path).
+    packed_w: HashMap<usize, PackedTensor>,
+    /// Fake-quantized weight per Linear weight value id (`Reference`).
+    quant_w: HashMap<usize, Vec<f32>>,
+    /// Bit-packed (raw fp32) embedding table for the Embed gather.
+    packed_embed: Option<PackedTensor>,
+}
+
+impl<'a> Interp<'a> {
+    fn new(
+        meta: &'a ModelMeta,
+        graph: &'a Graph,
+        weights: &'a [f32],
+        fmt: FormatKind,
+        qcfg: &'a [f32],
+        path: MatmulPath,
+    ) -> Result<Interp<'a>> {
+        ensure!(
+            qcfg.len() == 2 * meta.num_qtensors(),
+            "cpu backend: qconfig has {} entries, expected {}",
+            qcfg.len(),
+            2 * meta.num_qtensors()
+        );
+        let mut interp = Interp {
+            meta,
+            graph,
+            weights,
+            fmt,
+            qcfg,
+            path,
+            packed_w: HashMap::new(),
+            quant_w: HashMap::new(),
+            packed_embed: None,
+        };
+        for op in &graph.ops {
+            match op.kind {
+                OpKind::Linear => {
+                    let wid = op.params[0];
+                    let wv = graph.value(wid);
+                    let (w, shape) = interp.param(&wv.name)?;
+                    ensure!(shape.len() == 2, "linear weight {} is not 2-D", wv.name);
+                    let (k, n) = (shape[0], shape[1]);
+                    let prec = interp.precision_of(wv.qtensor)?;
+                    interp.check_tiling(k, n, &wv.name)?;
+                    match path {
+                        MatmulPath::Packed => {
+                            interp.packed_w.insert(wid.0, pack(w, k, n, fmt, prec));
+                        }
+                        MatmulPath::Reference => {
+                            let mut q = w.to_vec();
+                            quantize_2d(fmt, &mut q, k, n, prec);
+                            interp.quant_w.insert(wid.0, q);
+                        }
+                    }
+                }
+                OpKind::Embed => {
+                    // The embedding lookup is a one-hot matmul; it
+                    // degenerates to a row gather from the bit-packed
+                    // (raw-bits fp32, exact) table on both paths.
+                    let (embed, shape) = interp.param("embed")?;
+                    interp.packed_embed = Some(pack(
+                        embed,
+                        shape[0],
+                        shape[1],
+                        FormatKind::Fp32,
+                        Precision::new(32.0, 0.0),
+                    ));
+                }
+                _ => {}
+            }
+        }
+        Ok(interp)
+    }
+
+    /// Flat-parameter slice + shape by `param_spec` name.
+    fn param(&self, name: &str) -> Result<(&'a [f32], &'a [usize])> {
+        let spec = self
+            .meta
+            .param_spec
+            .iter()
+            .find(|s| s.name == name)
+            .ok_or_else(|| anyhow!("model {} has no parameter '{name}'", self.meta.name))?;
+        let n: usize = spec.shape.iter().product();
+        Ok((&self.weights[spec.offset..spec.offset + n], &spec.shape))
+    }
+
+    fn precision_of(&self, qtensor: Option<usize>) -> Result<Precision> {
+        let qi = qtensor.ok_or_else(|| anyhow!("operand is not quantization-searchable"))?;
+        Ok(Precision::new(self.qcfg[2 * qi], self.qcfg[2 * qi + 1]))
+    }
+
+    /// Block formats need (16, 2)-tileable operands (same constraint the
+    /// quantizers assert; every model-zoo shape satisfies it).
+    fn check_tiling(&self, rows: usize, cols: usize, what: &str) -> Result<()> {
+        let (br, bc) = BLOCK_SHAPE;
+        ensure!(
+            !self.fmt.is_block_format() || (rows % br == 0 && cols % bc == 0),
+            "cpu backend: {what} [{rows}, {cols}] does not tile into ({br}, {bc}) blocks \
+             required by {}",
+            self.fmt.name()
+        );
+        Ok(())
+    }
+
+    /// Quantized matmul `act[rows, k] @ w[k, n] (+ bias)` through the
+    /// configured datapath. `act_q` indexes the activation's qtensor knob.
+    fn qmm(
+        &self,
+        act: &Tensor,
+        act_q: Option<usize>,
+        wid: usize,
+        w_name: &str,
+        bias: Option<&[f32]>,
+        taps: Option<&mut [Option<[f32; 3]>]>,
+    ) -> Result<Vec<f32>> {
+        let (rows, k) = act.as_2d();
+        let (w, w_shape) = self.param(w_name)?;
+        let n = w_shape[1];
+        ensure!(w_shape[0] == k, "{w_name}: inner dims {k} vs {}", w_shape[0]);
+        let a_prec = self.precision_of(act_q).with_context(|| format!("{w_name} activation"))?;
+        self.check_tiling(rows, k, "activation")?;
+        if let Some(taps) = taps {
+            // the profile pass observes operands BEFORE quantization
+            let wv = self.graph.value(crate::ir::ValueId(wid));
+            tap(taps, act_q, &act.data)?;
+            tap(taps, wv.qtensor, w)?;
+        }
+        let mut out = match self.path {
+            MatmulPath::Packed => {
+                let pa = pack(&act.data, rows, k, self.fmt, a_prec);
+                let pw = self.packed_w.get(&wid).ok_or_else(|| anyhow!("{w_name} not packed"))?;
+                packed_gemm(&pa, pw)
+            }
+            MatmulPath::Reference => {
+                let mut qa = act.data.clone();
+                quantize_2d(self.fmt, &mut qa, rows, k, a_prec);
+                let qw = self.quant_w.get(&wid).ok_or_else(|| anyhow!("{w_name} not quantized"))?;
+                gemm_f64_segmented(&qa, qw, rows, k, n)
+            }
+        };
+        if let Some(b) = bias {
+            ensure!(b.len() == n, "{w_name}: bias length {} vs {n}", b.len());
+            for r in 0..rows {
+                for j in 0..n {
+                    out[r * n + j] += b[j];
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// One full forward pass: walk the IR ops in builder (topological)
+    /// order. With `taps`, also record per-qtensor profile statistics.
+    fn forward(
+        &self,
+        batch: &Batch,
+        mut taps: Option<&mut [Option<[f32; 3]>]>,
+    ) -> Result<Rc<Tensor>> {
+        let (b, s, d) = (batch.batch, batch.seq, self.meta.d_model);
+        ensure!(batch.tokens.len() == b * s, "token buffer does not match [batch, seq]");
+        let mut vals: Vec<Option<Rc<Tensor>>> = vec![None; self.graph.values.len()];
+        // remaining-consumer counts so large activations free eagerly
+        let mut uses: Vec<usize> = vec![0; self.graph.values.len()];
+        for op in &self.graph.ops {
+            for a in &op.args {
+                uses[a.0] += 1;
+            }
+        }
+        let read = |vals: &mut Vec<Option<Rc<Tensor>>>,
+                    uses: &mut Vec<usize>,
+                    id: crate::ir::ValueId|
+         -> Result<Rc<Tensor>> {
+            let t = vals[id.0]
+                .clone()
+                .ok_or_else(|| anyhow!("value '{}' used before defined", self.graph.value(id).name))?;
+            uses[id.0] -= 1;
+            if uses[id.0] == 0 {
+                vals[id.0] = None;
+            }
+            Ok(t)
+        };
+
+        let mut out: Option<Rc<Tensor>> = None;
+        for op in &self.graph.ops {
+            let rid = op.results[0];
+            let rname = &self.graph.value(rid).name;
+            let result: Option<Rc<Tensor>> = match op.kind {
+                OpKind::Input => None, // tokens come straight from the batch
+                OpKind::Embed => Some(Rc::new(self.embed(batch, b, s, d)?)),
+                OpKind::LayerNorm => {
+                    let x = read(&mut vals, &mut uses, op.args[0])?;
+                    Some(Rc::new(self.layer_norm(&x, rname)?))
+                }
+                OpKind::Linear => {
+                    let x = read(&mut vals, &mut uses, op.args[0])?;
+                    let wid = op.params[0];
+                    let w_name = self.graph.value(wid).name.clone();
+                    let bias = match self.param(&bias_name_for(&w_name)) {
+                        Ok((bv, _)) => Some(bv),
+                        Err(_) => None,
+                    };
+                    let act_q = self.graph.value(op.args[0]).qtensor;
+                    let y = self.qmm(&x, act_q, wid.0, &w_name, bias, taps.as_deref_mut())?;
+                    let (_, w_shape) = self.param(&w_name)?;
+                    let mut shape = x.shape.clone();
+                    *shape.last_mut().unwrap() = w_shape[1];
+                    Some(Rc::new(Tensor::new(y, shape)))
+                }
+                // Stream-layout ops: numerically identity. The interpreter
+                // keeps the producer's dense layout (aliased, not copied);
+                // Attention consumes the underlying [b, s, 3d] qkv directly.
+                OpKind::Reorder | OpKind::Transpose => {
+                    Some(read(&mut vals, &mut uses, op.args[0])?)
+                }
+                OpKind::Attention => {
+                    let qkv = read(&mut vals, &mut uses, op.args[0])?;
+                    // drop the transposed-K edge (same underlying data)
+                    let _ = read(&mut vals, &mut uses, op.args[1])?;
+                    Some(Rc::new(self.attention(&qkv, b, s, d)?))
+                }
+                OpKind::Gelu => {
+                    let x = read(&mut vals, &mut uses, op.args[0])?;
+                    Some(Rc::new(Tensor::new(
+                        x.data.iter().map(|&v| gelu(v)).collect(),
+                        x.shape.clone(),
+                    )))
+                }
+                OpKind::Add => {
+                    let x = read(&mut vals, &mut uses, op.args[0])?;
+                    let y = read(&mut vals, &mut uses, op.args[1])?;
+                    ensure!(x.data.len() == y.data.len(), "add operands differ in size");
+                    Some(Rc::new(Tensor::new(
+                        x.data.iter().zip(y.data.iter()).map(|(a, c)| a + c).collect(),
+                        x.shape.clone(),
+                    )))
+                }
+                OpKind::Softmax => {
+                    let x = read(&mut vals, &mut uses, op.args[0])?;
+                    let (rows, cols) = x.as_2d();
+                    let mut y = x.data.clone();
+                    for r in 0..rows {
+                        softmax_row(&mut y[r * cols..(r + 1) * cols]);
+                    }
+                    Some(Rc::new(Tensor::new(y, x.shape.clone())))
+                }
+                OpKind::MeanPool => {
+                    let x = read(&mut vals, &mut uses, op.args[0])?;
+                    let mut y = vec![0.0f32; b * d];
+                    for bi in 0..b {
+                        for j in 0..d {
+                            let mut acc = 0.0f64;
+                            for si in 0..s {
+                                acc += x.data[(bi * s + si) * d + j] as f64;
+                            }
+                            y[bi * d + j] = (acc / s as f64) as f32;
+                        }
+                    }
+                    Some(Rc::new(Tensor::new(y, vec![b, d])))
+                }
+                OpKind::Output => {
+                    let x = read(&mut vals, &mut uses, op.args[0])?;
+                    out = Some(x.clone());
+                    Some(x)
+                }
+            };
+            if let Some(t) = result {
+                vals[rid.0] = Some(t);
+            }
+        }
+        out.ok_or_else(|| anyhow!("graph has no Output op"))
+    }
+
+    /// Embedding lookup + learned positional embedding, gathering rows
+    /// from the bit-packed table.
+    fn embed(&self, batch: &Batch, b: usize, s: usize, d: usize) -> Result<Tensor> {
+        let table = self.packed_embed.as_ref().ok_or_else(|| anyhow!("embed table not packed"))?;
+        let (pos, pos_shape) = self.param("pos")?;
+        ensure!(pos_shape[0] >= s, "seq {s} exceeds positional table {}", pos_shape[0]);
+        let vocab = self.meta.vocab;
+        let mut x = vec![0.0f32; b * s * d];
+        for bi in 0..b {
+            for si in 0..s {
+                let tok = batch.tokens[bi * s + si];
+                ensure!(
+                    (0..vocab as i32).contains(&tok),
+                    "token id {tok} out of vocabulary range 0..{vocab}"
+                );
+                let row = &mut x[(bi * s + si) * d..(bi * s + si + 1) * d];
+                for j in 0..d {
+                    row[j] = table.get(tok as usize, j) + pos[si * d + j];
+                }
+            }
+        }
+        Ok(Tensor::new(x, vec![b, s, d]))
+    }
+
+    /// LayerNorm over the last dim; `layerN.ln1`/`.ln2` additionally pin
+    /// the learnable scale/shift on the outlier channels and inject the
+    /// depth-growing gain, mirroring `_layer_norm_with_outliers`.
+    fn layer_norm(&self, x: &Tensor, name: &str) -> Result<Tensor> {
+        let d = *x.shape.last().unwrap();
+        let rows = x.data.len() / d;
+        let (g, _) = self.param(&format!("{name}_g"))?;
+        let (bb, _) = self.param(&format!("{name}_b"))?;
+        let layer_idx = name
+            .strip_prefix("layer")
+            .and_then(|r| r.split('.').next())
+            .and_then(|l| l.parse::<usize>().ok());
+        let inject = layer_idx.is_some();
+        let gain = OUTLIER_BASE_GAIN * (1.0 + layer_idx.unwrap_or(0) as f32);
+        let mut y = vec![0.0f32; x.data.len()];
+        for r in 0..rows {
+            let row = &x.data[r * d..(r + 1) * d];
+            let mut mu = 0.0f64;
+            for &v in row {
+                mu += v as f64;
+            }
+            mu /= d as f64;
+            let mut var = 0.0f64;
+            for &v in row {
+                var += (v as f64 - mu) * (v as f64 - mu);
+            }
+            var /= d as f64;
+            let denom = (var + 1e-5).sqrt();
+            for j in 0..d {
+                let core = ((row[j] as f64 - mu) / denom) as f32;
+                let pinned = inject && j < OUTLIER_CHANNELS;
+                let (gj, bj) = if pinned { (1.0, 0.0) } else { (g[j], bb[j]) };
+                let mut v = core * gj + bj;
+                if inject && j < OUTLIER_CHANNELS {
+                    v *= gain;
+                }
+                y[r * d + j] = v;
+            }
+        }
+        Ok(Tensor::new(y, x.shape.clone()))
+    }
+
+    /// Fused multi-head attention from the fused `[b, s, 3d]` qkv tensor
+    /// (unquantized internals, exactly like the L2 `_attention`).
+    fn attention(&self, qkv: &Tensor, b: usize, s: usize, d: usize) -> Result<Tensor> {
+        ensure!(qkv.data.len() == b * s * 3 * d, "qkv tensor has unexpected size");
+        let heads = self.meta.n_heads;
+        ensure!(d % heads == 0, "d_model {d} not divisible by {heads} heads");
+        let dh = d / heads;
+        let causal = self.meta.kind == "lm";
+        let scale = (dh as f32).sqrt();
+        let row = |bi: usize, si: usize| &qkv.data[(bi * s + si) * 3 * d..(bi * s + si + 1) * 3 * d];
+        let mut out = vec![0.0f32; b * s * d];
+        let mut att = vec![0.0f32; s];
+        for bi in 0..b {
+            for h in 0..heads {
+                let off = h * dh;
+                for si in 0..s {
+                    let q = &row(bi, si)[off..off + dh];
+                    for (sj, a) in att.iter_mut().enumerate() {
+                        *a = if causal && sj > si {
+                            -1e9
+                        } else {
+                            let k = &row(bi, sj)[d + off..d + off + dh];
+                            let mut acc = 0.0f64;
+                            for t in 0..dh {
+                                acc += q[t] as f64 * k[t] as f64;
+                            }
+                            acc as f32 / scale
+                        };
+                    }
+                    softmax_row(&mut att);
+                    let o = &mut out[(bi * s + si) * d + off..(bi * s + si) * d + off + dh];
+                    for (t, ot) in o.iter_mut().enumerate() {
+                        let mut acc = 0.0f64;
+                        for (sj, a) in att.iter().enumerate() {
+                            acc += *a as f64 * row(bi, sj)[2 * d + off + t] as f64;
+                        }
+                        *ot = acc as f32;
+                    }
+                }
+            }
+        }
+        Ok(Tensor::new(out, vec![b, s, d]))
+    }
+
+    /// Forward + loss for one batch — the L2 `eval_batch` contract:
+    /// classifier = (mean cross-entropy, correct count); LM = (mean
+    /// next-token NLL, correct next-token count).
+    fn eval_batch(&self, batch: &Batch) -> Result<BatchScore> {
+        let logits = self.forward(batch, None)?;
+        let (b, s) = (batch.batch, batch.seq);
+        if self.meta.kind == "lm" {
+            ensure!(s >= 2, "LM eval needs seq_len >= 2");
+            let v = self.meta.vocab;
+            let mut nll_sum = 0.0f64;
+            let mut correct = 0i32;
+            for bi in 0..b {
+                for si in 0..s - 1 {
+                    let lg = &logits.data[(bi * s + si) * v..(bi * s + si + 1) * v];
+                    let tgt = batch.tokens[bi * s + si + 1] as usize;
+                    nll_sum += nll(lg, tgt);
+                    if argmax(lg) == tgt {
+                        correct += 1;
+                    }
+                }
+            }
+            Ok(BatchScore { loss: (nll_sum / (b * (s - 1)) as f64) as f32, correct })
+        } else {
+            let c = self.meta.n_classes;
+            ensure!(logits.data.len() == b * c, "classifier logits are not [batch, classes]");
+            let mut nll_sum = 0.0f64;
+            let mut correct = 0i32;
+            for bi in 0..b {
+                let lg = &logits.data[bi * c..(bi + 1) * c];
+                let label = batch.labels[bi] as usize;
+                ensure!(label < c, "label {label} out of range 0..{c}");
+                nll_sum += nll(lg, label);
+                if argmax(lg) == label {
+                    correct += 1;
+                }
+            }
+            Ok(BatchScore { loss: (nll_sum / b as f64) as f32, correct })
+        }
+    }
+}
+
+/// Record profile statistics for one tapped operand.
+fn tap(taps: &mut [Option<[f32; 3]>], qtensor: Option<usize>, data: &[f32]) -> Result<()> {
+    let qi = qtensor.ok_or_else(|| anyhow!("tapped operand has no qtensor index"))?;
+    ensure!(taps[qi].is_none(), "qtensor {qi} tapped twice in one forward");
+    let n = data.len().max(1) as f64;
+    let mut mean = 0.0f64;
+    let (mut absmax, mut absmean) = (0.0f64, 0.0f64);
+    for &v in data {
+        mean += v as f64;
+        absmax = absmax.max((v as f64).abs());
+        absmean += (v as f64).abs();
+    }
+    mean /= n;
+    let mut var = 0.0f64;
+    for &v in data {
+        var += (v as f64 - mean) * (v as f64 - mean);
+    }
+    taps[qi] = Some([(var / n) as f32, absmax as f32, (absmean / n) as f32]);
+    Ok(())
+}
+
+/// Weight name -> bias name per the `param_spec` convention
+/// (`layerN.w_X` -> `layerN.b_X`, `head_w` -> `head_b`).
+fn bias_name_for(w_name: &str) -> String {
+    if w_name == "head_w" {
+        "head_b".to_string()
+    } else {
+        w_name.replacen("w_", "b_", 1)
+    }
+}
+
+/// tanh-approximate GELU (`jax.nn.gelu`'s default), in f32.
+fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_56; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// In-place stable softmax of one row.
+fn softmax_row(row: &mut [f32]) {
+    let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f64;
+    for v in row.iter_mut() {
+        *v = (*v - m).exp();
+        sum += *v as f64;
+    }
+    for v in row.iter_mut() {
+        *v = (*v as f64 / sum) as f32;
+    }
+}
+
+/// -log_softmax(logits)[target], computed in f64 from the f32 logits.
+fn nll(logits: &[f32], target: usize) -> f64 {
+    let m = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let mut sum = 0.0f64;
+    for &v in logits {
+        sum += (v as f64 - m).exp();
+    }
+    m + sum.ln() - logits[target] as f64
+}
+
+/// First index of the maximum (matches `jnp.argmax` tie-breaking).
+fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_row_normalizes() {
+        let mut r = [1.0f32, 2.0, 3.0];
+        softmax_row(&mut r);
+        let s: f32 = r.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(r[2] > r[1] && r[1] > r[0]);
+    }
+
+    #[test]
+    fn nll_matches_log_softmax() {
+        let lg = [0.0f32, 0.0, 0.0, 0.0];
+        assert!((nll(&lg, 1) - (4.0f64).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn argmax_takes_first_tie() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0]), 1);
+        assert_eq!(argmax(&[-1.0]), 0);
+    }
+
+    #[test]
+    fn gelu_fixed_points() {
+        assert_eq!(gelu(0.0), 0.0);
+        assert!((gelu(1.0) - 0.841192).abs() < 1e-5);
+        assert!(gelu(-10.0).abs() < 1e-4);
+        assert!((gelu(10.0) - 10.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn bias_names() {
+        assert_eq!(bias_name_for("layer0.w_qkv"), "layer0.b_qkv");
+        assert_eq!(bias_name_for("layer3.w_fc2"), "layer3.b_fc2");
+        assert_eq!(bias_name_for("head_w"), "head_b");
+    }
+
+    #[test]
+    fn cpu_backend_runs_a_tiny_classifier_forward() {
+        let meta = ModelMeta::synthetic("t", 1, 32, 2, 512, 16, 4, "classifier", 16);
+        let w = crate::frontend::init_params(&meta, 7);
+        let be = CpuBackend::new();
+        let g = be.prepare(&meta, &w, &[]).unwrap();
+        let batch = &crate::data::batches(crate::data::Task::Sst2, 1, 1, 16, 16)[0];
+        let qcfg = vec![0.0f32; 2 * meta.num_qtensors()];
+        let scores = be.eval(&g, &meta, std::slice::from_ref(batch), "fp32", &qcfg, &w).unwrap();
+        assert_eq!(scores.len(), 1);
+        assert!(scores[0].loss.is_finite());
+        assert!((0..=16).contains(&scores[0].correct));
+    }
+
+    #[test]
+    fn cpu_profile_taps_every_qtensor() {
+        let meta = ModelMeta::synthetic("t", 1, 32, 2, 512, 16, 4, "classifier", 16);
+        let w = crate::frontend::init_params(&meta, 7);
+        let batch = &crate::data::batches(crate::data::Task::Sst2, 1, 1, 16, 16)[0];
+        let rows = CpuBackend::new().profile_batch(&meta, &w, batch).unwrap();
+        assert_eq!(rows.len(), meta.num_qtensors());
+        for r in &rows {
+            assert!(r[0] >= 0.0 && r[1] >= 0.0 && r[2] >= 0.0);
+            assert!(r[1] >= r[2], "absmax must dominate absmean");
+        }
+    }
+
+    #[test]
+    fn cpu_backend_rejects_qat() {
+        let meta = ModelMeta::synthetic("t", 1, 32, 2, 512, 16, 4, "classifier", 16);
+        assert!(CpuBackend::new().qat_available(&meta, FormatKind::MxInt).is_err());
+    }
+}

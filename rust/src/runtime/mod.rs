@@ -1,18 +1,31 @@
-//! PJRT runtime — loads the AOT-lowered HLO text artifacts and executes
-//! them on the CPU PJRT client (`xla` crate). This is the only place the
-//! Rust coordinator touches the models' numerics; Python never runs here.
+//! Execution runtimes — the only place the Rust coordinator touches the
+//! models' numerics; Python never runs here.
 //!
-//! HLO *text* is the interchange format: jax >= 0.5 emits protos with
-//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids (see /opt/xla-example/README.md).
+//! The [`ExecBackend`] trait ([`backend`]) abstracts "something that can
+//! run the quantized model" for the evaluate/profile passes, with two
+//! implementations:
 //!
-//! Executables are compiled once per artifact and cached — compilation is
-//! 10-100x the cost of a single execution, and the search loop re-executes
-//! the same artifact with hundreds of different quant configs (§Perf/L3).
+//!  * [`PjrtBackend`] over [`Runtime`] ([`client`]): loads the
+//!    AOT-lowered HLO text artifacts and executes them on the CPU PJRT
+//!    client (`xla` crate). HLO *text* is the interchange format:
+//!    jax >= 0.5 emits protos with 64-bit instruction ids that
+//!    xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+//!    /opt/xla-example/README.md). Executables are compiled once per
+//!    artifact and cached — compilation is 10-100x the cost of a single
+//!    execution, and the search loop re-executes the same artifact with
+//!    hundreds of different quant configs (§Perf/L3).
+//!  * [`CpuBackend`] ([`interp`]): a pure-Rust MASE-IR interpreter that
+//!    fake-quantizes through [`crate::formats`] and runs every matmul on
+//!    bit-packed operands via [`crate::packed::kernels`] — the
+//!    artifact-free path (`--backend cpu`).
 
+pub mod backend;
 pub mod client;
+pub mod interp;
 
+pub use backend::{BackendKind, BatchScore, ExecBackend, PjrtBackend};
 pub use client::{OutputTensor, PreparedTensor, Runtime, TensorData};
+pub use interp::{CpuBackend, MatmulPath};
 
 #[cfg(test)]
 mod tests {

@@ -8,9 +8,10 @@
 //!  * a version-mismatched file is rejected into a cold cache,
 //!  * a corrupted file falls back to a cold cache (and heals on save).
 
-use mase::coordinator::sweep::{grid, sweep_with, SweepCell, SweepConfig, SweepItem};
+use mase::coordinator::sweep::{cell_scope, grid, sweep_with, SweepCell, SweepConfig, SweepItem};
 use mase::data::Task;
 use mase::formats::FormatKind;
+use mase::runtime::BackendKind;
 use mase::search::{
     run_batched_cached, Algorithm, BatchOptions, CacheStore, EvalCache, MemoKey, Trial,
     CACHE_SCHEMA, CACHE_VERSION,
@@ -144,6 +145,55 @@ fn sweep_cells_never_leak_entries_across_scopes() {
             histories[0][0].value, histories[i][0].value,
             "cells {i} and 0 share a value — scope leak"
         );
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn identical_sweeps_under_different_backends_use_disjoint_scopes() {
+    // Cache hygiene across execution backends: the SAME grid swept once
+    // under the PJRT backend and once under the CPU interpreter must hit
+    // entirely disjoint scope sets in a shared store — zero cross-hits,
+    // every cell of the second sweep paid in full.
+    let path = tmp_path("backends");
+    let pjrt_cfg = toy_sweep_config(); // backend: Pjrt (the default)
+    assert_eq!(pjrt_cfg.backend, BackendKind::Pjrt);
+    let cpu_cfg = SweepConfig { backend: BackendKind::Cpu, ..toy_sweep_config() };
+
+    // scope strings themselves must differ cell-for-cell
+    for (a, b) in grid(&pjrt_cfg).iter().zip(grid(&cpu_cfg).iter()) {
+        let (sa, sb) = (cell_scope(&pjrt_cfg, a), cell_scope(&cpu_cfg, b));
+        assert_ne!(sa, sb, "backend missing from scope: {sa}");
+        assert!(sa.ends_with("/pjrt"), "{sa}");
+        assert!(sb.ends_with("/cpu"), "{sb}");
+    }
+
+    let evals = AtomicUsize::new(0);
+    let store = CacheStore::open(&path);
+    drive(&pjrt_cfg, &store, &evals);
+    let pjrt_evals = evals.load(Ordering::SeqCst);
+    assert!(pjrt_evals > 0);
+
+    // identical sweep, different backend, same store: zero cross-hits
+    evals.store(0, Ordering::SeqCst);
+    let (_, cpu_counts) = drive(&cpu_cfg, &store, &evals);
+    assert_eq!(
+        evals.load(Ordering::SeqCst),
+        pjrt_evals,
+        "cpu-backend sweep must pay every evaluation the pjrt sweep paid"
+    );
+    for (hits, misses) in &cpu_counts {
+        assert_eq!(*hits, 0, "cpu-backend cell served a pjrt-measured entry");
+        assert!(*misses > 0);
+    }
+
+    // and a warm re-run of the SAME backend is still fully served
+    evals.store(0, Ordering::SeqCst);
+    let (_, warm_counts) = drive(&cpu_cfg, &store, &evals);
+    assert_eq!(evals.load(Ordering::SeqCst), 0);
+    for (hits, misses) in &warm_counts {
+        assert!(*hits > 0);
+        assert_eq!(*misses, 0);
     }
     std::fs::remove_file(&path).ok();
 }

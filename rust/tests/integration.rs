@@ -33,8 +33,8 @@ fn pretrained_model_beats_chance_and_quantization_degrades_gracefully() {
     let Some(session) = session() else { return };
     let (meta, w) = tiny_weights(&session);
     let eval = batches(Task::Sst2, 1, 3, meta.batch, meta.seq_len);
-    let ev = Evaluator::new(&session.runtime, &meta, &w, &eval);
-    let profile = profile_model(&session.runtime, &meta, &w, &eval[..1]).unwrap();
+    let ev = Evaluator::new(session.pjrt_backend().unwrap(), &meta, &w, &eval).unwrap();
+    let profile = profile_model(&ev.backend, &meta, &w, &eval[..1]).unwrap();
 
     let acc_of = |fmt, bits| {
         ev.accuracy(&QuantSolution::uniform(fmt, bits, &meta, &profile)).unwrap().accuracy()
@@ -116,7 +116,7 @@ fn profile_shows_depth_growing_variance() {
         batch: meta.batch,
         seq: meta.seq_len,
     };
-    let p = profile_model(&session.runtime, &meta, &w, &[b]).unwrap();
+    let p = profile_model(&session.pjrt_backend().unwrap(), &meta, &w, &[b]).unwrap();
     let var_of = |name: &str| {
         p.variance[p.names.iter().position(|n| n == name).unwrap()]
     };
@@ -131,8 +131,8 @@ fn search_finds_sub_8bit_solution_without_accuracy_collapse() {
     let Some(session) = session() else { return };
     let (meta, w) = tiny_weights(&session);
     let eval = batches(Task::Sst2, 1, 3, meta.batch, meta.seq_len);
-    let ev = Evaluator::new(&session.runtime, &meta, &w, &eval);
-    let profile = profile_model(&session.runtime, &meta, &w, &eval[..1]).unwrap();
+    let ev = Evaluator::new(session.pjrt_backend().unwrap(), &meta, &w, &eval).unwrap();
+    let profile = profile_model(&ev.backend, &meta, &w, &eval[..1]).unwrap();
     let fp32 = ev
         .accuracy(&QuantSolution::uniform(FormatKind::Fp32, 32.0, &meta, &profile))
         .unwrap()
@@ -154,8 +154,8 @@ fn qat_steps_run_and_return_tuned_weights() {
     let Some(session) = session() else { return };
     let (meta, w) = tiny_weights(&session);
     let eval = batches(Task::Sst2, 1, 2, meta.batch, meta.seq_len);
-    let ev = Evaluator::new(&session.runtime, &meta, &w, &eval);
-    let profile = profile_model(&session.runtime, &meta, &w, &eval[..1]).unwrap();
+    let ev = Evaluator::new(session.pjrt_backend().unwrap(), &meta, &w, &eval).unwrap();
+    let profile = profile_model(&ev.backend, &meta, &w, &eval[..1]).unwrap();
     let outcome = run_search(
         &ev,
         &profile,
@@ -173,8 +173,8 @@ fn emitted_design_lints_and_simulates() {
     let Some(session) = session() else { return };
     let (meta, w) = tiny_weights(&session);
     let eval = batches(Task::Sst2, 1, 2, meta.batch, meta.seq_len);
-    let ev = Evaluator::new(&session.runtime, &meta, &w, &eval);
-    let profile = profile_model(&session.runtime, &meta, &w, &eval[..1]).unwrap();
+    let ev = Evaluator::new(session.pjrt_backend().unwrap(), &meta, &w, &eval).unwrap();
+    let profile = profile_model(&ev.backend, &meta, &w, &eval[..1]).unwrap();
     let sol = QuantSolution::uniform(FormatKind::MxInt, 4.0, &meta, &profile);
     let (dp, _bits, g) = ev.hardware(&sol);
 
@@ -203,8 +203,8 @@ fn lm_perplexity_far_below_uniform_after_training() {
             seq: meta.seq_len,
         })
         .collect();
-    let ev = Evaluator::new(&session.runtime, &meta, &w, &bs);
-    let profile = profile_model(&session.runtime, &meta, &w, &bs[..1]).unwrap();
+    let ev = Evaluator::new(session.pjrt_backend().unwrap(), &meta, &w, &bs).unwrap();
+    let profile = profile_model(&ev.backend, &meta, &w, &bs[..1]).unwrap();
     let acc = ev
         .accuracy(&QuantSolution::uniform(FormatKind::Fp32, 32.0, &meta, &profile))
         .unwrap();
@@ -225,7 +225,7 @@ fn failure_injection_bad_inputs_are_clean_errors() {
     let meta = session.manifest.model("bert-base-sim").unwrap();
     assert!(meta.artifact("qat_bl").is_err());
     // wrong-shaped execution input must error, not crash
-    let r = session.runtime.execute(
+    let r = session.pjrt().unwrap().execute(
         meta.artifact("profile").unwrap(),
         &[mase::runtime::TensorData::f32(&[0.0; 8], &[8])],
     );

@@ -55,4 +55,17 @@ echo "==> tier-1 verify: cargo build --release && cargo test -q"
 cargo build --release
 cargo test -q
 
+# Artifact-free CPU-backend smoke: the packed-arithmetic interpreter path
+# must stay executable end to end (search -> evaluate -> emit) on a host
+# with no PJRT artifacts, so every gate exercises `--backend cpu`.
+echo "==> cpu-backend smoke: mase e2e --backend cpu (artifact-free)"
+SMOKE_DIR="$(mktemp -d)"
+trap 'rm -rf "$SMOKE_DIR"' EXIT
+./target/release/mase e2e --backend cpu --model toy-sim --task sst2 \
+  --trials 4 --batch 2 --eval-batches 1 --threads 1 \
+  --artifacts "$SMOKE_DIR/artifacts" --out "$SMOKE_DIR/design"
+test -n "$(ls "$SMOKE_DIR/design" 2>/dev/null)" || {
+  echo "cpu-backend smoke emitted no design files"; exit 1;
+}
+
 echo "CI gate passed."
