@@ -49,14 +49,31 @@ fn main() {
         .unwrap()
         .best_eval;
         // MP MXInt (hardware-aware)
-        let mp_mx = run_search(
+        let mp_mx_outcome = run_search(
             &ev,
             &profile,
             Task::Sst2,
             &SearchConfig { trials, ..Default::default() },
         )
-        .unwrap()
-        .best_eval;
+        .unwrap();
+        let mp_mx = mp_mx_outcome.best_eval.clone();
+
+        // PR 5 packed-word streaming check (first model): through the
+        // same finite-width fabric, the MP MXInt winner's narrower
+        // packed tiles must simulate at least as fast as uniform int8.
+        if name == &names[0] {
+            let d = mase::hw::Device::u250();
+            let (_, _, g_mx) = ev.hardware(&mp_mx_outcome.best);
+            let (_, _, g_i8) =
+                ev.hardware(&QuantSolution::uniform(FormatKind::Int, 8.0, &meta, &profile));
+            let w = d.channel_bits;
+            let s_mx = mase::sim::simulated_throughput_at(&g_mx, d.clock_hz, 4, w);
+            let s_i8 = mase::sim::simulated_throughput_at(&g_i8, d.clock_hz, 4, w);
+            println!(
+                "packed-stream sim @{w}b channels ({name}): MP MXInt {s_mx:.0} inf/s vs int8 {s_i8:.0} inf/s ({:.2}x)",
+                s_mx / s_i8.max(1e-12)
+            );
+        }
         // MP MXInt SW-only: search ignores hardware metrics
         let mut ev_sw = mase::passes::Evaluator::new(
             session.pjrt_backend().expect("PJRT session"),

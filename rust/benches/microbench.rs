@@ -65,7 +65,12 @@ fn main() {
     let dt = time(5, || {
         mase::sim::simulate(
             &nodes,
-            &mase::sim::SimConfig { inferences: 4, fifo_depth: 4, sequential: false },
+            &mase::sim::SimConfig {
+                inferences: 4,
+                fifo_depth: 4,
+                sequential: false,
+                channel_bits: mase::hw::DEFAULT_CHANNEL_BITS,
+            },
         );
     });
     t.row(vec!["simulate 4 inferences".into(), format!("{:.3}ms", dt * 1e3), String::new()]);

@@ -32,8 +32,18 @@ fn design_format(g: &Graph) -> FormatKind {
         .unwrap_or(FormatKind::Fp32)
 }
 
-/// Emit the full design for a quantized+parallelized graph.
+/// Emit the full design for a quantized+parallelized graph at the
+/// default fabric width ([`crate::hw::DEFAULT_CHANNEL_BITS`], which is
+/// what [`crate::hw::Device::u250`] provisions). For a device with a
+/// different `channel_bits`, use [`emit_design_at`] so the emitted
+/// deserializers frame tiles at the same beat counts the performance
+/// model charges.
 pub fn emit_design(g: &Graph) -> EmittedDesign {
+    emit_design_at(g, crate::hw::DEFAULT_CHANNEL_BITS)
+}
+
+/// Emit the full design with every dataflow channel `channel_bits` wide.
+pub fn emit_design_at(g: &Graph, channel_bits: u64) -> EmittedDesign {
     let fmt = design_format(g);
     let mut files: BTreeMap<String, String> = BTreeMap::new();
     files.insert("stream_fifo.sv".into(), templates::stream_fifo("stream_fifo", 4));
@@ -82,16 +92,62 @@ pub fn emit_design(g: &Graph) -> EmittedDesign {
             .map(|&a| format!("v{}", a.0))
             .unwrap_or_else(|| "src".to_string());
 
+        // Block-format gemms consume bit-packed streams: deserialize the
+        // channel beats through the matching mx_unpacker and feed the
+        // recovered shared exponent to the MAC array. The unpacker is
+        // sized from the INCOMING edge — the producer value's format,
+        // precision and tile, exactly the payload the simulator charges
+        // that channel (`nodes_from_graph` prices the producer's result
+        // tile) — never from this op's own result.
+        let is_gemm = matches!(op.kind, OpKind::Linear | OpKind::Attention);
+        let unpacker = if is_gemm {
+            op.args.first().and_then(|&a| {
+                let v = g.value(a);
+                let m = v.ty.precision.bits.max(1.0) as u32;
+                templates::unpacker_for(v.ty.format, m, v.attrs.tile, channel_bits)
+            })
+        } else {
+            None
+        };
+        // Skeleton convention: all data nets in the top level are 32-bit
+        // aliases (module doc) — wide operator/unpacker data ports are
+        // sliced/truncated exactly as the pre-existing gemm wiring is.
+        // The exponent path, the part the datapath consumes, is sized
+        // for real: one byte per (16, 2) block, block 0 feeding the MAC
+        // array's shared-exponent adder.
+        let (feed_net, exp_net) = match unpacker {
+            Some((up_name, up_src, groups)) => {
+                files.entry(format!("{up_name}.sv")).or_insert(up_src);
+                let up = format!("{net}_up");
+                wires.push_str(&format!(
+                    "    logic {up}_valid, {up}_ready;\n    logic [31:0] {up}_data;\n\
+                     \x20   logic [{w}:0] {up}_exp;\n",
+                    w = 8 * groups - 1
+                ));
+                body.push_str(&format!(
+                    "    {up_name} u_{up} (\n\
+                     \x20       .clk(clk), .rst_n(rst_n),\n\
+                     \x20       .in_valid({in_net}_valid), .in_ready({in_net}_ready), .in_data({in_net}_data[31:0]),\n\
+                     \x20       .out_valid({up}_valid), .out_ready({up}_ready), .out_data({up}_data),\n\
+                     \x20       .out_exp({up}_exp)\n\
+                     \x20   );\n",
+                ));
+                instances += 1;
+                (up.clone(), format!("{up}_exp[7:0]"))
+            }
+            None => (in_net.clone(), "8'd0".to_string()),
+        };
+
         body.push_str(&format!(
             "    {mod_name} u_{net} (\n\
              \x20       .clk(clk), .rst_n(rst_n),\n\
-             \x20       .in_valid({in_net}_valid), .in_ready({in_net}_ready), .in_data({in_net}_data[31:0]),\n\
+             \x20       .in_valid({feed_net}_valid), .in_ready({feed_net}_ready), .in_data({feed_net}_data[31:0]),\n\
              \x20       .out_valid({net}_valid), .out_ready({net}_ready), .out_data({net}_data){extra}\n\
              \x20   );\n",
-            extra = if matches!(op.kind, OpKind::Linear | OpKind::Attention) {
-                ",\n        .in_exp_a(8'd0), .in_exp_b(8'd0), .out_exp()"
+            extra = if is_gemm {
+                format!(",\n        .in_exp_a({exp_net}), .in_exp_b(8'd0), .out_exp()")
             } else {
-                ""
+                String::new()
             },
         ));
         instances += 1;
@@ -187,6 +243,37 @@ mod tests {
         for (name, text) in &d.files {
             assert!(text.contains("module "), "{name} has no module");
         }
+    }
+
+    #[test]
+    fn block_format_gemms_get_stream_unpackers() {
+        let d = emitted();
+        // one unpacker file per distinct (mantissa, tile) gemm config
+        let unpack_files: Vec<_> = d.files.keys().filter(|k| k.contains("_unpack_")).collect();
+        assert!(!unpack_files.is_empty(), "{:?}", d.files.keys().collect::<Vec<_>>());
+        let top = &d.files["top.sv"];
+        assert!(top.contains("mxint_unpack_"), "unpacker must be instantiated in the top level");
+        // the recovered shared exponent feeds the MAC array, replacing
+        // the old hardwired 8'd0 on the gemm's A port
+        assert!(top.contains("_up_exp)"), "gemm in_exp_a must come from the unpacker");
+        // every unpacker advertises the device channel width
+        for f in &unpack_files {
+            assert!(
+                f.contains(&format!("_c{}", crate::hw::DEFAULT_CHANNEL_BITS)),
+                "{f} missing channel-width suffix"
+            );
+        }
+    }
+
+    #[test]
+    fn elementwise_format_designs_have_no_unpackers() {
+        let m = ModelMeta::synthetic("intdesign", 2, 32, 2, 512, 32, 4, "classifier", 64);
+        let p = ProfileData::uniform(&m, 4.0);
+        let mut g = build_graph(&m);
+        QuantSolution::uniform(FormatKind::Int, 8.0, &m, &p).apply(&mut g);
+        parallelize(&mut g, &Device::u250(), 0.2);
+        let d = emit_design(&g);
+        assert!(d.files.keys().all(|k| !k.contains("_unpack_")), "fixed point streams plain lanes");
     }
 
     #[test]

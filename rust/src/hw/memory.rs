@@ -9,6 +9,12 @@
 //! the idealized analytic `ty.bits()` of Eq. (1). For MXInt at 8-bit
 //! elements the two agree exactly; for the other block formats the
 //! measured number is the honest (slightly larger) one.
+//!
+//! The same oracle prices the *on-fabric* traffic: per-tile edge
+//! payloads in [`crate::hw::throughput::op_tile_bits`] (the beat model)
+//! are `packed_bits_for` over the tile shape, so off-chip spill bits
+//! here and channel beats there are two views of one measured layout —
+//! they cannot drift apart.
 
 use super::Device;
 use crate::ir::Graph;
@@ -148,6 +154,22 @@ mod tests {
             Precision::new(7.0, 0.0),
         );
         assert_eq!(w1.bits, t.storage_bits() as f64);
+    }
+
+    #[test]
+    fn offchip_pricing_and_edge_payloads_share_one_oracle() {
+        // A weight streamed from off-chip in whole-tensor "tiles" must
+        // cost exactly the bits the beat model charges the edge — both
+        // are packed_bits_for over the same shape.
+        let g = two_weight_graph();
+        let pl = plan(&g, &Device::u250());
+        let w1 = pl.iter().find(|p| p.value_name == "w1").unwrap();
+        let v = g.values.iter().find(|v| v.name == "w1").unwrap();
+        let (r, c) = (v.ty.shape[0], v.ty.shape[1]);
+        assert_eq!(
+            w1.bits,
+            crate::packed::packed_bits_for(v.ty.format, v.ty.precision, &[r, c]) as f64
+        );
     }
 
     #[test]

@@ -41,6 +41,12 @@ pub mod throughput;
 
 use crate::formats::{FormatKind, Precision};
 
+/// Default on-fabric handshake channel width in bits (one AXI-stream
+/// beat): what [`Device::u250`] provisions per dataflow edge, what the
+/// emitted unpacker templates deserialize, and the width the
+/// bandwidth-aware simulator ([`crate::sim`]) models by default.
+pub const DEFAULT_CHANNEL_BITS: u64 = 512;
+
 /// Target device model (Alveo U250-like budget).
 #[derive(Debug, Clone)]
 pub struct Device {
@@ -55,6 +61,11 @@ pub struct Device {
     pub offchip_bits_per_s: f64,
     /// Static power in W.
     pub static_watts: f64,
+    /// On-fabric handshake channel width in bits: one packed tile
+    /// streams across a dataflow edge in `ceil(tile_bits / channel_bits)`
+    /// beats (the §4.2 parallelism knob the beat model prices).
+    /// 0 = unbounded, the same sentinel `sim::SimConfig::UNBOUNDED` uses.
+    pub channel_bits: u64,
 }
 
 impl Device {
@@ -66,6 +77,7 @@ impl Device {
             clock_hz: 250e6,
             offchip_bits_per_s: 77e9 * 8.0,
             static_watts: 20.0,
+            channel_bits: DEFAULT_CHANNEL_BITS,
         }
     }
 

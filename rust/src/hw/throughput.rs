@@ -2,13 +2,23 @@
 //!
 //! Each operator processes one streaming tile per initiation interval; an
 //! operator's cycle count per inference is its workload divided by its
-//! tile parallelism. The pipeline's steady-state throughput is set by the
-//! slowest operator (paper §4.2: "overall throughput is the minimum
-//! throughput among all hardware operators"). The cycle-approximate
-//! simulator in [`crate::sim`] cross-validates this closed form.
+//! tile parallelism. Since PR 5 the model is *bandwidth-aware*: tiles
+//! cross the dataflow edges as bit-packed MX words over channels of
+//! finite width ([`super::Device::channel_bits`]), so an operator also
+//! cannot issue faster than it can stream — its streamed cycle count is
+//! `max(compute cycles, tiles x transfer beats)` with
+//! `beats = ceil(measured tile bits / channel width)`, the measured tile
+//! bits coming from [`crate::packed::packed_bits_for`] (shared
+//! exponents, guard bits and alignment padding included). The pipeline's
+//! steady-state throughput is set by the slowest operator (paper §4.2:
+//! "overall throughput is the minimum throughput among all hardware
+//! operators"). The cycle-approximate simulator in [`crate::sim`]
+//! applies the identical beat rule event-by-event and cross-validates
+//! this closed form.
 
 use super::Device;
 use crate::ir::{Graph, OpKind};
+use crate::packed::packed_bits_for;
 
 /// Work (multiply-accumulates, or element ops) one inference pushes
 /// through an operator, derived from its result tensor and inputs.
@@ -33,7 +43,9 @@ pub fn op_work(g: &Graph, op: &crate::ir::Operation) -> f64 {
     }
 }
 
-/// Cycles one inference spends in `op` at tile parallelism `tile`.
+/// Cycles one inference spends *computing* in `op` at tile parallelism
+/// `tile` — the channel-free half of the model; see
+/// [`op_cycles_streamed`] for the bandwidth-aware count.
 pub fn op_cycles(g: &Graph, op: &crate::ir::Operation, tile: (usize, usize)) -> f64 {
     let lanes = (tile.0 * tile.1).max(1) as f64;
     let w = op_work(g, op);
@@ -44,15 +56,78 @@ pub fn op_cycles(g: &Graph, op: &crate::ir::Operation, tile: (usize, usize)) -> 
     }
 }
 
+/// Output tiles `op` emits per inference at tile shape `tile` — the
+/// tile granularity shared by this closed form and the simulator's
+/// graph lowering ([`crate::sim::nodes_from_graph`]).
+pub fn op_tiles_per_inference(g: &Graph, op: &crate::ir::Operation, tile: (usize, usize)) -> u64 {
+    let out_elems: usize = op.results.iter().map(|&r| g.value(r).ty.elements()).sum();
+    let tile_elems = (tile.0 * tile.1).max(1);
+    out_elems.max(1).div_ceil(tile_elems) as u64
+}
+
+/// Measured packed payload (bits) of one output tile of `op`: the bits
+/// that actually cross the dataflow edge per firing, priced by
+/// [`packed_bits_for`] over the tile shape in the result tensor's
+/// format/precision — shared exponent bytes, guard bits and
+/// word-alignment padding included. 0 for zero-result interface ops.
+pub fn op_tile_bits(g: &Graph, op: &crate::ir::Operation, tile: (usize, usize)) -> u64 {
+    match op.results.first() {
+        Some(&r) => {
+            let ty = &g.value(r).ty;
+            packed_bits_for(ty.format, ty.precision, &[tile.0, tile.1])
+        }
+        None => 0,
+    }
+}
+
+/// Beats one output tile of `op` needs to cross a `channel_bits`-wide
+/// handshake channel (0 = unbounded: one beat, the
+/// `sim::SimConfig::UNBOUNDED` sentinel).
+pub fn op_transfer_beats(
+    g: &Graph,
+    op: &crate::ir::Operation,
+    tile: (usize, usize),
+    channel_bits: u64,
+) -> f64 {
+    if channel_bits == 0 {
+        return 1.0;
+    }
+    op_tile_bits(g, op, tile).div_ceil(channel_bits).max(1) as f64
+}
+
+/// Bandwidth-aware cycles one inference spends in `op`: the operator can
+/// neither compute faster than its MAC array nor issue faster than its
+/// output channel drains, so the per-inference count is
+/// `max(compute cycles, tiles x beats)`. Degrades exactly to
+/// [`op_cycles`] whenever the channel keeps up (beats never exceed the
+/// per-tile II), which is how the legacy model is recovered at
+/// `channel_bits == 0` (unbounded).
+pub fn op_cycles_streamed(
+    g: &Graph,
+    op: &crate::ir::Operation,
+    tile: (usize, usize),
+    channel_bits: u64,
+) -> f64 {
+    let compute = op_cycles(g, op, tile);
+    if compute == 0.0 {
+        return 0.0;
+    }
+    let tiles = op_tiles_per_inference(g, op, tile) as f64;
+    compute.max(tiles * op_transfer_beats(g, op, tile, channel_bits))
+}
+
 /// Steady-state pipeline throughput in inferences/second: the slowest
-/// operator's cycle count bounds the initiation interval (Fig. 1f).
+/// operator's streamed cycle count bounds the initiation interval
+/// (Fig. 1f) — since PR 5 an operator behind an under-provisioned
+/// channel is slowed to its transfer rate, making the search objective
+/// bandwidth-sensitive.
 pub fn pipeline_throughput(g: &Graph, device: &Device) -> f64 {
     let max_cycles = g
         .ops
         .iter()
         .map(|op| {
             let tile = op.results.first().map(|&r| g.value(r).attrs.tile).unwrap_or((1, 1));
-            op_cycles(g, op, tile)
+            op_cycles_streamed(g, op, tile, device.channel_bits)
         })
         .fold(0.0f64, f64::max);
     if max_cycles == 0.0 {
@@ -64,13 +139,14 @@ pub fn pipeline_throughput(g: &Graph, device: &Device) -> f64 {
 
 /// End-to-end latency of one inference: sum of per-op fill latencies
 /// (non-dataflow lower bound in Fig. 1e is this sum; the dataflow design
-/// overlaps inferences so throughput >> 1/latency).
-pub fn pipeline_latency_cycles(g: &Graph) -> f64 {
+/// overlaps inferences so throughput >> 1/latency). Streamed: a
+/// transfer-bound stage fills at its channel rate.
+pub fn pipeline_latency_cycles(g: &Graph, device: &Device) -> f64 {
     g.ops
         .iter()
         .map(|op| {
             let tile = op.results.first().map(|&r| g.value(r).attrs.tile).unwrap_or((1, 1));
-            op_cycles(g, op, tile)
+            op_cycles_streamed(g, op, tile, device.channel_bits)
         })
         .sum()
 }
@@ -112,6 +188,9 @@ mod tests {
 
     #[test]
     fn throughput_bounded_by_slowest_op() {
+        // At the device's 512-bit channels a (2,2) fp32 tile (128 bits)
+        // streams in one beat per 64 compute cycles: the closed form
+        // must be exactly the compute bound.
         let g = linear_graph((2, 2));
         let d = Device::u250();
         let cycles = (32.0 * 64.0 * 64.0 / 4.0f64).ceil();
@@ -121,6 +200,74 @@ mod tests {
     #[test]
     fn latency_sums_ops() {
         let g = linear_graph((1, 1));
-        assert!(pipeline_latency_cycles(&g) >= 32.0 * 64.0 * 64.0);
+        assert!(pipeline_latency_cycles(&g, &Device::u250()) >= 32.0 * 64.0 * 64.0);
+    }
+
+    #[test]
+    fn tile_bits_are_measured_packed_storage() {
+        let g = linear_graph((2, 2));
+        let op = g.ops.iter().find(|o| o.kind == OpKind::Linear).unwrap();
+        // result is fp32: 4 elements * 32 bits, word-aligned
+        assert_eq!(op_tile_bits(&g, op, (2, 2)), 128);
+        // and beats round up against the channel width
+        assert_eq!(op_transfer_beats(&g, op, (2, 2), 512), 1.0);
+        assert_eq!(op_transfer_beats(&g, op, (2, 2), 48), 3.0);
+        assert_eq!(op_transfer_beats(&g, op, (2, 2), 0), 1.0, "unbounded = 1 beat");
+    }
+
+    #[test]
+    fn narrow_channels_bound_the_closed_form() {
+        // 8192-bit (16,16) fp32 tiles over starved channels: the linear
+        // op becomes transfer-bound and throughput drops strictly.
+        let g = linear_graph((16, 16));
+        let wide = Device::u250();
+        let mut narrow = Device::u250();
+        narrow.channel_bits = 32;
+        let t_wide = pipeline_throughput(&g, &wide);
+        let t_narrow = pipeline_throughput(&g, &narrow);
+        assert!(t_narrow < t_wide, "narrow {t_narrow} vs wide {t_wide}");
+        // the transfer-bound count is tiles * beats exactly
+        let op = g.ops.iter().find(|o| o.kind == OpKind::Linear).unwrap();
+        let tiles = op_tiles_per_inference(&g, op, (16, 16)) as f64;
+        let beats = op_transfer_beats(&g, op, (16, 16), 32);
+        assert_eq!(op_cycles_streamed(&g, op, (16, 16), 32), tiles * beats);
+    }
+
+    #[test]
+    fn streamed_cycles_degrade_to_compute_cycles() {
+        let g = linear_graph((2, 2));
+        let op = g.ops.iter().find(|o| o.kind == OpKind::Linear).unwrap();
+        let compute = op_cycles(&g, op, (2, 2));
+        assert_eq!(op_cycles_streamed(&g, op, (2, 2), 0), compute);
+        assert_eq!(op_cycles_streamed(&g, op, (2, 2), 512), compute);
+    }
+
+    #[test]
+    fn narrower_formats_need_fewer_beats() {
+        // The whole point of MX formats on a dataflow fabric: MXInt4
+        // tiles cross the same channel in strictly fewer beats than
+        // 8-bit fixed point.
+        let mk = |fmt, p| {
+            let mut g = Graph::new("t");
+            let x = g.add_input("x", TensorType::fp32(vec![32, 64]));
+            let y = g.add_op(
+                OpKind::Gelu,
+                vec![x],
+                vec![],
+                "y",
+                TensorType { shape: vec![32, 64], format: fmt, precision: p },
+                None,
+            );
+            g.value_mut(y).attrs.tile = (16, 2);
+            g.outputs.push(y);
+            g
+        };
+        let g4 = mk(FormatKind::MxInt, Precision::new(3.0, 0.0)); // 4-bit elems + shared exp
+        let g8 = mk(FormatKind::Int, Precision::new(8.0, 4.0));
+        let op4 = g4.ops.iter().find(|o| o.kind == OpKind::Gelu).unwrap();
+        let op8 = g8.ops.iter().find(|o| o.kind == OpKind::Gelu).unwrap();
+        let b4 = op_transfer_beats(&g4, op4, (16, 2), 64);
+        let b8 = op_transfer_beats(&g8, op8, (16, 2), 64);
+        assert!(b4 < b8, "mxint4 {b4} beats vs fixed8 {b8} beats");
     }
 }

@@ -49,7 +49,7 @@
 //! | search algorithms (Fig. 4) | [`search`] | no |
 //! | persistent eval cache | [`search::CacheStore`] | no |
 //! | hardware cost models (Table 1) | [`hw`] | no |
-//! | dataflow simulation (Fig. 1e/1f) | [`sim`] | no |
+//! | dataflow simulation (Fig. 1e/1f), bandwidth-aware beat model | [`sim`] | no |
 //! | SystemVerilog emission (Table 3) | [`emit`] | no |
 //! | accuracy evaluation, packed CPU interpreter | [`runtime::CpuBackend`] via [`passes::Evaluator`] | no |
 //! | full flow / sweep with `--backend cpu` | [`coordinator`] | no |

@@ -9,7 +9,7 @@
 use crate::formats::Precision;
 use crate::hw::area::op_area_luts;
 use crate::hw::memory::{bandwidth_cap, offchip_bits_per_inference, plan};
-use crate::hw::throughput::{op_cycles, pipeline_latency_cycles, pipeline_throughput};
+use crate::hw::throughput::{op_cycles_streamed, pipeline_latency_cycles, pipeline_throughput};
 use crate::hw::Device;
 use crate::ir::{Graph, OpKind, StreamOrder};
 
@@ -68,12 +68,15 @@ fn total_area(g: &Graph) -> f64 {
     g.ops.iter().map(|o| o.attrs.area_luts).sum()
 }
 
-fn recompute_op(g: &mut Graph, i: usize, fmt: crate::formats::FormatKind) {
+fn recompute_op(g: &mut Graph, i: usize, fmt: crate::formats::FormatKind, channel_bits: u64) {
     let op = &g.ops[i];
     let tile = op.results.first().map(|&r| g.value(r).attrs.tile).unwrap_or((1, 1));
     let p = op_precision(g, op);
     let area = op_area_luts(op.kind, fmt, p, tile);
-    let cycles = op_cycles(g, op, tile);
+    // Bandwidth-aware: an op behind an under-provisioned channel is
+    // slowed to its transfer rate (beat model), so the greedy balancer —
+    // and through it the search objective — sees channel serialization.
+    let cycles = op_cycles_streamed(g, op, tile, channel_bits);
     let op = &mut g.ops[i];
     op.attrs.area_luts = area;
     op.attrs.ii_cycles = cycles;
@@ -95,7 +98,7 @@ pub fn parallelize(g: &mut Graph, device: &Device, budget_frac: f64) -> DesignPo
             v.attrs.order =
                 if kind == OpKind::Transpose { StreamOrder::ColMajor } else { StreamOrder::RowMajor };
         }
-        recompute_op(g, i, fmt);
+        recompute_op(g, i, fmt, device.channel_bits);
     }
 
     // greedy: double the bottleneck op's tile while budget allows
@@ -130,11 +133,21 @@ pub fn parallelize(g: &mut Graph, device: &Device, budget_frac: f64) -> DesignPo
             break; // bottleneck already at full parallelism
         };
         g.value_mut(r).attrs.tile = new_tile;
-        recompute_op(g, worst, fmt);
+        recompute_op(g, worst, fmt, device.channel_bits);
         if total_area(g) > budget {
             // revert and stop
             g.value_mut(r).attrs.tile = old_tile;
-            recompute_op(g, worst, fmt);
+            recompute_op(g, worst, fmt, device.channel_bits);
+            break;
+        }
+        if g.ops[worst].attrs.ii_cycles >= worst_cycles {
+            // Doubling the bottleneck's lanes bought nothing: the op is
+            // channel-bound (beats grow with the tile payload as fast as
+            // compute shrinks). Revert — spending area here is waste the
+            // §4.2 balancer should leave to other ops — and stop rather
+            // than loop on an unimprovable bottleneck.
+            g.value_mut(r).attrs.tile = old_tile;
+            recompute_op(g, worst, fmt, device.channel_bits);
             break;
         }
     }
@@ -154,7 +167,7 @@ pub fn parallelize(g: &mut Graph, device: &Device, budget_frac: f64) -> DesignPo
     DesignPoint {
         area_luts: total_area(g),
         throughput: thr,
-        latency_cycles: pipeline_latency_cycles(g),
+        latency_cycles: pipeline_latency_cycles(g, device),
         offchip_bits: offchip,
         utilization: total_area(g) / device.luts,
     }

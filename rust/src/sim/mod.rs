@@ -1,33 +1,57 @@
 //! Cycle-approximate simulator for handshake dataflow pipelines — the
 //! stand-in for the paper's on-board Alveo U250 throughput measurements.
 //!
-//! Model: each IR op becomes a node consuming/producing *tiles* over
+//! ## Model: tiles, beats, channels
+//!
+//! Each IR op becomes a node consuming/producing *tiles* over
 //! latency-insensitive (ready/valid) channels with finite FIFO depth.
-//! A node fires when all inputs have a tile and all outputs have space,
-//! then occupies `ii` cycles. This reproduces the schedules of Fig. 1e/1f:
-//! a sequential (non-dataflow) run executes one op at a time; the
-//! pipelined dataflow run overlaps inferences, and under-buffered edges
-//! stall exactly as in real handshake fabrics.
+//! A node fires when all inputs have a tile and all outputs have space.
+//!
+//! Since PR 5 the channels are *bandwidth-aware*: every dataflow edge
+//! carries bit-packed MX words, so a tile's payload is its **measured**
+//! packed size ([`crate::packed::packed_bits_for`] — shared exponents,
+//! guard bits and word-alignment padding included), and every channel
+//! has a finite bit-width ([`SimConfig::channel_bits`], plumbed from the
+//! device model's [`crate::hw::Device::channel_bits`]). One firing
+//! streams its tile in `beats = ceil(tile_bits / channel_bits)` cycles
+//! and occupies `max(compute II, beats)`: an under-provisioned channel
+//! serializes transfers and stalls the pipeline exactly like a real
+//! AXI-stream fabric, and a wider number format is *measurably slower*
+//! through the same fabric. `channel_bits = 0` (unbounded) degrades
+//! bit-identically to the pre-PR-5 tile model.
+//!
+//! Stall cycles are attributed to their cause: a consumer starved behind
+//! a transfer-bound channel credits the **channel**
+//! ([`EdgeReport::transfer_stalled`]), not the consumer node, so the
+//! Fig. 1 per-node stall table shows only genuine compute/backpressure
+//! stalls.
+//!
+//! This reproduces the schedules of Fig. 1e/1f: a sequential
+//! (non-dataflow) run executes one op at a time; the pipelined dataflow
+//! run overlaps inferences, and under-buffered edges stall exactly as in
+//! real handshake fabrics.
 //!
 //! Used to (a) regenerate Fig. 1e/1f, and (b) cross-validate the
 //! closed-form throughput regression in [`crate::hw::throughput`]
-//! (EXPERIMENTS.md ablation).
+//! (EXPERIMENTS.md ablation), whose streamed per-op cycle count
+//! ([`crate::hw::throughput::op_cycles_streamed`]) applies the same
+//! `max(compute, tiles x beats)` rule in closed form.
 //!
 //! Structure: [`engine`] owns the generic event loop
 //! ([`simulate`] over [`NodeSpec`]s with a [`SimConfig`], producing a
-//! [`SimReport`] of cycles, utilization and per-node stalls, where
-//! ready-but-blocked nodes are credited the full width of each clock
-//! jump). This module adds the IR glue: lowering a quantized+parallelized
-//! [`crate::ir::Graph`] into node specs (latencies from
-//! [`crate::hw::throughput`], FIFO depths from the §4.2 buffer
-//! insertion) and the [`simulated_throughput`] convenience the
-//! integration tests and Fig. 1 bench call.
+//! [`SimReport`] of cycles, utilization, per-node stalls and per-edge
+//! channel counters). This module adds the IR glue: lowering a
+//! quantized+parallelized [`crate::ir::Graph`] into node specs
+//! (latencies from [`crate::hw::throughput`], tile payloads from
+//! [`crate::packed`], FIFO depths from the §4.2 buffer insertion) and
+//! the [`simulated_throughput`] / [`simulated_throughput_at`]
+//! conveniences the integration tests and Fig. 1 bench call.
 
 pub mod engine;
 
-pub use engine::{simulate, NodeSpec, SimConfig, SimReport};
+pub use engine::{simulate, EdgeReport, NodeSpec, SimConfig, SimReport};
 
-use crate::hw::throughput::op_cycles;
+use crate::hw::throughput::{op_cycles, op_tile_bits, op_tiles_per_inference};
 use crate::ir::{Graph, OpKind};
 
 /// Ancestor sets per op (transitive closure over dataflow edges) — used
@@ -50,7 +74,10 @@ fn ancestor_sets(g: &Graph) -> Vec<std::collections::HashSet<usize>> {
 }
 
 /// Build simulator nodes from an IR graph: one node per op, channel per
-/// dataflow edge, II from the throughput model's per-tile cycle count.
+/// dataflow edge, II from the throughput model's per-tile cycle count,
+/// tile payload from the measured packed layout of the op's result
+/// tensor (format + precision over the tile shape — what actually
+/// crosses the channel, exponent bytes and padding included).
 /// Reconvergent edges (a producer that is also an ancestor of one of the
 /// consumer's other producers — residual adds, attention's K branch) get
 /// one inference of buffer credit: the paper's §4.2 buffer insertion,
@@ -62,16 +89,13 @@ pub fn nodes_from_graph(g: &Graph) -> Vec<NodeSpec> {
         let tile = op.results.first().map(|&r| g.value(r).attrs.tile).unwrap_or((1, 1));
         let total = op_cycles(g, op, tile);
         // Zero-work interface ops (input/output) are not compute stages:
-        // one token per inference, one cycle.
-        let (tiles, ii) = if total == 0.0 {
-            (1u64, 1u64)
+        // one token per inference, one cycle, free transfer.
+        let (tiles, ii, tile_bits) = if total == 0.0 {
+            (1u64, 1u64, 0u64)
         } else {
-            // tiles per inference = output elements / tile size
-            let out_elems: usize = op.results.iter().map(|&r| g.value(r).ty.elements()).sum();
-            let tile_elems = (tile.0 * tile.1).max(1);
-            let tiles = ((out_elems.max(1) + tile_elems - 1) / tile_elems) as u64;
+            let tiles = op_tiles_per_inference(g, op, tile);
             let ii = (total / tiles as f64).ceil().max(1.0) as u64;
-            (tiles, ii)
+            (tiles, ii, op_tile_bits(g, op, tile))
         };
         let preds: Vec<usize> = op
             .args
@@ -96,18 +120,37 @@ pub fn nodes_from_graph(g: &Graph) -> Vec<NodeSpec> {
             preds,
             pred_buffer,
             ii,
-            tiles_per_inference: tiles as u64,
+            tiles_per_inference: tiles,
             is_source: op.kind == OpKind::Input,
+            out_tile_bits: tile_bits,
         });
     }
     nodes
 }
 
 /// Simulated steady-state throughput (inferences/s) of the dataflow
-/// schedule for `inferences` back-to-back inferences.
+/// schedule for `inferences` back-to-back inferences, with **unbounded**
+/// channels — the legacy tile model, bit-identical to the pre-beat-model
+/// simulator. Use [`simulated_throughput_at`] to model finite channel
+/// widths.
 pub fn simulated_throughput(g: &Graph, clock_hz: f64, inferences: u64) -> f64 {
+    simulated_throughput_at(g, clock_hz, inferences, SimConfig::UNBOUNDED)
+}
+
+/// Simulated steady-state throughput (inferences/s) with every dataflow
+/// channel `channel_bits` wide: packed tiles stream in
+/// `ceil(tile_bits / channel_bits)` beats (0 = unbounded).
+pub fn simulated_throughput_at(
+    g: &Graph,
+    clock_hz: f64,
+    inferences: u64,
+    channel_bits: u64,
+) -> f64 {
     let nodes = nodes_from_graph(g);
-    let report = simulate(&nodes, &SimConfig { inferences, fifo_depth: 4, sequential: false });
+    let report = simulate(
+        &nodes,
+        &SimConfig { inferences, fifo_depth: 4, sequential: false, channel_bits },
+    );
     if report.cycles == 0 {
         return 0.0;
     }
@@ -146,23 +189,59 @@ mod tests {
     }
 
     #[test]
+    fn tile_payloads_are_measured_packed_bits() {
+        let g = chain_graph();
+        let nodes = nodes_from_graph(&g);
+        // input: interface token, free transfer
+        assert_eq!(nodes[0].out_tile_bits, 0);
+        // linear/gelu results are fp32[16,16] tiles: 256 * 32 bits
+        let expect = crate::packed::packed_bits_for(
+            FormatKind::Fp32,
+            Precision::new(32.0, 0.0),
+            &[16, 16],
+        );
+        assert_eq!(nodes[1].out_tile_bits, expect);
+        assert_eq!(nodes[2].out_tile_bits, expect);
+        assert_eq!(expect, 16 * 16 * 32);
+    }
+
+    #[test]
     fn dataflow_beats_sequential() {
         // The Fig. 1e vs 1f claim: pipelining raises throughput.
         let g = chain_graph();
         let nodes = nodes_from_graph(&g);
-        let df = simulate(&nodes, &SimConfig { inferences: 8, fifo_depth: 4, sequential: false });
-        let seq = simulate(&nodes, &SimConfig { inferences: 8, fifo_depth: 4, sequential: true });
+        let cfg = |sequential| SimConfig {
+            inferences: 8,
+            fifo_depth: 4,
+            sequential,
+            channel_bits: SimConfig::UNBOUNDED,
+        };
+        let df = simulate(&nodes, &cfg(false));
+        let seq = simulate(&nodes, &cfg(true));
         assert!(df.cycles < seq.cycles, "dataflow {} vs sequential {}", df.cycles, seq.cycles);
+    }
+
+    #[test]
+    fn narrow_channels_lower_simulated_throughput() {
+        let g = chain_graph();
+        let clock = 250e6;
+        let unbounded = simulated_throughput(&g, clock, 8);
+        let narrow = simulated_throughput_at(&g, clock, 8, 32);
+        assert!(
+            narrow < unbounded,
+            "32-bit channels must slow a 8192-bit/tile stream: {narrow} vs {unbounded}"
+        );
     }
 
     #[test]
     fn simulator_close_to_regression_model() {
         // Cross-validation: simulated throughput within 2x of the closed
-        // form (they differ by fill/drain and stall effects).
+        // form (they differ by fill/drain and stall effects). Both sides
+        // model the device's channel width.
         let g = chain_graph();
         let d = crate::hw::Device::u250();
         let reg = crate::hw::throughput::pipeline_throughput(&g, &d);
-        let sim = simulated_throughput(&g, d.clock_hz, 16);
+        let sim = simulated_throughput_at(&g, d.clock_hz, 16, d.channel_bits);
         let ratio = sim / reg;
         assert!(ratio > 0.4 && ratio < 2.5, "sim {sim} reg {reg}");
     }

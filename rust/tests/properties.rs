@@ -263,7 +263,13 @@ fn prop_simulator_within_bounds_of_regression() {
         sol.apply(&mut graph);
         let device = Device::u250();
         let dp = parallelize(&mut graph, &device, 0.3);
-        let sim = mase::sim::simulated_throughput(&graph, device.clock_hz, 6);
+        // both sides model the device's channel width (beat model)
+        let sim = mase::sim::simulated_throughput_at(
+            &graph,
+            device.clock_hz,
+            6,
+            device.channel_bits,
+        );
         let ratio = sim / dp.throughput;
         if ratio > 0.2 && ratio < 3.0 {
             Ok(())

@@ -1,0 +1,252 @@
+//! Tier-1 regressions for the bandwidth-aware packed-word streaming
+//! model (PR 5): the simulator and the closed-form throughput model
+//! serialize dataflow transfers as `beats = ceil(tile_bits / width)`
+//! with tile payloads measured by `packed::packed_bits_for`.
+//!
+//! The contracts pinned here:
+//!  1. unbounded channels degrade bit-identically to the legacy tile
+//!     model (the pre-PR-5 simulator);
+//!  2. halving a saturated channel's width at least doubles the
+//!     transfer-bound cycles;
+//!  3. at equal channel width, MXInt4 tiles stream in strictly fewer
+//!     beats — and simulate strictly higher throughput — than 8-bit
+//!     fixed point on the same graph (the paper's Table 1 memory-density
+//!     argument, now visible in simulated time);
+//!  4. zero-payload interface tokens and non-word-multiple remainders
+//!     round the way streaming hardware rounds.
+
+use mase::formats::{FormatKind, Precision};
+use mase::hw::throughput::{op_tile_bits, op_transfer_beats};
+use mase::hw::Device;
+use mase::ir::{Graph, OpKind, TensorType};
+use mase::packed::packed_bits_for;
+use mase::sim::{
+    nodes_from_graph, simulate, simulated_throughput, simulated_throughput_at, SimConfig,
+};
+
+/// A two-stage pipeline whose activations are quantized to `fmt`/`p`:
+/// src -> linear -> gelu, all edges tiled (16, 2).
+fn pipeline_graph(fmt: FormatKind, p: Precision) -> Graph {
+    let mut g = Graph::new("stream");
+    let x = g.add_input("x", TensorType::fp32(vec![32, 64]));
+    let w = g.new_value(
+        "w",
+        TensorType { shape: vec![64, 64], format: fmt, precision: p },
+        None,
+    );
+    let h = g.add_op(
+        OpKind::Linear,
+        vec![x],
+        vec![w],
+        "h",
+        TensorType { shape: vec![32, 64], format: fmt, precision: p },
+        None,
+    );
+    let y = g.add_op(
+        OpKind::Gelu,
+        vec![h],
+        vec![],
+        "y",
+        TensorType { shape: vec![32, 64], format: fmt, precision: p },
+        None,
+    );
+    g.value_mut(h).attrs.tile = (16, 2);
+    g.value_mut(y).attrs.tile = (16, 2);
+    g.outputs.push(y);
+    g
+}
+
+#[test]
+fn unbounded_channels_reproduce_the_legacy_tile_model() {
+    // The acceptance contract: with the channel width effectively
+    // unbounded, the beat model must be bit-identical to the pre-PR tile
+    // simulator — same cycles, same stalls, same throughput number.
+    let g = pipeline_graph(FormatKind::MxInt, Precision::new(5.0, 0.0));
+    let nodes = nodes_from_graph(&g);
+    let run = |channel_bits| {
+        simulate(
+            &nodes,
+            &SimConfig { inferences: 8, fifo_depth: 4, sequential: false, channel_bits },
+        )
+    };
+    let unbounded = run(SimConfig::UNBOUNDED);
+    let huge = run(1 << 40);
+    assert_eq!(unbounded.cycles, huge.cycles);
+    assert_eq!(unbounded.busy, huge.busy);
+    assert_eq!(unbounded.stalled, huge.stalled);
+    // and through the convenience entry points, bit-identical f64s
+    let clock = Device::u250().clock_hz;
+    let legacy = simulated_throughput(&g, clock, 8);
+    assert_eq!(legacy.to_bits(), simulated_throughput_at(&g, clock, 8, 0).to_bits());
+    assert_eq!(legacy.to_bits(), simulated_throughput_at(&g, clock, 8, 1 << 40).to_bits());
+}
+
+#[test]
+fn halving_channel_width_at_least_doubles_transfer_cycles() {
+    // MXInt m=7: 8-bit elements, one (16,2) block per tile = 264 bits
+    // (4 words + exp byte). Widths 4 and 2 divide it (66 and 132 beats),
+    // and 66 beats already exceeds the linear's 64-cycle compute II, so
+    // the whole pipeline is transfer-bound at BOTH widths: beats double
+    // exactly, and so do the channel's transfer cycles.
+    let g = pipeline_graph(FormatKind::MxInt, Precision::new(7.0, 0.0));
+    let nodes = nodes_from_graph(&g);
+    let run = |channel_bits| {
+        simulate(
+            &nodes,
+            &SimConfig { inferences: 2, fifo_depth: 4, sequential: false, channel_bits },
+        )
+    };
+    let wide = run(4);
+    let narrow = run(2);
+    // every real edge (producer emits payload) doubles its beat count
+    let mut checked = 0;
+    for (ew, en) in wide.edges.iter().zip(narrow.edges.iter()) {
+        assert_eq!((ew.producer, ew.consumer, ew.slot), (en.producer, en.consumer, en.slot));
+        if ew.tile_bits > 0 {
+            assert_eq!(en.beats_per_tile, 2 * ew.beats_per_tile, "edge {}->{}", ew.producer, ew.consumer);
+            assert_eq!(en.transfer_cycles, 2 * ew.transfer_cycles);
+            checked += 1;
+        }
+    }
+    assert!(checked >= 1, "no payload-bearing edges simulated");
+    // and the transfer-bound pipeline slows by ~2x end to end
+    assert!(
+        narrow.cycles as f64 >= 1.8 * wide.cycles as f64,
+        "narrow {} vs wide {}",
+        narrow.cycles,
+        wide.cycles
+    );
+}
+
+#[test]
+fn mxint4_streams_in_strictly_fewer_beats_than_fixed8() {
+    // Same graph, same channel width; only the format changes. MXInt4
+    // (4-bit elements + amortized shared exponent): 136 bits per (16,2)
+    // tile vs fixed-8's 256 — fewer beats on every edge, strictly higher
+    // simulated throughput once the fabric is transfer-bound.
+    let g4 = pipeline_graph(FormatKind::MxInt, Precision::new(3.0, 0.0));
+    let g8 = pipeline_graph(FormatKind::Int, Precision::new(8.0, 4.0));
+    // 2-bit channels: even the MXInt4 stream (68 beats/tile) outruns the
+    // linear's 64-cycle compute II, so both configurations are
+    // transfer-bound and the format gap is visible end to end.
+    let width = 2u64;
+
+    for (op4, op8) in g4.ops.iter().zip(g8.ops.iter()) {
+        if op4.kind != OpKind::Linear && op4.kind != OpKind::Gelu {
+            continue;
+        }
+        let b4 = op_transfer_beats(&g4, op4, (16, 2), width);
+        let b8 = op_transfer_beats(&g8, op8, (16, 2), width);
+        assert!(b4 < b8, "{}: mxint4 {b4} beats vs fixed8 {b8}", op4.kind.name());
+    }
+
+    let clock = Device::u250().clock_hz;
+    let t4 = simulated_throughput_at(&g4, clock, 4, width);
+    let t8 = simulated_throughput_at(&g8, clock, 4, width);
+    assert!(
+        t4 > t8,
+        "MXInt4 must simulate strictly faster than fixed-8 through a {width}-bit fabric: {t4} vs {t8}"
+    );
+    // sanity: at unbounded width the two formats tie (compute-identical)
+    let u4 = simulated_throughput(&g4, clock, 4);
+    let u8_ = simulated_throughput(&g8, clock, 4);
+    assert_eq!(u4.to_bits(), u8_.to_bits(), "formats only differ through the channel model");
+}
+
+#[test]
+fn zero_and_remainder_payloads_round_like_hardware() {
+    // Interface tokens (inputs/outputs) carry no payload: free transfer.
+    let g = pipeline_graph(FormatKind::MxInt, Precision::new(5.0, 0.0));
+    let nodes = nodes_from_graph(&g);
+    assert_eq!(nodes[0].out_tile_bits, 0, "input op streams free tokens");
+    let r = simulate(
+        &nodes,
+        &SimConfig { inferences: 1, fifo_depth: 4, sequential: false, channel_bits: 16 },
+    );
+    for e in &r.edges {
+        if e.tile_bits == 0 {
+            assert_eq!(e.beats_per_tile, 1, "zero payload = single beat");
+        } else {
+            assert_eq!(e.beats_per_tile, e.tile_bits.div_ceil(16), "remainders round up");
+        }
+    }
+
+    // A partial-block tile is priced as a full padded block — the same
+    // rule `hw::memory` applies to partial tensors.
+    let op = g.ops.iter().find(|o| o.kind == OpKind::Gelu).unwrap();
+    assert_eq!(
+        op_tile_bits(&g, op, (3, 1)),
+        packed_bits_for(FormatKind::MxInt, Precision::new(5.0, 0.0), &[16, 2]),
+        "partial blocks pad to full ones"
+    );
+
+    // Remainder beat count: 264-bit tiles over a 16-bit channel is
+    // ceil(16.5) = 17 beats, never 16.
+    let g8 = pipeline_graph(FormatKind::MxInt, Precision::new(7.0, 0.0));
+    let op8 = g8.ops.iter().find(|o| o.kind == OpKind::Gelu).unwrap();
+    assert_eq!(op_transfer_beats(&g8, op8, (16, 2), 16), 17.0);
+}
+
+#[test]
+fn transfer_bound_stalls_are_credited_to_channels_not_consumers() {
+    // Mixed precision starves the fabric asymmetrically: the linear's
+    // wide MXInt8 tiles (264 bits = 66 beats at 4-bit channels, past its
+    // 64-cycle compute II) make it transfer-bound, while the gelu's
+    // narrow MXInt4 output (136 bits = 34 beats) finishes each firing
+    // early and then *waits on the linear's channel* ~32 of every 66
+    // cycles. That wait belongs to the channel's counter; the per-node
+    // stall table must stay (mostly) clean.
+    let mut g = pipeline_graph(FormatKind::MxInt, Precision::new(7.0, 0.0));
+    let y = g.outputs[0];
+    g.value_mut(y).ty.precision = Precision::new(3.0, 0.0);
+    let nodes = nodes_from_graph(&g);
+    let r = simulate(
+        &nodes,
+        &SimConfig { inferences: 2, fifo_depth: 4, sequential: false, channel_bits: 4 },
+    );
+    let channel_stalls: u64 = r.edges.iter().map(|e| e.transfer_stalled).sum();
+    assert!(channel_stalls > 0, "transfer-bound run must charge its channels");
+    // consumers of transfer-bound producers stay un-charged for those waits
+    for e in &r.edges {
+        if e.transfer_stalled > 0 {
+            assert!(
+                r.stalled[e.consumer] <= r.cycles / 4,
+                "node {} charged {} stall cycles that belong to channel {}->{}",
+                e.consumer,
+                r.stalled[e.consumer],
+                e.producer,
+                e.consumer
+            );
+        }
+    }
+}
+
+#[test]
+fn search_objective_is_bandwidth_sensitive() {
+    // The closed form the search scores with must see the channel: the
+    // same graph on a channel-starved device yields strictly lower
+    // regression throughput.
+    use mase::passes::{parallelize, ProfileData, QuantSolution};
+    let meta = mase::frontend::manifest::ModelMeta::synthetic(
+        "bw", 2, 32, 2, 512, 32, 4, "classifier", 64,
+    );
+    let profile = ProfileData::uniform(&meta, 4.0);
+    let wide_dev = Device::u250();
+    let mut narrow_dev = Device::u250();
+    narrow_dev.channel_bits = 8;
+
+    let mut g_wide = mase::frontend::build_graph(&meta);
+    QuantSolution::uniform(FormatKind::MxInt, 5.0, &meta, &profile).apply(&mut g_wide);
+    let dp_wide = parallelize(&mut g_wide, &wide_dev, 0.3);
+
+    let mut g_narrow = mase::frontend::build_graph(&meta);
+    QuantSolution::uniform(FormatKind::MxInt, 5.0, &meta, &profile).apply(&mut g_narrow);
+    let dp_narrow = parallelize(&mut g_narrow, &narrow_dev, 0.3);
+
+    assert!(
+        dp_narrow.throughput < dp_wide.throughput,
+        "8-bit channels must cap the design point: {} vs {}",
+        dp_narrow.throughput,
+        dp_wide.throughput
+    );
+}

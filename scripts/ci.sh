@@ -1,9 +1,19 @@
 #!/usr/bin/env bash
-# One-shot CI gate for MASE-RS: format check, lints, then the tier-1
-# verify (build + tests). Run from anywhere; operates on rust/.
+# CI gate for MASE-RS, split into selectable stages so the GitHub
+# workflow can fan them out as matrix jobs and developers can run one
+# stage locally. Run from anywhere; operates on rust/.
 #
-#   scripts/ci.sh            # everything
-#   SKIP_LINTS=1 scripts/ci.sh   # tier-1 only (e.g. toolchain w/o clippy)
+#   scripts/ci.sh                # all stages (the classic one-shot gate)
+#   scripts/ci.sh all            # same
+#   scripts/ci.sh fmt            # rustfmt check only
+#   scripts/ci.sh clippy         # clippy -D warnings (with allowlist)
+#   scripts/ci.sh doc            # rustdoc gate (warnings are errors)
+#   scripts/ci.sh test           # bench/example check + tier-1 build+test
+#   scripts/ci.sh smoke          # artifact-free cpu-backend e2e smoke
+#   scripts/ci.sh fmt clippy     # any combination, run in order given
+#
+#   SKIP_LINTS=1 scripts/ci.sh   # `all` minus fmt/clippy/doc (e.g. a
+#                                # toolchain without clippy/rustfmt)
 #
 # Lint policy: `cargo clippy -- -D warnings` with a small documented
 # allowlist (below) instead of per-line attributes, so the codebase stays
@@ -11,6 +21,12 @@
 
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
+
+# smoke-stage scratch space, cleaned on ANY exit (incl. failures — a
+# RETURN trap would not fire when set -e aborts mid-stage)
+SMOKE_DIR=""
+cleanup() { [[ -n "$SMOKE_DIR" ]] && rm -rf "$SMOKE_DIR" || true; }
+trap cleanup EXIT
 
 # Allowlist rationale:
 #  - too_many_arguments: ModelMeta::synthetic mirrors the python manifest
@@ -23,49 +39,91 @@ CLIPPY_ALLOW=(
   -A clippy::needless_range_loop
 )
 
-if [[ -z "${SKIP_LINTS:-}" ]]; then
+stage_fmt() {
   echo "==> cargo fmt --check"
   if cargo fmt --version >/dev/null 2>&1; then
     cargo fmt --all -- --check
   else
     echo "  (rustfmt not installed; skipping format check)"
   fi
+}
 
+stage_clippy() {
   echo "==> cargo clippy -- -D warnings ($(( ${#CLIPPY_ALLOW[@]} / 2 )) allowlisted lints)"
   if cargo clippy --version >/dev/null 2>&1; then
     cargo clippy --all-targets -- -D warnings "${CLIPPY_ALLOW[@]}"
   else
     echo "  (clippy not installed; skipping lints)"
   fi
+}
 
+stage_doc() {
   # Docs gate: rustdoc warnings (broken intra-doc links, bad code fences,
   # missing docs where required) are errors, so the architecture docs in
   # lib.rs and the module headers cannot rot silently.
   echo "==> cargo doc --no-deps (rustdoc warnings are errors)"
   RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
-fi
-
-# Bench/example targets are plain binaries that tier-1 never builds;
-# type-check them so APIs they exercise (e.g. packed::layout in the
-# table1/fig5 benches) cannot rot silently.
-echo "==> cargo check --benches --examples"
-cargo check --benches --examples
-
-echo "==> tier-1 verify: cargo build --release && cargo test -q"
-cargo build --release
-cargo test -q
-
-# Artifact-free CPU-backend smoke: the packed-arithmetic interpreter path
-# must stay executable end to end (search -> evaluate -> emit) on a host
-# with no PJRT artifacts, so every gate exercises `--backend cpu`.
-echo "==> cpu-backend smoke: mase e2e --backend cpu (artifact-free)"
-SMOKE_DIR="$(mktemp -d)"
-trap 'rm -rf "$SMOKE_DIR"' EXIT
-./target/release/mase e2e --backend cpu --model toy-sim --task sst2 \
-  --trials 4 --batch 2 --eval-batches 1 --threads 1 \
-  --artifacts "$SMOKE_DIR/artifacts" --out "$SMOKE_DIR/design"
-test -n "$(ls "$SMOKE_DIR/design" 2>/dev/null)" || {
-  echo "cpu-backend smoke emitted no design files"; exit 1;
 }
+
+stage_test() {
+  # Bench/example targets are plain binaries that tier-1 never builds;
+  # type-check them so APIs they exercise (e.g. packed::layout in the
+  # table1/fig5 benches) cannot rot silently.
+  echo "==> cargo check --benches --examples"
+  cargo check --benches --examples
+
+  echo "==> tier-1 verify: cargo build --release && cargo test -q"
+  cargo build --release
+  cargo test -q
+}
+
+stage_smoke() {
+  # Artifact-free CPU-backend smoke: the packed-arithmetic interpreter
+  # path must stay executable end to end (search -> evaluate -> emit) on
+  # a host with no PJRT artifacts, so every gate exercises --backend cpu.
+  echo "==> cpu-backend smoke: mase e2e --backend cpu (artifact-free)"
+  if [[ ! -x target/release/mase ]]; then
+    echo "  (target/release/mase missing; building first)"
+    cargo build --release
+  fi
+  SMOKE_DIR="$(mktemp -d)"
+  ./target/release/mase e2e --backend cpu --model toy-sim --task sst2 \
+    --trials 4 --batch 2 --eval-batches 1 --threads 1 \
+    --artifacts "$SMOKE_DIR/artifacts" --out "$SMOKE_DIR/design"
+  test -n "$(ls "$SMOKE_DIR/design" 2>/dev/null)" || {
+    echo "cpu-backend smoke emitted no design files"; exit 1;
+  }
+}
+
+run_stage() {
+  case "$1" in
+    fmt)    stage_fmt ;;
+    clippy) stage_clippy ;;
+    doc)    stage_doc ;;
+    test)   stage_test ;;
+    smoke)  stage_smoke ;;
+    all)
+      if [[ -z "${SKIP_LINTS:-}" ]]; then
+        stage_fmt
+        stage_clippy
+        stage_doc
+      fi
+      stage_test
+      stage_smoke
+      ;;
+    *)
+      echo "unknown stage '$1' (expected fmt|clippy|doc|test|smoke|all)" >&2
+      exit 2
+      ;;
+  esac
+}
+
+if [[ $# -eq 0 ]]; then
+  run_stage all
+else
+  for stage in "$@"; do
+    run_stage "$stage"
+  done
+fi
 
 echo "CI gate passed."

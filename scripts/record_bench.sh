@@ -1,0 +1,60 @@
+#!/usr/bin/env bash
+# Run a named bench and append a dated, host-stamped entry to
+# BENCH_RESULTS.md — the one-command version of the "run the bench on a
+# toolchain host and record the numbers" convention (README, ROADMAP).
+#
+#   scripts/record_bench.sh fig1_dataflow_schedule
+#   scripts/record_bench.sh table4_runtime -- --quiet   # extra cargo args
+#   MASE_TRIALS=8 scripts/record_bench.sh fig4_search_algorithms
+#
+# The entry records the bench name, date, git revision, core count and
+# the bench's full stdout in a fenced block, so CI can upload
+# BENCH_RESULTS.md as an artifact and CHANGES.md can cite it instead of
+# inlining tables.
+
+set -euo pipefail
+
+if [[ $# -lt 1 ]]; then
+  echo "usage: $(basename "$0") <bench-name> [-- <extra cargo bench args>]" >&2
+  echo "benches live in rust/benches/ (e.g. fig1_dataflow_schedule)" >&2
+  exit 2
+fi
+
+bench="$1"
+shift
+if [[ "${1:-}" == "--" ]]; then
+  shift
+fi
+
+repo_root="$(cd "$(dirname "$0")/.." && pwd)"
+results="$repo_root/BENCH_RESULTS.md"
+cd "$repo_root/rust"
+
+if [[ ! -f "benches/$bench.rs" ]]; then
+  echo "unknown bench '$bench'; available:" >&2
+  ls benches/*.rs | sed 's|benches/||; s|\.rs$||; s|^common$||' | grep -v '^$' >&2
+  exit 2
+fi
+
+stamp="$(date -u +%Y-%m-%dT%H:%M:%SZ)"
+rev="$(git -C "$repo_root" rev-parse --short HEAD 2>/dev/null || echo unknown)"
+cores="$(nproc 2>/dev/null || sysctl -n hw.ncpu 2>/dev/null || echo '?')"
+
+out="$(mktemp)"
+trap 'rm -f "$out"' EXIT
+echo "==> cargo bench --bench $bench $*"
+# tee so the operator still sees the live output
+cargo bench --bench "$bench" "$@" 2>&1 | tee "$out"
+
+{
+  echo
+  echo "## $bench — $stamp"
+  echo
+  echo "- git: \`$rev\` · cores: $cores · host: $(uname -sm)"
+  echo
+  echo '```'
+  cat "$out"
+  echo '```'
+} >>"$results"
+
+echo "recorded to ${results#"$repo_root"/}"

@@ -421,21 +421,28 @@ for i in range(M):
             ok = False; print("  C6 fail", i, j, total, ref)
 check("C6 mxint gemm segment datapath bitwise == f64 segmented reference", ok)
 
-# ============ C7: transcription vs ref.py ============
-sys.path.insert(0, "/root/repo/python")
-from compile.kernels import ref as R
-import jax.numpy as jnp
-x = (rng.normal(size=(32, 8)) * 2.0).astype(f32)
-pairs = [
-    ("mxint", q_mxint(x.ravel(), 32, 8, 5.0), np.array(R.mxint_quantize(jnp.asarray(x), 5.0)).ravel()),
-    ("bmf", q_bmf(x.ravel(), 32, 8, 4.0), np.array(R.bmf_quantize(jnp.asarray(x), 4.0)).ravel()),
-    ("bl", q_bl(x.ravel(), 32, 8, 6.0), np.array(R.bl_quantize(jnp.asarray(x), 6.0)).ravel()),
-    ("int", q_int(x.ravel(), 8, 4), np.array(R.int_quantize(jnp.asarray(x), 8.0, 4.0)).ravel()),
-    ("fp8", q_fp8(x.ravel()), np.array(R.minifloat_quantize(jnp.asarray(x))).ravel()),
-]
-for name, mine, theirs in pairs:
-    same = np.array_equal(mine, theirs)
-    check(f"C7 {name} transcription == ref.py grid", bool(same))
+# ============ C7 (optional, needs jax): transcription vs ref.py ============
+# Cross-check against the L2 jax reference grids. Self-skips when jax is
+# unavailable (e.g. the toolchain-free CI job installs only numpy): C1-C6
+# carry the load-bearing claims; C7 only pins the transcription to ref.py.
+try:
+    import os as _os
+    sys.path.insert(0, _os.path.join(_os.path.dirname(_os.path.abspath(__file__)), "..", "python"))
+    from compile.kernels import ref as R
+    import jax.numpy as jnp
+    x = (rng.normal(size=(32, 8)) * 2.0).astype(f32)
+    pairs = [
+        ("mxint", q_mxint(x.ravel(), 32, 8, 5.0), np.array(R.mxint_quantize(jnp.asarray(x), 5.0)).ravel()),
+        ("bmf", q_bmf(x.ravel(), 32, 8, 4.0), np.array(R.bmf_quantize(jnp.asarray(x), 4.0)).ravel()),
+        ("bl", q_bl(x.ravel(), 32, 8, 6.0), np.array(R.bl_quantize(jnp.asarray(x), 6.0)).ravel()),
+        ("int", q_int(x.ravel(), 8, 4), np.array(R.int_quantize(jnp.asarray(x), 8.0, 4.0)).ravel()),
+        ("fp8", q_fp8(x.ravel()), np.array(R.minifloat_quantize(jnp.asarray(x))).ravel()),
+    ]
+    for name, mine, theirs in pairs:
+        same = np.array_equal(mine, theirs)
+        check(f"C7 {name} transcription == ref.py grid", bool(same))
+except ImportError as e:
+    print(f"  (C7 skipped: jax/ref.py unavailable here: {e})")
 
 print()
 print("ALL PASS" if not fails else f"{len(fails)} FAILURES: {fails}")
