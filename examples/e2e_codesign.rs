@@ -82,7 +82,7 @@ fn main() -> anyhow::Result<()> {
 
     // ---- 4. emit SystemVerilog ------------------------------------------
     println!("\n== 4. emit pass ==");
-    let (dp, bits, g) = ev.hardware(&outcome.best);
+    let (dp, bits, g) = ev.hardware(&outcome.best)?;
     let out_dir = Session::default_dir().join("designs").join(format!("{model}_e2e"));
     let (design, lines) = mase::passes::emit_pass::emit_to_dir(&g, &out_dir)?;
     println!(

@@ -63,9 +63,10 @@ fn main() {
         // packed tiles must simulate at least as fast as uniform int8.
         if name == &names[0] {
             let d = mase::hw::Device::u250();
-            let (_, _, g_mx) = ev.hardware(&mp_mx_outcome.best);
-            let (_, _, g_i8) =
-                ev.hardware(&QuantSolution::uniform(FormatKind::Int, 8.0, &meta, &profile));
+            let (_, _, g_mx) = ev.hardware(&mp_mx_outcome.best).unwrap();
+            let (_, _, g_i8) = ev
+                .hardware(&QuantSolution::uniform(FormatKind::Int, 8.0, &meta, &profile))
+                .unwrap();
             let w = d.channel_bits;
             let s_mx = mase::sim::simulated_throughput_at(&g_mx, d.clock_hz, 4, w);
             let s_i8 = mase::sim::simulated_throughput_at(&g_i8, d.clock_hz, 4, w);

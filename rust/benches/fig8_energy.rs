@@ -35,7 +35,7 @@ fn main() {
         let run_uniform = |bits: f32| {
             let sol = QuantSolution::uniform(FormatKind::MxInt, bits, &meta, &profile);
             let acc = ev.accuracy(&sol).unwrap().accuracy();
-            let (dp, _b, g) = ev.hardware(&sol);
+            let (dp, _b, g) = ev.hardware(&sol).unwrap();
             let e = energy_efficiency(&g, FormatKind::MxInt, &device, dp.offchip_bits);
             (acc, e)
         };
@@ -43,7 +43,7 @@ fn main() {
         let (a6, e6) = run_uniform(5.0); // 6-bit elements: m=5
         let mp = run_search(&ev, &profile, Task::Sst2, &SearchConfig { trials, ..Default::default() })
             .unwrap();
-        let (dp, _b, g) = ev.hardware(&mp.best);
+        let (dp, _b, g) = ev.hardware(&mp.best).unwrap();
         let emp = energy_efficiency(&g, FormatKind::MxInt, &device, dp.offchip_bits);
         let amp = mp.best_eval.accuracy;
 

@@ -1,0 +1,415 @@
+//! Cross-layer bitwidth-contract checker (codes MC020-MC025).
+//!
+//! The OCP microscaling formats are precise bit-level contracts — block
+//! shape, shared-exponent width, element encodings — that five layers
+//! must agree on: `formats`/`packed::layout` (the sizing closed forms),
+//! `packed::kernels` (the integer datapath), `sim` (tile payloads and
+//! beats), `hw::throughput` (the performance model) and the emitted
+//! SystemVerilog (unpacker framing and MAC accumulator widths). This
+//! module re-derives each quantity independently from first principles
+//! and asserts every layer matches — one source of truth, checked,
+//! instead of five copies trusted.
+//!
+//! | code | contract |
+//! |---|---|
+//! | MC020 | tile payload bits: closed form vs `packed_bits_for` vs `hw::throughput::op_tile_bits` |
+//! | MC021 | simulator node payload (`out_tile_bits`, incl. the zero-work interface-op rule) |
+//! | MC022 | transfer beats: `hw::throughput::op_transfer_beats` vs `ceil(tile_bits / channel)` |
+//! | MC023 | MAC accumulator width: `packed::kernels::mxint_acc_bits` covers the exact worst case |
+//! | MC024 | alignment-shift span exceeds `MAX_ALIGN_SHIFT` (warning: f64 fallback segments) |
+//! | MC025 | emitted unpacker/MAC parameters vs the IR closed forms (via the parsed module table) |
+//!
+//! Mirrored toolchain-free in `scripts/verify_packed_math.py` (contract
+//! section) so the closed forms stay checkable without cargo.
+
+use super::sv::{self, Module};
+use super::Diagnostic;
+use crate::emit::templates;
+use crate::emit::verilog::design_format;
+use crate::formats::{bmf::LOCAL_EXP_BITS, FormatKind, Precision, BLOCK_SHAPE, SHARED_EXPONENT_BITS};
+use crate::hw::throughput::{op_cycles, op_tile_bits, op_transfer_beats};
+use crate::ir::{Graph, OpKind, Operation};
+use crate::packed::kernels::{mxint_acc_bits, MAX_ALIGN_SHIFT};
+use crate::packed::layout::{ElemLayout, GROUP_ELEMS};
+use crate::packed::packed_bits_for;
+use crate::sim::nodes_from_graph;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Independent closed form for a block-format tile's payload bits:
+/// `blocks * (ceil(32 * elem_bits / 64) * 64 + 8)` — partial blocks pad
+/// to full (16, 2) blocks, every group starts on a fresh u64 word, one
+/// shared-exponent byte per block. `None` for element-wise formats
+/// (their payload has no block structure to cross-check).
+pub fn tile_payload_bits(fmt: FormatKind, p: Precision, tile: (usize, usize)) -> Option<u64> {
+    if !fmt.is_block_format() {
+        return None;
+    }
+    let (br, bc) = BLOCK_SHAPE;
+    let lay = ElemLayout::new(fmt, p);
+    let blocks = (tile.0.div_ceil(br) * tile.1.div_ceil(bc)) as u64;
+    let group_w = (GROUP_ELEMS as u64 * lay.elem_bits as u64).div_ceil(64) * 64;
+    Some(blocks * (group_w + SHARED_EXPONENT_BITS as u64))
+}
+
+/// Minimum signed accumulator width holding one group's exact integer
+/// dot-product at `m` mantissa bits, derived from the worst case itself:
+/// 32 products of `(2^m - 1)^2` must fit below `2^(w-1)`.
+pub fn acc_bits_needed(m: u32) -> u32 {
+    let prod = ((1u128 << m) - 1).pow(2);
+    let total = prod.max(1) * GROUP_ELEMS as u128;
+    (128 - total.leading_zeros()) + 1
+}
+
+/// Worst-case exponent span of one group's products for a (format,
+/// knob) pair — the alignment distance the integer datapath must cover.
+/// Products sum two element exponents, so the span doubles the
+/// per-element range: 0 for MXInt/fixed (exponent structurally constant
+/// inside a group), `2*(2^LOCAL_EXP_BITS - 1)` for BMF's local codes,
+/// 28 for FP8 (e4m3: codes 1..15), `2*(2^eb - 1)` for BL's eb-bit
+/// element exponents.
+pub fn align_span_bound(fmt: FormatKind, knob: i32) -> i64 {
+    match fmt {
+        FormatKind::MxInt | FormatKind::Int | FormatKind::Fp32 => 0,
+        FormatKind::Bmf => 2 * ((1i64 << LOCAL_EXP_BITS) - 1),
+        FormatKind::Fp8 => 28,
+        FormatKind::Bl => 2 * ((1i64 << knob.clamp(0, 32)) - 1),
+    }
+}
+
+fn op_loc(op: &Operation) -> String {
+    format!("ir:op{}:{}", op.id.0, op.kind.name())
+}
+
+/// Check the cross-layer contracts of a quantized graph at a channel
+/// width (MC020-MC024) — no emitted design required.
+pub fn check_graph_contracts(g: &Graph, channel_bits: u64) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let nodes = nodes_from_graph(g);
+    let mut acc_checked: BTreeSet<u32> = BTreeSet::new();
+
+    for (i, op) in g.ops.iter().enumerate() {
+        let Some(&r) = op.results.first() else { continue };
+        let v = g.value(r);
+        let tile = v.attrs.tile;
+        let loc = op_loc(op);
+        let measured = packed_bits_for(v.ty.format, v.ty.precision, &[tile.0, tile.1]);
+
+        // MC020: layout closed form vs the sizing oracle vs the
+        // performance model's per-tile payload
+        if let Some(closed) = tile_payload_bits(v.ty.format, v.ty.precision, tile) {
+            if closed != measured {
+                diags.push(Diagnostic::new(
+                    "MC020",
+                    &loc,
+                    0,
+                    format!(
+                        "tile payload closed form {closed} bits != packed_bits_for {measured} \
+                         ({} m-knob tile {}x{})",
+                        v.ty.format.name(),
+                        tile.0,
+                        tile.1
+                    ),
+                ));
+            }
+        }
+        let hw_bits = op_tile_bits(g, op, tile);
+        if hw_bits != measured {
+            diags.push(Diagnostic::new(
+                "MC020",
+                &loc,
+                0,
+                format!("hw::throughput::op_tile_bits {hw_bits} != packed layout {measured}"),
+            ));
+        }
+
+        // MC021: the simulator charges the measured payload, except for
+        // zero-work interface ops (one free token per inference)
+        let expect_sim = if op_cycles(g, op, tile) == 0.0 { 0 } else { measured };
+        if let Some(node) = nodes.get(i) {
+            if node.out_tile_bits != expect_sim {
+                diags.push(Diagnostic::new(
+                    "MC021",
+                    &loc,
+                    0,
+                    format!(
+                        "simulator charges {} bits/tile but the contract requires {expect_sim} \
+                         (zero-work rule: interface ops stream free)",
+                        node.out_tile_bits
+                    ),
+                ));
+            }
+        }
+
+        // MC022: transfer beats against the channel framing rule
+        let expect_beats =
+            if channel_bits == 0 { 1 } else { measured.div_ceil(channel_bits).max(1) };
+        let hw_beats = op_transfer_beats(g, op, tile, channel_bits);
+        if hw_beats != expect_beats as f64 {
+            diags.push(Diagnostic::new(
+                "MC022",
+                &loc,
+                0,
+                format!(
+                    "op_transfer_beats {hw_beats} != ceil({measured} / {channel_bits}) = \
+                     {expect_beats}"
+                ),
+            ));
+        }
+
+        if !op.kind.is_gemm() {
+            continue;
+        }
+
+        // MC023: the kernel/template accumulator covers one group's
+        // exact worst case at this op's mantissa width
+        let m = v.ty.precision.bits.max(1.0) as u32;
+        if acc_checked.insert(m) {
+            let have = mxint_acc_bits(m);
+            let need = acc_bits_needed(m);
+            if have < need {
+                diags.push(Diagnostic::new(
+                    "MC023",
+                    &loc,
+                    0,
+                    format!(
+                        "accumulator width {have} bits cannot hold the exact 32-element \
+                         group dot-product at m={m} (needs {need})"
+                    ),
+                ));
+            }
+        }
+
+        // MC024: operands whose alignment span exceeds the hardware
+        // aligner leave the integer datapath (exact-f64 fallback)
+        for &a in op.args.iter().chain(op.params.iter()) {
+            let va = g.value(a);
+            if va.ty.format == FormatKind::Fp32 {
+                continue;
+            }
+            let lay = ElemLayout::new(va.ty.format, va.ty.precision);
+            let span = align_span_bound(va.ty.format, lay.knob);
+            if span > MAX_ALIGN_SHIFT as i64 {
+                diags.push(Diagnostic::new(
+                    "MC024",
+                    &loc,
+                    0,
+                    format!(
+                        "operand %{} ({}, knob {}) has alignment span {span} > \
+                         MAX_ALIGN_SHIFT {MAX_ALIGN_SHIFT}: groups fall back to per-term \
+                         f64 accumulation",
+                        va.name,
+                        va.ty.format.name(),
+                        lay.knob
+                    ),
+                ));
+            }
+        }
+    }
+    diags
+}
+
+fn expect_param(
+    diags: &mut Vec<Diagnostic>,
+    env: &std::collections::HashMap<String, Option<i64>>,
+    module: &str,
+    pname: &str,
+    want: i64,
+    loc: &str,
+) {
+    match env.get(pname) {
+        Some(Some(v)) if *v == want => {}
+        Some(Some(v)) => diags.push(Diagnostic::new(
+            "MC025",
+            loc,
+            0,
+            format!("emitted module `{module}` parameter {pname} = {v}, IR closed form requires {want}"),
+        )),
+        _ => diags.push(Diagnostic::new(
+            "MC025",
+            loc,
+            0,
+            format!("emitted module `{module}` has no constant parameter {pname}"),
+        )),
+    }
+}
+
+/// MC025: every gemm's emitted MAC template and unpacker must carry
+/// exactly the parameters the IR closed forms dictate. `mtab` is the
+/// module table parsed from the emitted files ([`sv::check_files`]), so
+/// this checks what the SystemVerilog *says*, not what the generator
+/// intended.
+pub fn check_emitted_params(
+    g: &Graph,
+    mtab: &BTreeMap<String, Module>,
+    channel_bits: u64,
+) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let dfmt = design_format(g);
+    for op in &g.ops {
+        if !matches!(op.kind, OpKind::Linear | OpKind::Attention) {
+            continue;
+        }
+        let Some(&r) = op.results.first() else { continue };
+        let v = g.value(r);
+        let tile = v.attrs.tile;
+        let mantissa = v.ty.precision.bits.max(1.0) as u32;
+        let loc = op_loc(op);
+
+        let (tname, _) = templates::template_for(op.kind, dfmt, mantissa, tile);
+        match sv::params_of(mtab, &tname) {
+            None => diags.push(Diagnostic::new(
+                "MC025",
+                &loc,
+                0,
+                format!("emitted design has no module `{tname}` for this gemm"),
+            )),
+            Some(env) => {
+                let m = mantissa.max(1);
+                expect_param(&mut diags, &env, &tname, "MAN_W", (m + 1) as i64, &loc);
+                expect_param(&mut diags, &env, &tname, "ACC_W", mxint_acc_bits(m) as i64, &loc);
+                expect_param(&mut diags, &env, &tname, "LANES", (tile.0 * tile.1) as i64, &loc);
+            }
+        }
+
+        // the unpacker framing on the gemm's incoming edge
+        let Some(&a) = op.args.first() else { continue };
+        let va = g.value(a);
+        let m_in = va.ty.precision.bits.max(1.0) as u32;
+        let Some((uname, _, _)) =
+            templates::unpacker_for(va.ty.format, m_in, va.attrs.tile, channel_bits)
+        else {
+            continue;
+        };
+        let cfg = templates::unpacker_config(
+            va.ty.format,
+            Precision::new(m_in as f32, 0.0),
+            va.attrs.tile,
+            channel_bits,
+        );
+        match sv::params_of(mtab, &uname) {
+            None => diags.push(Diagnostic::new(
+                "MC025",
+                &loc,
+                0,
+                format!("emitted design has no unpacker `{uname}` for this gemm's input edge"),
+            )),
+            Some(env) => {
+                expect_param(&mut diags, &env, &uname, "CHAN_W", cfg.chan as i64, &loc);
+                expect_param(&mut diags, &env, &uname, "ELEM_W", cfg.elem_bits as i64, &loc);
+                expect_param(&mut diags, &env, &uname, "LANES", cfg.lanes as i64, &loc);
+                expect_param(&mut diags, &env, &uname, "GROUPS", cfg.groups as i64, &loc);
+                expect_param(&mut diags, &env, &uname, "GROUP_W", cfg.group_w as i64, &loc);
+                expect_param(&mut diags, &env, &uname, "BEATS", cfg.beats as i64, &loc);
+                expect_param(&mut diags, &env, &uname, "TILE_BITS", cfg.tile_bits as i64, &loc);
+            }
+        }
+    }
+    diags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::{build_graph, manifest::ModelMeta};
+    use crate::hw::Device;
+    use crate::passes::{parallelize, profile::ProfileData, QuantSolution};
+
+    fn quantized_graph(fmt: FormatKind, bits: f32) -> Graph {
+        let m = ModelMeta::synthetic("ck", 2, 32, 2, 512, 32, 4, "classifier", 64);
+        let p = ProfileData::uniform(&m, 4.0);
+        let mut g = build_graph(&m);
+        QuantSolution::uniform(fmt, bits, &m, &p).apply(&mut g);
+        parallelize(&mut g, &Device::u250(), 0.2);
+        g
+    }
+
+    #[test]
+    fn quantized_designs_satisfy_all_contracts() {
+        for fmt in [FormatKind::MxInt, FormatKind::Bmf, FormatKind::Int] {
+            for chan in [512, 64, 0] {
+                let g = quantized_graph(fmt, 5.0);
+                let diags = check_graph_contracts(&g, chan);
+                assert!(diags.is_empty(), "{fmt:?} chan={chan}: {diags:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn emitted_parameters_match_ir_closed_forms() {
+        let g = quantized_graph(FormatKind::MxInt, 5.0);
+        let chan = crate::hw::DEFAULT_CHANNEL_BITS;
+        let design = crate::emit::verilog::emit_design_at(&g, chan);
+        let (sv_diags, mtab) = sv::check_files(&design.files);
+        assert!(sv_diags.is_empty(), "{sv_diags:?}");
+        let diags = check_emitted_params(&g, &mtab, chan);
+        assert!(diags.is_empty(), "{diags:?}");
+    }
+
+    #[test]
+    fn emitted_parameter_drift_is_detected() {
+        let g = quantized_graph(FormatKind::MxInt, 5.0);
+        let chan = crate::hw::DEFAULT_CHANNEL_BITS;
+        let mut design = crate::emit::verilog::emit_design_at(&g, chan);
+        // sabotage one MAC accumulator width in the emitted text
+        let key = design
+            .files
+            .keys()
+            .find(|k| k.contains("linear"))
+            .expect("a linear template")
+            .clone();
+        let txt = design.files[&key].replace("parameter ACC_W  = ", "parameter ACC_W  = 1 + ");
+        design.files.insert(key, txt);
+        let (_, mtab) = sv::check_files(&design.files);
+        let diags = check_emitted_params(&g, &mtab, chan);
+        assert!(
+            diags.iter().any(|d| d.code == "MC025" && d.message.contains("ACC_W")),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn acc_width_closed_form_is_sufficient_for_all_mantissas() {
+        for m in 1..=24 {
+            assert!(
+                mxint_acc_bits(m) >= acc_bits_needed(m),
+                "m={m}: {} < {}",
+                mxint_acc_bits(m),
+                acc_bits_needed(m)
+            );
+        }
+        // and tight where the algebra predicts: m=4 -> 32*(15^2) needs 14
+        assert_eq!(acc_bits_needed(4), 14);
+        assert_eq!(mxint_acc_bits(4), 14);
+    }
+
+    #[test]
+    fn wide_bl_exponents_warn_about_aligner_fallback() {
+        // BL with eb >= 6 spans 2*(2^6 - 1) = 126 > 63: the kernel's
+        // documented fallback, now predicted statically
+        assert!(align_span_bound(FormatKind::Bl, 7) > MAX_ALIGN_SHIFT as i64);
+        assert!(align_span_bound(FormatKind::Bl, 5) <= MAX_ALIGN_SHIFT as i64);
+        assert_eq!(align_span_bound(FormatKind::MxInt, 8), 0);
+        assert_eq!(align_span_bound(FormatKind::Bmf, 8), 6);
+        let g = quantized_graph(FormatKind::Bl, 7.0);
+        let diags = check_graph_contracts(&g, 512);
+        assert!(
+            diags.iter().any(|d| d.code == "MC024"),
+            "bl m=7 must predict the fallback: {diags:?}"
+        );
+        assert!(
+            diags.iter().all(|d| d.code == "MC024"),
+            "fallback is a warning, not a contract break: {diags:?}"
+        );
+    }
+
+    #[test]
+    fn payload_closed_form_matches_known_values() {
+        // mxint m=4, (16,2): one block, 5-bit elems -> 3 words + exp
+        // byte = 200 bits (the unpacker test's numbers)
+        let p = Precision::new(4.0, 0.0);
+        assert_eq!(tile_payload_bits(FormatKind::MxInt, p, (16, 2)), Some(200));
+        // partial blocks pad to full ones
+        assert_eq!(tile_payload_bits(FormatKind::MxInt, p, (8, 4)), Some(400));
+        assert_eq!(tile_payload_bits(FormatKind::Int, Precision::new(8.0, 4.0), (16, 2)), None);
+    }
+}

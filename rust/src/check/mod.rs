@@ -1,0 +1,195 @@
+//! Static analysis for the compiler's outputs — the correctness
+//! backstop the ROADMAP's format/fabric growth runs under (PR 6).
+//!
+//! Two analyzers share one diagnostics framework:
+//!
+//!  * [`sv`] — a real SystemVerilog analyzer (tokenizer, module-header/
+//!    declaration/instantiation parser, per-module symbol tables) that
+//!    checks declared-before-use, part-select bounds and direction,
+//!    port-connection widths, multiple drivers, and unused declarations
+//!    over every emitted file. It statically catches the PR 5 review
+//!    findings: the reversed `[CHAN_W-1:CHAN_W]` part-select (MC002),
+//!    the mis-sized `out_exp` connection (MC004), and undeclared signal
+//!    references (MC001).
+//!  * [`contracts`] — a cross-layer bitwidth-contract checker over the
+//!    quantized MASE-IR: re-derives accumulator widths, alignment-shift
+//!    spans and tile payload bits from the `formats` + `packed::layout`
+//!    closed forms and asserts `packed::kernels`, `sim`,
+//!    `hw::throughput` and the emitted unpacker/MAC parameters all
+//!    agree (MC020-MC025).
+//!
+//! Every diagnostic carries a stable `MC0xx` code (table in
+//! `docs/ARCHITECTURE.md`), a severity, and a source location. Three
+//! surfaces drive the same entry points: the `mase check` subcommand,
+//! the hard gate inside `passes::emit_pass::emit_to_dir`, and the
+//! `check` stage of `scripts/ci.sh`. The toolchain-free mirror of the
+//! SV analyzer lives in `scripts/verify_sv_check.py`; the contract
+//! closed forms are mirrored in `scripts/verify_packed_math.py`.
+
+pub mod contracts;
+pub mod sv;
+
+use crate::emit::verilog::EmittedDesign;
+use crate::ir::Graph;
+use std::collections::BTreeMap;
+
+/// Diagnostic severity. Errors fail `mase check`, the emit-pass gate
+/// and the ci.sh `check` stage; warnings are reported but non-fatal.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+/// One finding, tagged with a stable code and a source location
+/// (file + 1-based line for SV findings; IR op/value path for contract
+/// findings, with line 0).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// stable `MC0xx` code (see the table in docs/ARCHITECTURE.md)
+    pub code: String,
+    pub severity: Severity,
+    /// source file (or IR location such as `ir:op3:linear`)
+    pub file: String,
+    /// 1-based source line; 0 when the location is not a text file
+    pub line: u32,
+    pub message: String,
+}
+
+impl Diagnostic {
+    /// Build a diagnostic; the severity comes from the code table so
+    /// every producer of an `MC0xx` agrees on how fatal it is.
+    pub fn new(code: &str, file: &str, line: u32, message: String) -> Self {
+        Diagnostic {
+            code: code.to_string(),
+            severity: severity_of(code),
+            file: file.to_string(),
+            line,
+            message,
+        }
+    }
+
+    /// `file:line: severity[CODE] message` (the `rustc`-ish shape the
+    /// CLI and the emit gate print).
+    pub fn render(&self) -> String {
+        let sev = match self.severity {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        };
+        if self.line > 0 {
+            format!("{}:{}: {sev}[{}] {}", self.file, self.line, self.code, self.message)
+        } else {
+            format!("{}: {sev}[{}] {}", self.file, self.code, self.message)
+        }
+    }
+}
+
+/// Severity table for the stable codes. Unknown codes default to Error
+/// so a typo cannot silently demote a finding.
+fn severity_of(code: &str) -> Severity {
+    match code {
+        // SV analyzer warnings: unused declaration, unknown module
+        // (libraries may be instantiated without their source on hand)
+        "MC006" | "MC007" => Severity::Warning,
+        // contract warning: alignment-shift span exceeds the aligner
+        // (the kernel falls back to exact f64 adds — legal, but worth
+        // surfacing: those groups leave the integer datapath)
+        "MC024" => Severity::Warning,
+        _ => Severity::Error,
+    }
+}
+
+/// A batch of findings from one `check::` entry point.
+#[derive(Debug, Clone, Default)]
+pub struct CheckReport {
+    pub diags: Vec<Diagnostic>,
+}
+
+impl CheckReport {
+    pub fn has_errors(&self) -> bool {
+        self.diags.iter().any(|d| d.severity == Severity::Error)
+    }
+
+    pub fn errors(&self) -> usize {
+        self.diags.iter().filter(|d| d.severity == Severity::Error).count()
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.diags.iter().filter(|d| d.severity == Severity::Warning).count()
+    }
+
+    /// One line per finding plus a summary tail, ready to print.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for d in &self.diags {
+            out.push_str(&d.render());
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "check: {} error(s), {} warning(s)\n",
+            self.errors(),
+            self.warnings()
+        ));
+        out
+    }
+}
+
+/// Analyze a set of SystemVerilog sources (file name -> text). This is
+/// the entry point `mase check --sv` drives for on-disk files.
+pub fn check_sv_files(files: &BTreeMap<String, String>) -> CheckReport {
+    let (diags, _) = sv::check_files(files);
+    CheckReport { diags }
+}
+
+/// Check the cross-layer bitwidth contracts of a quantized graph at a
+/// channel width (no emitted design needed).
+pub fn check_graph(g: &Graph, channel_bits: u64) -> CheckReport {
+    CheckReport { diags: contracts::check_graph_contracts(g, channel_bits) }
+}
+
+/// Full check of an emitted design against its source graph: SV
+/// analysis of every file, the IR contracts, and the emitted-parameter
+/// agreement (MC025). The single entry point behind `mase check`, the
+/// emit-pass gate and the ci.sh `check` stage.
+pub fn check_design(design: &EmittedDesign, g: &Graph, channel_bits: u64) -> CheckReport {
+    let (mut diags, mtab) = sv::check_files(&design.files);
+    diags.extend(contracts::check_graph_contracts(g, channel_bits));
+    diags.extend(contracts::check_emitted_params(g, &mtab, channel_bits));
+    CheckReport { diags }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn severity_table_is_stable() {
+        assert_eq!(Diagnostic::new("MC001", "a.sv", 3, "x".into()).severity, Severity::Error);
+        assert_eq!(Diagnostic::new("MC006", "a.sv", 3, "x".into()).severity, Severity::Warning);
+        assert_eq!(Diagnostic::new("MC024", "ir:op", 0, "x".into()).severity, Severity::Warning);
+        // unknown codes stay fatal
+        assert_eq!(Diagnostic::new("MC999", "a.sv", 1, "x".into()).severity, Severity::Error);
+    }
+
+    #[test]
+    fn report_renders_locations_and_summary() {
+        let r = CheckReport {
+            diags: vec![
+                Diagnostic::new("MC002", "top.sv", 12, "reversed part-select".into()),
+                Diagnostic::new("MC006", "top.sv", 4, "unused".into()),
+            ],
+        };
+        assert!(r.has_errors());
+        assert_eq!((r.errors(), r.warnings()), (1, 1));
+        let text = r.render();
+        assert!(text.contains("top.sv:12: error[MC002] reversed part-select"), "{text}");
+        assert!(text.contains("top.sv:4: warning[MC006]"), "{text}");
+        assert!(text.contains("1 error(s), 1 warning(s)"), "{text}");
+    }
+
+    #[test]
+    fn ir_located_diagnostics_render_without_line() {
+        let d = Diagnostic::new("MC023", "ir:op3:linear", 0, "acc width drift".into());
+        assert_eq!(d.render(), "ir:op3:linear: error[MC023] acc width drift");
+    }
+}

@@ -1,0 +1,2389 @@
+//! A real SystemVerilog analyzer for the emitted RTL subset.
+//!
+//! Tokenizes the source, parses module headers, declarations, generate
+//! constructs and instantiations into per-module symbol tables, then
+//! checks declared-before-use (MC001), part-select direction and bounds
+//! (MC002/MC003), port-connection width consistency (MC004),
+//! multiply-driven nets (MC005), unused declarations (MC006), unknown
+//! modules/ports (MC007/MC008), parse errors (MC009) and duplicate
+//! declarations (MC010).
+//!
+//! The algorithm is mirrored line-for-line by
+//! `scripts/verify_sv_check.py` so it stays debuggable without a Rust
+//! toolchain; keep the two in sync when changing semantics.
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+use super::Diagnostic;
+
+type Env = HashMap<String, Option<i64>>;
+
+// ---------------------------------------------------------------------------
+// tokenizer
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Kind {
+    Id,
+    Num,
+    Sys,
+    Punct,
+    Str,
+    Eof,
+}
+
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: Kind,
+    pub text: String,
+    pub line: u32,
+}
+
+fn tok(kind: Kind, text: &str, line: u32) -> Tok {
+    Tok { kind, text: text.to_string(), line }
+}
+
+fn eof_tok(line: u32) -> Tok {
+    Tok { kind: Kind::Eof, text: String::new(), line }
+}
+
+#[derive(Debug)]
+pub struct ParseErr {
+    pub line: u32,
+    pub msg: String,
+}
+
+impl ParseErr {
+    fn new(line: u32, msg: String) -> Self {
+        ParseErr { line, msg }
+    }
+}
+
+fn is_keyword(s: &str) -> bool {
+    matches!(
+        s,
+        "module"
+            | "endmodule"
+            | "input"
+            | "output"
+            | "inout"
+            | "logic"
+            | "wire"
+            | "reg"
+            | "signed"
+            | "unsigned"
+            | "parameter"
+            | "localparam"
+            | "assign"
+            | "always"
+            | "always_ff"
+            | "always_comb"
+            | "always_latch"
+            | "begin"
+            | "end"
+            | "if"
+            | "else"
+            | "for"
+            | "generate"
+            | "endgenerate"
+            | "genvar"
+            | "integer"
+            | "posedge"
+            | "negedge"
+            | "or"
+            | "and"
+            | "case"
+            | "endcase"
+            | "default"
+            | "initial"
+            | "function"
+            | "endfunction"
+            | "typedef"
+            | "enum"
+            | "struct"
+            | "packed"
+            | "int"
+            | "bit"
+            | "byte"
+            | "return"
+            | "void"
+    )
+}
+
+const PUNCTS2: [&str; 10] = ["<=", ">=", "==", "!=", "&&", "||", "<<", ">>", "+:", "-:"];
+
+fn is_open(t: &str) -> bool {
+    matches!(t, "(" | "[" | "{")
+}
+
+fn is_close(t: &str) -> bool {
+    matches!(t, ")" | "]" | "}")
+}
+
+/// Tokenize SystemVerilog source into id/num/sys/punct/str tokens.
+pub fn tokenize(text: &str) -> Result<Vec<Tok>, ParseErr> {
+    let b = text.as_bytes();
+    let n = b.len();
+    let mut toks = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == b' ' || c == b'\t' || c == b'\r' {
+            i += 1;
+            continue;
+        }
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            while i < n && b[i] != b'\n' {
+                i += 1;
+            }
+            continue;
+        }
+        if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let mut j = i + 2;
+            loop {
+                if j + 1 >= n {
+                    return Err(ParseErr::new(line, "unterminated block comment".into()));
+                }
+                if b[j] == b'*' && b[j + 1] == b'/' {
+                    break;
+                }
+                if b[j] == b'\n' {
+                    line += 1;
+                }
+                j += 1;
+            }
+            i = j + 2;
+            continue;
+        }
+        if c == b'"' {
+            let mut j = i + 1;
+            while j < n && b[j] != b'"' {
+                j += 1;
+            }
+            if j >= n {
+                return Err(ParseErr::new(line, "unterminated string".into()));
+            }
+            toks.push(tok(Kind::Str, &text[i..j + 1], line));
+            i = j + 1;
+            continue;
+        }
+        if c.is_ascii_alphabetic() || c == b'_' {
+            let mut j = i + 1;
+            while j < n && (b[j].is_ascii_alphanumeric() || b[j] == b'_') {
+                j += 1;
+            }
+            toks.push(tok(Kind::Id, &text[i..j], line));
+            i = j;
+            continue;
+        }
+        if c == b'$' {
+            let mut j = i + 1;
+            if j < n && (b[j].is_ascii_alphabetic() || b[j] == b'_') {
+                j += 1;
+                while j < n && (b[j].is_ascii_alphanumeric() || b[j] == b'_') {
+                    j += 1;
+                }
+                toks.push(tok(Kind::Sys, &text[i..j], line));
+                i = j;
+                continue;
+            }
+            return Err(ParseErr::new(line, "stray '$'".into()));
+        }
+        if c.is_ascii_digit() || c == b'\'' {
+            // optional decimal head, then 'sB.. based literal, or plain number
+            let start = i;
+            let mut j = i;
+            while j < n && (b[j].is_ascii_digit() || b[j] == b'_') {
+                j += 1;
+            }
+            let head_len = j - i;
+            if j < n && b[j] == b'\'' {
+                let mut k = j + 1;
+                while k < n && (b[k] == b's' || b[k] == b'S') {
+                    k += 1;
+                }
+                if k < n && matches!(b[k], b'b' | b'B' | b'd' | b'D' | b'o' | b'O' | b'h' | b'H') {
+                    let mut m = k + 1;
+                    while m < n
+                        && (b[m].is_ascii_hexdigit()
+                            || matches!(b[m], b'x' | b'X' | b'z' | b'Z' | b'_' | b'?'))
+                    {
+                        m += 1;
+                    }
+                    if m == k + 1 {
+                        return Err(ParseErr::new(line, "unsupported literal".into()));
+                    }
+                    toks.push(tok(Kind::Num, &text[start..m], line));
+                    i = m;
+                    continue;
+                }
+                if head_len == 0 && k == j + 1 && k < n && matches!(b[k], b'0' | b'1' | b'x' | b'X' | b'z' | b'Z')
+                {
+                    toks.push(tok(Kind::Num, &text[start..k + 1], line));
+                    i = k + 1;
+                    continue;
+                }
+                if head_len == 0 {
+                    // bare ' (e.g. '{ aggregate) — not in our subset
+                    return Err(ParseErr::new(line, "unsupported literal".into()));
+                }
+                // plain number followed by a quote that is not a literal base
+                toks.push(tok(Kind::Num, &text[start..j], line));
+                i = j;
+                continue;
+            }
+            if head_len == 0 {
+                return Err(ParseErr::new(line, "unsupported literal".into()));
+            }
+            toks.push(tok(Kind::Num, &text[start..j], line));
+            i = j;
+            continue;
+        }
+        let two = if i + 1 < n { &text[i..i + 2] } else { "" };
+        if PUNCTS2.contains(&two) {
+            toks.push(tok(Kind::Punct, two, line));
+            i += 2;
+            continue;
+        }
+        if (c as char).is_ascii() && "()[]{};:,.@#?!~^&|+-*/%<>=".contains(c as char) {
+            toks.push(tok(Kind::Punct, &text[i..i + 1], line));
+            i += 1;
+            continue;
+        }
+        return Err(ParseErr::new(line, format!("unexpected character {:?}", c as char)));
+    }
+    Ok(toks)
+}
+
+/// `(width, value, flexible)` of a numeric literal; unbased-unsized
+/// literals (`'0`) and widthless decimals stretch to context.
+pub fn num_info(txt: &str) -> (Option<i64>, Option<i64>, bool) {
+    if let Some(apos) = txt.find('\'') {
+        let head = &txt[..apos];
+        let rest0 = &txt[apos + 1..];
+        let rest = rest0.trim_start_matches(['s', 'S']);
+        let first = rest.chars().next();
+        if head.is_empty() {
+            if let Some(c) = first {
+                if matches!(c, '0' | '1' | 'x' | 'X' | 'z' | 'Z') && rest.len() == 1 {
+                    let v = match c {
+                        '0' => Some(0),
+                        '1' => Some(1),
+                        _ => None,
+                    };
+                    return (None, v, true); // unbased-unsized: stretches to context
+                }
+            }
+        }
+        let base = match first {
+            Some('b') | Some('B') => 2,
+            Some('d') | Some('D') => 10,
+            Some('o') | Some('O') => 8,
+            Some('h') | Some('H') => 16,
+            _ => return (None, None, true),
+        };
+        let digits: String = rest[1..].chars().filter(|&c| c != '_').collect();
+        let val = if digits.chars().any(|c| matches!(c, 'x' | 'X' | 'z' | 'Z' | '?')) {
+            None
+        } else {
+            i64::from_str_radix(&digits, base).ok()
+        };
+        let width = if head.is_empty() {
+            None
+        } else {
+            head.replace('_', "").parse::<i64>().ok()
+        };
+        let flexible = width.is_none();
+        return (width, val, flexible);
+    }
+    (None, txt.replace('_', "").parse::<i64>().ok(), true)
+}
+
+// ---------------------------------------------------------------------------
+// parser: token stream -> module structures
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Dir {
+    Input,
+    Output,
+    Inout,
+}
+
+#[derive(Clone, Debug)]
+pub struct Port {
+    pub name: String,
+    pub dir: Option<Dir>,
+    pub rng: Option<(Vec<Tok>, Vec<Tok>)>,
+    pub line: u32,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum DeclKind {
+    Net,
+    Integer,
+    Genvar,
+}
+
+#[derive(Clone, Debug)]
+pub enum UnpackedDim {
+    Size(Vec<Tok>),
+    Range(Vec<Tok>, Vec<Tok>),
+}
+
+#[derive(Clone, Debug)]
+pub struct Decl {
+    pub name: String,
+    pub kind: DeclKind,
+    pub rng: Option<(Vec<Tok>, Vec<Tok>)>,
+    pub unpacked: Vec<UnpackedDim>,
+    pub line: u32,
+}
+
+#[derive(Clone, Debug)]
+pub enum Stmt {
+    Block(Vec<Stmt>),
+    If { cond: Vec<Tok>, then: Box<Stmt>, els: Option<Box<Stmt>>, line: u32 },
+    For { init: Box<Stmt>, cond: Vec<Tok>, step: Box<Stmt>, body: Box<Stmt>, line: u32 },
+    PAssign { lhs: Vec<Tok>, rhs: Vec<Tok>, line: u32 },
+    Expr { toks: Vec<Tok>, line: u32 },
+}
+
+#[derive(Clone, Debug)]
+pub enum Item {
+    LocalParam { name: String, toks: Vec<Tok>, line: u32 },
+    Decl { decl: Decl, init: Option<Vec<Tok>> },
+    Assign { lhs: Vec<Tok>, rhs: Vec<Tok>, line: u32 },
+    Always { sens: Vec<Tok>, stmt: Stmt },
+    GenFor { var: String, init: Vec<Tok>, cond: Vec<Tok>, step: Vec<Tok>, body: Vec<Item> },
+    GenIf { cond: Vec<Tok>, then: Vec<Item>, els: Vec<Item> },
+    Inst {
+        module: String,
+        overrides: Vec<(String, Vec<Tok>, u32)>,
+        conns: Vec<(String, Vec<Tok>, u32)>,
+        line: u32,
+    },
+}
+
+#[derive(Clone, Debug)]
+pub struct Module {
+    pub name: String,
+    pub line: u32,
+    pub params: Vec<(String, Vec<Tok>, u32)>,
+    pub ports: Vec<Port>,
+    pub items: Vec<Item>,
+}
+
+pub struct Parser {
+    toks: Vec<Tok>,
+    i: usize,
+}
+
+impl Parser {
+    pub fn new(toks: Vec<Tok>) -> Self {
+        Parser { toks, i: 0 }
+    }
+
+    fn line(&self) -> u32 {
+        if self.i < self.toks.len() {
+            self.toks[self.i].line
+        } else {
+            self.toks.last().map(|t| t.line).unwrap_or(0)
+        }
+    }
+
+    fn peek(&self) -> Tok {
+        self.toks.get(self.i).cloned().unwrap_or_else(|| eof_tok(self.line()))
+    }
+
+    fn peek_text(&self) -> String {
+        self.peek().text
+    }
+
+    fn next_tok(&mut self) -> Tok {
+        let t = self.peek();
+        self.i += 1;
+        t
+    }
+
+    fn at(&self, text: &str) -> bool {
+        let t = self.peek();
+        t.text == text && t.kind != Kind::Str
+    }
+
+    fn accept(&mut self, text: &str) -> bool {
+        if self.at(text) {
+            self.i += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect(&mut self, text: &str) -> Result<Tok, ParseErr> {
+        let t = self.next_tok();
+        if t.text != text {
+            return Err(ParseErr::new(t.line, format!("expected `{}`, found `{}`", text, t.text)));
+        }
+        Ok(t)
+    }
+
+    fn expect_id(&mut self) -> Result<Tok, ParseErr> {
+        let t = self.next_tok();
+        if t.kind != Kind::Id || is_keyword(&t.text) {
+            return Err(ParseErr::new(t.line, format!("expected identifier, found `{}`", t.text)));
+        }
+        Ok(t)
+    }
+
+    /// Collect tokens until a depth-0 stop punct; the stop is not consumed.
+    fn toks_until(&mut self, stops: &[&str]) -> Result<Vec<Tok>, ParseErr> {
+        let mut out = Vec::new();
+        let mut depth = 0i32;
+        loop {
+            let t = self.peek();
+            if t.kind == Kind::Eof {
+                return Err(ParseErr::new(t.line, format!("eof looking for one of {stops:?}")));
+            }
+            if depth == 0 && t.kind == Kind::Punct && stops.contains(&t.text.as_str()) {
+                return Ok(out);
+            }
+            if t.kind == Kind::Punct && is_open(&t.text) {
+                depth += 1;
+            } else if t.kind == Kind::Punct && is_close(&t.text) {
+                if depth == 0 {
+                    return Err(ParseErr::new(t.line, format!("unbalanced `{}`", t.text)));
+                }
+                depth -= 1;
+            }
+            out.push(self.next_tok());
+        }
+    }
+
+    /// Consume `(` ... matching `)`; return the inner tokens.
+    fn parenthesized(&mut self) -> Result<Vec<Tok>, ParseErr> {
+        self.expect("(")?;
+        let out = self.toks_until(&[")"])?;
+        self.expect(")")?;
+        Ok(out)
+    }
+
+    /// `[ msb : lsb ]` -> Some((msb, lsb)); None if absent.
+    fn packed_range(&mut self) -> Result<Option<(Vec<Tok>, Vec<Tok>)>, ParseErr> {
+        if !self.at("[") {
+            return Ok(None);
+        }
+        self.expect("[")?;
+        let msb = self.toks_until(&[":"])?;
+        self.expect(":")?;
+        let lsb = self.toks_until(&["]"])?;
+        self.expect("]")?;
+        Ok(Some((msb, lsb)))
+    }
+
+    fn unpacked_dim(&mut self) -> Result<UnpackedDim, ParseErr> {
+        self.expect("[")?;
+        let size = self.toks_until(&["]", ":"])?;
+        if self.at(":") {
+            // [0:N-1] style unpacked range — size = msb..lsb
+            self.expect(":")?;
+            let hi = self.toks_until(&["]"])?;
+            self.expect("]")?;
+            return Ok(UnpackedDim::Range(size, hi));
+        }
+        self.expect("]")?;
+        Ok(UnpackedDim::Size(size))
+    }
+
+    // -- modules --
+    pub fn parse_file(&mut self) -> Result<Vec<Module>, ParseErr> {
+        let mut mods = Vec::new();
+        while self.peek().kind != Kind::Eof {
+            if self.at("module") {
+                mods.push(self.parse_module()?);
+            } else {
+                self.next_tok(); // tolerate leading directives between modules
+            }
+        }
+        Ok(mods)
+    }
+
+    fn parse_module(&mut self) -> Result<Module, ParseErr> {
+        let ln = self.expect("module")?.line;
+        let name = self.expect_id()?.text;
+        let mut m = Module { name, line: ln, params: Vec::new(), ports: Vec::new(), items: Vec::new() };
+        if self.accept("#") {
+            self.expect("(")?;
+            while !self.at(")") {
+                self.accept("parameter");
+                while matches!(
+                    self.peek_text().as_str(),
+                    "logic" | "int" | "integer" | "bit" | "signed" | "unsigned"
+                ) {
+                    self.next_tok();
+                }
+                let name = self.expect_id()?;
+                self.expect("=")?;
+                let dflt = self.toks_until(&[",", ")"])?;
+                m.params.push((name.text, dflt, name.line));
+                if !self.accept(",") {
+                    break;
+                }
+            }
+            self.expect(")")?;
+        }
+        self.expect("(")?;
+        let mut dir: Option<Dir> = None;
+        while !self.at(")") {
+            match self.peek_text().as_str() {
+                "input" => {
+                    dir = Some(Dir::Input);
+                    self.next_tok();
+                }
+                "output" => {
+                    dir = Some(Dir::Output);
+                    self.next_tok();
+                }
+                "inout" => {
+                    dir = Some(Dir::Inout);
+                    self.next_tok();
+                }
+                _ => {}
+            }
+            while matches!(self.peek_text().as_str(), "logic" | "wire" | "reg" | "signed" | "unsigned") {
+                self.next_tok();
+            }
+            let rng = self.packed_range()?;
+            let name = self.expect_id()?;
+            m.ports.push(Port { name: name.text, dir, rng, line: name.line });
+            if !self.accept(",") {
+                break;
+            }
+        }
+        self.expect(")")?;
+        self.expect(";")?;
+        m.items = self.parse_items(&["endmodule"])?;
+        self.expect("endmodule")?;
+        Ok(m)
+    }
+
+    // -- body items --
+    fn parse_items(&mut self, terminators: &[&str]) -> Result<Vec<Item>, ParseErr> {
+        let mut items = Vec::new();
+        loop {
+            let t = self.peek();
+            if t.kind == Kind::Eof {
+                return Err(ParseErr::new(t.line, format!("eof looking for {terminators:?}")));
+            }
+            let txt = t.text.as_str();
+            if terminators.contains(&txt) {
+                return Ok(items);
+            }
+            if txt == ";" {
+                self.next_tok();
+                continue;
+            }
+            if txt == "localparam" {
+                self.next_tok();
+                while matches!(
+                    self.peek_text().as_str(),
+                    "logic" | "int" | "integer" | "bit" | "signed" | "unsigned"
+                ) {
+                    self.next_tok();
+                }
+                let name = self.expect_id()?;
+                self.expect("=")?;
+                let val = self.toks_until(&[";"])?;
+                self.expect(";")?;
+                items.push(Item::LocalParam { name: name.text, toks: val, line: name.line });
+                continue;
+            }
+            if txt == "genvar" || txt == "integer" {
+                let kind = if txt == "genvar" { DeclKind::Genvar } else { DeclKind::Integer };
+                self.next_tok();
+                loop {
+                    let name = self.expect_id()?;
+                    items.push(Item::Decl {
+                        decl: Decl {
+                            name: name.text,
+                            kind,
+                            rng: None,
+                            unpacked: Vec::new(),
+                            line: name.line,
+                        },
+                        init: None,
+                    });
+                    if !self.accept(",") {
+                        break;
+                    }
+                }
+                self.expect(";")?;
+                continue;
+            }
+            if matches!(txt, "logic" | "wire" | "reg") {
+                self.next_tok();
+                let _ = self.accept("signed") || self.accept("unsigned");
+                let rng = self.packed_range()?;
+                loop {
+                    let name = self.expect_id()?;
+                    let mut unpacked = Vec::new();
+                    while self.at("[") {
+                        unpacked.push(self.unpacked_dim()?);
+                    }
+                    let mut init = None;
+                    if self.accept("=") {
+                        init = Some(self.toks_until(&[";", ","])?);
+                    }
+                    items.push(Item::Decl {
+                        decl: Decl {
+                            name: name.text,
+                            kind: DeclKind::Net,
+                            rng: rng.clone(),
+                            unpacked,
+                            line: name.line,
+                        },
+                        init,
+                    });
+                    if !self.accept(",") {
+                        break;
+                    }
+                }
+                self.expect(";")?;
+                continue;
+            }
+            if txt == "assign" {
+                let ln0 = self.next_tok().line;
+                let lhs = self.toks_until(&["="])?;
+                self.expect("=")?;
+                let rhs = self.toks_until(&[";"])?;
+                self.expect(";")?;
+                items.push(Item::Assign { lhs, rhs, line: ln0 });
+                continue;
+            }
+            if matches!(txt, "always_ff" | "always_comb" | "always" | "always_latch") {
+                self.next_tok();
+                let mut sens = Vec::new();
+                if self.accept("@") {
+                    sens = self.parenthesized()?;
+                }
+                let stmt = self.parse_stmt()?;
+                items.push(Item::Always { sens, stmt });
+                continue;
+            }
+            if txt == "generate" {
+                self.next_tok();
+                let inner = self.parse_items(&["endgenerate"])?;
+                self.expect("endgenerate")?;
+                items.extend(inner);
+                continue;
+            }
+            if txt == "for" {
+                items.push(self.parse_gen_for()?);
+                continue;
+            }
+            if txt == "if" {
+                items.push(self.parse_gen_if()?);
+                continue;
+            }
+            if txt == "begin" {
+                self.next_tok();
+                if self.accept(":") {
+                    self.expect_id()?;
+                }
+                let inner = self.parse_items(&["end"])?;
+                self.expect("end")?;
+                items.extend(inner);
+                continue;
+            }
+            if t.kind == Kind::Id && !is_keyword(txt) {
+                items.push(self.parse_instance()?);
+                continue;
+            }
+            return Err(ParseErr::new(t.line, format!("unexpected token `{txt}` in module body")));
+        }
+    }
+
+    /// A generate construct body: `begin[:label] items end`, or one item.
+    fn gen_body(&mut self) -> Result<Vec<Item>, ParseErr> {
+        if self.at("begin") {
+            self.next_tok();
+            if self.accept(":") {
+                self.expect_id()?;
+            }
+            let inner = self.parse_items(&["end"])?;
+            self.expect("end")?;
+            return Ok(inner);
+        }
+        self.parse_items_one()
+    }
+
+    fn parse_items_one(&mut self) -> Result<Vec<Item>, ParseErr> {
+        let t = self.peek();
+        let mut items = Vec::new();
+        match t.text.as_str() {
+            "assign" => {
+                let ln = self.next_tok().line;
+                let lhs = self.toks_until(&["="])?;
+                self.expect("=")?;
+                let rhs = self.toks_until(&[";"])?;
+                self.expect(";")?;
+                items.push(Item::Assign { lhs, rhs, line: ln });
+            }
+            "for" => items.push(self.parse_gen_for()?),
+            "if" => items.push(self.parse_gen_if()?),
+            other => {
+                return Err(ParseErr::new(t.line, format!("unsupported single generate item `{other}`")))
+            }
+        }
+        Ok(items)
+    }
+
+    fn parse_gen_for(&mut self) -> Result<Item, ParseErr> {
+        let ln = self.expect("for")?.line;
+        self.expect("(")?;
+        self.accept("genvar");
+        let var = self.expect_id()?.text;
+        self.expect("=")?;
+        let init = self.toks_until(&[";"])?;
+        self.expect(";")?;
+        let cond = self.toks_until(&[";"])?;
+        self.expect(";")?;
+        let step_var = self.expect_id()?.text;
+        self.expect("=")?;
+        let step = self.toks_until(&[")"])?;
+        self.expect(")")?;
+        if step_var != var {
+            return Err(ParseErr::new(ln, "generate for must step its own genvar".into()));
+        }
+        let body = self.gen_body()?;
+        Ok(Item::GenFor { var, init, cond, step, body })
+    }
+
+    fn parse_gen_if(&mut self) -> Result<Item, ParseErr> {
+        self.expect("if")?;
+        let cond = self.parenthesized()?;
+        let then = self.gen_body()?;
+        let mut els = Vec::new();
+        if self.accept("else") {
+            if self.at("if") {
+                els = vec![self.parse_gen_if()?];
+            } else {
+                els = self.gen_body()?;
+            }
+        }
+        Ok(Item::GenIf { cond, then, els })
+    }
+
+    fn parse_instance(&mut self) -> Result<Item, ParseErr> {
+        let module = self.expect_id()?;
+        let mut overrides = Vec::new();
+        if self.accept("#") {
+            self.expect("(")?;
+            while !self.at(")") {
+                self.expect(".")?;
+                let pname = self.expect_id()?;
+                let val = self.parenthesized()?;
+                overrides.push((pname.text, val, pname.line));
+                if !self.accept(",") {
+                    break;
+                }
+            }
+            self.expect(")")?;
+        }
+        self.expect_id()?; // instance name
+        self.expect("(")?;
+        let mut conns = Vec::new();
+        while !self.at(")") {
+            self.expect(".")?;
+            let pname = self.expect_id()?;
+            let conn = self.parenthesized()?;
+            conns.push((pname.text, conn, pname.line));
+            if !self.accept(",") {
+                break;
+            }
+        }
+        self.expect(")")?;
+        self.expect(";")?;
+        Ok(Item::Inst { module: module.text, overrides, conns, line: module.line })
+    }
+
+    // -- statements (inside always) --
+    fn parse_stmt(&mut self) -> Result<Stmt, ParseErr> {
+        let t = self.peek();
+        let ln = t.line;
+        if t.text == "begin" {
+            self.next_tok();
+            if self.accept(":") {
+                self.expect_id()?;
+            }
+            let mut stmts = Vec::new();
+            while !self.at("end") {
+                if self.peek().kind == Kind::Eof {
+                    return Err(ParseErr::new(ln, "eof in begin block".into()));
+                }
+                stmts.push(self.parse_stmt()?);
+            }
+            self.expect("end")?;
+            return Ok(Stmt::Block(stmts));
+        }
+        if t.text == "if" {
+            self.next_tok();
+            let cond = self.parenthesized()?;
+            let then = Box::new(self.parse_stmt()?);
+            let mut els = None;
+            if self.accept("else") {
+                els = Some(Box::new(self.parse_stmt()?));
+            }
+            return Ok(Stmt::If { cond, then, els, line: ln });
+        }
+        if t.text == "for" {
+            self.next_tok();
+            self.expect("(")?;
+            let init_toks = self.toks_until(&[";"])?;
+            let init = Box::new(split_assign(init_toks, ln));
+            self.expect(";")?;
+            let cond = self.toks_until(&[";"])?;
+            self.expect(";")?;
+            let step_toks = self.toks_until(&[")"])?;
+            let step = Box::new(split_assign(step_toks, ln));
+            self.expect(")")?;
+            let body = Box::new(self.parse_stmt()?);
+            return Ok(Stmt::For { init, cond, step, body, line: ln });
+        }
+        let toks = self.toks_until(&[";"])?;
+        self.expect(";")?;
+        Ok(split_assign(toks, ln))
+    }
+}
+
+fn split_assign(toks: Vec<Tok>, ln: u32) -> Stmt {
+    let mut depth = 0i32;
+    for (j, t) in toks.iter().enumerate() {
+        if t.kind == Kind::Punct {
+            if is_open(&t.text) {
+                depth += 1;
+            } else if is_close(&t.text) {
+                depth -= 1;
+            } else if depth == 0 && (t.text == "<=" || t.text == "=") {
+                let lhs = toks[..j].to_vec();
+                let rhs = toks[j + 1..].to_vec();
+                return Stmt::PAssign { lhs, rhs, line: ln };
+            }
+        }
+    }
+    Stmt::Expr { toks, line: ln }
+}
+
+// ---------------------------------------------------------------------------
+// analyzer
+// ---------------------------------------------------------------------------
+
+/// Analyze every iteration of a constant generate-for up to this many.
+const GEN_UNROLL_CAP: usize = 65536;
+/// Beyond the cap: analyze the first/last this many iterations.
+const GEN_SAMPLE: usize = 512;
+/// Hard stop for runaway constant loops.
+const LOOP_GUARD: usize = 1 << 21;
+
+#[derive(Clone, PartialEq, Eq, Debug)]
+enum Rng {
+    /// No packed range: a 1-bit scalar.
+    Scalar,
+    /// A range whose bounds did not constant-fold.
+    Unknown,
+    /// Parameters have no intrinsic packed width.
+    Param,
+    /// Constant (lo, hi) bit bounds.
+    Bits(i64, i64),
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum SymKind {
+    Port,
+    Param,
+    Net,
+    Integer,
+    Genvar,
+}
+
+#[derive(Clone, Debug)]
+struct Sym {
+    kind: SymKind,
+    dir: Option<Dir>,
+    rng: Rng,
+    unpacked: Vec<Option<i64>>,
+    refs: u32,
+    /// (site id, constant driven (lo, hi) range if any, line)
+    drivers: Vec<(u32, Option<(i64, i64)>, u32)>,
+    gen_scoped: bool,
+    line: u32,
+}
+
+impl Sym {
+    fn new(kind: SymKind, rng: Rng, line: u32) -> Self {
+        Sym {
+            kind,
+            dir: None,
+            rng,
+            unpacked: Vec::new(),
+            refs: 0,
+            drivers: Vec::new(),
+            gen_scoped: false,
+            line,
+        }
+    }
+}
+
+/// Constant value / width / flexibility of an expression, where derivable.
+#[derive(Clone, Copy, Debug)]
+struct ExprInfo {
+    val: Option<i64>,
+    width: Option<i64>,
+    flexible: bool,
+}
+
+impl ExprInfo {
+    fn unknown() -> Self {
+        ExprInfo { val: None, width: None, flexible: false }
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum SelKind {
+    Index,
+    Range,
+    Plus,
+    Minus,
+}
+
+fn split_top(toks: &[Tok], sep: &str) -> Vec<Vec<Tok>> {
+    let mut out = Vec::new();
+    let mut cur = Vec::new();
+    let mut depth = 0i32;
+    for t in toks {
+        if t.kind == Kind::Punct {
+            if is_open(&t.text) {
+                depth += 1;
+            } else if is_close(&t.text) {
+                depth -= 1;
+            } else if t.text == sep && depth == 0 {
+                out.push(std::mem::take(&mut cur));
+                continue;
+            }
+        }
+        cur.push(t.clone());
+    }
+    out.push(cur);
+    out
+}
+
+/// Classify one select group: index/range/plus/minus + part expressions.
+fn split_sel(toks: &[Tok]) -> (SelKind, Vec<Vec<Tok>>) {
+    let mut depth = 0i32;
+    for (j, t) in toks.iter().enumerate() {
+        if t.kind == Kind::Punct {
+            if is_open(&t.text) {
+                depth += 1;
+            } else if is_close(&t.text) {
+                depth -= 1;
+            } else if depth == 0 && t.text == "+:" {
+                return (SelKind::Plus, vec![toks[..j].to_vec(), toks[j + 1..].to_vec()]);
+            } else if depth == 0 && t.text == "-:" {
+                return (SelKind::Minus, vec![toks[..j].to_vec(), toks[j + 1..].to_vec()]);
+            } else if depth == 0 && t.text == ":" {
+                return (SelKind::Range, vec![toks[..j].to_vec(), toks[j + 1..].to_vec()]);
+            }
+        }
+    }
+    (SelKind::Index, vec![toks.to_vec()])
+}
+
+struct ModAnalyzer {
+    file: String,
+    env: Env,
+    syms: BTreeMap<String, Sym>,
+    genvars: HashSet<String>,
+    next_site: u32,
+    diags: Vec<Diagnostic>,
+    lhs_info: Option<ExprInfo>,
+}
+
+impl ModAnalyzer {
+    fn new(file: &str) -> Self {
+        ModAnalyzer {
+            file: file.to_string(),
+            env: Env::new(),
+            syms: BTreeMap::new(),
+            genvars: HashSet::new(),
+            next_site: 0,
+            diags: Vec::new(),
+            lhs_info: None,
+        }
+    }
+
+    fn diag(&mut self, code: &str, line: u32, msg: String) {
+        self.diags.push(Diagnostic::new(code, &self.file, line, msg));
+    }
+
+    fn site(&mut self) -> u32 {
+        self.next_site += 1;
+        self.next_site
+    }
+
+    fn add_sym(&mut self, name: &str, sym: Sym, line: u32) -> bool {
+        if self.syms.contains_key(name) {
+            self.diag("MC010", line, format!("duplicate declaration of `{name}`"));
+            false
+        } else {
+            self.syms.insert(name.to_string(), sym);
+            true
+        }
+    }
+
+    // -- setup: params, localparams, symbols --
+    fn run(&mut self, m: &Module, mtab: &BTreeMap<String, Module>) {
+        let empty = Env::new();
+        for (name, toks, _ln) in &m.params {
+            let v = self.const_eval(toks, &empty);
+            self.env.insert(name.clone(), v);
+        }
+        for it in &m.items {
+            if let Item::LocalParam { name, toks, .. } = it {
+                let v = self.const_eval(toks, &empty);
+                self.env.insert(name.clone(), v);
+            }
+        }
+
+        for p in &m.ports {
+            let rng = self.eval_range(p.rng.as_ref());
+            let mut s = Sym::new(SymKind::Port, rng, p.line);
+            s.dir = p.dir;
+            let inserted = self.add_sym(&p.name, s, p.line);
+            if inserted && p.dir == Some(Dir::Input) {
+                let site = self.site();
+                if let Some(s) = self.syms.get_mut(&p.name) {
+                    s.drivers.push((site, None, p.line));
+                }
+            }
+        }
+        for (name, _toks, ln) in &m.params {
+            let name = name.clone();
+            self.add_sym(&name, Sym::new(SymKind::Param, Rng::Param, *ln), *ln);
+        }
+        self.collect_syms(&m.items, false);
+
+        // walk
+        let genv = Env::new();
+        self.walk_items(&m.items, &genv, mtab);
+
+        // MC005: multiply-driven
+        let mut mc005 = Vec::new();
+        for (name, s) in &self.syms {
+            if matches!(s.kind, SymKind::Genvar | SymKind::Integer | SymKind::Param) {
+                continue;
+            }
+            if s.gen_scoped {
+                continue; // per-iteration nets: each elaborated copy has one driver
+            }
+            if s.drivers.len() > 1 {
+                if s.drivers.iter().all(|d| d.1.is_some()) {
+                    let mut spans: Vec<(i64, i64)> =
+                        s.drivers.iter().map(|d| d.1.unwrap()).collect();
+                    spans.sort_unstable();
+                    let overlap = spans.windows(2).any(|w| w[0].1 >= w[1].0);
+                    if !overlap {
+                        continue;
+                    }
+                }
+                let sites: HashSet<u32> = s.drivers.iter().map(|d| d.0).collect();
+                if sites.len() > 1 {
+                    mc005.push((name.clone(), sites.len(), s.drivers[1].2));
+                }
+            }
+        }
+        for (name, n, ln) in mc005 {
+            self.diag("MC005", ln, format!("`{name}` driven from {n} sites"));
+        }
+        // MC006: declared but never referenced
+        let mut mc006 = Vec::new();
+        for (name, s) in &self.syms {
+            if s.dir.is_some() || matches!(s.kind, SymKind::Param | SymKind::Genvar) {
+                continue;
+            }
+            if s.refs == 0 && s.drivers.is_empty() {
+                mc006.push((name.clone(), s.line));
+            }
+        }
+        for (name, ln) in mc006 {
+            self.diag("MC006", ln, format!("`{name}` is never referenced"));
+        }
+    }
+
+    fn collect_syms(&mut self, items: &[Item], gen_scoped: bool) {
+        let empty = Env::new();
+        for it in items {
+            match it {
+                Item::LocalParam { name, line, .. } => {
+                    let name = name.clone();
+                    self.add_sym(&name, Sym::new(SymKind::Param, Rng::Param, *line), *line);
+                }
+                Item::Decl { decl: d, .. } => {
+                    if gen_scoped && self.syms.contains_key(&d.name) {
+                        continue; // replicated per generate iteration/branch
+                    }
+                    let mut sizes = Vec::new();
+                    for dim in &d.unpacked {
+                        match dim {
+                            UnpackedDim::Size(a) => sizes.push(self.const_eval(a, &empty)),
+                            UnpackedDim::Range(a, b) => {
+                                let lo = self.const_eval(a, &empty);
+                                let hi = self.const_eval(b, &empty);
+                                sizes.push(match (lo, hi) {
+                                    (Some(lo), Some(hi)) => Some(hi - lo + 1),
+                                    _ => None,
+                                });
+                            }
+                        }
+                    }
+                    let kind = match d.kind {
+                        DeclKind::Net => SymKind::Net,
+                        DeclKind::Integer => SymKind::Integer,
+                        DeclKind::Genvar => SymKind::Genvar,
+                    };
+                    let rng = self.eval_range(d.rng.as_ref());
+                    let mut s = Sym::new(kind, rng, d.line);
+                    s.unpacked = sizes;
+                    s.gen_scoped = gen_scoped;
+                    self.add_sym(&d.name, s, d.line);
+                    if d.kind == DeclKind::Genvar {
+                        self.genvars.insert(d.name.clone());
+                    }
+                }
+                Item::GenFor { body, .. } => self.collect_syms(body, true),
+                Item::GenIf { cond, then, els } => {
+                    let c = self.const_eval(cond, &empty);
+                    match c {
+                        None => {
+                            self.collect_syms(then, true);
+                            self.collect_syms(els, true);
+                        }
+                        Some(c) if c != 0 => self.collect_syms(then, true),
+                        Some(_) => self.collect_syms(els, true),
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+
+    fn eval_range(&mut self, rng: Option<&(Vec<Tok>, Vec<Tok>)>) -> Rng {
+        let empty = Env::new();
+        match rng {
+            None => Rng::Scalar,
+            Some((msb_toks, lsb_toks)) => {
+                let msb = self.const_eval(msb_toks, &empty);
+                let lsb = self.const_eval(lsb_toks, &empty);
+                match (msb, lsb) {
+                    (Some(m), Some(l)) => Rng::Bits(m.min(l), m.max(l)),
+                    _ => Rng::Unknown,
+                }
+            }
+        }
+    }
+
+    // -- item walking --
+    fn walk_items(&mut self, items: &[Item], genv: &Env, mtab: &BTreeMap<String, Module>) {
+        for it in items {
+            match it {
+                Item::LocalParam { .. } => {}
+                Item::Decl { decl: d, init } => {
+                    if let Some(init) = init {
+                        self.scan_expr(init, genv, d.line);
+                        let site = self.site();
+                        if let Some(s) = self.syms.get_mut(&d.name) {
+                            s.drivers.push((site, None, d.line));
+                        }
+                    }
+                }
+                Item::Assign { lhs, rhs, line } => {
+                    let site = self.site();
+                    self.drive_lhs(lhs, genv, *line, site);
+                    self.scan_expr(rhs, genv, *line);
+                }
+                Item::Always { sens, stmt } => {
+                    self.scan_sensitivity(sens);
+                    let site = self.site();
+                    self.walk_stmt(stmt, genv, site);
+                }
+                Item::GenFor { var, init, cond, step, body } => {
+                    self.walk_gen_for(var, init, cond, step, body, genv, mtab);
+                }
+                Item::GenIf { cond, then, els } => {
+                    let c = self.const_eval(cond, genv);
+                    match c {
+                        None => {
+                            // non-elaborable condition: walk both branches
+                            self.walk_items(then, genv, mtab);
+                            self.walk_items(els, genv, mtab);
+                        }
+                        Some(c) if c != 0 => self.walk_items(then, genv, mtab),
+                        Some(_) => self.walk_items(els, genv, mtab),
+                    }
+                }
+                Item::Inst { module, overrides, conns, line } => {
+                    self.walk_inst(module, overrides, conns, *line, genv, mtab);
+                }
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn walk_gen_for(
+        &mut self,
+        var: &str,
+        init: &[Tok],
+        cond: &[Tok],
+        step: &[Tok],
+        body: &[Item],
+        genv: &Env,
+        mtab: &BTreeMap<String, Module>,
+    ) {
+        let v0 = self.const_eval(init, genv);
+        let v0 = match v0 {
+            None => {
+                let mut genv2 = genv.clone();
+                genv2.insert(var.to_string(), None);
+                self.walk_items(body, &genv2, mtab);
+                return;
+            }
+            Some(v) => v,
+        };
+        // count iterations first to decide sampling
+        let mut vals = Vec::new();
+        let mut x = v0;
+        let mut guard = 0usize;
+        loop {
+            let mut genv2 = genv.clone();
+            genv2.insert(var.to_string(), Some(x));
+            let c = self.const_eval(cond, &genv2);
+            match c {
+                None | Some(0) => break,
+                _ => {}
+            }
+            vals.push(x);
+            let x2 = self.const_eval(step, &genv2);
+            match x2 {
+                None => break,
+                Some(x2) if x2 == x => break,
+                Some(x2) => x = x2,
+            }
+            guard += 1;
+            if guard > LOOP_GUARD {
+                break;
+            }
+        }
+        let sample: Vec<i64> = if vals.len() > GEN_UNROLL_CAP {
+            let mut s = vals[..GEN_SAMPLE].to_vec();
+            s.extend_from_slice(&vals[vals.len() - GEN_SAMPLE..]);
+            s
+        } else {
+            vals
+        };
+        for x in sample {
+            let mut genv2 = genv.clone();
+            genv2.insert(var.to_string(), Some(x));
+            self.walk_items(body, &genv2, mtab);
+        }
+    }
+
+    fn scan_sensitivity(&mut self, sens: &[Tok]) {
+        for t in sens {
+            if t.kind == Kind::Id && !is_keyword(&t.text) {
+                let name = t.text.clone();
+                self.ref_read(&name, t.line);
+            }
+        }
+    }
+
+    fn walk_stmt(&mut self, stmt: &Stmt, genv: &Env, site: u32) {
+        match stmt {
+            Stmt::Block(stmts) => {
+                for s in stmts {
+                    self.walk_stmt(s, genv, site);
+                }
+            }
+            Stmt::If { cond, then, els, line } => {
+                self.scan_expr(cond, genv, *line);
+                self.walk_stmt(then, genv, site);
+                if let Some(els) = els {
+                    self.walk_stmt(els, genv, site);
+                }
+            }
+            Stmt::For { init, cond, step, body, line } => {
+                for sub in [init.as_ref(), step.as_ref()] {
+                    if let Stmt::PAssign { lhs, rhs, line } = sub {
+                        self.drive_lhs(lhs, genv, *line, site);
+                        self.scan_expr(rhs, genv, *line);
+                    }
+                }
+                self.scan_expr(cond, genv, *line);
+                self.walk_stmt(body, genv, site);
+            }
+            Stmt::PAssign { lhs, rhs, line } => {
+                self.drive_lhs(lhs, genv, *line, site);
+                self.scan_expr(rhs, genv, *line);
+            }
+            Stmt::Expr { toks, line } => {
+                self.scan_expr(toks, genv, *line);
+            }
+        }
+    }
+
+    // -- instances --
+    fn walk_inst(
+        &mut self,
+        modname: &str,
+        overrides: &[(String, Vec<Tok>, u32)],
+        conns: &[(String, Vec<Tok>, u32)],
+        ln: u32,
+        genv: &Env,
+        mtab: &BTreeMap<String, Module>,
+    ) {
+        let target = mtab.get(modname);
+        if target.is_none() {
+            self.diag("MC007", ln, format!("instantiation of unknown module `{modname}`"));
+        }
+        // parameter env of the instantiated module
+        let mut tenv = Env::new();
+        match target {
+            Some(t) => {
+                let pnames: HashSet<&str> = t.params.iter().map(|p| p.0.as_str()).collect();
+                let mut over: Env = Env::new();
+                for (pname, vtoks, pln) in overrides {
+                    if !pnames.contains(pname.as_str()) {
+                        self.diag("MC008", *pln, format!("`{modname}` has no parameter `{pname}`"));
+                    }
+                    let v = self.const_eval(vtoks, genv);
+                    over.insert(pname.clone(), v);
+                    self.scan_expr(vtoks, genv, *pln);
+                }
+                for (pname, dflt, _pln) in &t.params {
+                    let v = match over.get(pname) {
+                        Some(v) => *v,
+                        None => const_eval_in(dflt, &tenv),
+                    };
+                    tenv.insert(pname.clone(), v);
+                }
+                for jt in &t.items {
+                    if let Item::LocalParam { name, toks, .. } = jt {
+                        let v = const_eval_in(toks, &tenv);
+                        tenv.insert(name.clone(), v);
+                    }
+                }
+            }
+            None => {
+                for (_pname, vtoks, pln) in overrides {
+                    self.scan_expr(vtoks, genv, *pln);
+                }
+            }
+        }
+        for (pname, conn, pln) in conns {
+            let fp: Option<&Port> =
+                target.and_then(|t| t.ports.iter().find(|p| p.name == *pname));
+            if target.is_some() && fp.is_none() {
+                self.diag("MC008", *pln, format!("`{modname}` has no port `{pname}`"));
+            }
+            if conn.is_empty() {
+                continue; // explicitly unconnected: .out_exp()
+            }
+            let drives = matches!(fp, Some(p) if p.dir == Some(Dir::Output));
+            let info = if drives {
+                let site = self.site();
+                self.drive_lhs(conn, genv, *pln, site);
+                self.lhs_info
+            } else {
+                Some(self.scan_expr(conn, genv, *pln))
+            };
+            self.check_conn_width(modname, pname, fp, &tenv, info, *pln);
+        }
+    }
+
+    fn check_conn_width(
+        &mut self,
+        modname: &str,
+        pname: &str,
+        fp: Option<&Port>,
+        tenv: &Env,
+        info: Option<ExprInfo>,
+        ln: u32,
+    ) {
+        let (fp, info) = match (fp, info) {
+            (Some(fp), Some(info)) => (fp, info),
+            _ => return,
+        };
+        let formal = match &fp.rng {
+            None => 1,
+            Some((msb_toks, lsb_toks)) => {
+                let msb = const_eval_in(msb_toks, tenv);
+                let lsb = const_eval_in(lsb_toks, tenv);
+                match (msb, lsb) {
+                    (Some(m), Some(l)) => (m - l).abs() + 1,
+                    _ => return,
+                }
+            }
+        };
+        if info.flexible || info.width.is_none() {
+            return;
+        }
+        let w = info.width.unwrap();
+        if w != formal {
+            self.diag(
+                "MC004",
+                ln,
+                format!("port `{pname}` of `{modname}` is {formal} bits but connection is {w} bits"),
+            );
+        }
+    }
+
+    // -- reference bookkeeping --
+    fn ref_read(&mut self, name: &str, ln: u32) {
+        if let Some(s) = self.syms.get_mut(name) {
+            s.refs += 1;
+            return;
+        }
+        if self.env.contains_key(name) || self.genvars.contains(name) {
+            return;
+        }
+        self.diag("MC001", ln, format!("`{name}` is not declared"));
+    }
+
+    /// LHS of an assignment / output-port connection.
+    fn drive_lhs(&mut self, toks: &[Tok], genv: &Env, ln: u32, site: u32) {
+        self.lhs_info = None;
+        if toks.is_empty() {
+            return;
+        }
+        if toks[0].kind == Kind::Punct && toks[0].text == "{" {
+            // concat LHS: drive each element
+            let inner: &[Tok] = if toks.len() > 1 { &toks[1..toks.len() - 1] } else { &[] };
+            for part in split_top(inner, ",") {
+                self.drive_lhs(&part, genv, ln, site);
+            }
+            self.lhs_info = None;
+            return;
+        }
+        let t0 = toks[0].clone();
+        if t0.kind != Kind::Id || is_keyword(&t0.text) {
+            self.scan_expr(toks, genv, ln);
+            return;
+        }
+        let name = t0.text;
+        let (srng, sunpacked, skind) = match self.syms.get(&name) {
+            None => {
+                if !self.genvars.contains(&name) && !self.env.contains_key(&name) {
+                    self.diag("MC001", t0.line, format!("`{name}` is not declared"));
+                }
+                // genvar loop index: not a driver site
+                if toks.len() > 1 {
+                    self.scan_expr(toks, genv, ln);
+                }
+                return;
+            }
+            Some(s) => (s.rng.clone(), s.unpacked.clone(), s.kind),
+        };
+        // parse trailing selects: reads for the index exprs + bounds checks
+        let rng = self.check_selects(&srng, &sunpacked, &name, &toks[1..], genv, ln);
+        if matches!(skind, SymKind::Genvar | SymKind::Integer) {
+            return;
+        }
+        if let Some(s) = self.syms.get_mut(&name) {
+            s.drivers.push((site, rng, ln));
+        }
+        let mut w = None;
+        if let Some((lo, hi)) = rng {
+            w = Some(hi - lo + 1);
+        } else if toks.len() == 1 {
+            match &srng {
+                Rng::Scalar if sunpacked.is_empty() => w = Some(1),
+                Rng::Bits(lo, hi) if sunpacked.is_empty() => w = Some(hi - lo + 1),
+                _ => {}
+            }
+        }
+        self.lhs_info = Some(ExprInfo { val: None, width: w, flexible: false });
+    }
+
+    /// Walk `[...]` select groups after an identifier; returns the final
+    /// constant (lo, hi) bit range into the packed vector, if known.
+    #[allow(clippy::too_many_arguments)]
+    fn check_selects(
+        &mut self,
+        srng: &Rng,
+        sunpacked: &[Option<i64>],
+        name: &str,
+        sel_toks: &[Tok],
+        genv: &Env,
+        ln: u32,
+    ) -> Option<(i64, i64)> {
+        let mut groups: Vec<Vec<Tok>> = Vec::new();
+        let mut i = 0usize;
+        while i < sel_toks.len() {
+            if sel_toks[i].text != "[" {
+                // stray tokens after selects: scan conservatively
+                self.scan_expr(&sel_toks[i..], genv, ln);
+                break;
+            }
+            let mut depth = 1i32;
+            let mut j = i + 1;
+            while j < sel_toks.len() && depth > 0 {
+                let t = &sel_toks[j];
+                if t.kind == Kind::Punct {
+                    if is_open(&t.text) {
+                        depth += 1;
+                    } else if is_close(&t.text) {
+                        depth -= 1;
+                    }
+                }
+                j += 1;
+            }
+            let hi = if j > i + 1 { j - 1 } else { i + 1 };
+            groups.push(sel_toks[i + 1..hi].to_vec());
+            i = j;
+        }
+        let mut unpacked_left: Vec<Option<i64>> = sunpacked.to_vec();
+        let mut final_rng: Option<(i64, i64)> = None;
+        let mut cur_rng: Rng = srng.clone();
+        for g in &groups {
+            let (kind, exprs) = split_sel(g);
+            for p in &exprs {
+                self.scan_expr(p, genv, ln);
+            }
+            let vals: Vec<Option<i64>> = exprs.iter().map(|e| self.const_eval(e, genv)).collect();
+            if !unpacked_left.is_empty() {
+                let size = unpacked_left.remove(0);
+                if kind == SelKind::Index {
+                    if let (Some(v), Some(sz)) = (vals[0], size) {
+                        if !(0 <= v && v < sz) {
+                            self.diag(
+                                "MC003",
+                                ln,
+                                format!("`{name}` index {v} outside [0:{}]", sz - 1),
+                            );
+                        }
+                    }
+                } else {
+                    self.diag("MC003", ln, format!("part-select on unpacked dimension of `{name}`"));
+                }
+                continue;
+            }
+            if matches!(cur_rng, Rng::Unknown | Rng::Param) {
+                continue;
+            }
+            let (lo, hi) = match cur_rng {
+                Rng::Scalar => (0, 0),
+                Rng::Bits(l, h) => (l, h),
+                _ => unreachable!(),
+            };
+            match kind {
+                SelKind::Index => {
+                    if let Some(v) = vals[0] {
+                        if !(lo <= v && v <= hi) {
+                            self.diag("MC003", ln, format!("`{name}[{v}]` outside [{hi}:{lo}]"));
+                        }
+                        final_rng = Some((v, v));
+                    }
+                    cur_rng = Rng::Scalar; // further selects treated as 1-bit
+                }
+                SelKind::Range => {
+                    if let (Some(a), Some(b)) = (vals[0], vals[1]) {
+                        if a < b {
+                            self.diag("MC002", ln, format!("reversed part-select `{name}[{a}:{b}]`"));
+                        } else if !(lo <= b && a <= hi) {
+                            self.diag(
+                                "MC003",
+                                ln,
+                                format!("`{name}[{a}:{b}]` outside [{hi}:{lo}]"),
+                            );
+                        } else {
+                            final_rng = Some((b, a));
+                        }
+                    }
+                }
+                SelKind::Plus => {
+                    let (base, w) = (vals[0], vals[1]);
+                    if let Some(w) = w {
+                        if w <= 0 {
+                            self.diag("MC002", ln, format!("empty `+:` width {w} on `{name}`"));
+                            continue;
+                        }
+                    }
+                    if let (Some(base), Some(w)) = (base, w) {
+                        if !(lo <= base && base + w - 1 <= hi) {
+                            self.diag(
+                                "MC003",
+                                ln,
+                                format!("`{name}[{base} +: {w}]` outside [{hi}:{lo}]"),
+                            );
+                        } else {
+                            final_rng = Some((base, base + w - 1));
+                        }
+                    }
+                }
+                SelKind::Minus => {
+                    let (base, w) = (vals[0], vals[1]);
+                    if let Some(w) = w {
+                        if w <= 0 {
+                            self.diag("MC002", ln, format!("empty `-:` width {w} on `{name}`"));
+                            continue;
+                        }
+                    }
+                    if let (Some(base), Some(w)) = (base, w) {
+                        if !(lo <= base - w + 1 && base <= hi) {
+                            self.diag(
+                                "MC003",
+                                ln,
+                                format!("`{name}[{base} -: {w}]` outside [{hi}:{lo}]"),
+                            );
+                        } else {
+                            final_rng = Some((base - w + 1, base));
+                        }
+                    }
+                }
+            }
+        }
+        final_rng
+    }
+
+    // -- expressions --
+    /// Scan an expression: record reads, run select checks, and return
+    /// the constant value / width / flexibility when derivable.
+    fn scan_expr(&mut self, toks: &[Tok], genv: &Env, ln: u32) -> ExprInfo {
+        let mut p = Ep { an: Some(self), toks, env: genv, ln, silent: false, i: 0 };
+        match p.expr() {
+            Ok(info) => info,
+            Err(_) => ExprInfo::unknown(),
+        }
+    }
+
+    /// Constant evaluation must not double-report: diagnostics and ref
+    /// counting happen in scan; here we evaluate silently.
+    fn const_eval(&mut self, toks: &[Tok], genv: &Env) -> Option<i64> {
+        let saved = self.diags.len();
+        let r = {
+            let mut p = Ep { an: Some(self), toks, env: genv, ln: 0, silent: true, i: 0 };
+            match p.expr() {
+                Ok(info) => info.val,
+                Err(_) => None,
+            }
+        };
+        self.diags.truncate(saved);
+        r
+    }
+}
+
+/// Evaluate with a plain env only (no module symbols).
+fn const_eval_in(toks: &[Tok], env: &Env) -> Option<i64> {
+    let mut p = Ep { an: None, toks, env, ln: 0, silent: true, i: 0 };
+    match p.expr() {
+        Ok(info) => info.val,
+        Err(_) => None,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// expression evaluator
+// ---------------------------------------------------------------------------
+
+/// Unevaluable expression (out of the supported subset).
+struct Bail;
+
+/// Pratt-style expression parser: records reads + select checks via the
+/// owning `ModAnalyzer` (unless silent) and computes constant value /
+/// width / flexibility where derivable.
+struct Ep<'a, 'e> {
+    an: Option<&'a mut ModAnalyzer>,
+    toks: &'e [Tok],
+    env: &'e Env,
+    ln: u32,
+    silent: bool,
+    i: usize,
+}
+
+const LEVELS: &[&[&str]] = &[
+    &["||"],
+    &["&&"],
+    &["|"],
+    &["^"],
+    &["&"],
+    &["==", "!="],
+    &["<", ">", "<=", ">="],
+    &["<<", ">>"],
+    &["+", "-"],
+    &["*", "/", "%"],
+];
+
+impl Ep<'_, '_> {
+    fn peek(&self) -> Tok {
+        self.toks.get(self.i).cloned().unwrap_or_else(|| eof_tok(self.ln))
+    }
+
+    fn next_tok(&mut self) -> Tok {
+        let t = self.peek();
+        self.i += 1;
+        t
+    }
+
+    fn at(&self, txt: &str) -> bool {
+        let t = self.peek();
+        t.kind == Kind::Punct && t.text == txt
+    }
+
+    fn expr(&mut self) -> Result<ExprInfo, Bail> {
+        let mut info = self.ternary()?;
+        // trailing junk is tolerated (scanned conservatively)
+        while self.peek().kind != Kind::Eof {
+            let t = self.next_tok();
+            if t.kind == Kind::Id && !is_keyword(&t.text) {
+                self.read(&t.text, t.line);
+            }
+            info = ExprInfo::unknown();
+        }
+        Ok(info)
+    }
+
+    fn read(&mut self, name: &str, ln: u32) {
+        if self.silent {
+            return;
+        }
+        if let Some(an) = self.an.as_deref_mut() {
+            an.ref_read(name, ln);
+        }
+    }
+
+    fn lookup(&self, name: &str) -> Option<i64> {
+        if let Some(v) = self.env.get(name) {
+            return *v;
+        }
+        if let Some(an) = self.an.as_deref() {
+            if let Some(v) = an.env.get(name) {
+                return *v;
+            }
+        }
+        None
+    }
+
+    fn ternary(&mut self) -> Result<ExprInfo, Bail> {
+        let c = self.binary(0)?;
+        if self.at("?") {
+            self.next_tok();
+            let a = self.ternary()?;
+            if self.at(":") {
+                self.next_tok();
+            }
+            let b = self.ternary()?;
+            if let Some(cv) = c.val {
+                return Ok(if cv != 0 { a } else { b });
+            }
+            let w = if a.width == b.width { a.width } else { None };
+            return Ok(ExprInfo { val: None, width: w, flexible: a.flexible && b.flexible });
+        }
+        Ok(c)
+    }
+
+    fn binary(&mut self, lvl: usize) -> Result<ExprInfo, Bail> {
+        if lvl >= LEVELS.len() {
+            return self.unary();
+        }
+        let ops = LEVELS[lvl];
+        let mut left = self.binary(lvl + 1)?;
+        loop {
+            let t = self.peek();
+            if t.kind == Kind::Punct && ops.contains(&t.text.as_str()) {
+                let op = self.next_tok().text;
+                let right = self.binary(lvl + 1)?;
+                left = apply(&op, left, right);
+            } else {
+                return Ok(left);
+            }
+        }
+    }
+
+    fn unary(&mut self) -> Result<ExprInfo, Bail> {
+        let t = self.peek();
+        if t.kind == Kind::Punct && matches!(t.text.as_str(), "!" | "~" | "-" | "+" | "&" | "|" | "^")
+        {
+            let op = self.next_tok().text;
+            let a = self.unary()?;
+            let av = match a.val {
+                None => return Ok(ExprInfo::unknown()),
+                Some(v) => v,
+            };
+            let v: Option<i64> = match op.as_str() {
+                "!" => Some((av == 0) as i64),
+                "~" => Some(!av),
+                "-" => av.checked_neg(),
+                "+" => Some(av),
+                // approximate reductions
+                "&" => Some((av != 0) as i64),
+                "|" => Some((av != 0) as i64),
+                _ => None, // "^"
+            };
+            return Ok(match v {
+                Some(v) => ExprInfo { val: Some(v), width: None, flexible: false },
+                None => ExprInfo::unknown(),
+            });
+        }
+        self.primary()
+    }
+
+    fn primary(&mut self) -> Result<ExprInfo, Bail> {
+        let t = self.next_tok();
+        let ln = t.line;
+        if t.kind == Kind::Num {
+            let (w, v, flex) = num_info(&t.text);
+            return Ok(ExprInfo { val: v, width: w, flexible: flex });
+        }
+        if t.kind == Kind::Sys {
+            // $clog2(expr) and friends
+            if self.at("(") {
+                self.next_tok();
+                let mut depth = 1i32;
+                let mut inner = Vec::new();
+                while depth > 0 {
+                    let u = self.next_tok();
+                    if u.kind == Kind::Eof {
+                        return Err(Bail);
+                    }
+                    if u.kind == Kind::Punct && u.text == "(" {
+                        depth += 1;
+                    } else if u.kind == Kind::Punct && u.text == ")" {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    inner.push(u);
+                }
+                let a = {
+                    let mut sub = Ep {
+                        an: self.an.as_deref_mut(),
+                        toks: &inner,
+                        env: self.env,
+                        ln,
+                        silent: self.silent,
+                        i: 0,
+                    };
+                    sub.expr()?
+                };
+                if t.text == "$clog2" {
+                    if let Some(v) = a.val {
+                        if v >= 0 {
+                            return Ok(ExprInfo { val: Some(clog2(v)), width: None, flexible: true });
+                        }
+                    }
+                }
+                return Ok(ExprInfo::unknown());
+            }
+            return Ok(ExprInfo::unknown());
+        }
+        if t.kind == Kind::Punct && t.text == "(" {
+            let inner = self.balanced_until(")")?;
+            let mut sub = Ep {
+                an: self.an.as_deref_mut(),
+                toks: &inner,
+                env: self.env,
+                ln,
+                silent: self.silent,
+                i: 0,
+            };
+            return sub.ternary_all();
+        }
+        if t.kind == Kind::Punct && t.text == "{" {
+            let inner = self.balanced_until("}")?;
+            return self.concat(&inner, ln);
+        }
+        if t.kind == Kind::Id && !is_keyword(&t.text) {
+            self.read(&t.text, ln);
+            let v = self.lookup(&t.text);
+            // trailing selects
+            let mut sel: Vec<Vec<Tok>> = Vec::new();
+            while self.at("[") {
+                self.next_tok();
+                sel.push(self.balanced_until("]")?);
+            }
+            if !sel.is_empty() {
+                return self.select_info(&t.text, &sel, ln);
+            }
+            let mut width = None;
+            if let Some(an) = self.an.as_deref() {
+                if let Some(s) = an.syms.get(&t.text) {
+                    if s.unpacked.is_empty() {
+                        match s.rng {
+                            Rng::Scalar => width = Some(1),
+                            Rng::Bits(lo, hi) => width = Some(hi - lo + 1),
+                            _ => {}
+                        }
+                    }
+                }
+            }
+            if let Some(v) = v {
+                return Ok(ExprInfo { val: Some(v), width, flexible: width.is_none() });
+            }
+            return Ok(ExprInfo { val: None, width, flexible: false });
+        }
+        Err(Bail)
+    }
+
+    fn ternary_all(&mut self) -> Result<ExprInfo, Bail> {
+        let info = self.ternary()?;
+        if self.peek().kind != Kind::Eof {
+            while self.peek().kind != Kind::Eof {
+                let t = self.next_tok();
+                if t.kind == Kind::Id && !is_keyword(&t.text) {
+                    self.read(&t.text, t.line);
+                }
+            }
+            return Ok(ExprInfo::unknown());
+        }
+        Ok(info)
+    }
+
+    fn balanced_until(&mut self, close: &str) -> Result<Vec<Tok>, Bail> {
+        let mut depth = 1i32;
+        let mut out = Vec::new();
+        loop {
+            let t = self.next_tok();
+            if t.kind == Kind::Eof {
+                return Err(Bail);
+            }
+            if t.kind == Kind::Punct {
+                if is_open(&t.text) {
+                    depth += 1;
+                } else if is_close(&t.text) {
+                    depth -= 1;
+                    if depth == 0 {
+                        debug_assert_eq!(t.text, close);
+                        break;
+                    }
+                }
+            }
+            out.push(t);
+        }
+        Ok(out)
+    }
+
+    /// Identifier followed by select groups: run the analyzer's bounds
+    /// checks and derive the selected width.
+    fn select_info(&mut self, name: &str, sel_groups: &[Vec<Tok>], ln: u32) -> Result<ExprInfo, Bail> {
+        if self.silent {
+            return Ok(ExprInfo::unknown());
+        }
+        let env = self.env;
+        let an = match self.an.as_deref_mut() {
+            Some(a) => a,
+            None => return Ok(ExprInfo::unknown()),
+        };
+        let (srng, sunpacked) = match an.syms.get(name) {
+            // undeclared already reported by self.read
+            None => return Ok(ExprInfo::unknown()),
+            Some(s) => (s.rng.clone(), s.unpacked.clone()),
+        };
+        let mut flat: Vec<Tok> = Vec::new();
+        for g in sel_groups {
+            flat.push(tok(Kind::Punct, "[", ln));
+            flat.extend(g.iter().cloned());
+            flat.push(tok(Kind::Punct, "]", ln));
+        }
+        let rng = an.check_selects(&srng, &sunpacked, name, &flat, env, ln);
+        if let Some((lo, hi)) = rng {
+            return Ok(ExprInfo { val: None, width: Some(hi - lo + 1), flexible: false });
+        }
+        // non-const select of a packed vector: single index = 1 bit wide
+        let unpacked = sunpacked.len();
+        let packed_groups = sel_groups.len() as i64 - unpacked as i64;
+        if packed_groups == 1 && split_sel(sel_groups.last().unwrap()).0 == SelKind::Index {
+            return Ok(ExprInfo { val: None, width: Some(1), flexible: false });
+        }
+        if packed_groups <= 0 && unpacked > 0 && sel_groups.len() == unpacked {
+            // full unpacked index: element width = packed range
+            match srng {
+                Rng::Bits(lo, hi) => {
+                    return Ok(ExprInfo { val: None, width: Some(hi - lo + 1), flexible: false })
+                }
+                Rng::Scalar => return Ok(ExprInfo { val: None, width: Some(1), flexible: false }),
+                _ => {}
+            }
+        }
+        Ok(ExprInfo::unknown())
+    }
+
+    /// `{a, b, c}` or replication `{N{expr}}`.
+    fn concat(&mut self, inner: &[Tok], ln: u32) -> Result<ExprInfo, Bail> {
+        let parts = split_top(inner, ",");
+        if parts.len() == 1 {
+            let p0 = &parts[0];
+            let mut depth = 0i32;
+            for (j, t) in p0.iter().enumerate() {
+                if t.kind == Kind::Punct {
+                    if t.text == "{" && depth == 0 && j > 0 {
+                        let count_toks = &p0[..j];
+                        // inner body is p0[j+1..len-1] (strip the closing '}')
+                        let body: &[Tok] =
+                            if p0.len() > j + 1 { &p0[j + 1..p0.len() - 1] } else { &[] };
+                        let cnt = {
+                            let mut s = Ep {
+                                an: self.an.as_deref_mut(),
+                                toks: count_toks,
+                                env: self.env,
+                                ln,
+                                silent: true,
+                                i: 0,
+                            };
+                            s.safe_val()
+                        };
+                        let b = {
+                            let mut s = Ep {
+                                an: self.an.as_deref_mut(),
+                                toks: body,
+                                env: self.env,
+                                ln,
+                                silent: self.silent,
+                                i: 0,
+                            };
+                            s.ternary_all()?
+                        };
+                        {
+                            // count tokens are reads too
+                            let mut s = Ep {
+                                an: self.an.as_deref_mut(),
+                                toks: count_toks,
+                                env: self.env,
+                                ln,
+                                silent: self.silent,
+                                i: 0,
+                            };
+                            let _ = s.ternary_all();
+                        }
+                        if let Some(c) = cnt {
+                            if c < 0 {
+                                if !self.silent {
+                                    if let Some(an) = self.an.as_deref_mut() {
+                                        an.diag("MC002", ln, format!("negative replication count {c}"));
+                                    }
+                                }
+                                return Ok(ExprInfo::unknown());
+                            }
+                        }
+                        if let (Some(c), Some(w)) = (cnt, b.width) {
+                            return Ok(ExprInfo { val: None, width: Some(c * w), flexible: false });
+                        }
+                        if cnt == Some(0) {
+                            return Ok(ExprInfo { val: None, width: Some(0), flexible: false });
+                        }
+                        return Ok(ExprInfo::unknown());
+                    }
+                    if is_open(&t.text) {
+                        depth += 1;
+                    } else if is_close(&t.text) {
+                        depth -= 1;
+                    }
+                }
+            }
+        }
+        let mut total = 0i64;
+        let mut known = true;
+        for p in &parts {
+            let info = {
+                let mut s = Ep {
+                    an: self.an.as_deref_mut(),
+                    toks: p,
+                    env: self.env,
+                    ln,
+                    silent: self.silent,
+                    i: 0,
+                };
+                s.ternary_all()?
+            };
+            match info.width {
+                None => known = false,
+                Some(w) => total += w,
+            }
+        }
+        if known && !parts.is_empty() {
+            return Ok(ExprInfo { val: None, width: Some(total), flexible: false });
+        }
+        Ok(ExprInfo::unknown())
+    }
+
+    fn safe_val(&mut self) -> Option<i64> {
+        match self.ternary_all() {
+            Ok(info) => info.val,
+            Err(_) => None,
+        }
+    }
+}
+
+fn apply(op: &str, a: ExprInfo, b: ExprInfo) -> ExprInfo {
+    let (x, y) = match (a.val, b.val) {
+        (Some(x), Some(y)) => (x, y),
+        _ => return ExprInfo::unknown(),
+    };
+    let v: Option<i64> = match op {
+        "||" => Some(((x != 0) || (y != 0)) as i64),
+        "&&" => Some(((x != 0) && (y != 0)) as i64),
+        "|" => Some(x | y),
+        "^" => Some(x ^ y),
+        "&" => Some(x & y),
+        "==" => Some((x == y) as i64),
+        "!=" => Some((x != y) as i64),
+        "<" => Some((x < y) as i64),
+        ">" => Some((x > y) as i64),
+        "<=" => Some((x <= y) as i64),
+        ">=" => Some((x >= y) as i64),
+        "<<" => {
+            if (0..64).contains(&y) {
+                x.checked_shl(y as u32)
+            } else {
+                None
+            }
+        }
+        ">>" => {
+            if (0..64).contains(&y) {
+                Some(x >> (y as u32))
+            } else {
+                None
+            }
+        }
+        "+" => x.checked_add(y),
+        "-" => x.checked_sub(y),
+        "*" => x.checked_mul(y),
+        "/" => {
+            if y != 0 {
+                Some(x.div_euclid(y))
+            } else {
+                None
+            }
+        }
+        "%" => {
+            if y != 0 {
+                Some(x.rem_euclid(y))
+            } else {
+                None
+            }
+        }
+        _ => None,
+    };
+    match v {
+        Some(v) => ExprInfo { val: Some(v), width: None, flexible: false },
+        None => ExprInfo::unknown(),
+    }
+}
+
+fn clog2(v: i64) -> i64 {
+    if v <= 1 {
+        0
+    } else {
+        64 - ((v - 1) as u64).leading_zeros() as i64
+    }
+}
+
+// ---------------------------------------------------------------------------
+// file-set entry point
+// ---------------------------------------------------------------------------
+
+/// Parse and analyze a set of named sources together (cross-file module
+/// table). Returns deduplicated diagnostics plus the module table for
+/// follow-on contract checks.
+pub fn check_files(files: &BTreeMap<String, String>) -> (Vec<Diagnostic>, BTreeMap<String, Module>) {
+    let mut diags = Vec::new();
+    let mut mtab: BTreeMap<String, Module> = BTreeMap::new();
+    let mut parsed: Vec<(String, Vec<Module>)> = Vec::new();
+    for (fname, src) in files {
+        match tokenize(src).and_then(|toks| Parser::new(toks).parse_file()) {
+            Ok(mods) => {
+                for m in &mods {
+                    mtab.insert(m.name.clone(), m.clone());
+                }
+                parsed.push((fname.clone(), mods));
+            }
+            Err(e) => diags.push(Diagnostic::new("MC009", fname, e.line, e.msg)),
+        }
+    }
+    for (fname, mods) in &parsed {
+        for m in mods {
+            let mut an = ModAnalyzer::new(fname);
+            an.run(m, &mtab);
+            diags.append(&mut an.diags);
+        }
+    }
+    // dedup (code, file, line, message)
+    let mut seen = HashSet::new();
+    let mut out = Vec::new();
+    for d in diags {
+        if seen.insert((d.code.clone(), d.file.clone(), d.line, d.message.clone())) {
+            out.push(d);
+        }
+    }
+    (out, mtab)
+}
+
+/// Evaluated default parameters + localparams of a module, for the
+/// cross-layer contract checks.
+pub fn params_of(mtab: &BTreeMap<String, Module>, name: &str) -> Option<Env> {
+    let m = mtab.get(name)?;
+    let mut env = Env::new();
+    for (pname, toks, _ln) in &m.params {
+        let v = const_eval_in(toks, &env);
+        env.insert(pname.clone(), v);
+    }
+    for it in &m.items {
+        if let Item::LocalParam { name, toks, .. } = it {
+            let v = const_eval_in(toks, &env);
+            env.insert(name.clone(), v);
+        }
+    }
+    Some(env)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_one(src: &str) -> Vec<Diagnostic> {
+        let mut files = BTreeMap::new();
+        files.insert("t.sv".to_string(), src.to_string());
+        check_files(&files).0
+    }
+
+    fn codes(src: &str) -> Vec<String> {
+        run_one(src).iter().map(|d| d.code.clone()).collect()
+    }
+
+    #[test]
+    fn tokenizer_basics() {
+        let toks = tokenize("assign a = b + 2'b01; // x\n/* y */ wire w;").unwrap();
+        let texts: Vec<&str> = toks.iter().map(|t| t.text.as_str()).collect();
+        assert_eq!(texts, ["assign", "a", "=", "b", "+", "2'b01", ";", "wire", "w", ";"]);
+        assert_eq!(toks[5].kind, Kind::Num);
+        assert_eq!(toks[7].line, 2);
+    }
+
+    #[test]
+    fn num_info_widths_and_values() {
+        assert_eq!(num_info("2'b01"), (Some(2), Some(1), false));
+        assert_eq!(num_info("8'd255"), (Some(8), Some(255), false));
+        assert_eq!(num_info("16'hff"), (Some(16), Some(255), false));
+        assert_eq!(num_info("'0"), (None, Some(0), true));
+        assert_eq!(num_info("42"), (None, Some(42), true));
+        assert_eq!(num_info("4'bxxxx"), (Some(4), None, false));
+    }
+
+    #[test]
+    fn clean_module_no_diags() {
+        let d = run_one(
+            "module m #(parameter W = 8) (input logic clk, input logic [W-1:0] a, output logic [W-1:0] y);\n  always_ff @(posedge clk) y <= a + 1'b1;\nendmodule\n",
+        );
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn mc001_undeclared_identifier() {
+        assert!(codes("module m (input logic a, output logic y);\n  assign y = a & missing;\nendmodule\n").contains(&"MC001".to_string()));
+    }
+
+    #[test]
+    fn mc002_reversed_part_select() {
+        let c = codes(
+            "module m (input logic [7:0] a, output logic [7:0] y);\n  assign y = {a[3:5], a[7:3]};\nendmodule\n",
+        );
+        assert!(c.contains(&"MC002".to_string()), "{c:?}");
+    }
+
+    #[test]
+    fn mc003_select_out_of_bounds() {
+        let c = codes(
+            "module m (input logic [7:0] a, output logic y);\n  assign y = a[8];\nendmodule\n",
+        );
+        assert_eq!(c, ["MC003"]);
+        let ok = codes(
+            "module m (input logic [7:0] a, output logic y);\n  assign y = a[7];\nendmodule\n",
+        );
+        assert!(ok.is_empty(), "{ok:?}");
+    }
+
+    #[test]
+    fn mc004_port_width_mismatch() {
+        let src = "module sub (input logic [31:0] d, output logic q);\n  assign q = ^d;\nendmodule\nmodule top (input logic [7:0] x, output logic y);\n  sub u (.d(x), .q(y));\nendmodule\n";
+        let c = codes(src);
+        assert_eq!(c, ["MC004"]);
+    }
+
+    #[test]
+    fn mc004_respects_parameter_overrides() {
+        let src = "module sub #(parameter W = 8) (input logic [W-1:0] d, output logic q);\n  assign q = ^d;\nendmodule\nmodule top (input logic [15:0] x, output logic y);\n  sub #(.W(16)) u (.d(x), .q(y));\nendmodule\n";
+        let c = codes(src);
+        assert!(c.is_empty(), "{c:?}");
+    }
+
+    #[test]
+    fn mc005_multiply_driven() {
+        let src = "module m (input logic a, input logic b, output logic y);\n  logic t;\n  assign t = a;\n  assign t = b;\n  assign y = t;\nendmodule\n";
+        assert_eq!(codes(src), ["MC005"]);
+        // disjoint constant ranges are one driver each: no diagnostic
+        let ok = "module m (input logic a, output logic [1:0] y);\n  assign y[0] = a;\n  assign y[1] = ~a;\nendmodule\n";
+        assert!(codes(ok).is_empty());
+    }
+
+    #[test]
+    fn mc006_unused_declaration() {
+        let src = "module m (input logic a, output logic y);\n  logic spare;\n  assign y = a;\nendmodule\n";
+        assert_eq!(codes(src), ["MC006"]);
+    }
+
+    #[test]
+    fn mc007_mc008_unknown_module_and_port() {
+        let c = codes("module m (input logic a, output logic y);\n  ghost u (.p(a), .q(y));\n  assign y = a;\nendmodule\n");
+        assert!(c.contains(&"MC007".to_string()), "{c:?}");
+        let src = "module sub (input logic d, output logic q);\n  assign q = d;\nendmodule\nmodule top (input logic a, output logic y);\n  sub u (.d(a), .nope(y));\nendmodule\n";
+        let c = codes(src);
+        assert!(c.contains(&"MC008".to_string()), "{c:?}");
+    }
+
+    #[test]
+    fn mc009_parse_error() {
+        assert_eq!(codes("module m (input logic a;\n"), ["MC009"]);
+    }
+
+    #[test]
+    fn mc010_duplicate_declaration() {
+        let src = "module m (input logic a, output logic y);\n  logic t;\n  logic t;\n  assign t = a;\n  assign y = t;\nendmodule\n";
+        assert_eq!(codes(src), ["MC010"]);
+    }
+
+    #[test]
+    fn generate_scoped_decls_do_not_false_positive() {
+        let src = "module m #(parameter N = 4) (input logic [N-1:0] a, output logic [N-1:0] y);\n  genvar g;\n  generate\n    for (g = 0; g < N; g = g + 1) begin : lane\n      logic t;\n      assign t = a[g];\n      assign y[g] = t;\n    end\n  endgenerate\nendmodule\n";
+        let c = codes(src);
+        assert!(c.is_empty(), "{c:?}");
+    }
+
+    #[test]
+    fn params_of_evaluates_defaults_and_localparams() {
+        let src = "module m #(parameter W = 8, parameter D = W * 2) (input logic a, output logic y);\n  localparam TOTAL = D + 1;\n  assign y = a;\nendmodule\n";
+        let mut files = BTreeMap::new();
+        files.insert("t.sv".to_string(), src.to_string());
+        let (d, mtab) = check_files(&files);
+        assert!(d.is_empty(), "{d:?}");
+        let env = params_of(&mtab, "m").unwrap();
+        assert_eq!(env.get("W"), Some(&Some(8)));
+        assert_eq!(env.get("D"), Some(&Some(16)));
+        assert_eq!(env.get("TOTAL"), Some(&Some(17)));
+    }
+}
+
+

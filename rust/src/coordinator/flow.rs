@@ -178,13 +178,13 @@ fn run_flow_with<B: ExecBackend>(
     let (mut emitted_files, mut emitted_lines) = (0, 0);
     let dag_size;
     if let Some(dir) = &cfg.emit_dir {
-        let (_dp, _bits, g) = ev.hardware(&outcome.best);
+        let (_dp, _bits, g) = ev.hardware(&outcome.best)?;
         dag_size = g.dag_size();
         let (design, lines) = pm.run("emit", || emit_pass::emit_to_dir(&g, dir))?;
         emitted_files = design.files.len();
         emitted_lines = lines;
     } else {
-        let (_dp, _bits, g) = ev.hardware(&outcome.best);
+        let (_dp, _bits, g) = ev.hardware(&outcome.best)?;
         dag_size = g.dag_size();
     }
 

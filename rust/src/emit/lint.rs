@@ -31,14 +31,39 @@ fn count_word(text: &str, word: &str) -> usize {
     count
 }
 
-/// Strip comments so keyword counting ignores them.
+/// Strip `//` line comments and `/* ... */` block comments (including
+/// multi-line) so keyword counting ignores them. Newlines inside block
+/// comments are preserved, keeping the output line-aligned with the
+/// source. An unterminated block comment swallows the rest of the text
+/// — which then fails the balance checks, as it should.
 fn strip_comments(text: &str) -> String {
+    let b = text.as_bytes();
     let mut out = String::with_capacity(text.len());
-    for line in text.lines() {
-        let code = line.split("//").next().unwrap_or("");
-        out.push_str(code);
-        out.push('\n');
+    let mut i = 0;
+    let mut run = 0; // start of the current non-comment byte run
+    while i < b.len() {
+        if b[i] == b'/' && b.get(i + 1) == Some(&b'/') {
+            out.push_str(&text[run..i]);
+            while i < b.len() && b[i] != b'\n' {
+                i += 1;
+            }
+            run = i;
+        } else if b[i] == b'/' && b.get(i + 1) == Some(&b'*') {
+            out.push_str(&text[run..i]);
+            i += 2;
+            while i < b.len() && !(b[i] == b'*' && b.get(i + 1) == Some(&b'/')) {
+                if b[i] == b'\n' {
+                    out.push('\n');
+                }
+                i += 1;
+            }
+            i = (i + 2).min(b.len());
+            run = i;
+        } else {
+            i += 1;
+        }
     }
+    out.push_str(&text[run..]);
     out
 }
 
@@ -126,5 +151,19 @@ mod tests {
     fn comments_are_ignored() {
         let with_comment = format!("// module ghost\n{GOOD}");
         assert!(lint_sv(&with_comment).is_empty());
+    }
+
+    #[test]
+    fn block_comments_are_ignored() {
+        // A multi-line block comment full of keywords must not skew the
+        // counters (the old line-oriented stripper only handled `//`).
+        let with_block = format!("/* module ghost\n   begin generate (\n */\n{GOOD}");
+        assert!(lint_sv(&with_block).is_empty(), "{:?}", lint_sv(&with_block));
+        // Inline block comment in the middle of a line.
+        let inline = GOOD.replace("always_ff begin", "always_ff /* begin ( */ begin");
+        assert!(lint_sv(&inline).is_empty(), "{:?}", lint_sv(&inline));
+        // An unterminated block comment swallows the endmodule and fails.
+        let bad = format!("{GOOD}/* dangling");
+        assert!(lint_sv(&bad).iter().any(|e| matches!(e, LintError::UnbalancedModule { .. })));
     }
 }

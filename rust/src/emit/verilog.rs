@@ -3,6 +3,19 @@
 //! every producer/consumer edge and precision casts where neighboring
 //! qtensor precisions differ (§4's cheap intra-format casts).
 //!
+//! Wiring discipline (checked, not trusted — `check::sv` analyzes every
+//! emitted file and the emit pass gates on the result):
+//! - every edge net is declared at the producing template's real output
+//!   width (`width` map below), never as a 32-bit alias;
+//! - consumers read the post-FIFO `v*_q_*` stream of their argument, and
+//!   each consumer contributes one `v*_in_rdy` term to the producer's
+//!   `q_ready` fan-in (unconsumed streams are tied ready);
+//! - width changes between edges are explicit zero-extends/truncations
+//!   ([`adapt`]), so every port connection is width-consistent;
+//! - block-format gemm inputs pass through a channel-framed
+//!   [`templates::mx_unpacker`] sized by [`templates::unpacker_config`],
+//!   the same closed forms `sim`/`hw::throughput` charge.
+//!
 //! Simplification: the operator templates expose a single streaming input
 //! port; multi-argument operators (add, attention) are wired from their
 //! first dataflow argument and the side-stream handshakes are elided —
@@ -11,7 +24,7 @@
 //! synthesis-ready netlist; see DESIGN.md §3 (no Vivado available).
 
 use super::templates;
-use crate::formats::FormatKind;
+use crate::formats::{FormatKind, Precision};
 use crate::ir::{Graph, OpKind};
 use std::collections::BTreeMap;
 
@@ -24,12 +37,29 @@ pub struct EmittedDesign {
     pub instances: usize,
 }
 
-fn design_format(g: &Graph) -> FormatKind {
+/// The design's single arithmetic format (paper §4: one per design) —
+/// the first non-fp32 value format. Shared with `check::contracts` so
+/// the checker reconstructs exactly the template names this generator
+/// emitted.
+pub fn design_format(g: &Graph) -> FormatKind {
     g.values
         .iter()
         .map(|v| v.ty.format)
         .find(|f| *f != FormatKind::Fp32)
         .unwrap_or(FormatKind::Fp32)
+}
+
+/// Pass a net expression between two declared widths: zero-extend,
+/// truncate, or pass through. These explicit adapters replace the old
+/// `[31:0]`-alias convention, which the SV analyzer now rejects as a
+/// port-width mismatch (MC004).
+fn adapt(net: &str, frm: usize, to: usize) -> String {
+    use std::cmp::Ordering;
+    match frm.cmp(&to) {
+        Ordering::Equal => net.to_string(),
+        Ordering::Greater => format!("{net}[{}:0]", to - 1),
+        Ordering::Less => format!("{{{{{n}{{1'b0}}}}, {net}}}", n = to - frm),
+    }
 }
 
 /// Emit the full design for a quantized+parallelized graph at the
@@ -49,48 +79,101 @@ pub fn emit_design_at(g: &Graph, channel_bits: u64) -> EmittedDesign {
     files.insert("stream_fifo.sv".into(), templates::stream_fifo("stream_fifo", 4));
     files.insert("block_exponent.sv".into(), templates::block_exponent_unit("block_exponent"));
 
-    let mut body = String::new();
-    let mut instances = 0;
+    // Per-edge data widths: the producing operator template's real
+    // output port width, so every connection in the top level is
+    // width-consistent under `check::sv`. Gemm templates stream
+    // 2*LANES*MAN_W in and LANES*MAN_W*2 out (equal); fixed-function
+    // templates stream W(=32)*LANES; the AXI wrapper edges are 32.
+    let mut width: BTreeMap<usize, usize> = BTreeMap::new();
+    for op in &g.ops {
+        let Some(&r) = op.results.first() else { continue };
+        let v = g.value(r);
+        let lanes = v.attrs.tile.0 * v.attrs.tile.1;
+        let w = match op.kind {
+            OpKind::Input | OpKind::Output => 32,
+            OpKind::Linear | OpKind::Attention => {
+                lanes * (v.ty.precision.bits.max(1.0) as usize + 1) * 2
+            }
+            _ => 32 * lanes,
+        };
+        width.insert(r.0, w);
+    }
+
     let mut wires = String::new();
+    let mut body = String::new();
+    let mut instances = 0usize;
+    // result ids with a `v*_q_*` stream, in emit order
+    let mut streams: Vec<usize> = Vec::new();
+    // value id -> ready terms contributed by its consumers
+    let mut ready_of: BTreeMap<usize, Vec<String>> = BTreeMap::new();
+    let mut src_ready_expr: Option<String> = None;
+    let mut sink_done = false;
 
     for op in &g.ops {
         if op.kind == OpKind::Input {
-            // inputs enter from the AXI-stream wrapper: alias their nets
-            if let Some(&r) = op.results.first() {
-                let net = format!("v{}", r.0);
-                wires.push_str(&format!(
-                    "    logic {net}_valid, {net}_ready;\n    logic [31:0] {net}_data;\n\
-                     \x20   assign {net}_valid = src_valid;\n    assign {net}_data = src_data;\n"
+            // inputs enter from the AXI-stream wrapper; the first one
+            // aliases the src_* ports, any extras are tied idle (the
+            // wrapper exposes a single stream)
+            let Some(&r) = op.results.first() else { continue };
+            let net = format!("v{}", r.0);
+            wires.push_str(&format!(
+                "    logic {net}_q_valid, {net}_q_ready;\n    logic [31:0] {net}_q_data;\n"
+            ));
+            streams.push(r.0);
+            if src_ready_expr.is_none() {
+                body.push_str(&format!(
+                    "    assign {net}_q_valid = src_valid;\n\
+                     \x20   assign {net}_q_data = src_data;\n"
+                ));
+                src_ready_expr = Some(format!("{net}_q_ready"));
+            } else {
+                body.push_str(&format!(
+                    "    assign {net}_q_valid = 1'b0;\n    assign {net}_q_data = '0;\n"
                 ));
             }
             continue;
         }
         if op.kind == OpKind::Output {
+            if sink_done {
+                continue;
+            }
+            let Some(a) = op.args.first().map(|a| a.0).filter(|a| width.contains_key(a)) else {
+                continue;
+            };
+            body.push_str(&format!(
+                "    assign sink_valid = v{a}_q_valid;\n\
+                 \x20   assign sink_data = {data};\n",
+                data = adapt(&format!("v{a}_q_data"), width[&a], 32),
+            ));
+            ready_of.entry(a).or_default().push("sink_ready".into());
+            sink_done = true;
             continue;
         }
-        let r = match op.results.first() {
-            Some(&r) => r,
-            None => continue,
-        };
+        let Some(&r) = op.results.first() else { continue };
         let v = g.value(r);
         let tile = v.attrs.tile;
         let mantissa = v.ty.precision.bits.max(1.0) as u32;
         let (mod_name, src) = templates::template_for(op.kind, fmt, mantissa, tile);
         files.entry(format!("{mod_name}.sv")).or_insert(src);
 
-        // wires for this op's output edge
         let net = format!("v{}", r.0);
+        let w_out = width[&r.0];
         wires.push_str(&format!(
-            "    logic {net}_valid, {net}_ready;\n    logic [31:0] {net}_data;\n"
+            "    logic {net}_valid, {net}_ready, {net}_q_valid, {net}_q_ready;\n\
+             \x20   logic [{wm}:0] {net}_data;\n\
+             \x20   logic [{wm}:0] {net}_q_data;\n\
+             \x20   logic {net}_in_rdy;\n",
+            wm = w_out - 1,
         ));
+        streams.push(r.0);
 
-        // input edge: first arg's net (inputs of the whole design come
-        // from the AXI-stream wrapper)
-        let in_net = op
-            .args
-            .first()
-            .map(|&a| format!("v{}", a.0))
-            .unwrap_or_else(|| "src".to_string());
+        let is_gemm = matches!(op.kind, OpKind::Linear | OpKind::Attention);
+        // first dataflow argument (side streams elided, module doc);
+        // args without an emitted producer stream feed an idle channel
+        let a = op.args.first().copied().filter(|a| width.contains_key(&a.0));
+        if let Some(av) = a {
+            ready_of.entry(av.0).or_default().push(format!("{net}_in_rdy"));
+        }
 
         // Block-format gemms consume bit-packed streams: deserialize the
         // channel beats through the matching mx_unpacker and feed the
@@ -99,71 +182,107 @@ pub fn emit_design_at(g: &Graph, channel_bits: u64) -> EmittedDesign {
         // precision and tile, exactly the payload the simulator charges
         // that channel (`nodes_from_graph` prices the producer's result
         // tile) — never from this op's own result.
-        let is_gemm = matches!(op.kind, OpKind::Linear | OpKind::Attention);
-        let unpacker = if is_gemm {
-            op.args.first().and_then(|&a| {
-                let v = g.value(a);
-                let m = v.ty.precision.bits.max(1.0) as u32;
-                templates::unpacker_for(v.ty.format, m, v.attrs.tile, channel_bits)
-            })
-        } else {
-            None
-        };
-        // Skeleton convention: all data nets in the top level are 32-bit
-        // aliases (module doc) — wide operator/unpacker data ports are
-        // sliced/truncated exactly as the pre-existing gemm wiring is.
-        // The exponent path, the part the datapath consumes, is sized
-        // for real: one byte per (16, 2) block, block 0 feeding the MAC
-        // array's shared-exponent adder.
-        let (feed_net, exp_net) = match unpacker {
-            Some((up_name, up_src, groups)) => {
-                files.entry(format!("{up_name}.sv")).or_insert(up_src);
-                let up = format!("{net}_up");
-                wires.push_str(&format!(
-                    "    logic {up}_valid, {up}_ready;\n    logic [31:0] {up}_data;\n\
-                     \x20   logic [{w}:0] {up}_exp;\n",
-                    w = 8 * groups - 1
-                ));
-                body.push_str(&format!(
-                    "    {up_name} u_{up} (\n\
-                     \x20       .clk(clk), .rst_n(rst_n),\n\
-                     \x20       .in_valid({in_net}_valid), .in_ready({in_net}_ready), .in_data({in_net}_data[31:0]),\n\
-                     \x20       .out_valid({up}_valid), .out_ready({up}_ready), .out_data({up}_data),\n\
-                     \x20       .out_exp({up}_exp)\n\
-                     \x20   );\n",
-                ));
-                instances += 1;
-                (up.clone(), format!("{up}_exp[7:0]"))
+        let mut up: Option<(String, usize)> = None;
+        if is_gemm {
+            if let Some(av) = a {
+                let va = g.value(av);
+                let m_in = va.ty.precision.bits.max(1.0) as u32;
+                if let Some((up_name, up_src, groups)) =
+                    templates::unpacker_for(va.ty.format, m_in, va.attrs.tile, channel_bits)
+                {
+                    let cfg = templates::unpacker_config(
+                        va.ty.format,
+                        Precision::new(m_in as f32, 0.0),
+                        va.attrs.tile,
+                        channel_bits,
+                    );
+                    files.entry(format!("{up_name}.sv")).or_insert(up_src);
+                    let upw = cfg.lanes * cfg.elem_bits as usize;
+                    wires.push_str(&format!(
+                        "    logic {net}_up_valid, {net}_up_ready;\n\
+                         \x20   logic [{dw}:0] {net}_up_data;\n\
+                         \x20   logic [{ew}:0] {net}_up_exp;\n",
+                        dw = upw - 1,
+                        ew = 8 * groups - 1,
+                    ));
+                    body.push_str(&format!(
+                        "    {up_name} u_{net}_up (\n\
+                         \x20       .clk(clk), .rst_n(rst_n),\n\
+                         \x20       .in_valid(v{a}_q_valid), .in_ready({net}_in_rdy), .in_data({in_data}),\n\
+                         \x20       .out_valid({net}_up_valid), .out_ready({net}_up_ready), .out_data({net}_up_data),\n\
+                         \x20       .out_exp({net}_up_exp)\n\
+                         \x20   );\n",
+                        a = av.0,
+                        in_data =
+                            adapt(&format!("v{}_q_data", av.0), width[&av.0], cfg.chan as usize),
+                    ));
+                    instances += 1;
+                    up = Some((format!("{net}_up"), upw));
+                }
             }
-            None => (in_net.clone(), "8'd0".to_string()),
+        }
+
+        let (feed_valid, feed_rdy, feed_data, exp_a) = match (&up, a) {
+            (Some((up_net, upw)), _) => (
+                format!("{up_net}_valid"),
+                format!("{up_net}_ready"),
+                adapt(&format!("{up_net}_data"), *upw, w_out),
+                format!("{net}_up_exp[7:0]"),
+            ),
+            (None, Some(av)) => (
+                format!("v{}_q_valid", av.0),
+                format!("{net}_in_rdy"),
+                adapt(&format!("v{}_q_data", av.0), width[&av.0], w_out),
+                "8'd0".to_string(),
+            ),
+            (None, None) => (
+                "1'b0".to_string(),
+                format!("{net}_in_rdy"),
+                "'0".to_string(),
+                "8'd0".to_string(),
+            ),
         };
 
         body.push_str(&format!(
             "    {mod_name} u_{net} (\n\
              \x20       .clk(clk), .rst_n(rst_n),\n\
-             \x20       .in_valid({feed_net}_valid), .in_ready({feed_net}_ready), .in_data({feed_net}_data[31:0]),\n\
+             \x20       .in_valid({feed_valid}), .in_ready({feed_rdy}), .in_data({feed_data}),\n\
              \x20       .out_valid({net}_valid), .out_ready({net}_ready), .out_data({net}_data){extra}\n\
              \x20   );\n",
             extra = if is_gemm {
-                format!(",\n        .in_exp_a({exp_net}), .in_exp_b(8'd0), .out_exp()")
+                format!(",\n        .in_exp_a({exp_a}), .in_exp_b(8'd0), .out_exp()")
             } else {
                 String::new()
             },
         ));
         instances += 1;
 
-        // FIFO on the edge to decouple stages (buffer insertion, §4.2)
+        // FIFO on the edge to decouple stages (buffer insertion, §4.2),
+        // at the edge's real width
         body.push_str(&format!(
-            "    stream_fifo #(.W(32), .DEPTH(4)) fifo_{net} (\n\
+            "    stream_fifo #(.W({w_out}), .DEPTH(4)) fifo_{net} (\n\
              \x20       .clk(clk), .rst_n(rst_n),\n\
              \x20       .in_valid({net}_valid), .in_ready({net}_ready), .in_data({net}_data),\n\
              \x20       .out_valid({net}_q_valid), .out_ready({net}_q_ready), .out_data({net}_q_data)\n\
              \x20   );\n",
         ));
-        wires.push_str(&format!(
-            "    logic {net}_q_valid, {net}_q_ready;\n    logic [31:0] {net}_q_data;\n"
-        ));
         instances += 1;
+    }
+
+    // each buffered stream's ready is the AND of its consumers' ready
+    // terms; unconsumed streams are tied ready so they drain freely
+    for r in &streams {
+        let rdys = ready_of.remove(r).unwrap_or_default();
+        let expr = if rdys.is_empty() { "1'b1".to_string() } else { rdys.join(" & ") };
+        body.push_str(&format!("    assign v{r}_q_ready = {expr};\n"));
+    }
+    let mut tail = String::new();
+    match &src_ready_expr {
+        Some(e) => tail.push_str(&format!("    assign src_ready  = {e};\n")),
+        None => tail.push_str("    assign src_ready  = 1'b1;\n"),
+    }
+    if !sink_done {
+        tail.push_str("    assign sink_valid = 1'b0;\n    assign sink_data  = 32'd0;\n");
     }
 
     let top = format!(
@@ -179,11 +298,7 @@ pub fn emit_design_at(g: &Graph, channel_bits: u64) -> EmittedDesign {
          \x20   input  logic        sink_ready,\n\
          \x20   output logic [31:0] sink_data\n\
          );\n\
-         {wires}\n{body}\
-         \x20   // sink: last op's buffered stream\n\
-         \x20   assign sink_valid = 1'b0;\n\
-         \x20   assign sink_data  = 32'd0;\n\
-         \x20   assign src_ready  = 1'b1;\n\
+         {wires}\n{body}{tail}\
          endmodule\n",
         name = sanitize(&g.name),
         fmt = fmt.name(),
@@ -263,6 +378,21 @@ mod tests {
                 "{f} missing channel-width suffix"
             );
         }
+    }
+
+    #[test]
+    fn consumers_read_buffered_streams_and_drive_ready() {
+        let d = emitted();
+        let top = &d.files["top.sv"];
+        // every buffered stream's q_ready is assigned exactly once
+        // (consumer fan-in or tied ready) — the old emitter left them
+        // all undriven, which check::sv now reports
+        let assigns = top.matches("_q_ready = ").count();
+        let streams = top.matches("_q_valid,").count();
+        assert!(assigns >= streams, "{assigns} ready assigns for {streams} streams");
+        // the sink is wired from a real stream, not stubbed dead
+        assert!(top.contains("assign sink_valid = v"), "{top}");
+        assert!(top.contains("assign src_ready  = v"), "{top}");
     }
 
     #[test]

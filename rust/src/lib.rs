@@ -51,6 +51,7 @@
 //! | hardware cost models (Table 1) | [`hw`] | no |
 //! | dataflow simulation (Fig. 1e/1f), bandwidth-aware beat model | [`sim`] | no |
 //! | SystemVerilog emission (Table 3) | [`emit`] | no |
+//! | static analysis: SV analyzer + bitwidth contracts (`mase check`) | [`check`] | no |
 //! | accuracy evaluation, packed CPU interpreter | [`runtime::CpuBackend`] via [`passes::Evaluator`] | no |
 //! | full flow / sweep with `--backend cpu` | [`coordinator`] | no |
 //! | accuracy evaluation / QAT via PJRT | [`runtime::PjrtBackend`] via [`passes::Evaluator`] | **yes** |
@@ -82,6 +83,7 @@ pub mod hw;
 pub mod sim;
 pub mod passes;
 pub mod emit;
+pub mod check;
 pub mod runtime;
 pub mod eval;
 pub mod coordinator;

@@ -8,6 +8,7 @@
 //!   emit      --model M [--task T] [--out DIR]
 //!   e2e       --model M [--task T] [--trials N] [--out DIR]
 //!   ir        --model M            (print the MASE IR)
+//!   check     [--sv PATH] [--model M] [--fmt F] [--bits N] [--chan W]
 //!   formats   [--model llama-sim]  (Table 1-style format comparison)
 
 use anyhow::{anyhow, Result};
@@ -46,6 +47,11 @@ fn run(args: &Args) -> Result<()> {
         // Packing is artifact-free: fall back to a synthetic model spec
         // when no manifest is present instead of requiring a session.
         return cmd_pack(args, &dir);
+    }
+    if sub == "check" {
+        // Static analysis is artifact-free too: no session or execution
+        // backend needed, only the IR and the emitter.
+        return cmd_check(args, &dir);
     }
     let backend_name = args.get_or("backend", "pjrt");
     let backend = BackendKind::from_name(&backend_name)
@@ -433,6 +439,87 @@ fn cmd_pack(args: &Args, dir: &std::path::Path) -> Result<()> {
     Ok(())
 }
 
+/// `mase check` — run the PR 6 static analyzers and exit nonzero on any
+/// error-level diagnostic. Two modes:
+///
+///  * `--sv PATH` — analyze SystemVerilog on disk (a file or every
+///    `.sv` in a directory) with the real SV analyzer alone.
+///  * default — quantize + parallelize a model (manifest model or a
+///    synthetic spec, like `pack`) at `--fmt/--bits`, emit the design
+///    in memory and run the full cross-layer check: SV analysis of
+///    every file, the IR bitwidth contracts, and the emitted-parameter
+///    agreement, at `--chan`-bit channels.
+///
+/// This drives the same `check::` entry points as the emit-pass gate
+/// and the ci.sh `check` stage.
+fn cmd_check(args: &Args, dir: &std::path::Path) -> Result<()> {
+    use std::collections::BTreeMap;
+
+    let report = if let Some(path) = args.get("sv") {
+        let p = std::path::Path::new(&path);
+        let mut files = BTreeMap::new();
+        if p.is_dir() {
+            for entry in std::fs::read_dir(p)? {
+                let fp = entry?.path();
+                if fp.extension().is_some_and(|e| e == "sv") {
+                    let name = fp
+                        .file_name()
+                        .map(|n| n.to_string_lossy().to_string())
+                        .unwrap_or_default();
+                    files.insert(name, std::fs::read_to_string(&fp)?);
+                }
+            }
+        } else {
+            let name = p
+                .file_name()
+                .map(|n| n.to_string_lossy().to_string())
+                .unwrap_or_else(|| path.clone());
+            files.insert(name, std::fs::read_to_string(p)?);
+        }
+        anyhow::ensure!(!files.is_empty(), "no .sv files under {path}");
+        println!("checking {} SV file(s) from {path}", files.len());
+        mase::check::check_sv_files(&files)
+    } else {
+        let fmt = FormatKind::from_name(&args.get_or("fmt", "mxint"))
+            .ok_or_else(|| anyhow!("unknown format"))?;
+        let bits = args.get_f64("bits", 5.0) as f32;
+        let chan = args.get_usize("chan", mase::hw::DEFAULT_CHANNEL_BITS as usize) as u64;
+        let model = args.get_or("model", "opt-125m-sim");
+        let meta = match mase::frontend::Manifest::load(dir) {
+            Ok(man) => man.model(&model)?.clone(),
+            Err(_) => mase::frontend::ModelMeta::synthetic(
+                &model,
+                args.get_usize("layers", 2),
+                args.get_usize("d-model", 32),
+                args.get_usize("heads", 2),
+                args.get_usize("vocab", 512),
+                args.get_usize("seq", 32),
+                4,
+                "classifier",
+                64,
+            ),
+        };
+        let profile = mase::passes::ProfileData::uniform(&meta, 4.0);
+        let mut g = mase::frontend::build_graph(&meta);
+        mase::passes::QuantSolution::uniform(fmt, bits, &meta, &profile).apply(&mut g);
+        mase::passes::parallelize(&mut g, &mase::hw::Device::u250(), 0.2);
+        mase::passes::verify_boundary(&g, "parallelize")?;
+        let design = mase::emit::emit_design(&g);
+        println!(
+            "checking {} emitted file(s) for '{}' ({} @ {} bits, {}-bit channels)",
+            design.files.len(),
+            meta.name,
+            fmt.name(),
+            bits,
+            chan
+        );
+        mase::check::check_design(&design, &g, chan)
+    };
+    print!("{}", report.render());
+    anyhow::ensure!(!report.has_errors(), "static checks failed");
+    Ok(())
+}
+
 const HELP: &str = "mase — dataflow compiler for LLM inference with MX formats
 usage: mase <subcommand> [flags]
   pretrain --all | --model M [--task T] [--steps N]
@@ -444,6 +531,11 @@ usage: mase <subcommand> [flags]
   emit     --model M [--task T] [--out DIR]
   e2e      --model M [--task T] [--trials N]
   ir       --model M
+  check    [--sv PATH] [--model M] [--fmt F] [--bits N] [--chan W]
+           (static analysis: real SV analyzer + cross-layer bitwidth
+            contracts, exits nonzero on error diagnostics; default mode
+            emits a design in memory and checks it end to end, --sv
+            analyzes .sv files on disk; artifact-free)
   pack     --model M [--fmt F] [--bits N] [--frac N] [--out FILE.json]
            (measured bit-packed layout + bytes per tensor vs analytic
             Eq. 1; artifact-free — synthesizes a model spec if needed)

@@ -2,16 +2,27 @@
 //! dataflow hardware design in SystemVerilog. Direct translation, no
 //! analysis — every hardware parameter is already on the IR (paper §3.1
 //! step 5). Writes one file per operator template plus the top-level.
+//!
+//! Since PR 6 the pass is gated: every emitted design runs through
+//! [`crate::check::check_design`] (the real SV analyzer plus the
+//! cross-layer bitwidth contracts) and error-level diagnostics abort
+//! the emit before any file is written — the compiler cannot ship
+//! SystemVerilog its own checker rejects.
 
 use crate::emit::verilog::{emit_design, EmittedDesign};
 use crate::ir::Graph;
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 use std::path::Path;
 
 /// Emit the design and write it under `out_dir`. Returns (files, total
-/// SV line count) — the "Code size" column of Table 3.
+/// SV line count) — the "Code size" column of Table 3. Fails (writing
+/// nothing) if the static checker finds error-level diagnostics.
 pub fn emit_to_dir(g: &Graph, out_dir: &Path) -> Result<(EmittedDesign, usize)> {
     let design = emit_design(g);
+    let report = crate::check::check_design(&design, g, crate::hw::DEFAULT_CHANNEL_BITS);
+    if report.has_errors() {
+        bail!("emitted design failed static checks:\n{}", report.render());
+    }
     std::fs::create_dir_all(out_dir)
         .with_context(|| format!("creating {}", out_dir.display()))?;
     let mut total_lines = 0;

@@ -143,13 +143,18 @@ impl<'a, B: ExecBackend> Evaluator<'a, B> {
         Ok(acc)
     }
 
-    /// Hardware half: quantize + parallelize the IR clone.
-    pub fn hardware(&self, sol: &QuantSolution) -> (DesignPoint, f64, Graph) {
+    /// Hardware half: quantize + parallelize the IR clone, with the IR
+    /// verifier run at each pass boundary (PR 6). A graph the verifier
+    /// rejects fails the flow here, with every finding listed, instead
+    /// of feeding garbage into the cost models and the emitter.
+    pub fn hardware(&self, sol: &QuantSolution) -> Result<(DesignPoint, f64, Graph)> {
         let mut g = self.graph.clone();
         sol.apply(&mut g);
+        super::verify_boundary(&g, "quantize")?;
         let dp = parallelize(&mut g, &self.device, self.budget_frac);
+        super::verify_boundary(&g, "parallelize")?;
         let bits = sol.average_bitwidth(&g);
-        (dp, bits, g)
+        Ok((dp, bits, g))
     }
 
     /// Full co-design evaluation (the `evaluate` pass proper).
@@ -160,7 +165,7 @@ impl<'a, B: ExecBackend> Evaluator<'a, B> {
     /// Co-design evaluation with alternative weights (QAT-tuned copies).
     pub fn evaluate_with_weights(&self, sol: &QuantSolution, weights: &[f32]) -> Result<EvalResult> {
         let acc = self.accuracy_with(sol, sol.fmt.name(), weights)?;
-        let (dp, avg_bits, _g) = self.hardware(sol);
+        let (dp, avg_bits, _g) = self.hardware(sol)?;
         let (value, objectives) = self.objective.score(acc.accuracy(), avg_bits, &dp);
         Ok(EvalResult {
             accuracy: acc.accuracy(),

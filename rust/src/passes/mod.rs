@@ -24,6 +24,22 @@ pub use search_pass::{eval_scope, run_search, run_search_cached, SearchConfig, S
 use std::collections::BTreeMap;
 use std::time::Instant;
 
+/// PR 6 pass-boundary gate: run the IR verifier after a transforming
+/// pass and fail the flow with *all* findings listed, instead of letting
+/// a malformed graph flow into downstream cost models and the emitter.
+pub fn verify_boundary(g: &crate::ir::Graph, boundary: &str) -> anyhow::Result<()> {
+    let errs = crate::ir::verify(g);
+    if errs.is_empty() {
+        return Ok(());
+    }
+    let listing =
+        errs.iter().map(|e| format!("  - {e}")).collect::<Vec<_>>().join("\n");
+    anyhow::bail!(
+        "IR verification failed after `{boundary}` ({} finding(s)):\n{listing}",
+        errs.len()
+    )
+}
+
 /// Wall-clock bookkeeping per pass — regenerates Table 4's runtime
 /// breakdown.
 #[derive(Debug, Default, Clone)]
@@ -71,6 +87,18 @@ impl PassManager {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn verify_boundary_lists_all_findings() {
+        let mut g = crate::ir::Graph::new("bad");
+        g.new_value("dangling", crate::ir::TensorType::fp32(vec![4]), None);
+        // no outputs + orphan value -> two findings, both in the message
+        let msg = format!("{}", verify_boundary(&g, "quantize").unwrap_err());
+        assert!(msg.contains("after `quantize`"), "{msg}");
+        assert!(msg.contains("2 finding(s)"), "{msg}");
+        assert!(msg.contains("dangling"), "{msg}");
+        assert!(msg.contains("no outputs"), "{msg}");
+    }
 
     #[test]
     fn records_timings() {

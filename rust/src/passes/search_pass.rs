@@ -303,7 +303,7 @@ pub fn run_search_cached<B: ExecBackend>(
         _ => {
             let t = &history[win_idx];
             let sol = QuantSolution::from_search_vector(cfg.fmt, &t.x, ev.meta, profile);
-            let (dp, avg_bits, _g) = ev.hardware(&sol);
+            let (dp, avg_bits, _g) = ev.hardware(&sol)?;
             let eval = EvalResult {
                 accuracy: t.objectives.first().copied().unwrap_or(f64::NAN),
                 mean_loss: f64::NAN,

@@ -1,0 +1,21 @@
+// Known-bad corpus: one net driven from both a continuous assign and a
+// clocked process — the bug class the old keyword-counting lint could
+// never see. Expected diagnostic: MC005 (multiply-driven signal).
+module bad_multidriven (
+    input  logic       clk,
+    input  logic       in_valid,
+    output logic       in_ready,
+    input  logic [7:0] in_data,
+    output logic       out_valid,
+    input  logic       out_ready,
+    output logic [7:0] out_data
+);
+    logic [7:0] stage;
+    assign stage = in_data;
+    always_ff @(posedge clk) begin
+        stage <= 8'd0;
+    end
+    assign out_data  = stage;
+    assign out_valid = in_valid;
+    assign in_ready  = out_ready;
+endmodule

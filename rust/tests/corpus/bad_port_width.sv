@@ -1,0 +1,43 @@
+// Known-bad corpus: PR 5 review finding #2. The consumer sizes its
+// exponent wire from a hardwired constant (8) while the producer port is
+// sized from the GROUPS parameter (8*GROUPS = 32 at this instantiation).
+// Expected diagnostic: MC004 (port connection width mismatch).
+module exp_producer #(
+    parameter GROUPS = 2
+) (
+    input  logic                 clk,
+    input  logic                 rst_n,
+    input  logic                 in_valid,
+    output logic                 in_ready,
+    input  logic [63:0]          in_data,
+    output logic                 out_valid,
+    input  logic                 out_ready,
+    output logic [8*GROUPS-1:0]  out_data,
+    output logic [8*GROUPS-1:0]  out_exp
+);
+    assign out_data  = in_data[8*GROUPS-1:0];
+    assign out_exp   = in_data[8*GROUPS-1:0];
+    assign out_valid = in_valid;
+    assign in_ready  = out_ready;
+endmodule
+
+module bad_port_width (
+    input  logic        clk,
+    input  logic        rst_n,
+    input  logic        in_valid,
+    output logic        in_ready,
+    input  logic [63:0] in_data,
+    output logic        out_valid,
+    input  logic        out_ready,
+    output logic [7:0]  out_data
+);
+    logic [7:0]  exp_w;  // sized from 8, but the port is 8*GROUPS = 32 bits
+    logic [31:0] data_w;
+    exp_producer #(.GROUPS(4)) u_prod (
+        .clk(clk), .rst_n(rst_n),
+        .in_valid(in_valid), .in_ready(in_ready), .in_data(in_data),
+        .out_valid(out_valid), .out_ready(out_ready),
+        .out_data(data_w), .out_exp(exp_w)
+    );
+    assign out_data = exp_w + data_w[7:0];
+endmodule

@@ -1,0 +1,31 @@
+// Known-bad corpus: PR 5 review finding #1. With BEATS == 1 the beat
+// assembly update's part-select elaborates to the reversed range
+// [CHAN_W-1:CHAN_W] — statically detectable from the parameter values.
+// Expected diagnostic: MC002 (reversed part-select).
+module bad_reversed_select #(
+    parameter CHAN_W = 512,
+    parameter BEATS  = 1
+) (
+    input  logic                        clk,
+    input  logic                        rst_n,
+    input  logic                        in_valid,
+    output logic                        in_ready,
+    input  logic [CHAN_W-1:0]           in_data,
+    output logic                        out_valid,
+    input  logic                        out_ready,
+    output logic [BEATS*CHAN_W-1:0]     out_data
+);
+    logic [BEATS*CHAN_W-1:0] shift;
+    always_ff @(posedge clk or negedge rst_n) begin
+        if (!rst_n) begin
+            out_valid <= 1'b0;
+        end else if (in_valid && in_ready) begin
+            shift <= {in_data, shift[BEATS*CHAN_W-1:CHAN_W]};
+            out_valid <= 1'b1;
+        end else if (out_valid && out_ready) begin
+            out_valid <= 1'b0;
+        end
+    end
+    assign out_data = shift;
+    assign in_ready = !out_valid || out_ready;
+endmodule

@@ -1,0 +1,26 @@
+// Known-bad corpus: PR 5 review finding #3. A register was renamed
+// (out_exp_q -> out_exp_r) but one use kept the old name, so the module
+// references a signal that is never declared.
+// Expected diagnostic: MC001 (undeclared identifier).
+module bad_undeclared (
+    input  logic       clk,
+    input  logic       rst_n,
+    input  logic       in_valid,
+    output logic       in_ready,
+    input  logic [7:0] in_data,
+    output logic       out_valid,
+    input  logic       out_ready,
+    output logic [7:0] out_data
+);
+    logic [7:0] out_exp_r;
+    always_ff @(posedge clk or negedge rst_n) begin
+        if (!rst_n) begin
+            out_exp_r <= 8'd0;
+        end else if (in_valid && in_ready) begin
+            out_exp_r <= in_data;
+        end
+    end
+    assign out_data  = out_exp_q;
+    assign out_valid = in_valid;
+    assign in_ready  = out_ready;
+endmodule

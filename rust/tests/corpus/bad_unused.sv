@@ -1,0 +1,16 @@
+// Known-bad corpus: a declaration nothing ever reads or drives.
+// Expected diagnostic: MC006 (declared but never referenced, warning).
+module bad_unused (
+    input  logic       clk,
+    input  logic       in_valid,
+    output logic       in_ready,
+    input  logic [7:0] in_data,
+    output logic       out_valid,
+    input  logic       out_ready,
+    output logic [7:0] out_data
+);
+    logic [7:0] spare;
+    assign out_data  = in_data;
+    assign out_valid = in_valid;
+    assign in_ready  = out_ready;
+endmodule

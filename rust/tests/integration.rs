@@ -176,7 +176,7 @@ fn emitted_design_lints_and_simulates() {
     let ev = Evaluator::new(session.pjrt_backend().unwrap(), &meta, &w, &eval).unwrap();
     let profile = profile_model(&ev.backend, &meta, &w, &eval[..1]).unwrap();
     let sol = QuantSolution::uniform(FormatKind::MxInt, 4.0, &meta, &profile);
-    let (dp, _bits, g) = ev.hardware(&sol);
+    let (dp, _bits, g) = ev.hardware(&sol).unwrap();
 
     let design = mase::emit::emit_design(&g);
     for (name, text) in &design.files {

@@ -10,6 +10,8 @@
 #   scripts/ci.sh doc            # rustdoc gate (warnings are errors)
 #   scripts/ci.sh test           # bench/example check + tier-1 build+test
 #   scripts/ci.sh smoke          # artifact-free cpu-backend e2e smoke
+#   scripts/ci.sh check          # `mase check` static analysis on an
+#                                # artifact-free emitted design
 #   scripts/ci.sh fmt clippy     # any combination, run in order given
 #
 #   SKIP_LINTS=1 scripts/ci.sh   # `all` minus fmt/clippy/doc (e.g. a
@@ -34,9 +36,13 @@ trap cleanup EXIT
 #    manifest round-trip test, and a builder would hide that symmetry).
 #  - needless_range_loop: index loops in the formats/sim hot paths mirror
 #    the emitted hardware's addressing; iterator rewrites obscure that.
+#  - collapsible_if: check/sv.rs mirrors scripts/verify_sv_check.py
+#    line-for-line (the toolchain-free reference analyzer); collapsing
+#    its nested if-lets would break that correspondence.
 CLIPPY_ALLOW=(
   -A clippy::too_many_arguments
   -A clippy::needless_range_loop
+  -A clippy::collapsible_if
 )
 
 stage_fmt() {
@@ -95,6 +101,28 @@ stage_smoke() {
   }
 }
 
+stage_check() {
+  # Static-analysis gate: `mase check` emits a design in memory for a
+  # synthetic model (artifact-free) and runs the real SV analyzer plus
+  # the cross-layer bitwidth contracts over it — the same check::
+  # entry point the emit pass gates on. Nonzero exit on any error-level
+  # MC0xx diagnostic. A second invocation covers the known-bad corpus
+  # path via --sv to prove the analyzer still fires.
+  echo "==> static analysis: mase check (artifact-free emitted design)"
+  if [[ ! -x target/release/mase ]]; then
+    echo "  (target/release/mase missing; building first)"
+    cargo build --release
+  fi
+  cleanup  # reclaim the smoke stage's scratch dir before making our own
+  SMOKE_DIR="$(mktemp -d)"
+  ./target/release/mase check --artifacts "$SMOKE_DIR/artifacts"
+  ./target/release/mase check --artifacts "$SMOKE_DIR/artifacts" --fmt int --bits 8
+  if ./target/release/mase check --sv tests/corpus/bad_undeclared.sv \
+      >/dev/null 2>&1; then
+    echo "mase check failed to flag the known-bad corpus"; exit 1
+  fi
+}
+
 run_stage() {
   case "$1" in
     fmt)    stage_fmt ;;
@@ -102,6 +130,7 @@ run_stage() {
     doc)    stage_doc ;;
     test)   stage_test ;;
     smoke)  stage_smoke ;;
+    check)  stage_check ;;
     all)
       if [[ -z "${SKIP_LINTS:-}" ]]; then
         stage_fmt
@@ -110,9 +139,10 @@ run_stage() {
       fi
       stage_test
       stage_smoke
+      stage_check
       ;;
     *)
-      echo "unknown stage '$1' (expected fmt|clippy|doc|test|smoke|all)" >&2
+      echo "unknown stage '$1' (expected fmt|clippy|doc|test|smoke|check|all)" >&2
       exit 2
       ;;
   esac

@@ -444,6 +444,82 @@ try:
 except ImportError as e:
     print(f"  (C7 skipped: jax/ref.py unavailable here: {e})")
 
+# ====== C8: PR 6 bitwidth-contract closed forms (rust/src/check/contracts.rs) ======
+# Toolchain-free mirror of the cross-layer static checker's arithmetic:
+# accumulator width (MC023), alignment-shift span (MC024) and tile
+# payload bits (MC020) are re-derived here exactly as check::contracts
+# re-derives them from formats + packed::layout, so the closed forms
+# gate even where cargo is unavailable.
+
+GROUP_ELEMS = 32
+BLOCK_SHAPE = (16, 2)
+LOCAL_EXP_BITS = 2   # formats::bmf::LOCAL_EXP_BITS
+MAX_ALIGN_SHIFT = 63  # packed::kernels::MAX_ALIGN_SHIFT
+
+def c8_elem_bits(fmt, knob):
+    # packed::layout::ElemLayout::new element widths
+    return {"mxint": 1 + knob, "bmf": 1 + LOCAL_EXP_BITS + knob + 1,
+            "bl": 1 + knob + 1, "int": knob, "fp8": 8, "fp32": 32}[fmt]
+
+def c8_tile_payload_bits(fmt, knob, tr, tc):
+    # contracts::tile_payload_bits: block formats only; each (16,2) block
+    # is one word-aligned 32-element group plus an 8-bit shared exponent
+    if fmt not in ("mxint", "bmf", "bl"):
+        return None
+    eb = c8_elem_bits(fmt, knob)
+    blocks = -(-tr // BLOCK_SHAPE[0]) * -(-tc // BLOCK_SHAPE[1])
+    group_w = -(-(GROUP_ELEMS * eb) // 64) * 64
+    return blocks * (group_w + 8)
+
+def c8_mxint_acc_bits(m):
+    # packed::kernels::mxint_acc_bits: 2*(m+1) + ilog2(32) - 1
+    return 2 * (m + 1) + 5 - 1
+
+def c8_acc_bits_needed(m):
+    # contracts::acc_bits_needed: worst case |prod| = (2^m - 1)^2 per
+    # lane, 32 lanes, plus a sign bit
+    total = max((2**m - 1) ** 2, 1) * GROUP_ELEMS
+    return total.bit_length() + 1
+
+def c8_align_span(fmt, knob):
+    # contracts::align_span_bound: worst-case |e_a + e_b| swing of the
+    # per-element exponent fields inside one group
+    if fmt in ("mxint", "int", "fp32"):
+        return 0
+    if fmt == "bmf":
+        return 2 * (2**LOCAL_EXP_BITS - 1)
+    if fmt == "fp8":
+        return 28
+    return 2 * (2**knob - 1)  # bl
+
+# MC020: payload closed form against known packed-layout values
+check("C8 mxint m=4 (16,2) tile payload = 200 bits",
+      c8_tile_payload_bits("mxint", 4, 16, 2) == 200)
+check("C8 mxint m=4 (8,4) tile payload = 400 bits (2 padded blocks)",
+      c8_tile_payload_bits("mxint", 4, 8, 4) == 400)
+check("C8 bmf m=2 (16,2) tile payload = 200 bits (6-bit elems)",
+      c8_tile_payload_bits("bmf", 2, 16, 2) == 200)
+check("C8 element-wise formats have no block payload",
+      c8_tile_payload_bits("int", 8, 16, 2) is None)
+# MC022: beat count at a finite channel
+check("C8 200-bit tile over 64-bit channel = 4 beats",
+      -(-c8_tile_payload_bits("mxint", 4, 16, 2) // 64) == 4)
+# MC023: the kernel's accumulator closed form covers the worst case for
+# every searchable mantissa, and is exact where the search lands
+check("C8 acc width sufficient for m in 1..24",
+      all(c8_mxint_acc_bits(m) >= c8_acc_bits_needed(m) for m in range(1, 25)))
+check("C8 acc width exact at m=4/5/7",
+      all(c8_mxint_acc_bits(m) == c8_acc_bits_needed(m) for m in (4, 5, 7)))
+# MC024: alignment span vs the aligner's MAX_ALIGN_SHIFT fallback
+check("C8 mxint/int never leave the integer aligner",
+      c8_align_span("mxint", 7) == 0 and c8_align_span("int", 8) == 0)
+check("C8 bmf span = 6, fp8 span = 28 (both within the aligner)",
+      c8_align_span("bmf", 4) == 6 and c8_align_span("fp8", 0) == 28
+      and 28 <= MAX_ALIGN_SHIFT)
+check("C8 bl eb=7 span exceeds MAX_ALIGN_SHIFT (predicts f64 fallback)",
+      c8_align_span("bl", 7) > MAX_ALIGN_SHIFT
+      and c8_align_span("bl", 5) <= MAX_ALIGN_SHIFT)
+
 print()
 print("ALL PASS" if not fails else f"{len(fails)} FAILURES: {fails}")
 sys.exit(1 if fails else 0)

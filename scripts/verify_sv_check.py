@@ -1,0 +1,2046 @@
+#!/usr/bin/env python3
+"""Toolchain-free mirror of rust/src/check/sv.rs (the `mase check`
+SystemVerilog analyzer): tokenizer, module parser, const-expr evaluator
+and the MC0xx checks, kept line-for-line transliterable with the Rust
+implementation so the algorithm stays debuggable in this container.
+
+Claims checked:
+  S1  zero diagnostics on every mirrored emit::templates generator
+      across a (format, mantissa, tile, channel) grid;
+  S2  zero diagnostics on a mirrored full-design top-level (the new
+      emit::verilog wiring) for block and element-wise formats;
+  S3  the known-bad corpus under rust/tests/corpus/ reproduces the three
+      PR 5 review findings with the expected stable codes
+      (MC002 reversed part-select, MC004 port-width mismatch,
+      MC001 undeclared identifier) plus MC005/MC006 seeds;
+  S4  the select-bounds checker accepts exactly the in-range selects of
+      a width table and rejects off-by-one variants.
+"""
+import os, re, sys
+
+# ---------------------------------------------------------------------------
+# diagnostics
+# ---------------------------------------------------------------------------
+
+WARNING, ERROR = "warning", "error"
+
+CODES = {
+    "MC001": (ERROR, "undeclared identifier"),
+    "MC002": (ERROR, "reversed or empty part-select"),
+    "MC003": (ERROR, "select out of declared bounds"),
+    "MC004": (ERROR, "port connection width mismatch"),
+    "MC005": (ERROR, "multiply-driven signal"),
+    "MC006": (WARNING, "declared but never referenced"),
+    "MC007": (WARNING, "instantiation of unknown module"),
+    "MC008": (ERROR, "connection to unknown port"),
+    "MC009": (ERROR, "parse error"),
+    "MC010": (ERROR, "duplicate declaration"),
+}
+
+
+class Diag:
+    def __init__(self, code, file, line, message):
+        self.code, self.file, self.line, self.message = code, file, line, message
+        self.severity = CODES[code][0]
+
+    def __repr__(self):
+        return f"{self.file}:{self.line}: {self.code} [{self.severity}] {self.message}"
+
+
+class ParseErr(Exception):
+    def __init__(self, line, msg):
+        super().__init__(msg)
+        self.line, self.msg = line, msg
+
+
+# ---------------------------------------------------------------------------
+# tokenizer
+# ---------------------------------------------------------------------------
+
+KEYWORDS = {
+    "module", "endmodule", "input", "output", "inout", "logic", "wire", "reg",
+    "signed", "unsigned", "parameter", "localparam", "assign", "always",
+    "always_ff", "always_comb", "always_latch", "begin", "end", "if", "else",
+    "for", "generate", "endgenerate", "genvar", "integer", "posedge",
+    "negedge", "or", "and", "case", "endcase", "default", "initial",
+    "function", "endfunction", "typedef", "enum", "struct", "packed", "int",
+    "bit", "byte", "return", "void",
+}
+
+_ID_RE = re.compile(r"[A-Za-z_][A-Za-z0-9_]*")
+_SYS_RE = re.compile(r"\$[A-Za-z_][A-Za-z0-9_]*")
+_NUM_RE = re.compile(r"(\d[\d_]*)?'[sS]?[bBdDoOhH][0-9a-fA-FxXzZ_?]+|'[01xXzZ]|\d[\d_]*")
+PUNCTS2 = ("<=", ">=", "==", "!=", "&&", "||", "<<", ">>", "+:", "-:")
+
+
+def tokenize(text):
+    """-> list of (kind, text, line); kind in id/num/sys/punct/str."""
+    toks, i, n, line = [], 0, len(text), 1
+    while i < n:
+        c = text[i]
+        if c == "\n":
+            line += 1
+            i += 1
+            continue
+        if c in " \t\r":
+            i += 1
+            continue
+        if text.startswith("//", i):
+            j = text.find("\n", i)
+            i = n if j < 0 else j
+            continue
+        if text.startswith("/*", i):
+            j = text.find("*/", i + 2)
+            if j < 0:
+                raise ParseErr(line, "unterminated block comment")
+            line += text.count("\n", i, j)
+            i = j + 2
+            continue
+        if c == '"':
+            j = text.find('"', i + 1)
+            if j < 0:
+                raise ParseErr(line, "unterminated string")
+            toks.append(("str", text[i : j + 1], line))
+            i = j + 1
+            continue
+        if c.isalpha() or c == "_":
+            m = _ID_RE.match(text, i)
+            toks.append(("id", m.group(0), line))
+            i = m.end()
+            continue
+        if c == "$":
+            m = _SYS_RE.match(text, i)
+            if m:
+                toks.append(("sys", m.group(0), line))
+                i = m.end()
+                continue
+            raise ParseErr(line, "stray '$'")
+        if c.isdigit() or c == "'":
+            m = _NUM_RE.match(text, i)
+            if m:
+                toks.append(("num", m.group(0), line))
+                i = m.end()
+                continue
+            # bare ' (e.g. '{ aggregate) — not in our subset
+            raise ParseErr(line, "unsupported literal")
+        two = text[i : i + 2]
+        if two in PUNCTS2:
+            toks.append(("punct", two, line))
+            i += 2
+            continue
+        if c in "()[]{};:,.@#?!~^&|+-*/%<>=":
+            toks.append(("punct", c, line))
+            i += 1
+            continue
+        raise ParseErr(line, f"unexpected character {c!r}")
+    return toks
+
+
+def num_info(txt):
+    """-> (width or None, value or None, flexible)."""
+    if "'" in txt:
+        head, _, rest = txt.partition("'")
+        rest = rest.lstrip("sS")
+        if head == "" and rest and rest[0] in "01xXzZ":
+            v = {"0": 0, "1": 1}.get(rest[0])
+            return (None, v, True)  # unbased-unsized: stretches to context
+        base = {"b": 2, "d": 10, "o": 8, "h": 16}[rest[0].lower()]
+        digits = rest[1:].replace("_", "")
+        val = None
+        if not re.search(r"[xXzZ?]", digits):
+            val = int(digits, base)
+        width = int(head.replace("_", "")) if head else None
+        return (width, val, width is None)
+    return (None, int(txt.replace("_", "")), True)
+
+
+# ---------------------------------------------------------------------------
+# parser: token stream -> module structures
+# ---------------------------------------------------------------------------
+
+class Port:
+    def __init__(self, name, dir_, rng, line):
+        self.name, self.dir, self.rng, self.line = name, dir_, rng, line
+
+
+class Decl:
+    def __init__(self, name, kind, rng, unpacked, line):
+        # kind: net | var | integer | genvar | param | localparam | port
+        self.name, self.kind, self.rng = name, kind, rng
+        self.unpacked, self.line = unpacked, line
+
+
+class Module:
+    def __init__(self, name, line):
+        self.name, self.line = name, line
+        self.params = []  # (name, default_toks, line)
+        self.ports = []  # Port
+        self.localparams = []  # (name, toks, line)
+        self.decls = []  # Decl (nets/vars/integers/genvars)
+        self.items = []  # structured body items
+
+
+class Parser:
+    def __init__(self, toks):
+        self.toks, self.i = toks, 0
+
+    def peek(self, k=0):
+        j = self.i + k
+        return self.toks[j] if j < len(self.toks) else ("eof", "", self.line())
+
+    def line(self):
+        if self.i < len(self.toks):
+            return self.toks[self.i][2]
+        return self.toks[-1][2] if self.toks else 0
+
+    def next(self):
+        t = self.peek()
+        self.i += 1
+        return t
+
+    def at(self, text):
+        return self.peek()[1] == text and self.peek()[0] != "str"
+
+    def accept(self, text):
+        if self.at(text):
+            self.i += 1
+            return True
+        return False
+
+    def expect(self, text):
+        t = self.next()
+        if t[1] != text:
+            raise ParseErr(t[2], f"expected {text!r}, found {t[1]!r}")
+        return t
+
+    def expect_id(self):
+        t = self.next()
+        if t[0] != "id" or t[1] in KEYWORDS:
+            raise ParseErr(t[2], f"expected identifier, found {t[1]!r}")
+        return t
+
+    # -- expression token collection (no evaluation here) --
+    def toks_until(self, stops):
+        """Collect tokens until a depth-0 stop punct; stop not consumed."""
+        out, depth = [], 0
+        while True:
+            k, txt, ln = self.peek()
+            if k == "eof":
+                raise ParseErr(ln, f"eof looking for one of {stops}")
+            if depth == 0 and k == "punct" and txt in stops:
+                return out
+            if k == "punct" and txt in "([{":
+                depth += 1
+            elif k == "punct" and txt in ")]}":
+                if depth == 0:
+                    raise ParseErr(ln, f"unbalanced {txt!r}")
+                depth -= 1
+            out.append(self.next())
+
+    def parenthesized(self):
+        """Consume '(' ... matching ')'; return inner tokens."""
+        self.expect("(")
+        out = self.toks_until((")",))
+        self.expect(")")
+        return out
+
+    def packed_range(self):
+        """'[' msb ':' lsb ']' -> (msb_toks, lsb_toks); None if absent."""
+        if not self.at("["):
+            return None
+        self.expect("[")
+        msb = self.toks_until((":",))
+        self.expect(":")
+        lsb = self.toks_until(("]",))
+        self.expect("]")
+        return (msb, lsb)
+
+    def unpacked_dim(self):
+        self.expect("[")
+        size = self.toks_until(("]", ":"))
+        if self.at(":"):  # [0:N-1] style unpacked range — size = msb..lsb
+            self.expect(":")
+            hi = self.toks_until(("]",))
+            self.expect("]")
+            return ("range", size, hi)
+        self.expect("]")
+        return ("size", size, None)
+
+    # -- modules --
+    def parse_file(self):
+        mods = []
+        while self.peek()[0] != "eof":
+            if self.at("module"):
+                mods.append(self.parse_module())
+            else:
+                self.next()  # tolerate leading directives/garbage between modules
+        return mods
+
+    def parse_module(self):
+        ln = self.expect("module")[2]
+        m = Module(self.expect_id()[1], ln)
+        if self.accept("#"):
+            self.expect("(")
+            while not self.at(")"):
+                self.accept("parameter")
+                while self.peek()[1] in ("logic", "int", "integer", "bit", "signed", "unsigned"):
+                    self.next()
+                name = self.expect_id()
+                self.expect("=")
+                dflt = self.toks_until((",", ")"))
+                m.params.append((name[1], dflt, name[2]))
+                if not self.accept(","):
+                    break
+            self.expect(")")
+        self.expect("(")
+        dir_ = None
+        while not self.at(")"):
+            if self.peek()[1] in ("input", "output", "inout"):
+                dir_ = self.next()[1]
+            while self.peek()[1] in ("logic", "wire", "reg", "signed", "unsigned"):
+                self.next()
+            rng = self.packed_range()
+            name = self.expect_id()
+            m.ports.append(Port(name[1], dir_, rng, name[2]))
+            if not self.accept(","):
+                break
+        self.expect(")")
+        self.expect(";")
+        m.items = self.parse_items(("endmodule",))
+        self.expect("endmodule")
+        return m
+
+    # -- body items --
+    def parse_items(self, terminators):
+        items = []
+        while True:
+            k, txt, ln = self.peek()
+            if k == "eof":
+                raise ParseErr(ln, f"eof looking for {terminators}")
+            if txt in terminators:
+                return items
+            if txt == ";":
+                self.next()
+                continue
+            if txt == "localparam":
+                self.next()
+                while self.peek()[1] in ("logic", "int", "integer", "bit", "signed", "unsigned"):
+                    self.next()
+                name = self.expect_id()
+                self.expect("=")
+                val = self.toks_until((";",))
+                self.expect(";")
+                items.append(("localparam", name[1], val, name[2]))
+                continue
+            if txt in ("genvar", "integer"):
+                kind = txt
+                self.next()
+                while True:
+                    name = self.expect_id()
+                    items.append(("decl", Decl(name[1], kind, None, [], name[2]), None))
+                    if not self.accept(","):
+                        break
+                self.expect(";")
+                continue
+            if txt in ("logic", "wire", "reg"):
+                self.next()
+                self.accept("signed") or self.accept("unsigned")
+                rng = self.packed_range()
+                while True:
+                    name = self.expect_id()
+                    unpacked = []
+                    while self.at("["):
+                        unpacked.append(self.unpacked_dim())
+                    init = None
+                    if self.accept("="):
+                        init = self.toks_until((";", ","))
+                    items.append(("decl", Decl(name[1], "net", rng, unpacked, name[2]), init))
+                    if not self.accept(","):
+                        break
+                self.expect(";")
+                continue
+            if txt == "assign":
+                ln0 = self.next()[2]
+                lhs = self.toks_until(("=",))
+                self.expect("=")
+                rhs = self.toks_until((";",))
+                self.expect(";")
+                items.append(("assign", lhs, rhs, ln0))
+                continue
+            if txt in ("always_ff", "always_comb", "always", "always_latch"):
+                self.next()
+                sens = []
+                if self.accept("@"):
+                    sens = self.parenthesized()
+                stmt = self.parse_stmt()
+                items.append(("always", sens, stmt, ln))
+                continue
+            if txt == "generate":
+                self.next()
+                inner = self.parse_items(("endgenerate",))
+                self.expect("endgenerate")
+                items.extend(inner)
+                continue
+            if txt == "for":
+                items.append(self.parse_gen_for())
+                continue
+            if txt == "if":
+                items.append(self.parse_gen_if())
+                continue
+            if txt == "begin":
+                self.next()
+                if self.accept(":"):
+                    self.expect_id()
+                inner = self.parse_items(("end",))
+                self.expect("end")
+                items.extend(inner)
+                continue
+            if k == "id" and txt not in KEYWORDS:
+                items.append(self.parse_instance())
+                continue
+            raise ParseErr(ln, f"unexpected token {txt!r} in module body")
+
+    def gen_body(self):
+        """A generate construct body: begin[:label] items end, or one item."""
+        if self.at("begin"):
+            self.next()
+            if self.accept(":"):
+                self.expect_id()
+            inner = self.parse_items(("end",))
+            self.expect("end")
+            return inner
+        return self.parse_items_one()
+
+    def parse_items_one(self):
+        before = len(self.toks)  # unused; single-item path
+        items = []
+        k, txt, ln = self.peek()
+        if txt == "assign":
+            self.next()
+            lhs = self.toks_until(("=",))
+            self.expect("=")
+            rhs = self.toks_until((";",))
+            self.expect(";")
+            items.append(("assign", lhs, rhs, ln))
+        elif txt == "for":
+            items.append(self.parse_gen_for())
+        elif txt == "if":
+            items.append(self.parse_gen_if())
+        else:
+            raise ParseErr(ln, f"unsupported single generate item {txt!r}")
+        return items
+
+    def parse_gen_for(self):
+        ln = self.expect("for")[2]
+        self.expect("(")
+        self.accept("genvar")
+        var = self.expect_id()[1]
+        self.expect("=")
+        init = self.toks_until((";",))
+        self.expect(";")
+        cond = self.toks_until((";",))
+        self.expect(";")
+        step_var = self.expect_id()[1]
+        self.expect("=")
+        step = self.toks_until((")",))
+        self.expect(")")
+        if step_var != var:
+            raise ParseErr(ln, "generate for must step its own genvar")
+        body = self.gen_body()
+        return ("gen_for", var, init, cond, step, body, ln)
+
+    def parse_gen_if(self):
+        ln = self.expect("if")[2]
+        cond = self.parenthesized()
+        then = self.gen_body()
+        els = []
+        if self.accept("else"):
+            if self.at("if"):
+                els = [self.parse_gen_if()]
+            else:
+                els = self.gen_body()
+        return ("gen_if", cond, then, els, ln)
+
+    def parse_instance(self):
+        mod = self.expect_id()
+        overrides = []
+        if self.accept("#"):
+            self.expect("(")
+            while not self.at(")"):
+                self.expect(".")
+                pname = self.expect_id()
+                val = self.parenthesized()
+                overrides.append((pname[1], val, pname[2]))
+                if not self.accept(","):
+                    break
+            self.expect(")")
+        inst = self.expect_id()
+        self.expect("(")
+        conns = []
+        while not self.at(")"):
+            self.expect(".")
+            pname = self.expect_id()
+            conn = self.parenthesized()
+            conns.append((pname[1], conn, pname[2]))
+            if not self.accept(","):
+                break
+        self.expect(")")
+        self.expect(";")
+        return ("inst", mod[1], overrides, inst[1], conns, mod[2])
+
+    # -- statements (inside always) --
+    def parse_stmt(self):
+        k, txt, ln = self.peek()
+        if txt == "begin":
+            self.next()
+            if self.accept(":"):
+                self.expect_id()
+            stmts = []
+            while not self.at("end"):
+                if self.peek()[0] == "eof":
+                    raise ParseErr(ln, "eof in begin block")
+                stmts.append(self.parse_stmt())
+            self.expect("end")
+            return ("block", stmts, ln)
+        if txt == "if":
+            self.next()
+            cond = self.parenthesized()
+            then = self.parse_stmt()
+            els = None
+            if self.accept("else"):
+                els = self.parse_stmt()
+            return ("if", cond, then, els, ln)
+        if txt == "for":
+            self.next()
+            self.expect("(")
+            init = self.split_assign(self.toks_until((";",)), ln)
+            self.expect(";")
+            cond = self.toks_until((";",))
+            self.expect(";")
+            step = self.split_assign(self.toks_until((")",)), ln)
+            self.expect(")")
+            body = self.parse_stmt()
+            return ("for", init, cond, step, body, ln)
+        toks = self.toks_until((";",))
+        self.expect(";")
+        return self.split_assign(toks, ln)
+
+    @staticmethod
+    def split_assign(toks, ln):
+        depth = 0
+        for j, (k, txt, _) in enumerate(toks):
+            if k == "punct" and txt in "([{":
+                depth += 1
+            elif k == "punct" and txt in ")]}":
+                depth -= 1
+            elif depth == 0 and k == "punct" and txt in ("<=", "="):
+                return ("passign", toks[:j], toks[j + 1 :], ln)
+        return ("expr", toks, ln)
+
+
+# ---------------------------------------------------------------------------
+# analyzer
+# ---------------------------------------------------------------------------
+
+GEN_UNROLL_CAP = 65536  # analyze every iteration up to this many
+GEN_SAMPLE = 512  # beyond the cap: first/last this many iterations
+LOOP_GUARD = 1 << 21  # hard stop for runaway const loops
+
+
+class Sym:
+    def __init__(self, decl, dir_=None, width=None, unpacked_sizes=None):
+        self.decl = decl
+        self.dir = dir_  # input/output/inout for ports, else None
+        self.rng = width  # (lo, hi) ints, or None (1-bit), or "unknown"
+        self.unpacked = unpacked_sizes or []  # list of int or None
+        self.refs = 0
+        self.drivers = []  # (site_id, (lo, hi) or None, line)
+
+
+class ExprInfo:
+    __slots__ = ("val", "width", "flexible")
+
+    def __init__(self, val=None, width=None, flexible=False):
+        self.val, self.width, self.flexible = val, width, flexible
+
+
+class ModAnalyzer:
+    def __init__(self, mod, mtab, file, diags):
+        self.mod, self.mtab, self.file, self.diags = mod, mtab, file, diags
+        self.env = {}
+        self.syms = {}
+        self.next_site = 0
+        self.genvars = set()
+
+    def diag(self, code, line, msg):
+        self.diags.append(Diag(code, self.file, line, msg))
+
+    def site(self):
+        self.next_site += 1
+        return self.next_site
+
+    # -- setup: params, localparams, symbols --
+    def run(self):
+        m = self.mod
+        for name, toks, ln in m.params:
+            self.env[name] = self.const_eval(toks)
+        for it in m.items:
+            if it[0] == "localparam":
+                _, name, toks, ln = it
+                self.env[name] = self.const_eval(toks)
+
+        def add_sym(name, sym, line, what):
+            if name in self.syms:
+                self.diag("MC010", line, f"duplicate declaration of `{name}`")
+            else:
+                self.syms[name] = sym
+
+        for p in m.ports:
+            s = Sym(p, dir_=p.dir, width=self.eval_range(p.rng))
+            add_sym(p.name, s, p.line, "port")
+            if p.dir == "input":
+                s.drivers.append((self.site(), None, p.line))
+        for name, _toks, ln in m.params:
+            add_sym(name, Sym(None, width="param"), ln, "parameter")
+            self.syms[name].kind = "param"
+        def collect(items, gen_scoped):
+            for it in items:
+                if it[0] == "localparam":
+                    _, name, _toks, ln = it
+                    add_sym(name, Sym(None, width="param"), ln, "localparam")
+                    self.syms[name].kind = "param"
+                elif it[0] == "decl":
+                    d = it[1]
+                    if gen_scoped and d.name in self.syms:
+                        continue  # replicated per generate iteration/branch
+                    sizes = []
+                    for dim in d.unpacked:
+                        kind, a, b = dim
+                        if kind == "size":
+                            sizes.append(self.const_eval(a))
+                        else:
+                            lo, hi = self.const_eval(a), self.const_eval(b)
+                            sizes.append(hi - lo + 1 if lo is not None and hi is not None else None)
+                    s = Sym(d, width=self.eval_range(d.rng), unpacked_sizes=sizes)
+                    s.kind = d.kind
+                    s.gen_scoped = gen_scoped
+                    add_sym(d.name, s, d.line, d.kind)
+                    if d.kind == "genvar":
+                        self.genvars.add(d.name)
+                elif it[0] == "gen_for":
+                    collect(it[5], True)
+                elif it[0] == "gen_if":
+                    _, cond, then, els, _ln = it
+                    c = self.const_eval(cond)
+                    if c is None:
+                        collect(then, True)
+                        collect(els, True)
+                    elif c != 0:
+                        collect(then, True)
+                    else:
+                        collect(els, True)
+
+        collect(m.items, False)
+
+        # walk
+        self.walk_items(m.items, {})
+
+        # MC005: multiply-driven
+        for name, s in self.syms.items():
+            kind = getattr(s, "kind", "port" if s.dir else "net")
+            if kind in ("genvar", "integer", "param"):
+                continue
+            if getattr(s, "gen_scoped", False):
+                continue  # per-iteration nets: each elaborated copy has one driver
+            if len(s.drivers) > 1:
+                ranges = [r for (_sid, r, _ln) in s.drivers]
+                if all(r is not None for r in ranges):
+                    spans = sorted(ranges)
+                    overlap = any(spans[i][1] >= spans[i + 1][0] for i in range(len(spans) - 1))
+                    if not overlap:
+                        continue
+                sites = {sid for (sid, _r, _ln) in s.drivers}
+                if len(sites) > 1:
+                    ln = s.drivers[1][2]
+                    self.diag("MC005", ln, f"`{name}` driven from {len(sites)} sites")
+        # MC006: declared but never referenced
+        for name, s in self.syms.items():
+            kind = getattr(s, "kind", None)
+            if s.dir is not None or kind in ("param", "genvar"):
+                continue
+            ext = sum(1 for (sid, _r, _ln) in s.drivers)
+            if s.refs == 0 and ext == 0:
+                line = s.decl.line if s.decl else self.mod.line
+                self.diag("MC006", line, f"`{name}` is never referenced")
+
+    def eval_range(self, rng):
+        if rng is None:
+            return None
+        msb, lsb = self.const_eval(rng[0]), self.const_eval(rng[1])
+        if msb is None or lsb is None:
+            return "unknown"
+        return (min(msb, lsb), max(msb, lsb))
+
+    # -- item walking --
+    def walk_items(self, items, genv):
+        for it in items:
+            kind = it[0]
+            if kind in ("localparam",):
+                continue
+            elif kind == "decl":
+                d, init = it[1], it[2]
+                if init is not None:
+                    self.scan_expr(init, genv, it[1].line)
+                    s = self.syms.get(d.name)
+                    if s is not None:
+                        s.drivers.append((self.site(), None, d.line))
+            elif kind == "assign":
+                _, lhs, rhs, ln = it
+                self.drive_lhs(lhs, genv, ln, self.site())
+                self.scan_expr(rhs, genv, ln)
+            elif kind == "always":
+                _, sens, stmt, ln = it
+                self.scan_sensitivity(sens, ln)
+                self.walk_stmt(stmt, genv, self.site())
+            elif kind == "gen_for":
+                self.walk_gen_for(it, genv)
+            elif kind == "gen_if":
+                _, cond, then, els, ln = it
+                c = self.const_eval(cond, genv)
+                if c is None:
+                    # non-elaborable condition: walk both branches
+                    self.walk_items(then, genv)
+                    self.walk_items(els, genv)
+                elif c != 0:
+                    self.walk_items(then, genv)
+                else:
+                    self.walk_items(els, genv)
+            elif kind == "inst":
+                self.walk_inst(it, genv)
+            else:
+                raise AssertionError(kind)
+
+    def walk_gen_for(self, it, genv):
+        _, var, init, cond, step, body, ln = it
+        v = self.const_eval(init, genv)
+        if v is None:
+            self.walk_items(body, dict(genv, **{var: None}))
+            return
+        # count iterations first to decide sampling
+        vals, x, guard = [], v, 0
+        while True:
+            genv2 = dict(genv)
+            genv2[var] = x
+            c = self.const_eval(cond, genv2)
+            if c is None or c == 0:
+                break
+            vals.append(x)
+            x2 = self.const_eval(step, genv2)
+            if x2 is None or x2 == x:
+                break
+            x = x2
+            guard += 1
+            if guard > LOOP_GUARD:
+                break
+        sample = vals
+        if len(vals) > GEN_UNROLL_CAP:
+            sample = vals[:GEN_SAMPLE] + vals[-GEN_SAMPLE:]
+        for x in sample:
+            genv2 = dict(genv)
+            genv2[var] = x
+            self.walk_items(body, genv2)
+
+    def scan_sensitivity(self, sens, ln):
+        for k, txt, tln in sens:
+            if k == "id" and txt not in KEYWORDS:
+                self.ref_read(txt, tln)
+
+    def walk_stmt(self, stmt, genv, site):
+        kind = stmt[0]
+        if kind == "block":
+            for s in stmt[1]:
+                self.walk_stmt(s, genv, site)
+        elif kind == "if":
+            _, cond, then, els, ln = stmt
+            self.scan_expr(cond, genv, ln)
+            self.walk_stmt(then, genv, site)
+            if els is not None:
+                self.walk_stmt(els, genv, site)
+        elif kind == "for":
+            _, init, cond, step, body, ln = stmt
+            for sub in (init, step):
+                if sub[0] == "passign":
+                    self.drive_lhs(sub[1], genv, sub[3], site)
+                    self.scan_expr(sub[2], genv, sub[3])
+            self.scan_expr(cond, genv, ln)
+            self.walk_stmt(body, genv, site)
+        elif kind == "passign":
+            _, lhs, rhs, ln = stmt
+            self.drive_lhs(lhs, genv, ln, site)
+            self.scan_expr(rhs, genv, ln)
+        elif kind == "expr":
+            self.scan_expr(stmt[1], genv, stmt[2])
+
+    # -- instances --
+    def walk_inst(self, it, genv):
+        _, modname, overrides, inst, conns, ln = it
+        target = self.mtab.get(modname)
+        if target is None:
+            self.diag("MC007", ln, f"instantiation of unknown module `{modname}`")
+        # parameter env of the instantiated module
+        tenv = {}
+        if target is not None:
+            over = {}
+            for pname, vtoks, pln in overrides:
+                if pname not in {p[0] for p in target.params}:
+                    self.diag("MC008", pln, f"`{modname}` has no parameter `{pname}`")
+                over[pname] = self.const_eval(vtoks, genv)
+                self.scan_expr(vtoks, genv, pln)
+            for pname, dflt, _pln in target.params:
+                tenv[pname] = over.get(pname, const_eval_in(dflt, tenv))
+            for jt in target.items:
+                if jt[0] == "localparam":
+                    tenv[jt[1]] = const_eval_in(jt[2], tenv)
+            fports = {p.name: p for p in target.ports}
+        else:
+            for pname, vtoks, pln in overrides:
+                self.scan_expr(vtoks, genv, pln)
+            fports = {}
+        for pname, conn, pln in conns:
+            if target is not None and pname not in fports:
+                self.diag("MC008", pln, f"`{modname}` has no port `{pname}`")
+            if not conn:  # explicitly unconnected: .out_exp()
+                continue
+            fp = fports.get(pname)
+            drives = fp is not None and fp.dir == "output"
+            if drives:
+                self.drive_lhs(conn, genv, pln, self.site())
+            else:
+                info = self.scan_expr(conn, genv, pln)
+                info_w = info.width
+                self._check_conn_width(modname, pname, fp, tenv, info, pln)
+                continue
+            # width check for output conns too
+            info = self.lhs_info
+            self._check_conn_width(modname, pname, fp, tenv, info, pln)
+
+    def _check_conn_width(self, modname, pname, fp, tenv, info, ln):
+        if fp is None or info is None:
+            return
+        if fp.rng is None:
+            formal = 1
+        else:
+            msb = const_eval_in(fp.rng[0], tenv)
+            lsb = const_eval_in(fp.rng[1], tenv)
+            if msb is None or lsb is None:
+                return
+            formal = abs(msb - lsb) + 1
+        if info.flexible or info.width is None:
+            return
+        if info.width != formal:
+            self.diag(
+                "MC004",
+                ln,
+                f"port `{pname}` of `{modname}` is {formal} bits but connection is {info.width} bits",
+            )
+
+    # -- reference bookkeeping --
+    def ref_read(self, name, ln):
+        s = self.syms.get(name)
+        if s is None:
+            if name in self.env or name in self.genvars:
+                return
+            self.diag("MC001", ln, f"`{name}` is not declared")
+            return
+        s.refs += 1
+
+    def drive_lhs(self, toks, genv, ln, site):
+        """LHS of an assignment / output-port connection."""
+        self.lhs_info = None
+        if not toks:
+            return
+        if toks[0][1] == "{" and toks[0][0] == "punct":
+            # concat LHS: drive each element
+            inner = toks[1:-1]
+            for part in split_top(inner, ","):
+                self.drive_lhs(part, genv, ln, site)
+            self.lhs_info = None
+            return
+        k, name, tln = toks[0]
+        if k != "id" or name in KEYWORDS:
+            self.scan_expr(toks, genv, ln)
+            return
+        s = self.syms.get(name)
+        if s is None:
+            if name not in self.genvars and name not in self.env:
+                self.diag("MC001", tln, f"`{name}` is not declared")
+            # genvar loop index: not a driver site
+            if toks[1:]:
+                self.scan_expr(toks, genv, ln)
+            return
+        kind = getattr(s, "kind", None)
+        # parse trailing selects: reads for the index exprs + bounds checks
+        rng = self.check_selects(s, name, toks[1:], genv, ln)
+        if kind in ("genvar", "integer"):
+            return
+        s.drivers.append((site, rng, ln))
+        w = None
+        if rng is not None:
+            w = rng[1] - rng[0] + 1
+        elif not toks[1:]:
+            if s.rng is None:
+                w = 1 if not s.unpacked else None
+            elif s.rng != "unknown" and not s.unpacked:
+                w = s.rng[1] - s.rng[0] + 1
+        self.lhs_info = ExprInfo(val=None, width=w, flexible=False)
+
+    def check_selects(self, s, name, sel_toks, genv, ln):
+        """Walk `[...]` select groups after an identifier; returns the
+        final const (lo, hi) bit range into the packed vector, if known."""
+        groups = []
+        i = 0
+        while i < len(sel_toks):
+            if sel_toks[i][1] != "[":
+                # stray tokens after selects: scan conservatively
+                self.scan_expr(sel_toks[i:], genv, ln)
+                break
+            depth, j = 1, i + 1
+            while j < len(sel_toks) and depth:
+                t = sel_toks[j][1]
+                if sel_toks[j][0] == "punct":
+                    if t in "([{":
+                        depth += 1
+                    elif t == "[":
+                        depth += 1
+                    elif t in ")]}":
+                        depth -= 1
+                j += 1
+            groups.append(sel_toks[i + 1 : j - 1])
+            i = j
+        unpacked_left = list(s.unpacked)
+        final = None
+        for g in groups:
+            parts = split_sel(g)
+            for p in parts[1]:
+                self.scan_expr(p, genv, ln)
+            kind, exprs = parts
+            vals = [self.const_eval(e, genv) for e in exprs]
+            if unpacked_left:
+                size = unpacked_left.pop(0)
+                if kind == "index" and vals[0] is not None and size is not None:
+                    if not (0 <= vals[0] < size):
+                        self.diag("MC003", ln, f"`{name}` index {vals[0]} outside [0:{size - 1}]")
+                elif kind != "index":
+                    self.diag("MC003", ln, f"part-select on unpacked dimension of `{name}`")
+                continue
+            rng = s.rng
+            if rng == "unknown":
+                continue
+            lo, hi = (0, 0) if rng is None else rng
+            if kind == "index":
+                if vals[0] is not None and not (lo <= vals[0] <= hi):
+                    self.diag("MC003", ln, f"`{name}[{vals[0]}]` outside [{hi}:{lo}]")
+                if vals[0] is not None:
+                    final = (vals[0], vals[0])
+                rng = None
+                s = _BIT  # further selects treated as 1-bit
+            elif kind == "range":
+                a, b = vals
+                if a is not None and b is not None:
+                    if a < b:
+                        self.diag("MC002", ln, f"reversed part-select `{name}[{a}:{b}]`")
+                    elif not (lo <= b and a <= hi):
+                        self.diag("MC003", ln, f"`{name}[{a}:{b}]` outside [{hi}:{lo}]")
+                    else:
+                        final = (b, a)
+            elif kind == "plus":
+                base, w = vals
+                if w is not None and w <= 0:
+                    self.diag("MC002", ln, f"empty `+:` width {w} on `{name}`")
+                elif base is not None and w is not None:
+                    if not (lo <= base and base + w - 1 <= hi):
+                        self.diag(
+                            "MC003", ln, f"`{name}[{base} +: {w}]` outside [{hi}:{lo}]"
+                        )
+                    else:
+                        final = (base, base + w - 1)
+            elif kind == "minus":
+                base, w = vals
+                if w is not None and w <= 0:
+                    self.diag("MC002", ln, f"empty `-:` width {w} on `{name}`")
+                elif base is not None and w is not None:
+                    if not (lo <= base - w + 1 and base <= hi):
+                        self.diag(
+                            "MC003", ln, f"`{name}[{base} -: {w}]` outside [{hi}:{lo}]"
+                        )
+                    else:
+                        final = (base - w + 1, base)
+        return final
+
+    # -- expressions --
+    def scan_expr(self, toks, genv, ln):
+        """Scan an expression: record reads, run select checks, and return
+        ExprInfo (const value / width / flexible) when derivable."""
+        try:
+            p = _EP(self, toks, genv, ln)
+            info = p.expr()
+            return info
+        except _EvalBail:
+            return ExprInfo()
+
+    def const_eval(self, toks, genv=None):
+        saved = list(self.diags)
+        # const evaluation must not double-report: diagnostics and ref
+        # counting happen in scan; here we evaluate silently
+        try:
+            p = _EP(self, toks, genv or {}, 0, silent=True)
+            info = p.expr()
+            return info.val
+        except _EvalBail:
+            return None
+        finally:
+            del self.diags[:]
+            self.diags.extend(saved)
+
+
+class _BitSym:
+    rng = None
+    unpacked = []
+
+
+_BIT = _BitSym()
+
+
+def const_eval_in(toks, env):
+    """Evaluate with a plain env only (no module symbols)."""
+    try:
+        p = _EP(None, toks, env, 0, silent=True)
+        return p.expr().val
+    except _EvalBail:
+        return None
+
+
+def split_top(toks, sep):
+    out, cur, depth = [], [], 0
+    for t in toks:
+        if t[0] == "punct":
+            if t[1] in "([{":
+                depth += 1
+            elif t[1] in ")]}":
+                depth -= 1
+            elif t[1] == sep and depth == 0:
+                out.append(cur)
+                cur = []
+                continue
+        cur.append(t)
+    out.append(cur)
+    return out
+
+
+def split_sel(toks):
+    """Classify one select group: index/range/plus/minus + part exprs."""
+    depth = 0
+    for j, t in enumerate(toks):
+        if t[0] == "punct":
+            if t[1] in "([{":
+                depth += 1
+            elif t[1] in ")]}":
+                depth -= 1
+            elif depth == 0 and t[1] == "+:":
+                return ("plus", [toks[:j], toks[j + 1 :]])
+            elif depth == 0 and t[1] == "-:":
+                return ("minus", [toks[:j], toks[j + 1 :]])
+            elif depth == 0 and t[1] == ":":
+                return ("range", [toks[:j], toks[j + 1 :]])
+    return ("index", [toks])
+
+
+class _EvalBail(Exception):
+    pass
+
+
+class _EP:
+    """Pratt-style expression parser: records reads + select checks via
+    the owning ModAnalyzer (unless silent) and computes const value /
+    width / flexibility where derivable."""
+
+    def __init__(self, an, toks, env, ln, silent=False):
+        self.an, self.toks, self.env, self.ln = an, toks, env, ln
+        self.silent = silent
+        self.i = 0
+
+    def peek(self):
+        return self.toks[self.i] if self.i < len(self.toks) else ("eof", "", self.ln)
+
+    def next(self):
+        t = self.peek()
+        self.i += 1
+        return t
+
+    def at(self, txt):
+        return self.peek()[1] == txt and self.peek()[0] == "punct"
+
+    def expr(self):
+        info = self.ternary()
+        # trailing junk is tolerated (scanned conservatively)
+        while self.peek()[0] != "eof":
+            t = self.next()
+            if t[0] == "id" and t[1] not in KEYWORDS:
+                self.read(t[1], t[2])
+            info = ExprInfo()
+        return info
+
+    def read(self, name, ln):
+        if self.an is None:
+            return
+        if self.silent:
+            return
+        self.an.ref_read(name, ln)
+
+    def lookup(self, name):
+        if name in self.env:
+            return self.env[name]
+        if self.an is not None and name in self.an.env:
+            return self.an.env[name]
+        return None
+
+    def ternary(self):
+        c = self.binary(0)
+        if self.at("?"):
+            self.next()
+            a = self.ternary()
+            if self.at(":"):
+                self.next()
+            b = self.ternary()
+            if c.val is not None:
+                return a if c.val != 0 else b
+            w = a.width if a.width == b.width else None
+            return ExprInfo(None, w, a.flexible and b.flexible)
+        return c
+
+    LEVELS = [
+        ("||",),
+        ("&&",),
+        ("|",),
+        ("^",),
+        ("&",),
+        ("==", "!="),
+        ("<", ">", "<=", ">="),
+        ("<<", ">>"),
+        ("+", "-"),
+        ("*", "/", "%"),
+    ]
+
+    def binary(self, lvl):
+        if lvl >= len(self.LEVELS):
+            return self.unary()
+        ops = self.LEVELS[lvl]
+        left = self.binary(lvl + 1)
+        while self.peek()[0] == "punct" and self.peek()[1] in ops:
+            op = self.next()[1]
+            right = self.binary(lvl + 1)
+            left = self.apply(op, left, right)
+        return left
+
+    @staticmethod
+    def apply(op, a, b):
+        if a.val is None or b.val is None:
+            return ExprInfo()
+        x, y = a.val, b.val
+        try:
+            v = {
+                "||": lambda: int(bool(x) or bool(y)),
+                "&&": lambda: int(bool(x) and bool(y)),
+                "|": lambda: x | y,
+                "^": lambda: x ^ y,
+                "&": lambda: x & y,
+                "==": lambda: int(x == y),
+                "!=": lambda: int(x != y),
+                "<": lambda: int(x < y),
+                ">": lambda: int(x > y),
+                "<=": lambda: int(x <= y),
+                ">=": lambda: int(x >= y),
+                "<<": lambda: x << y,
+                ">>": lambda: x >> y,
+                "+": lambda: x + y,
+                "-": lambda: x - y,
+                "*": lambda: x * y,
+                "/": lambda: x // y if y else None,
+                "%": lambda: x % y if y else None,
+            }[op]()
+        except (ValueError, OverflowError):
+            v = None
+        return ExprInfo(v, None, False)
+
+    def unary(self):
+        k, txt, ln = self.peek()
+        if k == "punct" and txt in ("!", "~", "-", "+", "&", "|", "^"):
+            self.next()
+            a = self.unary()
+            if a.val is None:
+                return ExprInfo()
+            v = {
+                "!": lambda: int(a.val == 0),
+                "~": lambda: ~a.val,
+                "-": lambda: -a.val,
+                "+": lambda: a.val,
+                "&": lambda: int(a.val != 0),  # approximate reductions
+                "|": lambda: int(a.val != 0),
+                "^": lambda: None,
+            }[txt]()
+            if v is None:
+                return ExprInfo()
+            return ExprInfo(v, None, False)
+        return self.primary()
+
+    def primary(self):
+        k, txt, ln = self.next()
+        if k == "num":
+            w, v, flex = num_info(txt)
+            return ExprInfo(v, w if w is not None else None, flex)
+        if k == "sys":
+            # $clog2(expr) and friends
+            if self.at("("):
+                self.next()
+                depth = 1
+                inner = []
+                while depth:
+                    t = self.next()
+                    if t[0] == "eof":
+                        raise _EvalBail()
+                    if t[0] == "punct" and t[1] == "(":
+                        depth += 1
+                    elif t[0] == "punct" and t[1] == ")":
+                        depth -= 1
+                        if depth == 0:
+                            break
+                    inner.append(t)
+                sub = _EP(self.an, inner, self.env, ln, self.silent)
+                a = sub.expr()
+                if txt == "$clog2" and a.val is not None and a.val >= 0:
+                    return ExprInfo(clog2(a.val), None, True)
+                return ExprInfo()
+            return ExprInfo()
+        if k == "punct" and txt == "(":
+            inner = self.balanced_until(")")
+            sub = _EP(self.an, inner, self.env, ln, self.silent)
+            return sub.ternary_all()
+        if k == "punct" and txt == "{":
+            inner = self.balanced_until("}")
+            return self.concat(inner, ln)
+        if k == "id" and txt not in KEYWORDS:
+            self.read(txt, ln)
+            v = self.lookup(txt)
+            # trailing selects
+            sel = []
+            while self.at("["):
+                self.next()
+                inner = self.balanced_until("]")
+                sel.append(inner)
+            if sel:
+                return self.select_info(txt, sel, ln)
+            width = None
+            if self.an is not None and txt in self.an.syms:
+                s = self.an.syms[txt]
+                if s.rng is None and not s.unpacked:
+                    width = 1
+                elif isinstance(s.rng, tuple) and not s.unpacked:
+                    width = s.rng[1] - s.rng[0] + 1
+            if v is not None:
+                return ExprInfo(v, width, width is None)
+            return ExprInfo(None, width, False)
+        raise _EvalBail()
+
+    def ternary_all(self):
+        info = self.ternary()
+        if self.peek()[0] != "eof":
+            while self.peek()[0] != "eof":
+                t = self.next()
+                if t[0] == "id" and t[1] not in KEYWORDS:
+                    self.read(t[1], t[2])
+            return ExprInfo()
+        return info
+
+    def balanced_until(self, close):
+        opener = {")": "(", "]": "[", "}": "{"}[close]
+        depth, out = 1, []
+        while True:
+            t = self.next()
+            if t[0] == "eof":
+                raise _EvalBail()
+            if t[0] == "punct":
+                if t[1] in "([{":
+                    depth += 1
+                elif t[1] in ")]}":
+                    depth -= 1
+                    if depth == 0:
+                        break
+            out.append(t)
+        return out
+
+    def select_info(self, name, sel_groups, ln):
+        """Identifier followed by select groups (already read-marked by
+        check_selects via the analyzer when not silent)."""
+        if self.an is None or self.silent:
+            return ExprInfo()
+        s = self.an.syms.get(name)
+        if s is None:
+            # undeclared already reported by self.read
+            return ExprInfo()
+        flat = []
+        for g in sel_groups:
+            flat.append(("punct", "[", ln))
+            flat.extend(g)
+            flat.append(("punct", "]", ln))
+        rng = self.an.check_selects(s, name, flat, self.env, ln)
+        if rng is not None:
+            return ExprInfo(None, rng[1] - rng[0] + 1, False)
+        # non-const select of a packed vector: single index = 1 bit wide
+        unpacked = len(s.unpacked)
+        packed_groups = len(sel_groups) - unpacked
+        if packed_groups == 1 and split_sel(sel_groups[-1])[0] == "index":
+            return ExprInfo(None, 1, False)
+        if packed_groups <= 0 and unpacked and len(sel_groups) == unpacked:
+            # full unpacked index: element width = packed range
+            if isinstance(s.rng, tuple):
+                return ExprInfo(None, s.rng[1] - s.rng[0] + 1, False)
+            if s.rng is None:
+                return ExprInfo(None, 1, False)
+        return ExprInfo()
+
+    def concat(self, inner, ln):
+        """{a, b, c} or replication {N{expr}}."""
+        parts = split_top(inner, ",")
+        if len(parts) == 1:
+            # check replication: expr { ... } — find a depth-0 '{'
+            depth = 0
+            for j, t in enumerate(parts[0]):
+                if t[0] == "punct":
+                    if t[1] == "{" and depth == 0 and j > 0:
+                        count_toks = parts[0][:j]
+                        # inner body is parts[0][j+1:-1] (strip closing '}')
+                        body = parts[0][j + 1 : -1]
+                        cnt = _EP(self.an, count_toks, self.env, ln, True).safe_val()
+                        scan = _EP(self.an, body, self.env, ln, self.silent)
+                        b = scan.ternary_all()
+                        # count tokens are reads too
+                        _EP(self.an, count_toks, self.env, ln, self.silent).ternary_all()
+                        if cnt is not None and cnt < 0:
+                            if self.an is not None and not self.silent:
+                                self.an.diag("MC002", ln, f"negative replication count {cnt}")
+                            return ExprInfo()
+                        if cnt is not None and b.width is not None:
+                            return ExprInfo(None, cnt * b.width, False)
+                        if cnt == 0:
+                            return ExprInfo(None, 0, False)
+                        return ExprInfo()
+                    if t[1] in "([{":
+                        depth += 1
+                    elif t[1] in ")]}":
+                        depth -= 1
+        widths, total = [], 0
+        known = True
+        for p in parts:
+            sub = _EP(self.an, p, self.env, ln, self.silent)
+            info = sub.ternary_all()
+            if info.width is None:
+                known = False
+            else:
+                total += info.width
+        if known and parts:
+            return ExprInfo(None, total, False)
+        return ExprInfo()
+
+    def safe_val(self):
+        try:
+            return self.ternary_all().val
+        except _EvalBail:
+            return None
+
+
+def clog2(v):
+    if v <= 1:
+        return 0
+    return (v - 1).bit_length()
+
+
+# ---------------------------------------------------------------------------
+# file-set entry point (mirrors check::sv::check_files)
+# ---------------------------------------------------------------------------
+
+def check_files(files):
+    """files: dict name -> source. Returns (diags, module_table)."""
+    diags, mtab, parsed = [], {}, []
+    for fname in sorted(files):
+        try:
+            mods = Parser(tokenize(files[fname])).parse_file()
+            for m in mods:
+                mtab[m.name] = m
+            parsed.append((fname, mods))
+        except ParseErr as e:
+            diags.append(Diag("MC009", fname, e.line, e.msg))
+    for fname, mods in parsed:
+        for m in mods:
+            ModAnalyzer(m, mtab, fname, diags).run()
+    # dedup (code, file, line, message)
+    seen, out = set(), []
+    for d in diags:
+        key = (d.code, d.file, d.line, d.message)
+        if key not in seen:
+            seen.add(key)
+            out.append(d)
+    return out, mtab
+
+
+def params_of(mtab, name):
+    """Evaluated default parameters of a module (for contract checks)."""
+    m = mtab.get(name)
+    if m is None:
+        return None
+    env = {}
+    for pname, toks, _ln in m.params:
+        env[pname] = const_eval_in(toks, env)
+    for it in m.items:
+        if it[0] == "localparam":
+            env[it[1]] = const_eval_in(it[2], env)
+    return env
+
+
+# ---------------------------------------------------------------------------
+# emit::templates mirrors (structural equivalents of the Rust generators)
+# ---------------------------------------------------------------------------
+
+BLOCK_FORMATS = ("mxint", "bmf", "bl")
+
+
+def ceil_div(a, b):
+    return -(-a // b)
+
+
+def elem_bits(fmt, knob):
+    return {
+        "mxint": knob + 1,
+        "bmf": knob + 4,
+        "bl": knob + 2,
+        "int": knob,
+        "fp8": 8,
+        "fp32": 32,
+    }[fmt]
+
+
+def unpacker_cfg(fmt, m, tile, channel_bits):
+    """Mirror of templates::unpacker_config (single sizing source)."""
+    r, c = tile
+    groups = ceil_div(r, 16) * ceil_div(c, 2)
+    eb = elem_bits(fmt, m)
+    group_w = ceil_div(32 * eb, 64) * 64
+    tile_bits = groups * (group_w + 8)
+    chan = max(tile_bits, 1) if channel_bits == 0 else channel_bits
+    beats = max(ceil_div(tile_bits, chan), 1)
+    return dict(
+        chan=chan, beats=beats, elem=eb, groups=groups,
+        group_w=group_w, tile_bits=tile_bits, lanes=r * c,
+    )
+
+
+def mxint_acc_bits(m):
+    return 2 * (m + 1) + 5 - 1
+
+
+def handshake_ports(in_w, out_w):
+    return (
+        "    input  logic                 clk,\n"
+        "    input  logic                 rst_n,\n"
+        "    input  logic                 in_valid,\n"
+        "    output logic                 in_ready,\n"
+        f"    input  logic [{in_w}-1:0]  in_data,\n"
+        "    output logic                 out_valid,\n"
+        "    input  logic                 out_ready,\n"
+        f"    output logic [{out_w}-1:0] out_data"
+    )
+
+
+def mxint_dot_product(module, mantissa, tile_r, tile_c):
+    lanes = tile_r * tile_c
+    w = mantissa + 1
+    acc_w = mxint_acc_bits(mantissa)
+    ports = handshake_ports("2*LANES*MAN_W", "LANES*MAN_W*2")
+    return f"""// MXInt dot-product operator (python mirror)
+module {module} #(
+    parameter MAN_W  = {w},
+    parameter TILE_R = {tile_r},
+    parameter TILE_C = {tile_c},
+    parameter LANES  = {lanes},
+    parameter ACC_W  = {acc_w}
+) (
+{ports},
+    input  logic [7:0]           in_exp_a,
+    input  logic [7:0]           in_exp_b,
+    output logic [7:0]           out_exp
+);
+    logic signed [MAN_W-1:0] mant_a [LANES];
+    logic signed [MAN_W-1:0] mant_b [LANES];
+    logic signed [ACC_W-1:0] acc    [LANES];
+    integer i;
+    always_ff @(posedge clk or negedge rst_n) begin
+        if (!rst_n) begin
+            for (i = 0; i < LANES; i = i + 1) acc[i] <= '0;
+            out_valid <= 1'b0;
+        end else if (in_valid && in_ready) begin
+            for (i = 0; i < LANES; i = i + 1) begin
+                mant_a[i] <= in_data[i*MAN_W +: MAN_W];
+                mant_b[i] <= in_data[(LANES+i)*MAN_W +: MAN_W];
+                acc[i]    <= acc[i] + mant_a[i] * mant_b[i];
+            end
+            out_valid <= 1'b1;
+        end else if (out_valid && out_ready) begin
+            out_valid <= 1'b0;
+        end
+    end
+    assign out_exp  = in_exp_a + in_exp_b;
+    assign in_ready = !out_valid || out_ready;
+    assign out_data = {{acc[0][ACC_W-1:ACC_W-MAN_W*2], {{(LANES-1)*MAN_W*2{{1'b0}}}}}};
+endmodule
+"""
+
+
+def mx_unpacker(module, fmt, m, tile, channel_bits):
+    cfg = unpacker_cfg(fmt, m, tile, channel_bits)
+    shift_update = (
+        "shift <= {in_data, shift[BEATS*CHAN_W-1:CHAN_W]};"
+        if cfg["beats"] > 1
+        else "shift <= in_data; // single-beat tile"
+    )
+    ports = handshake_ports("CHAN_W", "LANES*ELEM_W")
+    return f"""// packed-word stream unpacker (python mirror)
+module {module} #(
+    parameter CHAN_W    = {cfg['chan']},
+    parameter ELEM_W    = {cfg['elem']},
+    parameter LANES     = {cfg['lanes']},
+    parameter TILE_C    = {tile[1]},
+    parameter GROUPS    = {cfg['groups']},
+    parameter GROUP_W   = {cfg['group_w']},
+    parameter BEATS     = {cfg['beats']},
+    parameter TILE_BITS = {cfg['tile_bits']}
+) (
+{ports},
+    output logic [8*GROUPS-1:0]  out_exp
+);
+    logic [BEATS*CHAN_W-1:0] shift;
+    logic [$clog2(BEATS+1)-1:0] cnt;
+    always_ff @(posedge clk or negedge rst_n) begin
+        if (!rst_n) begin
+            cnt <= '0;
+            out_valid <= 1'b0;
+        end else begin
+            if (out_valid && out_ready) begin
+                out_valid <= 1'b0;
+            end
+            if (in_valid && in_ready) begin
+                {shift_update}
+                if (cnt == BEATS - 1) begin
+                    cnt <= '0;
+                    out_valid <= 1'b1;
+                end else begin
+                    cnt <= cnt + 1'b1;
+                end
+            end
+        end
+    end
+    genvar gi;
+    genvar ge;
+    generate
+        for (gi = 0; gi < LANES; gi = gi + 1) begin : g_lane
+            assign out_data[gi*ELEM_W +: ELEM_W] = shift[
+                (((gi/TILE_C)/16)*(TILE_C/2) + (gi%TILE_C)/2)*GROUP_W
+                + (((gi/TILE_C)%16)*2 + (gi%TILE_C)%2)*ELEM_W +: ELEM_W];
+        end
+        for (ge = 0; ge < GROUPS; ge = ge + 1) begin : g_exp
+            assign out_exp[ge*8 +: 8] = shift[GROUPS*GROUP_W + ge*8 +: 8];
+        end
+    endgenerate
+    assign in_ready = !out_valid || out_ready;
+endmodule
+"""
+
+
+def block_exponent_unit(module):
+    ports = handshake_ports("N*8", "N*8")
+    return f"""// shared-exponent (max-tree) unit (python mirror)
+module {module} #(
+    parameter N = 32
+) (
+{ports}
+);
+    logic [7:0] exps [N];
+    logic [7:0] max_exp;
+    integer i;
+    always_comb begin
+        max_exp = 8'd0;
+        for (i = 0; i < N; i = i + 1) begin
+            exps[i] = in_data[i*8 +: 8];
+            if (exps[i] > max_exp) max_exp = exps[i];
+        end
+    end
+    assign out_data  = {{{{(N-1)*8{{1'b0}}}}, max_exp}};
+    assign out_valid = in_valid;
+    assign in_ready  = out_ready;
+endmodule
+"""
+
+
+def mxint_cast(module, from_m, to_m):
+    ports = handshake_ports("FROM_W", "TO_W")
+    return f"""// MXInt precision cast (python mirror)
+module {module} (
+{ports}
+);
+    localparam FROM_W = {from_m + 1};
+    localparam TO_W   = {to_m + 1};
+    generate
+        if (TO_W >= FROM_W) begin : g_extend
+            assign out_data = {{in_data, {{(TO_W-FROM_W){{1'b0}}}}}};
+        end else begin : g_truncate_rne
+            wire guard  = in_data[FROM_W-TO_W-1];
+            wire sticky = |in_data[FROM_W-TO_W-1:0];
+            wire lsb    = in_data[FROM_W-TO_W];
+            assign out_data = in_data[FROM_W-1:FROM_W-TO_W] + (guard & (sticky | lsb));
+        end
+    endgenerate
+    assign out_valid = in_valid;
+    assign in_ready  = out_ready;
+endmodule
+"""
+
+
+def stream_fifo(module, depth):
+    ports = handshake_ports("W", "W")
+    return f"""// handshake FIFO (python mirror)
+module {module} #(
+    parameter W = 32,
+    parameter DEPTH = {depth}
+) (
+{ports}
+);
+    logic [W-1:0] mem [DEPTH];
+    logic [$clog2(DEPTH):0] count;
+    logic [$clog2(DEPTH)-1:0] rd_ptr, wr_ptr;
+    wire do_write = in_valid && in_ready;
+    wire do_read  = out_valid && out_ready;
+    always_ff @(posedge clk or negedge rst_n) begin
+        if (!rst_n) begin
+            count <= '0; rd_ptr <= '0; wr_ptr <= '0;
+        end else begin
+            if (do_write) begin mem[wr_ptr] <= in_data; wr_ptr <= wr_ptr + 1'b1; end
+            if (do_read)  begin rd_ptr <= rd_ptr + 1'b1; end
+            count <= count + do_write - do_read;
+        end
+    end
+    assign in_ready  = (count < DEPTH);
+    assign out_valid = (count > 0);
+    assign out_data  = mem[rd_ptr];
+endmodule
+"""
+
+
+def fixed_function(module, kind, lanes):
+    ports = handshake_ports("W*LANES", "W*LANES")
+    return f"""// {kind} operator (python mirror)
+module {module} #(
+    parameter W = 32,
+    parameter LANES = {lanes}
+) (
+{ports}
+);
+    logic [W*LANES-1:0] stage;
+    always_ff @(posedge clk or negedge rst_n) begin
+        if (!rst_n) begin
+            stage <= '0; out_valid <= 1'b0;
+        end else if (in_valid && in_ready) begin
+            stage <= in_data;
+            out_valid <= 1'b1;
+        end else if (out_valid && out_ready) begin
+            out_valid <= 1'b0;
+        end
+    end
+    assign out_data = stage;
+    assign in_ready = !out_valid || out_ready;
+endmodule
+"""
+
+
+def template_for(kind, design_fmt, mantissa, tile):
+    name = f"{design_fmt}_{kind}_m{mantissa}_t{tile[0]}x{tile[1]}"
+    if kind in ("linear", "attention"):
+        return name, mxint_dot_product(name, max(mantissa, 1), tile[0], tile[1])
+    return name, fixed_function(name, kind, tile[0] * tile[1])
+
+
+# ---------------------------------------------------------------------------
+# the NEW emit::verilog top-level wiring (blueprint for the Rust rewrite)
+# ---------------------------------------------------------------------------
+
+def adapt(net, frm, to):
+    if frm == to:
+        return net
+    if frm > to:
+        return f"{net}[{to - 1}:0]"
+    return "{" + "{" + str(to - frm) + "{1'b0}}" + ", " + net + "}"
+
+
+def gen_top(name, ops, channel_bits, design_fmt):
+    files = {
+        "stream_fifo.sv": stream_fifo("stream_fifo", 4),
+        "block_exponent.sv": block_exponent_unit("block_exponent"),
+    }
+    vals = {op["result"]: op for op in ops if op.get("result") is not None}
+    width = {}
+    for op in ops:
+        r = op.get("result")
+        if r is None:
+            continue
+        lanes = op["tile"][0] * op["tile"][1]
+        if op["kind"] in ("input", "output"):
+            width[r] = 32
+        elif op["kind"] in ("linear", "attention"):
+            width[r] = lanes * (max(op["m"], 1) + 1) * 2
+        else:
+            width[r] = 32 * lanes
+    wires, body = [], []
+    ready_of, streams = {}, []
+    instances = 0
+    src_ready_expr = None
+    sink_done = False
+    for op in ops:
+        kind = op["kind"]
+        if kind == "input":
+            r = op["result"]
+            net = f"v{r}"
+            wires.append(
+                f"    logic {net}_q_valid, {net}_q_ready;\n"
+                f"    logic [31:0] {net}_q_data;\n"
+            )
+            streams.append(r)
+            if src_ready_expr is None:
+                body.append(
+                    f"    assign {net}_q_valid = src_valid;\n"
+                    f"    assign {net}_q_data = src_data;\n"
+                )
+                src_ready_expr = f"{net}_q_ready"
+            else:
+                body.append(
+                    f"    assign {net}_q_valid = 1'b0;\n"
+                    f"    assign {net}_q_data = '0;\n"
+                )
+            continue
+        if kind == "output":
+            if sink_done or not op["args"]:
+                continue
+            a = op["args"][0]
+            body.append(
+                f"    assign sink_valid = v{a}_q_valid;\n"
+                f"    assign sink_data = {adapt(f'v{a}_q_data', width[a], 32)};\n"
+            )
+            ready_of.setdefault(a, []).append("sink_ready")
+            sink_done = True
+            continue
+        r = op["result"]
+        net = f"v{r}"
+        w_out = width[r]
+        tile = op["tile"]
+        mod_name, src = template_for(kind, design_fmt, op["m"], tile)
+        files.setdefault(f"{mod_name}.sv", src)
+        wires.append(
+            f"    logic {net}_valid, {net}_ready, {net}_q_valid, {net}_q_ready;\n"
+            f"    logic [{w_out - 1}:0] {net}_data;\n"
+            f"    logic [{w_out - 1}:0] {net}_q_data;\n"
+            f"    logic {net}_in_rdy;\n"
+        )
+        streams.append(r)
+        is_gemm = kind in ("linear", "attention")
+        a = op["args"][0] if op["args"] else None
+        if a is not None:
+            ready_of.setdefault(a, []).append(f"{net}_in_rdy")
+        up = None
+        if is_gemm and a is not None:
+            va = vals.get(a)
+            if va is not None and va["fmt"] in BLOCK_FORMATS:
+                m_in = max(va["m"], 1)
+                cfg = unpacker_cfg(va["fmt"], m_in, va["tile"], channel_bits)
+                up_name = (
+                    f"{va['fmt']}_unpack_m{m_in}_t{va['tile'][0]}x{va['tile'][1]}"
+                    f"_c{channel_bits}"
+                )
+                files.setdefault(
+                    f"{up_name}.sv",
+                    mx_unpacker(up_name, va["fmt"], m_in, va["tile"], channel_bits),
+                )
+                upw = cfg["lanes"] * cfg["elem"]
+                wires.append(
+                    f"    logic {net}_up_valid, {net}_up_ready;\n"
+                    f"    logic [{upw - 1}:0] {net}_up_data;\n"
+                    f"    logic [{8 * cfg['groups'] - 1}:0] {net}_up_exp;\n"
+                )
+                body.append(
+                    f"    {up_name} u_{net}_up (\n"
+                    "        .clk(clk), .rst_n(rst_n),\n"
+                    f"        .in_valid(v{a}_q_valid), .in_ready({net}_in_rdy),"
+                    f" .in_data({adapt(f'v{a}_q_data', width[a], cfg['chan'])}),\n"
+                    f"        .out_valid({net}_up_valid), .out_ready({net}_up_ready),"
+                    f" .out_data({net}_up_data),\n"
+                    f"        .out_exp({net}_up_exp)\n"
+                    "    );\n"
+                )
+                instances += 1
+                up = (f"{net}_up", upw)
+        if up is not None:
+            feed_valid = f"{up[0]}_valid"
+            feed_rdy = f"{up[0]}_ready"
+            feed_data = adapt(f"{up[0]}_data", up[1], w_out)
+            exp_a = f"{net}_up_exp[7:0]"
+        elif a is not None:
+            feed_valid = f"v{a}_q_valid"
+            feed_rdy = f"{net}_in_rdy"
+            feed_data = adapt(f"v{a}_q_data", width[a], w_out)
+            exp_a = "8'd0"
+        else:
+            feed_valid = "1'b0"
+            feed_rdy = f"{net}_in_rdy"
+            feed_data = "'0"
+            exp_a = "8'd0"
+        extra = (
+            f",\n        .in_exp_a({exp_a}), .in_exp_b(8'd0), .out_exp()"
+            if is_gemm
+            else ""
+        )
+        body.append(
+            f"    {mod_name} u_{net} (\n"
+            "        .clk(clk), .rst_n(rst_n),\n"
+            f"        .in_valid({feed_valid}), .in_ready({feed_rdy}),"
+            f" .in_data({feed_data}),\n"
+            f"        .out_valid({net}_valid), .out_ready({net}_ready),"
+            f" .out_data({net}_data){extra}\n"
+            "    );\n"
+        )
+        instances += 1
+        body.append(
+            f"    stream_fifo #(.W({w_out}), .DEPTH(4)) fifo_{net} (\n"
+            "        .clk(clk), .rst_n(rst_n),\n"
+            f"        .in_valid({net}_valid), .in_ready({net}_ready),"
+            f" .in_data({net}_data),\n"
+            f"        .out_valid({net}_q_valid), .out_ready({net}_q_ready),"
+            f" .out_data({net}_q_data)\n"
+            "    );\n"
+        )
+        instances += 1
+    for r in streams:
+        rdys = ready_of.pop(r, [])
+        expr = " & ".join(rdys) if rdys else "1'b1"
+        body.append(f"    assign v{r}_q_ready = {expr};\n")
+    tail = ""
+    if src_ready_expr is not None:
+        tail += f"    assign src_ready  = {src_ready_expr};\n"
+    else:
+        tail += "    assign src_ready  = 1'b1;\n"
+    if not sink_done:
+        tail += "    assign sink_valid = 1'b0;\n    assign sink_data  = 32'd0;\n"
+    top = (
+        f"// top-level dataflow accelerator for @{name} (python mirror)\n"
+        f"module {name}_top (\n"
+        "    input  logic        clk,\n"
+        "    input  logic        rst_n,\n"
+        "    input  logic        src_valid,\n"
+        "    output logic        src_ready,\n"
+        "    input  logic [31:0] src_data,\n"
+        "    output logic        sink_valid,\n"
+        "    input  logic        sink_ready,\n"
+        "    output logic [31:0] sink_data\n"
+        ");\n" + "".join(wires) + "\n" + "".join(body) + tail + "endmodule\n"
+    )
+    files["top.sv"] = top
+    return files, instances
+
+
+# ---------------------------------------------------------------------------
+# harness
+# ---------------------------------------------------------------------------
+
+FAILS = []
+
+
+def check(label, cond, detail=""):
+    mark = "PASS" if cond else "FAIL"
+    print(f"  [{mark}] {label}" + ("" if cond else f"  <-- {detail}"))
+    if not cond:
+        FAILS.append(label)
+
+
+def fmt_diags(diags):
+    return "; ".join(f"{d.code}@{d.file}:{d.line} {d.message}" for d in diags[:6])
+
+
+def expect_clean(label, files):
+    diags, _ = check_files(files)
+    check(label, not diags, fmt_diags(diags))
+
+
+def s1_template_grid():
+    print("S1: per-template zero-diagnostics grid")
+    for m in (1, 3, 5, 8):
+        for tile in ((8, 4), (16, 2), (32, 4)):
+            name = f"mxint_linear_m{m}_t{tile[0]}x{tile[1]}"
+            expect_clean(f"dot-product m={m} t={tile}", {f"{name}.sv": mxint_dot_product(name, m, *tile)})
+    for fmt in BLOCK_FORMATS:
+        for m in (1, 3, 5):
+            for tile in ((8, 4), (16, 2), (32, 4)):
+                for chan in (512, 64, 0):
+                    cfg = unpacker_cfg(fmt, m, tile, chan)
+                    name = f"{fmt}_unpack_m{m}_t{tile[0]}x{tile[1]}_c{chan}"
+                    expect_clean(
+                        f"unpacker {fmt} m={m} t={tile} c={chan} (beats={cfg['beats']})",
+                        {f"{name}.sv": mx_unpacker(name, fmt, m, tile, chan)},
+                    )
+    expect_clean("block_exponent_unit", {"be.sv": block_exponent_unit("block_exponent")})
+    for fm, tm in ((8, 4), (4, 8), (5, 5)):
+        expect_clean(f"mxint_cast {fm}->{tm}", {"c.sv": mxint_cast(f"cast_{fm}_{tm}", fm, tm)})
+    for depth in (2, 4, 8):
+        expect_clean(f"stream_fifo depth={depth}", {"f.sv": stream_fifo("stream_fifo", depth)})
+    for kind in ("layernorm", "gelu", "add", "meanpool", "embed"):
+        expect_clean(f"fixed_function {kind}", {"x.sv": fixed_function(f"fx_{kind}", kind, 32)})
+
+
+def realistic_ops(fmt, m):
+    t = (16, 2)
+    return [
+        dict(kind="input", result=0, args=[], tile=t, fmt="fp32", m=32),
+        dict(kind="embed", result=1, args=[0], tile=t, fmt="fp32", m=32),
+        dict(kind="layernorm", result=2, args=[1], tile=t, fmt=fmt, m=m),
+        dict(kind="linear", result=3, args=[2], tile=t, fmt="fp32", m=32),
+        dict(kind="reorder", result=4, args=[3], tile=t, fmt="fp32", m=32),
+        dict(kind="transpose", result=5, args=[3], tile=t, fmt="fp32", m=32),
+        dict(kind="attention", result=6, args=[4], tile=t, fmt=fmt, m=max(m - 1, 1)),
+        dict(kind="linear", result=7, args=[6], tile=t, fmt="fp32", m=32),
+        dict(kind="add", result=8, args=[1, 7], tile=t, fmt="fp32", m=32),
+        dict(kind="meanpool", result=9, args=[8], tile=t, fmt=fmt, m=max(m - 2, 1)),
+        dict(kind="linear", result=10, args=[9], tile=t, fmt="fp32", m=32),
+        dict(kind="output", result=None, args=[10], tile=t, fmt="fp32", m=32),
+    ]
+
+
+def s2_full_designs():
+    print("S2: full-design zero-diagnostics (new top-level wiring)")
+    for fmt, m in (("mxint", 5), ("bmf", 3), ("bl", 4)):
+        for chan in (512, 64, 0):
+            files, n_inst = gen_top(f"net_{fmt}{m}_c{chan}", realistic_ops(fmt, m), chan, fmt)
+            diags, _ = check_files(files)
+            check(
+                f"design {fmt} m={m} chan={chan} ({len(files)} files, {n_inst} instances)",
+                not diags,
+                fmt_diags(diags),
+            )
+            check(f"  has unpackers ({fmt} chan={chan})", any("_unpack_" in f for f in files))
+    files, _ = gen_top("net_int", realistic_ops("int", 6), 512, "int")
+    diags, _ = check_files(files)
+    check("design int m=6 (no unpackers)", not diags, fmt_diags(diags))
+    check("  int design has no unpackers", not any("_unpack_" in f for f in files))
+
+
+def s3_corpus():
+    print("S3: known-bad corpus reproduces the PR 5 findings")
+    import os
+    cdir = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "rust", "tests", "corpus")
+    expect = {
+        "bad_reversed_select.sv": "MC002",
+        "bad_port_width.sv": "MC004",
+        "bad_undeclared.sv": "MC001",
+        "bad_multidriven.sv": "MC005",
+        "bad_unused.sv": "MC006",
+    }
+    for fname, code in sorted(expect.items()):
+        with open(os.path.join(cdir, fname)) as fh:
+            src = fh.read()
+        diags, _ = check_files({fname: src})
+        codes = {d.code for d in diags}
+        check(f"{fname} -> {code}", code in codes, f"got {fmt_diags(diags) or 'none'}")
+        check(f"{fname} parses (no MC009)", "MC009" not in codes, fmt_diags(diags))
+
+
+def s4_micro():
+    print("S4: analyzer micro-tests")
+
+    def codes_of(src):
+        diags, _ = check_files({"t.sv": src})
+        return [d.code for d in diags], diags
+
+    hdr = "module t (input logic clk, input logic [7:0] a, output logic [7:0] y);\n"
+
+    c, d = codes_of(hdr + "  assign y = a[7:0];\nendmodule\n")
+    check("in-bounds select clean", not c, fmt_diags(d))
+    c, _ = codes_of(hdr + "  assign y = a[8:1];\nendmodule\n")
+    check("upper bound overflow -> MC003", "MC003" in c)
+    c, _ = codes_of(hdr + "  assign y = a[0:7];\nendmodule\n")
+    check("reversed select -> MC002", "MC002" in c)
+    c, _ = codes_of(hdr + "  assign y = {8{a[0]}};\nendmodule\n")
+    check("replication clean", not c)
+    c, d = codes_of(
+        hdr + "  logic [7:0] s;\n  assign s[3:0] = a[3:0];\n"
+        "  assign s[7:4] = a[7:4];\n  assign y = s;\nendmodule\n"
+    )
+    check("disjoint-range drivers clean", "MC005" not in c, fmt_diags(d))
+    c, _ = codes_of(
+        hdr + "  logic [7:0] s;\n  assign s[4:0] = a[4:0];\n"
+        "  assign s[7:4] = a[7:4];\n  assign y = s;\nendmodule\n"
+    )
+    check("overlapping-range drivers -> MC005", "MC005" in c)
+    c, _ = codes_of(hdr + "  unknown_mod u0 (.clk(clk));\n  assign y = a;\nendmodule\n")
+    check("unknown module -> MC007", "MC007" in c)
+    c, _ = codes_of(
+        "module leaf (input logic clk);\nendmodule\n"
+        + hdr + "  leaf u0 (.clk(clk), .nope(a[0]));\n  assign y = a;\nendmodule\n"
+    )
+    check("unknown port -> MC008", "MC008" in c)
+    c, _ = codes_of(hdr + "  logic [3:0] s;\n  logic [3:0] s;\n  assign y = a;\nendmodule\n")
+    check("duplicate decl -> MC010", "MC010" in c)
+    c, d = codes_of(
+        "module t #(parameter W = 8) (input logic [W-1:0] a, output logic [W-1:0] y);\n"
+        "  generate\n    if (W >= 8) begin : g_a\n      assign y = a;\n"
+        "    end else begin : g_b\n      assign y = {a, {(8-W){1'b0}}};\n"
+        "    end\n  endgenerate\nendmodule\n"
+    )
+    check("untaken generate branch skipped", not c, fmt_diags(d))
+    c, d = codes_of(
+        "/* block comment with keywords: module wire assign\n   spanning lines */\n"
+        + hdr + "  assign y = a; // trailing\n  /* inline */ endmodule\n"
+    )
+    check("block comments stripped", not c, fmt_diags(d))
+    c, _ = codes_of(hdr + "  assign y = b;\nendmodule\n")
+    check("undeclared ref -> MC001", "MC001" in c)
+    # contract helper spot-checks (mirrors of check::contracts closed forms)
+    check("acc width m=5 -> 16", mxint_acc_bits(5) == 16)
+    cfg = unpacker_cfg("mxint", 5, (16, 2), 512)
+    check(
+        "unpacker cfg mxint m=5 t=16x2 c=512",
+        cfg == dict(chan=512, beats=1, elem=6, groups=1, group_w=192, tile_bits=200, lanes=32),
+        str(cfg),
+    )
+    cfg0 = unpacker_cfg("mxint", 5, (16, 2), 0)
+    check("chan=0 falls back to tile_bits", cfg0["chan"] == 200 and cfg0["beats"] == 1, str(cfg0))
+    pm = params_of(check_files({"f.sv": stream_fifo("stream_fifo", 4)})[1], "stream_fifo")
+    check("params_of stream_fifo", pm == {"W": 32, "DEPTH": 4}, str(pm))
+
+
+def main():
+    s1_template_grid()
+    s2_full_designs()
+    s3_corpus()
+    s4_micro()
+    print()
+    if FAILS:
+        print(f"FAILED ({len(FAILS)}): " + ", ".join(FAILS[:10]))
+        return 1
+    print("verify_sv_check: ALL CHECKS PASSED")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
