@@ -149,6 +149,10 @@ impl Manifest {
             ModelMeta::synthetic("llama-sim", 4, 64, 4, 512, 64, 4, "lm", 16),
             // CI smoke model (not in the python zoo): one layer, tiny batch
             ModelMeta::synthetic("toy-sim", 1, 32, 2, 512, 16, 4, "classifier", 16),
+            // CI decode-smoke model (not in the python zoo): the LM twin of
+            // toy-sim, seq 32 so a short prompt + a few generated tokens
+            // still cross the position-16 quantizer block boundary.
+            ModelMeta::synthetic("toy-lm", 1, 32, 2, 512, 32, 4, "lm", 16),
         ];
         Manifest {
             block_shape: crate::formats::BLOCK_SHAPE,
@@ -274,8 +278,10 @@ mod tests {
         let m = Manifest::synthetic();
         assert_eq!(m.block_shape, (16, 2));
         assert_eq!(m.shared_exponent_bits, 8);
-        assert_eq!(m.models.len(), 12);
+        assert_eq!(m.models.len(), 13);
         assert_eq!(m.classifiers().len(), 11, "10 zoo classifiers + toy-sim");
+        let toy = m.model("toy-lm").unwrap();
+        assert_eq!((toy.kind.as_str(), toy.seq_len, toy.batch), ("lm", 32, 16));
         let opt = m.model("opt-125m-sim").unwrap();
         assert_eq!((opt.n_layers, opt.d_model, opt.n_heads), (2, 32, 2));
         assert_eq!(opt.num_qtensors(), 18);

@@ -10,6 +10,8 @@
 //!   ir        --model M            (print the MASE IR)
 //!   check     [--sv PATH] [--model M] [--fmt F] [--bits N] [--chan W]
 //!   formats   [--model llama-sim]  (Table 1-style format comparison)
+//!   generate  [--model toy-lm] [--tokens N] [--prompt-len N] [--seqs N] [--fmt F]
+//!             (KV-cached greedy decode on the CPU backend)
 
 use anyhow::{anyhow, Result};
 use mase::coordinator::pretrain;
@@ -267,6 +269,10 @@ fn run(args: &Args) -> Result<()> {
             BackendKind::Pjrt => cmd_formats(&session, args, session.pjrt_backend()?)?,
             BackendKind::Cpu => cmd_formats(&session, args, CpuBackend::new())?,
         },
+        "generate" => match backend {
+            BackendKind::Pjrt => cmd_generate(&session, args, session.pjrt_backend()?)?,
+            BackendKind::Cpu => cmd_generate(&session, args, CpuBackend::new())?,
+        },
         other => {
             return Err(anyhow!("unknown subcommand '{other}'\n{HELP}"));
         }
@@ -317,6 +323,81 @@ fn cmd_formats<B: ExecBackend>(session: &Session, args: &Args, backend: B) -> Re
         ]);
     }
     println!("{}", t.render());
+    Ok(())
+}
+
+/// `mase generate` — KV-cached greedy autoregressive generation on the
+/// incremental decode engine (PR 7), through the evaluator's `decode`
+/// plumbing. Prompts come from the deterministic Markov corpus, so a
+/// fixed seed yields bit-identical token streams at any `--threads`.
+/// Only the CPU backend has the engine; PJRT bails with a pointer.
+fn cmd_generate<B: ExecBackend>(session: &Session, args: &Args, backend: B) -> Result<()> {
+    let model = args.get_or("model", "toy-lm");
+    let meta = session.manifest.model(&model)?.clone();
+    anyhow::ensure!(
+        meta.kind == "lm",
+        "generation needs a causal LM; '{model}' is a {} (try --model toy-lm or llama-sim)",
+        meta.kind
+    );
+    let fmt = FormatKind::from_name(&args.get_or("fmt", "mxint"))
+        .ok_or_else(|| anyhow!("unknown format"))?;
+    let default_bits = match fmt {
+        FormatKind::Fp32 => 32.0,
+        FormatKind::Bmf => 5.0,
+        FormatKind::Int | FormatKind::Fp8 => 8.0,
+        FormatKind::MxInt | FormatKind::Bl => 7.0,
+    };
+    let bits = args.get_f64("bits", default_bits) as f32;
+    let n_seqs = args.get_usize("seqs", meta.batch);
+    let prompt_len = args.get_usize("prompt-len", (meta.seq_len / 2).max(1));
+    let n_tokens = args.get_usize("tokens", 8);
+    anyhow::ensure!(
+        prompt_len >= 1 && prompt_len + n_tokens <= meta.seq_len,
+        "prompt {prompt_len} + {n_tokens} new tokens must fit model seq_len {}",
+        meta.seq_len
+    );
+    let w = pretrain::pretrain(session, &meta, None, &Default::default())?;
+    let prompts = mase::data::MarkovCorpus::new(7).batch(4242, n_seqs, prompt_len);
+    let profile = mase::passes::ProfileData::uniform(&meta, 4.0);
+    let sol = mase::passes::QuantSolution::uniform(fmt, bits, &meta, &profile);
+    let ev = mase::passes::Evaluator::new(backend, &meta, &w, &[])?;
+    let threads = args.threads();
+    let r = ev.decode(&sol, &prompts, n_seqs, prompt_len, n_tokens, threads)?;
+
+    // The CI decode smoke greps the final line; keep these checks fatal.
+    anyhow::ensure!(
+        r.tokens.len() == n_seqs * n_tokens,
+        "expected {} generated tokens, got {}",
+        n_seqs * n_tokens,
+        r.tokens.len()
+    );
+    anyhow::ensure!(r.loss.is_finite(), "non-finite loss: logits degenerated");
+
+    println!(
+        "model: {}  format: {} @ {} bits  backend: {}  threads: {threads}",
+        meta.name,
+        fmt.name(),
+        bits,
+        ev.backend.kind().name()
+    );
+    println!(
+        "prefill {prompt_len} tokens x {n_seqs} seqs, then {n_tokens} greedy KV-cached steps/seq"
+    );
+    println!("seq0 tokens: {:?}", &r.tokens[..n_tokens.min(r.tokens.len())]);
+    println!(
+        "attention work: {} cached score dots over {} steps (prefill rows: {}, prefill dots: {})",
+        r.stats.decode_score_dots, r.stats.steps, r.stats.full_attn_rows, r.stats.full_score_dots
+    );
+    let per_tok_ms = r.decode_seconds * 1e3 / (n_seqs * n_tokens).max(1) as f64;
+    let prefill_ms = r.prefill_seconds * 1e3 / (n_seqs * prompt_len).max(1) as f64;
+    println!(
+        "decode ok: {} tokens across {} seqs, loss {:.4}, {:.3} ms/token decode, {:.3} ms/token prefill",
+        r.tokens.len(),
+        n_seqs,
+        r.loss,
+        per_tok_ms,
+        prefill_ms
+    );
     Ok(())
 }
 
@@ -540,6 +621,10 @@ usage: mase <subcommand> [flags]
            (measured bit-packed layout + bytes per tensor vs analytic
             Eq. 1; artifact-free — synthesizes a model spec if needed)
   formats  [--model llama-sim]
+  generate [--model toy-lm] [--tokens N] [--prompt-len N] [--seqs N] [--fmt F] [--bits N]
+           (KV-cached greedy decode through the incremental engine;
+            needs --backend cpu — prints ms/token and the counted
+            attention work; bit-identical output at any --threads)
 common: --artifacts DIR (default ./artifacts)
         --backend pjrt|cpu (execution backend for evaluate/profile;
             cpu = the artifact-free packed-arithmetic interpreter —

@@ -141,12 +141,35 @@ pub fn packed_dot(a: &PackedTensor, b: &PackedTensor) -> f64 {
 /// constant.
 pub const GEMM_SEG: usize = BLOCK_SHAPE.1;
 
+/// Row-count threshold for the decode GEMV path: at most one 16-row
+/// output tile (autoregressive decode steps multiply a `[group, k]`
+/// activation — seq-len-1 per sequence — against every weight).
+pub const GEMV_TILE_ROWS: usize = 16;
+
 /// Tiled GEMM `C[M,N] = A[M,K] * B[K,N]` computed directly on packed
 /// data: per output element, integer MACs over 2-wide k-segments with
 /// exponent alignment, one f64 accumulate per segment, final result
-/// rounded to f32 (the hardware's FP32 output cast). Output tiles of
-/// 16x16 mirror the streaming tile loop.
+/// rounded to f32 (the hardware's FP32 output cast).
+///
+/// Shapes with at most [`GEMV_TILE_ROWS`] rows — the seq-len-1 GEMV
+/// shape every KV-cached decode step produces — take
+/// [`packed_gemv_tall`], which pre-extracts A's fields once and walks B
+/// column-major so each packed B field is decoded once per output column
+/// instead of once per (row, column) pair. Per output element both paths
+/// push the same products into the same [`flush_group`] calls in the
+/// same k order, so the results are **bitwise identical** (asserted by
+/// `gemv_path_matches_tiled_path_bitwise` below and mirrored in
+/// `scripts/verify_packed_math.py` C9).
 pub fn packed_gemm(a: &PackedTensor, b: &PackedTensor) -> Vec<f32> {
+    if a.rows <= GEMV_TILE_ROWS {
+        packed_gemv_tall(a, b)
+    } else {
+        packed_gemm_tiled(a, b)
+    }
+}
+
+/// The general 16x16-output-tile loop (mirrors the streaming tile loop).
+fn packed_gemm_tiled(a: &PackedTensor, b: &PackedTensor) -> Vec<f32> {
     assert_eq!(a.cols, b.rows, "inner dimensions must agree");
     let (m, k, n) = (a.rows, a.cols, b.cols);
     const TILE: usize = 16;
@@ -173,6 +196,47 @@ pub fn packed_gemm(a: &PackedTensor, b: &PackedTensor) -> Vec<f32> {
                     out[i * n + j] = total as f32;
                 }
             }
+        }
+    }
+    out
+}
+
+/// Decode-shape GEMV path (`m <= GEMV_TILE_ROWS`): A's packed fields are
+/// extracted once up front, and B is walked column-major so each
+/// k-segment of a B column is decoded once and reused across all A rows.
+/// Per output element the same nonzero products reach the same
+/// [`flush_group`] calls in the same k order as in the general tiled
+/// loop, so the two paths are bitwise identical (see [`packed_gemm`]).
+pub fn packed_gemv_tall(a: &PackedTensor, b: &PackedTensor) -> Vec<f32> {
+    assert_eq!(a.cols, b.rows, "inner dimensions must agree");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let af: Vec<(i64, i32)> = (0..m * k).map(|i| a.fields_at(i / k, i % k)).collect();
+    let mut out = vec![0.0f32; m * n];
+    let mut acc = vec![0.0f64; m];
+    let mut bf: Vec<(i64, i32)> = Vec::with_capacity(GEMM_SEG);
+    let mut prods: Vec<(i64, i32)> = Vec::with_capacity(GEMM_SEG);
+    for j in 0..n {
+        acc.iter_mut().for_each(|v| *v = 0.0);
+        let mut kk = 0;
+        while kk < k {
+            let seg_end = (kk + GEMM_SEG).min(k);
+            bf.clear();
+            for t in kk..seg_end {
+                bf.push(b.fields_at(t, j));
+            }
+            for (i, total) in acc.iter_mut().enumerate() {
+                for (t, &(mb, eb)) in (kk..seg_end).zip(bf.iter()) {
+                    let (ma, ea) = af[i * k + t];
+                    if ma != 0 && mb != 0 {
+                        prods.push((ma * mb, ea + eb));
+                    }
+                }
+                flush_group(total, &mut prods);
+            }
+            kk = seg_end;
+        }
+        for i in 0..m {
+            out[i * n + j] = acc[i] as f32;
         }
     }
     out
@@ -326,6 +390,29 @@ mod tests {
         let reference = gemm_f64_segmented(&qx, &qy, m, k, n);
         for (i, (p, r)) in packed.iter().zip(reference.iter()).enumerate() {
             assert_eq!(p.to_bits(), r.to_bits(), "C[{i}]: {p} vs {r}");
+        }
+    }
+
+    #[test]
+    fn gemv_path_matches_tiled_path_bitwise() {
+        // m = 1 is the per-sequence decode GEMV; m = 16 is a full decode
+        // group (and the largest shape the fast path accepts).
+        for (m, seed) in [(1usize, 21u64), (16, 22)] {
+            let (k, n) = (32, 48);
+            let x = rand_tensor(m * k, seed, 1.0);
+            let y = rand_tensor(k * n, seed + 50, 1.0);
+            let (fmt, p) = if m == 1 {
+                (FormatKind::Int, Precision::new(8.0, 4.0)) // element-wise: 1 row packs
+            } else {
+                (FormatKind::MxInt, Precision::new(7.0, 0.0))
+            };
+            let pa = pack(&x, m, k, fmt, p);
+            let pb = pack(&y, k, n, FormatKind::MxInt, Precision::new(4.0, 0.0));
+            let fast = packed_gemv_tall(&pa, &pb);
+            let slow = packed_gemm_tiled(&pa, &pb);
+            for (i, (f, s)) in fast.iter().zip(slow.iter()).enumerate() {
+                assert_eq!(f.to_bits(), s.to_bits(), "m={m} C[{i}]: {f} vs {s}");
+            }
         }
     }
 

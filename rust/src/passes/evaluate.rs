@@ -157,6 +157,36 @@ impl<'a, B: ExecBackend> Evaluator<'a, B> {
         Ok((dp, bits, g))
     }
 
+    /// Autoregressive decode profile through the backend's incremental
+    /// engine (the `mase generate` entry point): greedily generate
+    /// `n_tokens` per sequence from `prompts` (`[n_seqs, prompt_len]`,
+    /// sequence-major) under the solution's format/precision config,
+    /// fanning sequence groups over `threads` workers. Only backends
+    /// with a KV-cached engine support this (the CPU interpreter);
+    /// others bail with a pointer to `--backend cpu`.
+    pub fn decode(
+        &self,
+        sol: &QuantSolution,
+        prompts: &[i32],
+        n_seqs: usize,
+        prompt_len: usize,
+        n_tokens: usize,
+        threads: usize,
+    ) -> Result<crate::runtime::DecodeReport> {
+        let qcfg = sol.to_qconfig();
+        self.backend.profile_decode(
+            self.meta,
+            self.weights,
+            sol.fmt.name(),
+            &qcfg,
+            prompts,
+            n_seqs,
+            prompt_len,
+            n_tokens,
+            threads,
+        )
+    }
+
     /// Full co-design evaluation (the `evaluate` pass proper).
     pub fn evaluate(&self, sol: &QuantSolution) -> Result<EvalResult> {
         self.evaluate_with_weights(sol, self.weights)

@@ -20,10 +20,11 @@
 //! CPU-measured objectives.
 
 use super::client::{PreparedTensor, Runtime, TensorData};
+use super::decode::DecodeStats;
 use crate::data::Batch;
 use crate::formats::FormatKind;
 use crate::frontend::ModelMeta;
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 /// Which execution backend scores solutions — the `--backend` CLI knob.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
@@ -59,6 +60,28 @@ impl BackendKind {
 pub struct BatchScore {
     pub loss: f32,
     pub correct: i32,
+}
+
+/// What [`ExecBackend::profile_decode`] hands back: one autoregressive
+/// generation run, with counted attention work ([`DecodeStats`]) as the
+/// deterministic complexity scoreboard.
+#[derive(Debug, Clone)]
+pub struct DecodeReport {
+    /// Generated token ids, sequence-major: `[n_seqs, n_tokens]`.
+    pub tokens: Vec<i32>,
+    /// Mean teacher-forced NLL over the realized sequences (mean of the
+    /// per-group scores).
+    pub loss: f32,
+    /// Correct next-token predictions over the realized sequences.
+    pub correct: i32,
+    /// Wall-clock spent in prefill, summed across worker groups.
+    pub prefill_seconds: f64,
+    /// Wall-clock spent in cached decode steps, summed across groups.
+    pub decode_seconds: f64,
+    pub stats: DecodeStats,
+    pub n_seqs: usize,
+    pub prompt_len: usize,
+    pub n_tokens: usize,
 }
 
 /// An execution engine for the `evaluate`/`profile` passes.
@@ -119,6 +142,30 @@ pub trait ExecBackend: Sync {
         qcfg: &[f32],
         lr: f32,
     ) -> Result<Vec<f32>>;
+
+    /// Autoregressive generation profile: prefill `prompts`
+    /// (`[n_seqs, prompt_len]`, sequence-major) and greedily decode
+    /// `n_tokens` per sequence through a KV cache, fanning sequence
+    /// groups over `threads` workers. Only the CPU interpreter implements
+    /// an incremental engine; the default bails with a pointer there.
+    #[allow(clippy::too_many_arguments)]
+    fn profile_decode(
+        &self,
+        _meta: &ModelMeta,
+        _weights: &[f32],
+        _fmt_tag: &str,
+        _qcfg: &[f32],
+        _prompts: &[i32],
+        _n_seqs: usize,
+        _prompt_len: usize,
+        _n_tokens: usize,
+        _threads: usize,
+    ) -> Result<DecodeReport> {
+        bail!(
+            "backend '{}' has no incremental decode engine (use --backend cpu)",
+            self.kind().name()
+        )
+    }
 }
 
 /// The PJRT adapter: artifact-keyed execution through [`Runtime`],

@@ -1,0 +1,686 @@
+//! KV-cached autoregressive decode engine for [`CpuBackend`] — the
+//! serving-side counterpart of the batch interpreter ([`super::interp`]).
+//!
+//! ## The decode convention (and why it is bitwise-reproducible)
+//!
+//! A [`Decoder`] runs one *group* of sequences in lockstep, one position
+//! at a time. Activations are laid out **position-major**: a step is a
+//! `[group, k]` matrix, and a prefill of `t` positions is the `[t *
+//! group, k]` stack of those step matrices. This is the crux of the
+//! bitwise KV-cache contract: quantizer blocks are `(16, 2)`, so with
+//! `group % 16 == 0` no block ever straddles two positions — quantizing
+//! (and bit-packing) a position's rows gives the same bits whether the
+//! position is processed alone (a decode step) or stacked with others (a
+//! prefill / full recompute). The batch-major `[batch * seq, k]` layout
+//! of [`super::interp::Interp::forward`] does *not* have this property
+//! for block formats (blocks there mix positions of one sequence), which
+//! is why the decode engine defines its own full-forward oracle,
+//! [`Decoder::full_forward`], in the same position-major convention. For
+//! element-wise formats (`fp32`, `int`, `fp8`) quantization is
+//! per-element and every matmul output element is accumulated
+//! identically, so the decode convention also matches the batch-major
+//! forward bit for bit. All of this is machine-checked by the numpy
+//! mirror (`scripts/verify_interp_math.py`, checks K1-K5) and by
+//! `tests/decode_parity.rs`.
+//!
+//! Attention during decode is the single-query path: one
+//! [`attn_query_row`] per (sequence, head) over the `pos + 1` cached
+//! K/V rows — O(context) score dots per step instead of the full
+//! O(context^2) recompute, counted (not timed) in [`DecodeStats`] so
+//! tests and benches can assert the complexity claim deterministically.
+//!
+//! Cached K/V are the *pre-quantization* attention inputs (attention
+//! internals are unquantized in the L2 model, and Q/K/V come out of the
+//! same qkv matmul in both paths), so cache rows are bit-identical to
+//! recomputed ones by construction; parity tests assert it end to end.
+//!
+//! [`generate_many`] fans independent groups over
+//! [`crate::util::pool::par_map`] workers. Groups are data-independent
+//! and results are returned in input order, so a fixed seed yields
+//! bit-identical token streams at any thread count (property-tested in
+//! `tests/properties.rs`).
+
+use super::backend::{BatchScore, DecodeReport, ExecBackend};
+use super::interp::{argmax, attn_query_row, bias_name_for, gelu, nll, CpuBackend, Interp, Tensor};
+use crate::formats::FormatKind;
+use crate::frontend::ModelMeta;
+use crate::ir::{Graph, OpKind};
+use crate::util::pool::par_map;
+use anyhow::{anyhow, ensure, Result};
+use std::time::Instant;
+
+/// Counted attention work — the deterministic scoreboard for the O(1)
+/// per-step claim (wall-clock is CI-noise; counters are exact).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DecodeStats {
+    /// KV-cached decode steps executed.
+    pub steps: u64,
+    /// Score dot-products computed by single-query (cached) attention.
+    pub decode_score_dots: u64,
+    /// Score dot-products computed by full attention (prefill / oracle).
+    pub full_score_dots: u64,
+    /// Query rows materialized by full attention (prefill / oracle).
+    pub full_attn_rows: u64,
+}
+
+impl DecodeStats {
+    pub fn merge(&mut self, other: &DecodeStats) {
+        self.steps += other.steps;
+        self.decode_score_dots += other.decode_score_dots;
+        self.full_score_dots += other.full_score_dots;
+        self.full_attn_rows += other.full_attn_rows;
+    }
+
+    /// Exact closed form for the cached decode phase: the step at
+    /// position `t` costs `group * heads * layers * (t + 1)` score dots.
+    pub fn expected_decode_dots(
+        group: usize,
+        heads: usize,
+        layers: usize,
+        prefill: usize,
+        n_tokens: usize,
+    ) -> u64 {
+        (prefill..prefill + n_tokens)
+            .map(|t| (group * heads * layers * (t + 1)) as u64)
+            .sum()
+    }
+}
+
+/// One Linear site of the causal-LM graph, resolved at construction.
+#[derive(Debug, Clone)]
+struct LinSpec {
+    wid: usize,
+    name: String,
+    act_q: Option<usize>,
+}
+
+#[derive(Debug, Clone)]
+struct LayerSpec {
+    ln1: String,
+    ln2: String,
+    qkv: LinSpec,
+    proj: LinSpec,
+    fc1: LinSpec,
+    fc2: LinSpec,
+}
+
+/// Per-layer KV cache, position-major: row `(pos * group + bi) * d_model`
+/// holds sequence `bi`'s key (resp. value) at position `pos`.
+#[derive(Debug, Default)]
+struct LayerKv {
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+/// Output of one [`Decoder::generate`] call over one group.
+#[derive(Debug, Clone)]
+pub struct GenOut {
+    /// Generated tokens, one `[group]` row per decode step.
+    pub tokens: Vec<Vec<i32>>,
+    /// Logits per position: `prompt_len + n_tokens` entries of
+    /// `[group * vocab]`.
+    pub step_logits: Vec<Vec<f32>>,
+    /// Teacher-forced score of the realized (prompt + generated)
+    /// sequences, accumulated exactly like `Interp::eval_batch`.
+    pub score: BatchScore,
+    pub prefill_seconds: f64,
+    pub decode_seconds: f64,
+}
+
+/// Incremental causal-LM engine: an [`Interp`] (same packed weights,
+/// same quantizers) plus a per-layer KV cache and the step loop.
+pub struct Decoder<'a> {
+    interp: Interp<'a>,
+    meta: &'a ModelMeta,
+    /// Sequences run in lockstep (block formats need `group % 16 == 0`).
+    group: usize,
+    layers: Vec<LayerSpec>,
+    head: LinSpec,
+    cache: Vec<LayerKv>,
+    /// Positions currently cached (the next step decodes position `len`).
+    len: usize,
+    pub stats: DecodeStats,
+}
+
+impl<'a> Decoder<'a> {
+    pub fn new(
+        backend: &CpuBackend,
+        graph: &'a Graph,
+        meta: &'a ModelMeta,
+        weights: &'a [f32],
+        fmt_tag: &str,
+        qcfg: &'a [f32],
+        group: usize,
+    ) -> Result<Decoder<'a>> {
+        ensure!(
+            meta.kind == "lm",
+            "decode needs a causal LM; model {} is a {}",
+            meta.name,
+            meta.kind
+        );
+        ensure!(group >= 1, "decode group must be non-empty");
+        ensure!(
+            meta.d_model % meta.n_heads == 0,
+            "d_model {} not divisible by {} heads",
+            meta.d_model,
+            meta.n_heads
+        );
+        let fmt = FormatKind::from_name(fmt_tag)
+            .ok_or_else(|| anyhow!("decode: unknown format tag '{fmt_tag}'"))?;
+        let interp = Interp::new(meta, graph, weights, fmt, qcfg, backend.path)?;
+        interp.check_tiling(group, meta.d_model, "decode group")?;
+        let mut lins = Vec::new();
+        for op in &graph.ops {
+            if op.kind == OpKind::Linear {
+                let wid = op.params[0];
+                lins.push(LinSpec {
+                    wid: wid.0,
+                    name: graph.value(wid).name.clone(),
+                    act_q: graph.value(op.args[0]).qtensor,
+                });
+            }
+        }
+        ensure!(
+            lins.len() == 4 * meta.n_layers + 1,
+            "decode: expected {} Linear ops in the graph, found {}",
+            4 * meta.n_layers + 1,
+            lins.len()
+        );
+        let head = lins.pop().unwrap();
+        ensure!(head.name == "head_w", "decode: last Linear is '{}', not the LM head", head.name);
+        let mut layers = Vec::with_capacity(meta.n_layers);
+        for (l, chunk) in lins.chunks(4).enumerate() {
+            let expect = [
+                format!("layer{l}.w_qkv"),
+                format!("layer{l}.w_proj"),
+                format!("layer{l}.w_fc1"),
+                format!("layer{l}.w_fc2"),
+            ];
+            for (spec, want) in chunk.iter().zip(expect.iter()) {
+                ensure!(
+                    &spec.name == want,
+                    "decode: Linear '{}' where '{want}' was expected",
+                    spec.name
+                );
+            }
+            layers.push(LayerSpec {
+                ln1: format!("layer{l}.ln1"),
+                ln2: format!("layer{l}.ln2"),
+                qkv: chunk[0].clone(),
+                proj: chunk[1].clone(),
+                fc1: chunk[2].clone(),
+                fc2: chunk[3].clone(),
+            });
+        }
+        let cap = meta.seq_len * group * meta.d_model;
+        let cache = (0..meta.n_layers)
+            .map(|_| LayerKv { k: Vec::with_capacity(cap), v: Vec::with_capacity(cap) })
+            .collect();
+        Ok(Decoder { interp, meta, group, layers, head, cache, len: 0, stats: DecodeStats::default() })
+    }
+
+    /// Positions currently held in the KV cache.
+    pub fn positions(&self) -> usize {
+        self.len
+    }
+
+    /// One Linear site through the shared quantized-matmul path
+    /// (activation quantized on its `[rows, k]` shape — a step or a
+    /// position-major stack, bit-compatible per the module docs).
+    fn linear(&self, spec: &LinSpec, act: &Tensor) -> Result<Tensor> {
+        let bias = self.interp.param(&bias_name_for(&spec.name)).ok().map(|(bv, _)| bv);
+        let y = self.interp.qmm(act, spec.act_q, spec.wid, &spec.name, bias, None)?;
+        let (rows, _) = act.as_2d();
+        let (_, w_shape) = self.interp.param(&spec.name)?;
+        Ok(Tensor::new(y, vec![rows, w_shape[1]]))
+    }
+
+    /// Run one token per sequence through the layer stack, appending
+    /// this position's K/V to the cache. Returns `[group * vocab]`
+    /// logits for the decoded position.
+    pub fn decode_step(&mut self, toks: &[i32]) -> Result<Vec<f32>> {
+        let (b, d) = (self.group, self.meta.d_model);
+        let heads = self.meta.n_heads;
+        let dh = d / heads;
+        ensure!(toks.len() == b, "decode step expects {b} tokens (one per sequence), got {}", toks.len());
+        let pos = self.len;
+        ensure!(
+            pos < self.meta.seq_len,
+            "KV cache is full: model {} supports seq_len {}",
+            self.meta.name,
+            self.meta.seq_len
+        );
+        let scale = (dh as f32).sqrt();
+        let n_ctx = pos + 1;
+        let mut x = Tensor::new(self.interp.embed_rows(toks, pos)?, vec![b, d]);
+        for l in 0..self.layers.len() {
+            let h = self.interp.layer_norm(&x, &self.layers[l].ln1)?;
+            let qkv = self.linear(&self.layers[l].qkv, &h)?; // [b, 3d]
+            {
+                let kv = &mut self.cache[l];
+                for bi in 0..b {
+                    let base = bi * 3 * d;
+                    kv.k.extend_from_slice(&qkv.data[base + d..base + 2 * d]);
+                    kv.v.extend_from_slice(&qkv.data[base + 2 * d..base + 3 * d]);
+                }
+            }
+            let mut attn_out = vec![0.0f32; b * d];
+            let mut att = vec![0.0f32; n_ctx];
+            let kv = &self.cache[l];
+            for bi in 0..b {
+                for hd in 0..heads {
+                    let off = hd * dh;
+                    let q_lo = bi * 3 * d + off;
+                    let o_lo = bi * d + off;
+                    attn_query_row(
+                        &qkv.data[q_lo..q_lo + dh],
+                        scale,
+                        n_ctx,
+                        |sj| &kv.k[(sj * b + bi) * d + off..(sj * b + bi) * d + off + dh],
+                        |sj| &kv.v[(sj * b + bi) * d + off..(sj * b + bi) * d + off + dh],
+                        &mut att,
+                        &mut attn_out[o_lo..o_lo + dh],
+                    );
+                }
+            }
+            self.stats.decode_score_dots += (b * heads * n_ctx) as u64;
+            let proj = self.linear(&self.layers[l].proj, &Tensor::new(attn_out, vec![b, d]))?;
+            let res1 = Tensor::new(
+                x.data.iter().zip(proj.data.iter()).map(|(a, c)| a + c).collect(),
+                vec![b, d],
+            );
+            let h2 = self.interp.layer_norm(&res1, &self.layers[l].ln2)?;
+            let fc1 = self.linear(&self.layers[l].fc1, &h2)?;
+            let g = Tensor::new(fc1.data.iter().map(|&v| gelu(v)).collect(), fc1.shape.clone());
+            let fc2 = self.linear(&self.layers[l].fc2, &g)?;
+            x = Tensor::new(
+                res1.data.iter().zip(fc2.data.iter()).map(|(a, c)| a + c).collect(),
+                vec![b, d],
+            );
+        }
+        let hf = self.interp.layer_norm(&x, "lnf")?;
+        let logits = self.linear(&self.head, &hf)?;
+        self.len = pos + 1;
+        self.stats.steps += 1;
+        Ok(logits.data)
+    }
+
+    /// Full position-major forward over `t` positions. Token `(bi, si)`
+    /// is read at `tokens[bi * stride + si]`. With `fill_cache` the KV
+    /// cache is reset and filled (prefill); without, state is untouched
+    /// (the stateless recompute oracle). Returns per-position
+    /// `[group * vocab]` logits.
+    fn forward_block(
+        &mut self,
+        tokens: &[i32],
+        stride: usize,
+        t: usize,
+        fill_cache: bool,
+    ) -> Result<Vec<Vec<f32>>> {
+        let (b, d) = (self.group, self.meta.d_model);
+        let heads = self.meta.n_heads;
+        let dh = d / heads;
+        ensure!(
+            t >= 1 && t <= self.meta.seq_len,
+            "forward block of {t} positions outside 1..={}",
+            self.meta.seq_len
+        );
+        ensure!(
+            stride >= t && tokens.len() >= (b - 1) * stride + t,
+            "token buffer does not cover [group {b}, {t}] at stride {stride}"
+        );
+        let scale = (dh as f32).sqrt();
+        if fill_cache {
+            for kv in &mut self.cache {
+                kv.k.clear();
+                kv.v.clear();
+            }
+            self.len = 0;
+        }
+        let mut xdata = Vec::with_capacity(t * b * d);
+        let mut col = vec![0i32; b];
+        for si in 0..t {
+            for (bi, c) in col.iter_mut().enumerate() {
+                *c = tokens[bi * stride + si];
+            }
+            xdata.extend_from_slice(&self.interp.embed_rows(&col, si)?);
+        }
+        let mut x = Tensor::new(xdata, vec![t * b, d]);
+        for l in 0..self.layers.len() {
+            let h = self.interp.layer_norm(&x, &self.layers[l].ln1)?;
+            let qkv = self.linear(&self.layers[l].qkv, &h)?; // [t*b, 3d]
+            if fill_cache {
+                let kv = &mut self.cache[l];
+                for r in 0..t * b {
+                    let base = r * 3 * d;
+                    kv.k.extend_from_slice(&qkv.data[base + d..base + 2 * d]);
+                    kv.v.extend_from_slice(&qkv.data[base + 2 * d..base + 3 * d]);
+                }
+            }
+            let mut attn_out = vec![0.0f32; t * b * d];
+            let mut att = vec![0.0f32; t];
+            let mut dots = 0u64;
+            for bi in 0..b {
+                for hd in 0..heads {
+                    let off = hd * dh;
+                    for si in 0..t {
+                        let n_ctx = si + 1; // decode graphs are causal
+                        let q_lo = (si * b + bi) * 3 * d + off;
+                        let o_lo = (si * b + bi) * d + off;
+                        attn_query_row(
+                            &qkv.data[q_lo..q_lo + dh],
+                            scale,
+                            n_ctx,
+                            |sj| {
+                                let lo = (sj * b + bi) * 3 * d + d + off;
+                                &qkv.data[lo..lo + dh]
+                            },
+                            |sj| {
+                                let lo = (sj * b + bi) * 3 * d + 2 * d + off;
+                                &qkv.data[lo..lo + dh]
+                            },
+                            &mut att,
+                            &mut attn_out[o_lo..o_lo + dh],
+                        );
+                        dots += n_ctx as u64;
+                    }
+                }
+            }
+            self.stats.full_score_dots += dots;
+            self.stats.full_attn_rows += (b * heads * t) as u64;
+            let proj =
+                self.linear(&self.layers[l].proj, &Tensor::new(attn_out, vec![t * b, d]))?;
+            let res1 = Tensor::new(
+                x.data.iter().zip(proj.data.iter()).map(|(a, c)| a + c).collect(),
+                vec![t * b, d],
+            );
+            let h2 = self.interp.layer_norm(&res1, &self.layers[l].ln2)?;
+            let fc1 = self.linear(&self.layers[l].fc1, &h2)?;
+            let g = Tensor::new(fc1.data.iter().map(|&v| gelu(v)).collect(), fc1.shape.clone());
+            let fc2 = self.linear(&self.layers[l].fc2, &g)?;
+            x = Tensor::new(
+                res1.data.iter().zip(fc2.data.iter()).map(|(a, c)| a + c).collect(),
+                vec![t * b, d],
+            );
+        }
+        if fill_cache {
+            self.len = t;
+        }
+        let hf = self.interp.layer_norm(&x, "lnf")?;
+        let logits = self.linear(&self.head, &hf)?; // [t*b, vocab]
+        let v = self.meta.vocab;
+        Ok((0..t).map(|si| logits.data[si * b * v..(si + 1) * b * v].to_vec()).collect())
+    }
+
+    /// Reset the cache and run the prompt (`[group, prompt_len]`,
+    /// batch-major) through the full forward, caching every position's
+    /// K/V. Returns per-position logits.
+    pub fn prefill(&mut self, prompt: &[i32], prompt_len: usize) -> Result<Vec<Vec<f32>>> {
+        self.forward_block(prompt, prompt_len, prompt_len, true)
+    }
+
+    /// The stateless recompute oracle: a full position-major forward over
+    /// `t` positions (token `(bi, si)` at `tokens[bi * stride + si]`)
+    /// that leaves the KV cache and step counter untouched. The parity
+    /// suite compares every decode step against this at the same prefix.
+    pub fn full_forward(&mut self, tokens: &[i32], stride: usize, t: usize) -> Result<Vec<Vec<f32>>> {
+        self.forward_block(tokens, stride, t, false)
+    }
+
+    /// Greedy generation: prefill the prompt, then `n_tokens` argmax
+    /// decode steps. The prompt is `[group, prompt_len]`, batch-major.
+    pub fn generate(&mut self, prompt: &[i32], prompt_len: usize, n_tokens: usize) -> Result<GenOut> {
+        let (b, v) = (self.group, self.meta.vocab);
+        ensure!(prompt_len >= 1, "generate needs a prompt of at least one token");
+        ensure!(
+            prompt_len + n_tokens <= self.meta.seq_len,
+            "prompt {prompt_len} + {n_tokens} new tokens exceeds model seq_len {}",
+            self.meta.seq_len
+        );
+        ensure!(prompt.len() == b * prompt_len, "prompt is not [group {b}, {prompt_len}]");
+        let t0 = Instant::now();
+        let mut step_logits = self.prefill(prompt, prompt_len)?;
+        let prefill_seconds = t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        let mut cur: Vec<i32> = (0..b)
+            .map(|bi| argmax(&step_logits[prompt_len - 1][bi * v..(bi + 1) * v]) as i32)
+            .collect();
+        let mut tokens: Vec<Vec<i32>> = Vec::with_capacity(n_tokens);
+        for _ in 0..n_tokens {
+            tokens.push(cur.clone());
+            let lg = self.decode_step(&cur)?;
+            cur = (0..b).map(|bi| argmax(&lg[bi * v..(bi + 1) * v]) as i32).collect();
+            step_logits.push(lg);
+        }
+        let decode_seconds = t1.elapsed().as_secs_f64();
+        // realized [group, prompt + generated] token matrix, batch-major
+        let total = prompt_len + n_tokens;
+        let mut realized = vec![0i32; b * total];
+        for bi in 0..b {
+            realized[bi * total..bi * total + prompt_len]
+                .copy_from_slice(&prompt[bi * prompt_len..(bi + 1) * prompt_len]);
+            for (st, tk) in tokens.iter().enumerate() {
+                realized[bi * total + prompt_len + st] = tk[bi];
+            }
+        }
+        let score = score_from_steps(&step_logits, &realized, b, total, v);
+        Ok(GenOut { tokens, step_logits, score, prefill_seconds, decode_seconds })
+    }
+
+    /// Teacher-forced pass over known tokens (`[group, s]`, batch-major):
+    /// prefill the first `prefill_len` positions, then feed the remaining
+    /// tokens one decode step at a time. Returns per-position logits and
+    /// the score — for element-wise formats, bitwise what
+    /// `Interp::eval_batch` computes on the same tokens.
+    pub fn teacher_forced(
+        &mut self,
+        tokens: &[i32],
+        s: usize,
+        prefill_len: usize,
+    ) -> Result<(Vec<Vec<f32>>, BatchScore)> {
+        let (b, v) = (self.group, self.meta.vocab);
+        ensure!(tokens.len() == b * s, "tokens are not [group {b}, {s}]");
+        ensure!((1..=s).contains(&prefill_len), "prefill_len {prefill_len} outside 1..={s}");
+        ensure!(s <= self.meta.seq_len, "{s} positions exceed model seq_len {}", self.meta.seq_len);
+        let mut step_logits = self.forward_block(tokens, s, prefill_len, true)?;
+        let mut col = vec![0i32; b];
+        for si in prefill_len..s {
+            for (bi, c) in col.iter_mut().enumerate() {
+                *c = tokens[bi * s + si];
+            }
+            step_logits.push(self.decode_step(&col)?);
+        }
+        let score = score_from_steps(&step_logits, tokens, b, s, v);
+        Ok((step_logits, score))
+    }
+}
+
+/// Next-token NLL + argmax accuracy from per-position logits — the same
+/// bi-outer / si-inner f64 accumulation as `Interp::eval_batch`, so the
+/// two are bitwise-comparable. `tokens` is `[group, s]` batch-major;
+/// `step_logits[si]` is `[group * vocab]`.
+pub fn score_from_steps(
+    step_logits: &[Vec<f32>],
+    tokens: &[i32],
+    group: usize,
+    s: usize,
+    vocab: usize,
+) -> BatchScore {
+    if s < 2 {
+        return BatchScore { loss: 0.0, correct: 0 };
+    }
+    let mut nll_sum = 0.0f64;
+    let mut correct = 0i32;
+    for bi in 0..group {
+        for si in 0..s - 1 {
+            let lg = &step_logits[si][bi * vocab..(bi + 1) * vocab];
+            let tgt = tokens[bi * s + si + 1] as usize;
+            nll_sum += nll(lg, tgt);
+            if argmax(lg) == tgt {
+                correct += 1;
+            }
+        }
+    }
+    BatchScore { loss: (nll_sum / (group * (s - 1)) as f64) as f32, correct }
+}
+
+/// Generate over many sequences: `prompts` is `[n_seqs, prompt_len]`
+/// (sequence-major), split into groups of `min(meta.batch, n_seqs)`
+/// sequences and fanned over [`par_map`] workers. Groups are
+/// data-independent and results come back in input order, so the output
+/// is bit-identical at any `threads` value.
+#[allow(clippy::too_many_arguments)]
+pub fn generate_many(
+    backend: &CpuBackend,
+    graph: &Graph,
+    meta: &ModelMeta,
+    weights: &[f32],
+    fmt_tag: &str,
+    qcfg: &[f32],
+    prompts: &[i32],
+    n_seqs: usize,
+    prompt_len: usize,
+    n_tokens: usize,
+    threads: usize,
+) -> Result<(Vec<GenOut>, DecodeStats)> {
+    let group = meta.batch.min(n_seqs).max(1);
+    ensure!(
+        n_seqs > 0 && n_seqs % group == 0,
+        "n_seqs {n_seqs} must be a positive multiple of the group size {group}"
+    );
+    ensure!(prompts.len() == n_seqs * prompt_len, "prompts are not [n_seqs, prompt_len]");
+    let idx: Vec<usize> = (0..n_seqs / group).collect();
+    let results = par_map(idx, threads, |gi| -> Result<(GenOut, DecodeStats)> {
+        let mut dec = Decoder::new(backend, graph, meta, weights, fmt_tag, qcfg, group)?;
+        let lo = gi * group * prompt_len;
+        let out = dec.generate(&prompts[lo..lo + group * prompt_len], prompt_len, n_tokens)?;
+        Ok((out, dec.stats))
+    });
+    let mut outs = Vec::with_capacity(results.len());
+    let mut stats = DecodeStats::default();
+    for r in results {
+        let (o, s) = r?;
+        stats.merge(&s);
+        outs.push(o);
+    }
+    Ok((outs, stats))
+}
+
+/// [`ExecBackend::profile_decode`] body for the CPU backend: build the
+/// graph, generate over every sequence, aggregate one [`DecodeReport`].
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn profile_decode_cpu(
+    backend: &CpuBackend,
+    meta: &ModelMeta,
+    weights: &[f32],
+    fmt_tag: &str,
+    qcfg: &[f32],
+    prompts: &[i32],
+    n_seqs: usize,
+    prompt_len: usize,
+    n_tokens: usize,
+    threads: usize,
+) -> Result<DecodeReport> {
+    let graph = backend.prepare(meta, weights, &[])?;
+    let (outs, stats) = generate_many(
+        backend, &graph, meta, weights, fmt_tag, qcfg, prompts, n_seqs, prompt_len, n_tokens,
+        threads,
+    )?;
+    let mut tokens = Vec::with_capacity(n_seqs * n_tokens);
+    let mut loss = 0.0f64;
+    let mut correct = 0i32;
+    let (mut prefill_seconds, mut decode_seconds) = (0.0f64, 0.0f64);
+    for o in &outs {
+        let group = o.tokens.first().map_or(0, |t| t.len());
+        for bi in 0..group {
+            for st in &o.tokens {
+                tokens.push(st[bi]);
+            }
+        }
+        loss += o.score.loss as f64;
+        correct += o.score.correct;
+        prefill_seconds += o.prefill_seconds;
+        decode_seconds += o.decode_seconds;
+    }
+    Ok(DecodeReport {
+        tokens,
+        loss: (loss / outs.len().max(1) as f64) as f32,
+        correct,
+        prefill_seconds,
+        decode_seconds,
+        stats,
+        n_seqs,
+        prompt_len,
+        n_tokens,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::init_params;
+
+    fn tiny_lm() -> ModelMeta {
+        ModelMeta::synthetic("tiny-lm", 1, 32, 2, 512, 16, 4, "lm", 16)
+    }
+
+    #[test]
+    fn expected_decode_dots_closed_form() {
+        // prefill 3 + 2 new tokens: positions 3 and 4 cost 4 resp. 5
+        // score dots per (sequence, head, layer).
+        assert_eq!(DecodeStats::expected_decode_dots(2, 3, 1, 3, 2), 2 * 3 * (4 + 5));
+        assert_eq!(DecodeStats::expected_decode_dots(1, 1, 2, 0, 1), 2);
+    }
+
+    #[test]
+    fn merge_accumulates_all_counters() {
+        let mut a =
+            DecodeStats { steps: 1, decode_score_dots: 2, full_score_dots: 3, full_attn_rows: 4 };
+        a.merge(&DecodeStats {
+            steps: 10,
+            decode_score_dots: 20,
+            full_score_dots: 30,
+            full_attn_rows: 40,
+        });
+        assert_eq!(
+            a,
+            DecodeStats {
+                steps: 11,
+                decode_score_dots: 22,
+                full_score_dots: 33,
+                full_attn_rows: 44
+            }
+        );
+    }
+
+    #[test]
+    fn generate_produces_finite_logits_and_counts_decode_work() {
+        let meta = tiny_lm();
+        let w = init_params(&meta, 0xC0DE);
+        let be = CpuBackend::new();
+        let graph = be.prepare(&meta, &w, &[]).unwrap();
+        let qcfg = vec![0.0f32; 2 * meta.num_qtensors()];
+        let prompt: Vec<i32> = (0..16 * 4).map(|i| (i % 512) as i32).collect();
+        let mut dec = Decoder::new(&be, &graph, &meta, &w, "fp32", &qcfg, 16).unwrap();
+        let out = dec.generate(&prompt, 4, 3).unwrap();
+        assert_eq!(out.tokens.len(), 3);
+        assert_eq!(out.step_logits.len(), 4 + 3);
+        assert!(out.step_logits.iter().flatten().all(|v| v.is_finite()));
+        assert_eq!(dec.positions(), 7);
+        assert_eq!(dec.stats.steps, 3);
+        assert_eq!(
+            dec.stats.decode_score_dots,
+            DecodeStats::expected_decode_dots(16, meta.n_heads, meta.n_layers, 4, 3)
+        );
+    }
+
+    #[test]
+    fn decoder_rejects_classifier_graphs() {
+        let meta = ModelMeta::synthetic("t", 1, 32, 2, 512, 16, 4, "classifier", 16);
+        let w = init_params(&meta, 1);
+        let be = CpuBackend::new();
+        let graph = be.prepare(&meta, &w, &[]).unwrap();
+        let qcfg = vec![0.0f32; 2 * meta.num_qtensors()];
+        assert!(Decoder::new(&be, &graph, &meta, &w, "fp32", &qcfg, 16).is_err());
+    }
+}

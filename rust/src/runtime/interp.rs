@@ -40,7 +40,7 @@
 //! without cached weights the flow evaluates the deterministic
 //! `frontend::init_params` model.
 
-use super::backend::{BackendKind, BatchScore, ExecBackend};
+use super::backend::{BackendKind, BatchScore, DecodeReport, ExecBackend};
 use crate::data::Batch;
 use crate::formats::{quantize_2d, FormatKind, Precision, BLOCK_SHAPE};
 use crate::frontend::{ModelMeta, OUTLIER_BASE_GAIN, OUTLIER_CHANNELS};
@@ -146,6 +146,23 @@ impl ExecBackend for CpuBackend {
         bail!("cpu backend has no gradient path: QAT needs --backend pjrt (or --qat-steps 0)")
     }
 
+    fn profile_decode(
+        &self,
+        meta: &ModelMeta,
+        weights: &[f32],
+        fmt_tag: &str,
+        qcfg: &[f32],
+        prompts: &[i32],
+        n_seqs: usize,
+        prompt_len: usize,
+        n_tokens: usize,
+        threads: usize,
+    ) -> Result<DecodeReport> {
+        super::decode::profile_decode_cpu(
+            self, meta, weights, fmt_tag, qcfg, prompts, n_seqs, prompt_len, n_tokens, threads,
+        )
+    }
+
     fn qat_tune(
         &self,
         meta: &ModelMeta,
@@ -161,19 +178,19 @@ impl ExecBackend for CpuBackend {
 
 /// A dense row-major f32 tensor (interpreter values).
 #[derive(Debug, Clone)]
-struct Tensor {
-    data: Vec<f32>,
-    shape: Vec<usize>,
+pub(crate) struct Tensor {
+    pub(crate) data: Vec<f32>,
+    pub(crate) shape: Vec<usize>,
 }
 
 impl Tensor {
-    fn new(data: Vec<f32>, shape: Vec<usize>) -> Self {
+    pub(crate) fn new(data: Vec<f32>, shape: Vec<usize>) -> Self {
         debug_assert_eq!(data.len(), shape.iter().product::<usize>());
         Self { data, shape }
     }
 
     /// (rows, cols) view for a matmul over the trailing dim.
-    fn as_2d(&self) -> (usize, usize) {
+    pub(crate) fn as_2d(&self) -> (usize, usize) {
         let cols = *self.shape.last().unwrap_or(&1);
         (self.data.len() / cols.max(1), cols)
     }
@@ -181,7 +198,9 @@ impl Tensor {
 
 /// One model + one quantization configuration, ready to run batches.
 /// Weight operands are quantized/packed once here and reused per batch.
-struct Interp<'a> {
+/// `pub(crate)` so [`super::decode::Decoder`] can drive the same packed
+/// weights / quantizers incrementally.
+pub(crate) struct Interp<'a> {
     meta: &'a ModelMeta,
     graph: &'a Graph,
     weights: &'a [f32],
@@ -197,7 +216,7 @@ struct Interp<'a> {
 }
 
 impl<'a> Interp<'a> {
-    fn new(
+    pub(crate) fn new(
         meta: &'a ModelMeta,
         graph: &'a Graph,
         weights: &'a [f32],
@@ -263,7 +282,7 @@ impl<'a> Interp<'a> {
     }
 
     /// Flat-parameter slice + shape by `param_spec` name.
-    fn param(&self, name: &str) -> Result<(&'a [f32], &'a [usize])> {
+    pub(crate) fn param(&self, name: &str) -> Result<(&'a [f32], &'a [usize])> {
         let spec = self
             .meta
             .param_spec
@@ -281,7 +300,7 @@ impl<'a> Interp<'a> {
 
     /// Block formats need (16, 2)-tileable operands (same constraint the
     /// quantizers assert; every model-zoo shape satisfies it).
-    fn check_tiling(&self, rows: usize, cols: usize, what: &str) -> Result<()> {
+    pub(crate) fn check_tiling(&self, rows: usize, cols: usize, what: &str) -> Result<()> {
         let (br, bc) = BLOCK_SHAPE;
         ensure!(
             !self.fmt.is_block_format() || (rows % br == 0 && cols % bc == 0),
@@ -294,7 +313,7 @@ impl<'a> Interp<'a> {
 
     /// Quantized matmul `act[rows, k] @ w[k, n] (+ bias)` through the
     /// configured datapath. `act_q` indexes the activation's qtensor knob.
-    fn qmm(
+    pub(crate) fn qmm(
         &self,
         act: &Tensor,
         act_q: Option<usize>,
@@ -341,7 +360,7 @@ impl<'a> Interp<'a> {
 
     /// One full forward pass: walk the IR ops in builder (topological)
     /// order. With `taps`, also record per-qtensor profile statistics.
-    fn forward(
+    pub(crate) fn forward(
         &self,
         batch: &Batch,
         mut taps: Option<&mut [Option<[f32; 3]>]>,
@@ -487,7 +506,7 @@ impl<'a> Interp<'a> {
     /// LayerNorm over the last dim; `layerN.ln1`/`.ln2` additionally pin
     /// the learnable scale/shift on the outlier channels and inject the
     /// depth-growing gain, mirroring `_layer_norm_with_outliers`.
-    fn layer_norm(&self, x: &Tensor, name: &str) -> Result<Tensor> {
+    pub(crate) fn layer_norm(&self, x: &Tensor, name: &str) -> Result<Tensor> {
         let d = *x.shape.last().unwrap();
         let rows = x.data.len() / d;
         let (g, _) = self.param(&format!("{name}_g"))?;
@@ -527,7 +546,13 @@ impl<'a> Interp<'a> {
     }
 
     /// Fused multi-head attention from the fused `[b, s, 3d]` qkv tensor
-    /// (unquantized internals, exactly like the L2 `_attention`).
+    /// (unquantized internals, exactly like the L2 `_attention`). Each
+    /// query row runs through the shared [`attn_query_row`] primitive;
+    /// for the causal case the context is truncated to `si + 1` keys,
+    /// which is bitwise-identical to scoring the full masked row (a
+    /// `-1e9` masked score underflows to an exact `0.0` softmax weight,
+    /// a no-op under the sequential f64 mix — `scripts/verify_interp_math.py`
+    /// check K2).
     fn attention(&self, qkv: &Tensor, b: usize, s: usize, d: usize) -> Result<Tensor> {
         ensure!(qkv.data.len() == b * s * 3 * d, "qkv tensor has unexpected size");
         let heads = self.meta.n_heads;
@@ -542,38 +567,53 @@ impl<'a> Interp<'a> {
             for h in 0..heads {
                 let off = h * dh;
                 for si in 0..s {
-                    let q = &row(bi, si)[off..off + dh];
-                    for (sj, a) in att.iter_mut().enumerate() {
-                        *a = if causal && sj > si {
-                            -1e9
-                        } else {
-                            let k = &row(bi, sj)[d + off..d + off + dh];
-                            let mut acc = 0.0f64;
-                            for t in 0..dh {
-                                acc += q[t] as f64 * k[t] as f64;
-                            }
-                            acc as f32 / scale
-                        };
-                    }
-                    softmax_row(&mut att);
-                    let o = &mut out[(bi * s + si) * d + off..(bi * s + si) * d + off + dh];
-                    for (t, ot) in o.iter_mut().enumerate() {
-                        let mut acc = 0.0f64;
-                        for (sj, a) in att.iter().enumerate() {
-                            acc += *a as f64 * row(bi, sj)[2 * d + off + t] as f64;
-                        }
-                        *ot = acc as f32;
-                    }
+                    let n_ctx = if causal { si + 1 } else { s };
+                    let o_lo = (bi * s + si) * d + off;
+                    attn_query_row(
+                        &row(bi, si)[off..off + dh],
+                        scale,
+                        n_ctx,
+                        |sj| &row(bi, sj)[d + off..d + off + dh],
+                        |sj| &row(bi, sj)[2 * d + off..2 * d + off + dh],
+                        &mut att,
+                        &mut out[o_lo..o_lo + dh],
+                    );
                 }
             }
         }
         Ok(Tensor::new(out, vec![b, s, d]))
     }
 
+    /// Embedding + positional rows for one decode step: the `[b, d]`
+    /// tensor whose row `bi` is exactly the `(bi, si = pos_idx)` row
+    /// [`Interp::embed`] produces for a full batch.
+    pub(crate) fn embed_rows(&self, toks: &[i32], pos_idx: usize) -> Result<Vec<f32>> {
+        let table = self.packed_embed.as_ref().ok_or_else(|| anyhow!("embed table not packed"))?;
+        let (pos, pos_shape) = self.param("pos")?;
+        ensure!(
+            pos_idx < pos_shape[0],
+            "position {pos_idx} exceeds positional table {}",
+            pos_shape[0]
+        );
+        let d = self.meta.d_model;
+        let vocab = self.meta.vocab;
+        let mut x = vec![0.0f32; toks.len() * d];
+        for (bi, &tok) in toks.iter().enumerate() {
+            ensure!(
+                (0..vocab as i32).contains(&tok),
+                "token id {tok} out of vocabulary range 0..{vocab}"
+            );
+            for j in 0..d {
+                x[bi * d + j] = table.get(tok as usize, j) + pos[pos_idx * d + j];
+            }
+        }
+        Ok(x)
+    }
+
     /// Forward + loss for one batch — the L2 `eval_batch` contract:
     /// classifier = (mean cross-entropy, correct count); LM = (mean
     /// next-token NLL, correct next-token count).
-    fn eval_batch(&self, batch: &Batch) -> Result<BatchScore> {
+    pub(crate) fn eval_batch(&self, batch: &Batch) -> Result<BatchScore> {
         let logits = self.forward(batch, None)?;
         let (b, s) = (batch.batch, batch.seq);
         if self.meta.kind == "lm" {
@@ -632,9 +672,51 @@ fn tap(taps: &mut [Option<[f32; 3]>], qtensor: Option<usize>, data: &[f32]) -> R
     Ok(())
 }
 
+/// One attention query row against an arbitrary key/value store — the
+/// shared primitive behind both the full `[s, s]` pass and the KV-cached
+/// single-query decode path. Scores the first `n_ctx` context positions
+/// (sequential f64 dot, f32 `/ scale` cast), masks the rest of the `att`
+/// buffer to `-1e9`, softmaxes in place, and mixes values with the
+/// sequential f64 accumulation the L2 model uses. The `att` buffer's
+/// length (not `n_ctx`) decides how many value rows the mix touches, so
+/// callers with a short buffer (decode: exactly `n_ctx` cached rows)
+/// and callers with a full-length buffer (prefill) get bitwise-equal
+/// results per the K2 masking lemma.
+pub(crate) fn attn_query_row<'k>(
+    q: &[f32],
+    scale: f32,
+    n_ctx: usize,
+    key: impl Fn(usize) -> &'k [f32],
+    val: impl Fn(usize) -> &'k [f32],
+    att: &mut [f32],
+    out: &mut [f32],
+) {
+    let dh = q.len();
+    for (sj, a) in att.iter_mut().enumerate() {
+        *a = if sj >= n_ctx {
+            -1e9
+        } else {
+            let k = key(sj);
+            let mut acc = 0.0f64;
+            for t in 0..dh {
+                acc += q[t] as f64 * k[t] as f64;
+            }
+            acc as f32 / scale
+        };
+    }
+    softmax_row(att);
+    for (t, ot) in out.iter_mut().enumerate() {
+        let mut acc = 0.0f64;
+        for (sj, a) in att.iter().enumerate() {
+            acc += *a as f64 * val(sj)[t] as f64;
+        }
+        *ot = acc as f32;
+    }
+}
+
 /// Weight name -> bias name per the `param_spec` convention
 /// (`layerN.w_X` -> `layerN.b_X`, `head_w` -> `head_b`).
-fn bias_name_for(w_name: &str) -> String {
+pub(crate) fn bias_name_for(w_name: &str) -> String {
     if w_name == "head_w" {
         "head_b".to_string()
     } else {
@@ -643,13 +725,13 @@ fn bias_name_for(w_name: &str) -> String {
 }
 
 /// tanh-approximate GELU (`jax.nn.gelu`'s default), in f32.
-fn gelu(x: f32) -> f32 {
+pub(crate) fn gelu(x: f32) -> f32 {
     const C: f32 = 0.797_884_56; // sqrt(2/pi)
     0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
 }
 
 /// In-place stable softmax of one row.
-fn softmax_row(row: &mut [f32]) {
+pub(crate) fn softmax_row(row: &mut [f32]) {
     let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
     let mut sum = 0.0f64;
     for v in row.iter_mut() {
@@ -662,7 +744,7 @@ fn softmax_row(row: &mut [f32]) {
 }
 
 /// -log_softmax(logits)[target], computed in f64 from the f32 logits.
-fn nll(logits: &[f32], target: usize) -> f64 {
+pub(crate) fn nll(logits: &[f32], target: usize) -> f64 {
     let m = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
     let mut sum = 0.0f64;
     for &v in logits {
@@ -672,7 +754,7 @@ fn nll(logits: &[f32], target: usize) -> f64 {
 }
 
 /// First index of the maximum (matches `jnp.argmax` tie-breaking).
-fn argmax(row: &[f32]) -> usize {
+pub(crate) fn argmax(row: &[f32]) -> usize {
     let mut best = 0;
     for (i, &v) in row.iter().enumerate() {
         if v > row[best] {
@@ -720,6 +802,31 @@ mod tests {
         assert_eq!(bias_name_for("layer0.w_qkv"), "layer0.b_qkv");
         assert_eq!(bias_name_for("layer3.w_fc2"), "layer3.b_fc2");
         assert_eq!(bias_name_for("head_w"), "head_b");
+    }
+
+    #[test]
+    fn single_query_row_matches_full_masked_row_bitwise() {
+        // The K2 masking lemma in Rust (mirrored in
+        // scripts/verify_interp_math.py): scoring only the live context
+        // with a short buffer gives the same bits as the full buffer
+        // whose tail is -1e9 masked — exp underflows to an exact 0.0
+        // weight, a no-op under the sequential f64 mix.
+        let mut rng = crate::util::rng::Rng::new(42);
+        let (s, dh, n_ctx) = (19usize, 8usize, 11usize);
+        let kv: Vec<f32> = (0..2 * s * dh).map(|_| rng.normal() as f32).collect();
+        let q: Vec<f32> = (0..dh).map(|_| rng.normal() as f32).collect();
+        let key = |sj: usize| &kv[sj * dh..(sj + 1) * dh];
+        let val = |sj: usize| &kv[(s + sj) * dh..(s + sj + 1) * dh];
+        let scale = (dh as f32).sqrt();
+        let (mut att_full, mut out_full) = (vec![0.0f32; s], vec![0.0f32; dh]);
+        attn_query_row(&q, scale, n_ctx, key, val, &mut att_full, &mut out_full);
+        let (mut att_short, mut out_short) = (vec![0.0f32; n_ctx], vec![0.0f32; dh]);
+        attn_query_row(&q, scale, n_ctx, key, val, &mut att_short, &mut out_short);
+        for (a, b) in out_full.iter().zip(out_short.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+        }
+        assert_eq!(att_full[..n_ctx], att_short[..]);
+        assert!(att_full[n_ctx..].iter().all(|&w| w == 0.0));
     }
 
     #[test]

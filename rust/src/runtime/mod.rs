@@ -18,13 +18,21 @@
 //!    fake-quantizes through [`crate::formats`] and runs every matmul on
 //!    bit-packed operands via [`crate::packed::kernels`] — the
 //!    artifact-free path (`--backend cpu`).
+//!
+//! On top of the interpreter, [`decode`] adds the KV-cached
+//! autoregressive engine ([`Decoder`], `mase generate`,
+//! [`ExecBackend::profile_decode`]): same packed weights and quantizers,
+//! position-major incremental steps, bitwise-parity-tested against the
+//! full recompute.
 
 pub mod backend;
 pub mod client;
+pub mod decode;
 pub mod interp;
 
-pub use backend::{BackendKind, BatchScore, ExecBackend, PjrtBackend};
+pub use backend::{BackendKind, BatchScore, DecodeReport, ExecBackend, PjrtBackend};
 pub use client::{OutputTensor, PreparedTensor, Runtime, TensorData};
+pub use decode::{generate_many, score_from_steps, DecodeStats, Decoder, GenOut};
 pub use interp::{CpuBackend, MatmulPath};
 
 #[cfg(test)]

@@ -253,6 +253,69 @@ fn prop_average_bitwidth_within_knob_range() {
 }
 
 #[test]
+fn prop_parallel_decode_is_bit_identical_at_any_thread_count() {
+    // PR 7 determinism contract: `generate_many` fans data-independent
+    // sequence groups over `par_map` workers and returns them in input
+    // order, so for a fixed seed the token streams AND every step's
+    // logits are bit-identical at 1, 2, and 8 threads — across random
+    // model shapes, formats, prompt lengths, and seeds.
+    use mase::runtime::{generate_many, CpuBackend, ExecBackend};
+    prop_check(6, |g| {
+        let heads = [1usize, 2][g.int(0, 1) as usize];
+        let d = 16 * heads.max(2);
+        let meta = ModelMeta::synthetic("prop-lm", 1, d, heads, 512, 16, 4, "lm", 16);
+        let fmt = *g.choice(&[FormatKind::MxInt, FormatKind::Int, FormatKind::Fp32]);
+        let bits = if fmt == FormatKind::Fp32 { 32.0 } else { g.int(4, 8) as f32 };
+        let profile = ProfileData::uniform(&meta, 4.0);
+        let qcfg = QuantSolution::uniform(fmt, bits, &meta, &profile).to_qconfig();
+        let w = mase::frontend::init_params(&meta, g.int(1, 1 << 20) as u64);
+        let be = CpuBackend::new();
+        let graph = be.prepare(&meta, &w, &[]).map_err(|e| e.to_string())?;
+        let n_seqs = 16 * g.int(1, 2) as usize;
+        let prompt_len = g.int(1, 6) as usize;
+        let n_tokens = g.int(1, 4) as usize;
+        let prompts =
+            mase::data::MarkovCorpus::new(7).batch(g.int(0, 1000) as u64, n_seqs, prompt_len);
+        let run = |threads: usize| {
+            generate_many(
+                &be, &graph, &meta, &w, fmt.name(), &qcfg, &prompts, n_seqs, prompt_len,
+                n_tokens, threads,
+            )
+            .map_err(|e| e.to_string())
+        };
+        let (base, base_stats) = run(1)?;
+        for threads in [2usize, 8] {
+            let (outs, stats) = run(threads)?;
+            if stats != base_stats {
+                return Err(format!("{}: stats diverged at {threads} threads", fmt.name()));
+            }
+            for (gi, (a, b)) in base.iter().zip(outs.iter()).enumerate() {
+                if a.tokens != b.tokens {
+                    return Err(format!(
+                        "{}: group {gi} token stream diverged at {threads} threads",
+                        fmt.name()
+                    ));
+                }
+                for (si, (la, lb)) in a.step_logits.iter().zip(b.step_logits.iter()).enumerate() {
+                    let bitwise =
+                        la.iter().zip(lb).all(|(x, y)| x.to_bits() == y.to_bits());
+                    if !bitwise {
+                        return Err(format!(
+                            "{}: group {gi} pos {si} logits diverged at {threads} threads",
+                            fmt.name()
+                        ));
+                    }
+                }
+                if a.score.loss.to_bits() != b.score.loss.to_bits() {
+                    return Err(format!("{}: group {gi} loss diverged", fmt.name()));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_simulator_within_bounds_of_regression() {
     prop_check(8, |g| {
         let meta = meta_for(g.int(1, 3) as usize, 32);

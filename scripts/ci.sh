@@ -10,6 +10,7 @@
 #   scripts/ci.sh doc            # rustdoc gate (warnings are errors)
 #   scripts/ci.sh test           # bench/example check + tier-1 build+test
 #   scripts/ci.sh smoke          # artifact-free cpu-backend e2e smoke
+#   scripts/ci.sh decode         # KV-cached `mase generate` smoke
 #   scripts/ci.sh check          # `mase check` static analysis on an
 #                                # artifact-free emitted design
 #   scripts/ci.sh fmt clippy     # any combination, run in order given
@@ -101,6 +102,34 @@ stage_smoke() {
   }
 }
 
+stage_decode() {
+  # Autoregressive-decode smoke (PR 7): greedy KV-cached generation on
+  # the toy LM must produce exactly the requested token count with
+  # finite logits. The binary itself hard-fails on a count mismatch or a
+  # non-finite loss; the greps below also pin the report format so the
+  # counters cannot silently vanish from the output.
+  echo "==> decode smoke: mase generate --backend cpu --model toy-lm"
+  if [[ ! -x target/release/mase ]]; then
+    echo "  (target/release/mase missing; building first)"
+    cargo build --release
+  fi
+  cleanup
+  SMOKE_DIR="$(mktemp -d)"
+  local out
+  out="$(./target/release/mase generate --backend cpu --model toy-lm \
+    --tokens 8 --prompt-len 4 --threads 1 --artifacts "$SMOKE_DIR/artifacts")"
+  echo "$out"
+  echo "$out" | grep -q "decode ok: 128 tokens across 16 seqs" || {
+    echo "decode smoke: expected 16 seqs x 8 tokens = 128 generated tokens"; exit 1;
+  }
+  echo "$out" | grep -Eq "loss [0-9]+\.[0-9]+" || {
+    echo "decode smoke: loss is not a finite number"; exit 1;
+  }
+  echo "$out" | grep -q "cached score dots over 8 steps" || {
+    echo "decode smoke: counted-attention report line missing"; exit 1;
+  }
+}
+
 stage_check() {
   # Static-analysis gate: `mase check` emits a design in memory for a
   # synthetic model (artifact-free) and runs the real SV analyzer plus
@@ -130,6 +159,7 @@ run_stage() {
     doc)    stage_doc ;;
     test)   stage_test ;;
     smoke)  stage_smoke ;;
+    decode) stage_decode ;;
     check)  stage_check ;;
     all)
       if [[ -z "${SKIP_LINTS:-}" ]]; then
@@ -139,10 +169,11 @@ run_stage() {
       fi
       stage_test
       stage_smoke
+      stage_decode
       stage_check
       ;;
     *)
-      echo "unknown stage '$1' (expected fmt|clippy|doc|test|smoke|check|all)" >&2
+      echo "unknown stage '$1' (expected fmt|clippy|doc|test|smoke|decode|check|all)" >&2
       exit 2
       ;;
   esac

@@ -26,6 +26,25 @@ exact same model/seeds/batches the Rust test uses):
   I5  every packed 2-segment with alignment span <= 63 is bitwise equal
       to the reference segment partial (the structural exactness lemma),
       counted across every GEMM of every forward.
+
+PR 7 adds the KV-cache decode mirror (runtime/decode.rs contracts):
+  K1  MXInt/Int KV-cached greedy decode is token-for-token and
+      logit-bitwise identical to a full no-cache recompute of the whole
+      prefix at every step (and loss-bitwise via the shared NLL helper);
+      BMF/BL/FP8 stay within the documented 1e-6 relative bound.
+  K2  the single-query attention row (buffer length = context) is bitwise
+      equal to the full causal row (buffer length = seq, -1e9 mask tail):
+      exp(-1e9 - m) underflows to exactly 0.0f32 and trailing +0.0 /
+      +0.0*v terms are exact no-ops under sequential f64 accumulation.
+  K3  position-major [p*b, k] activation blocking equals stacked
+      per-position [b, k] blocking bitwise when b % 16 == 0 (block
+      membership never straddles positions), for every block format.
+  K4  for element-wise formats (Int/fp32) the decode-convention forward
+      matches the batch-major interpreter forward (semantic grounding;
+      asserted bitwise in Rust where both paths share sequential sums).
+  K5  negative control: for block formats the batch-major forward
+      DIFFERS bitwise from the decode convention (block membership of
+      [b*s, k] rows depends on s) — why decode defines its own blocking.
 """
 import math
 import struct
@@ -599,6 +618,246 @@ try:
     check("I6 interpreter semantics match the real L2 jax model", ok)
 except ImportError as e:
     print(f"  (I6 skipped: jax/L2 model unavailable here: {e})")
+
+# ================= PR 7: KV-cache decode mirror (runtime/decode.rs) ======
+print()
+print("== PR 7 decode mirror: KV-cached decode vs full recompute ==")
+
+
+def d_attn_row(q64, K64, V64, scale, n_ctx, buf_len):
+    """One attention query row, mirroring interp.rs::attn_query_row.
+
+    Scores for j < n_ctx, -1e9 mask tail up to buf_len, then softmax and
+    the f64 value mix. Sums are SEQUENTIAL f64 (matching the Rust loops,
+    not numpy pairwise) so that a trailing mask region is an exact no-op:
+    exp(-1e9 - m) -> 0.0f32, and appending +0.0 to the softmax sum or
+    +0.0*v to the mix never changes a partial. That lemma is what makes
+    the cached single-query call (buf_len == n_ctx) bitwise equal to the
+    full causal row (buf_len == s)."""
+    att = np.full(buf_len, f32(-1e9), f32)
+    for j in range(n_ctx):
+        att[j] = f32(np.float64((q64 * K64[j]).sum())) / scale
+    m = att.max()
+    e = np.exp(att - m, dtype=f32)
+    tot = 0.0
+    for v in e:
+        tot += float(v)
+    att_n = (e.astype(np.float64) / tot).astype(f32)
+    acc = np.zeros(V64.shape[1], np.float64)
+    for j in range(buf_len):
+        acc += np.float64(att_n[j]) * V64[j]
+    return acc.astype(f32)
+
+
+class DecodeNet(Net):
+    """Decode-convention forward (runtime/decode.rs mirror): activations
+    are position-major [t*b, d] (row si*b + bi), so each position's b rows
+    fill whole (16,2) blocks (b % 16 == 0) and the blocking of old
+    positions is independent of how many positions exist — the property a
+    KV cache needs and the batch-major [b*s, d] layout lacks (K5)."""
+
+    def attn_full(self, qkv3, b, t, d):
+        heads = self.heads
+        dh = d // heads
+        scale = f32(np.sqrt(f32(dh)))
+        out = np.zeros((b, t, d), f32)
+        for bi in range(b):
+            for h in range(heads):
+                off = h * dh
+                K = qkv3[bi, :, d + off:d + off + dh].astype(np.float64)
+                V = qkv3[bi, :, 2 * d + off:2 * d + off + dh].astype(np.float64)
+                for si in range(t):
+                    q = qkv3[bi, si, off:off + dh].astype(np.float64)
+                    out[bi, si, off:off + dh] = d_attn_row(q, K, V, scale, si + 1, t)
+        return out
+
+    def forward_block(self, tokens, fmt, qcfg, path, cache=None):
+        """Full forward over tokens [b, t] in the decode convention.
+        cache (if a list) is filled with per-layer [K, V] of [b, t, dh*h].
+        Returns position-major logits [t, b, out_dim]."""
+        b, t = tokens.shape
+        d = self.d
+        x = np.concatenate(
+            [(self.p["embed"][tokens[:, si]] + self.p["pos"][si][None, :])
+             for si in range(t)], axis=0).astype(f32)
+        for i in range(self.L):
+            pre = f"layer{i}."
+            h = layer_norm(x, self.p[pre + "ln1_g"], self.p[pre + "ln1_b"], i)
+            qkv = self.qmm(h, pre + "a_attn_in", pre + "w_qkv", fmt, qcfg, path)
+            qkv3 = qkv.reshape(t, b, 3 * d).transpose(1, 0, 2)
+            if cache is not None:
+                cache.append([qkv3[:, :, d:2 * d].copy(), qkv3[:, :, 2 * d:].copy()])
+            o = self.attn_full(qkv3, b, t, d)
+            o = self.qmm(o.transpose(1, 0, 2).reshape(t * b, d),
+                         pre + "a_proj_in", pre + "w_proj", fmt, qcfg, path)
+            x = (x + o).astype(f32)
+            h = layer_norm(x, self.p[pre + "ln2_g"], self.p[pre + "ln2_b"], i)
+            h = self.qmm(h, pre + "a_fc1_in", pre + "w_fc1", fmt, qcfg, path)
+            h = gelu(h)
+            h = self.qmm(h, pre + "a_fc2_in", pre + "w_fc2", fmt, qcfg, path)
+            x = (x + h).astype(f32)
+        xf = layer_norm(x, self.p["lnf_g"], self.p["lnf_b"], None)
+        logits = self.qmm(xf, "a_head_in", "head_w", fmt, qcfg, path)
+        return logits.reshape(t, b, self.out_dim)
+
+    def decode_step(self, toks, pos_idx, cache, fmt, qcfg, path):
+        """One token per sequence through the layers, appending K/V to the
+        cache and attending with the single-query row. Returns [b, V]."""
+        b = toks.shape[0]
+        d = self.d
+        heads = self.heads
+        dh = d // heads
+        scale = f32(np.sqrt(f32(dh)))
+        x = (self.p["embed"][toks] + self.p["pos"][pos_idx][None, :]).astype(f32)
+        for i in range(self.L):
+            pre = f"layer{i}."
+            h = layer_norm(x, self.p[pre + "ln1_g"], self.p[pre + "ln1_b"], i)
+            qkv = self.qmm(h, pre + "a_attn_in", pre + "w_qkv", fmt, qcfg, path)
+            K = np.concatenate([cache[i][0], qkv[:, None, d:2 * d]], axis=1)
+            V = np.concatenate([cache[i][1], qkv[:, None, 2 * d:]], axis=1)
+            cache[i] = [K, V]
+            t1 = K.shape[1]
+            o = np.zeros((b, d), f32)
+            for bi in range(b):
+                for hh in range(heads):
+                    off = hh * dh
+                    o[bi, off:off + dh] = d_attn_row(
+                        qkv[bi, off:off + dh].astype(np.float64),
+                        K[bi, :, off:off + dh].astype(np.float64),
+                        V[bi, :, off:off + dh].astype(np.float64),
+                        scale, t1, t1)
+            o = self.qmm(o, pre + "a_proj_in", pre + "w_proj", fmt, qcfg, path)
+            x = (x + o).astype(f32)
+            h = layer_norm(x, self.p[pre + "ln2_g"], self.p[pre + "ln2_b"], i)
+            h = self.qmm(h, pre + "a_fc1_in", pre + "w_fc1", fmt, qcfg, path)
+            h = gelu(h)
+            h = self.qmm(h, pre + "a_fc2_in", pre + "w_fc2", fmt, qcfg, path)
+            x = (x + h).astype(f32)
+        xf = layer_norm(x, self.p["lnf_g"], self.p["lnf_b"], None)
+        return self.qmm(xf, "a_head_in", "head_w", fmt, qcfg, path)
+
+
+def cached_run(netD, toks0, p0, n_steps, fmt, qc, path, greedy):
+    """Prefill p0 positions (batched, fills the cache), then n_steps
+    decode steps — greedy argmax continuations or teacher-forced tokens.
+    Returns (tokens [b, p0+n_steps], per-step logits [b, V] list)."""
+    cache = []
+    lg_pre = netD.forward_block(toks0[:, :p0], fmt, qc, path, cache)
+    step_logits = [lg_pre[si] for si in range(p0)]
+    toks = toks0[:, :p0]
+    for t in range(p0, p0 + n_steps):
+        nxt = step_logits[-1].argmax(axis=1) if greedy else toks0[:, t]
+        nxt = nxt.astype(toks0.dtype)
+        toks = np.concatenate([toks, nxt[:, None]], axis=1)
+        step_logits.append(netD.decode_step(nxt, t, cache, fmt, qc, path))
+    return toks, step_logits
+
+
+def nll_score(step_logits, toks):
+    """Teacher-forced next-token NLL + argmax-correct, accumulated
+    bi-outer/si-inner like interp.rs::eval_batch (shared by the cached and
+    oracle paths so logit equality implies loss bit-equality)."""
+    b, T = toks.shape
+    nll_sum, correct = 0.0, 0
+    for bi in range(b):
+        for si in range(T - 1):
+            lg = step_logits[si][bi].astype(np.float64)
+            m = lg.max()
+            nll_sum += m + math.log(np.exp(lg - m).sum()) - lg[toks[bi, si + 1]]
+            correct += int(lg.argmax() == toks[bi, si + 1])
+    return f32(nll_sum / (b * (T - 1))), correct
+
+
+lmD = DecodeNet(kind="lm")
+toksD = MarkovCorpus(7).batch(700, 16, 16)
+int_frac4 = {n: 4.0 for n in qtensor_names(1)}
+
+# K1: cached decode vs full recompute of every prefix, all five formats.
+ok_exact, ok_tol, worst = True, True, 0.0
+for fmt, bits_, fracs, p0, greedy in [
+    ("mxint", 7.0, None, 3, True),
+    ("mxint", 6.0, None, 1, True),   # prompt-len-1 edge
+    ("int", 8.0, int_frac4, 3, True),
+    ("bmf", 5.0, None, 3, False),
+    ("bl", 7.0, None, 3, False),
+    ("fp8", 8.0, None, 3, False),
+]:
+    qc = qcfg_uniform(1, bits_, fracs)
+    toks, steps = cached_run(lmD, toksD, p0, 16 - p0, fmt, qc, "packed", greedy)
+    exact = fmt in ("mxint", "int")
+    for t in range(toks.shape[1]):
+        oracle = lmD.forward_block(toks[:, :t + 1], fmt, qc, "packed")[-1]
+        if exact:
+            ok_exact &= steps[t].tobytes() == oracle.tobytes()
+            # generated tokens start at step p0-1; earlier next-tokens
+            # are prompt tokens, not argmaxes
+            if greedy and p0 - 1 <= t < toks.shape[1] - 1:
+                ok_exact &= bool((oracle.argmax(axis=1) == toks[:, t + 1]).all())
+        else:
+            rel = float(np.abs(steps[t].astype(np.float64) - oracle.astype(np.float64)).max()
+                        / max(float(np.abs(oracle).max()), 1e-12))
+            worst = max(worst, rel)
+            ok_tol &= rel < 1e-6
+    l_c, c_c = nll_score(steps, toks)
+    oracle_steps = [lmD.forward_block(toks[:, :t + 1], fmt, qc, "packed")[-1]
+                    for t in range(toks.shape[1])]
+    l_o, c_o = nll_score(oracle_steps, toks)
+    if exact:
+        ok_exact &= bits64(float(l_c)) == bits64(float(l_o)) and c_c == c_o
+    mode = "greedy" if greedy else "forced"
+    print(f"  {fmt}{int(bits_)} p0={p0} {mode}: loss {l_c:.6f} correct {c_c} "
+          f"(oracle {l_o:.6f}/{c_o})")
+check("K1 mxint/int cached decode bitwise == full recompute at every step "
+      "(tokens, logits, loss; incl. prompt len 1)", ok_exact)
+check(f"K1b bmf/bl/fp8 cached decode rel delta < 1e-6 (worst {worst:.3e})", ok_tol)
+
+# K2: the mask-tail lemma in isolation — single-query row vs full causal
+# row with garbage (but finite) K/V rows beyond the context.
+krng = np.random.default_rng(7)
+dh = 16
+K2 = krng.standard_normal((19, dh)).astype(f32).astype(np.float64)
+V2 = krng.standard_normal((19, dh)).astype(f32).astype(np.float64)
+q2 = krng.standard_normal(dh).astype(f32).astype(np.float64)
+sc = f32(np.sqrt(f32(dh)))
+full = d_attn_row(q2, K2, V2, sc, 11, 19)
+single = d_attn_row(q2, K2[:11], V2[:11], sc, 11, 11)
+check("K2 single-query row bitwise == full causal row (mask tail is a no-op)",
+      full.tobytes() == single.tobytes())
+
+# K3: position-major [p*b, k] blocking == stacked per-position [b, k].
+ok = True
+x3 = krng.standard_normal((5 * 16, 32)).astype(f32)
+for fmt, bits_ in [("mxint", 7.0), ("bmf", 5.0), ("bl", 7.0)]:
+    whole = quantize2d(fmt, x3, bits_, 0.0)
+    per = np.vstack([quantize2d(fmt, x3[p * 16:(p + 1) * 16], bits_, 0.0)
+                     for p in range(5)])
+    ok &= whole.tobytes() == per.tobytes()
+check("K3 position-major blocking == per-position blocking (b=16, block fmts)", ok)
+
+# K4: element-wise formats — decode convention vs batch-major forward.
+# (Bitwise in Rust where both share sequential sums; here the batch-major
+# attention uses numpy matmul, so assert a tight tolerance instead.)
+ok = True
+for fmt, bits_, fracs in [("int", 8.0, int_frac4), ("fp32", 32.0, None)]:
+    qc = qcfg_uniform(1, bits_, fracs)
+    lgD = lmD.forward_block(toksD, fmt, qc, "packed")           # [t, b, V]
+    lgB = lmD.forward(toksD, fmt, qc, "packed")                 # [b, t, V]
+    rel = float(np.abs(lgD.transpose(1, 0, 2).astype(np.float64)
+                       - lgB.astype(np.float64)).max()
+                / max(float(np.abs(lgB).max()), 1e-12))
+    same_tok = bool((lgD.transpose(1, 0, 2).argmax(axis=2)
+                     == lgB.argmax(axis=2)).all())
+    print(f"  {fmt}: decode-convention vs batch-major rel {rel:.3e}")
+    ok &= rel < 1e-6 and same_tok
+check("K4 element-wise decode convention matches batch-major forward", ok)
+
+# K5: negative control — block formats MUST differ between the two
+# layouts (this is exactly why a batch-major KV cache cannot be bitwise).
+qc = qcfg_uniform(1, 7.0)
+lgD = lmD.forward_block(toksD, "mxint", qc, "packed")
+lgB = lmD.forward(toksD, "mxint", qc, "packed")
+check("K5 negative control: mxint batch-major forward differs from the "
+      "decode convention", lgD.transpose(1, 0, 2).tobytes() != lgB.tobytes())
 
 print()
 print("ALL PASS" if not fails else f"{len(fails)} FAILURES: {fails}")

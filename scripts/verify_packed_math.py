@@ -520,6 +520,44 @@ check("C8 bl eb=7 span exceeds MAX_ALIGN_SHIFT (predicts f64 fallback)",
       c8_align_span("bl", 7) > MAX_ALIGN_SHIFT
       and c8_align_span("bl", 5) <= MAX_ALIGN_SHIFT)
 
+# ====== C9: PR 7 GEMV loop restructure (kernels.rs::packed_gemv_tall) ======
+# Decode produces m <= 16 activations; the kernel's GEMV path pre-extracts
+# A's (mant, exp) fields once and walks j-outer / k-segment-middle /
+# i-inner with per-row f64 accumulators. Claim: per output element the
+# same products hit the same flush in the same k order, so the result is
+# bitwise identical to the general per-(i, j) tiled loop.
+Mv, Kv = 16, 48
+Av = rng.normal(size=(Mv, Kv)).astype(f32)
+qAv, fldAv = mx_pack_mat(Av, Mv, Kv, 7.0)
+qBv, fldBv = mx_pack_mat(B[:Kv], Kv, N, 4.0)
+general = np.zeros((Mv, N), f32)
+for i in range(Mv):
+    for j in range(N):
+        total = np.float64(0.0)
+        prods = []
+        for kk in range(0, Kv, 2):
+            for t in range(kk, min(kk + 2, Kv)):
+                ma, ea = fldAv(i, t); mb_, eb = fldBv(t, j)
+                if ma != 0 and mb_ != 0: prods.append((ma * mb_, ea + eb))
+            total = flush(total, prods); prods = []
+        general[i, j] = f32(total)
+af = [[fldAv(i, t) for t in range(Kv)] for i in range(Mv)]  # pre-extracted once
+gemv = np.zeros((Mv, N), f32)
+for j in range(N):
+    acc = [np.float64(0.0) for _ in range(Mv)]
+    for kk in range(0, Kv, 2):
+        bf = [fldBv(t, j) for t in range(kk, min(kk + 2, Kv))]
+        for i in range(Mv):
+            prods = []
+            for t in range(kk, min(kk + 2, Kv)):
+                ma, ea = af[i][t]; mb_, eb = bf[t - kk]
+                if ma != 0 and mb_ != 0: prods.append((ma * mb_, ea + eb))
+            acc[i] = flush(acc[i], prods)
+    for i in range(Mv):
+        gemv[i, j] = f32(acc[i])
+check("C9 GEMV j-outer/i-inner restructure bitwise == general tiled loop",
+      general.tobytes() == gemv.tobytes())
+
 print()
 print("ALL PASS" if not fails else f"{len(fails)} FAILURES: {fails}")
 sys.exit(1 if fails else 0)
