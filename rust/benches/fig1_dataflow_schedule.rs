@@ -106,4 +106,23 @@ fn main() {
     println!("{}", te.render());
     println!("stall attribution: consumer waits behind a streaming channel are charged");
     println!("to the channel (xfer_stalled), never to the consumer's stall column.");
+
+    // PR 8: the same accounting folded into the obs registry and printed
+    // through the shared TraceSummary renderer — record_bench.sh embeds
+    // this block (top-8 nodes/channels, as above) in BENCH_RESULTS.md.
+    let reg = mase::obs::Registry::new();
+    reg.counter("sim", "cycles", r.cycles);
+    for &i in rows.iter().take(8) {
+        let path = format!("sim/node/{}", nodes[i].name);
+        reg.counter(&path, "busy_cycles", r.busy[i]);
+        reg.counter(&path, "stalled_cycles", r.stalled[i]);
+    }
+    for e in edges.iter().take(8) {
+        let path = format!(
+            "sim/xfer/{}->{}#{}",
+            nodes[e.producer].name, nodes[e.consumer].name, e.slot
+        );
+        reg.counter(&path, "transfer_stalled", e.transfer_stalled);
+    }
+    print!("{}", mase::obs::TraceSummary::from_registry(&reg).render());
 }

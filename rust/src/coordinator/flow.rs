@@ -5,8 +5,9 @@ use super::pretrain::{have_trained_weights, pretrain, PretrainConfig};
 use super::Session;
 use crate::data::{batches, Task};
 use crate::formats::FormatKind;
+use crate::obs::Registry;
 use crate::passes::{
-    emit_pass, eval_scope, profile_model, run_search_cached, Evaluator, Objective, PassManager,
+    emit_pass, eval_scope, profile_model, run_search_traced, Evaluator, Objective, PassManager,
     QuantSolution, SearchConfig, SearchOutcome,
 };
 use crate::runtime::{BackendKind, CpuBackend, ExecBackend};
@@ -44,6 +45,10 @@ pub struct FlowConfig {
     /// Folded into the eval-cache scope, so the two backends' measured
     /// objectives never mix in a shared cache file.
     pub backend: BackendKind,
+    /// PR 8 observability (`--trace`): when set, the flow records pass
+    /// spans, per-trial memo status and cache counters into
+    /// [`FlowReport::trace`] for export/summary by the caller.
+    pub trace: bool,
 }
 
 impl Default for FlowConfig {
@@ -65,6 +70,7 @@ impl Default for FlowConfig {
             cache_path: None,
             tpe_mean_lie: false,
             backend: BackendKind::Pjrt,
+            trace: false,
         }
     }
 }
@@ -78,6 +84,11 @@ pub struct FlowReport {
     pub emitted_files: usize,
     pub emitted_lines: usize,
     pub dag_size: usize,
+    /// The flow's trace registry: disabled (and empty) unless
+    /// [`FlowConfig::trace`] was set. The caller renders/exports it
+    /// ([`crate::obs::jsonl`], [`crate::obs::chrome`],
+    /// [`crate::obs::TraceSummary`]).
+    pub trace: Arc<Registry>,
 }
 
 /// Run the complete flow for one (model, task): returns the search
@@ -97,7 +108,12 @@ fn run_flow_with<B: ExecBackend>(
     cfg: &FlowConfig,
     backend: B,
 ) -> Result<FlowReport> {
+    let trace =
+        Arc::new(if cfg.trace { Registry::new() } else { Registry::disabled() });
     let mut pm = PassManager::new();
+    if cfg.trace {
+        pm.attach(trace.clone());
+    }
     let meta = session.manifest.model(&cfg.model)?.clone();
 
     // front-end: weights + IR
@@ -165,7 +181,8 @@ fn run_flow_with<B: ExecBackend>(
         }
         None => Arc::new(EvalCache::new()),
     };
-    let outcome = pm.run("search", || run_search_cached(&ev, &profile, cfg.task, &scfg, &cache));
+    let outcome =
+        pm.run("search", || run_search_traced(&ev, &profile, cfg.task, &scfg, &cache, &trace));
     // flush BEFORE surfacing a search failure: evaluations already paid
     // (memoized before the failing trial) must survive for the re-run —
     // the same guarantee coordinator::sweep::sweep_with gives per cell
@@ -196,5 +213,6 @@ fn run_flow_with<B: ExecBackend>(
         emitted_files,
         emitted_lines,
         dag_size,
+        trace,
     })
 }

@@ -7,20 +7,22 @@
 //! and is independent of the PJRT evaluator, so the persistence
 //! guarantees are integration-tested without artifacts (see
 //! `tests/cache_persistence.rs`). [`run_sweep`] instantiates it with the
-//! real pipeline (pretrain → profile → [`run_search_cached`]) and is
+//! real pipeline (pretrain → profile → [`run_search_traced`]) and is
 //! what `mase sweep` and `benches/fig6_opt_sweep.rs` call.
 
 use super::pretrain::{have_trained_weights, pretrain, PretrainConfig};
 use super::Session;
 use crate::data::{batches, Task};
 use crate::formats::FormatKind;
+use crate::obs::Registry;
 use crate::passes::{
-    eval_scope, profile_model, run_search_cached, Evaluator, Objective, SearchConfig,
+    eval_scope, profile_model, run_search_traced, Evaluator, Objective, SearchConfig,
 };
 use crate::runtime::{BackendKind, CpuBackend, ExecBackend};
 use crate::search::{Algorithm, CacheStats, CacheStore, EvalCache};
 use anyhow::Result;
 use std::path::PathBuf;
+use std::sync::Arc;
 
 /// Grid + search hyperparameters for one sweep. Everything that changes
 /// the objective is folded into each cell's cache scope (see
@@ -57,6 +59,12 @@ pub struct SweepConfig {
     /// Part of each cell's cache scope: one cache file can serve sweeps
     /// under both backends without ever mixing their objectives.
     pub backend: BackendKind,
+    /// PR 8 observability (`--trace`): when set, the sweep records a
+    /// `sweep/cell` span per grid cell (tagged model/task/fmt), folds
+    /// each cell's cache-counter delta into the registry, and the search
+    /// inside every cell records per-trial memo status. The caller
+    /// exports/summarizes [`SweepReport::trace`].
+    pub trace: bool,
 }
 
 impl Default for SweepConfig {
@@ -83,6 +91,7 @@ impl Default for SweepConfig {
             tpe_mean_lie: false,
             cache_path: None,
             backend: BackendKind::Pjrt,
+            trace: false,
         }
     }
 }
@@ -139,6 +148,11 @@ pub struct SweepReport {
     /// Why on-disk contents were discarded, if they were (version
     /// mismatch / corruption — see `CacheStore::load_note`).
     pub load_note: Option<String>,
+    /// The sweep's trace registry: disabled (and empty) unless
+    /// [`SweepConfig::trace`] was set. The caller renders/exports it
+    /// ([`crate::obs::jsonl`], [`crate::obs::chrome`],
+    /// [`crate::obs::TraceSummary`]).
+    pub trace: Arc<Registry>,
 }
 
 impl SweepReport {
@@ -192,10 +206,17 @@ pub fn cell_scope(cfg: &SweepConfig, item: &SweepItem) -> String {
 /// cache activity, and flush the store once at the end (atomic; no-op
 /// for in-memory stores). A cell failure aborts the sweep *after*
 /// flushing what completed, so paid evaluations are never lost.
+///
+/// `trace` receives one `sweep/cell` span per cell (tagged
+/// model/task/fmt) plus that cell's cache-counter delta — the grid loop
+/// is single-threaded, so the event stream is deterministic regardless
+/// of how many worker threads each cell's search uses. Pass
+/// `Arc::new(Registry::disabled())` for an untraced sweep.
 pub fn sweep_with<F>(
     cfg: &SweepConfig,
     store: &CacheStore,
     items: Vec<SweepItem>,
+    trace: Arc<Registry>,
     mut run_one: F,
 ) -> Result<SweepReport>
 where
@@ -206,9 +227,17 @@ where
     for item in items {
         let cache = store.cache(&cell_scope(cfg, &item));
         let before = cache.stats();
-        match run_one(&item, &cache) {
+        let span = trace
+            .span("sweep/cell")
+            .tag("model", item.model.as_str())
+            .tag("task", item.task.name())
+            .tag("fmt", item.fmt.name());
+        let out = run_one(&item, &cache);
+        drop(span);
+        match out {
             Ok(cell) => {
-                let delta = cache.stats().since(&before);
+                let delta = cache.stats().delta(&before);
+                delta.record_to(&trace, "sweep/cell");
                 rows.push(SweepRow { item, cell, cache: delta });
             }
             Err(e) => {
@@ -232,6 +261,7 @@ where
         loaded_entries: store.loaded_entries(),
         saved_entries: store.total_entries(),
         load_note: store.load_note().map(str::to_string),
+        trace,
     })
 }
 
@@ -256,6 +286,8 @@ fn run_sweep_with<B: ExecBackend + Copy>(
         Some(p) => CacheStore::open(p),
         None => CacheStore::in_memory(),
     };
+    let trace =
+        Arc::new(if cfg.trace { Registry::new() } else { Registry::disabled() });
     // Resolve each cell's EFFECTIVE QAT budget up front (the paper's
     // QAT-small / PTQ-large split: only models the backend can fine-tune
     // — i.e. shipping the matching `qat_<fmt>` artifact under PJRT;
@@ -286,7 +318,8 @@ fn run_sweep_with<B: ExecBackend + Copy>(
             }
         }
     }
-    sweep_with(cfg, &store, items, |item, cache| {
+    let tr = trace.clone();
+    sweep_with(cfg, &store, items, trace, move |item, cache| {
         let meta = session.manifest.model(&item.model)?.clone();
         let w = pretrain(
             session,
@@ -311,7 +344,7 @@ fn run_sweep_with<B: ExecBackend + Copy>(
             tpe_mean_lie: cfg.tpe_mean_lie,
             ..Default::default()
         };
-        let outcome = run_search_cached(&ev, &profile, item.task, &scfg, cache)?;
+        let outcome = run_search_traced(&ev, &profile, item.task, &scfg, cache, &tr)?;
         Ok(SweepCell {
             value: outcome.best_eval.value,
             accuracy: outcome.best_eval.accuracy,
@@ -379,7 +412,8 @@ mod tests {
             ..Default::default()
         };
         let store = CacheStore::in_memory();
-        let report = sweep_with(&cfg, &store, grid(&cfg), |item, cache| {
+        let trace = Arc::new(Registry::disabled());
+        let report = sweep_with(&cfg, &store, grid(&cfg), trace, |item, cache| {
             // two lookups per cell: one miss+insert, one hit
             let key = vec![7u64];
             assert!(cache.get(&key).is_none());
@@ -404,6 +438,53 @@ mod tests {
     }
 
     #[test]
+    fn traced_sweep_records_cell_spans_and_cache_deltas() {
+        let cfg = SweepConfig {
+            models: vec!["toy".into()],
+            tasks: vec![Task::Sst2, Task::Qqp],
+            fmts: vec![FormatKind::MxInt],
+            trace: true,
+            ..Default::default()
+        };
+        let store = CacheStore::in_memory();
+        let report =
+            sweep_with(&cfg, &store, grid(&cfg), Arc::new(Registry::new()), |_, cache| {
+                // one miss+insert, one hit per cell
+                let key = vec![1u64];
+                assert!(cache.get(&key).is_none());
+                cache.insert(key.clone(), (1.0, vec![]));
+                assert!(cache.get(&key).is_some());
+                Ok(SweepCell {
+                    value: 0.0,
+                    accuracy: 0.0,
+                    avg_bits: 4.0,
+                    mode: "PTQ".into(),
+                })
+            })
+            .unwrap();
+        let reg = &report.trace;
+        let spans: Vec<_> = reg
+            .sorted_events()
+            .into_iter()
+            .filter(|e| matches!(e.kind, crate::obs::EventKind::Span { .. }))
+            .collect();
+        assert_eq!(spans.len(), 2, "one span per grid cell");
+        assert!(spans.iter().all(|e| e.path == "sweep/cell"));
+        match &spans[0].kind {
+            crate::obs::EventKind::Span { tags } => {
+                assert_eq!(tags[0], ("model".to_string(), "toy".to_string()));
+                assert_eq!(tags[1].0, "task");
+                assert_eq!(tags[2].0, "fmt");
+            }
+            _ => unreachable!(),
+        }
+        // per-cell deltas folded into the registry: 1 hit/miss/insert × 2
+        assert_eq!(reg.counter_total("sweep/cell", "cache_hits"), 2);
+        assert_eq!(reg.counter_total("sweep/cell", "cache_misses"), 2);
+        assert_eq!(reg.counter_total("sweep/cell", "cache_inserts"), 2);
+    }
+
+    #[test]
     fn sweep_failure_reports_cell_context() {
         let cfg = SweepConfig {
             models: vec!["toy".into()],
@@ -412,7 +493,8 @@ mod tests {
             ..Default::default()
         };
         let store = CacheStore::in_memory();
-        let err = sweep_with(&cfg, &store, grid(&cfg), |_, _| -> Result<SweepCell> {
+        let trace = Arc::new(Registry::disabled());
+        let err = sweep_with(&cfg, &store, grid(&cfg), trace, |_, _| -> Result<SweepCell> {
             Err(anyhow::anyhow!("boom"))
         })
         .unwrap_err();

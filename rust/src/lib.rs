@@ -14,8 +14,9 @@
 //! kernels ([`packed`]), the pass pipeline ([`passes`]), the search algorithms
 //! and the persistent evaluation cache ([`search`]), the hardware cost
 //! models ([`hw`]), the dataflow simulator ([`sim`]), the SystemVerilog
-//! emitter ([`emit`]), the synthetic data substrate ([`data`]) and the
-//! end-to-end coordinator ([`coordinator`]).
+//! emitter ([`emit`]), the synthetic data substrate ([`data`]), the
+//! deterministic tracing/metrics layer ([`obs`]) and the end-to-end
+//! coordinator ([`coordinator`]).
 //!
 //! A module-by-module map to the paper's sections and figures lives in
 //! `docs/ARCHITECTURE.md` at the repository root.
@@ -52,6 +53,7 @@
 //! | dataflow simulation (Fig. 1e/1f), bandwidth-aware beat model | [`sim`] | no |
 //! | SystemVerilog emission (Table 3) | [`emit`] | no |
 //! | static analysis: SV analyzer + bitwidth contracts (`mase check`) | [`check`] | no |
+//! | deterministic tracing/metrics (`mase trace`, `--trace`) | [`obs`] | no |
 //! | accuracy evaluation, packed CPU interpreter | [`runtime::CpuBackend`] via [`passes::Evaluator`] | no |
 //! | full flow / sweep with `--backend cpu` | [`coordinator`] | no |
 //! | accuracy evaluation / QAT via PJRT | [`runtime::PjrtBackend`] via [`passes::Evaluator`] | **yes** |
@@ -84,6 +86,7 @@ pub mod sim;
 pub mod passes;
 pub mod emit;
 pub mod check;
+pub mod obs;
 pub mod runtime;
 pub mod eval;
 pub mod coordinator;

@@ -12,6 +12,13 @@
 //!   formats   [--model llama-sim]  (Table 1-style format comparison)
 //!   generate  [--model toy-lm] [--tokens N] [--prompt-len N] [--seqs N] [--fmt F]
 //!             (KV-cached greedy decode on the CPU backend)
+//!   trace     [--model M] [--fmt F] [--bits N] [--chan W] [--out FILE]
+//!             [--trace-format chrome|jsonl] | --run e2e|sweep|generate ...
+//!             (PR 8 observability: simulator timelines / flow traces)
+//!
+//! `search`, `e2e`, `emit`, `sweep` and `generate` additionally accept
+//! `--trace [FILE]` (+ `--trace-format jsonl|chrome`) to record and
+//! export the deterministic trace/metrics stream and print a summary.
 
 use anyhow::{anyhow, Result};
 use mase::coordinator::pretrain;
@@ -54,6 +61,22 @@ fn run(args: &Args) -> Result<()> {
         // Static analysis is artifact-free too: no session or execution
         // backend needed, only the IR and the emitter.
         return cmd_check(args, &dir);
+    }
+    if sub == "trace" {
+        match args.get("run") {
+            // default mode: artifact-free simulator tracing, like `check`
+            None => return cmd_trace(args, &dir),
+            // delegate: `mase trace --run sweep ...` == `mase sweep --trace ...`
+            Some(mode @ ("e2e" | "sweep" | "generate")) => {
+                let mut fwd = args.clone();
+                fwd.subcommand = Some(mode.to_string());
+                fwd.flags.entry("trace".to_string()).or_insert_with(|| "true".to_string());
+                return run(&fwd);
+            }
+            Some(other) => {
+                return Err(anyhow!("--run must be e2e|sweep|generate, got '{other}'"))
+            }
+        }
     }
     let backend_name = args.get_or("backend", "pjrt");
     let backend = BackendKind::from_name(&backend_name)
@@ -139,6 +162,7 @@ fn run(args: &Args) -> Result<()> {
                 cache_path: args.get("cache").map(std::path::PathBuf::from),
                 tpe_mean_lie: args.has("tpe-mean-lie"),
                 backend,
+                trace: args.has("trace"),
             };
             let report = mase::coordinator::run_flow(&session, &cfg)?;
             let best = &report.outcome.best_eval;
@@ -184,6 +208,7 @@ fn run(args: &Args) -> Result<()> {
                 }
             );
             println!("\npass timing (Table 4):\n{}", report.pass_manager.report());
+            finish_trace(args, &report.trace)?;
         }
         "sweep" => {
             let list = |key: &str, default: &str| -> Vec<String> {
@@ -218,6 +243,7 @@ fn run(args: &Args) -> Result<()> {
                 tpe_mean_lie: args.has("tpe-mean-lie"),
                 cache_path: args.get("cache").map(std::path::PathBuf::from),
                 backend,
+                trace: args.has("trace"),
             };
             let report = mase::coordinator::run_sweep(&session, &cfg)?;
             if let Some(note) = &report.load_note {
@@ -257,6 +283,7 @@ fn run(args: &Args) -> Result<()> {
                     println!("(in-memory cache only; pass --cache FILE to persist across runs)")
                 }
             }
+            finish_trace(args, &report.trace)?;
         }
         "ir" => {
             let model = args.get("model").ok_or_else(|| anyhow!("--model required"))?;
@@ -362,7 +389,22 @@ fn cmd_generate<B: ExecBackend>(session: &Session, args: &Args, backend: B) -> R
     let sol = mase::passes::QuantSolution::uniform(fmt, bits, &meta, &profile);
     let ev = mase::passes::Evaluator::new(backend, &meta, &w, &[])?;
     let threads = args.threads();
+    // PR 8 observability: with --trace, record the decode's counted work
+    // and the packed-kernel dispatch delta at this single-threaded point.
+    let reg = if args.has("trace") {
+        mase::obs::Registry::new()
+    } else {
+        mase::obs::Registry::disabled()
+    };
+    let tally_before = mase::packed::kernel_tally();
+    let span = reg
+        .span("decode/run")
+        .tag("model", meta.name.as_str())
+        .tag("fmt", fmt.name());
     let r = ev.decode(&sol, &prompts, n_seqs, prompt_len, n_tokens, threads)?;
+    drop(span);
+    r.stats.record_to(&reg, "decode/run");
+    mase::packed::kernel_tally().delta(&tally_before).record_to(&reg, "kernels");
 
     // The CI decode smoke greps the final line; keep these checks fatal.
     anyhow::ensure!(
@@ -398,6 +440,34 @@ fn cmd_generate<B: ExecBackend>(session: &Session, args: &Args, backend: B) -> R
         per_tok_ms,
         prefill_ms
     );
+    finish_trace(args, &reg)?;
+    Ok(())
+}
+
+/// Print the PR 8 trace summary and export the registry. A bare
+/// `--trace` prints the summary table only; `--trace FILE` additionally
+/// writes the event stream: `--trace-format jsonl` (default, the
+/// deterministic `mase-trace` stream) or `chrome` (wall-clock span
+/// timelines for chrome://tracing / Perfetto).
+fn finish_trace(args: &Args, reg: &mase::obs::Registry) -> Result<()> {
+    if !reg.is_enabled() {
+        return Ok(());
+    }
+    let summary = mase::obs::TraceSummary::from_registry(reg);
+    if !summary.is_empty() {
+        print!("\n{}", summary.render());
+    }
+    let Some(path) = args.get("trace").filter(|p| *p != "true") else {
+        return Ok(());
+    };
+    let format = args.get_or("trace-format", "jsonl");
+    let body = match format.as_str() {
+        "jsonl" => mase::obs::jsonl::render(reg),
+        "chrome" => format!("{}\n", mase::obs::chrome::registry_chrome_json(reg)),
+        other => return Err(anyhow!("unknown --trace-format '{other}' (jsonl|chrome)")),
+    };
+    std::fs::write(path, body)?;
+    println!("trace written to {path} ({format})");
     Ok(())
 }
 
@@ -601,6 +671,109 @@ fn cmd_check(args: &Args, dir: &std::path::Path) -> Result<()> {
     Ok(())
 }
 
+/// `mase trace` — the PR 8 observability driver. Default mode is
+/// artifact-free (like `check`): quantize + parallelize a model
+/// (manifest model or a synthetic spec) at `--fmt/--bits`, run the
+/// cycle-approximate simulator with tracing over `--chan`-bit channels,
+/// and export the event log:
+///
+///  * `--trace-format chrome` (default) — Chrome Trace Event JSON
+///    loadable in chrome://tracing or Perfetto: one timeline track per
+///    PE (node firings as slices) plus one per stalled channel. Slice
+///    timestamps are simulated cycles, so the export is exactly as
+///    deterministic as the simulator.
+///  * `--trace-format jsonl` — the deterministic `mase-trace` JSONL
+///    stream: per-node firing/busy/stall counters and per-edge transfer
+///    counters (fixed-width hex, sorted by `(path, seq)`).
+///
+/// `--run e2e|sweep|generate` instead delegates to that subcommand with
+/// tracing forced on (`mase trace --run sweep ...` == `mase sweep
+/// --trace ...`).
+fn cmd_trace(args: &Args, dir: &std::path::Path) -> Result<()> {
+    let fmt = FormatKind::from_name(&args.get_or("fmt", "mxint"))
+        .ok_or_else(|| anyhow!("unknown format"))?;
+    let bits = args.get_f64("bits", 5.0) as f32;
+    let chan = args.get_usize("chan", mase::hw::DEFAULT_CHANNEL_BITS as usize) as u64;
+    let inferences = args.get_usize("inferences", 8) as u64;
+    let fifo_depth = args.get_usize("fifo", 4) as u64;
+    let model = args.get_or("model", "opt-125m-sim");
+    let meta = match mase::frontend::Manifest::load(dir) {
+        Ok(man) => man.model(&model)?.clone(),
+        Err(_) => mase::frontend::ModelMeta::synthetic(
+            &model,
+            args.get_usize("layers", 2),
+            args.get_usize("d-model", 32),
+            args.get_usize("heads", 2),
+            args.get_usize("vocab", 512),
+            args.get_usize("seq", 32),
+            4,
+            "classifier",
+            64,
+        ),
+    };
+    let profile = mase::passes::ProfileData::uniform(&meta, 4.0);
+    let mut g = mase::frontend::build_graph(&meta);
+    mase::passes::QuantSolution::uniform(fmt, bits, &meta, &profile).apply(&mut g);
+    mase::passes::parallelize(&mut g, &mase::hw::Device::u250(), 0.2);
+    mase::passes::verify_boundary(&g, "parallelize")?;
+    let nodes = mase::sim::nodes_from_graph(&g);
+    let cfg =
+        mase::sim::SimConfig { inferences, fifo_depth, sequential: false, channel_bits: chan };
+    let (report, trace) = mase::sim::simulate_traced(&nodes, &cfg);
+    println!(
+        "simulated '{}' ({} @ {} bits, {}-bit channels): {} nodes, {} inferences, {} cycles, \
+         {} firings, {} channel-stall events",
+        meta.name,
+        fmt.name(),
+        bits,
+        chan,
+        nodes.len(),
+        inferences,
+        report.cycles,
+        trace.firings.len(),
+        trace.stalls.len(),
+    );
+
+    let format = args.get_or("trace-format", "chrome");
+    let out = args.get_or("out", "trace.json");
+    let body = match format.as_str() {
+        "chrome" => format!("{}\n", mase::obs::chrome::sim_chrome_json(&nodes, &report, &trace)),
+        "jsonl" => {
+            // Fold the sim accounting into a trace registry: counters
+            // only (counted cycles, no wall-clock), so the stream is as
+            // deterministic as the simulator.
+            let reg = mase::obs::Registry::new();
+            reg.counter("sim", "cycles", report.cycles);
+            let mut firings = vec![0u64; nodes.len()];
+            for f in &trace.firings {
+                firings[f.node] += 1;
+            }
+            for (i, n) in nodes.iter().enumerate() {
+                let path = format!("sim/node/{}", n.name);
+                reg.counter(&path, "firings", firings[i]);
+                reg.counter(&path, "busy_cycles", report.busy[i]);
+                reg.counter(&path, "stalled_cycles", report.stalled[i]);
+            }
+            for e in &report.edges {
+                let path = format!(
+                    "sim/xfer/{}->{}#{}",
+                    nodes[e.producer].name, nodes[e.consumer].name, e.slot
+                );
+                reg.counter(&path, "transfer_cycles", e.transfer_cycles);
+                reg.counter(&path, "transfer_stalled", e.transfer_stalled);
+            }
+            mase::obs::jsonl::render(&reg)
+        }
+        other => return Err(anyhow!("unknown --trace-format '{other}' (chrome|jsonl)")),
+    };
+    std::fs::write(&out, body)?;
+    println!("trace written to {out} ({format})");
+    if format == "chrome" {
+        println!("(load in chrome://tracing or https://ui.perfetto.dev — one track per PE)");
+    }
+    Ok(())
+}
+
 const HELP: &str = "mase — dataflow compiler for LLM inference with MX formats
 usage: mase <subcommand> [flags]
   pretrain --all | --model M [--task T] [--steps N]
@@ -625,6 +798,12 @@ usage: mase <subcommand> [flags]
            (KV-cached greedy decode through the incremental engine;
             needs --backend cpu — prints ms/token and the counted
             attention work; bit-identical output at any --threads)
+  trace    [--model M] [--fmt F] [--bits N] [--chan W] [--inferences N]
+           [--out FILE] [--trace-format chrome|jsonl]
+           (artifact-free simulator tracing: per-PE firing/stall
+            timelines as Chrome Trace JSON for chrome://tracing /
+            Perfetto, or the deterministic mase-trace JSONL stream;
+            --run e2e|sweep|generate delegates with tracing forced on)
 common: --artifacts DIR (default ./artifacts)
         --backend pjrt|cpu (execution backend for evaluate/profile;
             cpu = the artifact-free packed-arithmetic interpreter —
@@ -634,4 +813,7 @@ common: --artifacts DIR (default ./artifacts)
         --threads N (search eval workers; 0 = auto, also MASE_THREADS)
         --batch N   (search proposals per ask/tell round, default 8)
         --cache FILE (persistent eval cache for search/sweep/e2e/emit)
-        --tpe-mean-lie (TPE batches lie at the observed mean, not the min)";
+        --tpe-mean-lie (TPE batches lie at the observed mean, not the min)
+        --trace [FILE] (search/e2e/emit/sweep/generate: record the
+            deterministic trace/metrics stream, print a summary table;
+            with FILE, export it — --trace-format jsonl|chrome)";

@@ -1,0 +1,254 @@
+//! Chrome Trace Event (Perfetto-loadable) exporters — Fig. 1 as an
+//! interactive timeline.
+//!
+//! Two exporters share the JSON shape (`{"traceEvents":[...]}`, complete
+//! "X" events, `ph:"M"` thread-name metadata) but differ in their clock:
+//!
+//! - [`sim_chrome_json`] renders a [`SimTrace`] with **simulated
+//!   cycles** as microseconds — one track per PE (node firings) plus one
+//!   track per stalled channel (`transfer_stalled` intervals). Fully
+//!   deterministic; golden-tested and re-derived by
+//!   `scripts/verify_trace_schema.py`.
+//! - [`registry_chrome_json`] renders a flow/sweep [`Registry`] with
+//!   **wall-clock** span timings (visualization only — the determinism
+//!   contract covers the JSONL export, not this view).
+//!
+//! Load either in <https://ui.perfetto.dev> (or `chrome://tracing`) via
+//! "Open trace file".
+
+use super::{EventKind, Registry};
+use crate::sim::{NodeSpec, SimReport, SimTrace};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn thread_name(tid: usize, name: &str) -> Json {
+    obj(vec![
+        ("args", obj(vec![("name", Json::Str(name.to_string()))])),
+        ("name", Json::Str("thread_name".to_string())),
+        ("ph", Json::Str("M".to_string())),
+        ("pid", Json::Num(0.0)),
+        ("tid", Json::Num(tid as f64)),
+    ])
+}
+
+fn complete(name: &str, cat: &str, ts: u64, dur: u64, tid: usize) -> Json {
+    obj(vec![
+        ("cat", Json::Str(cat.to_string())),
+        ("dur", Json::Num(dur as f64)),
+        ("name", Json::Str(name.to_string())),
+        ("ph", Json::Str("X".to_string())),
+        ("pid", Json::Num(0.0)),
+        ("tid", Json::Num(tid as f64)),
+        ("ts", Json::Num(ts as f64)),
+    ])
+}
+
+/// Render a simulator run as a Chrome trace: tids `0..nodes.len()` are
+/// PE tracks (one "X" slice per firing, `dur` = occupancy), and every
+/// edge with nonzero [`crate::sim::EdgeReport::transfer_stalled`] gets
+/// an `xfer:producer->consumer` track above them.
+/// Cycles map 1:1 to trace microseconds. Per PE track, total slice
+/// duration equals `SimReport::busy` and the last slice ends at
+/// `SimReport::cycles` — the closed-form accounting the golden test and
+/// the python mirror assert.
+pub fn sim_chrome_json(nodes: &[NodeSpec], report: &SimReport, trace: &SimTrace) -> Json {
+    let mut events = Vec::new();
+    for (i, nd) in nodes.iter().enumerate() {
+        events.push(thread_name(i, &nd.name));
+    }
+    // stable tid per stalled edge: nodes.len() + position among stalled
+    let mut edge_tid: BTreeMap<usize, usize> = BTreeMap::new();
+    for (e, edge) in report.edges.iter().enumerate() {
+        if edge.transfer_stalled > 0 {
+            let tid = nodes.len() + edge_tid.len();
+            edge_tid.insert(e, tid);
+            let label =
+                format!("xfer:{}->{}", nodes[edge.producer].name, nodes[edge.consumer].name);
+            events.push(thread_name(tid, &label));
+        }
+    }
+    for f in &trace.firings {
+        events.push(complete(&nodes[f.node].name, "firing", f.t, f.occupancy, f.node));
+    }
+    for s in &trace.stalls {
+        if let Some(&tid) = edge_tid.get(&s.edge) {
+            events.push(complete("transfer_stalled", "stall", s.t, s.dt, tid));
+        }
+    }
+    obj(vec![
+        ("displayTimeUnit", Json::Str("ns".to_string())),
+        ("traceEvents", Json::Arr(events)),
+    ])
+}
+
+/// Render a flow/sweep registry's spans as a wall-clock Chrome trace:
+/// one track per top-level path segment (`pass`, `search`, `sweep`,
+/// `decode`), spans as "X" slices at microsecond resolution, tags in
+/// `args`. Visualization only — timings are wall-clock, so this export
+/// is NOT covered by the byte-identical determinism contract (the JSONL
+/// export is).
+pub fn registry_chrome_json(reg: &Registry) -> Json {
+    let spans: Vec<_> = reg
+        .sorted_events()
+        .into_iter()
+        .filter_map(|ev| match ev.kind {
+            EventKind::Span { ref tags } => {
+                ev.wall.map(|w| (ev.path.clone(), tags.clone(), w))
+            }
+            EventKind::Counter { .. } => None,
+        })
+        .collect();
+    let mut track: BTreeMap<String, usize> = BTreeMap::new();
+    for (path, _, _) in &spans {
+        let top = path.split('/').next().unwrap_or(path).to_string();
+        let next = track.len();
+        track.entry(top).or_insert(next);
+    }
+    let mut events = Vec::new();
+    for (name, &tid) in &track {
+        events.push(thread_name(tid, name));
+    }
+    for (path, tags, (start, dur)) in &spans {
+        let top = path.split('/').next().unwrap_or(path);
+        let tid = track[top];
+        let mut e = complete(path, "span", 0, 0, tid);
+        if let Json::Obj(m) = &mut e {
+            m.insert("ts".to_string(), Json::Num((start * 1e6).round()));
+            m.insert("dur".to_string(), Json::Num((dur * 1e6).round().max(1.0)));
+            let t: BTreeMap<String, Json> =
+                tags.iter().map(|(k, v)| (k.clone(), Json::Str(v.clone()))).collect();
+            m.insert("args".to_string(), Json::Obj(t));
+        }
+        events.push(e);
+    }
+    obj(vec![
+        ("displayTimeUnit", Json::Str("ns".to_string())),
+        ("traceEvents", Json::Arr(events)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{simulate_traced, SimConfig};
+
+    fn toy_nodes() -> Vec<NodeSpec> {
+        // the Fig. 1 toy fork-join graph, also mirrored line-for-line in
+        // scripts/verify_trace_schema.py and the golden-trace test
+        vec![
+            NodeSpec {
+                name: "src".into(),
+                preds: vec![],
+                pred_buffer: vec![],
+                ii: 1,
+                tiles_per_inference: 8,
+                is_source: true,
+                out_tile_bits: 256,
+            },
+            NodeSpec {
+                name: "a".into(),
+                preds: vec![0],
+                pred_buffer: vec![],
+                ii: 2,
+                tiles_per_inference: 8,
+                is_source: false,
+                out_tile_bits: 128,
+            },
+            NodeSpec {
+                name: "b".into(),
+                preds: vec![0],
+                pred_buffer: vec![],
+                ii: 3,
+                tiles_per_inference: 8,
+                is_source: false,
+                out_tile_bits: 128,
+            },
+            NodeSpec {
+                name: "join".into(),
+                preds: vec![1, 2],
+                pred_buffer: vec![],
+                ii: 1,
+                tiles_per_inference: 8,
+                is_source: false,
+                out_tile_bits: 0,
+            },
+        ]
+    }
+
+    #[test]
+    fn sim_export_durations_match_closed_form_busy() {
+        let nodes = toy_nodes();
+        let cfg =
+            SimConfig { inferences: 2, fifo_depth: 2, sequential: false, channel_bits: 32 };
+        let (report, trace) = simulate_traced(&nodes, &cfg);
+        let j = sim_chrome_json(&nodes, &report, &trace);
+        let events = j.get("traceEvents").unwrap().as_arr().unwrap();
+        // per-PE sum of slice durations == SimReport::busy
+        for (i, &busy) in report.busy.iter().enumerate() {
+            let total: f64 = events
+                .iter()
+                .filter(|e| {
+                    e.get("ph").and_then(Json::as_str) == Some("X")
+                        && e.get("cat").and_then(Json::as_str) == Some("firing")
+                        && e.get("tid").and_then(Json::as_f64) == Some(i as f64)
+                })
+                .map(|e| e.get("dur").unwrap().as_f64().unwrap())
+                .sum();
+            assert_eq!(total as u64, busy, "node {i}");
+        }
+        // trace ends exactly at the report's cycle count
+        let end = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+            .map(|e| {
+                e.get("ts").unwrap().as_f64().unwrap() + e.get("dur").unwrap().as_f64().unwrap()
+            })
+            .fold(0.0, f64::max);
+        assert_eq!(end as u64, report.cycles);
+        // every stalled edge has a named track
+        let stalled = report.edges.iter().filter(|e| e.transfer_stalled > 0).count();
+        let xfer_tracks = events
+            .iter()
+            .filter(|e| {
+                e.get("ph").and_then(Json::as_str) == Some("M")
+                    && e.at(&["args", "name"])
+                        .and_then(Json::as_str)
+                        .is_some_and(|n| n.starts_with("xfer:"))
+            })
+            .count();
+        assert_eq!(stalled, xfer_tracks);
+        assert!(stalled > 0, "32-bit fabric must stall this graph");
+    }
+
+    #[test]
+    fn registry_export_has_one_track_per_top_segment() {
+        let reg = Registry::new();
+        {
+            let _g = reg.span("pass/search").tag("algo", "tpe");
+        }
+        {
+            let _g = reg.span("pass/emit");
+        }
+        {
+            let _g = reg.span("sweep/cell");
+        }
+        reg.counter("decode/group", "dots", 3); // counters: not exported
+        let j = registry_chrome_json(&reg);
+        let events = j.get("traceEvents").unwrap().as_arr().unwrap();
+        let tracks: Vec<&str> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("M"))
+            .map(|e| e.at(&["args", "name"]).unwrap().as_str().unwrap())
+            .collect();
+        assert_eq!(tracks, vec!["pass", "sweep"]);
+        let slices = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+            .count();
+        assert_eq!(slices, 3);
+    }
+}

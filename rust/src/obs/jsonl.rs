@@ -1,0 +1,120 @@
+//! JSONL export of a [`Registry`](super::Registry): the deterministic,
+//! byte-comparable trace artifact.
+//!
+//! ## Line schema (`mase-trace` v1)
+//!
+//! One JSON object per line, compact-printed by [`crate::util::json`]
+//! (sorted keys, no whitespace), all `u64` values as fixed-width
+//! 16-digit lowercase hex (the PR 2 bit-pattern convention):
+//!
+//! ```text
+//! {"schema":"mase-trace","version":1}                          header
+//! {"kind":"span","path":P,"seq":H,"tags":{..}}                 span
+//! {"kind":"counter","delta":H,"name":N,"path":P,"seq":H}       increment
+//! {"kind":"total","name":N,"path":P,"value":H}                 footer
+//! ```
+//!
+//! Events are sorted by the documented `(span_path, seq)` key; totals
+//! (one per counter, in `BTreeMap` order) follow all events. Wall-clock
+//! span side data is **excluded** — a fixed seed yields a byte-identical
+//! file at any thread count (`tests/trace_determinism.rs`).
+
+use super::{EventKind, Registry};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Schema tag on the header line.
+pub const SCHEMA: &str = "mase-trace";
+/// Schema version on the header line.
+pub const VERSION: u64 = 1;
+
+fn hex(v: u64) -> Json {
+    Json::Str(format!("{v:016x}"))
+}
+
+/// Render the registry as a complete JSONL document (trailing newline).
+pub fn render(reg: &Registry) -> String {
+    let mut lines = Vec::new();
+    let mut header = BTreeMap::new();
+    header.insert("schema".to_string(), Json::Str(SCHEMA.to_string()));
+    header.insert("version".to_string(), Json::Num(VERSION as f64));
+    lines.push(Json::Obj(header).to_string());
+
+    for ev in reg.sorted_events() {
+        let mut o = BTreeMap::new();
+        o.insert("path".to_string(), Json::Str(ev.path.clone()));
+        o.insert("seq".to_string(), hex(ev.seq));
+        match &ev.kind {
+            EventKind::Span { tags } => {
+                o.insert("kind".to_string(), Json::Str("span".to_string()));
+                let t: BTreeMap<String, Json> =
+                    tags.iter().map(|(k, v)| (k.clone(), Json::Str(v.clone()))).collect();
+                o.insert("tags".to_string(), Json::Obj(t));
+            }
+            EventKind::Counter { name, delta } => {
+                o.insert("kind".to_string(), Json::Str("counter".to_string()));
+                o.insert("name".to_string(), Json::Str(name.clone()));
+                o.insert("delta".to_string(), hex(*delta));
+            }
+        }
+        lines.push(Json::Obj(o).to_string());
+    }
+
+    for ((path, name), total) in reg.counters() {
+        let mut o = BTreeMap::new();
+        o.insert("kind".to_string(), Json::Str("total".to_string()));
+        o.insert("path".to_string(), Json::Str(path));
+        o.insert("name".to_string(), Json::Str(name));
+        o.insert("value".to_string(), hex(total));
+        lines.push(Json::Obj(o).to_string());
+    }
+
+    lines.join("\n") + "\n"
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_then_sorted_events_then_totals() {
+        let reg = Registry::new();
+        reg.counter("b/path", "n", 2);
+        {
+            let _g = reg.span("a/path").tag("memo", "hit");
+        }
+        reg.counter("b/path", "n", 3);
+        let out = render(&reg);
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines[0], r#"{"schema":"mase-trace","version":1}"#);
+        // sorted by (path, seq): span on a/path first despite later record
+        assert_eq!(
+            lines[1],
+            r#"{"kind":"span","path":"a/path","seq":"0000000000000000","tags":{"memo":"hit"}}"#
+        );
+        assert_eq!(
+            lines[2],
+            r#"{"delta":"0000000000000002","kind":"counter","name":"n","path":"b/path","seq":"0000000000000000"}"#
+        );
+        assert_eq!(
+            lines[4],
+            r#"{"kind":"total","name":"n","path":"b/path","value":"0000000000000005"}"#
+        );
+        assert!(out.ends_with('\n'));
+        // every line parses back
+        for l in lines {
+            Json::parse(l).expect("valid json line");
+        }
+    }
+
+    #[test]
+    fn wall_clock_never_leaks_into_the_stream() {
+        let reg = Registry::new();
+        {
+            let _g = reg.span("pass/search");
+        }
+        let out = render(&reg);
+        assert!(!out.contains("wall"), "{out}");
+        assert!(!out.contains("secs"), "{out}");
+    }
+}

@@ -1,0 +1,329 @@
+//! Observability: deterministic tracing + metrics for every phase the
+//! paper makes a per-phase accounting claim about (PR 8).
+//!
+//! ## Model
+//!
+//! A [`Registry`] collects two kinds of events into one ordered stream:
+//!
+//! - **spans** — RAII-guarded regions ([`Registry::span`]) named by a
+//!   `/`-separated path (`pass/search`, `search/trial`, `sweep/cell`,
+//!   `decode/group`), optionally tagged with string key/values
+//!   (`memo=hit`). One event is recorded when the guard drops.
+//! - **counters** — monotonic named `u64` totals under a path
+//!   ([`Registry::counter`]), e.g. `decode/group` ×
+//!   `decode_score_dots`. Every increment appends a counter event
+//!   carrying its delta; totals accumulate in a side map.
+//!
+//! ## Determinism contract
+//!
+//! The event stream is **counted work, never wall-clock**: events are
+//! recorded only at single-threaded orchestration points (batch
+//! re-association loops, sweep cells, pass boundaries, post-`par_map`
+//! merges), worker threads contribute only via order-independent counter
+//! sums, and every event's sort key is `(span_path, seq)` where `seq` is
+//! a per-path monotonic index. A fixed seed therefore produces a
+//! **byte-identical** JSONL export ([`jsonl::render`]) at any thread
+//! count — the same contract PRs 1/7 assert for search histories and
+//! decode outputs, asserted for traces by `tests/trace_determinism.rs`.
+//!
+//! Wall-clock durations ARE measured (spans hold a [`Instant`]) but flow
+//! only into the human-facing [`summary::TraceSummary`] table and the
+//! wall-clock Chrome export ([`chrome::registry_chrome_json`]) — never
+//! into the JSONL stream. The cycle-exact Chrome export of a simulator
+//! run ([`chrome::sim_chrome_json`]) uses simulated cycles and is as
+//! deterministic as the simulator itself.
+//!
+//! ## Serialization
+//!
+//! All `u64` values (seq, deltas, totals) serialize as fixed-width
+//! 16-digit lowercase hex — the PR 2 bit-pattern convention
+//! (`search::cache::hex_u64`) that makes streams byte-comparable and
+//! float-round-trip-proof. `scripts/verify_trace_schema.py` validates
+//! the schema and re-derives the simulator's closed-form cycle
+//! accounting without a Rust toolchain.
+
+pub mod chrome;
+pub mod jsonl;
+pub mod summary;
+
+pub use summary::TraceSummary;
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// One recorded event. `wall` is side data for span events (start offset
+/// from registry creation, duration — both seconds); it never enters the
+/// deterministic JSONL stream.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    pub path: String,
+    /// Per-path monotonic index: the second half of the documented
+    /// `(span_path, seq)` sort key.
+    pub seq: u64,
+    pub kind: EventKind,
+    pub wall: Option<(f64, f64)>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventKind {
+    /// A completed span with its (insertion-ordered) tags.
+    Span { tags: Vec<(String, String)> },
+    /// A counter increment: `delta` added to the `(path, name)` total.
+    Counter { name: String, delta: u64 },
+}
+
+/// The recording contract: thread-safe, and every call a cheap no-op
+/// when `enabled()` is false. [`Registry`] is the standard
+/// implementation; the trait exists so instrumented code states exactly
+/// what it needs.
+pub trait Recorder: Send + Sync {
+    fn enabled(&self) -> bool;
+    /// Record a completed span at `path`. `wall` is (start offset,
+    /// duration) in seconds relative to the recorder's origin.
+    fn record_span(&self, path: &str, tags: Vec<(String, String)>, wall: Option<(f64, f64)>);
+    /// Add `delta` to the monotonic counter `name` under `path` and
+    /// append the increment to the event stream.
+    fn add_counter(&self, path: &str, name: &str, delta: u64);
+}
+
+#[derive(Default)]
+struct Inner {
+    events: Vec<Event>,
+    /// path -> next seq
+    seq: BTreeMap<String, u64>,
+    /// (path, name) -> monotonic total
+    counters: BTreeMap<(String, String), u64>,
+    /// path -> (total wall seconds, span count) — summary-table only
+    wall: BTreeMap<String, (f64, u64)>,
+}
+
+/// The standard [`Recorder`]: a mutex-guarded event log + counter
+/// registry. Cheap when disabled (every entry point checks one bool and
+/// returns), plain `Mutex` when enabled — recording happens at
+/// orchestration points, never in per-element hot loops.
+pub struct Registry {
+    enabled: bool,
+    origin: Instant,
+    inner: Mutex<Inner>,
+}
+
+impl fmt::Debug for Registry {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let inner = self.inner.lock().unwrap();
+        f.debug_struct("Registry")
+            .field("enabled", &self.enabled)
+            .field("events", &inner.events.len())
+            .field("counters", &inner.counters.len())
+            .finish()
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Registry {
+    /// An enabled, empty registry.
+    pub fn new() -> Self {
+        Self { enabled: true, origin: Instant::now(), inner: Mutex::new(Inner::default()) }
+    }
+
+    /// A registry that drops everything — for plumbing that always takes
+    /// a recorder.
+    pub fn disabled() -> Self {
+        Self { enabled: false, origin: Instant::now(), inner: Mutex::new(Inner::default()) }
+    }
+
+    /// The shared disabled registry: the default recorder for untraced
+    /// runs, so instrumented code never branches on `Option`.
+    pub fn none() -> &'static Registry {
+        static NONE: OnceLock<Registry> = OnceLock::new();
+        NONE.get_or_init(Registry::disabled)
+    }
+
+    /// Inherent mirror of [`Recorder::enabled`], so instrumented code
+    /// can gate without importing the trait.
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Open a span at `path`; the event is recorded when the returned
+    /// guard drops. Chain [`SpanGuard::tag`] to attach tags.
+    pub fn span(&self, path: &str) -> SpanGuard<'_> {
+        SpanGuard {
+            reg: self.enabled.then_some(self),
+            path: if self.enabled { path.to_string() } else { String::new() },
+            tags: Vec::new(),
+            start: Instant::now(),
+        }
+    }
+
+    /// Monotonic counter increment (also appends a stream event).
+    pub fn counter(&self, path: &str, name: &str, delta: u64) {
+        self.add_counter(path, name, delta);
+    }
+
+    /// Current total of counter `(path, name)` (0 if never touched).
+    pub fn counter_total(&self, path: &str, name: &str) -> u64 {
+        let inner = self.inner.lock().unwrap();
+        inner.counters.get(&(path.to_string(), name.to_string())).copied().unwrap_or(0)
+    }
+
+    /// Snapshot of the event log in recording order.
+    pub fn events(&self) -> Vec<Event> {
+        self.inner.lock().unwrap().events.clone()
+    }
+
+    /// Snapshot of the event log sorted by the documented
+    /// `(span_path, seq)` key — the order every exporter uses.
+    pub fn sorted_events(&self) -> Vec<Event> {
+        let mut ev = self.events();
+        ev.sort_by(|a, b| (a.path.as_str(), a.seq).cmp(&(b.path.as_str(), b.seq)));
+        ev
+    }
+
+    /// Snapshot of all counter totals.
+    pub fn counters(&self) -> BTreeMap<(String, String), u64> {
+        self.inner.lock().unwrap().counters.clone()
+    }
+
+    /// Snapshot of per-path wall-clock (total seconds, span count) —
+    /// summary-table data, excluded from the deterministic stream.
+    pub fn wall(&self) -> BTreeMap<String, (f64, u64)> {
+        self.inner.lock().unwrap().wall.clone()
+    }
+
+    fn next_seq(inner: &mut Inner, path: &str) -> u64 {
+        let e = inner.seq.entry(path.to_string()).or_insert(0);
+        let s = *e;
+        *e += 1;
+        s
+    }
+}
+
+impl Recorder for Registry {
+    fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    fn record_span(&self, path: &str, tags: Vec<(String, String)>, wall: Option<(f64, f64)>) {
+        if !self.enabled {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let seq = Self::next_seq(&mut inner, path);
+        if let Some((_, dur)) = wall {
+            let w = inner.wall.entry(path.to_string()).or_insert((0.0, 0));
+            w.0 += dur;
+            w.1 += 1;
+        }
+        inner.events.push(Event {
+            path: path.to_string(),
+            seq,
+            kind: EventKind::Span { tags },
+            wall,
+        });
+    }
+
+    fn add_counter(&self, path: &str, name: &str, delta: u64) {
+        if !self.enabled {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let seq = Self::next_seq(&mut inner, path);
+        *inner.counters.entry((path.to_string(), name.to_string())).or_insert(0) += delta;
+        inner.events.push(Event {
+            path: path.to_string(),
+            seq,
+            kind: EventKind::Counter { name: name.to_string(), delta },
+            wall: None,
+        });
+    }
+}
+
+/// RAII span guard from [`Registry::span`]: records one span event (with
+/// the tags attached so far) when dropped.
+pub struct SpanGuard<'a> {
+    reg: Option<&'a Registry>,
+    path: String,
+    tags: Vec<(String, String)>,
+    start: Instant,
+}
+
+impl SpanGuard<'_> {
+    /// Attach a tag; a no-op on a disabled registry.
+    pub fn tag(mut self, key: &str, value: impl Into<String>) -> Self {
+        if self.reg.is_some() {
+            self.tags.push((key.to_string(), value.into()));
+        }
+        self
+    }
+}
+
+impl Drop for SpanGuard<'_> {
+    fn drop(&mut self) {
+        if let Some(reg) = self.reg {
+            let start = self.start.saturating_duration_since(reg.origin).as_secs_f64();
+            let dur = self.start.elapsed().as_secs_f64();
+            reg.record_span(&self.path, std::mem::take(&mut self.tags), Some((start, dur)));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_and_counters_accumulate() {
+        let reg = Registry::new();
+        {
+            let _g = reg.span("pass/search").tag("algo", "tpe");
+        }
+        reg.counter("decode/group", "dots", 7);
+        reg.counter("decode/group", "dots", 3);
+        assert_eq!(reg.counter_total("decode/group", "dots"), 10);
+        let ev = reg.events();
+        assert_eq!(ev.len(), 3);
+        assert_eq!(ev[0].path, "pass/search");
+        assert!(matches!(&ev[0].kind, EventKind::Span { tags } if tags[0].0 == "algo"));
+        assert!(ev[0].wall.is_some(), "spans carry wall side data");
+        assert!(ev[1].wall.is_none(), "counters carry none");
+    }
+
+    #[test]
+    fn seq_is_per_path_monotonic() {
+        let reg = Registry::new();
+        reg.counter("a", "x", 1);
+        reg.counter("b", "x", 1);
+        reg.counter("a", "x", 1);
+        let ev = reg.sorted_events();
+        let seqs: Vec<(String, u64)> = ev.iter().map(|e| (e.path.clone(), e.seq)).collect();
+        assert_eq!(
+            seqs,
+            vec![("a".to_string(), 0), ("a".to_string(), 1), ("b".to_string(), 0)]
+        );
+    }
+
+    #[test]
+    fn disabled_registry_records_nothing() {
+        let reg = Registry::none();
+        assert!(!reg.enabled());
+        {
+            let _g = reg.span("pass/search").tag("k", "v");
+        }
+        reg.counter("a", "x", 5);
+        assert!(reg.events().is_empty());
+        assert_eq!(reg.counter_total("a", "x"), 0);
+    }
+
+    #[test]
+    fn registry_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Registry>();
+    }
+}

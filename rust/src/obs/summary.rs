@@ -1,0 +1,111 @@
+//! The human-facing rendering of a [`Registry`](super::Registry): one
+//! table schema shared by `mase e2e`, `mase sweep`, `mase generate`, the
+//! benches and `scripts/record_bench.sh` — replacing the three ad-hoc
+//! stat printers that predated PR 8.
+//!
+//! The block is delimited by `== trace summary ==` / `== end trace
+//! summary ==` marker lines so `record_bench.sh` can lift it verbatim
+//! into BENCH_RESULTS.md. Wall-clock appears here (and only here /
+//! in the wall-clock Chrome export) — the JSONL stream stays counted
+//! work only.
+
+use super::{EventKind, Registry};
+use crate::util::Table;
+
+/// Per-phase roll-up of a registry: span counts + wall seconds per span
+/// path, and every monotonic counter total.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TraceSummary {
+    /// (span path, span count, total wall seconds)
+    pub spans: Vec<(String, u64, f64)>,
+    /// (counter path, counter name, monotonic total)
+    pub counters: Vec<(String, String, u64)>,
+}
+
+impl TraceSummary {
+    pub fn from_registry(reg: &Registry) -> Self {
+        let wall = reg.wall();
+        let mut spans: Vec<(String, u64, f64)> = Vec::new();
+        for ev in reg.sorted_events() {
+            if let EventKind::Span { .. } = ev.kind {
+                match spans.last_mut() {
+                    Some(s) if s.0 == ev.path => s.1 += 1,
+                    _ => spans.push((ev.path.clone(), 1, 0.0)),
+                }
+            }
+        }
+        for s in spans.iter_mut() {
+            s.2 = wall.get(&s.0).map(|&(secs, _)| secs).unwrap_or(0.0);
+        }
+        let counters =
+            reg.counters().into_iter().map(|((p, n), v)| (p, n, v)).collect();
+        Self { spans, counters }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty() && self.counters.is_empty()
+    }
+
+    /// Render the delimited summary block (empty string when there is
+    /// nothing to report, so callers can print unconditionally).
+    pub fn render(&self) -> String {
+        if self.is_empty() {
+            return String::new();
+        }
+        let mut out = String::from("== trace summary ==\n");
+        if !self.spans.is_empty() {
+            let mut t = Table::new(vec!["span", "count", "wall_s"]);
+            for (path, count, secs) in &self.spans {
+                t.row(vec![path.clone(), count.to_string(), format!("{secs:.3}")]);
+            }
+            out.push_str(&t.render());
+        }
+        if !self.counters.is_empty() {
+            let mut t = Table::new(vec!["counter", "name", "total"]);
+            for (path, name, total) in &self.counters {
+                t.row(vec![path.clone(), name.clone(), total.to_string()]);
+            }
+            out.push_str(&t.render());
+        }
+        out.push_str("== end trace summary ==\n");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_rolls_up_spans_and_counters() {
+        let reg = Registry::new();
+        for _ in 0..3 {
+            let _g = reg.span("search/trial");
+        }
+        {
+            let _g = reg.span("pass/emit");
+        }
+        reg.counter("decode/group", "decode_score_dots", 40);
+        reg.counter("decode/group", "decode_score_dots", 2);
+        let s = TraceSummary::from_registry(&reg);
+        assert_eq!(s.spans.len(), 2);
+        assert_eq!(s.spans[0].0, "pass/emit");
+        assert_eq!(s.spans[1], ("search/trial".to_string(), 3, s.spans[1].2));
+        assert_eq!(
+            s.counters,
+            vec![("decode/group".to_string(), "decode_score_dots".to_string(), 42)]
+        );
+        let r = s.render();
+        assert!(r.starts_with("== trace summary ==\n"), "{r}");
+        assert!(r.ends_with("== end trace summary ==\n"), "{r}");
+        assert!(r.contains("search/trial"));
+        assert!(r.contains("42"));
+    }
+
+    #[test]
+    fn empty_registry_renders_nothing() {
+        let s = TraceSummary::from_registry(Registry::none());
+        assert!(s.is_empty());
+        assert_eq!(s.render(), "");
+    }
+}

@@ -38,6 +38,63 @@
 
 use super::layout::{PackedTensor, GROUP_ELEMS};
 use crate::formats::BLOCK_SHAPE;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+// Process-global dispatch tallies (PR 8 observability): one relaxed
+// atomic per kernel entry point, incremented on every call from any
+// thread. Monotonic for the life of the process — consumers take
+// before/after snapshots ([`kernel_tally`]) at single-threaded
+// orchestration points and record the [`KernelTally::delta`], never the
+// absolute values, so concurrent unrelated work only ever inflates
+// *other* snapshots' windows, not a recorded delta's meaning.
+static DOT_CALLS: AtomicU64 = AtomicU64::new(0);
+static GEMM_TILED_CALLS: AtomicU64 = AtomicU64::new(0);
+static GEMV_TALL_CALLS: AtomicU64 = AtomicU64::new(0);
+
+/// Snapshot of the process-global kernel-dispatch counters: how many
+/// times each packed entry point has run since process start. The
+/// GEMM/GEMV split makes the decode fast-path dispatch rule
+/// ([`packed_gemm`]'s `rows <= GEMV_TILE_ROWS` test) observable in
+/// traces.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct KernelTally {
+    /// [`packed_dot`] invocations.
+    pub dot: u64,
+    /// General tiled-GEMM path invocations.
+    pub gemm_tiled: u64,
+    /// Decode-shape GEMV fast-path invocations.
+    pub gemv_tall: u64,
+}
+
+impl KernelTally {
+    /// Counter movement between an `earlier` snapshot and this one.
+    pub fn delta(&self, earlier: &KernelTally) -> KernelTally {
+        KernelTally {
+            dot: self.dot.saturating_sub(earlier.dot),
+            gemm_tiled: self.gemm_tiled.saturating_sub(earlier.gemm_tiled),
+            gemv_tall: self.gemv_tall.saturating_sub(earlier.gemv_tall),
+        }
+    }
+
+    /// Fold this (delta) tally into a PR 8 trace registry under `path`.
+    pub fn record_to(&self, rec: &crate::obs::Registry, path: &str) {
+        if !rec.is_enabled() {
+            return;
+        }
+        rec.counter(path, "packed_dot", self.dot);
+        rec.counter(path, "packed_gemm_tiled", self.gemm_tiled);
+        rec.counter(path, "packed_gemv_tall", self.gemv_tall);
+    }
+}
+
+/// Read the process-global dispatch counters (relaxed loads).
+pub fn kernel_tally() -> KernelTally {
+    KernelTally {
+        dot: DOT_CALLS.load(Ordering::Relaxed),
+        gemm_tiled: GEMM_TILED_CALLS.load(Ordering::Relaxed),
+        gemv_tall: GEMV_TALL_CALLS.load(Ordering::Relaxed),
+    }
+}
 
 /// Widest exponent-alignment shift the integer datapath performs (the
 /// hardware aligner width). Wider spans fall back to per-term f64 adds.
@@ -107,6 +164,7 @@ fn push_product(
 /// Traversal/accumulation order per the module docs: (16, 2) blocks when
 /// either operand is a block format, flat 32-groups otherwise.
 pub fn packed_dot(a: &PackedTensor, b: &PackedTensor) -> f64 {
+    DOT_CALLS.fetch_add(1, Ordering::Relaxed);
     assert_eq!((a.rows, a.cols), (b.rows, b.cols), "dot operands must share a shape");
     let mut total = 0.0f64;
     let mut prods: Vec<(i64, i32)> = Vec::with_capacity(GROUP_ELEMS);
@@ -170,6 +228,7 @@ pub fn packed_gemm(a: &PackedTensor, b: &PackedTensor) -> Vec<f32> {
 
 /// The general 16x16-output-tile loop (mirrors the streaming tile loop).
 fn packed_gemm_tiled(a: &PackedTensor, b: &PackedTensor) -> Vec<f32> {
+    GEMM_TILED_CALLS.fetch_add(1, Ordering::Relaxed);
     assert_eq!(a.cols, b.rows, "inner dimensions must agree");
     let (m, k, n) = (a.rows, a.cols, b.cols);
     const TILE: usize = 16;
@@ -208,6 +267,7 @@ fn packed_gemm_tiled(a: &PackedTensor, b: &PackedTensor) -> Vec<f32> {
 /// [`flush_group`] calls in the same k order as in the general tiled
 /// loop, so the two paths are bitwise identical (see [`packed_gemm`]).
 pub fn packed_gemv_tall(a: &PackedTensor, b: &PackedTensor) -> Vec<f32> {
+    GEMV_TALL_CALLS.fetch_add(1, Ordering::Relaxed);
     assert_eq!(a.cols, b.rows, "inner dimensions must agree");
     let (m, k, n) = (a.rows, a.cols, b.cols);
     let af: Vec<(i64, i32)> = (0..m * k).map(|i| a.fields_at(i / k, i % k)).collect();
@@ -414,6 +474,31 @@ mod tests {
                 assert_eq!(f.to_bits(), s.to_bits(), "m={m} C[{i}]: {f} vs {s}");
             }
         }
+    }
+
+    #[test]
+    fn dispatch_tally_counts_each_entry_point() {
+        // Unit tests share the process with every other test thread, so
+        // assert window deltas with >=, never exact equality (the exact
+        // accounting lives in tests/trace_determinism.rs behind a lock).
+        let x = rand_tensor(32 * 32, 31, 1.0);
+        let p = Precision::new(7.0, 0.0);
+        let pa = pack(&x, 32, 32, FormatKind::MxInt, p);
+        let before = kernel_tally();
+        packed_dot(&pa, &pa);
+        packed_gemm(&pa, &pa); // 32 rows > GEMV_TILE_ROWS -> tiled
+        let one = pack(&x[..32], 1, 32, FormatKind::Int, Precision::new(8.0, 4.0));
+        packed_gemm(&one, &pa); // 1 row -> gemv_tall
+        let d = kernel_tally().delta(&before);
+        assert!(d.dot >= 1, "{d:?}");
+        assert!(d.gemm_tiled >= 1, "{d:?}");
+        assert!(d.gemv_tall >= 1, "{d:?}");
+        // record_to folds the three counters under the given path
+        let reg = crate::obs::Registry::new();
+        d.record_to(&reg, "kernels");
+        assert_eq!(reg.counter_total("kernels", "packed_dot"), d.dot);
+        assert_eq!(reg.counter_total("kernels", "packed_gemm_tiled"), d.gemm_tiled);
+        assert_eq!(reg.counter_total("kernels", "packed_gemv_tall"), d.gemv_tall);
     }
 
     #[test]

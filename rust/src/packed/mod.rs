@@ -33,5 +33,5 @@
 pub mod kernels;
 pub mod layout;
 
-pub use kernels::{mxint_acc_bits, packed_dot, packed_gemm};
+pub use kernels::{kernel_tally, mxint_acc_bits, packed_dot, packed_gemm, KernelTally};
 pub use layout::{pack, packed_bits_for, ElemLayout, PackedTensor};

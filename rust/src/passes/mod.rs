@@ -19,7 +19,9 @@ pub use evaluate::{EvalResult, Evaluator, Objective};
 pub use parallelize::{parallelize, DesignPoint};
 pub use profile::{profile_model, ProfileData};
 pub use quantize::QuantSolution;
-pub use search_pass::{eval_scope, run_search, run_search_cached, SearchConfig, SearchOutcome};
+pub use search_pass::{
+    eval_scope, run_search, run_search_cached, run_search_traced, SearchConfig, SearchOutcome,
+};
 
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -41,11 +43,15 @@ pub fn verify_boundary(g: &crate::ir::Graph, boundary: &str) -> anyhow::Result<(
 }
 
 /// Wall-clock bookkeeping per pass — regenerates Table 4's runtime
-/// breakdown.
+/// breakdown. With a recorder attached ([`PassManager::attach`]) every
+/// pass boundary additionally records a `pass/<name>` span in the PR 8
+/// trace registry.
 #[derive(Debug, Default, Clone)]
 pub struct PassManager {
     /// pass name -> (total seconds, invocations)
     pub timings: BTreeMap<String, (f64, u64)>,
+    /// PR 8 observability: pass-boundary spans land here when set.
+    pub recorder: Option<std::sync::Arc<crate::obs::Registry>>,
 }
 
 impl PassManager {
@@ -53,10 +59,19 @@ impl PassManager {
         Self::default()
     }
 
+    /// Attach a trace registry: subsequent [`run`](Self::run) calls
+    /// record `pass/<name>` spans (pass boundaries are single-threaded
+    /// orchestration points, so the event stream stays deterministic).
+    pub fn attach(&mut self, recorder: std::sync::Arc<crate::obs::Registry>) {
+        self.recorder = Some(recorder);
+    }
+
     /// Run `f` as pass `name`, recording its duration.
     pub fn run<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
         let t0 = Instant::now();
+        let span = self.recorder.as_ref().map(|r| r.span(&format!("pass/{name}")));
         let out = f();
+        drop(span);
         let dt = t0.elapsed().as_secs_f64();
         let e = self.timings.entry(name.to_string()).or_insert((0.0, 0));
         e.0 += dt;
@@ -98,6 +113,20 @@ mod tests {
         assert!(msg.contains("2 finding(s)"), "{msg}");
         assert!(msg.contains("dangling"), "{msg}");
         assert!(msg.contains("no outputs"), "{msg}");
+    }
+
+    #[test]
+    fn attached_recorder_sees_pass_spans() {
+        let mut pm = PassManager::new();
+        let reg = std::sync::Arc::new(crate::obs::Registry::new());
+        pm.attach(reg.clone());
+        pm.run("quantize", || ());
+        pm.run("emit", || ());
+        let ev = reg.sorted_events();
+        assert_eq!(ev.len(), 2);
+        assert_eq!(ev[0].path, "pass/emit");
+        assert_eq!(ev[1].path, "pass/quantize");
+        assert_eq!(pm.stat("quantize").1, 1);
     }
 
     #[test]

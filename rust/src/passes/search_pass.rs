@@ -23,9 +23,10 @@ use super::profile::ProfileData;
 use super::quantize::QuantSolution;
 use crate::data::Task;
 use crate::formats::FormatKind;
+use crate::obs::Registry;
 use crate::runtime::{BackendKind, ExecBackend};
 use crate::search::{
-    best_curve, run_batched_cached, Algorithm, BatchOptions, CacheStats, EvalCache, LieStrategy,
+    best_curve, run_batched_traced, Algorithm, BatchOptions, CacheStats, EvalCache, LieStrategy,
     MemoKey, Space, Trial,
 };
 use crate::util::pool::threads_from_env;
@@ -165,6 +166,21 @@ pub fn run_search_cached<B: ExecBackend>(
     cfg: &SearchConfig,
     cache: &EvalCache,
 ) -> Result<SearchOutcome> {
+    run_search_traced(ev, profile, task, cfg, cache, Registry::none())
+}
+
+/// [`run_search_cached`] plus PR 8 observability: per-trial
+/// `search/trial` spans tagged with memo status (via
+/// [`run_batched_traced`]) and this run's [`CacheStats`] delta folded
+/// into the registry as `search/cache` counters.
+pub fn run_search_traced<B: ExecBackend>(
+    ev: &Evaluator<B>,
+    profile: &ProfileData,
+    task: Task,
+    cfg: &SearchConfig,
+    cache: &EvalCache,
+    rec: &Registry,
+) -> Result<SearchOutcome> {
     let stats_before = cache.stats();
     let v = ev.meta.num_qtensors();
     let space = space_for(cfg.fmt, v, cfg.bits_lo, cfg.bits_hi);
@@ -222,7 +238,8 @@ pub fn run_search_cached<B: ExecBackend>(
         memo: MemoKey::Rounded,
         tpe_lie: if cfg.tpe_mean_lie { LieStrategy::Mean } else { LieStrategy::Min },
     };
-    let history = run_batched_cached(cfg.algorithm, space, cfg.seed, cfg.trials, &opts, cache, |x| {
+    let (alg, seed, trials) = (cfg.algorithm, cfg.seed, cfg.trials);
+    let history = run_batched_traced(alg, space, seed, trials, &opts, cache, rec, |x| {
         let sol = QuantSolution::from_search_vector(cfg.fmt, x, ev.meta, profile);
         let tuned = match qat_tune(&sol) {
             Some(Ok(w)) => Some(w),
@@ -316,12 +333,14 @@ pub fn run_search_cached<B: ExecBackend>(
             (sol, eval, None)
         }
     };
+    let delta = cache.stats().delta(&stats_before);
+    delta.record_to(rec, "search/cache");
     Ok(SearchOutcome {
         history,
         best: best_sol,
         best_eval,
         tuned_weights,
-        cache: cache.stats().since(&stats_before),
+        cache: delta,
     })
 }
 

@@ -71,6 +71,20 @@ impl DecodeStats {
         self.full_attn_rows += other.full_attn_rows;
     }
 
+    /// Fold these counted-work totals into a PR 8 trace registry as
+    /// monotonic counters under `path`. Counted work, never wall-clock —
+    /// folding at a single-threaded merge point keeps the event stream
+    /// byte-identical at any thread count.
+    pub fn record_to(&self, rec: &crate::obs::Registry, path: &str) {
+        if !rec.is_enabled() {
+            return;
+        }
+        rec.counter(path, "steps", self.steps);
+        rec.counter(path, "decode_score_dots", self.decode_score_dots);
+        rec.counter(path, "full_score_dots", self.full_score_dots);
+        rec.counter(path, "full_attn_rows", self.full_attn_rows);
+    }
+
     /// Exact closed form for the cached decode phase: the step at
     /// position `t` costs `group * heads * layers * (t + 1)` score dots.
     pub fn expected_decode_dots(
@@ -543,6 +557,42 @@ pub fn generate_many(
     n_tokens: usize,
     threads: usize,
 ) -> Result<(Vec<GenOut>, DecodeStats)> {
+    generate_many_traced(
+        backend,
+        graph,
+        meta,
+        weights,
+        fmt_tag,
+        qcfg,
+        prompts,
+        n_seqs,
+        prompt_len,
+        n_tokens,
+        threads,
+        crate::obs::Registry::none(),
+    )
+}
+
+/// [`generate_many`] with a PR 8 trace registry attached: after the
+/// ordered [`par_map`] merge, each group's counted-work stats are
+/// recorded as one `decode/group` span (tagged with the group index)
+/// plus monotonic counters — **in input order**, on the calling thread,
+/// so a fixed seed yields a byte-identical event stream at any
+/// `threads` value (asserted by `tests/trace_determinism.rs`).
+pub fn generate_many_traced(
+    backend: &CpuBackend,
+    graph: &Graph,
+    meta: &ModelMeta,
+    weights: &[f32],
+    fmt_tag: &str,
+    qcfg: &[f32],
+    prompts: &[i32],
+    n_seqs: usize,
+    prompt_len: usize,
+    n_tokens: usize,
+    threads: usize,
+    rec: &crate::obs::Registry,
+) -> Result<(Vec<GenOut>, DecodeStats)> {
     let group = meta.batch.min(n_seqs).max(1);
     ensure!(
         n_seqs > 0 && n_seqs % group == 0,
@@ -558,8 +608,13 @@ pub fn generate_many(
     });
     let mut outs = Vec::with_capacity(results.len());
     let mut stats = DecodeStats::default();
-    for r in results {
+    for (gi, r) in results.into_iter().enumerate() {
         let (o, s) = r?;
+        if rec.is_enabled() {
+            let span = rec.span("decode/group").tag("group", gi.to_string());
+            drop(span);
+            s.record_to(rec, "decode/group");
+        }
         stats.merge(&s);
         outs.push(o);
     }
@@ -672,6 +727,46 @@ mod tests {
             dec.stats.decode_score_dots,
             DecodeStats::expected_decode_dots(16, meta.n_heads, meta.n_layers, 4, 3)
         );
+    }
+
+    #[test]
+    fn generate_many_traced_records_groups_in_input_order() {
+        let meta = tiny_lm();
+        let w = init_params(&meta, 0xC0DE);
+        let be = CpuBackend::new();
+        let graph = be.prepare(&meta, &w, &[]).unwrap();
+        let qcfg = vec![0.0f32; 2 * meta.num_qtensors()];
+        let n_seqs = 2 * meta.batch; // two groups
+        let prompts: Vec<i32> = (0..n_seqs * 4).map(|i| (i % 512) as i32).collect();
+        let reg = crate::obs::Registry::new();
+        let (outs, stats) = generate_many_traced(
+            &be, &graph, &meta, &w, "fp32", &qcfg, &prompts, n_seqs, 4, 2, 2, &reg,
+        )
+        .unwrap();
+        assert_eq!(outs.len(), 2);
+        let spans: Vec<_> = reg
+            .sorted_events()
+            .into_iter()
+            .filter(|e| matches!(e.kind, crate::obs::EventKind::Span { .. }))
+            .collect();
+        assert_eq!(spans.len(), 2, "one decode/group span per group");
+        for (i, e) in spans.iter().enumerate() {
+            assert_eq!(e.path, "decode/group");
+            match &e.kind {
+                crate::obs::EventKind::Span { tags } => {
+                    assert_eq!(tags[0], ("group".to_string(), i.to_string()));
+                }
+                _ => unreachable!(),
+            }
+        }
+        // counter totals reconcile with the merged aggregate
+        assert_eq!(reg.counter_total("decode/group", "steps"), stats.steps);
+        assert_eq!(
+            reg.counter_total("decode/group", "decode_score_dots"),
+            stats.decode_score_dots
+        );
+        assert_eq!(reg.counter_total("decode/group", "full_score_dots"), stats.full_score_dots);
+        assert_eq!(reg.counter_total("decode/group", "full_attn_rows"), stats.full_attn_rows);
     }
 
     #[test]

@@ -58,9 +58,16 @@ pub const CACHE_SCHEMA: &str = "mase-eval-cache";
 pub const CACHE_VERSION: u64 = 2;
 
 /// Point-in-time counters of one [`EvalCache`] (or an aggregate over a
-/// whole [`CacheStore`]). `hits`/`misses`/`inserts` are cumulative since
-/// cache creation; [`CacheStats::since`] turns two snapshots into a
-/// per-phase delta. `entries` is always the absolute current size.
+/// whole [`CacheStore`]).
+///
+/// Counter discipline (PR 8): `hits`/`misses`/`inserts` are **monotonic**
+/// — cumulative since cache creation, never reset by snapshotting or
+/// saving. Per-phase accounting (one search, one sweep cell) is always
+/// expressed as the [`CacheStats::delta`] of two snapshots of the same
+/// cache, never by zeroing the counters — so any two readers of one
+/// cache agree, and the trace registry's own monotonic counters can
+/// absorb a delta verbatim ([`CacheStats::record_to`]). `entries` is the
+/// absolute current size, not a counter.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheStats {
     /// Lookups that found a memoized evaluation.
@@ -84,15 +91,29 @@ impl CacheStats {
         }
     }
 
-    /// Delta of the cumulative counters relative to an `earlier`
-    /// snapshot of the same cache; `entries` stays absolute.
-    pub fn since(&self, earlier: &CacheStats) -> CacheStats {
+    /// Delta of the monotonic counters relative to an `earlier` snapshot
+    /// of the same cache; `entries` stays absolute. This is the ONLY
+    /// sanctioned way to report per-phase cache behavior — the
+    /// underlying counters are never reset.
+    pub fn delta(&self, earlier: &CacheStats) -> CacheStats {
         CacheStats {
             hits: self.hits.saturating_sub(earlier.hits),
             misses: self.misses.saturating_sub(earlier.misses),
             inserts: self.inserts.saturating_sub(earlier.inserts),
             entries: self.entries,
         }
+    }
+
+    /// Fold this snapshot (typically a [`delta`](Self::delta)) into a
+    /// trace registry as monotonic counters under `path`. `entries` is
+    /// absolute, not monotonic, so it stays out of the counter stream.
+    pub fn record_to(&self, rec: &crate::obs::Registry, path: &str) {
+        if !rec.is_enabled() {
+            return;
+        }
+        rec.counter(path, "cache_hits", self.hits as u64);
+        rec.counter(path, "cache_misses", self.misses as u64);
+        rec.counter(path, "cache_inserts", self.inserts as u64);
     }
 
     /// Accumulate another cache's counters (for store-wide totals).
@@ -418,7 +439,7 @@ mod tests {
     }
 
     #[test]
-    fn stats_since_subtracts_counters_keeps_entries() {
+    fn stats_delta_subtracts_counters_keeps_entries() {
         let c = EvalCache::new();
         c.insert(vec![1], (1.0, vec![]));
         c.get(&[1]);
@@ -426,7 +447,37 @@ mod tests {
         c.get(&[1]);
         c.get(&[2]);
         c.insert(vec![2], (2.0, vec![]));
-        let delta = c.stats().since(&before);
+        let delta = c.stats().delta(&before);
         assert_eq!((delta.hits, delta.misses, delta.inserts, delta.entries), (1, 1, 1, 2));
+    }
+
+    #[test]
+    fn counters_are_monotonic_across_snapshots_and_saves() {
+        // snapshotting/saving must never reset the counters: two phase
+        // deltas taken independently have to tile the cumulative totals
+        let c = EvalCache::new();
+        c.insert(vec![1], (1.0, vec![]));
+        c.get(&[1]);
+        let s1 = c.stats();
+        let _ = c.snapshot(); // serialization path: must not disturb counters
+        assert_eq!(c.stats(), s1);
+        c.get(&[1]);
+        let s2 = c.stats();
+        let phase1 = s1.delta(&CacheStats::default());
+        let phase2 = s2.delta(&s1);
+        assert_eq!(phase1.hits + phase2.hits, s2.hits);
+        assert_eq!(phase1.misses + phase2.misses, s2.misses);
+        assert_eq!(phase1.inserts + phase2.inserts, s2.inserts);
+    }
+
+    #[test]
+    fn record_to_folds_delta_into_registry() {
+        let reg = crate::obs::Registry::new();
+        let s = CacheStats { hits: 5, misses: 2, inserts: 2, entries: 9 };
+        s.record_to(&reg, "sweep/cell");
+        s.record_to(&reg, "sweep/cell"); // monotonic: a second cell adds
+        assert_eq!(reg.counter_total("sweep/cell", "cache_hits"), 10);
+        assert_eq!(reg.counter_total("sweep/cell", "cache_misses"), 4);
+        assert_eq!(reg.counter_total("sweep/cell", "cache_inserts"), 4);
     }
 }

@@ -90,6 +90,40 @@ pub struct EdgeReport {
     pub transfer_stalled: u64,
 }
 
+/// One node firing recorded by [`simulate_traced`]: node `node` fired at
+/// cycle `t` and occupied `occupancy = max(ii, beats)` cycles (compute +
+/// stream-out). Per node, the sum of occupancies equals
+/// [`SimReport::busy`] and the firing count equals
+/// `tiles_per_inference * inferences` — the closed forms the trace
+/// exporters and `scripts/verify_trace_schema.py` re-derive.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Firing {
+    pub node: usize,
+    pub t: u64,
+    pub occupancy: u64,
+}
+
+/// One interval a ready consumer spent starved behind a transfer-bound
+/// channel, charged to edge `edge` (index into [`SimReport::edges`]) at
+/// cycle `t` for `dt` cycles. Per edge, the `dt`s sum to
+/// [`EdgeReport::transfer_stalled`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EdgeStall {
+    pub edge: usize,
+    pub t: u64,
+    pub dt: u64,
+}
+
+/// Cycle-accurate event log of one simulation: every firing and every
+/// channel-charged stall interval, in deterministic order (time-major;
+/// node/edge index within a cycle). Collected by [`simulate_traced`] and
+/// rendered as a Perfetto timeline by [`crate::obs::chrome`].
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SimTrace {
+    pub firings: Vec<Firing>,
+    pub stalls: Vec<EdgeStall>,
+}
+
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct SimReport {
     /// Total cycles until the last sink tile.
@@ -116,6 +150,26 @@ pub struct SimReport {
 /// needs `1/T_c`. This lets edges with different tile granularities (the
 /// normal case after `parallelize`) rate-match instead of deadlocking.
 pub fn simulate(nodes: &[NodeSpec], cfg: &SimConfig) -> SimReport {
+    simulate_with(nodes, cfg, None)
+}
+
+/// [`simulate`] plus a full [`SimTrace`] event log (every firing, every
+/// channel-charged stall interval). The report is bit-identical to the
+/// untraced run: tracing only appends to side vectors.
+pub fn simulate_traced(nodes: &[NodeSpec], cfg: &SimConfig) -> (SimReport, SimTrace) {
+    let mut trace = SimTrace::default();
+    let report = simulate_with(nodes, cfg, Some(&mut trace));
+    (report, trace)
+}
+
+/// Core event loop. `trace`, when present, collects the per-firing /
+/// per-stall event log; `None` is the zero-overhead path [`simulate`]
+/// takes.
+fn simulate_with(
+    nodes: &[NodeSpec],
+    cfg: &SimConfig,
+    mut trace: Option<&mut SimTrace>,
+) -> SimReport {
     const EPS: f64 = 1e-9;
     let n = nodes.len();
     // fifo[i][slot] = inference-fraction queued into node i's pred slot
@@ -208,6 +262,9 @@ pub fn simulate(nodes: &[NodeSpec], cfg: &SimConfig) -> SimReport {
                 busy_until[i] = t + occ;
                 busy[i] += occ;
                 emitted[i] += 1;
+                if let Some(tr) = trace.as_deref_mut() {
+                    tr.firings.push(Firing { node: i, t, occupancy: occ });
+                }
                 for &(c, slot, e) in &succs[i] {
                     fifo[c][slot] += frac(i);
                     let b = edges[e].beats_per_tile;
@@ -265,6 +322,9 @@ pub fn simulate(nodes: &[NodeSpec], cfg: &SimConfig) -> SimReport {
         for (e, &charged) in edge_charged.iter().enumerate() {
             if charged {
                 edges[e].transfer_stalled += dt;
+                if let Some(tr) = trace.as_deref_mut() {
+                    tr.stalls.push(EdgeStall { edge: e, t, dt });
+                }
             }
         }
         t += dt;
@@ -509,6 +569,49 @@ mod tests {
             "sink charged {} stall cycles that belong to the channel",
             r.stalled[1]
         );
+    }
+
+    // ---- trace collection ----
+
+    #[test]
+    fn traced_run_matches_untraced_report() {
+        let nodes = chain_bits(&[1, 4, 1], 20, &[256, 512, 128]);
+        let c = SimConfig { inferences: 2, fifo_depth: 4, sequential: false, channel_bits: 64 };
+        let plain = simulate(&nodes, &c);
+        let (traced, _) = simulate_traced(&nodes, &c);
+        assert_eq!(plain, traced);
+    }
+
+    #[test]
+    fn trace_firings_sum_to_closed_form_accounting() {
+        // Per node: firing count == tiles*inferences, occupancy sum ==
+        // busy[i], and the last firing's completion == report.cycles.
+        // These are the invariants the Chrome exporter and the python
+        // mirror (scripts/verify_trace_schema.py) re-derive.
+        let nodes = chain_bits(&[1, 4, 1], 20, &[256, 512, 128]);
+        let c = SimConfig { inferences: 2, fifo_depth: 4, sequential: false, channel_bits: 32 };
+        let (r, tr) = simulate_traced(&nodes, &c);
+        for i in 0..nodes.len() {
+            let fires: Vec<_> = tr.firings.iter().filter(|f| f.node == i).collect();
+            assert_eq!(fires.len() as u64, nodes[i].tiles_per_inference * c.inferences);
+            assert_eq!(fires.iter().map(|f| f.occupancy).sum::<u64>(), r.busy[i]);
+        }
+        let end = tr.firings.iter().map(|f| f.t + f.occupancy).max().unwrap();
+        assert_eq!(end, r.cycles);
+        // time-major order within the log
+        assert!(tr.firings.windows(2).all(|w| w[0].t <= w[1].t));
+    }
+
+    #[test]
+    fn trace_stalls_sum_to_edge_report() {
+        let nodes = chain_bits(&[1, 1], 64, &[256, 0]);
+        let c = SimConfig { inferences: 1, fifo_depth: 4, sequential: false, channel_bits: 32 };
+        let (r, tr) = simulate_traced(&nodes, &c);
+        for (e, edge) in r.edges.iter().enumerate() {
+            let total: u64 = tr.stalls.iter().filter(|s| s.edge == e).map(|s| s.dt).sum();
+            assert_eq!(total, edge.transfer_stalled, "edge {e}");
+        }
+        assert!(!tr.stalls.is_empty(), "starved fabric must log stall intervals");
     }
 
     #[test]

@@ -49,7 +49,10 @@
 
 pub mod engine;
 
-pub use engine::{simulate, EdgeReport, NodeSpec, SimConfig, SimReport};
+pub use engine::{
+    simulate, simulate_traced, EdgeReport, EdgeStall, Firing, NodeSpec, SimConfig, SimReport,
+    SimTrace,
+};
 
 use crate::hw::throughput::{op_cycles, op_tile_bits, op_tiles_per_inference};
 use crate::ir::{Graph, OpKind};

@@ -11,6 +11,7 @@
 use mase::coordinator::sweep::{cell_scope, grid, sweep_with, SweepCell, SweepConfig, SweepItem};
 use mase::data::Task;
 use mase::formats::FormatKind;
+use mase::obs::Registry;
 use mase::runtime::BackendKind;
 use mase::search::{
     run_batched_cached, Algorithm, BatchOptions, CacheStore, EvalCache, MemoKey, Trial,
@@ -18,6 +19,7 @@ use mase::search::{
 };
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
 fn tmp_path(tag: &str) -> PathBuf {
     static UNIQUE: AtomicUsize = AtomicUsize::new(0);
@@ -44,10 +46,11 @@ fn drive(
     cfg: &SweepConfig,
     store: &CacheStore,
     evals: &AtomicUsize,
-) -> (Vec<Vec<Trial>>, Vec<(usize, usize)>) {
+) -> (Vec<Vec<Trial>>, Vec<(usize, usize)>, Arc<Registry>) {
     let mut histories = Vec::new();
     let mut cell_counts = Vec::new();
-    let report = sweep_with(cfg, store, grid(cfg), |item: &SweepItem, cache: &EvalCache| {
+    let trace = Arc::new(Registry::new());
+    let report = sweep_with(cfg, store, grid(cfg), trace, |item: &SweepItem, cache: &EvalCache| {
         let fmt_factor = match item.fmt {
             FormatKind::MxInt => 1.0 / 3.0,
             _ => 0.1 + 0.2,
@@ -80,7 +83,7 @@ fn drive(
     for row in &report.rows {
         cell_counts.push((row.cache.hits, row.cache.misses));
     }
-    (histories, cell_counts)
+    (histories, cell_counts, report.trace)
 }
 
 #[test]
@@ -92,7 +95,7 @@ fn second_sweep_run_is_all_hits_zero_evaluations_and_bit_identical() {
     // cold run: fills and flushes the cache
     let store1 = CacheStore::open(&path);
     assert_eq!(store1.loaded_entries(), 0);
-    let (cold_histories, _) = drive(&cfg, &store1, &evals);
+    let (cold_histories, _, _) = drive(&cfg, &store1, &evals);
     let cold_evals = evals.load(Ordering::SeqCst);
     assert!(cold_evals > 0, "cold run must evaluate something");
     assert_eq!(cold_histories.len(), 4, "one history per grid cell");
@@ -103,7 +106,7 @@ fn second_sweep_run_is_all_hits_zero_evaluations_and_bit_identical() {
     assert!(store2.load_note().is_none(), "{:?}", store2.load_note());
     assert_eq!(store2.loaded_entries(), store1.total_entries());
     evals.store(0, Ordering::SeqCst);
-    let (warm_histories, warm_counts) = drive(&cfg, &store2, &evals);
+    let (warm_histories, warm_counts, _) = drive(&cfg, &store2, &evals);
 
     // THE acceptance criterion: zero evaluator invocations on the
     // second run, 100% hit rate, results identical to the cold run
@@ -128,6 +131,37 @@ fn second_sweep_run_is_all_hits_zero_evaluations_and_bit_identical() {
 }
 
 #[test]
+fn warm_sweep_reports_full_hit_rate_through_the_trace_registry() {
+    // PR 8 counter hygiene: the same warm-sweep guarantee the row-level
+    // assertions above make, but observed purely through the obs
+    // registry's monotonic `sweep/cell` cache counters.
+    let path = tmp_path("trace-warm");
+    let cfg = toy_sweep_config();
+    let evals = AtomicUsize::new(0);
+
+    let store1 = CacheStore::open(&path);
+    let (_, _, cold) = drive(&cfg, &store1, &evals);
+    let cold_hits = cold.counter_total("sweep/cell", "cache_hits");
+    let cold_misses = cold.counter_total("sweep/cell", "cache_misses");
+    assert!(cold_misses > 0, "cold sweep must pay evaluations");
+    assert_eq!(
+        cold.counter_total("sweep/cell", "cache_inserts"),
+        cold_misses,
+        "every miss inserts exactly once"
+    );
+
+    let store2 = CacheStore::open(&path);
+    evals.store(0, Ordering::SeqCst);
+    let (_, _, warm) = drive(&cfg, &store2, &evals);
+    assert_eq!(warm.counter_total("sweep/cell", "cache_misses"), 0, "warm sweep missed");
+    assert_eq!(warm.counter_total("sweep/cell", "cache_inserts"), 0);
+    // identical seeded proposal stream => identical lookup count, now
+    // served entirely from disk: 100% hit rate through the registry
+    assert_eq!(warm.counter_total("sweep/cell", "cache_hits"), cold_hits + cold_misses);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
 fn sweep_cells_never_leak_entries_across_scopes() {
     // same search space and seed in every cell, but different objectives
     // per (task, fmt): if scoping broke, a later cell would "hit" an
@@ -136,7 +170,7 @@ fn sweep_cells_never_leak_entries_across_scopes() {
     let cfg = toy_sweep_config();
     let evals = AtomicUsize::new(0);
     let store = CacheStore::open(&path);
-    let (histories, _) = drive(&cfg, &store, &evals);
+    let (histories, _, _) = drive(&cfg, &store, &evals);
     // every cell proposes the identical x sequence (same seed), yet the
     // values must differ per cell because the objectives differ
     for i in 1..histories.len() {
@@ -176,7 +210,7 @@ fn identical_sweeps_under_different_backends_use_disjoint_scopes() {
 
     // identical sweep, different backend, same store: zero cross-hits
     evals.store(0, Ordering::SeqCst);
-    let (_, cpu_counts) = drive(&cpu_cfg, &store, &evals);
+    let (_, cpu_counts, _) = drive(&cpu_cfg, &store, &evals);
     assert_eq!(
         evals.load(Ordering::SeqCst),
         pjrt_evals,
@@ -189,7 +223,7 @@ fn identical_sweeps_under_different_backends_use_disjoint_scopes() {
 
     // and a warm re-run of the SAME backend is still fully served
     evals.store(0, Ordering::SeqCst);
-    let (_, warm_counts) = drive(&cpu_cfg, &store, &evals);
+    let (_, warm_counts, _) = drive(&cpu_cfg, &store, &evals);
     assert_eq!(evals.load(Ordering::SeqCst), 0);
     for (hits, misses) in &warm_counts {
         assert!(*hits > 0);

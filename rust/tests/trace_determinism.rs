@@ -1,0 +1,202 @@
+//! The PR 8 determinism contract, end to end: a fixed seed yields a
+//! **byte-identical** JSONL trace at any worker-thread count, because
+//! every event is recorded at a single-threaded orchestration point
+//! (search's serial ask/resolve/tell loop, decode's ordered post-merge)
+//! and the stream carries counted work only — never wall-clock.
+//!
+//! Also here: the exact process-global kernel-tally accounting (unit
+//! tests can only assert `>=` because they share the process with other
+//! test threads — this binary serializes its tally users behind a lock),
+//! and the Chrome golden test for the Fig. 1 toy fork-join graph against
+//! the file `scripts/verify_trace_schema.py` generates and re-derives.
+
+use mase::data::MarkovCorpus;
+use mase::formats::{FormatKind, Precision};
+use mase::frontend::{init_params, ModelMeta};
+use mase::obs::{jsonl, Registry};
+use mase::packed::{kernel_tally, packed_dot, packed_gemm};
+use mase::packed::layout::pack;
+use mase::passes::{ProfileData, QuantSolution};
+use mase::runtime::{generate_many_traced, CpuBackend, ExecBackend};
+use mase::search::{
+    run_batched_traced, Algorithm, BatchOptions, EvalCache, MemoKey, Space,
+};
+use mase::sim::{simulate_traced, NodeSpec, SimConfig};
+use mase::util::rng::Rng;
+use std::sync::Mutex;
+
+/// Kernel dispatch tallies are process-global atomics; every test in
+/// this binary that calls a packed kernel (directly or through decode)
+/// takes this lock so the exact-accounting test sees only its own calls.
+static TALLY_LOCK: Mutex<()> = Mutex::new(());
+
+// ------------------------------------------------------------- search --
+
+/// One traced cached search with a pure objective; returns the JSONL.
+fn search_trace(threads: usize) -> String {
+    let cache = EvalCache::new();
+    let reg = Registry::new();
+    let opts = BatchOptions { batch: 6, threads, memo: MemoKey::Rounded, ..Default::default() };
+    run_batched_traced(
+        Algorithm::Random,
+        Space::uniform(3, 2.0, 5.0),
+        42,
+        30,
+        &opts,
+        &cache,
+        &reg,
+        |x| {
+            let v = -x.iter().map(|xi| xi.round()).sum::<f64>();
+            (v, vec![v * 0.5])
+        },
+    );
+    jsonl::render(&reg)
+}
+
+#[test]
+fn search_jsonl_is_byte_identical_across_thread_counts() {
+    let one = search_trace(1);
+    assert!(one.starts_with(r#"{"schema":"mase-trace","version":1}"#), "{one}");
+    assert!(one.contains(r#""path":"search/trial""#), "{one}");
+    assert!(one.contains(r#""memo":"#), "trial spans must carry memo tags:\n{one}");
+    assert!(!one.contains("wall"), "wall-clock leaked into the stream");
+    for threads in [2, 8] {
+        assert_eq!(search_trace(threads), one, "threads={threads} diverged from threads=1");
+    }
+}
+
+// ------------------------------------------------------------- decode --
+
+/// One traced multi-group KV-cached decode; returns (JSONL, tokens).
+fn decode_trace(threads: usize) -> (String, Vec<Vec<Vec<i32>>>) {
+    let meta = ModelMeta::synthetic("trace-lm", 1, 32, 2, 512, 32, 4, "lm", 2);
+    let w = init_params(&meta, 0xC0DE);
+    let be = CpuBackend::new();
+    let graph = be.prepare(&meta, &w, &[]).expect("prepare");
+    let profile = ProfileData::uniform(&meta, 4.0);
+    let qcfg = QuantSolution::uniform(FormatKind::MxInt, 5.0, &meta, &profile).to_qconfig();
+    let n_seqs = 2 * meta.batch; // two decode groups
+    let prompt_len = 4;
+    let prompts = MarkovCorpus::new(7).batch(11, n_seqs, prompt_len);
+    let reg = Registry::new();
+    let (outs, stats) = generate_many_traced(
+        &be,
+        &graph,
+        &meta,
+        &w,
+        FormatKind::MxInt.name(),
+        &qcfg,
+        &prompts,
+        n_seqs,
+        prompt_len,
+        2,
+        threads,
+        &reg,
+    )
+    .expect("decode");
+    assert!(stats.steps > 0);
+    (jsonl::render(&reg), outs.into_iter().map(|o| o.tokens).collect())
+}
+
+#[test]
+fn decode_jsonl_is_byte_identical_across_thread_counts() {
+    let _g = TALLY_LOCK.lock().unwrap(); // MxInt decode drives packed kernels
+    let (one, toks_one) = decode_trace(1);
+    assert!(one.contains(r#""path":"decode/group""#), "{one}");
+    assert!(
+        one.contains(r#"{"kind":"total","name":"steps","path":"decode/group""#),
+        "decode totals missing:\n{one}"
+    );
+    for threads in [2, 8] {
+        let (jt, toks_t) = decode_trace(threads);
+        assert_eq!(jt, one, "threads={threads} trace diverged from threads=1");
+        assert_eq!(toks_t, toks_one, "threads={threads} tokens diverged");
+    }
+}
+
+// ------------------------------------------------------- kernel tally --
+
+#[test]
+fn kernel_tally_accounts_every_dispatch_exactly() {
+    let _g = TALLY_LOCK.lock().unwrap();
+    let mut rng = Rng::new(17);
+    let x: Vec<f32> = (0..32 * 32).map(|_| rng.normal() as f32).collect();
+    let p = Precision::new(5.0, 0.0);
+    let wide = pack(&x, 32, 32, FormatKind::MxInt, p); // 32 rows -> tiled
+    let flat = pack(&x[..32], 1, 32, FormatKind::MxInt, p); // 1 row -> gemv_tall
+
+    let before = kernel_tally();
+    packed_dot(&flat, &flat);
+    packed_dot(&flat, &flat);
+    packed_gemm(&wide, &wide);
+    packed_gemm(&flat, &wide);
+    packed_gemm(&flat, &wide);
+    packed_gemm(&flat, &wide);
+    let d = kernel_tally().delta(&before);
+    assert_eq!((d.dot, d.gemm_tiled, d.gemv_tall), (2, 1, 3), "{d:?}");
+
+    let reg = Registry::new();
+    d.record_to(&reg, "kernels");
+    assert_eq!(reg.counter_total("kernels", "packed_dot"), 2);
+    assert_eq!(reg.counter_total("kernels", "packed_gemm_tiled"), 1);
+    assert_eq!(reg.counter_total("kernels", "packed_gemv_tall"), 3);
+}
+
+// ------------------------------------------------------ chrome golden --
+
+/// The Fig. 1 toy fork-join graph — mirrored line-for-line in
+/// `src/obs/chrome.rs` tests and `scripts/verify_trace_schema.py`
+/// (which regenerates the golden file).
+fn toy_nodes() -> Vec<NodeSpec> {
+    vec![
+        NodeSpec {
+            name: "src".into(),
+            preds: vec![],
+            pred_buffer: vec![],
+            ii: 1,
+            tiles_per_inference: 8,
+            is_source: true,
+            out_tile_bits: 256,
+        },
+        NodeSpec {
+            name: "a".into(),
+            preds: vec![0],
+            pred_buffer: vec![],
+            ii: 2,
+            tiles_per_inference: 8,
+            is_source: false,
+            out_tile_bits: 128,
+        },
+        NodeSpec {
+            name: "b".into(),
+            preds: vec![0],
+            pred_buffer: vec![],
+            ii: 3,
+            tiles_per_inference: 8,
+            is_source: false,
+            out_tile_bits: 128,
+        },
+        NodeSpec {
+            name: "join".into(),
+            preds: vec![1, 2],
+            pred_buffer: vec![],
+            ii: 1,
+            tiles_per_inference: 8,
+            is_source: false,
+            out_tile_bits: 0,
+        },
+    ]
+}
+
+#[test]
+fn chrome_sim_export_matches_committed_golden() {
+    let nodes = toy_nodes();
+    let cfg = SimConfig { inferences: 2, fifo_depth: 2, sequential: false, channel_bits: 32 };
+    let (report, trace) = simulate_traced(&nodes, &cfg);
+    let got = format!("{}\n", mase::obs::chrome::sim_chrome_json(&nodes, &report, &trace));
+    let want = include_str!("golden/fig1_toy_trace.json");
+    assert_eq!(
+        got, want,
+        "golden drift — regenerate with scripts/verify_trace_schema.py --regen"
+    );
+}

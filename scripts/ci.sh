@@ -13,6 +13,8 @@
 #   scripts/ci.sh decode         # KV-cached `mase generate` smoke
 #   scripts/ci.sh check          # `mase check` static analysis on an
 #                                # artifact-free emitted design
+#   scripts/ci.sh trace          # `mase trace` export smoke + traced e2e
+#                                # + JSONL schema validation (PR 8)
 #   scripts/ci.sh fmt clippy     # any combination, run in order given
 #
 #   SKIP_LINTS=1 scripts/ci.sh   # `all` minus fmt/clippy/doc (e.g. a
@@ -152,6 +154,45 @@ stage_check() {
   fi
 }
 
+stage_trace() {
+  # Observability gate (PR 8): `mase trace` simulates a synthetic design
+  # artifact-free and exports both trace formats; a traced e2e run must
+  # print the shared summary block and write a schema-valid JSONL; the
+  # toolchain-free python mirror re-derives the sim's closed-form
+  # accounting and validates every JSONL artifact (stdlib only).
+  echo "==> trace smoke: mase trace exports + traced e2e + schema validation"
+  if [[ ! -x target/release/mase ]]; then
+    echo "  (target/release/mase missing; building first)"
+    cargo build --release
+  fi
+  cleanup
+  SMOKE_DIR="$(mktemp -d)"
+  local out
+  out="$(./target/release/mase trace --artifacts "$SMOKE_DIR/artifacts" \
+    --chan 32 --out "$SMOKE_DIR/sim_trace.json")"
+  echo "$out"
+  echo "$out" | grep -q "trace written to" || {
+    echo "trace smoke: chrome export missing"; exit 1;
+  }
+  grep -q '"traceEvents"' "$SMOKE_DIR/sim_trace.json" || {
+    echo "trace smoke: chrome file lacks traceEvents"; exit 1;
+  }
+  ./target/release/mase trace --artifacts "$SMOKE_DIR/artifacts" --chan 32 \
+    --trace-format jsonl --out "$SMOKE_DIR/sim_trace.jsonl" >/dev/null
+  out="$(./target/release/mase trace --run e2e --backend cpu --model toy-sim \
+    --task sst2 --trials 4 --batch 2 --eval-batches 1 --threads 1 \
+    --artifacts "$SMOKE_DIR/artifacts" --out "$SMOKE_DIR/design" \
+    --trace "$SMOKE_DIR/e2e_trace.jsonl")"
+  echo "$out" | grep -q "== trace summary ==" || {
+    echo "trace smoke: traced e2e did not print the summary block"; exit 1;
+  }
+  echo "$out" | grep -q "search/trial" || {
+    echo "trace smoke: per-trial spans missing from the summary"; exit 1;
+  }
+  python3 ../scripts/verify_trace_schema.py \
+    "$SMOKE_DIR/sim_trace.jsonl" "$SMOKE_DIR/e2e_trace.jsonl"
+}
+
 run_stage() {
   case "$1" in
     fmt)    stage_fmt ;;
@@ -161,6 +202,7 @@ run_stage() {
     smoke)  stage_smoke ;;
     decode) stage_decode ;;
     check)  stage_check ;;
+    trace)  stage_trace ;;
     all)
       if [[ -z "${SKIP_LINTS:-}" ]]; then
         stage_fmt
@@ -171,9 +213,10 @@ run_stage() {
       stage_smoke
       stage_decode
       stage_check
+      stage_trace
       ;;
     *)
-      echo "unknown stage '$1' (expected fmt|clippy|doc|test|smoke|decode|check|all)" >&2
+      echo "unknown stage '$1' (expected fmt|clippy|doc|test|smoke|decode|check|trace|all)" >&2
       exit 2
       ;;
   esac

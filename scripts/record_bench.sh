@@ -55,6 +55,17 @@ cargo bench --bench "$bench" "$@" 2>&1 | tee "$out"
   echo '```'
   cat "$out"
   echo '```'
+  # Benches that fold their accounting into the obs registry (PR 8)
+  # print a delimited TraceSummary block; lift it verbatim into its own
+  # section so the counters are scannable without the full transcript.
+  if grep -q '== trace summary ==' "$out"; then
+    echo
+    echo "### trace summary"
+    echo
+    echo '```'
+    sed -n '/== trace summary ==/,/== end trace summary ==/p' "$out"
+    echo '```'
+  fi
 } >>"$results"
 
 echo "recorded to ${results#"$repo_root"/}"

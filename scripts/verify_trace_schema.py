@@ -1,0 +1,437 @@
+#!/usr/bin/env python3
+"""Toolchain-free mirror of the PR 8 trace subsystem: the dataflow
+simulator's beat-model event loop (rust/src/sim/engine.rs), the Chrome
+Trace Event exporter (rust/src/obs/chrome.rs) and the `mase-trace` v1
+JSONL schema (rust/src/obs/jsonl.rs), kept line-for-line transliterable
+with the Rust implementation so both stay debuggable in this container.
+
+Claims checked:
+  T1  the python sim mirror + chrome renderer reproduce the committed
+      golden trace (rust/tests/golden/fig1_toy_trace.json) byte for
+      byte on the Fig. 1 toy fork-join graph — the same bytes the Rust
+      golden test (rust/tests/trace_determinism.rs) asserts;
+  T2  closed-form firing accounting: per node, the trace holds exactly
+      tiles_per_inference * inferences firings whose occupancies sum to
+      SimReport.busy, and the last completion equals SimReport.cycles;
+  T3  stall attribution: per edge, logged stall intervals sum to
+      EdgeReport.transfer_stalled, and only transfer-bound channels are
+      ever charged;
+  T4  the rendered Chrome JSON is self-consistent: per-PE slice
+      durations sum to busy, every stalled edge owns exactly one named
+      xfer track, and all events carry the complete/metadata shape;
+  T5  (with a file argument) a `mase trace --format jsonl` /
+      `--trace FILE` artifact obeys the mase-trace v1 schema: header
+      line, 16-digit lowercase hex u64s, (path, seq) sort order,
+      per-path contiguous seq, counter deltas that sum to their totals,
+      and no wall-clock keys in the stream.
+
+Usage:
+  verify_trace_schema.py            run T1-T4 against the golden file
+  verify_trace_schema.py --regen    rewrite the golden file, then check
+  verify_trace_schema.py FILE.jsonl ...also validate FILE.jsonl (T5)
+"""
+import math
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+GOLDEN = os.path.join(REPO, "rust", "tests", "golden", "fig1_toy_trace.json")
+
+FAILS = []
+
+
+def check(name, ok, detail=""):
+    status = "ok" if ok else "FAIL"
+    print(f"  [{status}] {name}" + ("" if ok else f": {detail}"))
+    if not ok:
+        FAILS.append(name)
+
+
+# ---------------------------------------------------------------------------
+# sim mirror (rust/src/sim/engine.rs::simulate_with)
+# ---------------------------------------------------------------------------
+
+EPS = 1e-9
+
+
+class Node:
+    def __init__(self, name, preds, ii, tiles, is_source, out_tile_bits):
+        self.name = name
+        self.preds = preds
+        self.pred_buffer = []
+        self.ii = ii
+        self.tiles_per_inference = tiles
+        self.is_source = is_source
+        self.out_tile_bits = out_tile_bits
+
+
+def toy_nodes():
+    # the Fig. 1 toy fork-join graph — mirrored line-for-line in
+    # rust/src/obs/chrome.rs and rust/tests/trace_determinism.rs
+    return [
+        Node("src", [], 1, 8, True, 256),
+        Node("a", [0], 2, 8, False, 128),
+        Node("b", [0], 3, 8, False, 128),
+        Node("join", [1, 2], 1, 8, False, 0),
+    ]
+
+
+TOY_CFG = dict(inferences=2, fifo_depth=2, sequential=False, channel_bits=32)
+
+
+def simulate_traced(nodes, cfg):
+    """Mirror of simulate_with(nodes, cfg, Some(trace)). All channel
+    fractions here are dyadic rationals (1/8, exact in binary floating
+    point), so the python f64 arithmetic is bit-identical to Rust's."""
+    n = len(nodes)
+    fifo = [[0.0] * len(nd.preds) for nd in nodes]
+
+    def beats(i):
+        if cfg["channel_bits"] == 0 or nodes[i].out_tile_bits == 0:
+            return 1
+        return -(-nodes[i].out_tile_bits // cfg["channel_bits"])  # div_ceil
+
+    def occupancy(i):
+        return max(nodes[i].ii, beats(i))
+
+    def transfer_bound(i):
+        return beats(i) > nodes[i].ii
+
+    edges = []  # dicts mirroring EdgeReport
+    edge_of = [[] for _ in range(n)]
+    succs = [[] for _ in range(n)]
+    for i, nd in enumerate(nodes):
+        for slot, p in enumerate(nd.preds):
+            e = len(edges)
+            edges.append(
+                dict(
+                    producer=p,
+                    consumer=i,
+                    slot=slot,
+                    tile_bits=nodes[p].out_tile_bits,
+                    beats_per_tile=beats(p),
+                    transfer_cycles=0,
+                    transfer_stalled=0,
+                )
+            )
+            edge_of[i].append(e)
+            succs[p].append((i, slot, e))
+
+    def frac(i):
+        return 1.0 / max(nodes[i].tiles_per_inference, 1)
+
+    def cap(p, c, slot):
+        buf = nodes[c].pred_buffer[slot] if slot < len(nodes[c].pred_buffer) else 0.0
+        return cfg["fifo_depth"] * max(frac(p), frac(c)) + buf
+
+    total_tiles = [nd.tiles_per_inference * cfg["inferences"] for nd in nodes]
+    emitted = [0] * n
+    busy_until = [0] * n
+    busy = [0] * n
+    stalled = [0] * n
+    firings = []  # (node, t, occupancy)
+    stall_log = []  # (edge, t, dt)
+
+    t = 0
+    while not all(e >= tt for e, tt in zip(emitted, total_tiles)):
+        one_busy = any(b > t for b in busy_until)
+        fired_any = False
+        blocked = [False] * n
+        edge_charged = [False] * len(edges)
+        for i in range(n):
+            if emitted[i] >= total_tiles[i] or busy_until[i] > t:
+                continue
+            if cfg["sequential"] and one_busy:
+                continue
+            need = frac(i)
+            inputs_ok = nodes[i].is_source or all(q + EPS >= need for q in fifo[i])
+            outputs_ok = all(
+                emitted[c] >= total_tiles[c] or fifo[c][slot] + frac(i) <= cap(i, c, slot) + EPS
+                for (c, slot, _e) in succs[i]
+            )
+            if inputs_ok and outputs_ok:
+                if not nodes[i].is_source:
+                    for slot in range(len(fifo[i])):
+                        fifo[i][slot] -= need
+                occ = occupancy(i)
+                busy_until[i] = t + occ
+                busy[i] += occ
+                emitted[i] += 1
+                firings.append((i, t, occ))
+                for (c, slot, e) in succs[i]:
+                    fifo[c][slot] += frac(i)
+                    edges[e]["transfer_cycles"] += edges[e]["beats_per_tile"]
+                fired_any = True
+                if cfg["sequential"]:
+                    break
+            elif inputs_ok or outputs_ok:
+                def starved(q):
+                    return q + EPS < need
+
+                channel_fault = (not inputs_ok) and all(
+                    (not starved(q))
+                    or (transfer_bound(nodes[i].preds[slot]) and busy_until[nodes[i].preds[slot]] > t)
+                    for slot, q in enumerate(fifo[i])
+                )
+                if channel_fault:
+                    for slot, q in enumerate(fifo[i]):
+                        if starved(q):
+                            edge_charged[edge_of[i][slot]] = True
+                else:
+                    blocked[i] = True
+        if fired_any:
+            dt = 1
+        else:
+            pending = [b for b in busy_until if b > t]
+            if not pending:
+                raise RuntimeError(f"dataflow deadlock at t={t}")
+            dt = min(pending) - t
+        for i in range(n):
+            if blocked[i]:
+                stalled[i] += dt
+        for e, charged in enumerate(edge_charged):
+            if charged:
+                edges[e]["transfer_stalled"] += dt
+                stall_log.append((e, t, dt))
+        t += dt
+    cycles = max(max(busy_until, default=t), t)
+    report = dict(cycles=cycles, busy=busy, stalled=stalled, edges=edges)
+    trace = dict(firings=firings, stalls=stall_log)
+    return report, trace
+
+
+# ---------------------------------------------------------------------------
+# chrome renderer mirror (rust/src/obs/chrome.rs::sim_chrome_json)
+# + compact printer mirror (rust/src/util/json.rs::Display)
+# ---------------------------------------------------------------------------
+
+
+def jstr(s):
+    out = ['"']
+    for c in s:
+        if c == '"':
+            out.append('\\"')
+        elif c == "\\":
+            out.append("\\\\")
+        elif c == "\n":
+            out.append("\\n")
+        elif c == "\t":
+            out.append("\\t")
+        elif c == "\r":
+            out.append("\\r")
+        elif ord(c) < 0x20:
+            out.append("\\u%04x" % ord(c))
+        else:
+            out.append(c)
+    out.append('"')
+    return "".join(out)
+
+
+def jdump(v):
+    """Compact printer matching util::json::Json::Display: sorted object
+    keys, no whitespace, whole numbers printed as integers."""
+    if isinstance(v, bool):
+        return "true" if v else "false"
+    if v is None:
+        return "null"
+    if isinstance(v, (int, float)):
+        f = float(v)
+        if f == math.floor(f) and abs(f) < 1e15:
+            return str(int(f))
+        return repr(f)
+    if isinstance(v, str):
+        return jstr(v)
+    if isinstance(v, list):
+        return "[" + ",".join(jdump(x) for x in v) + "]"
+    if isinstance(v, dict):
+        return "{" + ",".join(f"{jstr(k)}:{jdump(v[k])}" for k in sorted(v)) + "}"
+    raise TypeError(type(v))
+
+
+def thread_name(tid, name):
+    return {"args": {"name": name}, "name": "thread_name", "ph": "M", "pid": 0, "tid": tid}
+
+
+def complete(name, cat, ts, dur, tid):
+    return {"cat": cat, "dur": dur, "name": name, "ph": "X", "pid": 0, "tid": tid, "ts": ts}
+
+
+def sim_chrome_json(nodes, report, trace):
+    events = [thread_name(i, nd.name) for i, nd in enumerate(nodes)]
+    edge_tid = {}
+    for e, edge in enumerate(report["edges"]):
+        if edge["transfer_stalled"] > 0:
+            tid = len(nodes) + len(edge_tid)
+            edge_tid[e] = tid
+            label = f"xfer:{nodes[edge['producer']].name}->{nodes[edge['consumer']].name}"
+            events.append(thread_name(tid, label))
+    for (node, t, occ) in trace["firings"]:
+        events.append(complete(nodes[node].name, "firing", t, occ, node))
+    for (e, t, dt) in trace["stalls"]:
+        if e in edge_tid:
+            events.append(complete("transfer_stalled", "stall", t, dt, edge_tid[e]))
+    return {"displayTimeUnit": "ns", "traceEvents": events}
+
+
+def render_golden():
+    nodes = toy_nodes()
+    report, trace = simulate_traced(nodes, TOY_CFG)
+    return nodes, report, trace, jdump(sim_chrome_json(nodes, report, trace)) + "\n"
+
+
+# ---------------------------------------------------------------------------
+# T1-T4
+# ---------------------------------------------------------------------------
+
+
+def t1_golden(regen):
+    nodes, report, trace, text = render_golden()
+    if regen:
+        os.makedirs(os.path.dirname(GOLDEN), exist_ok=True)
+        with open(GOLDEN, "w") as f:
+            f.write(text)
+        print(f"  regenerated {os.path.relpath(GOLDEN, REPO)} ({len(text)} bytes)")
+    if not os.path.exists(GOLDEN):
+        check("T1 golden file exists", False, f"{GOLDEN} missing — run with --regen")
+        return nodes, report, trace, text
+    committed = open(GOLDEN).read()
+    check("T1 mirror reproduces committed golden byte-for-byte", committed == text,
+          f"{len(committed)} vs {len(text)} bytes")
+    return nodes, report, trace, text
+
+
+def t2_firings(nodes, report, trace):
+    for i, nd in enumerate(nodes):
+        fires = [(t, occ) for (node, t, occ) in trace["firings"] if node == i]
+        want = nd.tiles_per_inference * TOY_CFG["inferences"]
+        check(f"T2 {nd.name}: firing count == tiles*inferences", len(fires) == want,
+              f"{len(fires)} vs {want}")
+        check(f"T2 {nd.name}: occupancy sum == busy", sum(o for _, o in fires) == report["busy"][i],
+              f"{sum(o for _, o in fires)} vs {report['busy'][i]}")
+    end = max(t + occ for (_n, t, occ) in trace["firings"])
+    check("T2 last completion == cycles", end == report["cycles"],
+          f"{end} vs {report['cycles']}")
+
+
+def t3_stalls(nodes, report, trace):
+    for e, edge in enumerate(report["edges"]):
+        logged = sum(dt for (ee, _t, dt) in trace["stalls"] if ee == e)
+        check(f"T3 edge {e}: stall intervals sum to transfer_stalled",
+              logged == edge["transfer_stalled"], f"{logged} vs {edge['transfer_stalled']}")
+        if edge["transfer_stalled"] > 0:
+            p = edge["producer"]
+            bound = edge["beats_per_tile"] > nodes[p].ii
+            check(f"T3 edge {e}: only transfer-bound channels charged", bound,
+                  f"producer {nodes[p].name} ii={nodes[p].ii} beats={edge['beats_per_tile']}")
+    check("T3 starved 32b fabric logs stalls", len(trace["stalls"]) > 0)
+
+
+def t4_chrome(nodes, report, trace):
+    j = sim_chrome_json(nodes, report, trace)
+    events = j["traceEvents"]
+    for i in range(len(nodes)):
+        dur = sum(e["dur"] for e in events
+                  if e["ph"] == "X" and e.get("cat") == "firing" and e["tid"] == i)
+        check(f"T4 PE {nodes[i].name}: slice durations sum to busy", dur == report["busy"][i],
+              f"{dur} vs {report['busy'][i]}")
+    stalled_edges = sum(1 for e in report["edges"] if e["transfer_stalled"] > 0)
+    xfer_tracks = sum(1 for e in events
+                      if e["ph"] == "M" and e["args"]["name"].startswith("xfer:"))
+    check("T4 one xfer track per stalled edge", stalled_edges == xfer_tracks,
+          f"{stalled_edges} vs {xfer_tracks}")
+    shapes_ok = all(
+        (e["ph"] == "M" and set(e) == {"args", "name", "ph", "pid", "tid"})
+        or (e["ph"] == "X" and set(e) == {"cat", "dur", "name", "ph", "pid", "tid", "ts"})
+        for e in events
+    )
+    check("T4 every event is a metadata or complete record", shapes_ok)
+
+
+# ---------------------------------------------------------------------------
+# T5: mase-trace v1 JSONL schema validation
+# ---------------------------------------------------------------------------
+
+HEX16 = re.compile(r"^[0-9a-f]{16}$")
+
+
+def parse_json_line(line, lineno):
+    import json
+
+    try:
+        return json.loads(line)
+    except ValueError as e:
+        check(f"T5 line {lineno} parses", False, str(e))
+        return None
+
+
+def t5_jsonl(path):
+    lines = open(path).read().splitlines()
+    check("T5 header line", bool(lines) and lines[0] == '{"schema":"mase-trace","version":1}',
+          lines[0] if lines else "<empty>")
+    events = []  # (path, seq, obj)
+    totals = {}
+    sums = {}
+    in_totals = False
+    for ln, line in enumerate(lines[1:], start=2):
+        o = parse_json_line(line, ln)
+        if o is None:
+            continue
+        kind = o.get("kind")
+        if kind == "total":
+            in_totals = True
+            ok = set(o) == {"kind", "name", "path", "value"} and HEX16.match(o["value"])
+            check(f"T5 line {ln}: total shape", bool(ok), line)
+            totals[(o["path"], o["name"])] = int(o["value"], 16)
+            continue
+        check(f"T5 line {ln}: events precede totals", not in_totals, line)
+        if kind == "span":
+            ok = set(o) == {"kind", "path", "seq", "tags"} and HEX16.match(o["seq"])
+        elif kind == "counter":
+            ok = (set(o) == {"delta", "kind", "name", "path", "seq"}
+                  and HEX16.match(o["seq"]) and HEX16.match(o["delta"]))
+            key = (o["path"], o["name"])
+            sums[key] = sums.get(key, 0) + int(o["delta"], 16)
+        else:
+            ok = False
+        check(f"T5 line {ln}: event shape ({kind})", bool(ok), line)
+        events.append((o["path"], int(o["seq"], 16)))
+        check(f"T5 line {ln}: no wall-clock keys", "wall" not in o and "secs" not in o, line)
+    keys = [(p, s) for (p, s) in events]
+    check("T5 events sorted by (path, seq)", keys == sorted(keys))
+    by_path = {}
+    for p, s in events:
+        by_path.setdefault(p, []).append(s)
+    contiguous = all(seqs == list(range(len(seqs))) for seqs in by_path.values())
+    check("T5 per-path seq is contiguous from 0", contiguous,
+          str({p: s[:6] for p, s in by_path.items() if s != list(range(len(s)))}))
+    check("T5 counter deltas sum to totals", sums == totals,
+          f"sums={sums} totals={totals}")
+    print(f"  validated {len(lines)} lines: {len(events)} events, {len(totals)} totals")
+
+
+# ---------------------------------------------------------------------------
+
+
+def main(argv):
+    regen = "--regen" in argv
+    jsonl_files = [a for a in argv if not a.startswith("--")]
+    print("verify_trace_schema: Fig. 1 toy fork-join graph, "
+          f"cfg={TOY_CFG}")
+    nodes, report, trace, _text = t1_golden(regen)
+    t2_firings(nodes, report, trace)
+    t3_stalls(nodes, report, trace)
+    t4_chrome(nodes, report, trace)
+    for f in jsonl_files:
+        print(f"  -- validating {f}")
+        t5_jsonl(f)
+    print()
+    if FAILS:
+        print(f"FAILED ({len(FAILS)}): " + ", ".join(FAILS[:10]))
+        return 1
+    print("verify_trace_schema: ALL CHECKS PASSED")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
