@@ -15,8 +15,9 @@
 //! and the persistent evaluation cache ([`search`]), the hardware cost
 //! models ([`hw`]), the dataflow simulator ([`sim`]), the SystemVerilog
 //! emitter ([`emit`]), the synthetic data substrate ([`data`]), the
-//! deterministic tracing/metrics layer ([`obs`]) and the end-to-end
-//! coordinator ([`coordinator`]).
+//! deterministic tracing/metrics layer ([`obs`]), the HTTP inference
+//! service with its continuous-batching decode scheduler ([`serve`])
+//! and the end-to-end coordinator ([`coordinator`]).
 //!
 //! A module-by-module map to the paper's sections and figures lives in
 //! `docs/ARCHITECTURE.md` at the repository root.
@@ -54,6 +55,7 @@
 //! | SystemVerilog emission (Table 3) | [`emit`] | no |
 //! | static analysis: SV analyzer + bitwidth contracts (`mase check`) | [`check`] | no |
 //! | deterministic tracing/metrics (`mase trace`, `--trace`) | [`obs`] | no |
+//! | HTTP serving, continuous-batching scheduler (`mase serve`) | [`serve`] | no |
 //! | accuracy evaluation, packed CPU interpreter | [`runtime::CpuBackend`] via [`passes::Evaluator`] | no |
 //! | full flow / sweep with `--backend cpu` | [`coordinator`] | no |
 //! | accuracy evaluation / QAT via PJRT | [`runtime::PjrtBackend`] via [`passes::Evaluator`] | **yes** |
@@ -88,6 +90,7 @@ pub mod emit;
 pub mod check;
 pub mod obs;
 pub mod runtime;
+pub mod serve;
 pub mod eval;
 pub mod coordinator;
 pub mod util;

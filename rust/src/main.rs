@@ -12,6 +12,8 @@
 //!   formats   [--model llama-sim]  (Table 1-style format comparison)
 //!   generate  [--model toy-lm] [--tokens N] [--prompt-len N] [--seqs N] [--fmt F]
 //!             (KV-cached greedy decode on the CPU backend)
+//!   serve     [--model toy-lm] [--fmt F] [--port N] [--lanes N] [--queue-cap N]
+//!             (HTTP inference service with continuous batching, CPU backend)
 //!   trace     [--model M] [--fmt F] [--bits N] [--chan W] [--out FILE]
 //!             [--trace-format chrome|jsonl] | --run e2e|sweep|generate ...
 //!             (PR 8 observability: simulator timelines / flow traces)
@@ -300,6 +302,14 @@ fn run(args: &Args) -> Result<()> {
             BackendKind::Pjrt => cmd_generate(&session, args, session.pjrt_backend()?)?,
             BackendKind::Cpu => cmd_generate(&session, args, CpuBackend::new())?,
         },
+        "serve" => {
+            anyhow::ensure!(
+                backend == BackendKind::Cpu,
+                "serving runs on the incremental decode engine, which only the CPU \
+                 interpreter implements; rerun with --backend cpu"
+            );
+            cmd_serve(&session, args)?;
+        }
         other => {
             return Err(anyhow!("unknown subcommand '{other}'\n{HELP}"));
         }
@@ -442,6 +452,61 @@ fn cmd_generate<B: ExecBackend>(session: &Session, args: &Args, backend: B) -> R
     );
     finish_trace(args, &reg)?;
     Ok(())
+}
+
+/// `mase serve` — the PR 9 HTTP inference service: the decode engine
+/// behind a continuous-batching scheduler on a plain `std::net`
+/// listener. Blocks until the process is terminated (no signal handler
+/// in the vendored set — SIGTERM's default disposition is the shutdown
+/// path, fine for a `connection: close` service with no durable state).
+fn cmd_serve(session: &Session, args: &Args) -> Result<()> {
+    use mase::serve::{BatchEngine, ServeConfig, ServeInfo, ServeOptions};
+    let model = args.get_or("model", "toy-lm");
+    let meta = session.manifest.model(&model)?.clone();
+    anyhow::ensure!(
+        meta.kind == "lm",
+        "serving needs a causal LM; '{model}' is a {} (try --model toy-lm or llama-sim)",
+        meta.kind
+    );
+    let fmt = FormatKind::from_name(&args.get_or("fmt", "mxint"))
+        .ok_or_else(|| anyhow!("unknown format"))?;
+    let default_bits = match fmt {
+        FormatKind::Fp32 => 32.0,
+        FormatKind::Bmf => 5.0,
+        FormatKind::Int | FormatKind::Fp8 => 8.0,
+        FormatKind::MxInt | FormatKind::Bl => 7.0,
+    };
+    let bits = args.get_f64("bits", default_bits) as f32;
+    let w = pretrain::pretrain(session, &meta, None, &Default::default())?;
+    let profile = mase::passes::ProfileData::uniform(&meta, 4.0);
+    let qcfg = mase::passes::QuantSolution::uniform(fmt, bits, &meta, &profile).to_qconfig();
+    let be = CpuBackend::new();
+    let graph = be.prepare(&meta, &w, &[])?;
+    let lanes = args.get_usize("lanes", 4);
+    let cfg = ServeConfig {
+        lanes,
+        queue_cap: args.get_usize("queue-cap", 32),
+        queue_timeout_ms: args.get_usize("queue-timeout-ms", 2000) as u64,
+        default_max_tokens: args.get_usize("max-tokens", 8),
+    };
+    let mut engine = BatchEngine::new(&be, &graph, &meta, &w, fmt.name(), &qcfg, lanes)?;
+    let info = ServeInfo {
+        model: meta.name.clone(),
+        fmt: fmt.name().to_string(),
+        bits,
+        vocab: meta.vocab,
+        seq_len: meta.seq_len,
+        lanes,
+        width: engine.width(),
+    };
+    let opts = ServeOptions {
+        port: args.get_usize("port", 0) as u16,
+        http_workers: args.get_usize("http-workers", 4),
+        cfg,
+    };
+    // always record: /metrics is the service's observability surface
+    let reg = mase::obs::Registry::new();
+    mase::serve::serve(&mut engine, &info, &opts, &reg)
 }
 
 /// Print the PR 8 trace summary and export the registry. A bare
@@ -798,6 +863,14 @@ usage: mase <subcommand> [flags]
            (KV-cached greedy decode through the incremental engine;
             needs --backend cpu — prints ms/token and the counted
             attention work; bit-identical output at any --threads)
+  serve    [--model toy-lm] [--fmt F] [--bits N] [--port N] [--lanes N]
+           [--queue-cap N] [--queue-timeout-ms N] [--max-tokens N]
+           [--http-workers N]
+           (HTTP inference service over the decode engine with a
+            continuous-batching scheduler; needs --backend cpu;
+            POST /v1/generate, GET /healthz, GET /metrics; --port 0
+            binds an ephemeral port, printed on stdout; batched tokens
+            are bit-identical to per-request sequential decodes)
   trace    [--model M] [--fmt F] [--bits N] [--chan W] [--inferences N]
            [--out FILE] [--trace-format chrome|jsonl]
            (artifact-free simulator tracing: per-PE firing/stall

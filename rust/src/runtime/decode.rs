@@ -153,6 +153,12 @@ pub struct Decoder<'a> {
     cache: Vec<LayerKv>,
     /// Positions currently cached (the next step decodes position `len`).
     len: usize,
+    /// Per-slot context start (absolute cached position). Slot `bi`
+    /// attends `starts[bi]..=pos` and embeds at the *logical* position
+    /// `pos - starts[bi]` — all zero for a fresh decoder, advanced by
+    /// [`Decoder::evict`] so a slot can be reused for a new sequence
+    /// without clearing the whole group's cache (PR 9 serving).
+    starts: Vec<usize>,
     pub stats: DecodeStats,
 }
 
@@ -230,12 +236,92 @@ impl<'a> Decoder<'a> {
         let cache = (0..meta.n_layers)
             .map(|_| LayerKv { k: Vec::with_capacity(cap), v: Vec::with_capacity(cap) })
             .collect();
-        Ok(Decoder { interp, meta, group, layers, head, cache, len: 0, stats: DecodeStats::default() })
+        Ok(Decoder {
+            interp,
+            meta,
+            group,
+            layers,
+            head,
+            cache,
+            len: 0,
+            starts: vec![0; group],
+            stats: DecodeStats::default(),
+        })
     }
 
-    /// Positions currently held in the KV cache.
+    /// Positions currently held in the KV cache (absolute — reduced by
+    /// [`Decoder::compact`], not by [`Decoder::evict`]).
     pub fn positions(&self) -> usize {
         self.len
+    }
+
+    /// Per-slot context starts (absolute cached positions).
+    pub fn context_starts(&self) -> &[usize] {
+        &self.starts
+    }
+
+    /// Retire slot `slot`'s sequence: zero its cached K/V rows (hygiene —
+    /// they are never read again, but stale bits should not survive in
+    /// memory) and advance its context start to the present, so the next
+    /// token fed on this slot begins a fresh sequence at logical position
+    /// 0. Other slots are untouched: attention reads only the queried
+    /// slot's rows, quantization acts on step matrices (never the cache),
+    /// so eviction cannot perturb in-flight sequences bitwise.
+    pub fn evict(&mut self, slot: usize) -> Result<()> {
+        ensure!(slot < self.group, "evict: slot {slot} outside group {}", self.group);
+        let (b, d) = (self.group, self.meta.d_model);
+        for kv in &mut self.cache {
+            for pos in self.starts[slot]..self.len {
+                let lo = (pos * b + slot) * d;
+                kv.k[lo..lo + d].fill(0.0);
+                kv.v[lo..lo + d].fill(0.0);
+            }
+        }
+        self.starts[slot] = self.len;
+        Ok(())
+    }
+
+    /// Rewind the whole group to `pos` cached positions, discarding the
+    /// tail. Context starts past `pos` are clamped, so an evicted-at-the-
+    /// tip slot stays evicted. Re-feeding the same tokens after a
+    /// truncate reproduces the discarded logits bitwise (the cache holds
+    /// pre-quantization rows; steps depend only on the retained prefix).
+    pub fn truncate(&mut self, pos: usize) -> Result<()> {
+        ensure!(pos <= self.len, "truncate to {pos} but only {} positions cached", self.len);
+        let rows = pos * self.group * self.meta.d_model;
+        for kv in &mut self.cache {
+            kv.k.truncate(rows);
+            kv.v.truncate(rows);
+        }
+        self.len = pos;
+        for s in &mut self.starts {
+            *s = (*s).min(pos);
+        }
+        Ok(())
+    }
+
+    /// Drop cached positions no slot can still attend (those before
+    /// `min(starts)`), shifting the cache down. Bit-invariant: attention
+    /// indexes rows relative to each slot's start, and logical positions
+    /// are start-relative already. This is what bounds cache memory (and
+    /// the absolute position index) on a long-running server: with every
+    /// slot periodically evicted, `len` never exceeds the longest live
+    /// context. Returns the number of positions dropped.
+    pub fn compact(&mut self) -> usize {
+        let base = self.starts.iter().copied().min().unwrap_or(0).min(self.len);
+        if base == 0 {
+            return 0;
+        }
+        let rows = base * self.group * self.meta.d_model;
+        for kv in &mut self.cache {
+            kv.k.drain(..rows);
+            kv.v.drain(..rows);
+        }
+        self.len -= base;
+        for s in &mut self.starts {
+            *s -= base;
+        }
+        base
     }
 
     /// One Linear site through the shared quantized-matmul path
@@ -251,22 +337,40 @@ impl<'a> Decoder<'a> {
 
     /// Run one token per sequence through the layer stack, appending
     /// this position's K/V to the cache. Returns `[group * vocab]`
-    /// logits for the decoded position.
+    /// logits for the decoded position. Each slot `bi` embeds at its
+    /// *logical* position `pos - starts[bi]` and attends only its own
+    /// context window `starts[bi]..=pos` — identical to the pre-eviction
+    /// behavior when all starts are zero.
     pub fn decode_step(&mut self, toks: &[i32]) -> Result<Vec<f32>> {
         let (b, d) = (self.group, self.meta.d_model);
         let heads = self.meta.n_heads;
         let dh = d / heads;
         ensure!(toks.len() == b, "decode step expects {b} tokens (one per sequence), got {}", toks.len());
         let pos = self.len;
+        let min_start = self.starts.iter().copied().min().unwrap_or(0);
         ensure!(
-            pos < self.meta.seq_len,
+            pos - min_start < self.meta.seq_len,
             "KV cache is full: model {} supports seq_len {}",
             self.meta.name,
             self.meta.seq_len
         );
         let scale = (dh as f32).sqrt();
-        let n_ctx = pos + 1;
-        let mut x = Tensor::new(self.interp.embed_rows(toks, pos)?, vec![b, d]);
+        let uniform = self.starts.iter().all(|&s| s == min_start);
+        let xdata = if uniform {
+            // fast path (fresh decoders, lockstep groups): one call, one
+            // shared logical position — bitwise what the per-slot path
+            // computes, since embed_rows is per-row.
+            self.interp.embed_rows(toks, pos - min_start)?
+        } else {
+            let mut xd = Vec::with_capacity(b * d);
+            for (bi, tok) in toks.iter().enumerate() {
+                xd.extend_from_slice(
+                    &self.interp.embed_rows(std::slice::from_ref(tok), pos - self.starts[bi])?,
+                );
+            }
+            xd
+        };
+        let mut x = Tensor::new(xdata, vec![b, d]);
         for l in 0..self.layers.len() {
             let h = self.interp.layer_norm(&x, &self.layers[l].ln1)?;
             let qkv = self.linear(&self.layers[l].qkv, &h)?; // [b, 3d]
@@ -279,9 +383,12 @@ impl<'a> Decoder<'a> {
                 }
             }
             let mut attn_out = vec![0.0f32; b * d];
-            let mut att = vec![0.0f32; n_ctx];
+            let mut att = vec![0.0f32; pos + 1 - min_start];
             let kv = &self.cache[l];
+            let mut dots = 0u64;
             for bi in 0..b {
+                let st = self.starts[bi];
+                let n_ctx = pos + 1 - st;
                 for hd in 0..heads {
                     let off = hd * dh;
                     let q_lo = bi * 3 * d + off;
@@ -290,14 +397,21 @@ impl<'a> Decoder<'a> {
                         &qkv.data[q_lo..q_lo + dh],
                         scale,
                         n_ctx,
-                        |sj| &kv.k[(sj * b + bi) * d + off..(sj * b + bi) * d + off + dh],
-                        |sj| &kv.v[(sj * b + bi) * d + off..(sj * b + bi) * d + off + dh],
-                        &mut att,
+                        |sj| {
+                            let lo = ((st + sj) * b + bi) * d + off;
+                            &kv.k[lo..lo + dh]
+                        },
+                        |sj| {
+                            let lo = ((st + sj) * b + bi) * d + off;
+                            &kv.v[lo..lo + dh]
+                        },
+                        &mut att[..n_ctx],
                         &mut attn_out[o_lo..o_lo + dh],
                     );
+                    dots += n_ctx as u64;
                 }
             }
-            self.stats.decode_score_dots += (b * heads * n_ctx) as u64;
+            self.stats.decode_score_dots += dots;
             let proj = self.linear(&self.layers[l].proj, &Tensor::new(attn_out, vec![b, d]))?;
             let res1 = Tensor::new(
                 x.data.iter().zip(proj.data.iter()).map(|(a, c)| a + c).collect(),
@@ -350,6 +464,7 @@ impl<'a> Decoder<'a> {
                 kv.v.clear();
             }
             self.len = 0;
+            self.starts.fill(0);
         }
         let mut xdata = Vec::with_capacity(t * b * d);
         let mut col = vec![0i32; b];
@@ -767,6 +882,134 @@ mod tests {
         );
         assert_eq!(reg.counter_total("decode/group", "full_score_dots"), stats.full_score_dots);
         assert_eq!(reg.counter_total("decode/group", "full_attn_rows"), stats.full_attn_rows);
+    }
+
+    fn ctx(meta: &ModelMeta) -> (Vec<f32>, CpuBackend) {
+        (init_params(meta, 0xC0DE), CpuBackend::new())
+    }
+
+    fn qcfg_bits(meta: &ModelMeta, bits: f32) -> Vec<f32> {
+        let mut q = vec![0.0f32; 2 * meta.num_qtensors()];
+        for i in 0..meta.num_qtensors() {
+            q[2 * i] = bits;
+        }
+        q
+    }
+
+    fn bits_of(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn evicted_slot_reused_matches_fresh_decoder_bitwise() {
+        // The PR 9 no-stale-leakage regression: after `evict(slot)`, a
+        // new sequence on that slot must produce logits bit-identical to
+        // a decoder that never saw the old one — while the neighbouring
+        // slot's sequence keeps running.
+        let meta = tiny_lm();
+        let (w, be) = ctx(&meta);
+        let graph = be.prepare(&meta, &w, &[]).unwrap();
+        let qcfg = qcfg_bits(&meta, 32.0);
+        let v = meta.vocab;
+        let xs = [5i32, 9, 13, 2, 7, 11, 3, 40];
+        let ys = [101i32, 42, 33];
+        let mut dec = Decoder::new(&be, &graph, &meta, &w, "fp32", &qcfg, 2).unwrap();
+        for &t in &xs[..5] {
+            dec.decode_step(&[t, t]).unwrap();
+        }
+        dec.evict(1).unwrap();
+        assert_eq!(dec.context_starts(), &[0, 5]);
+        let mut reused = Vec::new();
+        for (i, &t) in ys.iter().enumerate() {
+            // slot 0 continues its sequence, slot 1 starts over on Y
+            let lg = dec.decode_step(&[xs[5 + i], t]).unwrap();
+            reused.push(lg[v..2 * v].to_vec());
+        }
+        let mut fresh = Decoder::new(&be, &graph, &meta, &w, "fp32", &qcfg, 2).unwrap();
+        for (i, &t) in ys.iter().enumerate() {
+            let lg = fresh.decode_step(&[t, t]).unwrap();
+            assert_eq!(bits_of(&reused[i]), bits_of(&lg[v..2 * v]), "step {i} leaked stale cache");
+        }
+        // negative control: WITHOUT evict the old context bleeds in
+        let mut stale = Decoder::new(&be, &graph, &meta, &w, "fp32", &qcfg, 2).unwrap();
+        for &t in &xs[..5] {
+            stale.decode_step(&[t, t]).unwrap();
+        }
+        let lg = stale.decode_step(&[xs[5], ys[0]]).unwrap();
+        assert_ne!(
+            bits_of(&reused[0]),
+            bits_of(&lg[v..2 * v]),
+            "stale cache should perturb the logits (else this test checks nothing)"
+        );
+    }
+
+    #[test]
+    fn evict_whole_group_block_format_matches_fresh() {
+        // Block formats run whole 16-row groups in lockstep; evicting all
+        // slots and reusing the group must be bitwise a fresh decoder.
+        let meta = tiny_lm();
+        let (w, be) = ctx(&meta);
+        let graph = be.prepare(&meta, &w, &[]).unwrap();
+        let qcfg = qcfg_bits(&meta, 7.0);
+        let mut dec = Decoder::new(&be, &graph, &meta, &w, "mxint", &qcfg, 16).unwrap();
+        for &t in &[3i32, 77, 8] {
+            dec.decode_step(&[t; 16]).unwrap();
+        }
+        for bi in 0..16 {
+            dec.evict(bi).unwrap();
+        }
+        let mut fresh = Decoder::new(&be, &graph, &meta, &w, "mxint", &qcfg, 16).unwrap();
+        for &t in &[200i32, 14, 360, 9] {
+            let a = dec.decode_step(&[t; 16]).unwrap();
+            let b = fresh.decode_step(&[t; 16]).unwrap();
+            assert_eq!(bits_of(&a), bits_of(&b));
+        }
+    }
+
+    #[test]
+    fn truncate_rewind_and_refeed_is_bitwise() {
+        let meta = tiny_lm();
+        let (w, be) = ctx(&meta);
+        let graph = be.prepare(&meta, &w, &[]).unwrap();
+        let qcfg = qcfg_bits(&meta, 32.0);
+        let toks = [5i32, 9, 13, 2, 7, 11];
+        let mut dec = Decoder::new(&be, &graph, &meta, &w, "fp32", &qcfg, 2).unwrap();
+        let mut logits = Vec::new();
+        for &t in &toks {
+            logits.push(dec.decode_step(&[t, t]).unwrap());
+        }
+        dec.truncate(3).unwrap();
+        assert_eq!(dec.positions(), 3);
+        for (i, &t) in toks[3..].iter().enumerate() {
+            let lg = dec.decode_step(&[t, t]).unwrap();
+            assert_eq!(bits_of(&lg), bits_of(&logits[3 + i]), "re-fed step {i}");
+        }
+    }
+
+    #[test]
+    fn compact_drops_dead_prefix_bitwise() {
+        let meta = tiny_lm();
+        let (w, be) = ctx(&meta);
+        let graph = be.prepare(&meta, &w, &[]).unwrap();
+        let qcfg = qcfg_bits(&meta, 32.0);
+        let mut a = Decoder::new(&be, &graph, &meta, &w, "fp32", &qcfg, 2).unwrap();
+        let mut b = Decoder::new(&be, &graph, &meta, &w, "fp32", &qcfg, 2).unwrap();
+        for &t in &[5i32, 9, 13, 2] {
+            a.decode_step(&[t, t]).unwrap();
+            b.decode_step(&[t, t]).unwrap();
+        }
+        for bi in 0..2 {
+            a.evict(bi).unwrap();
+            b.evict(bi).unwrap();
+        }
+        assert_eq!(b.compact(), 4);
+        assert_eq!(b.positions(), 0);
+        assert_eq!(a.positions(), 4);
+        for &t in &[60i32, 7, 300] {
+            let la = a.decode_step(&[t, t]).unwrap();
+            let lb = b.decode_step(&[t, t]).unwrap();
+            assert_eq!(bits_of(&la), bits_of(&lb));
+        }
     }
 
     #[test]

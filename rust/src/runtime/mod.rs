@@ -23,7 +23,10 @@
 //! autoregressive engine ([`Decoder`], `mase generate`,
 //! [`ExecBackend::profile_decode`]): same packed weights and quantizers,
 //! position-major incremental steps, bitwise-parity-tested against the
-//! full recompute.
+//! full recompute. The engine's per-slot context windows
+//! ([`Decoder::evict`] / [`Decoder::truncate`] / [`Decoder::compact`])
+//! let [`crate::serve`] reuse cache slots across requests — the
+//! substrate for the continuous-batching scheduler behind `mase serve`.
 
 pub mod backend;
 pub mod client;

@@ -1,0 +1,242 @@
+//! Minimal HTTP/1.1 on `std::net` — the vendored-crates-offline
+//! constraint rules out tokio/axum/hyper, and the service needs exactly
+//! three routes with fixed-length JSON bodies, so a hand-rolled
+//! request reader and response writer are sufficient and fully tested.
+//!
+//! Scope (deliberate):
+//! - one request per connection (`Connection: close` on every response);
+//! - fixed `Content-Length` bodies only (no chunked requests);
+//! - header block capped at [`MAX_HEADER_BYTES`], body at
+//!   [`MAX_BODY_BYTES`] — malformed or oversized input maps to a 4xx
+//!   [`HttpError`] the caller renders, I/O failures just drop the
+//!   connection.
+//!
+//! Parsing is generic over [`BufRead`] so the unit tests drive it from
+//! in-memory cursors; the server wraps each [`std::net::TcpStream`] in a
+//! `BufReader` with read/write timeouts set by the accept loop.
+
+use std::io::{self, BufRead, Read, Write};
+
+/// Cap on the request line + header block.
+pub const MAX_HEADER_BYTES: usize = 16 * 1024;
+/// Cap on a request body (`Content-Length` above this is refused).
+pub const MAX_BODY_BYTES: usize = 1 << 20;
+
+/// A parsed request: method + path + headers + raw body bytes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    /// Header `(name, value)` pairs in arrival order, names lowercased.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First value of `name` (ASCII case-insensitive lookup).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let want = name.to_ascii_lowercase();
+        self.headers.iter().find(|(n, _)| *n == want).map(|(_, v)| v.as_str())
+    }
+}
+
+/// A request the reader refused, with the status the caller should send.
+#[derive(Debug)]
+pub enum HttpError {
+    /// Protocol violation → respond with this status + message.
+    Bad { status: u16, msg: String },
+    /// Transport failure → drop the connection silently.
+    Io(io::Error),
+}
+
+impl From<io::Error> for HttpError {
+    fn from(e: io::Error) -> Self {
+        HttpError::Io(e)
+    }
+}
+
+fn bad(status: u16, msg: impl Into<String>) -> HttpError {
+    HttpError::Bad { status, msg: msg.into() }
+}
+
+/// Read one request. Returns `Ok(None)` on a clean EOF before any bytes
+/// (client connected and went away).
+pub fn read_request<R: BufRead>(r: &mut R) -> Result<Option<Request>, HttpError> {
+    let mut head = 0usize;
+    let mut line = String::new();
+    if r.read_line(&mut line)? == 0 {
+        return Ok(None);
+    }
+    head += line.len();
+    let req_line = line.trim_end_matches(['\r', '\n']);
+    let mut parts = req_line.split_whitespace();
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v), None) => (m.to_string(), p.to_string(), v),
+        _ => return Err(bad(400, format!("malformed request line '{req_line}'"))),
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Err(bad(505, format!("unsupported protocol '{version}'")));
+    }
+    let mut headers = Vec::new();
+    loop {
+        let mut hl = String::new();
+        if r.read_line(&mut hl)? == 0 {
+            return Err(bad(400, "connection closed inside header block"));
+        }
+        head += hl.len();
+        if head > MAX_HEADER_BYTES {
+            return Err(bad(431, format!("header block exceeds {MAX_HEADER_BYTES} bytes")));
+        }
+        let hl = hl.trim_end_matches(['\r', '\n']);
+        if hl.is_empty() {
+            break;
+        }
+        let (name, value) = hl
+            .split_once(':')
+            .ok_or_else(|| bad(400, format!("malformed header '{hl}'")))?;
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+    let req = Request { method, path, headers, body: Vec::new() };
+    let body_len = match req.header("content-length") {
+        None => 0,
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| bad(400, format!("bad content-length '{v}'")))?,
+    };
+    if body_len > MAX_BODY_BYTES {
+        return Err(bad(413, format!("body of {body_len} bytes exceeds {MAX_BODY_BYTES}")));
+    }
+    let mut body = vec![0u8; body_len];
+    r.read_exact(&mut body)?;
+    Ok(Some(Request { body, ..req }))
+}
+
+/// A response to serialize: status + content type + body.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: String,
+}
+
+impl Response {
+    pub fn json(status: u16, body: String) -> Response {
+        Response { status, content_type: "application/json", body }
+    }
+
+    pub fn text(status: u16, body: String) -> Response {
+        Response { status, content_type: "text/plain; charset=utf-8", body }
+    }
+}
+
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        505 => "HTTP Version Not Supported",
+        _ => "Unknown",
+    }
+}
+
+/// Serialize `resp` (always `Connection: close` — one request per
+/// connection keeps the pool accounting trivial).
+pub fn write_response<W: Write>(w: &mut W, resp: &Response) -> io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: close\r\n\r\n{}",
+        resp.status,
+        reason(resp.status),
+        resp.content_type,
+        resp.body.len(),
+        resp.body
+    )?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(raw: &str) -> Result<Option<Request>, HttpError> {
+        read_request(&mut Cursor::new(raw.as_bytes().to_vec()))
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let req = parse(
+            "POST /v1/generate HTTP/1.1\r\nHost: x\r\nContent-Length: 13\r\n\r\n{\"prompt\":[]}",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/generate");
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.header("HOST"), Some("x"), "lookup is case-insensitive");
+        assert_eq!(req.body, b"{\"prompt\":[]}");
+    }
+
+    #[test]
+    fn parses_get_without_body() {
+        let req = parse("GET /healthz HTTP/1.0\r\n\r\n").unwrap().unwrap();
+        assert_eq!(req.method, "GET");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn clean_eof_is_none() {
+        assert!(parse("").unwrap().is_none());
+    }
+
+    #[test]
+    fn malformed_inputs_get_4xx() {
+        for (raw, want) in [
+            ("GARBAGE\r\n\r\n", 400),
+            ("GET /x HTTP/1.1\r\nno-colon-here\r\n\r\n", 400),
+            ("GET /x HTTP/1.1\r\nContent-Length: nope\r\n\r\n", 400),
+            ("GET /x HTTP/2.0\r\n\r\n", 505),
+            (
+                &format!("GET /x HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1),
+                413,
+            ),
+        ] {
+            match parse(raw) {
+                Err(HttpError::Bad { status, .. }) => assert_eq!(status, want, "{raw:?}"),
+                other => panic!("{raw:?} should be refused, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_header_block_is_431() {
+        let raw = format!("GET /x HTTP/1.1\r\nbig: {}\r\n\r\n", "a".repeat(MAX_HEADER_BYTES));
+        match parse(&raw) {
+            Err(HttpError::Bad { status, .. }) => assert_eq!(status, 431),
+            other => panic!("expected 431, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_body_is_io_error() {
+        let raw = "POST /x HTTP/1.1\r\nContent-Length: 10\r\n\r\nshort";
+        assert!(matches!(parse(raw), Err(HttpError::Io(_))));
+    }
+
+    #[test]
+    fn response_wire_format() {
+        let mut out = Vec::new();
+        write_response(&mut out, &Response::json(200, "{\"ok\":true}".into())).unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 200 OK\r\n"), "{s}");
+        assert!(s.contains("content-length: 11\r\n"), "{s}");
+        assert!(s.contains("connection: close\r\n"), "{s}");
+        assert!(s.ends_with("\r\n\r\n{\"ok\":true}"), "{s}");
+    }
+}

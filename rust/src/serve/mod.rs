@@ -1,0 +1,275 @@
+//! `mase serve` — an HTTP inference service over the CPU decode engine
+//! (PR 9). Three sub-modules, strictly layered:
+//!
+//!  * [`http`]: hand-rolled HTTP/1.1 request reader / response writer on
+//!    `std::net` (offline vendored environment — no tokio/axum/hyper);
+//!  * [`protocol`]: JSON request validation and response rendering
+//!    through the depth-limited [`crate::util::json`] parser;
+//!  * [`scheduler`]: the continuous-batching core — a lane-partitioned
+//!    [`crate::runtime::decode::Decoder`] group that admits and retires
+//!    requests *between* position steps ([`BatchEngine`]), a bounded
+//!    FIFO [`RequestQueue`] with 429/503 backpressure, and the
+//!    single-threaded [`run_scheduler`] loop.
+//!
+//! This module is the assembly: route dispatch ([`handle_request`]) and
+//! the blocking [`serve`] entry point `mase serve` calls — one listener,
+//! a small pool of connection-handler threads, one scheduler thread.
+//!
+//! Routes: `POST /v1/generate` (decode), `GET /healthz` (static service
+//! facts), `GET /metrics` (the [`TraceSummary`] rendering of the
+//! `serve/*` spans and counters).
+//!
+//! Determinism contract: given a fixed seed and a fixed admission
+//! order, the tokens served are bit-identical to running each request
+//! alone through [`crate::runtime::decode::Decoder::generate`] — see
+//! the `scheduler` module doc for the lane argument, and
+//! `tests/serve_batching.rs` for the assertion.
+//!
+//! Shutdown: the process has no signal handler (no `libc` in the
+//! vendored set); SIGTERM terminates it via the default disposition,
+//! which is fine for a `connection: close` service with no durable
+//! state. The CI smoke test drives exactly that path.
+
+pub mod http;
+pub mod protocol;
+pub mod scheduler;
+
+pub use protocol::{GenRequest, Reply, ServeError, ServeInfo};
+pub use scheduler::{run_scheduler, BatchEngine, Completion, RequestQueue, ServeConfig};
+
+use crate::obs::{Registry, TraceSummary};
+use anyhow::{Context, Result};
+use std::io::{BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+/// Everything [`serve`] needs beyond the model itself.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Port to bind on 127.0.0.1 (0 = ephemeral, printed on stdout).
+    pub port: u16,
+    /// Connection-handler threads (each owns one connection at a time).
+    pub http_workers: usize,
+    pub cfg: ServeConfig,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions { port: 0, http_workers: 4, cfg: ServeConfig::default() }
+    }
+}
+
+/// Dispatch one parsed request. Pure request → response (no I/O), so
+/// the unit tests cover routing without sockets.
+pub fn handle_request(
+    req: &http::Request,
+    queue: &RequestQueue,
+    reg: &Registry,
+    info: &ServeInfo,
+    default_max_tokens: usize,
+    reply_timeout: Duration,
+) -> http::Response {
+    reg.counter("serve/http", "requests", 1);
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => http::Response::json(200, protocol::render_health(info)),
+        ("GET", "/metrics") => {
+            let body = TraceSummary::from_registry(reg).render();
+            let body = if body.is_empty() {
+                "== trace summary ==\n(no events)\n".to_string()
+            } else {
+                body
+            };
+            http::Response::text(200, body)
+        }
+        ("POST", "/v1/generate") => {
+            let body = match std::str::from_utf8(&req.body) {
+                Ok(s) => s,
+                Err(_) => {
+                    let e = ServeError::BadRequest("body is not valid UTF-8".into());
+                    return http::Response::json(e.status(), protocol::render_error(&e));
+                }
+            };
+            let gen = match protocol::parse_generate(body, info, default_max_tokens) {
+                Ok(g) => g,
+                Err(e) => return http::Response::json(e.status(), protocol::render_error(&e)),
+            };
+            let rx = match queue.submit(gen) {
+                Ok(rx) => rx,
+                Err(e) => {
+                    if matches!(e, ServeError::QueueFull { .. }) {
+                        reg.counter("serve/http", "queue_full_429", 1);
+                    }
+                    return http::Response::json(e.status(), protocol::render_error(&e));
+                }
+            };
+            match rx.recv_timeout(reply_timeout) {
+                Ok(Ok(reply)) => http::Response::json(200, protocol::render_reply(info, &reply)),
+                Ok(Err(e)) => http::Response::json(e.status(), protocol::render_error(&e)),
+                Err(_) => {
+                    let e = ServeError::Internal("timed out waiting for the scheduler".into());
+                    http::Response::json(e.status(), protocol::render_error(&e))
+                }
+            }
+        }
+        (_, "/v1/generate") | (_, "/healthz") | (_, "/metrics") => http::Response::json(
+            405,
+            protocol::render_status_error(405, &format!("method {} not allowed here", req.method)),
+        ),
+        (_, p) => http::Response::json(
+            404,
+            protocol::render_status_error(404, &format!("no route for '{p}'")),
+        ),
+    }
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    queue: &RequestQueue,
+    reg: &Registry,
+    info: &ServeInfo,
+    default_max_tokens: usize,
+    reply_timeout: Duration,
+) {
+    // socket timeouts bound a stalled client; the reply wait is bounded
+    // separately, so give the write side the same generous ceiling
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+    let _ = stream.set_write_timeout(Some(reply_timeout + Duration::from_secs(10)));
+    let mut reader = BufReader::new(stream);
+    let resp = match http::read_request(&mut reader) {
+        Ok(Some(req)) => handle_request(&req, queue, reg, info, default_max_tokens, reply_timeout),
+        Ok(None) => return, // client connected and went away
+        Err(http::HttpError::Bad { status, msg }) => {
+            http::Response::json(status, protocol::render_status_error(status, &msg))
+        }
+        Err(http::HttpError::Io(_)) => return, // transport died; nothing to say
+    };
+    let mut stream = reader.into_inner();
+    let _ = http::write_response(&mut stream, &resp);
+}
+
+/// Run the service until the process is terminated: bind, print the
+/// address (stdout, flushed — the CI smoke test parses it), then serve.
+///
+/// Threads: `http_workers` connection handlers all blocking in
+/// `accept()` on the shared listener, plus one scheduler thread driving
+/// the [`BatchEngine`]. Handler threads never touch the engine — they
+/// talk to the scheduler only through the [`RequestQueue`] and each
+/// request's reply channel, which is what makes the decode path
+/// single-threaded and deterministic.
+pub fn serve(
+    engine: &mut BatchEngine,
+    info: &ServeInfo,
+    opts: &ServeOptions,
+    reg: &Registry,
+) -> Result<()> {
+    let listener = TcpListener::bind(("127.0.0.1", opts.port))
+        .with_context(|| format!("binding 127.0.0.1:{}", opts.port))?;
+    let addr = listener.local_addr()?;
+    let queue = RequestQueue::new(opts.cfg.queue_cap, opts.cfg.queue_timeout_ms);
+    let default_max_tokens = opts.cfg.default_max_tokens;
+    // admitted work is bounded (seq_len positions/lane), so a reply not
+    // arriving within queue-timeout + a wide decode allowance is a bug
+    let reply_timeout = Duration::from_millis(opts.cfg.queue_timeout_ms) + Duration::from_secs(120);
+    println!(
+        "mase serve: listening on http://{addr} (model {}, fmt {}, {} lanes x width {})",
+        info.model, info.fmt, info.lanes, info.width
+    );
+    std::io::stdout().flush().ok();
+    std::thread::scope(|s| {
+        s.spawn(|| run_scheduler(engine, &queue, reg));
+        for _ in 0..opts.http_workers.max(1) {
+            s.spawn(|| loop {
+                match listener.accept() {
+                    Ok((stream, _)) => handle_connection(
+                        stream,
+                        &queue,
+                        reg,
+                        info,
+                        default_max_tokens,
+                        reply_timeout,
+                    ),
+                    Err(_) => std::thread::sleep(Duration::from_millis(10)),
+                }
+            });
+        }
+    });
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn info() -> ServeInfo {
+        ServeInfo {
+            model: "toy-lm".into(),
+            fmt: "fp32".into(),
+            bits: 32.0,
+            vocab: 512,
+            seq_len: 32,
+            lanes: 2,
+            width: 1,
+        }
+    }
+
+    fn get(path: &str) -> http::Request {
+        http::Request {
+            method: "GET".into(),
+            path: path.into(),
+            headers: vec![],
+            body: vec![],
+        }
+    }
+
+    #[test]
+    fn routes_health_and_metrics() {
+        let q = RequestQueue::new(2, 100);
+        let reg = Registry::new();
+        reg.counter("serve/scheduler", "steps", 3);
+        let r = handle_request(&get("/healthz"), &q, &reg, &info(), 8, Duration::from_secs(1));
+        assert_eq!(r.status, 200);
+        assert!(r.body.contains("\"status\":\"ok\""), "{}", r.body);
+        let r = handle_request(&get("/metrics"), &q, &reg, &info(), 8, Duration::from_secs(1));
+        assert_eq!(r.status, 200);
+        assert!(r.body.contains("trace summary"), "{}", r.body);
+        assert!(r.body.contains("serve/scheduler"), "{}", r.body);
+    }
+
+    #[test]
+    fn unknown_route_is_404_and_bad_method_is_405() {
+        let q = RequestQueue::new(2, 100);
+        let reg = Registry::none();
+        let r = handle_request(&get("/nope"), &q, reg, &info(), 8, Duration::from_secs(1));
+        assert_eq!(r.status, 404);
+        assert!(r.body.contains("\"status\":404"), "{}", r.body);
+        let r = handle_request(&get("/v1/generate"), &q, reg, &info(), 8, Duration::from_secs(1));
+        assert_eq!(r.status, 405);
+        assert!(r.body.contains("\"status\":405"), "{}", r.body);
+    }
+
+    #[test]
+    fn bad_body_is_400_and_full_queue_is_429() {
+        let q = RequestQueue::new(1, 100);
+        let reg = Registry::new();
+        let post = |body: &str| http::Request {
+            method: "POST".into(),
+            path: "/v1/generate".into(),
+            headers: vec![],
+            body: body.as_bytes().to_vec(),
+        };
+        let r = handle_request(&post("{oops"), &q, &reg, &info(), 8, Duration::from_secs(1));
+        assert_eq!(r.status, 400);
+        // fill the queue directly, then the handler's submit must 429
+        q.submit(GenRequest { prompt: vec![1], max_tokens: 1 }).unwrap();
+        let r = handle_request(
+            &post(r#"{"prompt": [1]}"#),
+            &q,
+            &reg,
+            &info(),
+            8,
+            Duration::from_secs(1),
+        );
+        assert_eq!(r.status, 429);
+        assert_eq!(reg.counter_total("serve/http", "queue_full_429"), 1);
+    }
+}

@@ -1,0 +1,307 @@
+//! Wire protocol for `mase serve`: JSON request parsing/validation and
+//! response rendering through [`crate::util::json`] (no `serde` in this
+//! offline environment — the depth-limited parser there is the one
+//! security-relevant piece, since this module decodes network input).
+//!
+//! `POST /v1/generate` body:
+//!
+//! ```json
+//! {"prompt": [12, 407, 3], "max_tokens": 8}
+//! ```
+//!
+//! or, for clients that don't want to pick token ids by hand, a
+//! deterministic prompt sampled from the Markov eval corpus:
+//!
+//! ```json
+//! {"prompt_len": 4, "stream": 11, "max_tokens": 8}
+//! ```
+//!
+//! Success response (`200`):
+//!
+//! ```json
+//! {"id":3,"model":"toy-lm","fmt":"mxint","prompt_len":4,
+//!  "tokens":[17,211,5,90],"latency_ms":12}
+//! ```
+//!
+//! Errors render as `{"error": "...", "status": N}` with the matching
+//! HTTP status: `400` malformed/invalid body, `429` bounded queue full,
+//! `503` queued past the admission deadline, `500` internal.
+
+use crate::data::MarkovCorpus;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Static facts about the served model, threaded into parsing (bounds
+/// checks) and rendering (response metadata).
+#[derive(Debug, Clone)]
+pub struct ServeInfo {
+    pub model: String,
+    pub fmt: String,
+    pub bits: f32,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub lanes: usize,
+    /// Decoder rows per request lane (16 for block formats, 1 else).
+    pub width: usize,
+}
+
+/// A validated generation request: token-id prompt + decode budget.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GenRequest {
+    pub prompt: Vec<i32>,
+    pub max_tokens: usize,
+}
+
+/// Scheduler-side completion handed back to the HTTP layer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Reply {
+    pub id: u64,
+    pub prompt_len: usize,
+    pub tokens: Vec<i32>,
+    /// Milliseconds from enqueue to completion.
+    pub latency_ms: u64,
+}
+
+/// Service-level failures, each with a fixed HTTP status.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// Malformed JSON or a request violating the model bounds (400).
+    BadRequest(String),
+    /// The bounded FIFO request queue is at capacity (429).
+    QueueFull { cap: usize },
+    /// Queued longer than the admission deadline (503).
+    QueueTimeout { waited_ms: u64 },
+    /// Scheduler/engine failure (500).
+    Internal(String),
+}
+
+impl ServeError {
+    pub fn status(&self) -> u16 {
+        match self {
+            ServeError::BadRequest(_) => 400,
+            ServeError::QueueFull { .. } => 429,
+            ServeError::QueueTimeout { .. } => 503,
+            ServeError::Internal(_) => 500,
+        }
+    }
+
+    pub fn message(&self) -> String {
+        match self {
+            ServeError::BadRequest(m) => m.clone(),
+            ServeError::QueueFull { cap } => {
+                format!("request queue full ({cap} waiting); retry later")
+            }
+            ServeError::QueueTimeout { waited_ms } => {
+                format!("queued {waited_ms} ms without a free decode lane; retry later")
+            }
+            ServeError::Internal(m) => m.clone(),
+        }
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} {}", self.status(), self.message())
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+fn bad(msg: impl Into<String>) -> ServeError {
+    ServeError::BadRequest(msg.into())
+}
+
+/// Parse + validate a `/v1/generate` body against the served model.
+pub fn parse_generate(
+    body: &str,
+    info: &ServeInfo,
+    default_max_tokens: usize,
+) -> Result<GenRequest, ServeError> {
+    let j = Json::parse(body).map_err(|e| bad(e.to_string()))?;
+    let obj = j.as_obj().ok_or_else(|| bad("request body must be a JSON object"))?;
+    for key in obj.keys() {
+        if !matches!(key.as_str(), "prompt" | "prompt_len" | "stream" | "max_tokens") {
+            return Err(bad(format!(
+                "unknown field '{key}' (expected prompt | prompt_len | stream | max_tokens)"
+            )));
+        }
+    }
+    let max_tokens = match obj.get("max_tokens") {
+        None => default_max_tokens,
+        Some(v) => {
+            let n = v.as_f64().ok_or_else(|| bad("max_tokens must be a number"))?;
+            if n < 1.0 || n.fract() != 0.0 {
+                return Err(bad("max_tokens must be a positive integer"));
+            }
+            n as usize
+        }
+    };
+    let prompt: Vec<i32> = match (obj.get("prompt"), obj.get("prompt_len")) {
+        (Some(_), Some(_)) => return Err(bad("give either prompt or prompt_len, not both")),
+        (Some(p), None) => {
+            let arr = p.as_arr().ok_or_else(|| bad("prompt must be an array of token ids"))?;
+            let mut toks = Vec::with_capacity(arr.len());
+            for (i, t) in arr.iter().enumerate() {
+                let n = t.as_f64().ok_or_else(|| bad(format!("prompt[{i}] is not a number")))?;
+                if n.fract() != 0.0 || n < 0.0 || n >= info.vocab as f64 {
+                    return Err(bad(format!(
+                        "prompt[{i}] = {n} outside token range 0..{}",
+                        info.vocab
+                    )));
+                }
+                toks.push(n as i32);
+            }
+            toks
+        }
+        (None, Some(l)) => {
+            let len = l.as_f64().ok_or_else(|| bad("prompt_len must be a number"))? as usize;
+            if len < 1 || len > info.seq_len {
+                return Err(bad(format!("prompt_len outside 1..={}", info.seq_len)));
+            }
+            let stream = obj
+                .get("stream")
+                .map(|s| s.as_f64().ok_or_else(|| bad("stream must be a number")))
+                .transpose()?
+                .unwrap_or(0.0) as u64;
+            // deterministic prompt from the shared eval corpus: the same
+            // (stream, prompt_len) always yields the same tokens
+            MarkovCorpus::new(7).batch(stream, 1, len)
+        }
+        (None, None) => return Err(bad("missing prompt (or prompt_len + stream)")),
+    };
+    if prompt.is_empty() {
+        return Err(bad("prompt must hold at least one token"));
+    }
+    if prompt.len() + max_tokens > info.seq_len {
+        return Err(bad(format!(
+            "prompt {} + max_tokens {max_tokens} exceeds model seq_len {}",
+            prompt.len(),
+            info.seq_len
+        )));
+    }
+    Ok(GenRequest { prompt, max_tokens })
+}
+
+/// Render a completed generation as the `200` response body.
+pub fn render_reply(info: &ServeInfo, r: &Reply) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("id".to_string(), Json::Num(r.id as f64));
+    m.insert("model".to_string(), Json::Str(info.model.clone()));
+    m.insert("fmt".to_string(), Json::Str(info.fmt.clone()));
+    m.insert("prompt_len".to_string(), Json::Num(r.prompt_len as f64));
+    m.insert(
+        "tokens".to_string(),
+        Json::Arr(r.tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
+    );
+    m.insert("latency_ms".to_string(), Json::Num(r.latency_ms as f64));
+    format!("{}\n", Json::Obj(m))
+}
+
+/// Render a [`ServeError`] as its JSON error body.
+pub fn render_error(e: &ServeError) -> String {
+    render_status_error(e.status(), &e.message())
+}
+
+/// Error body for statuses with no [`ServeError`] variant (404, 405,
+/// and the HTTP-layer 4xx/5xx refusals).
+pub fn render_status_error(status: u16, msg: &str) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("error".to_string(), Json::Str(msg.to_string()));
+    m.insert("status".to_string(), Json::Num(status as f64));
+    format!("{}\n", Json::Obj(m))
+}
+
+/// The `/healthz` body: static service facts, no engine state.
+pub fn render_health(info: &ServeInfo) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("status".to_string(), Json::Str("ok".to_string()));
+    m.insert("model".to_string(), Json::Str(info.model.clone()));
+    m.insert("fmt".to_string(), Json::Str(info.fmt.clone()));
+    m.insert("bits".to_string(), Json::Num(info.bits as f64));
+    m.insert("seq_len".to_string(), Json::Num(info.seq_len as f64));
+    m.insert("lanes".to_string(), Json::Num(info.lanes as f64));
+    m.insert("width".to_string(), Json::Num(info.width as f64));
+    format!("{}\n", Json::Obj(m))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn info() -> ServeInfo {
+        ServeInfo {
+            model: "toy-lm".into(),
+            fmt: "mxint".into(),
+            bits: 7.0,
+            vocab: 512,
+            seq_len: 32,
+            lanes: 4,
+            width: 16,
+        }
+    }
+
+    #[test]
+    fn parses_explicit_prompt() {
+        let r = parse_generate(r#"{"prompt": [1, 2, 511], "max_tokens": 3}"#, &info(), 8).unwrap();
+        assert_eq!(r, GenRequest { prompt: vec![1, 2, 511], max_tokens: 3 });
+    }
+
+    #[test]
+    fn default_max_tokens_applies() {
+        let r = parse_generate(r#"{"prompt": [5]}"#, &info(), 6).unwrap();
+        assert_eq!(r.max_tokens, 6);
+    }
+
+    #[test]
+    fn corpus_prompt_is_deterministic() {
+        let a = parse_generate(r#"{"prompt_len": 4, "stream": 11}"#, &info(), 8).unwrap();
+        let b = parse_generate(r#"{"prompt_len": 4, "stream": 11}"#, &info(), 8).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.prompt.len(), 4);
+        assert!(a.prompt.iter().all(|&t| (0..512).contains(&t)));
+        let c = parse_generate(r#"{"prompt_len": 4, "stream": 12}"#, &info(), 8).unwrap();
+        assert_ne!(a.prompt, c.prompt, "different streams give different prompts");
+    }
+
+    #[test]
+    fn rejects_out_of_contract_bodies() {
+        let i = info();
+        for (body, why) in [
+            ("[1,2]", "not an object"),
+            ("{\"prompt\": [1,2,", "truncated json"),
+            (r#"{"prompt": []}"#, "empty prompt"),
+            (r#"{"prompt": [512]}"#, "token out of vocab"),
+            (r#"{"prompt": [-1]}"#, "negative token"),
+            (r#"{"prompt": [1.5]}"#, "fractional token"),
+            (r#"{"prompt": [1], "max_tokens": 0}"#, "zero budget"),
+            (r#"{"prompt": [1], "max_tokens": 32}"#, "exceeds seq_len"),
+            (r#"{"prompt": [1], "prompt_len": 2}"#, "both prompt forms"),
+            (r#"{"prompt": [1], "tokens": 2}"#, "unknown field"),
+            (r#"{}"#, "no prompt at all"),
+        ] {
+            let e = parse_generate(body, &i, 8).unwrap_err();
+            assert_eq!(e.status(), 400, "{why}: {e}");
+        }
+    }
+
+    #[test]
+    fn reply_renders_compact_json() {
+        let body = render_reply(
+            &info(),
+            &Reply { id: 3, prompt_len: 2, tokens: vec![7, 8], latency_ms: 12 },
+        );
+        let j = Json::parse(body.trim()).unwrap();
+        assert_eq!(j.get("id").unwrap().as_usize(), Some(3));
+        assert_eq!(j.at(&["tokens", "1"]).unwrap().as_f64(), Some(8.0));
+        assert_eq!(j.get("model").unwrap().as_str(), Some("toy-lm"));
+    }
+
+    #[test]
+    fn errors_carry_their_status() {
+        assert_eq!(ServeError::QueueFull { cap: 4 }.status(), 429);
+        assert_eq!(ServeError::QueueTimeout { waited_ms: 9 }.status(), 503);
+        let body = render_error(&ServeError::QueueFull { cap: 4 });
+        let j = Json::parse(body.trim()).unwrap();
+        assert_eq!(j.get("status").unwrap().as_usize(), Some(429));
+    }
+}

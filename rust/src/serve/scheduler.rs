@@ -1,0 +1,507 @@
+//! Continuous-batching decode scheduler: the headline piece of `mase
+//! serve` (PR 9).
+//!
+//! ## Lanes, and why batched == sequential bitwise
+//!
+//! A [`BatchEngine`] owns one long-lived [`Decoder`] whose group is
+//! carved into `lanes` fixed **lanes** of `width` rows each. `width` is
+//! the quantizer block height (16) for block formats and 1 for
+//! element-wise formats, so lanes are 16-aligned and a `(16, 2)`
+//! quantizer block never spans two lanes. Within a lane every row feeds
+//! the *same* token: identical rows quantize identically (a block's
+//! shared exponent is the max over rows it already contains), layer norm
+//! / GELU / embedding are per-row, every packed-GEMM output element
+//! accumulates only over `k`, and attention reads only the queried
+//! slot's cached rows. A lane is therefore bit-for-bit the group a
+//! fresh `width`-row [`Decoder::generate`] call runs on the same prompt
+//! — *regardless of what the other lanes are doing*. That independence
+//! is the whole determinism contract: given a fixed seed and admission
+//! order, continuously-batched tokens equal per-request sequential
+//! decodes (asserted by `tests/serve_batching.rs` and mirrored in
+//! `scripts/verify_serve_protocol.py`).
+//!
+//! Prompts are fed one token per tick through the same cached step path
+//! (prefill-as-decode): by the PR 7 stacking lemma this is bitwise equal
+//! to a stacked prefill, and it lets a request join a *live* group
+//! between steps without recomputing anyone else's context.
+//!
+//! ## Tick state machine
+//!
+//! ```text
+//! step(): compact cache → evict idle lanes → build token row
+//!         → Decoder::decode_step → harvest argmax / retire lanes
+//! ```
+//!
+//! A lane is `free` or `live{fed}`; a live lane feeds `prompt[fed]`
+//! while `fed < prompt_len`, then its own greedy continuation; after
+//! `prompt_len + max_tokens` fed positions it retires (same position
+//! count as [`Decoder::generate`], whose final argmax is likewise
+//! computed and discarded). Retirement and admission evict the lane's
+//! slots ([`Decoder::evict`]); idle lanes feed token 0 and are
+//! re-evicted every tick so each costs exactly one score dot per
+//! (slot, head, layer). [`Decoder::compact`] runs every tick, so cache
+//! memory and the absolute position index stay bounded by the longest
+//! live context — the engine can run forever.
+//!
+//! ## Queue + scheduler loop
+//!
+//! [`RequestQueue`] is the bounded FIFO between HTTP handler threads and
+//! the single scheduler thread ([`run_scheduler`]): `submit` fails fast
+//! with 429 at capacity, the loop expires entries older than the
+//! admission deadline with 503, admits in FIFO order whenever lanes are
+//! free, and steps the engine. All tracing happens on the scheduler
+//! thread: one `serve/request` span per completion plus admission /
+//! step / retire / eviction counters and per-step [`DecodeStats`]
+//! deltas under `serve/engine` — which is what `/metrics` renders.
+
+use crate::formats::{FormatKind, BLOCK_SHAPE};
+use crate::frontend::ModelMeta;
+use crate::ir::Graph;
+use crate::obs::Registry;
+use crate::runtime::decode::{DecodeStats, Decoder};
+use crate::runtime::interp::{argmax, CpuBackend};
+use anyhow::{anyhow, ensure, Result};
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::protocol::{GenRequest, Reply, ServeError};
+
+/// Scheduler knobs (`mase serve` flags map onto these).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Concurrent request lanes (decoder group = `lanes * width`).
+    pub lanes: usize,
+    /// Bounded FIFO capacity; `submit` beyond this is a 429.
+    pub queue_cap: usize,
+    /// Queued longer than this without a free lane → 503.
+    pub queue_timeout_ms: u64,
+    /// Decode budget when a request omits `max_tokens`.
+    pub default_max_tokens: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { lanes: 4, queue_cap: 32, queue_timeout_ms: 2000, default_max_tokens: 8 }
+    }
+}
+
+/// One in-flight request occupying a lane.
+#[derive(Debug)]
+struct Lane {
+    id: u64,
+    prompt: Vec<i32>,
+    max_tokens: usize,
+    /// Tokens fed so far (prompt positions, then generated ones).
+    fed: usize,
+    generated: Vec<i32>,
+    /// Lane-representative logits per fed position (tests only).
+    step_logits: Vec<Vec<f32>>,
+}
+
+/// A finished request: its generated tokens (and, when
+/// [`BatchEngine::keep_logits`] is set, per-position logits for the
+/// bitwise parity assertions).
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    pub prompt_len: usize,
+    pub tokens: Vec<i32>,
+    pub step_logits: Vec<Vec<f32>>,
+}
+
+/// The continuous-batching core: deterministic, synchronous, directly
+/// drivable by tests — the scheduler thread is just a thin loop over
+/// [`BatchEngine::admit`] / [`BatchEngine::step`].
+pub struct BatchEngine<'a> {
+    dec: Decoder<'a>,
+    width: usize,
+    vocab: usize,
+    seq_len: usize,
+    lanes: Vec<Option<Lane>>,
+    /// Record per-position lane logits into completions (parity tests).
+    pub keep_logits: bool,
+    /// Slot-steps spent on idle lanes (each costs exactly one score dot
+    /// per head and layer — the closed-form dots accounting needs it).
+    pub idle_slot_steps: u64,
+    /// Slots evicted so far (admission + retirement + idle re-eviction).
+    pub evicted_slots: u64,
+    ticks: u64,
+}
+
+impl<'a> BatchEngine<'a> {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        backend: &CpuBackend,
+        graph: &'a Graph,
+        meta: &'a ModelMeta,
+        weights: &'a [f32],
+        fmt_tag: &str,
+        qcfg: &'a [f32],
+        lanes: usize,
+    ) -> Result<BatchEngine<'a>> {
+        ensure!(lanes >= 1, "serve needs at least one lane");
+        let fmt = FormatKind::from_name(fmt_tag)
+            .ok_or_else(|| anyhow!("serve: unknown format tag '{fmt_tag}'"))?;
+        // block formats share exponents across 16-row blocks: a request
+        // must own whole blocks or co-tenants would perturb its bits
+        let width = if fmt.is_block_format() { BLOCK_SHAPE.0 } else { 1 };
+        let dec = Decoder::new(backend, graph, meta, weights, fmt_tag, qcfg, lanes * width)?;
+        Ok(BatchEngine {
+            dec,
+            width,
+            vocab: meta.vocab,
+            seq_len: meta.seq_len,
+            lanes: (0..lanes).map(|_| None).collect(),
+            keep_logits: false,
+            idle_slot_steps: 0,
+            evicted_slots: 0,
+            ticks: 0,
+        })
+    }
+
+    /// Decoder rows per lane (16 for block formats, 1 element-wise).
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    pub fn free_lanes(&self) -> usize {
+        self.lanes.iter().filter(|l| l.is_none()).count()
+    }
+
+    pub fn active(&self) -> usize {
+        self.lanes.len() - self.free_lanes()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.active() == 0
+    }
+
+    pub fn ticks(&self) -> u64 {
+        self.ticks
+    }
+
+    /// Counted decode work so far (the underlying [`Decoder`]'s stats).
+    pub fn stats(&self) -> DecodeStats {
+        self.dec.stats
+    }
+
+    fn evict_lane(&mut self, lane: usize) -> Result<()> {
+        for s in lane * self.width..(lane + 1) * self.width {
+            self.dec.evict(s)?;
+        }
+        self.evicted_slots += self.width as u64;
+        Ok(())
+    }
+
+    /// Seat a request in a free lane (between steps — never mid-step).
+    /// Errors are caller bugs (no free lane) or contract violations the
+    /// protocol layer should have rejected.
+    pub fn admit(&mut self, id: u64, prompt: Vec<i32>, max_tokens: usize) -> Result<usize> {
+        let lane = self
+            .lanes
+            .iter()
+            .position(|l| l.is_none())
+            .ok_or_else(|| anyhow!("admit with no free lane"))?;
+        ensure!(!prompt.is_empty(), "admit: empty prompt");
+        ensure!(max_tokens >= 1, "admit: zero decode budget");
+        ensure!(
+            prompt.len() + max_tokens <= self.seq_len,
+            "admit: prompt {} + {max_tokens} exceeds seq_len {}",
+            prompt.len(),
+            self.seq_len
+        );
+        self.evict_lane(lane)?;
+        self.lanes[lane] = Some(Lane {
+            id,
+            prompt,
+            max_tokens,
+            fed: 0,
+            generated: Vec::new(),
+            step_logits: Vec::new(),
+        });
+        Ok(lane)
+    }
+
+    /// One scheduler tick: step every live lane one position, harvest
+    /// greedy continuations, retire finished requests. No-op when idle.
+    pub fn step(&mut self) -> Result<Vec<Completion>> {
+        if self.is_idle() {
+            return Ok(Vec::new());
+        }
+        self.dec.compact();
+        let group = self.lanes.len() * self.width;
+        let mut toks = vec![0i32; group];
+        for lane in 0..self.lanes.len() {
+            match &self.lanes[lane] {
+                Some(l) => {
+                    let t = if l.fed < l.prompt.len() {
+                        l.prompt[l.fed]
+                    } else {
+                        l.generated[l.fed - l.prompt.len()]
+                    };
+                    toks[lane * self.width..(lane + 1) * self.width].fill(t);
+                }
+                None => {
+                    // keep the idle lane's context at one position so its
+                    // cost stays O(1) per tick and its rows hold no state
+                    self.evict_lane(lane)?;
+                    self.idle_slot_steps += self.width as u64;
+                }
+            }
+        }
+        let logits = self.dec.decode_step(&toks)?;
+        let mut done = Vec::new();
+        for lane in 0..self.lanes.len() {
+            let Some(l) = self.lanes[lane].as_mut() else { continue };
+            let row = lane * self.width;
+            let lg = &logits[row * self.vocab..(row + 1) * self.vocab];
+            l.fed += 1;
+            if self.keep_logits {
+                l.step_logits.push(lg.to_vec());
+            }
+            if l.fed >= l.prompt.len() {
+                // the argmax after the last prompt token is the first
+                // generated one; the one after the last budgeted token is
+                // computed and discarded, exactly like Decoder::generate
+                if l.fed - l.prompt.len() < l.max_tokens {
+                    l.generated.push(argmax(lg) as i32);
+                }
+                if l.fed == l.prompt.len() + l.max_tokens {
+                    let l = self.lanes[lane].take().unwrap();
+                    self.evict_lane(lane)?;
+                    done.push(Completion {
+                        id: l.id,
+                        prompt_len: l.prompt.len(),
+                        tokens: l.generated,
+                        step_logits: l.step_logits,
+                    });
+                }
+            }
+        }
+        self.ticks += 1;
+        Ok(done)
+    }
+}
+
+struct Pending {
+    id: u64,
+    req: GenRequest,
+    enqueued: Instant,
+    tx: mpsc::Sender<Result<Reply, ServeError>>,
+}
+
+struct QueueInner {
+    q: VecDeque<Pending>,
+    shutdown: bool,
+}
+
+/// The bounded FIFO between HTTP handler threads and the scheduler.
+pub struct RequestQueue {
+    inner: Mutex<QueueInner>,
+    cv: Condvar,
+    cap: usize,
+    timeout: Duration,
+    next_id: AtomicU64,
+}
+
+impl RequestQueue {
+    pub fn new(cap: usize, timeout_ms: u64) -> RequestQueue {
+        RequestQueue {
+            inner: Mutex::new(QueueInner { q: VecDeque::new(), shutdown: false }),
+            cv: Condvar::new(),
+            cap: cap.max(1),
+            timeout: Duration::from_millis(timeout_ms),
+            next_id: AtomicU64::new(0),
+        }
+    }
+
+    /// Enqueue a validated request. Fails fast with
+    /// [`ServeError::QueueFull`] (429) at capacity — in-flight work is
+    /// untouched. On success the receiver eventually yields the reply or
+    /// a scheduler-side error.
+    #[allow(clippy::type_complexity)]
+    pub fn submit(
+        &self,
+        req: GenRequest,
+    ) -> Result<mpsc::Receiver<Result<Reply, ServeError>>, ServeError> {
+        let mut g = self.inner.lock().unwrap();
+        if g.shutdown {
+            return Err(ServeError::Internal("server is shutting down".into()));
+        }
+        if g.q.len() >= self.cap {
+            return Err(ServeError::QueueFull { cap: self.cap });
+        }
+        let (tx, rx) = mpsc::channel();
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        g.q.push_back(Pending { id, req, enqueued: Instant::now(), tx });
+        drop(g);
+        self.cv.notify_one();
+        Ok(rx)
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Stop admitting; [`run_scheduler`] drains in-flight work and exits.
+    pub fn shutdown(&self) {
+        self.inner.lock().unwrap().shutdown = true;
+        self.cv.notify_all();
+    }
+}
+
+fn record_stats_delta(reg: &Registry, engine: &BatchEngine, last: &mut (DecodeStats, u64, u64)) {
+    if !reg.is_enabled() {
+        return;
+    }
+    let (s, idle, ev) = (engine.stats(), engine.idle_slot_steps, engine.evicted_slots);
+    reg.counter("serve/engine", "steps", s.steps - last.0.steps);
+    reg.counter(
+        "serve/engine",
+        "decode_score_dots",
+        s.decode_score_dots - last.0.decode_score_dots,
+    );
+    reg.counter("serve/engine", "idle_slot_steps", idle - last.1);
+    reg.counter("serve/engine", "evicted_slots", ev - last.2);
+    *last = (s, idle, ev);
+}
+
+/// The scheduler loop: admit → step → respond, single-threaded over the
+/// engine, until [`RequestQueue::shutdown`] and all lanes drain. All
+/// spans/counters are recorded here (one thread, deterministic counted
+/// work given a fixed admission order; wall-clock stays summary-only as
+/// everywhere in `obs`).
+pub fn run_scheduler(engine: &mut BatchEngine, queue: &RequestQueue, reg: &Registry) {
+    let mut waiters: BTreeMap<u64, (mpsc::Sender<Result<Reply, ServeError>>, Instant, usize)> =
+        BTreeMap::new();
+    let mut last = (DecodeStats::default(), 0u64, 0u64);
+    loop {
+        {
+            let mut g = queue.inner.lock().unwrap();
+            loop {
+                // expire from the front (FIFO ⇒ oldest first)
+                while let Some(p) = g.q.front() {
+                    if p.enqueued.elapsed() >= queue.timeout {
+                        let p = g.q.pop_front().unwrap();
+                        let waited = p.enqueued.elapsed().as_millis() as u64;
+                        let _ = p.tx.send(Err(ServeError::QueueTimeout { waited_ms: waited }));
+                        reg.counter("serve/scheduler", "queue_timeout_503", 1);
+                    } else {
+                        break;
+                    }
+                }
+                if engine.free_lanes() == 0 || g.q.is_empty() {
+                    break;
+                }
+                let p = g.q.pop_front().unwrap();
+                let prompt_len = p.req.prompt.len();
+                match engine.admit(p.id, p.req.prompt, p.req.max_tokens) {
+                    Ok(_) => {
+                        waiters.insert(p.id, (p.tx, p.enqueued, prompt_len));
+                        reg.counter("serve/scheduler", "admitted", 1);
+                    }
+                    Err(e) => {
+                        let _ = p.tx.send(Err(ServeError::Internal(e.to_string())));
+                    }
+                }
+            }
+            if engine.is_idle() {
+                if g.shutdown {
+                    break;
+                }
+                if g.q.is_empty() {
+                    // nothing to do: sleep until a submit (bounded so a
+                    // racing shutdown or a queued-then-expired entry is
+                    // still noticed promptly)
+                    let _ = queue.cv.wait_timeout(g, Duration::from_millis(50)).unwrap();
+                    continue;
+                }
+            }
+        }
+        match engine.step() {
+            Ok(done) => {
+                reg.counter("serve/scheduler", "steps", 1);
+                record_stats_delta(reg, engine, &mut last);
+                for c in done {
+                    reg.counter("serve/scheduler", "retired", 1);
+                    if let Some((tx, enqueued, prompt_len)) = waiters.remove(&c.id) {
+                        let latency_ms = enqueued.elapsed().as_millis() as u64;
+                        {
+                            let _span = reg
+                                .span("serve/request")
+                                .tag("id", c.id.to_string())
+                                .tag("prompt_len", prompt_len.to_string())
+                                .tag("tokens", c.tokens.len().to_string());
+                        }
+                        let _ = tx.send(Ok(Reply {
+                            id: c.id,
+                            prompt_len,
+                            tokens: c.tokens,
+                            latency_ms,
+                        }));
+                    }
+                }
+            }
+            Err(e) => {
+                // the engine is a deterministic state machine over
+                // validated inputs; failing here means a bug — fail every
+                // waiter loudly rather than serving silent garbage
+                let msg = format!("decode engine failed: {e:#}");
+                for (_, (tx, _, _)) in std::mem::take(&mut waiters) {
+                    let _ = tx.send(Err(ServeError::Internal(msg.clone())));
+                }
+                let mut g = queue.inner.lock().unwrap();
+                g.shutdown = true;
+                for p in g.q.drain(..) {
+                    let _ = p.tx.send(Err(ServeError::Internal(msg.clone())));
+                }
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queue_fails_fast_at_capacity() {
+        let q = RequestQueue::new(2, 1000);
+        let r1 = q.submit(GenRequest { prompt: vec![1], max_tokens: 1 });
+        let r2 = q.submit(GenRequest { prompt: vec![2], max_tokens: 1 });
+        assert!(r1.is_ok() && r2.is_ok());
+        match q.submit(GenRequest { prompt: vec![3], max_tokens: 1 }) {
+            Err(ServeError::QueueFull { cap }) => assert_eq!(cap, 2),
+            other => panic!("expected 429, got {other:?}"),
+        }
+        assert_eq!(q.len(), 2, "a rejected submit leaves the queue untouched");
+    }
+
+    #[test]
+    fn queue_rejects_after_shutdown() {
+        let q = RequestQueue::new(4, 1000);
+        q.shutdown();
+        assert!(matches!(
+            q.submit(GenRequest { prompt: vec![1], max_tokens: 1 }),
+            Err(ServeError::Internal(_))
+        ));
+    }
+
+    #[test]
+    fn queue_ids_are_fifo() {
+        let q = RequestQueue::new(4, 1000);
+        for t in 0..3 {
+            q.submit(GenRequest { prompt: vec![t], max_tokens: 1 }).unwrap();
+        }
+        let g = q.inner.lock().unwrap();
+        let ids: Vec<u64> = g.q.iter().map(|p| p.id).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+    }
+}

@@ -6,6 +6,12 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+/// Maximum container nesting the parser accepts. Deep enough for every
+/// artifact we produce (manifests nest ~4 levels), small enough that a
+/// hostile request body (`serve` parses network input with this parser)
+/// cannot blow the recursive-descent stack with `[[[[...`.
+pub const MAX_DEPTH: usize = 64;
+
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
     Null,
@@ -32,7 +38,7 @@ impl std::error::Error for JsonError {}
 
 impl Json {
     pub fn parse(s: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { b: s.as_bytes(), pos: 0 };
+        let mut p = Parser { b: s.as_bytes(), pos: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -99,6 +105,8 @@ impl Json {
 struct Parser<'a> {
     b: &'a [u8],
     pos: usize,
+    /// Current container nesting, bounded by [`MAX_DEPTH`].
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -148,12 +156,24 @@ impl<'a> Parser<'a> {
         }
     }
 
+    fn enter(&mut self) -> Result<(), JsonError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            // pos points at the opening bracket that crossed the limit
+            self.pos -= 1;
+            return Err(self.err(&format!("nesting deeper than {MAX_DEPTH} levels")));
+        }
+        Ok(())
+    }
+
     fn object(&mut self) -> Result<Json, JsonError> {
         self.expect(b'{')?;
+        self.enter()?;
         let mut m = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(m));
         }
         loop {
@@ -168,6 +188,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.pos += 1,
                 Some(b'}') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(m));
                 }
                 _ => return Err(self.err("expected ',' or '}'")),
@@ -177,10 +198,12 @@ impl<'a> Parser<'a> {
 
     fn array(&mut self) -> Result<Json, JsonError> {
         self.expect(b'[')?;
+        self.enter()?;
         let mut a = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(a));
         }
         loop {
@@ -190,6 +213,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.pos += 1,
                 Some(b']') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(a));
                 }
                 _ => return Err(self.err("expected ',' or ']'")),
@@ -370,6 +394,68 @@ mod tests {
             assert!(j.get("models").is_some());
             assert_eq!(j.at(&["block_shape", "0"]).unwrap().as_usize(), Some(16));
         }
+    }
+
+    #[test]
+    fn depth_limit_rejects_with_position() {
+        // exactly MAX_DEPTH nests parse; one more is rejected, and the
+        // error position points at the offending opening bracket.
+        let ok = format!("{}{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        assert!(Json::parse(&ok).is_ok());
+        let deep = format!("{}{}", "[".repeat(MAX_DEPTH + 1), "]".repeat(MAX_DEPTH + 1));
+        let e = Json::parse(&deep).unwrap_err();
+        assert_eq!(e.pos, MAX_DEPTH, "position of the bracket that crossed the limit");
+        assert!(e.msg.contains("nesting"), "{}", e.msg);
+        // mixed {"a":[{"a":[... nests two levels per repeat
+        let mixed =
+            format!("{}0{}", "{\"a\":[".repeat(MAX_DEPTH / 2 + 1), "]}".repeat(MAX_DEPTH / 2 + 1));
+        assert!(Json::parse(&mixed).is_err());
+        // depth is container nesting, not value count: wide stays fine
+        let wide = format!("[{}]", vec!["[0]"; 1000].join(","));
+        assert!(Json::parse(&wide).is_ok());
+    }
+
+    #[test]
+    fn depth_resets_between_siblings() {
+        // sibling containers each get the full budget — the counter must
+        // decrement on close, not only increment.
+        let one = format!("{}{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        let two = format!("[{one},{one}]");
+        assert!(Json::parse(&two).is_err(), "outer array adds one level");
+        let shallower = format!("{}{}", "[".repeat(MAX_DEPTH - 1), "]".repeat(MAX_DEPTH - 1));
+        let flat = format!("[{shallower},{shallower}]");
+        assert!(Json::parse(&flat).is_ok());
+    }
+
+    #[test]
+    fn hex_bit_pattern_round_trip() {
+        // the PR 2/8 convention: u64 values cross JSON as fixed-width
+        // 16-digit lowercase hex strings (never lossy f64 numbers).
+        // Parser and printer must preserve them byte-for-byte.
+        for v in [0u64, 1, 0xdead_beef_0123_4567, u64::MAX, 0x3ff0_0000_0000_0000] {
+            let src = format!("{{\"bits\":\"{v:016x}\"}}");
+            let j = Json::parse(&src).unwrap();
+            let s = j.get("bits").unwrap().as_str().unwrap();
+            assert_eq!(s.len(), 16);
+            assert_eq!(u64::from_str_radix(s, 16).unwrap(), v);
+            assert_eq!(j.to_string(), src, "printer preserves the fixed-width form");
+        }
+        // contrast: the same magnitude as a bare number would round
+        // through f64 and lose low bits — which is why the convention
+        // exists. (2^53 + 1 is not representable.)
+        let j = Json::parse("9007199254740993").unwrap();
+        assert_eq!(j.as_f64(), Some(9007199254740992.0));
+    }
+
+    #[test]
+    fn serializer_output_reparses_identically() {
+        // round-trip against the existing serializer on a serve-shaped
+        // body: nested objects, arrays of ints, strings with escapes.
+        let src = r#"{"max_tokens": 4, "prompt": [1, 2, 511], "tag": "a\"b\\c", "opts": {"deep": [[1], [2, [3]]], "on": true, "off": null}}"#;
+        let j = Json::parse(src).unwrap();
+        let printed = j.to_string();
+        assert_eq!(Json::parse(&printed).unwrap(), j);
+        assert_eq!(Json::parse(&printed).unwrap().to_string(), printed, "printing is a fixpoint");
     }
 
     #[test]

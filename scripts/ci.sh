@@ -15,6 +15,8 @@
 #                                # artifact-free emitted design
 #   scripts/ci.sh trace          # `mase trace` export smoke + traced e2e
 #                                # + JSONL schema validation (PR 8)
+#   scripts/ci.sh serve          # `mase serve` HTTP smoke: ephemeral
+#                                # port, raw-socket client, SIGTERM (PR 9)
 #   scripts/ci.sh fmt clippy     # any combination, run in order given
 #
 #   SKIP_LINTS=1 scripts/ci.sh   # `all` minus fmt/clippy/doc (e.g. a
@@ -28,9 +30,19 @@ set -euo pipefail
 cd "$(dirname "$0")/../rust"
 
 # smoke-stage scratch space, cleaned on ANY exit (incl. failures — a
-# RETURN trap would not fire when set -e aborts mid-stage)
+# RETURN trap would not fire when set -e aborts mid-stage). The serve
+# stage also parks its background server PID here so a failed assertion
+# can never leak a listener.
 SMOKE_DIR=""
-cleanup() { [[ -n "$SMOKE_DIR" ]] && rm -rf "$SMOKE_DIR" || true; }
+SERVE_PID=""
+cleanup() {
+  if [[ -n "$SERVE_PID" ]]; then
+    kill "$SERVE_PID" 2>/dev/null || true
+    wait "$SERVE_PID" 2>/dev/null || true
+    SERVE_PID=""
+  fi
+  [[ -n "$SMOKE_DIR" ]] && rm -rf "$SMOKE_DIR" || true
+}
 trap cleanup EXIT
 
 # Allowlist rationale:
@@ -193,6 +205,114 @@ stage_trace() {
     "$SMOKE_DIR/sim_trace.jsonl" "$SMOKE_DIR/e2e_trace.jsonl"
 }
 
+stage_serve() {
+  # Serving gate (PR 9): boot `mase serve` on an ephemeral port, parse
+  # the port from the listening line (stdout contract), then drive the
+  # whole protocol through a raw-socket stdlib-python client: /healthz,
+  # two identical /v1/generate calls (the determinism contract makes the
+  # replies bit-identical even though the second one decodes in a reused
+  # lane of a warm engine), /metrics counters, a 400 and a 404. Finally
+  # SIGTERM — the binary installs no handler on purpose (no durable
+  # state, connection: close), so default disposition must kill it fast.
+  echo "==> serve smoke: mase serve --backend cpu --model toy-lm (ephemeral port)"
+  if [[ ! -x target/release/mase ]]; then
+    echo "  (target/release/mase missing; building first)"
+    cargo build --release
+  fi
+  cleanup
+  SMOKE_DIR="$(mktemp -d)"
+  ./target/release/mase serve --backend cpu --model toy-lm --port 0 \
+    --lanes 2 --queue-timeout-ms 10000 \
+    --artifacts "$SMOKE_DIR/artifacts" >"$SMOKE_DIR/serve.log" 2>&1 &
+  SERVE_PID=$!
+  local port=""
+  for _ in $(seq 1 300); do
+    port="$(sed -n 's#^mase serve: listening on http://127\.0\.0\.1:\([0-9]*\).*#\1#p' \
+      "$SMOKE_DIR/serve.log" 2>/dev/null || true)"
+    [[ -n "$port" ]] && break
+    if ! kill -0 "$SERVE_PID" 2>/dev/null; then
+      cat "$SMOKE_DIR/serve.log"
+      echo "serve smoke: server exited before listening"; exit 1
+    fi
+    sleep 0.1
+  done
+  [[ -n "$port" ]] || {
+    cat "$SMOKE_DIR/serve.log"
+    echo "serve smoke: no listening line within 30s"; exit 1;
+  }
+  if ! python3 - "$port" <<'PY'
+import json, socket, sys
+
+port = int(sys.argv[1])
+
+def rpc(method, path, body=None):
+    payload = b"" if body is None else json.dumps(body).encode()
+    head = (
+        f"{method} {path} HTTP/1.1\r\nhost: localhost\r\n"
+        f"content-length: {len(payload)}\r\nconnection: close\r\n\r\n"
+    )
+    with socket.create_connection(("127.0.0.1", port), timeout=120) as s:
+        s.settimeout(120)
+        s.sendall(head.encode() + payload)
+        buf = b""
+        while True:
+            chunk = s.recv(65536)
+            if not chunk:
+                break
+            buf += chunk
+    header, _, resp_body = buf.partition(b"\r\n\r\n")
+    return int(header.split()[1]), resp_body.decode()
+
+st, body = rpc("GET", "/healthz")
+assert st == 200, (st, body)
+h = json.loads(body)
+assert h["status"] == "ok" and h["model"] == "toy-lm", h
+assert h["lanes"] == 2 and h["width"] >= 1, h
+
+gen = {"prompt_len": 4, "stream": 11, "max_tokens": 6}
+st, body = rpc("POST", "/v1/generate", gen)
+assert st == 200, (st, body)
+r = json.loads(body)
+assert r["prompt_len"] == 4 and len(r["tokens"]) == 6, r
+assert all(isinstance(t, int) and 0 <= t < 512 for t in r["tokens"]), r
+
+st, body = rpc("POST", "/v1/generate", gen)
+assert st == 200, (st, body)
+assert json.loads(body)["tokens"] == r["tokens"], "repeat request not deterministic"
+
+st, body = rpc("GET", "/metrics")
+assert st == 200, (st, body)
+assert "serve/scheduler" in body and "admitted" in body, body
+assert "serve/engine" in body and "serve/http" in body, body
+
+st, body = rpc("POST", "/v1/generate", {"prompt": [1, 9999]})
+assert st == 400, (st, body)
+st, body = rpc("GET", "/no-such-route")
+assert st == 404, (st, body)
+print(f"serve smoke client: protocol ok on port {port}, tokens {r['tokens']}")
+PY
+  then
+    cat "$SMOKE_DIR/serve.log"
+    echo "serve smoke: protocol client failed"; exit 1
+  fi
+  kill -TERM "$SERVE_PID" 2>/dev/null || {
+    cat "$SMOKE_DIR/serve.log"
+    echo "serve smoke: server died before SIGTERM"; exit 1;
+  }
+  local alive=1
+  for _ in $(seq 1 100); do
+    if ! kill -0 "$SERVE_PID" 2>/dev/null; then alive=0; break; fi
+    sleep 0.1
+  done
+  if [[ "$alive" -ne 0 ]]; then
+    kill -9 "$SERVE_PID" 2>/dev/null || true
+    echo "serve smoke: server ignored SIGTERM for 10s"; exit 1
+  fi
+  wait "$SERVE_PID" 2>/dev/null || true
+  SERVE_PID=""
+  echo "serve smoke: SIGTERM shut the server down cleanly"
+}
+
 run_stage() {
   case "$1" in
     fmt)    stage_fmt ;;
@@ -203,6 +323,7 @@ run_stage() {
     decode) stage_decode ;;
     check)  stage_check ;;
     trace)  stage_trace ;;
+    serve)  stage_serve ;;
     all)
       if [[ -z "${SKIP_LINTS:-}" ]]; then
         stage_fmt
@@ -214,9 +335,10 @@ run_stage() {
       stage_decode
       stage_check
       stage_trace
+      stage_serve
       ;;
     *)
-      echo "unknown stage '$1' (expected fmt|clippy|doc|test|smoke|decode|check|trace|all)" >&2
+      echo "unknown stage '$1' (expected fmt|clippy|doc|test|smoke|decode|check|trace|serve|all)" >&2
       exit 2
       ;;
   esac
