@@ -57,6 +57,7 @@ fn main() {
         common::env_usize("MASE_PRETRAIN_STEPS", 220),
         "sw",
         mase::runtime::BackendKind::Pjrt,
+        None,
     );
     let cache = store.cache(&scope);
 

@@ -1,0 +1,482 @@
+//! Typed command-line surface for the `mase` driver — the ONE place
+//! where raw `--flag` strings become typed configuration.
+//!
+//! Before this module, every subcommand arm in `main.rs` re-parsed its
+//! own `--fmt`/`--bits`/`--backend`/... copies (seven near-identical
+//! blocks, three duplicated per-family default-bits tables, and as many
+//! error phrasings). [`CommonArgs::parse`] replaces them:
+//!
+//!  * **one parser** — every shared flag is decoded here, strictly
+//!    (a malformed `--trials x7` is an error, never a silent default);
+//!  * **one error style** — `--flag: problem (accepted values)`;
+//!  * **exhaustive match** — subcommands are the [`Subcommand`] enum, so
+//!    adding one without wiring it into the driver is a compile error;
+//!  * **one format type** — `--fmt/--bits/--frac` become the same
+//!    [`FormatSpec`] that `.mxa` artifact headers
+//!    ([`crate::packed::artifact`]) carry, with the per-family default
+//!    bits defined once in [`FormatSpec::default_bits`];
+//!  * **validated flags** — each subcommand declares the flags it
+//!    accepts; a typo'd `--trails` is reported instead of ignored.
+//!
+//! Builders ([`CommonArgs::flow_config`], [`CommonArgs::sweep_config`])
+//! assemble the coordinator configs, so `--weights model.mxa` reaches
+//! [`FlowConfig::weights_artifact`] / [`SweepConfig::weights_artifact`]
+//! from every flow-shaped subcommand through a single code path.
+
+use crate::coordinator::{FlowConfig, Session, SweepConfig};
+use crate::data::Task;
+use crate::formats::{FormatKind, FormatSpec};
+use crate::runtime::BackendKind;
+use crate::search::Algorithm;
+use crate::util::cli::Args;
+use anyhow::{anyhow, Result};
+use std::path::PathBuf;
+
+/// Every `mase` subcommand. The driver matches this exhaustively:
+/// adding a variant without handling it everywhere is a compile error.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Subcommand {
+    Help,
+    Pretrain,
+    Profile,
+    Search,
+    E2e,
+    Emit,
+    Sweep,
+    Ir,
+    Check,
+    Formats,
+    Generate,
+    Serve,
+    Trace,
+    Pack,
+}
+
+impl Subcommand {
+    pub const ALL: [Subcommand; 14] = [
+        Subcommand::Help,
+        Subcommand::Pretrain,
+        Subcommand::Profile,
+        Subcommand::Search,
+        Subcommand::E2e,
+        Subcommand::Emit,
+        Subcommand::Sweep,
+        Subcommand::Ir,
+        Subcommand::Check,
+        Subcommand::Formats,
+        Subcommand::Generate,
+        Subcommand::Serve,
+        Subcommand::Trace,
+        Subcommand::Pack,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Subcommand::Help => "help",
+            Subcommand::Pretrain => "pretrain",
+            Subcommand::Profile => "profile",
+            Subcommand::Search => "search",
+            Subcommand::E2e => "e2e",
+            Subcommand::Emit => "emit",
+            Subcommand::Sweep => "sweep",
+            Subcommand::Ir => "ir",
+            Subcommand::Check => "check",
+            Subcommand::Formats => "formats",
+            Subcommand::Generate => "generate",
+            Subcommand::Serve => "serve",
+            Subcommand::Trace => "trace",
+            Subcommand::Pack => "pack",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Subcommand> {
+        Subcommand::ALL.into_iter().find(|c| c.name() == s)
+    }
+
+    /// The flags this subcommand understands (besides `--artifacts`,
+    /// accepted everywhere). Unknown flags are rejected at parse time —
+    /// a silently ignored `--trails 64` has burned enough CI hours.
+    fn allowed_flags(self) -> &'static [&'static str] {
+        const FLOW: &[&str] = &[
+            "model", "task", "fmt", "algorithm", "trials", "eval-batches", "qat-steps",
+            "sw-only", "seed", "out", "pretrain-steps", "threads", "batch", "cache",
+            "tpe-mean-lie", "backend", "trace", "trace-format", "weights",
+        ];
+        match self {
+            Subcommand::Help => &[],
+            Subcommand::Pretrain => &["backend", "all", "model", "task", "steps"],
+            Subcommand::Profile => &["backend", "model", "task"],
+            Subcommand::Search | Subcommand::E2e | Subcommand::Emit => FLOW,
+            Subcommand::Sweep => &[
+                "backend", "models", "tasks", "fmts", "algorithm", "trials", "seed", "batch",
+                "threads", "eval-batches", "pretrain-steps", "qat-steps", "qat-lr", "sw-only",
+                "tpe-mean-lie", "cache", "trace", "trace-format", "weights",
+            ],
+            Subcommand::Ir => &["backend", "model"],
+            Subcommand::Check => &[
+                "sv", "model", "fmt", "bits", "chan", "layers", "d-model", "heads", "vocab",
+                "seq",
+            ],
+            Subcommand::Formats => &["backend", "model", "eval-batches"],
+            Subcommand::Generate => &[
+                "backend", "model", "fmt", "bits", "tokens", "prompt-len", "seqs", "threads",
+                "trace", "trace-format", "weights",
+            ],
+            Subcommand::Serve => &[
+                "backend", "model", "fmt", "bits", "port", "lanes", "queue-cap",
+                "queue-timeout-ms", "max-tokens", "http-workers", "weights",
+            ],
+            Subcommand::Trace => &[
+                "backend", "model", "fmt", "bits", "chan", "inferences", "fifo", "out",
+                "trace-format", "run",
+            ],
+            Subcommand::Pack => &[
+                "model", "task", "fmt", "bits", "frac", "out", "layers", "d-model", "heads",
+                "vocab", "seq",
+            ],
+        }
+    }
+}
+
+/// Strictly-typed `--key N` (unsigned integer). Absent -> `default`;
+/// present-but-malformed -> error (never a silent fallback).
+pub fn flag_usize(args: &Args, key: &str, default: usize) -> Result<usize> {
+    match args.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .parse()
+            .map_err(|_| anyhow!("--{key}: expected an unsigned integer, got '{v}'")),
+    }
+}
+
+/// Strictly-typed `--key X` (finite number).
+pub fn flag_f32(args: &Args, key: &str, default: f32) -> Result<f32> {
+    match args.get(key) {
+        None => Ok(default),
+        Some(v) => match v.parse::<f32>() {
+            Ok(x) if x.is_finite() => Ok(x),
+            _ => Err(anyhow!("--{key}: expected a finite number, got '{v}'")),
+        },
+    }
+}
+
+/// Every flag shared across subcommands, decoded once, strictly.
+/// Subcommand-unique knobs (`--port`, `--chan`, ...) stay in the driver
+/// but go through the same typed [`flag_usize`]/[`flag_f32`] helpers.
+#[derive(Debug, Clone)]
+pub struct CommonArgs {
+    pub sub: Subcommand,
+    /// `--artifacts DIR` (default: `Session::default_dir`).
+    pub artifacts: PathBuf,
+    pub backend: BackendKind,
+    pub model: Option<String>,
+    pub task: Task,
+    /// `--fmt` (default mxint). Combine with `bits`/`frac` via
+    /// [`CommonArgs::spec`].
+    pub fmt: FormatKind,
+    /// Raw `--bits`, if given; default resolution is per-command:
+    /// [`CommonArgs::spec`] uses the family default, [`bits_or`] a
+    /// caller-chosen one (check/trace historically default to 5).
+    ///
+    /// [`bits_or`]: CommonArgs::bits_or
+    pub bits: Option<f32>,
+    pub frac: f32,
+    pub algorithm: Algorithm,
+    pub trials: Option<usize>,
+    pub eval_batches: Option<usize>,
+    pub qat_steps: usize,
+    pub qat_lr: f32,
+    pub hw_aware: bool,
+    pub seed: u64,
+    pub pretrain_steps: usize,
+    pub threads: usize,
+    pub batch: usize,
+    pub cache: Option<PathBuf>,
+    pub tpe_mean_lie: bool,
+    /// `--trace` / `--trace FILE`: `None` = off, `Some("true")` = record
+    /// + summarize, `Some(path)` = also export (see `trace_file`).
+    pub trace: Option<String>,
+    pub trace_format: Option<String>,
+    /// `--weights model.mxa`: serve packed weight tensors from a content-
+    /// addressed artifact (CPU backend; zero re-quantize, zero re-pack).
+    pub weights: Option<PathBuf>,
+    pub out: Option<String>,
+    /// Sweep grid axes (populated for `sweep` only).
+    pub models: Vec<String>,
+    pub tasks: Vec<Task>,
+    pub fmts: Vec<FormatKind>,
+}
+
+impl CommonArgs {
+    pub fn parse(args: &Args) -> Result<CommonArgs> {
+        let sub = match &args.subcommand {
+            None => Subcommand::Help,
+            Some(s) => Subcommand::from_name(s).ok_or_else(|| {
+                anyhow!(
+                    "unknown subcommand '{s}' (expected one of: {})",
+                    Subcommand::ALL.map(Subcommand::name).join("|")
+                )
+            })?,
+        };
+        // `mase trace --run X` forwards its whole flag set to X, which
+        // re-parses (and re-validates) under X's own allowlist.
+        let delegating = sub == Subcommand::Trace && args.get("run").is_some();
+        if sub != Subcommand::Help && !delegating {
+            let allowed = sub.allowed_flags();
+            for key in args.flags.keys() {
+                if key != "artifacts" && !allowed.contains(&key.as_str()) {
+                    return Err(anyhow!(
+                        "--{key}: unknown flag for `mase {}` (accepted: --artifacts{})",
+                        sub.name(),
+                        allowed.iter().map(|f| format!(", --{f}")).collect::<String>()
+                    ));
+                }
+            }
+        }
+
+        let backend_name = args.get_or("backend", "pjrt");
+        let backend = BackendKind::from_name(&backend_name)
+            .ok_or_else(|| anyhow!("--backend: unknown backend '{backend_name}' (pjrt|cpu)"))?;
+        let task_name = args.get_or("task", "sst2");
+        let task = Task::from_name(&task_name)
+            .ok_or_else(|| anyhow!("--task: unknown task '{task_name}'"))?;
+        let fmt_name = args.get_or("fmt", "mxint");
+        let fmt = FormatKind::from_name(&fmt_name).ok_or_else(|| {
+            anyhow!("--fmt: unknown format '{fmt_name}' (fp32|int|fp8|mxint|bmf|bl)")
+        })?;
+        let alg_name = args.get_or("algorithm", "tpe");
+        let algorithm = Algorithm::from_name(&alg_name).ok_or_else(|| {
+            anyhow!("--algorithm: unknown algorithm '{alg_name}' (tpe|random|qmc|nsga2)")
+        })?;
+
+        let bits = match args.get("bits") {
+            None => None,
+            Some(_) => Some(flag_f32(args, "bits", 0.0)?),
+        };
+        let (tasks, fmts) = if sub == Subcommand::Sweep {
+            let tasks = match args.get_or("tasks", "all").as_str() {
+                "all" => Task::ALL.to_vec(),
+                csv => csv
+                    .split(',')
+                    .map(|t| Task::from_name(t).ok_or_else(|| anyhow!("--tasks: unknown task '{t}'")))
+                    .collect::<Result<Vec<_>>>()?,
+            };
+            let fmts = args
+                .get_or("fmts", "mxint,int")
+                .split(',')
+                .map(|f| {
+                    FormatKind::from_name(f).ok_or_else(|| anyhow!("--fmts: unknown format '{f}'"))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            (tasks, fmts)
+        } else {
+            (Vec::new(), Vec::new())
+        };
+
+        Ok(CommonArgs {
+            sub,
+            artifacts: args
+                .get("artifacts")
+                .map(PathBuf::from)
+                .unwrap_or_else(Session::default_dir),
+            backend,
+            model: args.get("model").map(str::to_string),
+            task,
+            fmt,
+            bits,
+            frac: flag_f32(args, "frac", 0.0)?,
+            algorithm,
+            trials: match args.get("trials") {
+                None => None,
+                Some(_) => Some(flag_usize(args, "trials", 0)?),
+            },
+            eval_batches: match args.get("eval-batches") {
+                None => None,
+                Some(_) => Some(flag_usize(args, "eval-batches", 0)?),
+            },
+            qat_steps: flag_usize(args, "qat-steps", 0)?,
+            qat_lr: flag_f32(args, "qat-lr", 0.002)?,
+            hw_aware: !args.has("sw-only"),
+            seed: flag_usize(args, "seed", 0)? as u64,
+            pretrain_steps: flag_usize(args, "pretrain-steps", 220)?,
+            threads: flag_usize(args, "threads", 0)?,
+            batch: flag_usize(args, "batch", 8)?,
+            cache: args.get("cache").map(PathBuf::from),
+            tpe_mean_lie: args.has("tpe-mean-lie"),
+            trace: args.get("trace").map(str::to_string),
+            trace_format: args.get("trace-format").map(str::to_string),
+            weights: args.get("weights").map(PathBuf::from),
+            out: args.get("out").map(str::to_string),
+            models: args
+                .get_or("models", "opt-125m-sim,opt-350m-sim,opt-1.3b-sim")
+                .split(',')
+                .map(str::to_string)
+                .collect(),
+            tasks,
+            fmts,
+        })
+    }
+
+    /// `--fmt/--bits/--frac` as one [`FormatSpec`], family-default bits
+    /// when `--bits` is absent — the same spec `.mxa` headers carry.
+    pub fn spec(&self) -> FormatSpec {
+        FormatSpec::new(self.fmt, self.bits_or(FormatSpec::default_bits(self.fmt)), self.frac)
+    }
+
+    /// `--bits` with a caller-chosen default (check/trace default to 5).
+    pub fn bits_or(&self, default: f32) -> f32 {
+        self.bits.unwrap_or(default)
+    }
+
+    pub fn require_model(&self) -> Result<&str> {
+        self.model.as_deref().ok_or_else(|| anyhow!("--model required"))
+    }
+
+    pub fn model_or(&self, default: &str) -> String {
+        self.model.clone().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn trace_enabled(&self) -> bool {
+        self.trace.is_some()
+    }
+
+    /// The export path from `--trace FILE` (`None` for bare `--trace`).
+    pub fn trace_file(&self) -> Option<&str> {
+        self.trace.as_deref().filter(|p| *p != "true")
+    }
+
+    /// Assemble the flow configuration for `search`/`e2e`/`emit`.
+    pub fn flow_config(&self, model: &str, emit_dir: Option<PathBuf>) -> FlowConfig {
+        FlowConfig {
+            model: model.to_string(),
+            task: self.task,
+            fmt: self.fmt,
+            algorithm: self.algorithm,
+            trials: self.trials.unwrap_or(32),
+            eval_batches: self.eval_batches.unwrap_or(4),
+            qat_steps: self.qat_steps,
+            hw_aware: self.hw_aware,
+            seed: self.seed,
+            emit_dir,
+            pretrain_steps: self.pretrain_steps,
+            threads: self.threads,
+            batch: self.batch.max(1),
+            cache_path: self.cache.clone(),
+            tpe_mean_lie: self.tpe_mean_lie,
+            backend: self.backend,
+            trace: self.trace_enabled(),
+            weights_artifact: self.weights.clone(),
+        }
+    }
+
+    /// Assemble the sweep configuration (`sweep` defaults: 24 trials,
+    /// 3 eval batches).
+    pub fn sweep_config(&self) -> SweepConfig {
+        SweepConfig {
+            models: self.models.clone(),
+            tasks: self.tasks.clone(),
+            fmts: self.fmts.clone(),
+            algorithm: self.algorithm,
+            trials: self.trials.unwrap_or(24),
+            seed: self.seed,
+            batch: self.batch.max(1),
+            threads: self.threads,
+            eval_batches: self.eval_batches.unwrap_or(3),
+            pretrain_steps: self.pretrain_steps,
+            qat_steps: self.qat_steps,
+            qat_lr: self.qat_lr,
+            hw_aware: self.hw_aware,
+            tpe_mean_lie: self.tpe_mean_lie,
+            cache_path: self.cache.clone(),
+            backend: self.backend,
+            trace: self.trace_enabled(),
+            weights_artifact: self.weights.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<CommonArgs> {
+        CommonArgs::parse(&Args::parse(s.split_whitespace().map(String::from)))
+    }
+
+    #[test]
+    fn every_subcommand_round_trips_by_name() {
+        for sub in Subcommand::ALL {
+            assert_eq!(Subcommand::from_name(sub.name()), Some(sub));
+        }
+        assert_eq!(Subcommand::from_name("frobnicate"), None);
+    }
+
+    #[test]
+    fn flow_flags_parse_into_typed_config() {
+        let c = parse(
+            "e2e --model toy-sim --task qqp --fmt int --trials 4 --batch 2 \
+             --eval-batches 1 --threads 1 --backend cpu --weights w.mxa",
+        )
+        .unwrap();
+        assert_eq!(c.sub, Subcommand::E2e);
+        assert_eq!(c.backend, BackendKind::Cpu);
+        let cfg = c.flow_config(c.require_model().unwrap(), None);
+        assert_eq!(cfg.model, "toy-sim");
+        assert_eq!(cfg.task, Task::Qqp);
+        assert_eq!(cfg.fmt, FormatKind::Int);
+        assert_eq!((cfg.trials, cfg.batch, cfg.eval_batches, cfg.threads), (4, 2, 1, 1));
+        assert_eq!(cfg.weights_artifact.as_deref(), Some(std::path::Path::new("w.mxa")));
+        assert!(!cfg.trace);
+    }
+
+    #[test]
+    fn spec_uses_family_default_bits() {
+        let c = parse("pack --fmt bmf").unwrap();
+        let s = c.spec();
+        assert_eq!((s.kind, s.bits, s.frac), (FormatKind::Bmf, 5.0, 0.0));
+        let c = parse("pack --fmt int --bits 6 --frac 2").unwrap();
+        assert_eq!((c.spec().bits, c.spec().frac), (6.0, 2.0));
+        // check/trace keep their historical default of 5 bits
+        assert_eq!(parse("check --fmt mxint").unwrap().bits_or(5.0), 5.0);
+    }
+
+    #[test]
+    fn malformed_and_unknown_flags_are_errors_not_defaults() {
+        assert!(parse("e2e --model m --trials x7").unwrap_err().to_string().contains("--trials"));
+        assert!(parse("e2e --model m --bits NaN").is_err());
+        let e = parse("e2e --model m --trails 64").unwrap_err().to_string();
+        assert!(e.contains("--trails") && e.contains("unknown flag"), "{e}");
+        let e = parse("serve --trace").unwrap_err().to_string();
+        assert!(e.contains("--trace"), "{e}");
+        assert!(parse("frobnicate").unwrap_err().to_string().contains("unknown subcommand"));
+    }
+
+    #[test]
+    fn trace_delegation_skips_local_flag_validation() {
+        // `mase trace --run e2e --trials 4` carries e2e's flags; they are
+        // validated after forwarding, not against trace's own allowlist.
+        let c = parse("trace --run e2e --model toy-sim --trials 4").unwrap();
+        assert_eq!(c.sub, Subcommand::Trace);
+    }
+
+    #[test]
+    fn trace_file_distinguishes_bare_from_path() {
+        let c = parse("e2e --model m --trace --threads 1").unwrap();
+        assert!(c.trace_enabled() && c.trace_file().is_none());
+        let c = parse("e2e --model m --trace out.jsonl").unwrap();
+        assert_eq!(c.trace_file(), Some("out.jsonl"));
+        assert!(!parse("e2e --model m").unwrap().trace_enabled());
+    }
+
+    #[test]
+    fn sweep_axes_parse_with_sweep_defaults() {
+        let c = parse("sweep --models a,b --tasks sst2,qqp --fmts mxint --backend cpu").unwrap();
+        let cfg = c.sweep_config();
+        assert_eq!(cfg.models, vec!["a", "b"]);
+        assert_eq!(cfg.tasks, vec![Task::Sst2, Task::Qqp]);
+        assert_eq!(cfg.fmts, vec![FormatKind::MxInt]);
+        assert_eq!((cfg.trials, cfg.eval_batches), (24, 3));
+        assert!(parse("sweep --fmts nope").is_err());
+        assert!(parse("sweep --tasks nope").is_err());
+    }
+}

@@ -49,6 +49,12 @@ pub struct FlowConfig {
     /// spans, per-trial memo status and cache counters into
     /// [`FlowReport::trace`] for export/summary by the caller.
     pub trace: bool,
+    /// `.mxa` packed-weight artifact (`--weights`): loaded into the CPU
+    /// backend so warm sessions serve pre-packed tensors with zero
+    /// re-quantize/re-pack work. The artifact's content hash joins the
+    /// eval-cache scope. CPU backend only; PJRT feeds raw f32 weights to
+    /// the device and has nothing to reuse.
+    pub weights_artifact: Option<PathBuf>,
 }
 
 impl Default for FlowConfig {
@@ -71,6 +77,7 @@ impl Default for FlowConfig {
             tpe_mean_lie: false,
             backend: BackendKind::Pjrt,
             trace: false,
+            weights_artifact: None,
         }
     }
 }
@@ -97,9 +104,29 @@ pub struct FlowReport {
 /// HLO execution) or the artifact-free packed CPU interpreter.
 pub fn run_flow(session: &Session, cfg: &FlowConfig) -> Result<FlowReport> {
     match cfg.backend {
-        BackendKind::Pjrt => run_flow_with(session, cfg, session.pjrt_backend()?),
-        BackendKind::Cpu => run_flow_with(session, cfg, CpuBackend::new()),
+        BackendKind::Pjrt => {
+            anyhow::ensure!(
+                cfg.weights_artifact.is_none(),
+                "--weights is a packed-CPU-backend feature: the PJRT backend feeds raw f32 \
+                 weights to the device and cannot serve a .mxa artifact (use --backend cpu)"
+            );
+            run_flow_with(session, cfg, session.pjrt_backend()?)
+        }
+        BackendKind::Cpu => run_flow_with(session, cfg, cpu_backend_for(cfg.weights_artifact.as_deref())?),
     }
+}
+
+/// Packed CPU backend, warm-started from a `.mxa` artifact when given.
+/// The one loader path behind `--weights` for flow, sweep, generate and
+/// serve, so every surface reports loader failures identically.
+pub fn cpu_backend_for(weights: Option<&std::path::Path>) -> Result<CpuBackend> {
+    Ok(match weights {
+        Some(p) => CpuBackend::with_artifact(Arc::new(
+            crate::packed::ArtifactWeights::load(p)
+                .map_err(|e| anyhow::anyhow!("loading weights artifact {}: {e:#}", p.display()))?,
+        )),
+        None => CpuBackend::new(),
+    })
 }
 
 /// The backend-generic flow core.
@@ -177,6 +204,7 @@ fn run_flow_with<B: ExecBackend>(
                 effective_ps,
                 if cfg.hw_aware { "hw" } else { "sw" },
                 cfg.backend,
+                ev.backend.weights_hash(),
             ))
         }
         None => Arc::new(EvalCache::new()),

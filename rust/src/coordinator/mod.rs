@@ -6,7 +6,7 @@ pub mod flow;
 pub mod pretrain;
 pub mod sweep;
 
-pub use flow::{run_flow, FlowConfig, FlowReport};
+pub use flow::{cpu_backend_for, run_flow, FlowConfig, FlowReport};
 pub use pretrain::{pretrain, weights_path, PretrainConfig};
 pub use sweep::{run_sweep, SweepConfig, SweepReport};
 

@@ -65,6 +65,10 @@ pub struct SweepConfig {
     /// inside every cell records per-trial memo status. The caller
     /// exports/summarizes [`SweepReport::trace`].
     pub trace: bool,
+    /// `.mxa` packed-weight artifact (`--weights`) serving every cell's
+    /// weight tensors pre-packed (CPU backend only — see
+    /// [`crate::coordinator::FlowConfig::weights_artifact`]).
+    pub weights_artifact: Option<PathBuf>,
 }
 
 impl Default for SweepConfig {
@@ -92,6 +96,7 @@ impl Default for SweepConfig {
             cache_path: None,
             backend: BackendKind::Pjrt,
             trace: false,
+            weights_artifact: None,
         }
     }
 }
@@ -112,6 +117,11 @@ pub struct SweepItem {
     /// evaluates the untrained `init_params` model (see [`run_sweep`]).
     /// Part of the cache scope for the same reason as `qat_steps`.
     pub pretrain_steps: usize,
+    /// Content hash of the `.mxa` artifact serving this cell's weights
+    /// (`None` without `--weights`). Part of the cache scope: artifact-
+    /// backed and in-memory-packed runs never share entries unless they
+    /// came from the same container bytes.
+    pub weights_hash: Option<u64>,
 }
 
 /// What one cell's evaluation produced (the Fig. 6 data points).
@@ -178,6 +188,7 @@ pub fn grid(cfg: &SweepConfig) -> Vec<SweepItem> {
                     fmt,
                     qat_steps: cfg.qat_steps,
                     pretrain_steps: cfg.pretrain_steps,
+                    weights_hash: None,
                 });
             }
         }
@@ -198,6 +209,7 @@ pub fn cell_scope(cfg: &SweepConfig, item: &SweepItem) -> String {
         item.pretrain_steps,
         if cfg.hw_aware { "hw" } else { "sw" },
         cfg.backend,
+        item.weights_hash,
     )
 }
 
@@ -271,13 +283,24 @@ where
 /// Dispatches on [`SweepConfig::backend`].
 pub fn run_sweep(session: &Session, cfg: &SweepConfig) -> Result<SweepReport> {
     match cfg.backend {
-        BackendKind::Pjrt => run_sweep_with(session, cfg, session.pjrt_backend()?),
-        BackendKind::Cpu => run_sweep_with(session, cfg, CpuBackend::new()),
+        BackendKind::Pjrt => {
+            anyhow::ensure!(
+                cfg.weights_artifact.is_none(),
+                "--weights is a packed-CPU-backend feature: the PJRT backend feeds raw f32 \
+                 weights to the device and cannot serve a .mxa artifact (use --backend cpu)"
+            );
+            run_sweep_with(session, cfg, session.pjrt_backend()?)
+        }
+        BackendKind::Cpu => run_sweep_with(
+            session,
+            cfg,
+            super::flow::cpu_backend_for(cfg.weights_artifact.as_deref())?,
+        ),
     }
 }
 
 /// The backend-generic sweep driver over [`sweep_with`].
-fn run_sweep_with<B: ExecBackend + Copy>(
+fn run_sweep_with<B: ExecBackend + Clone>(
     session: &Session,
     cfg: &SweepConfig,
     backend: B,
@@ -296,6 +319,9 @@ fn run_sweep_with<B: ExecBackend + Copy>(
     // stored under a `qatN` scope would poison later QAT-capable runs.
     let mut items = grid(cfg);
     for item in &mut items {
+        // Stamp the serving artifact's content hash into every cell's
+        // scope (None without --weights; see SweepItem::weights_hash).
+        item.weights_hash = backend.weights_hash();
         // A runtime-less session with no valid cached weights evaluates
         // the untrained init_params model: record an effective pretrain
         // budget of 0 so the cell's scope never aliases trained runs
@@ -328,7 +354,7 @@ fn run_sweep_with<B: ExecBackend + Copy>(
             &PretrainConfig { steps: cfg.pretrain_steps, log_every: 0, ..Default::default() },
         )?;
         let eval = batches(item.task, 1, cfg.eval_batches, meta.batch, meta.seq_len);
-        let mut ev = Evaluator::new(backend, &meta, &w, &eval)?;
+        let mut ev = Evaluator::new(backend.clone(), &meta, &w, &eval)?;
         ev.objective = if cfg.hw_aware { Objective::default() } else { Objective::sw_only() };
         let profile = profile_model(&ev.backend, &meta, &w, &eval[..1])?;
 
@@ -382,6 +408,7 @@ mod tests {
             fmt: FormatKind::MxInt,
             qat_steps: 0,
             pretrain_steps: cfg.pretrain_steps,
+            weights_hash: None,
         };
         let b = SweepItem { fmt: FormatKind::Int, ..a.clone() };
         assert_ne!(cell_scope(&cfg, &a), cell_scope(&cfg, &b));
@@ -401,6 +428,12 @@ mod tests {
         // (init_params) cell must not alias a pretrained one
         let untrained = SweepItem { pretrain_steps: 0, ..a.clone() };
         assert_ne!(cell_scope(&cfg, &a), cell_scope(&cfg, &untrained));
+        // and the serving artifact: a .mxa-backed cell only shares
+        // entries with cells served by the same container bytes
+        let mxa = SweepItem { weights_hash: Some(0xFEED), ..a.clone() };
+        assert_ne!(cell_scope(&cfg, &a), cell_scope(&cfg, &mxa));
+        let other = SweepItem { weights_hash: Some(0xFEEE), ..a.clone() };
+        assert_ne!(cell_scope(&cfg, &mxa), cell_scope(&cfg, &other));
     }
 
     #[test]

@@ -127,6 +127,50 @@ impl Precision {
     }
 }
 
+/// One fully-specified uniform format choice: family + precision knobs.
+///
+/// This is the single type the typed CLI (`--fmt/--bits/--frac`), the
+/// packed artifact header ([`crate::packed`]'s `.mxa` manifest) and the
+/// `mase pack` JSON manifest all share, so no two surfaces can describe
+/// the same format differently. The per-family `--bits` default that
+/// used to be re-derived by every subcommand handler lives here once.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FormatSpec {
+    pub kind: FormatKind,
+    /// Family-dependent primary knob (see [`Precision`]).
+    pub bits: f32,
+    /// Fixed-point fraction bits; 0 for every other family.
+    pub frac: f32,
+}
+
+impl FormatSpec {
+    pub fn new(kind: FormatKind, bits: f32, frac: f32) -> Self {
+        Self { kind, bits, frac }
+    }
+
+    /// The default primary knob per family: fp32 is exact, fixed/minifloat
+    /// default to 8-bit words, MXInt/BL to 7 mantissa/exponent bits
+    /// (paper §4.1's 8.25-avg-bit sweet spot), BMF to 5 mantissa bits.
+    pub fn default_bits(kind: FormatKind) -> f32 {
+        match kind {
+            FormatKind::Fp32 => 32.0,
+            FormatKind::Bmf => 5.0,
+            FormatKind::Int | FormatKind::Fp8 => 8.0,
+            FormatKind::MxInt | FormatKind::Bl => 7.0,
+        }
+    }
+
+    /// Spec at the family's default knobs.
+    pub fn with_defaults(kind: FormatKind) -> Self {
+        Self { kind, bits: Self::default_bits(kind), frac: 0.0 }
+    }
+
+    /// The per-tensor [`Precision`] row this spec denotes.
+    pub fn precision(&self) -> Precision {
+        Precision::new(self.bits, self.frac)
+    }
+}
+
 /// Exact 2^e as f32 (e clamped to the representable range; subnormals ok).
 #[inline]
 pub fn pow2(e: i32) -> f32 {
@@ -290,6 +334,21 @@ mod tests {
         // MXInt((16,2), 8, 7) -> 8.25 bits (paper §4.1).
         let p = Precision::new(7.0, 0.0);
         assert!((p.average_bitwidth(FormatKind::MxInt) - 8.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn format_spec_defaults_cover_all_families() {
+        for f in FormatKind::ALL {
+            let spec = FormatSpec::with_defaults(f);
+            assert_eq!(spec.kind, f);
+            assert!(spec.bits > 0.0);
+            assert_eq!(spec.frac, 0.0);
+            assert_eq!(spec.precision(), Precision::new(spec.bits, 0.0));
+        }
+        assert_eq!(FormatSpec::default_bits(FormatKind::Fp32), 32.0);
+        assert_eq!(FormatSpec::default_bits(FormatKind::MxInt), 7.0);
+        assert_eq!(FormatSpec::default_bits(FormatKind::Bmf), 5.0);
+        assert_eq!(FormatSpec::default_bits(FormatKind::Int), 8.0);
     }
 
     #[test]

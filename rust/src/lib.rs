@@ -93,4 +93,5 @@ pub mod runtime;
 pub mod serve;
 pub mod eval;
 pub mod coordinator;
+pub mod cli;
 pub mod util;

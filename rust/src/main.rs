@@ -1,5 +1,11 @@
 //! `mase` — command-line driver for the MASE-RS dataflow compiler.
 //!
+//! Flag parsing is the typed [`mase::cli`] layer: every subcommand is a
+//! [`Subcommand`] variant matched exhaustively below, every shared flag
+//! is decoded once (strictly — malformed values are errors, not silent
+//! defaults) into [`CommonArgs`], and `--fmt/--bits/--frac` resolve to
+//! the same `FormatSpec` the `.mxa` packed-weight artifacts carry.
+//!
 //! Subcommands:
 //!   pretrain  --all | --model M [--task T] [--steps N]
 //!   profile   --model M [--task T]
@@ -9,6 +15,9 @@
 //!   e2e       --model M [--task T] [--trials N] [--out DIR]
 //!   ir        --model M            (print the MASE IR)
 //!   check     [--sv PATH] [--model M] [--fmt F] [--bits N] [--chan W]
+//!   pack      --model M [--fmt F] [--bits N] [--out FILE.json|FILE.mxa]
+//!             (.mxa = content-addressed packed-weight artifact; load it
+//!              back with --weights for a zero-repack warm start)
 //!   formats   [--model llama-sim]  (Table 1-style format comparison)
 //!   generate  [--model toy-lm] [--tokens N] [--prompt-len N] [--seqs N] [--fmt F]
 //!             (KV-cached greedy decode on the CPU backend)
@@ -20,16 +29,17 @@
 //!
 //! `search`, `e2e`, `emit`, `sweep` and `generate` additionally accept
 //! `--trace [FILE]` (+ `--trace-format jsonl|chrome`) to record and
-//! export the deterministic trace/metrics stream and print a summary.
+//! export the deterministic trace/metrics stream, and — together with
+//! `serve` — `--weights FILE.mxa` to serve pre-packed weight tensors on
+//! the CPU backend with zero re-quantize and zero re-pack.
 
 use anyhow::{anyhow, Result};
-use mase::coordinator::pretrain;
-use mase::coordinator::{FlowConfig, PretrainConfig, Session, SweepConfig};
-use mase::data::Task;
+use mase::cli::{flag_usize, CommonArgs, Subcommand};
+use mase::coordinator::{cpu_backend_for, pretrain, PretrainConfig, Session};
 use mase::formats::FormatKind;
 use mase::runtime::{BackendKind, CpuBackend, ExecBackend};
-use mase::search::Algorithm;
 use mase::util::cli::Args;
+use std::path::{Path, PathBuf};
 
 fn main() {
     let args = Args::from_env();
@@ -39,80 +49,55 @@ fn main() {
     }
 }
 
-fn task_of(args: &Args) -> Result<Task> {
-    let name = args.get_or("task", "sst2");
-    Task::from_name(&name).ok_or_else(|| anyhow!("unknown task '{name}'"))
-}
-
 fn run(args: &Args) -> Result<()> {
-    let dir = args
-        .get("artifacts")
-        .map(std::path::PathBuf::from)
-        .unwrap_or_else(Session::default_dir);
-    let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
-    if sub == "help" {
-        println!("{}", HELP);
-        return Ok(());
-    }
-    if sub == "pack" {
-        // Packing is artifact-free: fall back to a synthetic model spec
-        // when no manifest is present instead of requiring a session.
-        return cmd_pack(args, &dir);
-    }
-    if sub == "check" {
-        // Static analysis is artifact-free too: no session or execution
-        // backend needed, only the IR and the emitter.
-        return cmd_check(args, &dir);
-    }
-    if sub == "trace" {
-        match args.get("run") {
+    let c = CommonArgs::parse(args)?;
+    let dir = c.artifacts.clone();
+    let open = || Session::open_for(&dir, c.backend);
+    match c.sub {
+        Subcommand::Help => println!("{}", HELP),
+        // Packing and static analysis are artifact-free: a synthetic
+        // model spec stands in when no manifest is present.
+        Subcommand::Pack => cmd_pack(&c, args, &dir)?,
+        Subcommand::Check => cmd_check(&c, args, &dir)?,
+        Subcommand::Trace => match args.get("run") {
             // default mode: artifact-free simulator tracing, like `check`
-            None => return cmd_trace(args, &dir),
+            None => cmd_trace(&c, args, &dir)?,
             // delegate: `mase trace --run sweep ...` == `mase sweep --trace ...`
             Some(mode @ ("e2e" | "sweep" | "generate")) => {
                 let mut fwd = args.clone();
                 fwd.subcommand = Some(mode.to_string());
+                fwd.flags.remove("run");
                 fwd.flags.entry("trace".to_string()).or_insert_with(|| "true".to_string());
                 return run(&fwd);
             }
-            Some(other) => {
-                return Err(anyhow!("--run must be e2e|sweep|generate, got '{other}'"))
-            }
-        }
-    }
-    let backend_name = args.get_or("backend", "pjrt");
-    let backend = BackendKind::from_name(&backend_name)
-        .ok_or_else(|| anyhow!("unknown backend '{backend_name}' (pjrt|cpu)"))?;
-    let session = Session::open_for(&dir, backend)?;
-
-    match sub.as_str() {
-        "pretrain" => {
+            Some(other) => return Err(anyhow!("--run must be e2e|sweep|generate, got '{other}'")),
+        },
+        Subcommand::Pretrain => {
             anyhow::ensure!(
-                backend == BackendKind::Pjrt,
+                c.backend == BackendKind::Pjrt,
                 "pretraining drives the PJRT `train` artifact; rerun without --backend cpu \
                  (the cpu backend evaluates cached or freshly-initialized weights instead)"
             );
-            let cfg = PretrainConfig {
-                steps: args.get_usize("steps", 220),
-                ..Default::default()
-            };
+            let session = open()?;
+            let cfg =
+                PretrainConfig { steps: flag_usize(args, "steps", 220)?, ..Default::default() };
             if args.has("all") {
                 pretrain::pretrain_all(&session, &cfg)?;
             } else {
-                let model = args.get("model").ok_or_else(|| anyhow!("--model required"))?;
+                let model = c.require_model()?;
                 let meta = session.manifest.model(model)?.clone();
-                let task = if meta.kind == "lm" { None } else { Some(task_of(args)?) };
+                let task = if meta.kind == "lm" { None } else { Some(c.task) };
                 pretrain::pretrain(&session, &meta, task, &cfg)?;
             }
             println!("pretraining done; weights in {}", dir.join("weights").display());
         }
-        "profile" => {
-            let model = args.get("model").ok_or_else(|| anyhow!("--model required"))?;
+        Subcommand::Profile => {
+            let session = open()?;
+            let model = c.require_model()?;
             let meta = session.manifest.model(model)?.clone();
-            let task = task_of(args)?;
-            let w = pretrain::pretrain(&session, &meta, Some(task), &Default::default())?;
-            let batches = mase::data::batches(task, 1, 2, meta.batch, meta.seq_len);
-            let p = match backend {
+            let w = pretrain::pretrain(&session, &meta, Some(c.task), &Default::default())?;
+            let batches = mase::data::batches(c.task, 1, 2, meta.batch, meta.seq_len);
+            let p = match c.backend {
                 BackendKind::Pjrt => {
                     mase::passes::profile_model(&session.pjrt_backend()?, &meta, &w, &batches)?
                 }
@@ -132,47 +117,25 @@ fn run(args: &Args) -> Result<()> {
             println!("{}", t.render());
             println!("variance spread (Fig 1a): {:.1}x", p.variance_spread());
         }
-        "search" | "e2e" | "emit" => {
-            let model = args.get("model").ok_or_else(|| anyhow!("--model required"))?;
-            let fmt = FormatKind::from_name(&args.get_or("fmt", "mxint"))
-                .ok_or_else(|| anyhow!("unknown format"))?;
-            let algorithm = Algorithm::from_name(&args.get_or("algorithm", "tpe"))
-                .ok_or_else(|| anyhow!("unknown algorithm"))?;
-            let emit_dir = if sub == "emit" || sub == "e2e" || args.has("out") {
+        Subcommand::Search | Subcommand::E2e | Subcommand::Emit => {
+            let session = open()?;
+            let model = c.require_model()?;
+            let emit_dir = if matches!(c.sub, Subcommand::E2e | Subcommand::Emit)
+                || c.out.is_some()
+            {
                 Some(
-                    args.get("out")
-                        .map(std::path::PathBuf::from)
+                    c.out
+                        .as_ref()
+                        .map(PathBuf::from)
                         .unwrap_or_else(|| dir.join("designs").join(model)),
                 )
             } else {
                 None
             };
-            let cfg = FlowConfig {
-                model: model.to_string(),
-                task: task_of(args)?,
-                fmt,
-                algorithm,
-                trials: args.get_usize("trials", 32),
-                eval_batches: args.get_usize("eval-batches", 4),
-                qat_steps: args.get_usize("qat-steps", 0),
-                hw_aware: !args.has("sw-only"),
-                seed: args.get_usize("seed", 0) as u64,
-                emit_dir: emit_dir.clone(),
-                pretrain_steps: args.get_usize("pretrain-steps", 220),
-                threads: args.threads(),
-                batch: args.get_usize("batch", 8),
-                cache_path: args.get("cache").map(std::path::PathBuf::from),
-                tpe_mean_lie: args.has("tpe-mean-lie"),
-                backend,
-                trace: args.has("trace"),
-            };
+            let cfg = c.flow_config(model, emit_dir.clone());
             let report = mase::coordinator::run_flow(&session, &cfg)?;
             let best = &report.outcome.best_eval;
-            println!(
-                "model: {model}  task: {}  format: {}",
-                args.get_or("task", "sst2"),
-                fmt.name()
-            );
+            println!("model: {model}  task: {}  format: {}", c.task.name(), c.fmt.name());
             println!("fp32 accuracy:       {:.4}", report.fp32_accuracy);
             println!(
                 "int8 baseline:       acc {:.4}, area-eff {:.3e}",
@@ -181,7 +144,7 @@ fn run(args: &Args) -> Result<()> {
             );
             println!(
                 "best {}: acc {:.4} (Δ {:+.4}), avg bits {:.2}, area-eff {:.3e} ({:.2}x int8), θ {:.0}/s, area {:.0} LUT",
-                fmt.name(),
+                c.fmt.name(),
                 best.accuracy,
                 best.accuracy - report.fp32_accuracy,
                 best.avg_bits,
@@ -204,49 +167,17 @@ fn run(args: &Args) -> Result<()> {
                 cs.misses,
                 cs.hits,
                 cs.hit_rate() * 100.0,
-                match args.get("cache") {
-                    Some(p) => format!(", {} entries persisted to {p}", cs.entries),
+                match &c.cache {
+                    Some(p) => format!(", {} entries persisted to {}", cs.entries, p.display()),
                     None => String::new(),
                 }
             );
             println!("\npass timing (Table 4):\n{}", report.pass_manager.report());
-            finish_trace(args, &report.trace)?;
+            finish_trace(&c, &report.trace)?;
         }
-        "sweep" => {
-            let list = |key: &str, default: &str| -> Vec<String> {
-                args.get_or(key, default).split(',').map(str::to_string).collect()
-            };
-            let tasks = match args.get_or("tasks", "all").as_str() {
-                "all" => Task::ALL.to_vec(),
-                csv => csv
-                    .split(',')
-                    .map(|t| Task::from_name(t).ok_or_else(|| anyhow!("unknown task '{t}'")))
-                    .collect::<Result<Vec<_>>>()?,
-            };
-            let fmts = list("fmts", "mxint,int")
-                .iter()
-                .map(|f| FormatKind::from_name(f).ok_or_else(|| anyhow!("unknown format '{f}'")))
-                .collect::<Result<Vec<_>>>()?;
-            let cfg = SweepConfig {
-                models: list("models", "opt-125m-sim,opt-350m-sim,opt-1.3b-sim"),
-                tasks,
-                fmts,
-                algorithm: Algorithm::from_name(&args.get_or("algorithm", "tpe"))
-                    .ok_or_else(|| anyhow!("unknown algorithm"))?,
-                trials: args.get_usize("trials", 24),
-                seed: args.get_usize("seed", 0) as u64,
-                batch: args.get_usize("batch", 8),
-                threads: args.threads(),
-                eval_batches: args.get_usize("eval-batches", 3),
-                pretrain_steps: args.get_usize("pretrain-steps", 220),
-                qat_steps: args.get_usize("qat-steps", 0),
-                qat_lr: args.get_f64("qat-lr", 0.002) as f32,
-                hw_aware: !args.has("sw-only"),
-                tpe_mean_lie: args.has("tpe-mean-lie"),
-                cache_path: args.get("cache").map(std::path::PathBuf::from),
-                backend,
-                trace: args.has("trace"),
-            };
+        Subcommand::Sweep => {
+            let session = open()?;
+            let cfg = c.sweep_config();
             let report = mase::coordinator::run_sweep(&session, &cfg)?;
             if let Some(note) = &report.load_note {
                 println!("eval cache: {note}");
@@ -285,33 +216,48 @@ fn run(args: &Args) -> Result<()> {
                     println!("(in-memory cache only; pass --cache FILE to persist across runs)")
                 }
             }
-            finish_trace(args, &report.trace)?;
+            finish_trace(&c, &report.trace)?;
         }
-        "ir" => {
-            let model = args.get("model").ok_or_else(|| anyhow!("--model required"))?;
+        Subcommand::Ir => {
+            let session = open()?;
+            let model = c.require_model()?;
             let meta = session.manifest.model(model)?;
             let g = mase::frontend::build_graph(meta);
             println!("{}", mase::ir::print_graph(&g));
             println!("// DAG size: {} ops", g.dag_size());
         }
-        "formats" => match backend {
-            BackendKind::Pjrt => cmd_formats(&session, args, session.pjrt_backend()?)?,
-            BackendKind::Cpu => cmd_formats(&session, args, CpuBackend::new())?,
-        },
-        "generate" => match backend {
-            BackendKind::Pjrt => cmd_generate(&session, args, session.pjrt_backend()?)?,
-            BackendKind::Cpu => cmd_generate(&session, args, CpuBackend::new())?,
-        },
-        "serve" => {
+        Subcommand::Formats => {
+            let session = open()?;
+            match c.backend {
+                BackendKind::Pjrt => cmd_formats(&session, &c, session.pjrt_backend()?)?,
+                BackendKind::Cpu => cmd_formats(&session, &c, CpuBackend::new())?,
+            }
+        }
+        Subcommand::Generate => {
+            let session = open()?;
+            match c.backend {
+                BackendKind::Pjrt => {
+                    anyhow::ensure!(
+                        c.weights.is_none(),
+                        "--weights is a packed-CPU-backend feature: the PJRT backend feeds raw \
+                         f32 weights to the device and cannot serve a .mxa artifact \
+                         (use --backend cpu)"
+                    );
+                    cmd_generate(&session, &c, args, session.pjrt_backend()?)?
+                }
+                BackendKind::Cpu => {
+                    cmd_generate(&session, &c, args, cpu_backend_for(c.weights.as_deref())?)?
+                }
+            }
+        }
+        Subcommand::Serve => {
             anyhow::ensure!(
-                backend == BackendKind::Cpu,
+                c.backend == BackendKind::Cpu,
                 "serving runs on the incremental decode engine, which only the CPU \
                  interpreter implements; rerun with --backend cpu"
             );
-            cmd_serve(&session, args)?;
-        }
-        other => {
-            return Err(anyhow!("unknown subcommand '{other}'\n{HELP}"));
+            let session = open()?;
+            cmd_serve(&session, &c, args)?;
         }
     }
     Ok(())
@@ -319,13 +265,13 @@ fn run(args: &Args) -> Result<()> {
 
 /// `mase formats` — Table 1-style quick comparison on the LM, over
 /// either execution backend.
-fn cmd_formats<B: ExecBackend>(session: &Session, args: &Args, backend: B) -> Result<()> {
-    let model = args.get_or("model", "llama-sim");
+fn cmd_formats<B: ExecBackend>(session: &Session, c: &CommonArgs, backend: B) -> Result<()> {
+    let model = c.model_or("llama-sim");
     let meta = session.manifest.model(&model)?.clone();
     anyhow::ensure!(meta.kind == "lm", "formats comparison runs on the LM simulant");
     let w = pretrain::pretrain(session, &meta, None, &Default::default())?;
     let corpus = mase::data::MarkovCorpus::new(7);
-    let n_batches = args.get_usize("eval-batches", 4);
+    let n_batches = c.eval_batches.unwrap_or(4);
     let mut bs = Vec::new();
     for i in 0..n_batches {
         let toks = corpus.batch(1000 + i as u64, meta.batch, meta.seq_len);
@@ -340,14 +286,8 @@ fn cmd_formats<B: ExecBackend>(session: &Session, args: &Args, backend: B) -> Re
     let profile = mase::passes::profile_model(&ev.backend, &meta, &w, &bs[..1])?;
     let mut t =
         mase::util::Table::new(vec!["format", "config", "perplexity", "mem density", "arith density"]);
-    for (fmt, bits) in [
-        (FormatKind::Fp32, 32.0f32),
-        (FormatKind::Int, 8.0),
-        (FormatKind::Fp8, 8.0),
-        (FormatKind::MxInt, 7.0),
-        (FormatKind::Bmf, 5.0),
-        (FormatKind::Bl, 7.0),
-    ] {
+    for fmt in FormatKind::ALL {
+        let bits = mase::formats::FormatSpec::default_bits(fmt);
         let sol = mase::passes::QuantSolution::uniform(fmt, bits, &meta, &profile);
         let acc = ev.accuracy(&sol)?;
         let p = mase::formats::Precision::new(bits, sol.fracs[0]);
@@ -368,26 +308,26 @@ fn cmd_formats<B: ExecBackend>(session: &Session, args: &Args, backend: B) -> Re
 /// plumbing. Prompts come from the deterministic Markov corpus, so a
 /// fixed seed yields bit-identical token streams at any `--threads`.
 /// Only the CPU backend has the engine; PJRT bails with a pointer.
-fn cmd_generate<B: ExecBackend>(session: &Session, args: &Args, backend: B) -> Result<()> {
-    let model = args.get_or("model", "toy-lm");
+/// With `--weights model.mxa` the backend serves pre-packed weight
+/// tensors — the printed "weight packs in-session" count drops to 0.
+fn cmd_generate<B: ExecBackend>(
+    session: &Session,
+    c: &CommonArgs,
+    args: &Args,
+    backend: B,
+) -> Result<()> {
+    let model = c.model_or("toy-lm");
     let meta = session.manifest.model(&model)?.clone();
     anyhow::ensure!(
         meta.kind == "lm",
         "generation needs a causal LM; '{model}' is a {} (try --model toy-lm or llama-sim)",
         meta.kind
     );
-    let fmt = FormatKind::from_name(&args.get_or("fmt", "mxint"))
-        .ok_or_else(|| anyhow!("unknown format"))?;
-    let default_bits = match fmt {
-        FormatKind::Fp32 => 32.0,
-        FormatKind::Bmf => 5.0,
-        FormatKind::Int | FormatKind::Fp8 => 8.0,
-        FormatKind::MxInt | FormatKind::Bl => 7.0,
-    };
-    let bits = args.get_f64("bits", default_bits) as f32;
-    let n_seqs = args.get_usize("seqs", meta.batch);
-    let prompt_len = args.get_usize("prompt-len", (meta.seq_len / 2).max(1));
-    let n_tokens = args.get_usize("tokens", 8);
+    let spec = c.spec();
+    let (fmt, bits) = (spec.kind, spec.bits);
+    let n_seqs = flag_usize(args, "seqs", meta.batch)?;
+    let prompt_len = flag_usize(args, "prompt-len", (meta.seq_len / 2).max(1))?;
+    let n_tokens = flag_usize(args, "tokens", 8)?;
     anyhow::ensure!(
         prompt_len >= 1 && prompt_len + n_tokens <= meta.seq_len,
         "prompt {prompt_len} + {n_tokens} new tokens must fit model seq_len {}",
@@ -397,16 +337,18 @@ fn cmd_generate<B: ExecBackend>(session: &Session, args: &Args, backend: B) -> R
     let prompts = mase::data::MarkovCorpus::new(7).batch(4242, n_seqs, prompt_len);
     let profile = mase::passes::ProfileData::uniform(&meta, 4.0);
     let sol = mase::passes::QuantSolution::uniform(fmt, bits, &meta, &profile);
+    // Tally from before the evaluator exists, so artifact-backed runs can
+    // prove zero pack calls across the WHOLE session, not just decode.
+    let tally_before = mase::packed::kernel_tally();
     let ev = mase::passes::Evaluator::new(backend, &meta, &w, &[])?;
-    let threads = args.threads();
+    let threads = c.threads;
     // PR 8 observability: with --trace, record the decode's counted work
     // and the packed-kernel dispatch delta at this single-threaded point.
-    let reg = if args.has("trace") {
+    let reg = if c.trace_enabled() {
         mase::obs::Registry::new()
     } else {
         mase::obs::Registry::disabled()
     };
-    let tally_before = mase::packed::kernel_tally();
     let span = reg
         .span("decode/run")
         .tag("model", meta.name.as_str())
@@ -414,7 +356,8 @@ fn cmd_generate<B: ExecBackend>(session: &Session, args: &Args, backend: B) -> R
     let r = ev.decode(&sol, &prompts, n_seqs, prompt_len, n_tokens, threads)?;
     drop(span);
     r.stats.record_to(&reg, "decode/run");
-    mase::packed::kernel_tally().delta(&tally_before).record_to(&reg, "kernels");
+    let kernels = mase::packed::kernel_tally().delta(&tally_before);
+    kernels.record_to(&reg, "kernels");
 
     // The CI decode smoke greps the final line; keep these checks fatal.
     anyhow::ensure!(
@@ -440,6 +383,10 @@ fn cmd_generate<B: ExecBackend>(session: &Session, args: &Args, backend: B) -> R
         "attention work: {} cached score dots over {} steps (prefill rows: {}, prefill dots: {})",
         r.stats.decode_score_dots, r.stats.steps, r.stats.full_attn_rows, r.stats.full_score_dots
     );
+    println!(
+        "weight packs in-session: {} (0 = every weight tensor served from a --weights artifact)",
+        kernels.weight_packs
+    );
     let per_tok_ms = r.decode_seconds * 1e3 / (n_seqs * n_tokens).max(1) as f64;
     let prefill_ms = r.prefill_seconds * 1e3 / (n_seqs * prompt_len).max(1) as f64;
     println!(
@@ -450,7 +397,7 @@ fn cmd_generate<B: ExecBackend>(session: &Session, args: &Args, backend: B) -> R
         per_tok_ms,
         prefill_ms
     );
-    finish_trace(args, &reg)?;
+    finish_trace(c, &reg)?;
     Ok(())
 }
 
@@ -459,35 +406,32 @@ fn cmd_generate<B: ExecBackend>(session: &Session, args: &Args, backend: B) -> R
 /// listener. Blocks until the process is terminated (no signal handler
 /// in the vendored set — SIGTERM's default disposition is the shutdown
 /// path, fine for a `connection: close` service with no durable state).
-fn cmd_serve(session: &Session, args: &Args) -> Result<()> {
+/// `--weights model.mxa` warm-starts the engine from pre-packed tensors.
+fn cmd_serve(session: &Session, c: &CommonArgs, args: &Args) -> Result<()> {
     use mase::serve::{BatchEngine, ServeConfig, ServeInfo, ServeOptions};
-    let model = args.get_or("model", "toy-lm");
+    let model = c.model_or("toy-lm");
     let meta = session.manifest.model(&model)?.clone();
     anyhow::ensure!(
         meta.kind == "lm",
         "serving needs a causal LM; '{model}' is a {} (try --model toy-lm or llama-sim)",
         meta.kind
     );
-    let fmt = FormatKind::from_name(&args.get_or("fmt", "mxint"))
-        .ok_or_else(|| anyhow!("unknown format"))?;
-    let default_bits = match fmt {
-        FormatKind::Fp32 => 32.0,
-        FormatKind::Bmf => 5.0,
-        FormatKind::Int | FormatKind::Fp8 => 8.0,
-        FormatKind::MxInt | FormatKind::Bl => 7.0,
-    };
-    let bits = args.get_f64("bits", default_bits) as f32;
+    let spec = c.spec();
+    let (fmt, bits) = (spec.kind, spec.bits);
     let w = pretrain::pretrain(session, &meta, None, &Default::default())?;
     let profile = mase::passes::ProfileData::uniform(&meta, 4.0);
     let qcfg = mase::passes::QuantSolution::uniform(fmt, bits, &meta, &profile).to_qconfig();
-    let be = CpuBackend::new();
+    let be = cpu_backend_for(c.weights.as_deref())?;
+    if let (Some(p), Some(h)) = (&c.weights, be.weights_hash()) {
+        println!("packed weights: {} (content {})", p.display(), mase::util::hex16(h));
+    }
     let graph = be.prepare(&meta, &w, &[])?;
-    let lanes = args.get_usize("lanes", 4);
+    let lanes = flag_usize(args, "lanes", 4)?;
     let cfg = ServeConfig {
         lanes,
-        queue_cap: args.get_usize("queue-cap", 32),
-        queue_timeout_ms: args.get_usize("queue-timeout-ms", 2000) as u64,
-        default_max_tokens: args.get_usize("max-tokens", 8),
+        queue_cap: flag_usize(args, "queue-cap", 32)?,
+        queue_timeout_ms: flag_usize(args, "queue-timeout-ms", 2000)? as u64,
+        default_max_tokens: flag_usize(args, "max-tokens", 8)?,
     };
     let mut engine = BatchEngine::new(&be, &graph, &meta, &w, fmt.name(), &qcfg, lanes)?;
     let info = ServeInfo {
@@ -500,8 +444,8 @@ fn cmd_serve(session: &Session, args: &Args) -> Result<()> {
         width: engine.width(),
     };
     let opts = ServeOptions {
-        port: args.get_usize("port", 0) as u16,
-        http_workers: args.get_usize("http-workers", 4),
+        port: flag_usize(args, "port", 0)? as u16,
+        http_workers: flag_usize(args, "http-workers", 4)?,
         cfg,
     };
     // always record: /metrics is the service's observability surface
@@ -514,7 +458,7 @@ fn cmd_serve(session: &Session, args: &Args) -> Result<()> {
 /// writes the event stream: `--trace-format jsonl` (default, the
 /// deterministic `mase-trace` stream) or `chrome` (wall-clock span
 /// timelines for chrome://tracing / Perfetto).
-fn finish_trace(args: &Args, reg: &mase::obs::Registry) -> Result<()> {
+fn finish_trace(c: &CommonArgs, reg: &mase::obs::Registry) -> Result<()> {
     if !reg.is_enabled() {
         return Ok(());
     }
@@ -522,11 +466,11 @@ fn finish_trace(args: &Args, reg: &mase::obs::Registry) -> Result<()> {
     if !summary.is_empty() {
         print!("\n{}", summary.render());
     }
-    let Some(path) = args.get("trace").filter(|p| *p != "true") else {
+    let Some(path) = c.trace_file() else {
         return Ok(());
     };
-    let format = args.get_or("trace-format", "jsonl");
-    let body = match format.as_str() {
+    let format = c.trace_format.as_deref().unwrap_or("jsonl");
+    let body = match format {
         "jsonl" => mase::obs::jsonl::render(reg),
         "chrome" => format!("{}\n", mase::obs::chrome::registry_chrome_json(reg)),
         other => return Err(anyhow!("unknown --trace-format '{other}' (jsonl|chrome)")),
@@ -538,28 +482,38 @@ fn finish_trace(args: &Args, reg: &mase::obs::Registry) -> Result<()> {
 
 /// `mase pack` — dump the measured bit-packed layout and storage of every
 /// quantization-searchable tensor of a model (the numbers `hw::memory`
-/// budgets with), next to the analytic Eq. (1) bits, optionally as a JSON
-/// manifest. Uses `artifacts/manifest.json` when present, else a
-/// synthetic model spec from `--layers/--d-model/--heads/--vocab/--seq`.
-fn cmd_pack(args: &Args, dir: &std::path::Path) -> Result<()> {
+/// budgets with), next to the analytic Eq. (1) bits. With `--out`:
+///
+///  * `FILE.mxa` — pack the model's REAL weights (cached pretrained
+///    weights when present, else the deterministic init — exactly what a
+///    CPU-backend session evaluates) into the content-addressed packed
+///    artifact container. Load it back with `--weights FILE.mxa` for a
+///    warm start with zero re-quantize and zero re-pack.
+///  * anything else — the JSON layout manifest; its per-tensor weight
+///    rows render through the same `TensorDesc` structs the `.mxa`
+///    manifest serializes.
+///
+/// Uses `artifacts/manifest.json` when present, else a synthetic model
+/// spec (`--layers/--d-model/--heads/--vocab/--seq` in table/JSON mode;
+/// the synthetic zoo a CPU session would build in `.mxa` mode).
+fn cmd_pack(c: &CommonArgs, args: &Args, dir: &Path) -> Result<()> {
     use mase::formats::Precision;
     use mase::packed::layout::{packed_bits_for, ElemLayout};
+    use mase::packed::{source_hash, TensorDesc};
     use mase::util::json::Json;
     use std::collections::BTreeMap;
 
-    let fmt = FormatKind::from_name(&args.get_or("fmt", "mxint"))
-        .ok_or_else(|| anyhow!("unknown format"))?;
-    let default_bits = match fmt {
-        FormatKind::Fp32 => 32.0,
-        FormatKind::Bmf => 5.0,
-        FormatKind::Int | FormatKind::Fp8 => 8.0,
-        FormatKind::MxInt | FormatKind::Bl => 7.0,
-    };
-    let bits = args.get_f64("bits", default_bits) as f32;
-    let frac = args.get_f64("frac", 0.0) as f32;
-    let model = args.get_or("model", "opt-125m-sim");
+    let spec = c.spec();
+    let (fmt, bits, frac) = (spec.kind, spec.bits, spec.frac);
+    let model = c.model_or("opt-125m-sim");
+    let to_mxa = c.out.as_deref().is_some_and(|o| o.ends_with(".mxa"));
     let meta = match mase::frontend::Manifest::load(dir) {
         Ok(man) => man.model(&model)?.clone(),
+        // A `.mxa` must describe the graph a warm `--backend cpu` session
+        // will build, and manifest-less CPU sessions fall back to the
+        // synthetic zoo (`Session::open_for`) — so the artifact path
+        // falls back the same way instead of to the hand-tuned spec.
+        Err(_) if to_mxa => mase::frontend::Manifest::synthetic().model(&model)?.clone(),
         Err(_) => {
             println!(
                 "(no manifest under {}; using a synthetic spec for '{model}' — \
@@ -568,16 +522,26 @@ fn cmd_pack(args: &Args, dir: &std::path::Path) -> Result<()> {
             );
             mase::frontend::ModelMeta::synthetic(
                 &model,
-                args.get_usize("layers", 2),
-                args.get_usize("d-model", 64),
-                args.get_usize("heads", 2),
-                args.get_usize("vocab", 512),
-                args.get_usize("seq", 32),
+                flag_usize(args, "layers", 2)?,
+                flag_usize(args, "d-model", 64)?,
+                flag_usize(args, "heads", 2)?,
+                flag_usize(args, "vocab", 512)?,
+                flag_usize(args, "seq", 32)?,
                 4,
                 "classifier",
                 8,
             )
         }
+    };
+
+    // The exact f32 bits a warm CPU-backend session will evaluate:
+    // cached pretrained weights when present, else the deterministic
+    // init — these are what the manifest's source hashes key on.
+    let task = if meta.kind == "lm" { None } else { Some(c.task) };
+    let weights = match Session::open_for(dir, BackendKind::Cpu) {
+        Ok(session) => pretrain::pretrain(&session, &meta, task, &Default::default())?,
+        Err(_) if !to_mxa => mase::frontend::init_params(&meta, 0xC0DE),
+        Err(e) => return Err(e),
     };
 
     let mut g = mase::frontend::build_graph(&meta);
@@ -617,9 +581,30 @@ fn cmd_pack(args: &Args, dir: &std::path::Path) -> Result<()> {
         ]);
         tot_analytic += analytic;
         tot_packed += packed;
-        let mut o = BTreeMap::new();
-        o.insert("name".to_string(), Json::Str(v.name.clone()));
-        o.insert("kind".to_string(), Json::Str(kind.to_string()));
+        // Weight rows render through the shared TensorDesc — the same
+        // struct the .mxa manifest serializes; activations have no
+        // packed-on-disk form and keep a plain record.
+        let pspec = meta.param_spec.iter().find(|s| s.name == v.name);
+        let mut o = match (kind, &v.ty.shape[..], pspec) {
+            ("weight", [rows, cols], Some(ps)) => {
+                let sz: usize = ps.shape.iter().product();
+                TensorDesc {
+                    name: v.name.clone(),
+                    kind: kind.to_string(),
+                    rows: *rows,
+                    cols: *cols,
+                    layout: ElemLayout::new(v.ty.format, v.ty.precision),
+                    source_hash: source_hash(&weights[ps.offset..ps.offset + sz]),
+                }
+                .to_json()
+            }
+            _ => {
+                let mut o = BTreeMap::new();
+                o.insert("name".to_string(), Json::Str(v.name.clone()));
+                o.insert("kind".to_string(), Json::Str(kind.to_string()));
+                o
+            }
+        };
         o.insert(
             "shape".to_string(),
             Json::Arr(v.ty.shape.iter().map(|&d| Json::Num(d as f64)).collect()),
@@ -637,7 +622,23 @@ fn cmd_pack(args: &Args, dir: &std::path::Path) -> Result<()> {
         (tot_packed as f64 / tot_analytic - 1.0) * 100.0,
     );
 
-    if let Some(out) = args.get("out") {
+    let Some(out) = &c.out else { return Ok(()) };
+    if to_mxa {
+        // Pack through the interpreter's own path (same names, layouts
+        // and qconfig as `generate`/`serve` uniform runs), then write the
+        // content-addressed container atomically.
+        let raw = mase::frontend::build_graph(&meta);
+        let profile = mase::passes::ProfileData::uniform(&meta, 4.0);
+        let qcfg = mase::passes::QuantSolution::uniform(fmt, bits, &meta, &profile).to_qconfig();
+        let writer = mase::runtime::build_weights_artifact(&meta, &raw, &weights, spec, &qcfg)?;
+        let n_tensors = writer.tensor_descs().count();
+        let hash = writer.write_to(Path::new(out))?;
+        println!(
+            "packed artifact written to {out}: {n_tensors} tensors, content {}",
+            mase::util::hex16(hash)
+        );
+        println!("(load it back with --weights {out} on cpu-backend commands for a zero-repack warm start)");
+    } else {
         let mut root = BTreeMap::new();
         root.insert("schema".to_string(), Json::Str("mase-pack-manifest".to_string()));
         root.insert("version".to_string(), Json::Num(1.0));
@@ -649,7 +650,9 @@ fn cmd_pack(args: &Args, dir: &std::path::Path) -> Result<()> {
         root.insert("pad_bits_per_block".to_string(), Json::Num(lay.padding_bits_per_group() as f64));
         root.insert("total_packed_bits".to_string(), Json::Num(tot_packed as f64));
         root.insert("tensors".to_string(), Json::Arr(tensors));
-        std::fs::write(out, format!("{}\n", Json::Obj(root)))?;
+        // .tmp + rename: a re-pack over an existing manifest can never
+        // leave a half-written file behind
+        mase::util::write_atomic(Path::new(out), format!("{}\n", Json::Obj(root)).as_bytes())?;
         println!("layout manifest written to {out}");
     }
     Ok(())
@@ -668,11 +671,11 @@ fn cmd_pack(args: &Args, dir: &std::path::Path) -> Result<()> {
 ///
 /// This drives the same `check::` entry points as the emit-pass gate
 /// and the ci.sh `check` stage.
-fn cmd_check(args: &Args, dir: &std::path::Path) -> Result<()> {
+fn cmd_check(c: &CommonArgs, args: &Args, dir: &Path) -> Result<()> {
     use std::collections::BTreeMap;
 
     let report = if let Some(path) = args.get("sv") {
-        let p = std::path::Path::new(&path);
+        let p = Path::new(path);
         let mut files = BTreeMap::new();
         if p.is_dir() {
             for entry in std::fs::read_dir(p)? {
@@ -689,27 +692,26 @@ fn cmd_check(args: &Args, dir: &std::path::Path) -> Result<()> {
             let name = p
                 .file_name()
                 .map(|n| n.to_string_lossy().to_string())
-                .unwrap_or_else(|| path.clone());
+                .unwrap_or_else(|| path.to_string());
             files.insert(name, std::fs::read_to_string(p)?);
         }
         anyhow::ensure!(!files.is_empty(), "no .sv files under {path}");
         println!("checking {} SV file(s) from {path}", files.len());
         mase::check::check_sv_files(&files)
     } else {
-        let fmt = FormatKind::from_name(&args.get_or("fmt", "mxint"))
-            .ok_or_else(|| anyhow!("unknown format"))?;
-        let bits = args.get_f64("bits", 5.0) as f32;
-        let chan = args.get_usize("chan", mase::hw::DEFAULT_CHANNEL_BITS as usize) as u64;
-        let model = args.get_or("model", "opt-125m-sim");
+        let fmt = c.fmt;
+        let bits = c.bits_or(5.0);
+        let chan = flag_usize(args, "chan", mase::hw::DEFAULT_CHANNEL_BITS as usize)? as u64;
+        let model = c.model_or("opt-125m-sim");
         let meta = match mase::frontend::Manifest::load(dir) {
             Ok(man) => man.model(&model)?.clone(),
             Err(_) => mase::frontend::ModelMeta::synthetic(
                 &model,
-                args.get_usize("layers", 2),
-                args.get_usize("d-model", 32),
-                args.get_usize("heads", 2),
-                args.get_usize("vocab", 512),
-                args.get_usize("seq", 32),
+                flag_usize(args, "layers", 2)?,
+                flag_usize(args, "d-model", 32)?,
+                flag_usize(args, "heads", 2)?,
+                flag_usize(args, "vocab", 512)?,
+                flag_usize(args, "seq", 32)?,
                 4,
                 "classifier",
                 64,
@@ -754,23 +756,22 @@ fn cmd_check(args: &Args, dir: &std::path::Path) -> Result<()> {
 /// `--run e2e|sweep|generate` instead delegates to that subcommand with
 /// tracing forced on (`mase trace --run sweep ...` == `mase sweep
 /// --trace ...`).
-fn cmd_trace(args: &Args, dir: &std::path::Path) -> Result<()> {
-    let fmt = FormatKind::from_name(&args.get_or("fmt", "mxint"))
-        .ok_or_else(|| anyhow!("unknown format"))?;
-    let bits = args.get_f64("bits", 5.0) as f32;
-    let chan = args.get_usize("chan", mase::hw::DEFAULT_CHANNEL_BITS as usize) as u64;
-    let inferences = args.get_usize("inferences", 8) as u64;
-    let fifo_depth = args.get_usize("fifo", 4) as u64;
-    let model = args.get_or("model", "opt-125m-sim");
+fn cmd_trace(c: &CommonArgs, args: &Args, dir: &Path) -> Result<()> {
+    let fmt = c.fmt;
+    let bits = c.bits_or(5.0);
+    let chan = flag_usize(args, "chan", mase::hw::DEFAULT_CHANNEL_BITS as usize)? as u64;
+    let inferences = flag_usize(args, "inferences", 8)? as u64;
+    let fifo_depth = flag_usize(args, "fifo", 4)? as u64;
+    let model = c.model_or("opt-125m-sim");
     let meta = match mase::frontend::Manifest::load(dir) {
         Ok(man) => man.model(&model)?.clone(),
         Err(_) => mase::frontend::ModelMeta::synthetic(
             &model,
-            args.get_usize("layers", 2),
-            args.get_usize("d-model", 32),
-            args.get_usize("heads", 2),
-            args.get_usize("vocab", 512),
-            args.get_usize("seq", 32),
+            flag_usize(args, "layers", 2)?,
+            flag_usize(args, "d-model", 32)?,
+            flag_usize(args, "heads", 2)?,
+            flag_usize(args, "vocab", 512)?,
+            flag_usize(args, "seq", 32)?,
             4,
             "classifier",
             64,
@@ -799,9 +800,9 @@ fn cmd_trace(args: &Args, dir: &std::path::Path) -> Result<()> {
         trace.stalls.len(),
     );
 
-    let format = args.get_or("trace-format", "chrome");
-    let out = args.get_or("out", "trace.json");
-    let body = match format.as_str() {
+    let format = c.trace_format.as_deref().unwrap_or("chrome");
+    let out = c.out.clone().unwrap_or_else(|| "trace.json".to_string());
+    let body = match format {
         "chrome" => format!("{}\n", mase::obs::chrome::sim_chrome_json(&nodes, &report, &trace)),
         "jsonl" => {
             // Fold the sim accounting into a trace registry: counters
@@ -855,14 +856,18 @@ usage: mase <subcommand> [flags]
             contracts, exits nonzero on error diagnostics; default mode
             emits a design in memory and checks it end to end, --sv
             analyzes .sv files on disk; artifact-free)
-  pack     --model M [--fmt F] [--bits N] [--frac N] [--out FILE.json]
+  pack     --model M [--task T] [--fmt F] [--bits N] [--frac N] [--out FILE.json|FILE.mxa]
            (measured bit-packed layout + bytes per tensor vs analytic
-            Eq. 1; artifact-free — synthesizes a model spec if needed)
+            Eq. 1; artifact-free — synthesizes a model spec if needed.
+            --out FILE.mxa packs the model's real weights into the
+            content-addressed .mxa container instead: chunked, FNV-1a/64
+            hashed, streamed back by --weights with zero re-pack)
   formats  [--model llama-sim]
   generate [--model toy-lm] [--tokens N] [--prompt-len N] [--seqs N] [--fmt F] [--bits N]
            (KV-cached greedy decode through the incremental engine;
-            needs --backend cpu — prints ms/token and the counted
-            attention work; bit-identical output at any --threads)
+            needs --backend cpu — prints ms/token, the counted attention
+            work and the in-session weight-pack count; bit-identical
+            output at any --threads)
   serve    [--model toy-lm] [--fmt F] [--bits N] [--port N] [--lanes N]
            [--queue-cap N] [--queue-timeout-ms N] [--max-tokens N]
            [--http-workers N]
@@ -883,6 +888,11 @@ common: --artifacts DIR (default ./artifacts)
             search/e2e/sweep/profile/formats run on a bare host, scored
             under disjoint eval-cache scopes; no QAT, untrained weights
             unless artifacts/weights/ has cached ones)
+        --weights FILE.mxa (cpu backend, search/e2e/emit/sweep/generate/
+            serve: stream pre-packed weight tensors from a `mase pack
+            --out FILE.mxa` artifact — zero re-quantize/re-pack on
+            matching tensors, loader fails closed on corruption, and the
+            artifact's content hash joins the eval-cache scope)
         --threads N (search eval workers; 0 = auto, also MASE_THREADS)
         --batch N   (search proposals per ask/tell round, default 8)
         --cache FILE (persistent eval cache for search/sweep/e2e/emit)

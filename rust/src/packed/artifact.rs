@@ -1,0 +1,854 @@
+//! The `.mxa` packed-weight artifact: a content-addressed binary
+//! container that moves [`super::layout::PackedTensor`]s between
+//! processes, so a warm session loads packed weights with **zero
+//! re-quantize and zero re-pack** (the ROADMAP "serving restarts in
+//! milliseconds" substrate).
+//!
+//! ## On-disk layout
+//!
+//! ```text
+//! offset 0    "MXA1 " + 16 lowercase hex digits (manifest byte length) + "\n"   (22 bytes)
+//! offset 22   manifest: one JSON object (crate::util::json rendering)
+//! ...         zero padding to the next 64-byte boundary  ("data base")
+//! data base   chunk 0, chunk 1, ... — each chunk starts 64-byte aligned
+//!             (mmap-friendly), zero-padded between chunks
+//! ```
+//!
+//! The manifest carries, per tensor, the exact [`ElemLayout`] parameters
+//! (format tag, resolved knob/frac, element bits, shared-exponent bits —
+//! block geometry and padding rules follow from those via the layout
+//! module's single set of equations), the tensor shape, an FNV-1a/64
+//! hash of the *source* f32 weights (little-endian bytes), and indices
+//! into a chunk table. Block formats store two chunks (shared-exponent
+//! bytes, then packed `u64` words as little-endian bytes); element-wise
+//! formats store only the words chunk. Every chunk entry records its
+//! offset **relative to the data base**, byte length, and FNV-1a/64 hash.
+//!
+//! Per the PR 2 convention, every integer in the manifest crosses JSON as
+//! a fixed-width 16-digit lowercase hex string (`{:016x}`), never a lossy
+//! f64 number; signed fields use the two's-complement `u64` bit pattern.
+//!
+//! The **artifact content hash** is FNV-1a/64 over the manifest bytes.
+//! Since the manifest embeds every chunk hash, every layout and every
+//! source hash, it content-addresses the entire artifact — `CacheStore`
+//! eval scopes append it so cached objectives are keyed to the exact
+//! weight bits they were measured on.
+//!
+//! ## Failure discipline
+//!
+//! Loading **fails closed**: a bad magic/version/schema, a malformed or
+//! truncated manifest, an out-of-bounds or misaligned chunk, a length
+//! mismatch against the layout's own sizing equations, or a chunk hash
+//! mismatch all return an error *naming the offending tensor or chunk* —
+//! never a silently partial weight set. (Contrast `CacheStore`, which
+//! fails *open* to a cold cache: stale memos are recomputable, wrong
+//! weights are not.)
+
+use super::layout::{ElemLayout, PackedTensor, GROUP_ELEMS};
+use crate::formats::{FormatKind, FormatSpec, Precision, BLOCK_SHAPE};
+use crate::util::json::Json;
+use crate::util::{hex16, hex_u64};
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::path::Path;
+use std::sync::Arc;
+
+/// Magic string of the fixed-size first line (includes the version).
+pub const ARTIFACT_MAGIC: &str = "MXA1 ";
+/// Manifest schema tag.
+pub const ARTIFACT_SCHEMA: &str = "mase-packed-artifact";
+/// Container version. Bump on any change to the header, manifest key
+/// set, chunk encoding, or the packed bit layouts themselves; old
+/// readers then refuse the file (fail closed — unlike the eval cache,
+/// wrong weights are not recomputable).
+pub const ARTIFACT_VERSION: u64 = 1;
+/// Chunk (and data-base) alignment in bytes.
+pub const CHUNK_ALIGN: u64 = 64;
+/// Header line length: `"MXA1 "` + 16 hex digits + `"\n"`.
+pub const HEADER_LEN: usize = 22;
+
+// ------------------------------------------------------------ hashing --
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Incremental FNV-1a/64 — the container's only hash. Chunks are hashed
+/// streaming, sub-buffer by sub-buffer, so validation never needs a
+/// second pass over the bytes.
+#[derive(Debug, Clone, Copy)]
+pub struct Fnv1a(u64);
+
+impl Fnv1a {
+    pub fn new() -> Fnv1a {
+        Fnv1a(FNV_OFFSET)
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut h = self.0;
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+        self.0 = h;
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One-shot FNV-1a/64 of a byte slice.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = Fnv1a::new();
+    h.update(bytes);
+    h.finish()
+}
+
+/// Content hash of a source f32 weight vector: FNV-1a/64 over its
+/// little-endian bytes. This keys artifact tensors to the exact bits
+/// they were packed from, so a loader can prove an artifact tensor
+/// matches the weights a session would otherwise pack in memory.
+pub fn source_hash(weights: &[f32]) -> u64 {
+    let mut h = Fnv1a::new();
+    let mut buf = [0u8; 4];
+    for v in weights {
+        buf.copy_from_slice(&v.to_le_bytes());
+        h.update(&buf);
+    }
+    h.finish()
+}
+
+// ------------------------------------------------- shared descriptors --
+
+/// Per-tensor descriptor — the ONE struct both the `mase pack` JSON
+/// manifest and the `.mxa` manifest render through, so the two surfaces
+/// can never disagree about a tensor's layout fields.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorDesc {
+    pub name: String,
+    /// `"weight"` (matmul parameter) or `"embed"` (embedding table).
+    pub kind: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub layout: ElemLayout,
+    /// FNV-1a/64 of the source f32 weights ([`source_hash`]).
+    pub source_hash: u64,
+}
+
+impl TensorDesc {
+    /// Describe a packed tensor built from `source` f32 weights.
+    pub fn for_tensor(name: &str, kind: &str, t: &PackedTensor, source: &[f32]) -> TensorDesc {
+        TensorDesc {
+            name: name.to_string(),
+            kind: kind.to_string(),
+            rows: t.rows,
+            cols: t.cols,
+            layout: t.layout,
+            source_hash: source_hash(source),
+        }
+    }
+
+    /// The shared JSON rendering (integers as fixed-width hex). Callers
+    /// may extend the returned object with surface-specific fields
+    /// (chunk indices for `.mxa`, analytic/packed bit counts for the
+    /// pack manifest) but never re-render these.
+    pub fn to_json(&self) -> BTreeMap<String, Json> {
+        let mut o = BTreeMap::new();
+        o.insert("name".into(), Json::Str(self.name.clone()));
+        o.insert("kind".into(), Json::Str(self.kind.clone()));
+        o.insert("rows".into(), Json::Str(hex16(self.rows as u64)));
+        o.insert("cols".into(), Json::Str(hex16(self.cols as u64)));
+        o.insert("layout".into(), layout_to_json(&self.layout));
+        o.insert("source_hash".into(), Json::Str(hex16(self.source_hash)));
+        o
+    }
+
+    fn from_json(j: &Json) -> Result<TensorDesc> {
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("tensor record missing name"))?
+            .to_string();
+        let field = |k: &str| -> Result<u64> {
+            j.get(k)
+                .and_then(Json::as_str)
+                .and_then(hex_u64)
+                .ok_or_else(|| anyhow!("tensor {name:?}: bad or missing field {k:?}"))
+        };
+        let kind = j
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("tensor {name:?}: missing kind"))?
+            .to_string();
+        let layout = layout_from_json(j.get("layout").unwrap_or(&Json::Null))
+            .with_context(|| format!("tensor {name:?}"))?;
+        Ok(TensorDesc {
+            kind,
+            rows: field("rows")? as usize,
+            cols: field("cols")? as usize,
+            layout,
+            source_hash: field("source_hash")?,
+            name,
+        })
+    }
+}
+
+fn layout_to_json(l: &ElemLayout) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("fmt".to_string(), Json::Str(l.fmt.name().to_string()));
+    o.insert("knob".to_string(), Json::Str(hex16(l.knob as i64 as u64)));
+    o.insert("frac".to_string(), Json::Str(hex16(l.frac as i64 as u64)));
+    o.insert("elem_bits".to_string(), Json::Str(hex16(l.elem_bits as u64)));
+    o.insert("shared_exp_bits".to_string(), Json::Str(hex16(l.shared_exp_bits as u64)));
+    Json::Obj(o)
+}
+
+/// Rebuild an [`ElemLayout`] from its manifest record — through
+/// [`ElemLayout::new`], never by trusting the stored derived fields:
+/// the stored `elem_bits`/`shared_exp_bits` must then MATCH what the
+/// layout equations produce, or the record is corrupt/incompatible
+/// (fail closed).
+fn layout_from_json(j: &Json) -> Result<ElemLayout> {
+    let s = |k: &str| -> Result<u64> {
+        j.get(k)
+            .and_then(Json::as_str)
+            .and_then(hex_u64)
+            .ok_or_else(|| anyhow!("layout record: bad or missing field {k:?}"))
+    };
+    let fmt_name =
+        j.get("fmt").and_then(Json::as_str).ok_or_else(|| anyhow!("layout record: missing fmt"))?;
+    let fmt = FormatKind::from_name(fmt_name)
+        .ok_or_else(|| anyhow!("layout record: unknown format {fmt_name:?}"))?;
+    let knob = s("knob")? as i64 as i32;
+    let frac = s("frac")? as i64 as i32;
+    let rebuilt = ElemLayout::new(fmt, Precision::new(knob as f32, frac as f32));
+    ensure!(
+        rebuilt.knob == knob
+            && rebuilt.frac == frac
+            && rebuilt.elem_bits as u64 == s("elem_bits")?
+            && rebuilt.shared_exp_bits as u64 == s("shared_exp_bits")?,
+        "layout record (fmt {fmt_name}, knob {knob}, frac {frac}) does not match this \
+         build's layout equations — incompatible or corrupt artifact"
+    );
+    Ok(rebuilt)
+}
+
+/// Exps/words sizes the layout equations demand for a tensor shape —
+/// duplicated from `pack`'s allocation arithmetic so the reader can
+/// reject chunks of the wrong length before decoding anything.
+fn expected_sizes(layout: &ElemLayout, rows: usize, cols: usize) -> (usize, usize) {
+    let (br, bc) = BLOCK_SHAPE;
+    if layout.fmt.is_block_format() {
+        let blocks = (rows / br) * (cols / bc);
+        (blocks, blocks * layout.words_per_group(GROUP_ELEMS))
+    } else {
+        let n = rows * cols;
+        let wpg = layout.words_per_group(GROUP_ELEMS);
+        let rem = n % GROUP_ELEMS;
+        let tail = if rem > 0 { layout.words_per_group(rem) } else { 0 };
+        (0, (n / GROUP_ELEMS) * wpg + tail)
+    }
+}
+
+// -------------------------------------------------------------- writer --
+
+struct ChunkRef {
+    off: u64,
+    len: u64,
+    fnv: u64,
+}
+
+struct TensorEntry {
+    desc: TensorDesc,
+    /// Chunk-table index of the shared-exponent bytes (block formats).
+    exps_chunk: Option<usize>,
+    words_chunk: usize,
+}
+
+/// Builds and serializes one `.mxa` artifact.
+pub struct ArtifactWriter {
+    model: String,
+    spec: FormatSpec,
+    tensors: Vec<TensorEntry>,
+    chunks: Vec<ChunkRef>,
+    /// Concatenated chunk payloads, each 64-byte aligned relative to the
+    /// data base.
+    data: Vec<u8>,
+}
+
+impl ArtifactWriter {
+    /// `model` names the graph the weights belong to; `spec` is the
+    /// uniform format the pack ran at (individual tensors may still
+    /// carry per-tensor layouts — embeddings stay fp32, for example).
+    pub fn new(model: &str, spec: FormatSpec) -> ArtifactWriter {
+        ArtifactWriter {
+            model: model.to_string(),
+            spec,
+            tensors: Vec::new(),
+            chunks: Vec::new(),
+            data: Vec::new(),
+        }
+    }
+
+    fn push_chunk(&mut self, bytes: &[u8]) -> usize {
+        // align the data cursor, then append
+        let pad = (CHUNK_ALIGN - (self.data.len() as u64 % CHUNK_ALIGN)) % CHUNK_ALIGN;
+        self.data.resize(self.data.len() + pad as usize, 0u8);
+        let off = self.data.len() as u64;
+        self.data.extend_from_slice(bytes);
+        self.chunks.push(ChunkRef { off, len: bytes.len() as u64, fnv: fnv1a(bytes) });
+        self.chunks.len() - 1
+    }
+
+    /// Append one packed tensor under `desc`. Tensor names must be
+    /// unique; insertion order is the chunk order on disk.
+    pub fn add_tensor(&mut self, desc: TensorDesc, t: &PackedTensor) -> Result<()> {
+        ensure!(
+            desc.rows == t.rows && desc.cols == t.cols && desc.layout == t.layout,
+            "descriptor for {:?} disagrees with the packed tensor",
+            desc.name
+        );
+        ensure!(
+            self.tensors.iter().all(|e| e.desc.name != desc.name),
+            "duplicate tensor name {:?}",
+            desc.name
+        );
+        let exps_chunk =
+            if t.layout.fmt.is_block_format() { Some(self.push_chunk(&t.exps)) } else { None };
+        let word_bytes: Vec<u8> = t.words.iter().flat_map(|w| w.to_le_bytes()).collect();
+        let words_chunk = self.push_chunk(&word_bytes);
+        self.tensors.push(TensorEntry { desc, exps_chunk, words_chunk });
+        Ok(())
+    }
+
+    /// The descriptors added so far, in chunk order. `mase pack` renders
+    /// its JSON manifest's weight rows from these — the same structs the
+    /// `.mxa` manifest serializes — so the two surfaces cannot drift.
+    pub fn tensor_descs(&self) -> impl Iterator<Item = &TensorDesc> {
+        self.tensors.iter().map(|e| &e.desc)
+    }
+
+    fn manifest(&self) -> Json {
+        let mut root = BTreeMap::new();
+        root.insert("schema".to_string(), Json::Str(ARTIFACT_SCHEMA.to_string()));
+        root.insert("version".to_string(), Json::Str(hex16(ARTIFACT_VERSION)));
+        root.insert("model".to_string(), Json::Str(self.model.clone()));
+        let mut fs = BTreeMap::new();
+        fs.insert("kind".to_string(), Json::Str(self.spec.kind.name().to_string()));
+        fs.insert("bits".to_string(), Json::Str(hex16((self.spec.bits as f64).to_bits())));
+        fs.insert("frac".to_string(), Json::Str(hex16((self.spec.frac as f64).to_bits())));
+        root.insert("format".to_string(), Json::Obj(fs));
+        let tensors: Vec<Json> = self
+            .tensors
+            .iter()
+            .map(|e| {
+                let mut o = e.desc.to_json();
+                if let Some(i) = e.exps_chunk {
+                    o.insert("exps_chunk".into(), Json::Str(hex16(i as u64)));
+                }
+                o.insert("words_chunk".into(), Json::Str(hex16(e.words_chunk as u64)));
+                Json::Obj(o)
+            })
+            .collect();
+        root.insert("tensors".to_string(), Json::Arr(tensors));
+        let chunks: Vec<Json> = self
+            .chunks
+            .iter()
+            .map(|c| {
+                let mut o = BTreeMap::new();
+                o.insert("off".to_string(), Json::Str(hex16(c.off)));
+                o.insert("len".to_string(), Json::Str(hex16(c.len)));
+                o.insert("fnv".to_string(), Json::Str(hex16(c.fnv)));
+                Json::Obj(o)
+            })
+            .collect();
+        root.insert("chunks".to_string(), Json::Arr(chunks));
+        Json::Obj(root)
+    }
+
+    /// Serialize to the full container byte stream. Returns
+    /// `(bytes, content_hash)` — the hash is FNV-1a/64 over the
+    /// manifest bytes and is what eval scopes key on.
+    pub fn to_bytes(&self) -> (Vec<u8>, u64) {
+        let manifest = self.manifest().to_string().into_bytes();
+        let content_hash = fnv1a(&manifest);
+        let mut out = Vec::with_capacity(HEADER_LEN + manifest.len() + self.data.len() + 64);
+        out.extend_from_slice(ARTIFACT_MAGIC.as_bytes());
+        out.extend_from_slice(hex16(manifest.len() as u64).as_bytes());
+        out.push(b'\n');
+        debug_assert_eq!(out.len(), HEADER_LEN);
+        out.extend_from_slice(&manifest);
+        let pad = (CHUNK_ALIGN - (out.len() as u64 % CHUNK_ALIGN)) % CHUNK_ALIGN;
+        out.resize(out.len() + pad as usize, 0u8);
+        out.extend_from_slice(&self.data);
+        (out, content_hash)
+    }
+
+    /// Write the container to `path` atomically (`.tmp` + rename, the
+    /// `CacheStore::save` idiom). Returns the content hash.
+    pub fn write_to(&self, path: &Path) -> Result<u64> {
+        let (bytes, content_hash) = self.to_bytes();
+        crate::util::write_atomic(path, &bytes)
+            .with_context(|| format!("writing artifact {}", path.display()))?;
+        Ok(content_hash)
+    }
+}
+
+// -------------------------------------------------------------- reader --
+
+/// One loaded tensor: its packed bits plus the hash of the f32 weights
+/// it was packed from.
+#[derive(Debug, Clone)]
+pub struct ArtifactTensor {
+    pub desc: TensorDesc,
+    /// Shared so the interpreter reuses loaded tensors without copying.
+    pub packed: Arc<PackedTensor>,
+}
+
+/// A fully loaded, fully validated artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactWeights {
+    /// FNV-1a/64 over the manifest bytes (see module docs).
+    pub content_hash: u64,
+    pub model: String,
+    pub spec: FormatSpec,
+    /// Tensors by name.
+    pub tensors: BTreeMap<String, ArtifactTensor>,
+}
+
+impl ArtifactWeights {
+    /// Open + stream-load + validate every tensor of an artifact.
+    pub fn load(path: &Path) -> Result<ArtifactWeights> {
+        ArtifactReader::open(path)?.load_all()
+    }
+}
+
+struct ReaderTensor {
+    desc: TensorDesc,
+    exps_chunk: Option<usize>,
+    words_chunk: usize,
+}
+
+/// Streaming `.mxa` loader: `open` reads and validates only the header +
+/// manifest; each tensor's chunks are then read chunk-at-a-time with the
+/// FNV hash updated incrementally as sub-buffers arrive, so corruption
+/// is detected on first contact and memory peaks at one chunk.
+pub struct ArtifactReader {
+    file: std::fs::File,
+    file_len: u64,
+    /// Absolute file offset of chunk offset 0.
+    data_base: u64,
+    content_hash: u64,
+    model: String,
+    spec: FormatSpec,
+    tensors: Vec<ReaderTensor>,
+    chunks: Vec<ChunkRef>,
+}
+
+impl ArtifactReader {
+    /// Open an artifact: validate magic, version, schema, manifest
+    /// structure and chunk-table bounds. No chunk data is read yet.
+    pub fn open(path: &Path) -> Result<ArtifactReader> {
+        let mut file = std::fs::File::open(path)
+            .with_context(|| format!("opening artifact {}", path.display()))?;
+        let file_len = file.metadata()?.len();
+        let mut header = [0u8; HEADER_LEN];
+        file.read_exact(&mut header)
+            .map_err(|_| anyhow!("truncated artifact: no {HEADER_LEN}-byte header"))?;
+        let header =
+            std::str::from_utf8(&header).map_err(|_| anyhow!("artifact header is not UTF-8"))?;
+        ensure!(
+            header.starts_with(ARTIFACT_MAGIC) && header.ends_with('\n'),
+            "bad artifact magic (not an .mxa file, or an unsupported container version)"
+        );
+        let manifest_len = hex_u64(&header[ARTIFACT_MAGIC.len()..HEADER_LEN - 1])
+            .ok_or_else(|| anyhow!("bad artifact header: malformed manifest length"))?;
+        ensure!(
+            HEADER_LEN as u64 + manifest_len <= file_len,
+            "truncated artifact: manifest claims {manifest_len} bytes, file has {} after the header",
+            file_len - HEADER_LEN as u64
+        );
+        let mut manifest = vec![0u8; manifest_len as usize];
+        file.read_exact(&mut manifest)?;
+        let content_hash = fnv1a(&manifest);
+        let manifest = std::str::from_utf8(&manifest)
+            .map_err(|_| anyhow!("artifact manifest is not UTF-8"))?;
+        let root = Json::parse(manifest).map_err(|e| anyhow!("unreadable manifest: {e}"))?;
+
+        match root.get("schema").and_then(Json::as_str) {
+            Some(ARTIFACT_SCHEMA) => {}
+            other => bail!("artifact schema {other:?} is not {ARTIFACT_SCHEMA:?}"),
+        }
+        let version = root.get("version").and_then(Json::as_str).and_then(hex_u64);
+        ensure!(
+            version == Some(ARTIFACT_VERSION),
+            "artifact version {version:?} (this build reads {ARTIFACT_VERSION}) — refusing to \
+             guess at the layout of a different version"
+        );
+        let model = root
+            .get("model")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("manifest missing model"))?
+            .to_string();
+        let spec = {
+            let f = root.get("format").ok_or_else(|| anyhow!("manifest missing format"))?;
+            let kind_name = f
+                .get("kind")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("manifest format: missing kind"))?;
+            let kind = FormatKind::from_name(kind_name)
+                .ok_or_else(|| anyhow!("manifest format: unknown kind {kind_name:?}"))?;
+            let knob = |k: &str| -> Result<f32> {
+                let bits = f
+                    .get(k)
+                    .and_then(Json::as_str)
+                    .and_then(hex_u64)
+                    .ok_or_else(|| anyhow!("manifest format: bad or missing {k:?}"))?;
+                Ok(f64::from_bits(bits) as f32)
+            };
+            FormatSpec::new(kind, knob("bits")?, knob("frac")?)
+        };
+
+        let chunk_arr = root
+            .get("chunks")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing chunks array"))?;
+        let data_base = (HEADER_LEN as u64 + manifest_len).div_ceil(CHUNK_ALIGN) * CHUNK_ALIGN;
+        let mut chunks = Vec::with_capacity(chunk_arr.len());
+        for (i, c) in chunk_arr.iter().enumerate() {
+            let f = |k: &str| -> Result<u64> {
+                c.get(k)
+                    .and_then(Json::as_str)
+                    .and_then(hex_u64)
+                    .ok_or_else(|| anyhow!("chunk {i}: bad or missing field {k:?}"))
+            };
+            let (off, len, fnv) = (f("off")?, f("len")?, f("fnv")?);
+            ensure!(off % CHUNK_ALIGN == 0, "chunk {i}: offset {off} is not 64-byte aligned");
+            let end = data_base
+                .checked_add(off)
+                .and_then(|s| s.checked_add(len))
+                .ok_or_else(|| anyhow!("chunk {i}: offset overflow"))?;
+            ensure!(
+                end <= file_len,
+                "truncated artifact: chunk {i} ends at byte {end}, file has {file_len}"
+            );
+            chunks.push(ChunkRef { off, len, fnv });
+        }
+
+        let tensor_arr = root
+            .get("tensors")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing tensors array"))?;
+        let mut tensors: Vec<ReaderTensor> = Vec::with_capacity(tensor_arr.len());
+        for t in tensor_arr {
+            let desc = TensorDesc::from_json(t)?;
+            let name = desc.name.clone();
+            ensure!(
+                tensors.iter().all(|e| e.desc.name != name),
+                "duplicate tensor {name:?} in manifest"
+            );
+            let chunk_ix = |k: &str| -> Result<usize> {
+                let i = t
+                    .get(k)
+                    .and_then(Json::as_str)
+                    .and_then(hex_u64)
+                    .ok_or_else(|| anyhow!("tensor {name:?}: bad or missing {k:?}"))?
+                    as usize;
+                ensure!(i < chunks.len(), "tensor {name:?}: {k} {i} out of chunk-table bounds");
+                Ok(i)
+            };
+            let exps_chunk = if desc.layout.fmt.is_block_format() {
+                ensure!(
+                    desc.rows % BLOCK_SHAPE.0 == 0 && desc.cols % BLOCK_SHAPE.1 == 0,
+                    "tensor {name:?}: {}x{} does not tile into (16, 2) blocks",
+                    desc.rows,
+                    desc.cols
+                );
+                Some(chunk_ix("exps_chunk")?)
+            } else {
+                ensure!(
+                    t.get("exps_chunk").is_none(),
+                    "tensor {name:?}: element-wise layout with an exps chunk"
+                );
+                None
+            };
+            let words_chunk = chunk_ix("words_chunk")?;
+            // Reject wrong-sized chunks up front, against the layout's
+            // own sizing equations.
+            let (want_exps, want_words) = expected_sizes(&desc.layout, desc.rows, desc.cols);
+            if let Some(e) = exps_chunk {
+                ensure!(
+                    chunks[e].len == want_exps as u64,
+                    "tensor {name:?}: exps chunk holds {} bytes, layout demands {want_exps}",
+                    chunks[e].len
+                );
+            }
+            ensure!(
+                chunks[words_chunk].len == want_words as u64 * 8,
+                "tensor {name:?}: words chunk holds {} bytes, layout demands {}",
+                chunks[words_chunk].len,
+                want_words * 8
+            );
+            tensors.push(ReaderTensor { desc, exps_chunk, words_chunk });
+        }
+
+        Ok(ArtifactReader {
+            file,
+            file_len,
+            data_base,
+            content_hash,
+            model,
+            spec,
+            tensors,
+            chunks,
+        })
+    }
+
+    /// FNV-1a/64 over the manifest bytes.
+    pub fn content_hash(&self) -> u64 {
+        self.content_hash
+    }
+
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    pub fn spec(&self) -> FormatSpec {
+        self.spec
+    }
+
+    /// Tensor descriptors, in on-disk order.
+    pub fn descriptors(&self) -> impl Iterator<Item = &TensorDesc> {
+        self.tensors.iter().map(|t| &t.desc)
+    }
+
+    /// Read one chunk streaming (64 KiB sub-buffers), updating the FNV
+    /// hash as bytes arrive and failing closed on any mismatch.
+    fn read_chunk(&mut self, ix: usize, owner: &str) -> Result<Vec<u8>> {
+        use std::io::{Seek, SeekFrom};
+        let c = &self.chunks[ix];
+        let (off, len, want) = (self.data_base + c.off, c.len, c.fnv);
+        ensure!(
+            off + len <= self.file_len,
+            "truncated artifact: chunk {ix} (tensor {owner:?}) ends past EOF"
+        );
+        self.file.seek(SeekFrom::Start(off))?;
+        let mut out = Vec::with_capacity(len as usize);
+        let mut hash = Fnv1a::new();
+        let mut buf = [0u8; 64 * 1024];
+        let mut left = len as usize;
+        while left > 0 {
+            let take = left.min(buf.len());
+            self.file.read_exact(&mut buf[..take]).map_err(|_| {
+                anyhow!("truncated artifact: chunk {ix} (tensor {owner:?}) cut short")
+            })?;
+            hash.update(&buf[..take]);
+            out.extend_from_slice(&buf[..take]);
+            left -= take;
+        }
+        ensure!(
+            hash.finish() == want,
+            "corrupt artifact: chunk {ix} (tensor {owner:?}) hash {:016x} != manifest {want:016x}",
+            hash.finish()
+        );
+        Ok(out)
+    }
+
+    /// Load + validate the `i`-th tensor (on-disk order).
+    fn load_ix(&mut self, i: usize) -> Result<(TensorDesc, PackedTensor)> {
+        let (desc, exps_chunk, words_chunk) = {
+            let t = &self.tensors[i];
+            (t.desc.clone(), t.exps_chunk, t.words_chunk)
+        };
+        let exps = match exps_chunk {
+            Some(e) => self.read_chunk(e, &desc.name)?,
+            None => Vec::new(),
+        };
+        let word_bytes = self.read_chunk(words_chunk, &desc.name)?;
+        let words: Vec<u64> = word_bytes
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+            .collect();
+        let packed =
+            PackedTensor { layout: desc.layout, rows: desc.rows, cols: desc.cols, exps, words };
+        Ok((desc, packed))
+    }
+
+    /// Stream-load every tensor, consuming the reader.
+    pub fn load_all(mut self) -> Result<ArtifactWeights> {
+        let mut tensors = BTreeMap::new();
+        for i in 0..self.tensors.len() {
+            let (desc, packed) = self.load_ix(i)?;
+            tensors
+                .insert(desc.name.clone(), ArtifactTensor { desc, packed: Arc::new(packed) });
+        }
+        Ok(ArtifactWeights {
+            content_hash: self.content_hash,
+            model: self.model,
+            spec: self.spec,
+            tensors,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::packed::layout::pack;
+    use crate::util::rng::Rng;
+
+    fn tmp_path(tag: &str) -> std::path::PathBuf {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static UNIQUE: AtomicUsize = AtomicUsize::new(0);
+        let n = UNIQUE.fetch_add(1, Ordering::Relaxed);
+        std::env::temp_dir().join(format!("mase_mxa_{tag}_{}_{n}.mxa", std::process::id()))
+    }
+
+    fn rand_tensor(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn fnv1a_matches_reference_vectors() {
+        // Published FNV-1a/64 test vectors.
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+        // incremental == one-shot
+        let mut h = Fnv1a::new();
+        h.update(b"foo");
+        h.update(b"bar");
+        assert_eq!(h.finish(), fnv1a(b"foobar"));
+    }
+
+    #[test]
+    fn round_trip_preserves_every_field() {
+        let spec = FormatSpec::new(FormatKind::MxInt, 6.0, 0.0);
+        let x = rand_tensor(32 * 4, 7);
+        let t = pack(&x, 32, 4, spec.kind, spec.precision());
+        let mut w = ArtifactWriter::new("m", spec);
+        w.add_tensor(TensorDesc::for_tensor("layer0.w", "weight", &t, &x), &t).unwrap();
+        let path = tmp_path("rt");
+        let hash = w.write_to(&path).unwrap();
+
+        let loaded = ArtifactWeights::load(&path).unwrap();
+        assert_eq!(loaded.content_hash, hash);
+        assert_eq!(loaded.model, "m");
+        assert_eq!(loaded.spec, spec);
+        let lt = &loaded.tensors["layer0.w"];
+        assert_eq!(lt.desc.source_hash, source_hash(&x));
+        assert_eq!(*lt.packed, t, "packed bits must survive byte-for-byte");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn header_is_fixed_width_and_data_is_aligned() {
+        let spec = FormatSpec::with_defaults(FormatKind::Int);
+        let x = rand_tensor(33, 3); // partial trailing group
+        let t = pack(&x, 3, 11, spec.kind, spec.precision());
+        let mut w = ArtifactWriter::new("m", spec);
+        w.add_tensor(TensorDesc::for_tensor("w", "weight", &t, &x), &t).unwrap();
+        let (bytes, hash) = w.to_bytes();
+        assert_eq!(&bytes[..5], b"MXA1 ");
+        assert_eq!(bytes[HEADER_LEN - 1], b'\n');
+        let mlen = hex_u64(std::str::from_utf8(&bytes[5..21]).unwrap()).unwrap() as usize;
+        assert_eq!(fnv1a(&bytes[HEADER_LEN..HEADER_LEN + mlen]), hash);
+        let base = (HEADER_LEN + mlen).div_ceil(64) * 64;
+        assert!(bytes.len() > base);
+        assert_eq!(bytes[HEADER_LEN + mlen..base].iter().filter(|&&b| b != 0).count(), 0);
+    }
+
+    #[test]
+    fn zero_element_tensor_round_trips() {
+        let spec = FormatSpec::with_defaults(FormatKind::Fp8);
+        let t = pack(&[], 0, 7, spec.kind, spec.precision());
+        let mut w = ArtifactWriter::new("m", spec);
+        w.add_tensor(TensorDesc::for_tensor("empty", "weight", &t, &[]), &t).unwrap();
+        let path = tmp_path("empty");
+        w.write_to(&path).unwrap();
+        let loaded = ArtifactWeights::load(&path).unwrap();
+        assert_eq!(loaded.tensors["empty"].packed.unpack(), Vec::<f32>::new());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn flipped_chunk_byte_fails_closed_naming_the_tensor() {
+        let spec = FormatSpec::new(FormatKind::Bmf, 5.0, 0.0);
+        let x = rand_tensor(32 * 2, 11);
+        let t = pack(&x, 32, 2, spec.kind, spec.precision());
+        let mut w = ArtifactWriter::new("m", spec);
+        w.add_tensor(TensorDesc::for_tensor("layer3.fc1", "weight", &t, &x), &t).unwrap();
+        let (mut bytes, _) = w.to_bytes();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x40; // inside the final (words) chunk
+        let path = tmp_path("flip");
+        std::fs::write(&path, &bytes).unwrap();
+        let err = ArtifactWeights::load(&path).unwrap_err().to_string();
+        assert!(err.contains("layer3.fc1"), "error must name the tensor: {err}");
+        assert!(err.contains("hash"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn truncation_fails_closed() {
+        let spec = FormatSpec::new(FormatKind::MxInt, 7.0, 0.0);
+        let x = rand_tensor(32 * 2, 13);
+        let t = pack(&x, 32, 2, spec.kind, spec.precision());
+        let mut w = ArtifactWriter::new("m", spec);
+        w.add_tensor(TensorDesc::for_tensor("w", "weight", &t, &x), &t).unwrap();
+        let (bytes, _) = w.to_bytes();
+        let path = tmp_path("trunc");
+        // cut mid-way through the chunk data
+        std::fs::write(&path, &bytes[..bytes.len() - 16]).unwrap();
+        let err = ArtifactWeights::load(&path).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+        // cut inside the manifest
+        std::fs::write(&path, &bytes[..HEADER_LEN + 4]).unwrap();
+        assert!(ArtifactReader::open(&path).is_err());
+        // cut inside the header
+        std::fs::write(&path, &bytes[..10]).unwrap();
+        let err = ArtifactReader::open(&path).unwrap_err().to_string();
+        assert!(err.contains("header"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn version_bump_is_refused() {
+        let spec = FormatSpec::with_defaults(FormatKind::MxInt);
+        let x = rand_tensor(32 * 2, 17);
+        let t = pack(&x, 32, 2, spec.kind, spec.precision());
+        let mut w = ArtifactWriter::new("m", spec);
+        w.add_tensor(TensorDesc::for_tensor("w", "weight", &t, &x), &t).unwrap();
+        let (mut bytes, _) = w.to_bytes();
+        let old = format!("\"version\":\"{}\"", hex16(ARTIFACT_VERSION));
+        let new = format!("\"version\":\"{}\"", hex16(ARTIFACT_VERSION + 1));
+        // same-length in-place patch keeps the header length honest
+        let pos = bytes
+            .windows(old.len())
+            .position(|w| w == old.as_bytes())
+            .expect("manifest carries the version field");
+        bytes[pos..pos + old.len()].copy_from_slice(new.as_bytes());
+        let path = tmp_path("ver");
+        std::fs::write(&path, &bytes).unwrap();
+        let err = ArtifactReader::open(&path).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn source_hash_is_order_and_bit_sensitive() {
+        let a = source_hash(&[1.0, 2.0]);
+        assert_ne!(a, source_hash(&[2.0, 1.0]));
+        assert_ne!(a, source_hash(&[1.0, 2.0, 0.0]));
+        assert_ne!(source_hash(&[0.0]), source_hash(&[-0.0]), "bit pattern, not value");
+        assert_eq!(a, source_hash(&[1.0, 2.0]));
+    }
+}

@@ -50,6 +50,15 @@ use std::sync::atomic::{AtomicU64, Ordering};
 static DOT_CALLS: AtomicU64 = AtomicU64::new(0);
 static GEMM_TILED_CALLS: AtomicU64 = AtomicU64::new(0);
 static GEMV_TALL_CALLS: AtomicU64 = AtomicU64::new(0);
+static WEIGHT_PACK_CALLS: AtomicU64 = AtomicU64::new(0);
+
+/// Record one *weight* tensor pack (interpreter parameter/embedding
+/// packing — never per-matmul activation packing). The `.mxa` artifact
+/// loader's "zero re-pack" contract is asserted on this counter: a warm
+/// `--weights model.mxa` session must leave it untouched.
+pub fn note_weight_pack() {
+    WEIGHT_PACK_CALLS.fetch_add(1, Ordering::Relaxed);
+}
 
 /// Snapshot of the process-global kernel-dispatch counters: how many
 /// times each packed entry point has run since process start. The
@@ -64,6 +73,9 @@ pub struct KernelTally {
     pub gemm_tiled: u64,
     /// Decode-shape GEMV fast-path invocations.
     pub gemv_tall: u64,
+    /// Weight/embedding tensor packs ([`note_weight_pack`]) — zero on a
+    /// warm artifact-backed session.
+    pub weight_packs: u64,
 }
 
 impl KernelTally {
@@ -73,6 +85,7 @@ impl KernelTally {
             dot: self.dot.saturating_sub(earlier.dot),
             gemm_tiled: self.gemm_tiled.saturating_sub(earlier.gemm_tiled),
             gemv_tall: self.gemv_tall.saturating_sub(earlier.gemv_tall),
+            weight_packs: self.weight_packs.saturating_sub(earlier.weight_packs),
         }
     }
 
@@ -84,6 +97,7 @@ impl KernelTally {
         rec.counter(path, "packed_dot", self.dot);
         rec.counter(path, "packed_gemm_tiled", self.gemm_tiled);
         rec.counter(path, "packed_gemv_tall", self.gemv_tall);
+        rec.counter(path, "weight_packs", self.weight_packs);
     }
 }
 
@@ -93,6 +107,7 @@ pub fn kernel_tally() -> KernelTally {
         dot: DOT_CALLS.load(Ordering::Relaxed),
         gemm_tiled: GEMM_TILED_CALLS.load(Ordering::Relaxed),
         gemv_tall: GEMV_TALL_CALLS.load(Ordering::Relaxed),
+        weight_packs: WEIGHT_PACK_CALLS.load(Ordering::Relaxed),
     }
 }
 

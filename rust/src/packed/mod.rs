@@ -30,8 +30,19 @@
 //! idealized analytic bit count of Eq. (1), and `mase pack` dumps the
 //! same numbers per tensor.
 
+//!
+//! [`artifact`] makes the packed representation durable: the `.mxa`
+//! content-addressed container round-trips `PackedTensor`s to disk
+//! byte-for-byte, so warm sessions (`--weights model.mxa`) load weights
+//! with zero re-quantize and zero re-pack.
+
+pub mod artifact;
 pub mod kernels;
 pub mod layout;
 
+pub use artifact::{
+    fnv1a, source_hash, ArtifactReader, ArtifactTensor, ArtifactWeights, ArtifactWriter,
+    TensorDesc,
+};
 pub use kernels::{kernel_tally, mxint_acc_bits, packed_dot, packed_gemm, KernelTally};
 pub use layout::{pack, packed_bits_for, ElemLayout, PackedTensor};

@@ -113,6 +113,13 @@ pub fn space_for(fmt: FormatKind, num_qtensors: usize, lo: f64, hi: f64) -> Spac
 /// that differ in any of these read and write disjoint entry sets. The
 /// learning rate only appears when QAT actually runs (`qat_steps > 0`);
 /// it does not affect PTQ scoring.
+///
+/// `weights_hash` is the content hash of the `.mxa` packed-weight
+/// artifact serving the run (see [`crate::packed::artifact`] and
+/// [`ExecBackend::weights_hash`]); it appends a trailing `/mxa<hex>`
+/// segment. Runs without an artifact (`None`) keep the historical scope
+/// string unchanged, so existing on-disk caches stay valid.
+#[allow(clippy::too_many_arguments)]
 pub fn eval_scope(
     model: &str,
     task: Task,
@@ -123,19 +130,24 @@ pub fn eval_scope(
     pretrain_steps: usize,
     objective: &str,
     backend: BackendKind,
+    weights_hash: Option<u64>,
 ) -> String {
     let qat = if qat_steps > 0 {
         format!("qat{qat_steps}-lr{qat_lr}")
     } else {
         "qat0".to_string()
     };
-    format!(
+    let mut scope = format!(
         "{model}/{}/{}/{}/{qat}/eb{eval_batches}/ps{pretrain_steps}/{objective}/{}",
         task.name(),
         fmt.name(),
         MemoKey::Rounded.name(),
         backend.name(),
-    )
+    );
+    if let Some(h) = weights_hash {
+        scope.push_str(&format!("/mxa{}", crate::util::hex16(h)));
+    }
+    scope
 }
 
 /// Run the full search for one (model, task, format) with a private,
@@ -371,32 +383,43 @@ mod tests {
     fn eval_scope_separates_contexts() {
         use BackendKind::{Cpu, Pjrt};
         let lr = 0.002;
-        let a = eval_scope("opt-125m-sim", Task::Sst2, FormatKind::MxInt, 0, lr, 4, 220, "hw", Pjrt);
+        let a =
+            eval_scope("opt-125m-sim", Task::Sst2, FormatKind::MxInt, 0, lr, 4, 220, "hw", Pjrt, None);
         assert_eq!(a, "opt-125m-sim/sst2/mxint/rounded/qat0/eb4/ps220/hw/pjrt");
         // every objective-changing knob must change the scope
         for b in [
-            eval_scope("opt-350m-sim", Task::Sst2, FormatKind::MxInt, 0, lr, 4, 220, "hw", Pjrt),
-            eval_scope("opt-125m-sim", Task::Qqp, FormatKind::MxInt, 0, lr, 4, 220, "hw", Pjrt),
-            eval_scope("opt-125m-sim", Task::Sst2, FormatKind::Int, 0, lr, 4, 220, "hw", Pjrt),
-            eval_scope("opt-125m-sim", Task::Sst2, FormatKind::MxInt, 2, lr, 4, 220, "hw", Pjrt),
-            eval_scope("opt-125m-sim", Task::Sst2, FormatKind::MxInt, 0, lr, 3, 220, "hw", Pjrt),
-            eval_scope("opt-125m-sim", Task::Sst2, FormatKind::MxInt, 0, lr, 4, 100, "hw", Pjrt),
-            eval_scope("opt-125m-sim", Task::Sst2, FormatKind::MxInt, 0, lr, 4, 220, "sw", Pjrt),
-            eval_scope("opt-125m-sim", Task::Sst2, FormatKind::MxInt, 0, lr, 4, 220, "hw", Cpu),
+            eval_scope("opt-350m-sim", Task::Sst2, FormatKind::MxInt, 0, lr, 4, 220, "hw", Pjrt, None),
+            eval_scope("opt-125m-sim", Task::Qqp, FormatKind::MxInt, 0, lr, 4, 220, "hw", Pjrt, None),
+            eval_scope("opt-125m-sim", Task::Sst2, FormatKind::Int, 0, lr, 4, 220, "hw", Pjrt, None),
+            eval_scope("opt-125m-sim", Task::Sst2, FormatKind::MxInt, 2, lr, 4, 220, "hw", Pjrt, None),
+            eval_scope("opt-125m-sim", Task::Sst2, FormatKind::MxInt, 0, lr, 3, 220, "hw", Pjrt, None),
+            eval_scope("opt-125m-sim", Task::Sst2, FormatKind::MxInt, 0, lr, 4, 100, "hw", Pjrt, None),
+            eval_scope("opt-125m-sim", Task::Sst2, FormatKind::MxInt, 0, lr, 4, 220, "sw", Pjrt, None),
+            eval_scope("opt-125m-sim", Task::Sst2, FormatKind::MxInt, 0, lr, 4, 220, "hw", Cpu, None),
+            eval_scope("opt-125m-sim", Task::Sst2, FormatKind::MxInt, 0, lr, 4, 220, "hw", Pjrt, Some(7)),
         ] {
             assert_ne!(a, b);
         }
         // the backend identity is part of the scope: PJRT-measured and
         // CPU-interpreter-measured objectives never share entries
-        let c = eval_scope("opt-125m-sim", Task::Sst2, FormatKind::MxInt, 0, lr, 4, 220, "hw", Cpu);
+        let c =
+            eval_scope("opt-125m-sim", Task::Sst2, FormatKind::MxInt, 0, lr, 4, 220, "hw", Cpu, None);
         assert_eq!(c, "opt-125m-sim/sst2/mxint/rounded/qat0/eb4/ps220/hw/cpu");
         // the QAT learning rate matters exactly when QAT runs
-        let q1 = eval_scope("m", Task::Sst2, FormatKind::MxInt, 2, 0.002, 4, 220, "hw", Pjrt);
-        let q2 = eval_scope("m", Task::Sst2, FormatKind::MxInt, 2, 0.01, 4, 220, "hw", Pjrt);
+        let q1 = eval_scope("m", Task::Sst2, FormatKind::MxInt, 2, 0.002, 4, 220, "hw", Pjrt, None);
+        let q2 = eval_scope("m", Task::Sst2, FormatKind::MxInt, 2, 0.01, 4, 220, "hw", Pjrt, None);
         assert_ne!(q1, q2, "differing QAT lr must not share entries");
-        let p1 = eval_scope("m", Task::Sst2, FormatKind::MxInt, 0, 0.002, 4, 220, "hw", Pjrt);
-        let p2 = eval_scope("m", Task::Sst2, FormatKind::MxInt, 0, 0.01, 4, 220, "hw", Pjrt);
+        let p1 = eval_scope("m", Task::Sst2, FormatKind::MxInt, 0, 0.002, 4, 220, "hw", Pjrt, None);
+        let p2 = eval_scope("m", Task::Sst2, FormatKind::MxInt, 0, 0.01, 4, 220, "hw", Pjrt, None);
         assert_eq!(p1, p2, "lr is irrelevant under PTQ");
+        // artifact-backed runs get their own namespace; the hash is the
+        // PR 2 fixed-width hex convention
+        let m = eval_scope("m", Task::Sst2, FormatKind::MxInt, 0, lr, 4, 220, "hw", Cpu, Some(0xAB));
+        assert_eq!(m, "m/sst2/mxint/rounded/qat0/eb4/ps220/hw/cpu/mxa00000000000000ab");
+        assert_ne!(
+            m,
+            eval_scope("m", Task::Sst2, FormatKind::MxInt, 0, lr, 4, 220, "hw", Cpu, Some(0xAC))
+        );
     }
 
     #[test]

@@ -143,6 +143,16 @@ pub trait ExecBackend: Sync {
         lr: f32,
     ) -> Result<Vec<f32>>;
 
+    /// Content hash of the packed-weight artifact backing this backend,
+    /// when one is loaded (`--weights model.mxa`). Folded into
+    /// [`crate::passes::eval_scope`] so cached objectives are keyed to
+    /// the exact weight bits they were measured on. `None` for the
+    /// in-memory pack path (scope strings stay byte-identical to every
+    /// pre-artifact cache file).
+    fn weights_hash(&self) -> Option<u64> {
+        None
+    }
+
     /// Autoregressive generation profile: prefill `prompts`
     /// (`[n_seqs, prompt_len]`, sequence-major) and greedily decode
     /// `n_tokens` per sequence through a KV cache, fanning sequence

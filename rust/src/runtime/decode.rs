@@ -187,7 +187,7 @@ impl<'a> Decoder<'a> {
         );
         let fmt = FormatKind::from_name(fmt_tag)
             .ok_or_else(|| anyhow!("decode: unknown format tag '{fmt_tag}'"))?;
-        let interp = Interp::new(meta, graph, weights, fmt, qcfg, backend.path)?;
+        let interp = Interp::new(meta, graph, weights, fmt, qcfg, backend)?;
         interp.check_tiling(group, meta.d_model, "decode group")?;
         let mut lins = Vec::new();
         for op in &graph.ops {

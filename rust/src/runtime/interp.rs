@@ -42,14 +42,16 @@
 
 use super::backend::{BackendKind, BatchScore, DecodeReport, ExecBackend};
 use crate::data::Batch;
-use crate::formats::{quantize_2d, FormatKind, Precision, BLOCK_SHAPE};
+use crate::formats::{quantize_2d, FormatKind, FormatSpec, Precision, BLOCK_SHAPE};
 use crate::frontend::{ModelMeta, OUTLIER_BASE_GAIN, OUTLIER_CHANNELS};
-use crate::ir::{Graph, OpKind};
-use crate::packed::kernels::{gemm_f64_segmented, packed_gemm};
-use crate::packed::layout::{pack, PackedTensor};
+use crate::ir::{Graph, OpKind, ValueId};
+use crate::packed::artifact::{source_hash, ArtifactWeights, ArtifactWriter, TensorDesc};
+use crate::packed::kernels::{gemm_f64_segmented, note_weight_pack, packed_gemm};
+use crate::packed::layout::{pack, ElemLayout, PackedTensor};
 use anyhow::{anyhow, bail, ensure, Context, Result};
 use std::collections::HashMap;
 use std::rc::Rc;
+use std::sync::Arc;
 
 /// How the interpreter multiplies quantized operands.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -62,20 +64,34 @@ pub enum MatmulPath {
     Reference,
 }
 
-/// The artifact-free execution backend. Construct with [`CpuBackend::new`]
-/// (packed datapath) or [`CpuBackend::reference`] (float golden path).
-#[derive(Debug, Clone, Copy, Default)]
+/// The PJRT-free execution backend. Construct with [`CpuBackend::new`]
+/// (packed datapath), [`CpuBackend::reference`] (float golden path), or
+/// [`CpuBackend::with_artifact`] (packed datapath seeded from a `.mxa`
+/// packed-weight container so warm sessions skip the quantize+pack work).
+#[derive(Debug, Clone, Default)]
 pub struct CpuBackend {
     pub path: MatmulPath,
+    /// Pre-packed weights loaded from a `.mxa` artifact. Tensors whose
+    /// name/layout/shape/source bits match the live model are reused as
+    /// shared `Arc`s with zero re-quantize and zero re-pack; anything
+    /// else falls back to `pack()` (bit-identical, since `pack` is
+    /// deterministic — the artifact stores exactly its output).
+    pub artifact: Option<Arc<ArtifactWeights>>,
 }
 
 impl CpuBackend {
     pub fn new() -> Self {
-        Self { path: MatmulPath::Packed }
+        Self { path: MatmulPath::Packed, artifact: None }
     }
 
     pub fn reference() -> Self {
-        Self { path: MatmulPath::Reference }
+        Self { path: MatmulPath::Reference, artifact: None }
+    }
+
+    /// Packed backend that serves weight tensors out of a loaded `.mxa`
+    /// artifact (see [`crate::packed::artifact`]).
+    pub fn with_artifact(artifact: Arc<ArtifactWeights>) -> Self {
+        Self { path: MatmulPath::Packed, artifact: Some(artifact) }
     }
 }
 
@@ -110,8 +126,15 @@ impl ExecBackend for CpuBackend {
     ) -> Result<Vec<BatchScore>> {
         let fmt = FormatKind::from_name(fmt_tag)
             .ok_or_else(|| anyhow!("cpu backend: unknown format tag '{fmt_tag}'"))?;
-        let interp = Interp::new(meta, graph, weights, fmt, qcfg, self.path)?;
+        let interp = Interp::new(meta, graph, weights, fmt, qcfg, self)?;
         batches.iter().map(|b| interp.eval_batch(b)).collect()
+    }
+
+    /// Content hash of the attached `.mxa` artifact, if any — folded into
+    /// cache eval scopes so artifact-backed results never collide with
+    /// in-memory-pack results from a different weight container.
+    fn weights_hash(&self) -> Option<u64> {
+        self.artifact.as_ref().map(|a| a.content_hash)
     }
 
     fn profile_batch(
@@ -126,14 +149,7 @@ impl ExecBackend for CpuBackend {
         // not depend on the matmul datapath, and it skips the packing.
         let graph = crate::frontend::build_graph(meta);
         let qcfg = vec![0.0f32; 2 * meta.num_qtensors()];
-        let interp = Interp::new(
-            meta,
-            &graph,
-            weights,
-            FormatKind::Fp32,
-            &qcfg,
-            MatmulPath::Reference,
-        )?;
+        let interp = Interp::new(meta, &graph, weights, FormatKind::Fp32, &qcfg, &CpuBackend::reference())?;
         let mut taps: Vec<Option<[f32; 3]>> = vec![None; meta.num_qtensors()];
         interp.forward(batch, Some(&mut taps[..]))?;
         taps.into_iter()
@@ -207,12 +223,69 @@ pub(crate) struct Interp<'a> {
     fmt: FormatKind,
     qcfg: &'a [f32],
     path: MatmulPath,
-    /// Packed weight per Linear weight value id (`Packed` path).
-    packed_w: HashMap<usize, PackedTensor>,
+    /// Packed weight per Linear weight value id (`Packed` path). Shared
+    /// `Arc`s so artifact-loaded tensors are reused without copying.
+    packed_w: HashMap<usize, Arc<PackedTensor>>,
     /// Fake-quantized weight per Linear weight value id (`Reference`).
     quant_w: HashMap<usize, Vec<f32>>,
     /// Bit-packed (raw fp32) embedding table for the Embed gather.
-    packed_embed: Option<PackedTensor>,
+    packed_embed: Option<Arc<PackedTensor>>,
+}
+
+/// Look up `name` in the backend's artifact (if any) and return the
+/// pre-packed tensor when it matches the live request exactly: same
+/// packing layout, same shape, and the same source f32 bits. Anything
+/// short of a full match returns `None` and the caller re-packs —
+/// bit-identical, since the artifact stores `pack()`'s own output.
+fn artifact_tensor(
+    backend: &CpuBackend,
+    name: &str,
+    layout: &ElemLayout,
+    rows: usize,
+    cols: usize,
+    source: &[f32],
+) -> Option<Arc<PackedTensor>> {
+    let art = backend.artifact.as_ref()?;
+    let t = art.tensors.get(name)?;
+    (t.packed.layout == *layout
+        && t.packed.rows == rows
+        && t.packed.cols == cols
+        && t.desc.source_hash == source_hash(source))
+    .then(|| Arc::clone(&t.packed))
+}
+
+/// Pack every weight tensor of `graph` exactly as the packed interpreter
+/// does — same names, layouts and source f32 bits — and assemble them
+/// into an [`ArtifactWriter`]. `mase pack --out model.mxa` and the
+/// round-trip tests both build artifacts through this one path, so a
+/// loaded artifact always satisfies [`artifact_tensor`]'s full-match
+/// test on the warm run (zero re-quantize, zero re-pack).
+///
+/// `qcfg` must be the same flat per-qtensor `[bits, frac]` vector the
+/// warm session will evaluate with (e.g. `QuantSolution::to_qconfig`);
+/// `spec` is the uniform format recorded in the artifact header.
+pub fn build_weights_artifact(
+    meta: &ModelMeta,
+    graph: &Graph,
+    weights: &[f32],
+    spec: FormatSpec,
+    qcfg: &[f32],
+) -> Result<ArtifactWriter> {
+    let interp = Interp::new(meta, graph, weights, spec.kind, qcfg, &CpuBackend::new())?;
+    let mut writer = ArtifactWriter::new(&meta.name, spec);
+    let mut ids: Vec<usize> = interp.packed_w.keys().copied().collect();
+    ids.sort_unstable();
+    for id in ids {
+        let t = &interp.packed_w[&id];
+        let name = &graph.value(ValueId(id)).name;
+        let (src, _) = interp.param(name)?;
+        writer.add_tensor(TensorDesc::for_tensor(name, "weight", t, src), t)?;
+    }
+    if let Some(t) = &interp.packed_embed {
+        let (src, _) = interp.param("embed")?;
+        writer.add_tensor(TensorDesc::for_tensor("embed", "embed", t, src), t)?;
+    }
+    Ok(writer)
 }
 
 impl<'a> Interp<'a> {
@@ -222,7 +295,7 @@ impl<'a> Interp<'a> {
         weights: &'a [f32],
         fmt: FormatKind,
         qcfg: &'a [f32],
-        path: MatmulPath,
+        backend: &CpuBackend,
     ) -> Result<Interp<'a>> {
         ensure!(
             qcfg.len() == 2 * meta.num_qtensors(),
@@ -230,6 +303,7 @@ impl<'a> Interp<'a> {
             qcfg.len(),
             2 * meta.num_qtensors()
         );
+        let path = backend.path;
         let mut interp = Interp {
             meta,
             graph,
@@ -253,9 +327,18 @@ impl<'a> Interp<'a> {
                     interp.check_tiling(k, n, &wv.name)?;
                     match path {
                         MatmulPath::Packed => {
-                            interp.packed_w.insert(wid.0, pack(w, k, n, fmt, prec));
+                            let layout = ElemLayout::new(fmt, prec);
+                            let pw = match artifact_tensor(backend, &wv.name, &layout, k, n, w) {
+                                Some(pw) => pw,
+                                None => {
+                                    note_weight_pack();
+                                    Arc::new(pack(w, k, n, fmt, prec))
+                                }
+                            };
+                            interp.packed_w.insert(wid.0, pw);
                         }
                         MatmulPath::Reference => {
+                            note_weight_pack();
                             let mut q = w.to_vec();
                             quantize_2d(fmt, &mut q, k, n, prec);
                             interp.quant_w.insert(wid.0, q);
@@ -267,13 +350,23 @@ impl<'a> Interp<'a> {
                     // degenerates to a row gather from the bit-packed
                     // (raw-bits fp32, exact) table on both paths.
                     let (embed, shape) = interp.param("embed")?;
-                    interp.packed_embed = Some(pack(
-                        embed,
-                        shape[0],
-                        shape[1],
-                        FormatKind::Fp32,
-                        Precision::new(32.0, 0.0),
-                    ));
+                    let layout = ElemLayout::new(FormatKind::Fp32, Precision::new(32.0, 0.0));
+                    let table =
+                        match artifact_tensor(backend, "embed", &layout, shape[0], shape[1], embed)
+                        {
+                            Some(t) => t,
+                            None => {
+                                note_weight_pack();
+                                Arc::new(pack(
+                                    embed,
+                                    shape[0],
+                                    shape[1],
+                                    FormatKind::Fp32,
+                                    Precision::new(32.0, 0.0),
+                                ))
+                            }
+                        };
+                    interp.packed_embed = Some(table);
                 }
                 _ => {}
             }
@@ -338,7 +431,7 @@ impl<'a> Interp<'a> {
             MatmulPath::Packed => {
                 let pa = pack(&act.data, rows, k, self.fmt, a_prec);
                 let pw = self.packed_w.get(&wid).ok_or_else(|| anyhow!("{w_name} not packed"))?;
-                packed_gemm(&pa, pw)
+                packed_gemm(&pa, pw.as_ref())
             }
             MatmulPath::Reference => {
                 let mut qa = act.data.clone();

@@ -36,7 +36,7 @@ pub mod interp;
 pub use backend::{BackendKind, BatchScore, DecodeReport, ExecBackend, PjrtBackend};
 pub use client::{OutputTensor, PreparedTensor, Runtime, TensorData};
 pub use decode::{generate_many, generate_many_traced, score_from_steps, DecodeStats, Decoder, GenOut};
-pub use interp::{CpuBackend, MatmulPath};
+pub use interp::{build_weights_artifact, CpuBackend, MatmulPath};
 
 #[cfg(test)]
 mod tests {

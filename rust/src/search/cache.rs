@@ -265,19 +265,7 @@ impl CacheStore {
         root.insert("version".to_string(), Json::Num(CACHE_VERSION as f64));
         root.insert("scopes".to_string(), Json::Obj(scopes));
         let text = Json::Obj(root).to_string();
-
-        if let Some(parent) = path.parent() {
-            if !parent.as_os_str().is_empty() {
-                std::fs::create_dir_all(parent)?;
-            }
-        }
-        let file_name = path
-            .file_name()
-            .ok_or_else(|| anyhow::anyhow!("cache path has no file name: {}", path.display()))?;
-        let tmp = path.with_file_name(format!("{}.tmp", file_name.to_string_lossy()));
-        std::fs::write(&tmp, text)?;
-        std::fs::rename(&tmp, path)?;
-        Ok(())
+        crate::util::write_atomic(path, text.as_bytes())
     }
 }
 
@@ -330,15 +318,9 @@ fn parse_entry(e: &Json) -> Option<CacheEntry> {
     Some((key, value, objectives))
 }
 
-/// Strict fixed-width hex: exactly the 16 lowercase digits `{:016x}`
-/// emits, so hand-edited or truncated values read as corruption and a
-/// loadable file has exactly one byte representation per entry.
-fn hex_u64(s: &str) -> Option<u64> {
-    if s.len() != 16 || !s.bytes().all(|b| b.is_ascii_digit() || (b'a'..=b'f').contains(&b)) {
-        return None;
-    }
-    u64::from_str_radix(s, 16).ok()
-}
+// Strict fixed-width hex ({:016x} digits only) — shared with the packed
+// artifact manifest via `util`.
+use crate::util::hex_u64;
 
 #[cfg(test)]
 mod tests {

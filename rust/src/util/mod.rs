@@ -8,6 +8,42 @@ pub mod pool;
 pub mod prop;
 pub mod rng;
 
+/// Render a `u64` in the PR 2 on-disk convention: exactly 16 lowercase
+/// hex digits (`{:016x}`), the form [`hex_u64`] accepts back.
+pub fn hex16(v: u64) -> String {
+    format!("{v:016x}")
+}
+
+/// Strict fixed-width hex: exactly the 16 lowercase digits `{:016x}`
+/// emits, so hand-edited or truncated values read as corruption and a
+/// loadable file has exactly one byte representation per value.
+pub fn hex_u64(s: &str) -> Option<u64> {
+    if s.len() != 16 || !s.bytes().all(|b| b.is_ascii_digit() || (b'a'..=b'f').contains(&b)) {
+        return None;
+    }
+    u64::from_str_radix(s, 16).ok()
+}
+
+/// Crash-safe file replacement: write a sibling `<file>.tmp`, then rename
+/// it over the target, so an interrupted write leaves the previous file
+/// intact and readers never observe a half-written one. Creates missing
+/// parent directories. This is the one sanctioned way to overwrite an
+/// artifact (`CacheStore::save`, `mase pack`'s JSON and `.mxa` outputs).
+pub fn write_atomic(path: &std::path::Path, bytes: &[u8]) -> anyhow::Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let file_name = path
+        .file_name()
+        .ok_or_else(|| anyhow::anyhow!("target path has no file name: {}", path.display()))?;
+    let tmp = path.with_file_name(format!("{}.tmp", file_name.to_string_lossy()));
+    std::fs::write(&tmp, bytes)?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
 /// Wall-clock helper used by the pass manager (Table 4) and benches.
 pub struct Stopwatch(std::time::Instant);
 
@@ -75,6 +111,20 @@ impl Table {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn write_atomic_replaces_without_tmp_residue() {
+        let path =
+            std::env::temp_dir().join(format!("mase_write_atomic_{}.txt", std::process::id()));
+        write_atomic(&path, b"one").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"one");
+        write_atomic(&path, b"two").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"two");
+        let tmp =
+            path.with_file_name(format!("{}.tmp", path.file_name().unwrap().to_string_lossy()));
+        assert!(!tmp.exists(), "tmp file must be renamed away");
+        std::fs::remove_file(&path).ok();
+    }
 
     #[test]
     fn table_aligns_columns() {

@@ -1,0 +1,213 @@
+//! `.mxa` packed-weight artifact contracts — tier-1, artifact-free
+//! (in the PJRT sense: no HLO artifacts needed; the container files
+//! live in a temp dir).
+//!
+//! Two layers of guarantee:
+//!
+//!  1. **Container round trip** (`every_format_round_trips...`): for all
+//!     formats, `load(write(pack(x)))` returns the packed bits
+//!     byte-for-byte — including zero-element tensors and element-wise
+//!     shapes with a partial trailing pack group.
+//!  2. **Interpreter contract** (`artifact_backed_decode_contract`): a
+//!     warm `CpuBackend::with_artifact` session performs ZERO weight
+//!     pack calls and decodes bit-identically to the in-memory path; an
+//!     artifact packed from the WRONG weights falls back to repacking
+//!     (still bit-identical, never silently wrong); corruption and
+//!     truncation fail closed naming the offending tensor/chunk.
+//!
+//! The pack counter ([`mase::packed::kernel_tally`]) is process-global,
+//! so every `Interp`-constructing assertion lives in the ONE contract
+//! test — the round-trip test only drives `pack()`/writer/reader, which
+//! never touch the counter.
+
+use mase::data::MarkovCorpus;
+use mase::formats::{FormatKind, FormatSpec};
+use mase::frontend::{build_graph, init_params, ModelMeta};
+use mase::packed::{
+    pack, source_hash, ArtifactWeights, ArtifactWriter, TensorDesc,
+};
+use mase::passes::{ProfileData, QuantSolution};
+use mase::runtime::{build_weights_artifact, CpuBackend, Decoder, ExecBackend};
+use mase::util::rng::Rng;
+use std::sync::Arc;
+
+fn tmp_mxa(tag: &str) -> std::path::PathBuf {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    static UNIQUE: AtomicUsize = AtomicUsize::new(0);
+    let n = UNIQUE.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!("mase_afmt_{tag}_{}_{n}.mxa", std::process::id()))
+}
+
+fn rand_tensor(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+/// Every format: two tensors per artifact (a normal one plus an edge
+/// case — zero elements for block formats, a partial trailing pack
+/// group for element-wise ones) must survive the container bit-exactly,
+/// with the descriptor fields and content hash intact.
+#[test]
+fn every_format_round_trips_through_the_container() {
+    for fmt in FormatKind::ALL {
+        let spec = FormatSpec::with_defaults(fmt);
+        let prec = spec.precision();
+        // block formats must tile into (16, 2); element-wise shapes are
+        // free — 3x11 = 33 elements exercises a partial trailing group
+        let (shape_a, shape_b) =
+            if fmt.is_block_format() { ((32, 4), (0, 2)) } else { ((3, 11), (0, 7)) };
+        let xa = rand_tensor(shape_a.0 * shape_a.1, 0xA0 + fmt as u64);
+        let xb = rand_tensor(shape_b.0 * shape_b.1, 0xB0 + fmt as u64);
+        let ta = pack(&xa, shape_a.0, shape_a.1, fmt, prec);
+        let tb = pack(&xb, shape_b.0, shape_b.1, fmt, prec);
+
+        let mut w = ArtifactWriter::new("rt-model", spec);
+        w.add_tensor(TensorDesc::for_tensor("layer0.w_qkv", "weight", &ta, &xa), &ta).unwrap();
+        w.add_tensor(TensorDesc::for_tensor("edge", "weight", &tb, &xb), &tb).unwrap();
+        let path = tmp_mxa(fmt.name());
+        let hash = w.write_to(&path).unwrap();
+
+        let loaded = ArtifactWeights::load(&path).unwrap();
+        assert_eq!(loaded.content_hash, hash, "{}: content hash", fmt.name());
+        assert_eq!(loaded.model, "rt-model");
+        assert_eq!(loaded.spec, spec, "{}: header spec", fmt.name());
+        assert_eq!(loaded.tensors.len(), 2);
+
+        let la = &loaded.tensors["layer0.w_qkv"];
+        assert_eq!(*la.packed, ta, "{}: packed bits must survive byte-for-byte", fmt.name());
+        assert_eq!(la.desc.source_hash, source_hash(&xa));
+        assert_eq!((la.desc.rows, la.desc.cols), shape_a);
+        // unpack equality follows from bit equality, but assert it
+        // anyway: it is the value-level contract callers rely on
+        assert_eq!(la.packed.unpack(), ta.unpack(), "{}", fmt.name());
+
+        let lb = &loaded.tensors["edge"];
+        assert_eq!(*lb.packed, tb, "{}: edge tensor", fmt.name());
+        assert_eq!(lb.packed.unpack().len(), shape_b.0 * shape_b.1);
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+/// One-layer causal LM like the decode-parity suite uses.
+fn lm(batch: usize) -> ModelMeta {
+    ModelMeta::synthetic("mxa-lm", 1, 32, 2, 512, 32, 4, "lm", batch)
+}
+
+fn qconfig(meta: &ModelMeta, fmt: FormatKind, bits: f32) -> Vec<f32> {
+    let profile = ProfileData::uniform(meta, 4.0);
+    QuantSolution::uniform(fmt, bits, meta, &profile).to_qconfig()
+}
+
+fn decode(
+    backend: &CpuBackend,
+    meta: &ModelMeta,
+    w: &[f32],
+    fmt: FormatKind,
+    qcfg: &[f32],
+) -> mase::runtime::GenOut {
+    let graph = backend.prepare(meta, w, &[]).unwrap();
+    let mut dec = Decoder::new(backend, &graph, meta, w, fmt.name(), qcfg, meta.batch).unwrap();
+    let prompt = MarkovCorpus::new(7).batch(11, meta.batch, 8);
+    dec.generate(&prompt, 8, 6).unwrap()
+}
+
+fn assert_bitwise_equal(a: &mase::runtime::GenOut, b: &mase::runtime::GenOut, tag: &str) {
+    assert_eq!(a.tokens, b.tokens, "{tag}: token streams diverged");
+    assert_eq!(a.step_logits.len(), b.step_logits.len(), "{tag}");
+    for (i, (ra, rb)) in a.step_logits.iter().zip(&b.step_logits).enumerate() {
+        assert_eq!(ra.len(), rb.len(), "{tag}: step {i}");
+        for (j, (x, y)) in ra.iter().zip(rb).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{tag}: step {i} logit {j}: {x} vs {y}");
+        }
+    }
+    assert_eq!(a.score.loss.to_bits(), b.score.loss.to_bits(), "{tag}: loss bits");
+}
+
+/// The full loader contract in one (deliberately sequential) test — see
+/// the module docs for why the pack-counter assertions cannot be spread
+/// across parallel test functions.
+#[test]
+fn artifact_backed_decode_contract() {
+    let meta = lm(4);
+    let w = init_params(&meta, 0xC0DE);
+    let fmt = FormatKind::MxInt;
+    let spec = FormatSpec::with_defaults(fmt);
+    let qcfg = qconfig(&meta, fmt, spec.bits);
+    let graph = build_graph(&meta);
+
+    let writer = build_weights_artifact(&meta, &graph, &w, spec, &qcfg).unwrap();
+    let path = tmp_mxa("contract");
+    let hash = writer.write_to(&path).unwrap();
+    let art = Arc::new(ArtifactWeights::load(&path).unwrap());
+    assert_eq!(art.content_hash, hash);
+    // one chunk pair per Linear weight + the embedding table
+    assert!(art.tensors.contains_key("embed"), "embed table must be in the artifact");
+    assert!(
+        art.tensors.keys().any(|k| k.contains("w_qkv")),
+        "attention weights must be in the artifact: {:?}",
+        art.tensors.keys().collect::<Vec<_>>()
+    );
+
+    // cold in-memory path: packs every weight tensor
+    let before_cold = mase::packed::kernel_tally();
+    let cold = decode(&CpuBackend::new(), &meta, &w, fmt, &qcfg);
+    let cold_packs = mase::packed::kernel_tally().delta(&before_cold).weight_packs;
+    assert!(cold_packs > 0, "cold session must pack its weights");
+
+    // warm artifact path: ZERO pack calls, bit-identical output, and the
+    // backend advertises the content hash for eval-cache scoping
+    let warm_be = CpuBackend::with_artifact(art.clone());
+    assert_eq!(warm_be.weights_hash(), Some(hash));
+    let before_warm = mase::packed::kernel_tally();
+    let warm = decode(&warm_be, &meta, &w, fmt, &qcfg);
+    let warm_packs = mase::packed::kernel_tally().delta(&before_warm).weight_packs;
+    assert_eq!(warm_packs, 0, "warm artifact session must never re-pack");
+    assert_bitwise_equal(&cold, &warm, "warm vs cold");
+
+    // an artifact packed from DIFFERENT weights must not poison results:
+    // the source-hash mismatch falls back to in-memory packing (counted)
+    // and the output still matches the cold path bit-for-bit
+    let w_other = init_params(&meta, 0xBEEF);
+    let other = build_weights_artifact(&meta, &graph, &w_other, spec, &qcfg).unwrap();
+    let other_path = tmp_mxa("other");
+    other.write_to(&other_path).unwrap();
+    let stale_be =
+        CpuBackend::with_artifact(Arc::new(ArtifactWeights::load(&other_path).unwrap()));
+    let before_stale = mase::packed::kernel_tally();
+    let stale = decode(&stale_be, &meta, &w, fmt, &qcfg);
+    let stale_packs = mase::packed::kernel_tally().delta(&before_stale).weight_packs;
+    assert!(stale_packs > 0, "mismatched artifact must fall back to packing");
+    assert_bitwise_equal(&cold, &stale, "stale-artifact fallback vs cold");
+
+    // a qcfg the artifact was NOT packed at (different bits) must also
+    // fall back — layout mismatch, not source mismatch
+    let qcfg_narrow = qconfig(&meta, fmt, 4.0);
+    let before_narrow = mase::packed::kernel_tally();
+    let _ = decode(&warm_be, &meta, &w, fmt, &qcfg_narrow);
+    assert!(
+        mase::packed::kernel_tally().delta(&before_narrow).weight_packs > 0,
+        "artifact at {} bits must not satisfy a 4-bit session",
+        spec.bits
+    );
+
+    // fail closed: flip one byte inside the LAST chunk (the embedding
+    // table's words); the loader must name the tensor, not limp on
+    let mut bytes = std::fs::read(&path).unwrap();
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0x01;
+    let bad_path = tmp_mxa("corrupt");
+    std::fs::write(&bad_path, &bytes).unwrap();
+    let err = ArtifactWeights::load(&bad_path).unwrap_err().to_string();
+    assert!(err.contains("embed"), "corruption error must name the tensor: {err}");
+    assert!(err.contains("hash"), "{err}");
+
+    // fail closed: truncation mid-chunk
+    bytes[last] ^= 0x01; // restore
+    std::fs::write(&bad_path, &bytes[..bytes.len() - 8]).unwrap();
+    let err = ArtifactWeights::load(&bad_path).unwrap_err().to_string();
+    assert!(err.contains("truncated"), "{err}");
+
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(&other_path).ok();
+    std::fs::remove_file(&bad_path).ok();
+}

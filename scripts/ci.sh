@@ -17,6 +17,10 @@
 #                                # + JSONL schema validation (PR 8)
 #   scripts/ci.sh serve          # `mase serve` HTTP smoke: ephemeral
 #                                # port, raw-socket client, SIGTERM (PR 9)
+#   scripts/ci.sh artifact       # `.mxa` packed-weight artifact smoke:
+#                                # pack -> --weights warm start with zero
+#                                # re-pack, bit-identical output, fail-
+#                                # closed corruption, python mirror
 #   scripts/ci.sh fmt clippy     # any combination, run in order given
 #
 #   SKIP_LINTS=1 scripts/ci.sh   # `all` minus fmt/clippy/doc (e.g. a
@@ -313,6 +317,95 @@ PY
   echo "serve smoke: SIGTERM shut the server down cleanly"
 }
 
+stage_artifact() {
+  # Packed-artifact gate (the `.mxa` container): `mase pack --out
+  # model.mxa` must warm-start `--weights` sessions with ZERO re-pack
+  # work and bit-identical output, the e2e flow must report identical
+  # results through the loader, the toolchain-free python mirror must
+  # re-derive the container byte-for-byte, and a corrupted container
+  # must fail closed naming the offending tensor.
+  echo "==> artifact smoke: mase pack --out .mxa -> --weights warm start"
+  if [[ ! -x target/release/mase ]]; then
+    echo "  (target/release/mase missing; building first)"
+    cargo build --release
+  fi
+  cleanup
+  SMOKE_DIR="$(mktemp -d)"
+  local art="$SMOKE_DIR/artifacts"
+  ./target/release/mase pack --model toy-lm --out "$SMOKE_DIR/toy.mxa" \
+    --artifacts "$art" | tail -n 2
+  ./target/release/mase pack --model toy-sim --task sst2 \
+    --out "$SMOKE_DIR/toy-sim.mxa" --artifacts "$art" >/dev/null
+  test -s "$SMOKE_DIR/toy.mxa" && test -s "$SMOKE_DIR/toy-sim.mxa" || {
+    echo "artifact smoke: pack wrote no .mxa"; exit 1;
+  }
+
+  # toolchain-free mirror: stdlib+numpy re-parse of header, manifest,
+  # chunk alignment and every FNV-1a/64 hash (while the files are clean)
+  python3 ../scripts/verify_artifact_format.py \
+    "$SMOKE_DIR/toy.mxa" "$SMOKE_DIR/toy-sim.mxa"
+
+  # decode: the warm run must pack nothing and emit the same bits
+  local cold warm
+  cold="$(./target/release/mase generate --backend cpu --model toy-lm \
+    --tokens 8 --prompt-len 4 --threads 1 --artifacts "$art")"
+  warm="$(./target/release/mase generate --backend cpu --model toy-lm \
+    --tokens 8 --prompt-len 4 --threads 1 --artifacts "$art" \
+    --weights "$SMOKE_DIR/toy.mxa")"
+  echo "$warm" | grep "weight packs in-session:"
+  echo "$warm" | grep -q "weight packs in-session: 0 " || {
+    echo "$warm"; echo "artifact smoke: warm --weights run re-packed weights"; exit 1;
+  }
+  if echo "$cold" | grep -q "weight packs in-session: 0 "; then
+    echo "artifact smoke: cold run claims zero packs (counter broken)"; exit 1
+  fi
+  [[ "$(echo "$cold" | grep '^decode ok:')" == "$(echo "$warm" | grep '^decode ok:')" ]] || {
+    echo "cold: $cold"; echo "warm: $warm";
+    echo "artifact smoke: warm decode diverged from the in-memory path"; exit 1;
+  }
+
+  # e2e: search through the loader (per-trial layouts repack, still
+  # bit-identical) — the result lines must match digit-for-digit
+  local e_cold e_warm
+  e_cold="$(./target/release/mase e2e --backend cpu --model toy-sim --task sst2 \
+    --trials 4 --batch 2 --eval-batches 1 --threads 1 \
+    --artifacts "$art" --out "$SMOKE_DIR/design")"
+  e_warm="$(./target/release/mase e2e --backend cpu --model toy-sim --task sst2 \
+    --trials 4 --batch 2 --eval-batches 1 --threads 1 \
+    --artifacts "$art" --out "$SMOKE_DIR/design2" \
+    --weights "$SMOKE_DIR/toy-sim.mxa")"
+  local want got
+  want="$(echo "$e_cold" | grep -E '^(fp32|best) ')"
+  got="$(echo "$e_warm" | grep -E '^(fp32|best) ')"
+  [[ -n "$want" && "$want" == "$got" ]] || {
+    echo "cold: $want"; echo "warm: $got";
+    echo "artifact smoke: e2e through --weights diverged from the in-memory path"; exit 1;
+  }
+
+  # fail closed: flip one byte in the last chunk; the loader must refuse
+  # with an error naming the offending tensor, never serve partial bits
+  python3 - "$SMOKE_DIR/toy.mxa" <<'PY'
+import sys
+p = sys.argv[1]
+b = bytearray(open(p, "rb").read())
+b[-1] ^= 1
+open(p, "wb").write(b)
+PY
+  local out
+  if out="$(./target/release/mase generate --backend cpu --model toy-lm \
+      --tokens 2 --prompt-len 4 --threads 1 --artifacts "$art" \
+      --weights "$SMOKE_DIR/toy.mxa" 2>&1)"; then
+    echo "$out"; echo "artifact smoke: corrupted artifact was accepted"; exit 1
+  fi
+  echo "$out" | grep -q "corrupt" || {
+    echo "$out"; echo "artifact smoke: corruption not reported as such"; exit 1;
+  }
+  echo "$out" | grep -q "embed" || {
+    echo "$out"; echo "artifact smoke: error does not name the offending tensor"; exit 1;
+  }
+  echo "artifact smoke: zero-repack warm start, bit-identical output, fail-closed corruption"
+}
+
 run_stage() {
   case "$1" in
     fmt)    stage_fmt ;;
@@ -324,6 +417,7 @@ run_stage() {
     check)  stage_check ;;
     trace)  stage_trace ;;
     serve)  stage_serve ;;
+    artifact) stage_artifact ;;
     all)
       if [[ -z "${SKIP_LINTS:-}" ]]; then
         stage_fmt
@@ -336,9 +430,10 @@ run_stage() {
       stage_check
       stage_trace
       stage_serve
+      stage_artifact
       ;;
     *)
-      echo "unknown stage '$1' (expected fmt|clippy|doc|test|smoke|decode|check|trace|serve|all)" >&2
+      echo "unknown stage '$1' (expected fmt|clippy|doc|test|smoke|decode|check|trace|serve|artifact|all)" >&2
       exit 2
       ;;
   esac

@@ -1,0 +1,444 @@
+#!/usr/bin/env python3
+"""Toolchain-free mirror of the `.mxa` packed-weight artifact format.
+
+Re-derives the container byte format of rust/src/packed/artifact.rs from
+the prose spec alone — FNV-1a/64 hashing, the fixed-width header line,
+the hex-integer JSON manifest, 64-byte chunk alignment, and the layout
+sizing equations — then checks, with no cargo anywhere:
+
+  1. the FNV-1a/64 implementation against published reference vectors;
+  2. writer -> reader round trips of a self-built container across every
+     format (including zero-element tensors and element-wise shapes with
+     a partial trailing pack group);
+  3. fail-closed behaviour: a flipped chunk byte, a truncated file, a
+     bumped version and a misaligned chunk must all be rejected, and the
+     chunk errors must name the offending tensor;
+  4. (optionally) real artifacts written by `mase pack --out x.mxa`:
+     pass paths on the command line and every header, manifest field,
+     alignment rule, chunk size and chunk hash is re-validated here,
+     byte-for-byte, by an implementation that shares no code with the
+     Rust one.
+
+Shared conventions mirrored from the Rust side:
+  - every integer crosses JSON as a fixed-width 16-digit lowercase hex
+    string ({:016x}); f32 format knobs cross as the f64 bit pattern;
+  - manifest keys are alphabetical and the rendering is compact, so
+    json.dumps(obj, sort_keys=True, separators=(",", ":")) reproduces
+    crate::util::json byte-for-byte;
+  - the artifact content hash is FNV-1a/64 over the manifest bytes.
+
+numpy is the only dependency (deterministic f32 test data + the
+source-hash mirror over little-endian f32 bytes).
+"""
+
+import json
+import struct
+import sys
+
+import numpy as np
+
+# ----------------------------------------------------------- harness --
+
+FAILURES = []
+
+
+def check(name, ok):
+    tag = "ok" if ok else "FAIL"
+    print(f"  [{tag}] {name}")
+    if not ok:
+        FAILURES.append(name)
+
+
+def expect_raise(name, fn, needle=""):
+    try:
+        fn()
+    except FormatError as e:
+        check(f"{name} [{e}]" if needle else name, needle in str(e))
+    else:
+        check(f"{name} (did not fail)", False)
+
+
+class FormatError(Exception):
+    pass
+
+
+def fail(msg):
+    raise FormatError(msg)
+
+
+# ------------------------------------------------------------ hashing --
+
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x100000001B3
+MASK64 = (1 << 64) - 1
+
+
+def fnv1a(data, h=FNV_OFFSET):
+    for b in data:
+        h = ((h ^ b) * FNV_PRIME) & MASK64
+    return h
+
+
+def source_hash(w):
+    """FNV-1a/64 over the little-endian f32 bytes (Rust source_hash)."""
+    return fnv1a(np.asarray(w, dtype="<f4").tobytes())
+
+
+def hex16(v):
+    return f"{v & MASK64:016x}"
+
+
+# ----------------------------------------------- layout sizing mirror --
+# Mirrors ElemLayout::new + words_per_group + artifact::expected_sizes.
+
+FORMATS = ["fp32", "int", "fp8", "mxint", "bmf", "bl"]
+BLOCK_FORMATS = {"mxint", "bmf", "bl"}
+BLOCK_SHAPE = (16, 2)
+GROUP_ELEMS = BLOCK_SHAPE[0] * BLOCK_SHAPE[1]
+SHARED_EXPONENT_BITS = 8
+LOCAL_EXP_BITS = 2  # BMF local minifloat exponent
+FP8_EXP_BITS, FP8_MAN_BITS = 4, 3
+DEFAULT_BITS = {"fp32": 32.0, "bmf": 5.0, "int": 8.0, "fp8": 8.0, "mxint": 7.0, "bl": 7.0}
+MAX_KNOB = {"fp32": 32, "fp8": FP8_MAN_BITS, "int": 25, "mxint": 24, "bmf": 23, "bl": 16}
+
+
+def resolve_knob(fmt, bits):
+    if fmt == "fp32":
+        return 32
+    if fmt == "fp8":
+        return FP8_MAN_BITS
+    floor = 2.0 if fmt == "int" else 1.0
+    return min(int(max(float(np.round(np.float32(bits))), floor)), MAX_KNOB[fmt])
+
+
+def elem_bits(fmt, knob):
+    return {
+        "fp32": 32,
+        "fp8": 1 + FP8_EXP_BITS + FP8_MAN_BITS,
+        "int": knob,
+        "mxint": 1 + knob,
+        "bmf": 1 + LOCAL_EXP_BITS + knob + 1,
+        "bl": 1 + knob + 1,
+    }[fmt]
+
+
+def layout_for(fmt, bits, frac):
+    knob = resolve_knob(fmt, bits)
+    return {
+        "fmt": fmt,
+        "knob": knob,
+        "frac": int(np.round(np.float32(frac))) if fmt == "int" else 0,
+        "elem_bits": elem_bits(fmt, knob),
+        "shared_exp_bits": SHARED_EXPONENT_BITS if fmt in BLOCK_FORMATS else 0,
+    }
+
+
+def words_per_group(eb, n):
+    return -(-(n * eb) // 64)  # ceil-div
+
+
+def expected_sizes(layout, rows, cols):
+    """(exps bytes, words count) the layout equations demand."""
+    eb = layout["elem_bits"]
+    if layout["fmt"] in BLOCK_FORMATS:
+        blocks = (rows // BLOCK_SHAPE[0]) * (cols // BLOCK_SHAPE[1])
+        return blocks, blocks * words_per_group(eb, GROUP_ELEMS)
+    n = rows * cols
+    rem = n % GROUP_ELEMS
+    tail = words_per_group(eb, rem) if rem else 0
+    return 0, (n // GROUP_ELEMS) * words_per_group(eb, GROUP_ELEMS) + tail
+
+
+# ------------------------------------------------------------- writer --
+
+MAGIC = b"MXA1 "
+SCHEMA = "mase-packed-artifact"
+VERSION = 1
+CHUNK_ALIGN = 64
+HEADER_LEN = 22
+
+
+def f64_bits(x):
+    return struct.unpack("<Q", struct.pack("<d", float(np.float32(x))))[0]
+
+
+def render_manifest(obj):
+    """The crate::util::json rendering: compact, alphabetical keys."""
+    return json.dumps(obj, sort_keys=True, separators=(",", ":")).encode()
+
+
+class Writer:
+    def __init__(self, model, fmt, bits=None, frac=0.0):
+        bits = DEFAULT_BITS[fmt] if bits is None else bits
+        self.model, self.fmt, self.bits, self.frac = model, fmt, bits, frac
+        self.tensors, self.chunks, self.data = [], [], bytearray()
+
+    def _push_chunk(self, payload):
+        pad = -len(self.data) % CHUNK_ALIGN
+        self.data += b"\0" * pad
+        off = len(self.data)
+        self.data += payload
+        self.chunks.append({"off": off, "len": len(payload), "fnv": fnv1a(payload)})
+        return len(self.chunks) - 1
+
+    def add_tensor(self, name, kind, rows, cols, source, exps, words):
+        lay = layout_for(self.fmt, self.bits, self.frac)
+        want_exps, want_words = expected_sizes(lay, rows, cols)
+        assert len(exps) == want_exps and len(words) == want_words, name
+        rec = {
+            "name": name,
+            "kind": kind,
+            "rows": hex16(rows),
+            "cols": hex16(cols),
+            "layout": {
+                "fmt": lay["fmt"],
+                "knob": hex16(lay["knob"]),
+                "frac": hex16(lay["frac"]),
+                "elem_bits": hex16(lay["elem_bits"]),
+                "shared_exp_bits": hex16(lay["shared_exp_bits"]),
+            },
+            "source_hash": hex16(source_hash(source)),
+        }
+        if lay["fmt"] in BLOCK_FORMATS:
+            rec["exps_chunk"] = hex16(self._push_chunk(bytes(exps)))
+        rec["words_chunk"] = hex16(self._push_chunk(np.asarray(words, dtype="<u8").tobytes()))
+        self.tensors.append(rec)
+
+    def to_bytes(self):
+        manifest = render_manifest({
+            "schema": SCHEMA,
+            "version": hex16(VERSION),
+            "model": self.model,
+            "format": {
+                "kind": self.fmt,
+                "bits": hex16(f64_bits(self.bits)),
+                "frac": hex16(f64_bits(self.frac)),
+            },
+            "tensors": self.tensors,
+            "chunks": [
+                {"off": hex16(c["off"]), "len": hex16(c["len"]), "fnv": hex16(c["fnv"])}
+                for c in self.chunks
+            ],
+        })
+        out = MAGIC + hex16(len(manifest)).encode() + b"\n"
+        assert len(out) == HEADER_LEN
+        out += manifest
+        out += b"\0" * (-len(out) % CHUNK_ALIGN)
+        return out + bytes(self.data), fnv1a(manifest)
+
+
+# ------------------------------------------------------------- reader --
+
+
+def parse_hex(s, what):
+    if not (isinstance(s, str) and len(s) == 16):
+        fail(f"{what}: not a 16-digit hex string: {s!r}")
+    try:
+        return int(s, 16)
+    except ValueError:
+        fail(f"{what}: bad hex {s!r}")
+
+
+def read_artifact(blob):
+    """Full fail-closed validation; returns (content_hash, manifest, tensors)."""
+    if len(blob) < HEADER_LEN:
+        fail(f"truncated artifact: no {HEADER_LEN}-byte header")
+    header = blob[:HEADER_LEN]
+    if not (header.startswith(MAGIC) and header.endswith(b"\n")):
+        fail("bad artifact magic")
+    mlen = parse_hex(header[len(MAGIC) : HEADER_LEN - 1].decode(), "header manifest length")
+    if HEADER_LEN + mlen > len(blob):
+        fail(f"truncated artifact: manifest claims {mlen} bytes")
+    mbytes = blob[HEADER_LEN : HEADER_LEN + mlen]
+    content = fnv1a(mbytes)
+    try:
+        root = json.loads(mbytes)
+    except ValueError as e:
+        fail(f"unreadable manifest: {e}")
+    if render_manifest(root) != mbytes:
+        fail("manifest is not in canonical (compact, sorted-key) form")
+    if root.get("schema") != SCHEMA:
+        fail(f"artifact schema {root.get('schema')!r} is not {SCHEMA!r}")
+    if parse_hex(root.get("version", ""), "version") != VERSION:
+        fail(f"artifact version {root.get('version')!r} (this mirror reads {VERSION})")
+    fspec = root["format"]
+    if fspec["kind"] not in FORMATS:
+        fail(f"unknown format kind {fspec['kind']!r}")
+    data_base = -(-(HEADER_LEN + mlen) // CHUNK_ALIGN) * CHUNK_ALIGN
+
+    chunks = []
+    for i, c in enumerate(root.get("chunks", [])):
+        off = parse_hex(c["off"], f"chunk {i} off")
+        ln = parse_hex(c["len"], f"chunk {i} len")
+        fnv = parse_hex(c["fnv"], f"chunk {i} fnv")
+        if off % CHUNK_ALIGN:
+            fail(f"chunk {i}: offset {off} is not 64-byte aligned")
+        if data_base + off + ln > len(blob):
+            fail(f"truncated artifact: chunk {i} ends at byte {data_base + off + ln}, "
+                 f"file has {len(blob)}")
+        chunks.append((off, ln, fnv))
+
+    tensors = {}
+    for t in root.get("tensors", []):
+        name = t["name"]
+        if name in tensors:
+            fail(f"duplicate tensor {name!r} in manifest")
+        rows = parse_hex(t["rows"], f"tensor {name!r} rows")
+        cols = parse_hex(t["cols"], f"tensor {name!r} cols")
+        lay = t["layout"]
+        fmt = lay["fmt"]
+        knob = parse_hex(lay["knob"], f"tensor {name!r} knob")
+        frac = parse_hex(lay["frac"], f"tensor {name!r} frac")
+        frac -= (1 << 64) if frac >= (1 << 63) else 0  # i64 two's complement
+        rebuilt = layout_for(fmt, float(knob), float(frac))
+        if (rebuilt["knob"] != knob
+                or rebuilt["frac"] != frac
+                or parse_hex(lay["elem_bits"], "elem_bits") != rebuilt["elem_bits"]
+                or parse_hex(lay["shared_exp_bits"], "seb") != rebuilt["shared_exp_bits"]):
+            fail(f"tensor {name!r}: layout record does not match the layout equations")
+        want_exps, want_words = expected_sizes(rebuilt, rows, cols)
+
+        def load_chunk(key, want_len):
+            ix = parse_hex(t[key], f"tensor {name!r} {key}")
+            if ix >= len(chunks):
+                fail(f"tensor {name!r}: {key} {ix} out of chunk-table bounds")
+            off, ln, want_fnv = chunks[ix]
+            if ln != want_len:
+                fail(f"tensor {name!r}: {key} holds {ln} bytes, layout demands {want_len}")
+            payload = blob[data_base + off : data_base + off + ln]
+            if fnv1a(payload) != want_fnv:
+                fail(f"corrupt artifact: chunk {ix} (tensor {name!r}) "
+                     f"hash {fnv1a(payload):016x} != manifest {want_fnv:016x}")
+            return payload
+
+        if fmt in BLOCK_FORMATS:
+            if rows % BLOCK_SHAPE[0] or cols % BLOCK_SHAPE[1]:
+                fail(f"tensor {name!r}: {rows}x{cols} does not tile into {BLOCK_SHAPE} blocks")
+            exps = load_chunk("exps_chunk", want_exps)
+        else:
+            if "exps_chunk" in t:
+                fail(f"tensor {name!r}: element-wise layout with an exps chunk")
+            exps = b""
+        words = np.frombuffer(load_chunk("words_chunk", want_words * 8), dtype="<u8")
+        tensors[name] = {
+            "kind": t["kind"],
+            "rows": rows,
+            "cols": cols,
+            "layout": rebuilt,
+            "source_hash": parse_hex(t["source_hash"], "source_hash"),
+            "exps": exps,
+            "words": words,
+        }
+    return content, root, tensors
+
+
+# ---------------------------------------------------------- self-test --
+
+
+def synth_tensor(layout, rows, cols, seed):
+    """Deterministic fake payloads of the exact sizes the layout demands."""
+    rng = np.random.default_rng(seed)
+    want_exps, want_words = expected_sizes(layout, rows, cols)
+    source = rng.standard_normal(rows * cols).astype(np.float32)
+    exps = rng.integers(0, 256, size=want_exps, dtype=np.uint8).tobytes()
+    words = rng.integers(0, 1 << 63, size=want_words, dtype=np.uint64)
+    return source, exps, words
+
+
+def self_test():
+    print("== fnv1a reference vectors ==")
+    check("fnv1a('') offset basis", fnv1a(b"") == 0xCBF29CE484222325)
+    check("fnv1a('a')", fnv1a(b"a") == 0xAF63DC4C8601EC8C)
+    check("fnv1a('foobar')", fnv1a(b"foobar") == 0x85944171F73967E8)
+    check("incremental == one-shot", fnv1a(b"bar", fnv1a(b"foo")) == fnv1a(b"foobar"))
+    check("source_hash is bit-sensitive",
+          source_hash([0.0]) != source_hash([-0.0])
+          and source_hash([1.0, 2.0]) != source_hash([2.0, 1.0]))
+
+    print("== writer -> reader round trip, every format ==")
+    for fmt in FORMATS:
+        lay = layout_for(fmt, DEFAULT_BITS[fmt], 0.0)
+        shapes = [(32, 4), (0, 2)] if fmt in BLOCK_FORMATS else [(3, 11), (0, 7)]
+        w = Writer("rt-model", fmt)
+        made = {}
+        for i, (r, c) in enumerate(shapes):
+            name = f"t{i}"
+            source, exps, words = synth_tensor(lay, r, c, seed=100 + i)
+            w.add_tensor(name, "weight", r, c, source, exps, words)
+            made[name] = (r, c, source_hash(source), exps, words)
+        blob, want_hash = w.to_bytes()
+        content, root, tensors = read_artifact(blob)
+        ok = content == want_hash and root["model"] == "rt-model" and len(tensors) == len(made)
+        for name, (r, c, sh, exps, words) in made.items():
+            t = tensors[name]
+            ok = (ok and t["rows"] == r and t["cols"] == c and t["source_hash"] == sh
+                  and bytes(t["exps"]) == exps and np.array_equal(t["words"], words))
+        check(f"{fmt}: round trip (shapes {shapes})", ok)
+        data_base = -(-(HEADER_LEN + int(blob[5:21], 16)) // CHUNK_ALIGN) * CHUNK_ALIGN
+        check(f"{fmt}: data base 64-byte aligned", data_base % 64 == 0)
+
+    print("== fail-closed ==")
+    lay = layout_for("mxint", 7.0, 0.0)
+    w = Writer("m", "mxint")
+    source, exps, words = synth_tensor(lay, 32, 2, seed=7)
+    w.add_tensor("layer3.fc1", "weight", 32, 2, source, exps, words)
+    blob, _ = w.to_bytes()
+
+    flipped = bytearray(blob)
+    flipped[-1] ^= 0x40  # inside the final (words) chunk
+    expect_raise("flipped chunk byte names the tensor",
+                 lambda: read_artifact(bytes(flipped)), "layer3.fc1")
+    expect_raise("truncation mid-chunk", lambda: read_artifact(blob[:-16]), "truncated")
+    expect_raise("truncation mid-header", lambda: read_artifact(blob[:10]), "header")
+
+    bumped = blob.replace(b'"version":"' + hex16(VERSION).encode(),
+                          b'"version":"' + hex16(VERSION + 1).encode())
+    assert bumped != blob
+    expect_raise("version bump refused", lambda: read_artifact(bumped), "version")
+
+    bad_schema = blob.replace(SCHEMA.encode(), b"mase-posted-artifact")
+    expect_raise("wrong schema refused", lambda: read_artifact(bad_schema), "schema")
+
+
+# ------------------------------------------- real artifacts (from CI) --
+
+
+def verify_file(path):
+    print(f"== {path} ==")
+    with open(path, "rb") as f:
+        blob = f.read()
+    content, root, tensors = read_artifact(blob)
+    n_chunks = len(root["chunks"])
+    print(f"  model {root['model']!r}, format {root['format']['kind']}, "
+          f"{len(tensors)} tensors, {n_chunks} chunks, content {content:016x}")
+    check("at least one tensor", len(tensors) > 0)
+    check("every tensor kind is weight|embed",
+          all(t["kind"] in ("weight", "embed") for t in tensors.values()))
+    # every chunk is referenced exactly once
+    refs = []
+    for t in root["tensors"]:
+        refs.append(int(t["words_chunk"], 16))
+        if "exps_chunk" in t:
+            refs.append(int(t["exps_chunk"], 16))
+    check("chunk table fully referenced, no sharing",
+          sorted(refs) == list(range(n_chunks)))
+    # a flipped byte in the last chunk must be caught by the mirror too
+    flipped = bytearray(blob)
+    flipped[-1] ^= 1
+    expect_raise("mirror rejects a flipped trailing byte",
+                 lambda: read_artifact(bytes(flipped)), "corrupt")
+
+
+def main():
+    self_test()
+    for path in sys.argv[1:]:
+        verify_file(path)
+    if FAILURES:
+        print(f"\n{len(FAILURES)} FAILED: {FAILURES}")
+        return 1
+    print("\nall artifact-format checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
